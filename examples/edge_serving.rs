@@ -1,0 +1,99 @@
+//! End-to-end serving driver (EXPERIMENTS.md "E2E validation").
+//!
+//! Loads the BERT-Large sim profile (the paper's NLP workload) and serves
+//! batched requests through the full stack — request queue -> batcher ->
+//! PIPELOAD (loading agents + inference agent + daemon over the throttled
+//! edge disk) -> PJRT layer executables — reporting latency percentiles,
+//! throughput, peak memory, and the paper's §V-C SLO verdict.
+//!
+//! ```bash
+//! cargo run --release --example edge_serving            # default: 12 requests
+//! HERMES_E2E_REQUESTS=32 cargo run --release --example edge_serving
+//! ```
+
+use hermes::config::{Mode, RunConfig};
+use hermes::engine::Engine;
+use hermes::server::{serve, ServeConfig};
+use hermes::util::json::Value;
+use hermes::util::{human_bytes, human_ms};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::with_default_paths()?;
+    let model = std::env::var("HERMES_E2E_MODEL").unwrap_or_else(|_| "bert-large-sim".into());
+    let requests: usize = std::env::var("HERMES_E2E_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(12);
+    let profile = engine.runtime.profile(&model)?;
+    let budget = profile.total_weight_bytes / 3; // a third of the model fits
+
+    println!("== Hermes E2E serving: {model} ==");
+    println!(
+        "model {} in {} stages; budget {} ({}% of model); disk edge-emmc\n",
+        human_bytes(profile.total_weight_bytes),
+        profile.stages.len(),
+        human_bytes(budget),
+        100 * budget / profile.total_weight_bytes.max(1),
+    );
+
+    // warmup: compile + first-touch weights off the measured path
+    let _ = engine.run(&RunConfig {
+        profile: model.clone(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        budget: Some(budget),
+        ..RunConfig::default()
+    })?;
+
+    let cfg = ServeConfig {
+        run: RunConfig {
+            profile: model.clone(),
+            mode: Mode::PipeLoad,
+            agents: 4,
+            budget: Some(budget),
+            disk: "edge-emmc".into(),
+            ..RunConfig::default()
+        },
+        num_requests: requests,
+        arrival_rps: 2.0,
+        max_batch: 4,
+        slo_ms: 30_000.0,
+        ..ServeConfig::default()
+    };
+    let s = serve(&engine, &cfg)?;
+
+    println!("served    : {} requests in {} batches (mean batch {:.2})", s.served, s.batches, s.mean_batch_size);
+    println!("throughput: {:.2} req/s", s.throughput_rps);
+    println!(
+        "latency   : p50 {}  p95 {}  p99 {}  max {}",
+        human_ms(s.latency.p50()),
+        human_ms(s.latency.p95()),
+        human_ms(s.latency.p99()),
+        human_ms(s.latency.max())
+    );
+    println!("peak mem  : {}  (budget {})", human_bytes(s.peak_bytes), human_bytes(budget));
+    println!(
+        "SLO       : p95 {} <= {} -> {}",
+        human_ms(s.slo.p95_ms),
+        human_ms(s.slo.target_ms),
+        if s.slo.met { "MET" } else { "MISSED" }
+    );
+
+    // record for EXPERIMENTS.md
+    let out = Value::obj()
+        .set("model", model.clone())
+        .set("requests", s.served)
+        .set("batches", s.batches)
+        .set("throughput_rps", s.throughput_rps)
+        .set("latency", s.latency.to_json())
+        .set("peak_bytes", s.peak_bytes)
+        .set("budget_bytes", budget)
+        .set("slo_met", s.slo.met);
+    let path = engine.paths.results.join("e2e_serving.json");
+    out.to_file(&path)?;
+    println!("\nrecorded -> {}", path.display());
+
+    anyhow::ensure!(s.slo.met, "SLO missed");
+    anyhow::ensure!(s.peak_bytes <= budget + budget / 2, "peak far above budget");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Fig-7 style sweep: latency + optimal #Loading-Agents vs memory budget.
+//!
+//! Runs the Layer Profiler once, then asks the Pipeline Planner (with
+//! empirical pre-runs, the paper's method) for the best agent count under
+//! a range of budgets, and prints the paper's Fig-7 series.
+//!
+//! ```bash
+//! cargo run --release --example memory_sweep                 # bert-large-sim
+//! HERMES_SWEEP_MODEL=vit-large-sim cargo run --release --example memory_sweep
+//! ```
+
+use hermes::engine::Engine;
+use hermes::planner;
+use hermes::report::profile_one;
+use hermes::util::{human_bytes, human_ms};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::with_default_paths()?;
+    let model = std::env::var("HERMES_SWEEP_MODEL").unwrap_or_else(|_| "bert-large-sim".into());
+    let disk = "edge-emmc";
+    let profile = engine.runtime.profile(&model)?;
+    let total = profile.total_weight_bytes;
+
+    println!("== memory sweep: {model} ({}) on {disk} ==\n", human_bytes(total));
+    println!("profiling layers...");
+    let stats = profile_one(&engine, &model, disk)?;
+    let (l, c, _) = stats.body_means(profile.body_kind());
+    println!(
+        "  per body layer: load {} / compute {}  (ratio {:.1}x)\n",
+        human_ms(l),
+        human_ms(c),
+        stats.load_compute_ratio(profile.body_kind())
+    );
+
+    let min_feasible = planner::min_feasible_budget(&stats, profile.body_kind());
+    let budgets: Vec<u64> = [0.12, 0.18, 0.25, 0.35, 0.5, 0.7]
+        .iter()
+        .map(|f| ((total as f64 * f) as u64).max(min_feasible))
+        .collect();
+
+    println!("planning (empirical pre-runs per budget)...");
+    let sched = planner::plan(&engine, &stats, &budgets, 8, true)?;
+    println!("\n{:>12} | {:>5} | {:>10} | {:>10}", "budget", "#LAs", "latency", "peak");
+    println!("{}", "-".repeat(48));
+    let mut prev_agents = 0;
+    let mut prev_latency = f64::INFINITY;
+    for e in &sched.entries {
+        let lat = e.measured_latency_ms.unwrap_or(e.predicted_latency_ms);
+        println!(
+            "{:>12} | {:>5} | {:>10} | {:>10}",
+            human_bytes(e.budget_bytes),
+            e.agents,
+            human_ms(lat),
+            e.measured_peak_bytes.map(human_bytes).unwrap_or_else(|| "-".into()),
+        );
+        // paper's Fig-7 trend: relaxing the budget never hurts
+        assert!(e.agents >= prev_agents, "agents should not shrink with budget");
+        prev_agents = e.agents;
+        prev_latency = prev_latency.min(lat);
+    }
+    println!("\npaper Fig 7: latency falls and the optimal #LAs grows with the budget");
+    Ok(())
+}

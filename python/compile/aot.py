@@ -1,0 +1,205 @@
+"""AOT compile path: lower every (profile x layer-kind x batch) to HLO text.
+
+Runs ONCE at build time (``make artifacts``); python never appears on the
+request path.  Interchange format is **HLO text**, not serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 (the version the published ``xla`` 0.1.6 crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Outputs under ``artifacts/``:
+
+    <profile>/<kind>.b<B>.hlo.txt     one executable per layer kind/batch
+    manifest.json                     configs + stage tables + tensor specs
+                                      + entry index (Rust's single source
+                                      of truth — it never re-derives specs)
+    golden/<profile>/...              python-written shards + input/expected
+                                      vectors for cross-language numerics
+                                      tests (tiny profiles only)
+
+Usage: python -m compile.aot [--out-dir DIR] [--profiles a,b] [--golden-only]
+       [--pallas-ln] [--pallas-ffn]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, hws, model
+from .configs import Profile
+from .model import KernelChoice
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    return_tuple=False: every entry has exactly one output array, so the
+    Rust side can chain PJRT output buffers directly into the next layer's
+    execute_b call (no tuple unwrap, no literal round-trip).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def entry_fn(p: Profile, kind: str, kc: KernelChoice):
+    """Build the jittable fn: (activations..., *weights) -> (out,)."""
+    fwd = model.FWD_FNS[kind]
+    n_act = len(model.activation_in_specs(p, kind, 1))
+
+    def fn(*args):
+        acts, params = args[:n_act], args[n_act:]
+        return fwd(p, *acts, *params, kc=kc)
+
+    return fn
+
+
+_DT = {"f32": np.float32, "i32": np.int32, "u32": np.uint32}
+
+
+def lower_entry(p: Profile, kind: str, batch: int, kc: KernelChoice) -> str:
+    act_specs = model.activation_in_specs(p, kind, batch)
+    arg_specs = [
+        jax.ShapeDtypeStruct(tuple(a["shape"]), _DT[a["dtype"]]) for a in act_specs
+    ]
+    for spec in configs.SPEC_FNS[kind](p):
+        arg_specs.append(jax.ShapeDtypeStruct(spec.shape, _DT[spec.dtype]))
+    lowered = jax.jit(entry_fn(p, kind, kc)).lower(*arg_specs)
+    return to_hlo_text(lowered)
+
+
+def build_profile(p: Profile, out_dir: str, kc: KernelChoice) -> dict:
+    """Lower all entries for one profile; return its manifest block."""
+    pdir = os.path.join(out_dir, p.name)
+    os.makedirs(pdir, exist_ok=True)
+    kinds = {}
+    for kind in configs.layer_kinds_for(p):
+        kinds[kind] = {
+            "params": [s.to_json() for s in configs.SPEC_FNS[kind](p)],
+            "param_bytes": sum(s.num_bytes() for s in configs.SPEC_FNS[kind](p)),
+        }
+    entries = {}
+    for kind in configs.layer_kinds_for(p):
+        for batch in p.batches:
+            t0 = time.time()
+            text = lower_entry(p, kind, batch, kc)
+            rel = f"{p.name}/{kind}.b{batch}.hlo.txt"
+            with open(os.path.join(out_dir, rel), "w") as f:
+                f.write(text)
+            entries[f"{kind}@b{batch}"] = {
+                "kind": kind,
+                "batch": batch,
+                "hlo": rel,
+                "activations": model.activation_in_specs(p, kind, batch),
+                "output": model.activation_out_spec(p, kind, batch),
+            }
+            print(f"  lowered {p.name}/{kind}@b{batch} "
+                  f"({len(text)//1024} KiB, {time.time()-t0:.1f}s)", flush=True)
+    stages = configs.stage_table(p)
+    return {
+        "config": dict(p.raw, name=p.name),
+        "stages": stages,
+        "kinds": kinds,
+        "entries": entries,
+        "total_weight_bytes": configs.profile_total_bytes(p),
+    }
+
+
+# ---------------------------------------------------------------------------
+# golden vectors (cross-language numerics ground truth, tiny profiles)
+# ---------------------------------------------------------------------------
+
+GOLDEN_PROFILES = ("tiny-bert", "tiny-gpt", "tiny-vit", "tiny-gptj")
+
+
+def gen_golden(p: Profile, out_dir: str, kc: KernelChoice) -> None:
+    gdir = os.path.join(out_dir, "golden", p.name)
+    wdir = os.path.join(gdir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+    rng = np.random.RandomState(hash(p.name) % (2**31))
+    stages = configs.stage_table(p)
+    stage_weights = []
+    for st in stages:
+        w = model.make_example_weights(p, st["kind"], rng)
+        specs = configs.SPEC_FNS[st["kind"]](p)
+        hws.write_shard(
+            os.path.join(wdir, st["shard"]), st["kind"], st["index"],
+            [(s.name, np.asarray(t)) for s, t in zip(specs, w)],
+        )
+        stage_weights.append(w)
+    B, S = 1, p.max_seq
+    if p.family == "vit":
+        inp = rng.randn(B, S - 1, p.patch_dim).astype(np.float32)
+        in_spec = {"shape": [B, S - 1, p.patch_dim], "dtype": "f32"}
+    else:
+        inp = rng.randint(0, p.vocab, size=(B, S)).astype(np.int32)
+        in_spec = {"shape": [B, S], "dtype": "i32"}
+    out = np.asarray(model.full_forward(p, inp, stage_weights, kc=kc))
+    inp.tofile(os.path.join(gdir, "input.bin"))
+    out.astype(np.float32).tofile(os.path.join(gdir, "expected.bin"))
+    with open(os.path.join(gdir, "golden.json"), "w") as f:
+        json.dump({
+            "profile": p.name,
+            "input": in_spec,
+            "expected": {"shape": list(out.shape), "dtype": "f32"},
+            "rtol": 5e-4, "atol": 5e-5,
+        }, f, indent=1)
+    print(f"  golden {p.name}: out shape {out.shape}", flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(configs.REPO_ROOT, "artifacts"))
+    ap.add_argument("--profiles", default="",
+                    help="comma-separated profile names (default: all)")
+    ap.add_argument("--golden-only", action="store_true")
+    ap.add_argument("--pallas-ln", action="store_true",
+                    help="use the Pallas LayerNorm kernel in lowered HLO")
+    ap.add_argument("--pallas-ffn", action="store_true",
+                    help="use the Pallas FFN kernel in lowered HLO")
+    args = ap.parse_args(argv)
+
+    kc = KernelChoice(attention=True, layernorm=args.pallas_ln, ffn=args.pallas_ffn)
+    profiles = configs.load_profiles()
+    names = [n.strip() for n in args.profiles.split(",") if n.strip()] or list(profiles)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "kernel_choice": vars(kc) if hasattr(kc, "__dict__") else {
+        "attention": kc.attention, "layernorm": kc.layernorm, "ffn": kc.ffn},
+        "profiles": {}}
+    # dataclass(frozen) has no __dict__ mutation issues; build dict explicitly
+    manifest["kernel_choice"] = {
+        "attention": kc.attention, "layernorm": kc.layernorm, "ffn": kc.ffn}
+
+    t0 = time.time()
+    if not args.golden_only:
+        # partial rebuilds merge into the existing manifest
+        manifest_path = os.path.join(args.out_dir, "manifest.json")
+        if os.path.exists(manifest_path) and set(names) != set(profiles):
+            with open(manifest_path) as f:
+                manifest["profiles"] = json.load(f).get("profiles", {})
+        for name in names:
+            p = profiles[name]
+            print(f"profile {name}:", flush=True)
+            manifest["profiles"][name] = build_profile(p, args.out_dir, kc)
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+    for name in names:
+        if name in GOLDEN_PROFILES:
+            gen_golden(profiles[name], args.out_dir, kc)
+    print(f"aot done in {time.time()-t0:.1f}s -> {args.out_dir}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,325 @@
+"""Model profile registry (build-time).
+
+Single source of truth for architecture dims is ``configs/models.json`` at
+the repo root; this module loads it and derives the per-layer-kind tensor
+specs (ordered parameter lists with names / shapes / dtypes) that both
+``model.py`` (L2 forward fns) and ``aot.py`` (manifest emission) consume.
+
+The Rust side never re-derives these specs: it reads them from
+``artifacts/manifest.json`` written by ``aot.py``, so the two languages
+cannot drift.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", ".."))
+MODELS_JSON = os.path.join(REPO_ROOT, "configs", "models.json")
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    """One weight tensor inside a layer shard (ordered)."""
+
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str = "f32"
+
+    def num_elements(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+    def num_bytes(self) -> int:
+        size = {"f32": 4, "i32": 4, "u32": 4, "f16": 2}[self.dtype]
+        return self.num_elements() * size
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "shape": list(self.shape), "dtype": self.dtype}
+
+
+@dataclass(frozen=True)
+class Profile:
+    """A model architecture profile (one paper model, scaled)."""
+
+    name: str
+    family: str
+    arch: str
+    hidden: int
+    heads: int
+    ffn: int
+    layers: int
+    max_seq: int
+    seq: int
+    dtype: str
+    pre_ln: bool
+    vocab: int = 0
+    type_vocab: int = 0
+    num_classes: int = 0
+    patch_dim: int = 0
+    decoder_layers: int = 0
+    prompt_tokens: int = 0
+    gen_tokens: int = 0
+    batches: Tuple[int, ...] = (1,)
+    paper_model: str = ""
+    raw: dict = field(default_factory=dict, compare=False)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+
+def load_profiles(path: str = MODELS_JSON) -> Dict[str, Profile]:
+    with open(path) as f:
+        doc = json.load(f)
+    out: Dict[str, Profile] = {}
+    for name, cfg in doc["profiles"].items():
+        out[name] = Profile(
+            name=name,
+            family=cfg["family"],
+            arch=cfg["arch"],
+            hidden=cfg["hidden"],
+            heads=cfg["heads"],
+            ffn=cfg["ffn"],
+            layers=cfg["layers"],
+            max_seq=cfg["max_seq"],
+            seq=cfg["seq"],
+            dtype=cfg.get("dtype", "f32"),
+            pre_ln=cfg.get("pre_ln", False),
+            vocab=cfg.get("vocab", 0),
+            type_vocab=cfg.get("type_vocab", 0),
+            num_classes=cfg.get("num_classes", 0),
+            patch_dim=cfg.get("patch_dim", 0),
+            decoder_layers=cfg.get("decoder_layers", 0),
+            prompt_tokens=cfg.get("prompt_tokens", 0),
+            gen_tokens=cfg.get("gen_tokens", 0),
+            batches=tuple(cfg.get("batches", [1])),
+            paper_model=cfg.get("paper_model", ""),
+            raw=cfg,
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-layer-kind tensor specs.  Order matters: it is both the HLO parameter
+# order (after the activation inputs) and the shard serialization order.
+# ---------------------------------------------------------------------------
+
+
+def embedding_specs(p: Profile) -> List[TensorSpec]:
+    """Token embedding stage.
+
+    bert: LN(tok[ids] + pos + type0)   gpt2/gptj/bart: tok[ids] + pos
+    """
+    H = p.hidden
+    specs = [
+        TensorSpec("tok_table", (p.vocab, H)),
+        TensorSpec("pos_table", (p.max_seq, H)),
+    ]
+    if p.family == "bert":
+        specs += [
+            TensorSpec("type_table", (p.type_vocab, H)),
+            TensorSpec("emb_ln_g", (H,)),
+            TensorSpec("emb_ln_b", (H,)),
+        ]
+    return specs
+
+
+def patch_embed_specs(p: Profile) -> List[TensorSpec]:
+    """ViT patch embedding: linear projection + cls token + positions."""
+    H = p.hidden
+    return [
+        TensorSpec("patch_w", (p.patch_dim, H)),
+        TensorSpec("patch_b", (H,)),
+        TensorSpec("cls_token", (1, H)),
+        TensorSpec("pos_table", (p.max_seq, H)),
+    ]
+
+
+def encoder_layer_specs(p: Profile) -> List[TensorSpec]:
+    """Standard transformer encoder layer (also GPT-2-style decoder layer).
+
+    16 tensors: 2 LN pairs, QKVO projections with biases, 2-layer FFN.
+    """
+    H, F = p.hidden, p.ffn
+    return [
+        TensorSpec("ln1_g", (H,)),
+        TensorSpec("ln1_b", (H,)),
+        TensorSpec("wq", (H, H)),
+        TensorSpec("bq", (H,)),
+        TensorSpec("wk", (H, H)),
+        TensorSpec("bk", (H,)),
+        TensorSpec("wv", (H, H)),
+        TensorSpec("bv", (H,)),
+        TensorSpec("wo", (H, H)),
+        TensorSpec("bo", (H,)),
+        TensorSpec("ln2_g", (H,)),
+        TensorSpec("ln2_b", (H,)),
+        TensorSpec("w1", (H, F)),
+        TensorSpec("b1", (F,)),
+        TensorSpec("w2", (F, H)),
+        TensorSpec("b2", (H,)),
+    ]
+
+
+# GPT-2 decoder layers share the encoder-layer parameterization (the causal
+# mask is baked into the HLO, not a weight).
+decoder_layer_specs = encoder_layer_specs
+
+
+def gptj_layer_specs(p: Profile) -> List[TensorSpec]:
+    """GPT-J block: single LN, parallel attention + FFN, no QKV biases."""
+    H, F = p.hidden, p.ffn
+    return [
+        TensorSpec("ln_g", (H,)),
+        TensorSpec("ln_b", (H,)),
+        TensorSpec("wq", (H, H)),
+        TensorSpec("wk", (H, H)),
+        TensorSpec("wv", (H, H)),
+        TensorSpec("wo", (H, H)),
+        TensorSpec("w1", (H, F)),
+        TensorSpec("b1", (F,)),
+        TensorSpec("w2", (F, H)),
+        TensorSpec("b2", (H,)),
+    ]
+
+
+def cross_decoder_layer_specs(p: Profile) -> List[TensorSpec]:
+    """BART decoder layer: self-attn + cross-attn + FFN (post-LN)."""
+    H, F = p.hidden, p.ffn
+    return [
+        TensorSpec("ln1_g", (H,)),
+        TensorSpec("ln1_b", (H,)),
+        TensorSpec("wq", (H, H)),
+        TensorSpec("bq", (H,)),
+        TensorSpec("wk", (H, H)),
+        TensorSpec("bk", (H,)),
+        TensorSpec("wv", (H, H)),
+        TensorSpec("bv", (H,)),
+        TensorSpec("wo", (H, H)),
+        TensorSpec("bo", (H,)),
+        TensorSpec("ln2_g", (H,)),
+        TensorSpec("ln2_b", (H,)),
+        TensorSpec("xwq", (H, H)),
+        TensorSpec("xbq", (H,)),
+        TensorSpec("xwk", (H, H)),
+        TensorSpec("xbk", (H,)),
+        TensorSpec("xwv", (H, H)),
+        TensorSpec("xbv", (H,)),
+        TensorSpec("xwo", (H, H)),
+        TensorSpec("xbo", (H,)),
+        TensorSpec("ln3_g", (H,)),
+        TensorSpec("ln3_b", (H,)),
+        TensorSpec("w1", (H, F)),
+        TensorSpec("b1", (F,)),
+        TensorSpec("w2", (F, H)),
+        TensorSpec("b2", (H,)),
+    ]
+
+
+def pooler_specs(p: Profile) -> List[TensorSpec]:
+    H = p.hidden
+    return [TensorSpec("pool_w", (H, H)), TensorSpec("pool_b", (H,))]
+
+
+def classifier_specs(p: Profile) -> List[TensorSpec]:
+    H = p.hidden
+    return [
+        TensorSpec("cls_ln_g", (H,)),
+        TensorSpec("cls_ln_b", (H,)),
+        TensorSpec("cls_w", (H, p.num_classes)),
+        TensorSpec("cls_b", (p.num_classes,)),
+    ]
+
+
+def lm_head_specs(p: Profile) -> List[TensorSpec]:
+    H = p.hidden
+    specs = [TensorSpec("f_ln_g", (H,)), TensorSpec("f_ln_b", (H,))]
+    # GPT-2 ties the LM head to the token table; GPT-J has a separate head
+    # with bias.  Either way the tensor is stored in this stage's shard
+    # (layer-based partitioning: each stage's weights live in its own shard).
+    specs.append(TensorSpec("head_w", (H, p.vocab)))
+    if p.family == "gptj":
+        specs.append(TensorSpec("head_b", (p.vocab,)))
+    return specs
+
+
+SPEC_FNS = {
+    "embedding": embedding_specs,
+    "patch_embed": patch_embed_specs,
+    "encoder_layer": encoder_layer_specs,
+    "decoder_layer": decoder_layer_specs,
+    "gptj_layer": gptj_layer_specs,
+    "cross_decoder_layer": cross_decoder_layer_specs,
+    "pooler": pooler_specs,
+    "classifier": classifier_specs,
+    "lm_head": lm_head_specs,
+}
+
+
+def layer_kinds_for(p: Profile) -> List[str]:
+    """The distinct layer kinds a profile needs HLO entries for."""
+    if p.family == "bert":
+        return ["embedding", "encoder_layer", "pooler"]
+    if p.family == "vit":
+        return ["patch_embed", "encoder_layer", "classifier"]
+    if p.family == "gpt2":
+        return ["embedding", "decoder_layer", "lm_head"]
+    if p.family == "gptj":
+        return ["embedding", "gptj_layer", "lm_head"]
+    if p.family == "bart":
+        return ["embedding", "encoder_layer", "cross_decoder_layer", "lm_head"]
+    raise ValueError(f"unknown family {p.family}")
+
+
+def stage_table(p: Profile) -> List[dict]:
+    """Ordered pipeline stages for inference (what Rust executes).
+
+    Each stage: {"index", "kind", "shard"}.  The encoder/decoder stages are
+    the ones PIPELOAD's Loading Agents stream and the Daemon destroys; the
+    first/last stages ride the same machinery (paper section III-B: the
+    layer-based partitioning covers embedding/other layers too).
+    """
+    stages: List[dict] = []
+
+    def add(kind: str):
+        i = len(stages)
+        stages.append({"index": i, "kind": kind, "shard": f"stage_{i:03d}.hws"})
+
+    if p.family == "vit":
+        add("patch_embed")
+    else:
+        add("embedding")
+    if p.family == "bart":
+        for _ in range(p.layers):
+            add("encoder_layer")
+        for _ in range(p.decoder_layers):
+            add("cross_decoder_layer")
+    else:
+        body = {
+            "bert": "encoder_layer",
+            "vit": "encoder_layer",
+            "gpt2": "decoder_layer",
+            "gptj": "gptj_layer",
+        }[p.family]
+        for _ in range(p.layers):
+            add(body)
+    tail = {"bert": "pooler", "vit": "classifier", "gpt2": "lm_head",
+            "gptj": "lm_head", "bart": "lm_head"}
+    add(tail[p.family])
+    return stages
+
+
+def profile_total_bytes(p: Profile) -> int:
+    """Total weight bytes across all stages (Table I 'total')."""
+    total = 0
+    for st in stage_table(p):
+        for spec in SPEC_FNS[st["kind"]](p):
+            total += spec.num_bytes()
+    return total

@@ -1,0 +1,125 @@
+"""Hermes Weight Shard (.hws) writer/reader — python side.
+
+Binary layout (little-endian), mirrored exactly by ``rust/src/weights/``:
+
+    magic   : 4 bytes  b"HWSH"
+    version : u32      (1)
+    kind    : u16 len + utf8 bytes          (layer kind, e.g. "encoder_layer")
+    stage   : u32                           (stage index in the pipeline)
+    count   : u32                           (number of tensors)
+    per tensor header:
+        name     : u16 len + utf8
+        dtype    : u8   (0=f32, 1=i32, 2=u32, 3=f16)
+        ndims    : u8
+        dims     : u32 * ndims
+        data_len : u64  (bytes)
+    data    : concatenated raw tensor data in header order
+    footer  : u64 fletcher64 checksum over all preceding bytes
+
+The format is deliberately trivial: a shard is one pipeline stage's weights,
+the unit PIPELOAD's Loading Agents stream and the Daemon destroys.
+Interop is proven by ``python/tests/test_hws.py`` (python round-trip) and
+``rust/tests/golden_numerics.rs`` (rust reads python-written shards).
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import List, Tuple
+
+import numpy as np
+
+MAGIC = b"HWSH"
+VERSION = 1
+DTYPE_CODES = {"f32": 0, "i32": 1, "u32": 2, "f16": 3}
+DTYPE_NP = {"f32": np.float32, "i32": np.int32, "u32": np.uint32, "f16": np.float16}
+CODE_TO_DTYPE = {v: k for k, v in DTYPE_CODES.items()}
+
+
+def fletcher64(data: bytes) -> int:
+    """Fletcher-64 over little-endian u32 words (zero-padded tail)."""
+    if len(data) % 4:
+        data = data + b"\x00" * (4 - len(data) % 4)
+    a, b = 0, 0
+    m = (1 << 32) - 1
+    for (w,) in struct.iter_unpack("<I", data):
+        a = (a + w) % m
+        b = (b + a) % m
+    return (b << 32) | a
+
+
+def write_shard(path: str, kind: str, stage: int,
+                tensors: List[Tuple[str, np.ndarray]]) -> int:
+    """Write one shard; returns total bytes written."""
+    head = bytearray()
+    head += MAGIC
+    head += struct.pack("<I", VERSION)
+    kb = kind.encode()
+    head += struct.pack("<H", len(kb)) + kb
+    head += struct.pack("<I", stage)
+    head += struct.pack("<I", len(tensors))
+    blobs = []
+    for name, arr in tensors:
+        arr = np.ascontiguousarray(arr)
+        dt = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32",
+              np.dtype(np.uint32): "u32", np.dtype(np.float16): "f16"}[arr.dtype]
+        nb = name.encode()
+        head += struct.pack("<H", len(nb)) + nb
+        head += struct.pack("<BB", DTYPE_CODES[dt], arr.ndim)
+        head += struct.pack(f"<{arr.ndim}I", *arr.shape)
+        raw = arr.tobytes()
+        head += struct.pack("<Q", len(raw))
+        blobs.append(raw)
+    body = bytes(head) + b"".join(blobs)
+    csum = fletcher64(body)
+    with open(path, "wb") as f:
+        f.write(body)
+        f.write(struct.pack("<Q", csum))
+    return len(body) + 8
+
+
+def read_shard(path: str):
+    """Read a shard -> (kind, stage, [(name, ndarray)]). Verifies checksum."""
+    with open(path, "rb") as f:
+        data = f.read()
+    body, footer = data[:-8], data[-8:]
+    (want,) = struct.unpack("<Q", footer)
+    got = fletcher64(body)
+    if want != got:
+        raise ValueError(f"checksum mismatch in {path}: {want:#x} != {got:#x}")
+    off = 0
+
+    def take(fmt):
+        nonlocal off
+        size = struct.calcsize(fmt)
+        vals = struct.unpack_from(fmt, body, off)
+        off += size
+        return vals
+
+    magic = body[:4]
+    off = 4
+    assert magic == MAGIC, magic
+    (version,) = take("<I")
+    assert version == VERSION
+    (klen,) = take("<H")
+    kind = body[off:off + klen].decode()
+    off += klen
+    (stage,) = take("<I")
+    (count,) = take("<I")
+    headers = []
+    for _ in range(count):
+        (nlen,) = take("<H")
+        name = body[off:off + nlen].decode()
+        off += nlen
+        code, ndim = take("<BB")
+        dims = take(f"<{ndim}I") if ndim else ()
+        (dlen,) = take("<Q")
+        headers.append((name, CODE_TO_DTYPE[code], dims, dlen))
+    tensors = []
+    for name, dt, dims, dlen in headers:
+        raw = body[off:off + dlen]
+        off += dlen
+        arr = np.frombuffer(raw, dtype=DTYPE_NP[dt]).reshape(dims)
+        tensors.append((name, arr))
+    assert off == len(body), (off, len(body))
+    return kind, stage, tensors

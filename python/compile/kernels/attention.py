@@ -1,0 +1,123 @@
+"""L1 hot-spot: flash-style attention as a Pallas kernel.
+
+Online-softmax attention tiled over (batch*heads, q-blocks) with an inner
+loop over kv-blocks — the classic FlashAttention schedule re-expressed for
+TPU Pallas:
+
+* each grid step owns one q tile in scratch (VMEM on a real TPU);
+* kv tiles stream through the inner `fori_loop`, maintaining the running
+  max `m`, normalizer `l`, and accumulator `acc`;
+* `BlockSpec`s express the HBM->VMEM schedule the CUDA original expressed
+  with threadblocks (DESIGN.md section 4, Hardware-Adaptation).
+
+On this image the kernel MUST run with ``interpret=True`` (the CPU PJRT
+plugin cannot execute Mosaic custom-calls), so it lowers to plain HLO and
+runs anywhere — including the Rust PJRT runtime.  TPU efficiency is
+*estimated* from the BlockSpec footprint in DESIGN.md section 8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (block size picker)."""
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool, block_k: int, seq: int):
+    """One (bh, q-block) grid step: online softmax over kv blocks."""
+    iq = pl.program_id(1)
+    block_q = q_ref.shape[1]
+    dh = q_ref.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    q = q_ref[0].astype(jnp.float32) * scale  # [bq, dh]
+
+    num_k_blocks = seq // block_k
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)  # global q rows
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, pl.dslice(j * block_k, block_k), :]
+        v = v_ref[0, pl.dslice(j * block_k, block_k), :]
+        s = q @ k.astype(jnp.float32).T  # [bq, bk]
+        if causal:
+            k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = k_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Rescale previous stats to the new max, then fold in this block.
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), dtype=jnp.float32)
+    if causal:
+        # Blocks strictly above the diagonal contribute nothing; skip them.
+        # (iq+1)*bq rows need kv up to that row index.
+        last = jax.lax.div(((iq + 1) * block_q - 1), block_k) + 1
+    else:
+        last = num_k_blocks
+    m, l, acc = jax.lax.fori_loop(0, last, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = False,
+              block_q: int = 0, block_k: int = 0) -> jax.Array:
+    """Flash attention over [BH, S, dh]; heads folded into the batch dim.
+
+    block_q / block_k of 0 picks the largest divisor of S <= 32.
+    """
+    bh, seq, dh = q.shape
+    bq = block_q or _largest_divisor_leq(seq, 32)
+    bk = block_k or _largest_divisor_leq(seq, 32)
+    assert seq % bq == 0 and seq % bk == 0, (seq, bq, bk)
+    grid = (bh, seq // bq)
+    kernel = functools.partial(_attn_kernel, causal=causal, block_k=bk, seq=seq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, dh), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(seq: int, dh: int, block_q: int = 0, block_k: int = 0,
+                         bytes_per_elem: int = 4) -> int:
+    """Estimated per-grid-step VMEM footprint of the kernel (DESIGN section 8).
+
+    q tile + streamed kv tiles + accumulator + softmax stats + output tile.
+    """
+    bq = block_q or _largest_divisor_leq(seq, 32)
+    bk = block_k or _largest_divisor_leq(seq, 32)
+    tiles = (
+        bq * dh        # q
+        + 2 * bk * dh  # k, v (streamed)
+        + bq * dh      # acc
+        + bq * bk      # scores
+        + 2 * bq       # m, l
+        + bq * dh      # o
+    )
+    return tiles * bytes_per_elem

@@ -1,0 +1,52 @@
+"""LayerNorm as a Pallas kernel, tiled over row blocks.
+
+Used by the L2 model when ``use_pallas_ln`` is enabled (ablation path);
+the default model uses the fused jnp LN which XLA fuses better on CPU.
+Correctness vs `ref.layernorm_ref` is always enforced by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import LN_EPS
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # [br, H]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps"))
+def layernorm(x: jax.Array, g: jax.Array, b: jax.Array,
+              block_rows: int = 0, eps: float = LN_EPS) -> jax.Array:
+    """LayerNorm over the last dim of [R, H]."""
+    rows, h = x.shape
+    br = block_rows or _largest_divisor_leq(rows, 64)
+    assert rows % br == 0
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, h), x.dtype),
+        interpret=True,
+    )(x, g, b)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact reference here; pytest
+(`python/tests/test_kernels.py`) sweeps shapes with hypothesis and asserts
+allclose between kernel and oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LN_EPS = 1e-5
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool) -> jax.Array:
+    """Scaled dot-product attention over [BH, S, dh] (heads pre-folded)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        S = q.shape[1]
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        s = jnp.where(mask[None, :, :], s, jnp.float32(-1e30))
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def layernorm_ref(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = LN_EPS) -> jax.Array:
+    """LayerNorm over the last dim of [R, H]."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def ffn_ref(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array, b2: jax.Array) -> jax.Array:
+    """Position-wise FFN with exact (erf) GELU over [R, H]."""
+    h = jax.nn.gelu(x @ w1 + b1, approximate=False)
+    return h @ w2 + b2

@@ -1,0 +1,285 @@
+"""L2: per-layer-type JAX forward functions (build-time only).
+
+Each function below becomes one AOT-compiled HLO entry: the activation(s)
+come first, then the layer's weight tensors in the exact order of
+``configs.SPEC_FNS[kind]``.  Weights are *runtime parameters* — never baked
+into the executable — which is what lets PIPELOAD's Daemon Agent destroy
+them after compute (DESIGN.md section 2).
+
+The attention hot-spot always goes through the L1 Pallas kernel
+(`kernels.attention`); LayerNorm/FFN can optionally use their Pallas
+versions too (`KernelChoice`, ablated in rust/benches/ablation.rs).
+
+``full_forward`` chains every stage exactly as the Rust Inference Agent
+does, and is the oracle for the cross-language golden tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .configs import Profile
+from .kernels import attention as attn_k
+from .kernels import ffn as ffn_k
+from .kernels import layernorm as ln_k
+from .kernels.ref import LN_EPS
+
+
+@dataclass(frozen=True)
+class KernelChoice:
+    """Which compute paths use the Pallas kernels vs plain jnp."""
+
+    attention: bool = True
+    layernorm: bool = False
+    ffn: bool = False
+
+
+DEFAULT_KERNELS = KernelChoice()
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def _ln(x: jax.Array, g: jax.Array, b: jax.Array, kc: KernelChoice) -> jax.Array:
+    """LayerNorm over the last dim of [..., H]."""
+    if kc.layernorm:
+        flat = x.reshape((-1, x.shape[-1]))
+        return ln_k.layernorm(flat, g, b).reshape(x.shape)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + LN_EPS) * g + b
+
+
+def _ffn(x: jax.Array, w1, b1, w2, b2, kc: KernelChoice) -> jax.Array:
+    if kc.ffn:
+        flat = x.reshape((-1, x.shape[-1]))
+        return ffn_k.ffn(flat, w1, b1, w2, b2).reshape(x.shape)
+    h = jax.nn.gelu(x @ w1 + b1, approximate=False)
+    return h @ w2 + b2
+
+
+def _mha(p: Profile, q_in: jax.Array, kv_in: jax.Array, wq, bq, wk, bk, wv, bv,
+         wo, bo, causal: bool, kc: KernelChoice) -> jax.Array:
+    """Multi-head attention [B,S,H] x [B,Sk,H] -> [B,S,H].
+
+    Heads are folded into the leading dim for the Pallas kernel.
+    """
+    B, S, H = q_in.shape
+    Sk = kv_in.shape[1]
+    nh, dh = p.heads, p.head_dim
+
+    def split(x, w, bias, s):
+        y = x @ w + bias  # [B,s,H]
+        return y.reshape(B, s, nh, dh).transpose(0, 2, 1, 3).reshape(B * nh, s, dh)
+
+    q = split(q_in, wq, bq, S)
+    k = split(kv_in, wk, bk, Sk)
+    v = split(kv_in, wv, bv, Sk)
+    if kc.attention:
+        if S == Sk:
+            o = attn_k.attention(q, k, v, causal=causal)
+        else:
+            # cross-attention with different kv length: jnp fallback
+            from .kernels.ref import attention_ref
+
+            o = attention_ref(q, k, v, causal=False)
+    else:
+        from .kernels.ref import attention_ref
+
+        o = attention_ref(q, k, v, causal)
+    o = o.reshape(B, nh, S, dh).transpose(0, 2, 1, 3).reshape(B, S, H)
+    return o @ wo + bo
+
+
+def _mha_nobias(p: Profile, x: jax.Array, wq, wk, wv, wo, causal: bool,
+                kc: KernelChoice) -> jax.Array:
+    """GPT-J style attention: no QKV/O biases."""
+    B, S, H = x.shape
+    z = jnp.zeros((H,), x.dtype)
+    # reuse _mha with zero biases; wo bias zero too
+    return _mha(p, x, x, wq, z, wk, z, wv, z, wo, z, causal, kc)
+
+
+# ---------------------------------------------------------------------------
+# layer-kind forward fns: fwd(p, kc) -> callable(acts..., *params) -> out
+# ---------------------------------------------------------------------------
+
+
+def embedding_fwd(p: Profile, ids: jax.Array, *w, kc: KernelChoice = DEFAULT_KERNELS):
+    """ids[B,S] int32 -> x[B,S,H]."""
+    S = ids.shape[1]
+    if p.family == "bert":
+        tok, pos, typ, g, b = w
+        x = tok[ids] + pos[:S][None, :, :] + typ[0][None, None, :]
+        return _ln(x, g, b, kc)
+    tok, pos = w
+    return tok[ids] + pos[:S][None, :, :]
+
+
+def patch_embed_fwd(p: Profile, patches: jax.Array, *w, kc: KernelChoice = DEFAULT_KERNELS):
+    """patches[B,S-1,P] -> x[B,S,H] (cls token prepended)."""
+    pw, pb, cls, pos = w
+    B = patches.shape[0]
+    x = patches @ pw + pb  # [B,S-1,H]
+    cls_tok = jnp.broadcast_to(cls[None, :, :], (B, 1, p.hidden))
+    x = jnp.concatenate([cls_tok, x], axis=1)
+    S = x.shape[1]
+    return x + pos[:S][None, :, :]
+
+
+def encoder_layer_fwd(p: Profile, x: jax.Array, *w, causal: bool = False,
+                      kc: KernelChoice = DEFAULT_KERNELS):
+    """Standard transformer block; pre-LN (ViT/GPT-2) or post-LN (BERT)."""
+    (ln1_g, ln1_b, wq, bq, wk, bk, wv, bv, wo, bo,
+     ln2_g, ln2_b, w1, b1, w2, b2) = w
+    if p.pre_ln:
+        h = _ln(x, ln1_g, ln1_b, kc)
+        x = x + _mha(p, h, h, wq, bq, wk, bk, wv, bv, wo, bo, causal, kc)
+        h = _ln(x, ln2_g, ln2_b, kc)
+        x = x + _ffn(h, w1, b1, w2, b2, kc)
+    else:
+        a = _mha(p, x, x, wq, bq, wk, bk, wv, bv, wo, bo, causal, kc)
+        x = _ln(x + a, ln1_g, ln1_b, kc)
+        f = _ffn(x, w1, b1, w2, b2, kc)
+        x = _ln(x + f, ln2_g, ln2_b, kc)
+    return x
+
+
+def decoder_layer_fwd(p: Profile, x: jax.Array, *w, kc: KernelChoice = DEFAULT_KERNELS):
+    return encoder_layer_fwd(p, x, *w, causal=True, kc=kc)
+
+
+def gptj_layer_fwd(p: Profile, x: jax.Array, *w, kc: KernelChoice = DEFAULT_KERNELS):
+    """GPT-J block: one LN, attention and FFN in parallel off the same LN."""
+    ln_g, ln_b, wq, wk, wv, wo, w1, b1, w2, b2 = w
+    h = _ln(x, ln_g, ln_b, kc)
+    a = _mha_nobias(p, h, wq, wk, wv, wo, causal=True, kc=kc)
+    f = _ffn(h, w1, b1, w2, b2, kc)
+    return x + a + f
+
+
+def cross_decoder_layer_fwd(p: Profile, x: jax.Array, enc: jax.Array, *w,
+                            kc: KernelChoice = DEFAULT_KERNELS):
+    """BART decoder block: self-attn, cross-attn, FFN (post-LN)."""
+    (ln1_g, ln1_b, wq, bq, wk, bk, wv, bv, wo, bo,
+     ln2_g, ln2_b, xwq, xbq, xwk, xbk, xwv, xbv, xwo, xbo,
+     ln3_g, ln3_b, w1, b1, w2, b2) = w
+    a = _mha(p, x, x, wq, bq, wk, bk, wv, bv, wo, bo, True, kc)
+    x = _ln(x + a, ln1_g, ln1_b, kc)
+    a = _mha(p, x, enc, xwq, xbq, xwk, xbk, xwv, xbv, xwo, xbo, False, kc)
+    x = _ln(x + a, ln2_g, ln2_b, kc)
+    f = _ffn(x, w1, b1, w2, b2, kc)
+    return _ln(x + f, ln3_g, ln3_b, kc)
+
+
+def pooler_fwd(p: Profile, x: jax.Array, *w, kc: KernelChoice = DEFAULT_KERNELS):
+    """BERT pooler: tanh(x[:,0] @ W + b) -> [B,H]."""
+    pw, pb = w
+    return jnp.tanh(x[:, 0, :] @ pw + pb)
+
+
+def classifier_fwd(p: Profile, x: jax.Array, *w, kc: KernelChoice = DEFAULT_KERNELS):
+    """ViT head: LN then linear on the cls token -> [B,C]."""
+    g, b, cw, cb = w
+    h = _ln(x, g, b, kc)
+    return h[:, 0, :] @ cw + cb
+
+
+def lm_head_fwd(p: Profile, x: jax.Array, *w, kc: KernelChoice = DEFAULT_KERNELS):
+    """Final LN + LM projection -> logits[B,S,V]."""
+    if p.family == "gptj":
+        g, b, hw, hb = w
+        return _ln(x, g, b, kc) @ hw + hb
+    g, b, hw = w
+    return _ln(x, g, b, kc) @ hw
+
+
+FWD_FNS = {
+    "embedding": embedding_fwd,
+    "patch_embed": patch_embed_fwd,
+    "encoder_layer": encoder_layer_fwd,
+    "decoder_layer": decoder_layer_fwd,
+    "gptj_layer": gptj_layer_fwd,
+    "cross_decoder_layer": cross_decoder_layer_fwd,
+    "pooler": pooler_fwd,
+    "classifier": classifier_fwd,
+    "lm_head": lm_head_fwd,
+}
+
+
+# ---------------------------------------------------------------------------
+# activation specs per kind (what the HLO entry takes / returns)
+# ---------------------------------------------------------------------------
+
+
+def activation_in_specs(p: Profile, kind: str, batch: int) -> List[dict]:
+    """Ordered activation inputs for an HLO entry (before the weights)."""
+    B, S, H = batch, p.max_seq, p.hidden
+    if kind == "embedding":
+        return [{"name": "ids", "shape": [B, S], "dtype": "i32"}]
+    if kind == "patch_embed":
+        return [{"name": "patches", "shape": [B, S - 1, p.patch_dim], "dtype": "f32"}]
+    if kind == "cross_decoder_layer":
+        return [
+            {"name": "x", "shape": [B, S, H], "dtype": "f32"},
+            {"name": "enc", "shape": [B, S, H], "dtype": "f32"},
+        ]
+    return [{"name": "x", "shape": [B, S, H], "dtype": "f32"}]
+
+
+def activation_out_spec(p: Profile, kind: str, batch: int) -> dict:
+    B, S, H = batch, p.max_seq, p.hidden
+    if kind == "pooler":
+        return {"name": "pooled", "shape": [B, H], "dtype": "f32"}
+    if kind == "classifier":
+        return {"name": "logits", "shape": [B, p.num_classes], "dtype": "f32"}
+    if kind == "lm_head":
+        return {"name": "logits", "shape": [B, S, p.vocab], "dtype": "f32"}
+    return {"name": "x", "shape": [B, S, H], "dtype": "f32"}
+
+
+# ---------------------------------------------------------------------------
+# full-model forward (golden oracle; mirrors the Rust per-stage chain)
+# ---------------------------------------------------------------------------
+
+
+def full_forward(p: Profile, inputs: jax.Array, stage_weights: Sequence[Sequence[jax.Array]],
+                 kc: KernelChoice = DEFAULT_KERNELS) -> jax.Array:
+    """Chain all stages like the Inference Agent does (non-BART)."""
+    stages = configs.stage_table(p)
+    assert len(stage_weights) == len(stages)
+    x = inputs
+    enc_out = None
+    enc_done = 0
+    for st, w in zip(stages, stage_weights):
+        kind = st["kind"]
+        if kind == "cross_decoder_layer":
+            if enc_out is None:
+                enc_out = x
+                # BART: decoder consumes embedded decoder ids; for the
+                # extension we feed the encoder output as the decoder input
+                # seed as well (simplified single-input seq2seq trace).
+                x = enc_out
+            x = cross_decoder_layer_fwd(p, x, enc_out, *w, kc=kc)
+        else:
+            x = FWD_FNS[kind](p, x, *w, kc=kc)
+        enc_done += 1
+    return x
+
+
+def make_example_weights(p: Profile, kind: str, rng) -> List[jax.Array]:
+    """Random-normal weights (scaled) for a layer kind, numpy RandomState."""
+    out = []
+    for spec in configs.SPEC_FNS[kind](p):
+        arr = rng.randn(*spec.shape).astype("float32") * 0.05
+        if spec.name.endswith("_g"):  # LN gains near 1
+            arr = 1.0 + arr
+        out.append(jnp.asarray(arr))
+    return out

@@ -1,0 +1,151 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and block sizes) and asserts allclose — this is
+the CORE correctness signal for the kernel layer.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import attention as attn_k
+from compile.kernels import ffn as ffn_k
+from compile.kernels import layernorm as ln_k
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.randn(*shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    bh=st.integers(1, 6),
+    seq=st.sampled_from([4, 8, 10, 16, 32, 50, 64]),
+    dh=st.sampled_from([4, 8, 16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(bh, seq, dh, causal, seed):
+    rng = np.random.RandomState(seed)
+    q, k, v = (_rand(rng, bh, seq, dh) for _ in range(3))
+    out = attn_k.attention(q, k, v, causal=causal)
+    exp = ref.attention_ref(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    seq=st.sampled_from([16, 32, 64]),
+    bq=st.sampled_from([4, 8, 16]),
+    bk=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_block_size_invariance(seq, bq, bk, causal, seed):
+    """Output must not depend on the chosen tiling."""
+    rng = np.random.RandomState(seed)
+    q, k, v = (_rand(rng, 2, seq, 8) for _ in range(3))
+    a = attn_k.attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    b = attn_k.attention(q, k, v, causal=causal, block_q=seq, block_k=seq)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+def test_attention_causality():
+    """Changing future keys must not change past outputs under causal mask."""
+    rng = np.random.RandomState(0)
+    q, k, v = (_rand(rng, 1, 16, 8) for _ in range(3))
+    out1 = np.asarray(attn_k.attention(q, k, v, causal=True))
+    k2 = k.at[:, 8:, :].set(99.0)
+    v2 = v.at[:, 8:, :].set(-99.0)
+    out2 = np.asarray(attn_k.attention(q, k2, v2, causal=True))
+    np.testing.assert_allclose(out1[:, :8], out2[:, :8], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(out1[:, 8:], out2[:, 8:])
+
+
+def test_attention_softmax_stability():
+    """Large score magnitudes must not overflow (online softmax)."""
+    rng = np.random.RandomState(1)
+    q = _rand(rng, 1, 32, 8, scale=30.0)
+    k = _rand(rng, 1, 32, 8, scale=30.0)
+    v = _rand(rng, 1, 32, 8)
+    out = np.asarray(attn_k.attention(q, k, v, causal=False))
+    assert np.isfinite(out).all()
+    exp = np.asarray(ref.attention_ref(q, k, v, False))
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_footprint_estimate_monotone():
+    small = attn_k.vmem_footprint_bytes(64, 32, block_q=8, block_k=8)
+    big = attn_k.vmem_footprint_bytes(64, 32, block_q=32, block_k=32)
+    assert small < big
+    # default tiling of a bert-large-sim layer fits a 16 MiB VMEM budget
+    assert attn_k.vmem_footprint_bytes(64, 32) < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([1, 2, 8, 50, 64]),
+    h=st.sampled_from([8, 32, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(rows, h, seed):
+    rng = np.random.RandomState(seed)
+    x = _rand(rng, rows, h, scale=3.0)
+    g = _rand(rng, h, scale=0.5) + 1.0
+    b = _rand(rng, h, scale=0.5)
+    out = ln_k.layernorm(x, g, b)
+    exp = ref.layernorm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5)
+
+
+def test_layernorm_zero_variance_row():
+    x = jnp.ones((4, 16), jnp.float32) * 5.0
+    g = jnp.ones((16,), jnp.float32)
+    b = jnp.zeros((16,), jnp.float32)
+    out = np.asarray(ln_k.layernorm(x, g, b))
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, 0.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ffn
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([1, 4, 16, 50]),
+    h=st.sampled_from([8, 32]),
+    f=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ffn_matches_ref(rows, h, f, seed):
+    rng = np.random.RandomState(seed)
+    x = _rand(rng, rows, h)
+    w1, b1 = _rand(rng, h, f, scale=0.2), _rand(rng, f, scale=0.2)
+    w2, b2 = _rand(rng, f, h, scale=0.2), _rand(rng, h, scale=0.2)
+    out = ffn_k.ffn(x, w1, b1, w2, b2)
+    exp = ref.ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5)
+
+
+def test_block_size_picker():
+    assert attn_k._largest_divisor_leq(64, 32) == 32
+    assert attn_k._largest_divisor_leq(50, 32) == 25
+    assert attn_k._largest_divisor_leq(10, 32) == 10
+    assert attn_k._largest_divisor_leq(7, 4) == 1

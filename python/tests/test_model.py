@@ -1,0 +1,135 @@
+"""L2 model layer tests: shapes, semantics, and config derivations."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import configs, model
+from compile.model import KernelChoice
+
+PROFILES = configs.load_profiles()
+KC_JNP = KernelChoice(attention=False, layernorm=False, ffn=False)
+KC_PALLAS = KernelChoice(attention=True, layernorm=True, ffn=True)
+
+
+def _weights(p, kind, seed=0):
+    return model.make_example_weights(p, kind, np.random.RandomState(seed))
+
+
+@pytest.mark.parametrize("name", list(PROFILES))
+def test_stage_table_structure(name):
+    p = PROFILES[name]
+    stages = configs.stage_table(p)
+    # first stage embeds, last stage is the head, body layers in between
+    body = p.layers + (p.decoder_layers if p.family == "bart" else 0)
+    assert len(stages) == body + 2
+    assert [s["index"] for s in stages] == list(range(len(stages)))
+    assert stages[0]["kind"] in ("embedding", "patch_embed")
+    assert stages[-1]["kind"] in ("pooler", "classifier", "lm_head")
+    # shard names unique
+    assert len({s["shard"] for s in stages}) == len(stages)
+
+
+@pytest.mark.parametrize("name", ["bert-large-sim", "gpt2-base-sim",
+                                  "vit-large-sim", "gptj-sim"])
+def test_encoder_decoder_layers_dominate_memory(name):
+    """Observation I / Fig 2: body layers hold 70-95%+ of total weight bytes."""
+    p = PROFILES[name]
+    total = configs.profile_total_bytes(p)
+    body_kind = {"bert": "encoder_layer", "vit": "encoder_layer",
+                 "gpt2": "decoder_layer", "gptj": "gptj_layer"}[p.family]
+    body = sum(s.num_bytes() for s in configs.SPEC_FNS[body_kind](p)) * p.layers
+    share = body / total
+    assert 0.70 <= share <= 0.995, f"{name}: body share {share:.3f}"
+
+
+@pytest.mark.parametrize("name,kind", [
+    ("tiny-bert", "embedding"),
+    ("tiny-bert", "encoder_layer"),
+    ("tiny-bert", "pooler"),
+    ("tiny-gpt", "decoder_layer"),
+    ("tiny-gpt", "lm_head"),
+    ("tiny-vit", "patch_embed"),
+    ("tiny-vit", "classifier"),
+    ("tiny-gptj", "gptj_layer"),
+])
+def test_layer_shapes(name, kind):
+    p = PROFILES[name]
+    w = _weights(p, kind)
+    acts = model.activation_in_specs(p, kind, 1)
+    rng = np.random.RandomState(1)
+    args = []
+    for a in acts:
+        if a["dtype"] == "i32":
+            args.append(jnp.asarray(rng.randint(0, p.vocab, a["shape"]), jnp.int32))
+        else:
+            args.append(jnp.asarray(rng.randn(*a["shape"]), jnp.float32))
+    out = model.FWD_FNS[kind](p, *args, *w)
+    expect = model.activation_out_spec(p, kind, 1)
+    assert list(out.shape) == expect["shape"]
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_causal_decoder_prefix_stability():
+    """Changing ids after position t must not change logits at positions < t.
+
+    This is the property the Rust decode loop relies on: it runs the full
+    padded sequence every step and reads logits at cur_len-1.
+    """
+    p = PROFILES["tiny-gpt"]
+    stages = configs.stage_table(p)
+    rng = np.random.RandomState(3)
+    weights = [model.make_example_weights(p, s["kind"], rng) for s in stages]
+    ids1 = rng.randint(0, p.vocab, (1, p.max_seq)).astype(np.int32)
+    ids2 = ids1.copy()
+    ids2[:, 8:] = (ids2[:, 8:] + 7) % p.vocab
+    out1 = np.asarray(model.full_forward(p, jnp.asarray(ids1), weights))
+    out2 = np.asarray(model.full_forward(p, jnp.asarray(ids2), weights))
+    np.testing.assert_allclose(out1[:, :8], out2[:, :8], rtol=1e-4, atol=1e-5)
+    assert not np.allclose(out1[:, 8:], out2[:, 8:])
+
+
+@pytest.mark.parametrize("name", ["tiny-bert", "tiny-gpt", "tiny-gptj"])
+def test_pallas_vs_jnp_full_model(name):
+    """Full forward with all Pallas kernels == full forward with plain jnp."""
+    p = PROFILES[name]
+    stages = configs.stage_table(p)
+    rng = np.random.RandomState(5)
+    weights = [model.make_example_weights(p, s["kind"], rng) for s in stages]
+    ids = jnp.asarray(rng.randint(0, p.vocab, (1, p.max_seq)), jnp.int32)
+    a = np.asarray(model.full_forward(p, ids, weights, kc=KC_PALLAS))
+    b = np.asarray(model.full_forward(p, ids, weights, kc=KC_JNP))
+    np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-5)
+
+
+def test_gptj_parallel_structure():
+    """GPT-J block: attn and FFN read the same LN(x), not sequential."""
+    p = PROFILES["tiny-gptj"]
+    w = _weights(p, "gptj_layer")
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(1, p.max_seq, p.hidden), jnp.float32)
+    out = model.gptj_layer_fwd(p, x, *w)
+    # zeroing the FFN weights must still leave the attention contribution
+    w2 = list(w)
+    w2[6] = jnp.zeros_like(w2[6]); w2[7] = jnp.zeros_like(w2[7])
+    w2[8] = jnp.zeros_like(w2[8]); w2[9] = jnp.zeros_like(w2[9])
+    out_noffn = model.gptj_layer_fwd(p, x, *w2)
+    assert not np.allclose(np.asarray(out), np.asarray(out_noffn))
+    # with attention AND ffn zeroed, block is identity
+    w3 = [jnp.zeros_like(t) for t in w]
+    out_id = model.gptj_layer_fwd(p, x, *w3)
+    np.testing.assert_allclose(np.asarray(out_id), np.asarray(x), atol=1e-6)
+
+
+def test_table1_shares_sane():
+    """Sim profiles keep the paper's Fig-2 ordering: ViT/GPT-J most body-heavy."""
+    share = {}
+    for n in ["bert-large-sim", "vit-large-sim", "gpt2-base-sim", "gptj-sim"]:
+        p = PROFILES[n]
+        body_kind = {"bert": "encoder_layer", "vit": "encoder_layer",
+                     "gpt2": "decoder_layer", "gptj": "gptj_layer"}[p.family]
+        body = sum(s.num_bytes() for s in configs.SPEC_FNS[body_kind](p)) * p.layers
+        share[n] = body / configs.profile_total_bytes(p)
+    assert share["vit-large-sim"] > share["bert-large-sim"]
+    assert share["gptj-sim"] > share["gpt2-base-sim"]

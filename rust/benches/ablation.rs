@@ -1,0 +1,86 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. destroy-after-compute ON vs OFF (the paper's core memory mechanism) —
+//!    latency cost vs peak-memory saving on a throttled disk;
+//! 2. shard checksum validation ON vs OFF — integrity overhead on the
+//!    loading path;
+//! 3. per-token weight reload vs resident weights for generative decode —
+//!    the paper's §VII future-work direction quantified (a KV-cache-style
+//!    persistent-weights engine is what the reload loses against);
+//! 4. round-robin assignment vs single agent — stall accounting.
+
+use hermes::config::{Mode, Paths, RunConfig};
+use hermes::diskio::Disk;
+use hermes::engine::{make_input, Engine, WEIGHTS_SEED};
+use hermes::pipeload::{run_pipeline, ExecCtx, PipelineOpts};
+use hermes::util::bench::Bencher;
+use hermes::util::human_bytes;
+use hermes::weights::gen::gen_profile_weights;
+
+fn main() -> anyhow::Result<()> {
+    let paths = Paths::detect();
+    let engine = Engine::with_default_paths()?;
+    let rt = &engine.runtime;
+    let mut b = Bencher::new();
+    let model = "bert-large-sim";
+    let p = rt.profile(model)?;
+    gen_profile_weights(p, &paths.weights, WEIGHTS_SEED, 0.05, false)?;
+    rt.prepare(p)?;
+    let (input, _, _) = make_input(p, 1, 1);
+
+    // 1. destroy ON vs OFF
+    println!("-- ablation 1: destroy-after-compute (m=4, edge-emmc) --");
+    for destroy in [true, false] {
+        let ctx = ExecCtx::new(rt, model, &paths.weights, Disk::preset("edge-emmc")?)?;
+        let opts = PipelineOpts {
+            agents: 4,
+            destroy_after_compute: destroy,
+            validate_shards: false,
+        };
+        let ((_, stats), _) = b.once(&format!("destroy={destroy}"), || {
+            run_pipeline(&ctx, &opts, None, &input).unwrap()
+        });
+        println!("    peak memory: {}", human_bytes(stats.peak_bytes));
+    }
+
+    // 2. checksum validation overhead
+    println!("-- ablation 2: shard validation (m=4, unthrottled) --");
+    for validate in [false, true] {
+        let ctx = ExecCtx::new(rt, model, &paths.weights, Disk::preset("unthrottled")?)?;
+        let opts = PipelineOpts { agents: 4, destroy_after_compute: true, validate_shards: validate };
+        b.bench(&format!("validate_shards={validate}"), || {
+            std::hint::black_box(run_pipeline(&ctx, &opts, None, &input).unwrap());
+        });
+    }
+
+    // 3. per-token reload (paper semantics) vs resident weights
+    println!("-- ablation 3: generative decode, reload vs resident (gpt2-base-sim, 4 tokens) --");
+    for (label, mode) in [("pipeload reload/token", Mode::PipeLoad), ("baseline resident", Mode::Baseline)] {
+        let cfg = RunConfig {
+            profile: "gpt2-base-sim".into(),
+            mode,
+            agents: 4,
+            disk: "edge-emmc".into(),
+            gen_tokens: Some(4),
+            ..RunConfig::default()
+        };
+        let (rep, _) = b.once(label, || engine.run(&cfg).unwrap()).0;
+        println!("    peak {}  (latency {:.1} ms)", human_bytes(rep.peak_bytes), rep.latency_ms);
+    }
+
+    // 4. stall accounting: 1 agent vs 6 agents on slow storage
+    println!("-- ablation 4: wait-stall vs agent count (edge-sd) --");
+    for agents in [1usize, 6] {
+        let ctx = ExecCtx::new(rt, model, &paths.weights, Disk::preset("edge-sd")?)?;
+        let ((_, stats), _) = b.once(&format!("m={agents} on edge-sd"), || {
+            run_pipeline(&ctx, &PipelineOpts::pipeload(agents), None, &input).unwrap()
+        });
+        println!(
+            "    inference wait-stall: {:.1} ms, load total: {:.1} ms",
+            stats.wait_stall_ms, stats.load_ms_total
+        );
+    }
+
+    b.dump_json(&paths.results.join("bench_ablation.json"))?;
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Micro-benchmarks for the edge-storage simulator: throughput accuracy of
+//! the per-stream throttle, parallel-stream scaling toward the aggregate
+//! cap (the property PIPELOAD's multi-agent loading relies on), and the
+//! token bucket's overhead on unthrottled reads.
+
+use std::io::Write;
+
+use hermes::config::Paths;
+use hermes::diskio::{Disk, DiskProfile};
+use hermes::util::bench::Bencher;
+
+fn tmpfile(tag: &str, bytes: usize) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("hermes_bench_diskio");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{tag}_{bytes}.bin"));
+    if !path.exists() {
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(&vec![0x5A; bytes]).unwrap();
+    }
+    path
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    let paths = Paths::detect();
+    let one_mb = tmpfile("1mb", 1_000_000);
+
+    b.bench("raw read 1 MB (unthrottled)", || {
+        let disk = Disk::preset("unthrottled").unwrap();
+        std::hint::black_box(disk.read_file(&one_mb).unwrap());
+    });
+
+    // throttle accuracy: 1 MB at 100 MB/s should take ~10 ms
+    let disk = Disk::new(DiskProfile::custom(100_000_000, 0, 0));
+    let median_ns = b
+        .bench("throttled read 1 MB @ 100 MB/s (ideal 10 ms)", || {
+            std::hint::black_box(disk.read_file(&one_mb).unwrap());
+        })
+        .median_ns;
+    let err = (median_ns / 1e6 - 10.0).abs() / 10.0;
+    println!("  -> throttle error vs ideal: {:.1}%", err * 100.0);
+
+    // parallel scaling: 4 streams under a wide aggregate cap
+    for streams in [1usize, 2, 4] {
+        let files: Vec<_> = (0..streams).map(|i| tmpfile(&format!("p{i}"), 500_000)).collect();
+        let disk = Disk::new(DiskProfile::custom(50_000_000, 400_000_000, 0));
+        b.bench(&format!("{streams} parallel streams x 500 KB @ 50 MB/s each"), || {
+            std::thread::scope(|s| {
+                for f in &files {
+                    let d = disk.clone();
+                    s.spawn(move || d.read_file(f).unwrap());
+                }
+            });
+        });
+    }
+
+    // aggregate cap: 4 streams but medium tops out at 60 MB/s total
+    let files: Vec<_> = (0..4).map(|i| tmpfile(&format!("a{i}"), 500_000)).collect();
+    let disk = Disk::new(DiskProfile::custom(50_000_000, 60_000_000, 0));
+    b.bench("4 streams capped at 60 MB/s aggregate (2 MB total, ideal ~33 ms)", || {
+        std::thread::scope(|s| {
+            for f in &files {
+                let d = disk.clone();
+                s.spawn(move || d.read_file(f).unwrap());
+            }
+        });
+    });
+
+    b.dump_json(&paths.results.join("bench_diskio.json"))?;
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Bench target: Fig 3 (load vs compute decomposition), Fig 1b (pipeline
+//! stall Gantt + idle fraction), and Fig 7 (latency + optimal #LAs vs
+//! memory budget).
+//!
+//! Fig 7's empirical planner pre-runs are the expensive part; restrict the
+//! model set with HERMES_BENCH_FIG7_MODELS (comma-separated) or skip with
+//! HERMES_BENCH_SKIP_FIG7=1.
+
+use hermes::engine::Engine;
+use hermes::report;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::with_default_paths()?;
+    let disk = std::env::var("HERMES_BENCH_DISK").unwrap_or_else(|_| "edge-emmc".into());
+
+    println!("{}", report::fig3(&engine, &disk)?);
+    println!("{}", report::fig1b(&engine, &disk, "bert-large-sim")?);
+
+    if std::env::var("HERMES_BENCH_SKIP_FIG7").is_err() {
+        println!("{}", report::fig7(&engine, &disk, &[0.15, 0.25, 0.4, 0.6, 0.8], 8)?);
+    } else {
+        println!("(fig 7 skipped via HERMES_BENCH_SKIP_FIG7)");
+    }
+    Ok(())
+}

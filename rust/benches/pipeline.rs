@@ -1,0 +1,57 @@
+//! Bench target: whole-pipeline passes — PIPELOAD agent scaling, mode
+//! comparison, and coordination overhead (unthrottled disk isolates the
+//! L3 machinery from storage time).
+
+use hermes::config::Paths;
+use hermes::diskio::Disk;
+use hermes::engine::{make_input, WEIGHTS_SEED};
+use hermes::pipeload::{run_pipeline, ExecCtx, PipelineOpts};
+use hermes::runtime::Runtime;
+use hermes::util::bench::Bencher;
+use hermes::weights::gen::gen_profile_weights;
+
+fn main() -> anyhow::Result<()> {
+    let paths = Paths::detect();
+    let rt = Runtime::new(&paths.artifacts)?;
+    let mut b = Bencher::new();
+
+    // coordination overhead on a tiny model, storage free
+    {
+        let p = rt.profile("tiny-bert")?;
+        gen_profile_weights(p, &paths.weights, WEIGHTS_SEED, 0.05, false)?;
+        rt.prepare(p)?;
+        let (input, _, _) = make_input(p, 1, 1);
+        for agents in [1usize, 2, 4] {
+            let ctx = ExecCtx::new(&rt, "tiny-bert", &paths.weights, Disk::preset("unthrottled")?)?;
+            b.bench(&format!("pipeload tiny-bert m={agents} (unthrottled)"), || {
+                std::hint::black_box(
+                    run_pipeline(&ctx, &PipelineOpts::pipeload(agents), None, &input).unwrap(),
+                );
+            });
+        }
+        let ctx = ExecCtx::new(&rt, "tiny-bert", &paths.weights, Disk::preset("unthrottled")?)?;
+        b.bench("pipeswitch tiny-bert (unthrottled)", || {
+            std::hint::black_box(
+                run_pipeline(&ctx, &PipelineOpts::pipeswitch(), None, &input).unwrap(),
+            );
+        });
+    }
+
+    // agent scaling on the paper's BERT profile over simulated eMMC
+    {
+        let p = rt.profile("bert-large-sim")?;
+        gen_profile_weights(p, &paths.weights, WEIGHTS_SEED, 0.05, false)?;
+        rt.prepare(p)?;
+        let (input, _, _) = make_input(p, 1, 1);
+        for agents in [1usize, 2, 4, 6] {
+            let ctx = ExecCtx::new(&rt, "bert-large-sim", &paths.weights, Disk::preset("edge-emmc")?)?;
+            let (_, d) = b.once(&format!("pipeload bert-large-sim m={agents} (edge-emmc)"), || {
+                run_pipeline(&ctx, &PipelineOpts::pipeload(agents), None, &input).unwrap()
+            });
+            let _ = d;
+        }
+    }
+
+    b.dump_json(&paths.results.join("bench_pipeline.json"))?;
+    Ok(())
+}

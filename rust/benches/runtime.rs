@@ -1,0 +1,52 @@
+//! Micro-benchmarks for the L3 hot path: literal construction from shard
+//! bytes, per-layer execution, executable-cache hits (§Perf, DESIGN.md §8).
+
+use hermes::config::Paths;
+use hermes::engine::{make_input, WEIGHTS_SEED};
+use hermes::runtime::{literal_from_tensor, Runtime};
+use hermes::util::bench::Bencher;
+use hermes::weights::gen::gen_profile_weights;
+use hermes::weights::read_shard;
+
+fn main() -> anyhow::Result<()> {
+    let paths = Paths::detect();
+    let rt = Runtime::new(&paths.artifacts)?;
+    let mut b = Bencher::new();
+
+    for name in ["tiny-bert", "bert-large-sim"] {
+        let p = rt.profile(name)?;
+        gen_profile_weights(p, &paths.weights, WEIGHTS_SEED, 0.05, false)?;
+        let stage = &p.stages[1];
+        let shard = read_shard(&paths.weights.join(name).join(&stage.shard))?;
+        let entry = p.entry(&stage.kind, 1)?;
+        rt.prepare(p)?;
+
+        let mb = shard.total_data_bytes() as f64 / (1024.0 * 1024.0);
+        b.bench(&format!("literal_from_tensor {name} ({mb:.1} MiB)"), || {
+            for t in &shard.tensors {
+                std::hint::black_box(literal_from_tensor(t).unwrap());
+            }
+        });
+
+        let (input, _, _) = make_input(p, 1, 1);
+        let first_entry = p.entry(&p.stages[0].kind, 1)?;
+        let x0 = input.to_buffer(&rt, &first_entry.activations[0])?;
+        let shard0 = read_shard(&paths.weights.join(name).join(&p.stages[0].shard))?;
+        let act = rt.execute_entry(p, first_entry, &[&x0], &shard0)?;
+
+        b.bench(&format!("execute {} {name}", stage.kind), || {
+            std::hint::black_box(rt.execute_entry(p, entry, &[&act], &shard).unwrap());
+        });
+        b.bench(&format!("weight upload {} {name}", stage.kind), || {
+            for t in &shard.tensors {
+                std::hint::black_box(rt.buffer_from_tensor(t).unwrap());
+            }
+        });
+
+        b.bench(&format!("executable cache hit {name}"), || {
+            std::hint::black_box(rt.executable(p, entry).unwrap());
+        });
+    }
+    b.dump_json(&paths.results.join("bench_runtime.json"))?;
+    Ok(())
+}

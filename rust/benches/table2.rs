@@ -1,0 +1,26 @@
+//! Bench target: Table II — end-to-end latency for Baseline / PipeSwitch /
+//! PIPELOAD{2,4,6} across the four paper models, with speedups.
+//!
+//! Shares one sweep with table3 (cached under results/).  Environment:
+//!   HERMES_BENCH_DISK    storage preset (default edge-emmc)
+//!   HERMES_BENCH_TOKENS  generated tokens for GPT models (default 4)
+//!   HERMES_BENCH_FRESH   ignore the cached sweep
+
+use hermes::engine::Engine;
+use hermes::report;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::with_default_paths()?;
+    let disk = std::env::var("HERMES_BENCH_DISK").unwrap_or_else(|_| "edge-emmc".into());
+    let tokens: Option<usize> =
+        std::env::var("HERMES_BENCH_TOKENS").ok().and_then(|s| s.parse().ok()).or(Some(4));
+    let fresh = std::env::var("HERMES_BENCH_FRESH").is_ok();
+    let agents = [2usize, 4, 6];
+    let reports = report::sweep_table23(&engine, &disk, &agents, tokens, fresh)?;
+    println!("{}", report::table2(&reports, &agents));
+    println!("paper Table II shape targets:");
+    println!("  - BERT/ViT: PIPELOAD beats PipeSwitch, speedup grows with #LAs");
+    println!("  - GPT-2/GPT-J: pipelines < baseline at few LAs (per-token reload),");
+    println!("    recovering toward/past 1.0 at 6 LAs");
+    Ok(())
+}

@@ -1,0 +1,20 @@
+//! Bench target: Table III — peak memory footprints for the same sweep as
+//! table2 (cached), with ratios vs the non-pipeline baseline.
+
+use hermes::engine::Engine;
+use hermes::report;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::with_default_paths()?;
+    let disk = std::env::var("HERMES_BENCH_DISK").unwrap_or_else(|_| "edge-emmc".into());
+    let tokens: Option<usize> =
+        std::env::var("HERMES_BENCH_TOKENS").ok().and_then(|s| s.parse().ok()).or(Some(4));
+    let fresh = std::env::var("HERMES_BENCH_FRESH").is_ok();
+    let agents = [2usize, 4, 6];
+    let reports = report::sweep_table23(&engine, &disk, &agents, tokens, fresh)?;
+    println!("{}", report::table3(&reports, &agents));
+    println!("paper Table III shape targets:");
+    println!("  - PipeSwitch ratio ~1.0 (keeps the whole model resident)");
+    println!("  - PIPELOAD ratio far below 1, growing ~one layer per extra LA");
+    Ok(())
+}

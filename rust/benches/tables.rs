@@ -1,0 +1,12 @@
+//! Bench target: Table I + Fig 2 (manifest-derived, cheap) — prints the
+//! paper's model-configuration table and memory-decomposition figure.
+
+use hermes::engine::Engine;
+use hermes::report;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::with_default_paths()?;
+    println!("{}", report::table1(&engine)?);
+    println!("{}", report::fig2(&engine)?);
+    Ok(())
+}

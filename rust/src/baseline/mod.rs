@@ -1,0 +1,113 @@
+//! Comparator executors (paper section V-A2).
+//!
+//! * **Baseline** — the non-pipeline workflow: load the *whole* model
+//!   first (one disk stream), then run inference over the resident
+//!   shards.  Generative models load once and then infer once per token,
+//!   which is exactly why the paper's Table II shows pipelines *losing*
+//!   to the baseline at low agent counts for GPT-style models.
+//! * **PipeSwitch-style standard pipeline** — provided by
+//!   [`crate::pipeload::PipelineOpts::pipeswitch`] (one loading stream,
+//!   layer-granularity load/compute overlap, no weight destruction).
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::memory::MemoryAccountant;
+use crate::pipeload::{ExecCtx, ModelInput, PassStats};
+use crate::signals::Signal;
+use crate::trace::{Kind, Lane};
+use crate::weights::{read_shard_from, Shard};
+
+/// The fully-loaded model: every stage shard resident in memory.
+pub struct ResidentModel {
+    pub shards: Vec<Shard>,
+    pub bytes: u64,
+    pub load_ms: f64,
+}
+
+/// Phase 1 of the baseline: stream every shard into memory (single stream).
+pub fn load_all(ctx: &ExecCtx, accountant: &MemoryAccountant) -> Result<ResidentModel> {
+    let mut shards = Vec::with_capacity(ctx.profile.stages.len());
+    let mut bytes = 0u64;
+    let t0 = ctx.tracer.now_ms();
+    for stage in &ctx.profile.stages {
+        let b = ctx.profile.stage_bytes(stage);
+        accountant
+            .acquire(b)
+            .with_context(|| format!("baseline loading stage {}", stage.index))?;
+        let s0 = ctx.tracer.now_ms();
+        let reader = ctx.disk.open(&ctx.shard_dir.join(&stage.shard))?;
+        let shard = read_shard_from(reader)
+            .with_context(|| format!("shard {}", stage.shard))?;
+        ctx.tracer
+            .record(Lane::Loader(0), Kind::Load, Some(stage.index), s0, ctx.tracer.now_ms());
+        bytes += b;
+        shards.push(shard);
+    }
+    Ok(ResidentModel { shards, bytes, load_ms: ctx.tracer.now_ms() - t0 })
+}
+
+/// Phase 2: one forward pass over resident shards (no loading, no daemon).
+pub fn forward_resident(
+    ctx: &ExecCtx,
+    model: &ResidentModel,
+    accountant: &MemoryAccountant,
+    input: &ModelInput,
+) -> Result<(xla::PjRtBuffer, PassStats)> {
+    let profile = ctx.profile;
+    let mut stats = PassStats::default();
+    let mut act: Option<xla::PjRtBuffer> = None;
+    let mut act_bytes = 0u64;
+    let mut enc_out: Option<xla::PjRtBuffer> = None;
+    let mut enc_out_bytes = 0u64;
+
+    for (k, stage) in profile.stages.iter().enumerate() {
+        let entry = profile.entry(&stage.kind, ctx.batch)?;
+        let shard = &model.shards[k];
+        if k == 0 {
+            let b = input.to_buffer(ctx.runtime, &entry.activations[0])?;
+            act_bytes = entry.activations[0].num_bytes() as u64;
+            accountant.force_add(act_bytes);
+            act = Some(b);
+        } else if stage.kind == "cross_decoder_layer" && enc_out.is_none() {
+            enc_out_bytes = act_bytes;
+            accountant.force_add(enc_out_bytes);
+            enc_out = act.take();
+        }
+        let x_ref;
+        let act_refs: Vec<&xla::PjRtBuffer> = if stage.kind == "cross_decoder_layer" {
+            let enc = enc_out.as_ref().unwrap();
+            match act.as_ref() {
+                Some(x) => vec![x, enc],
+                None => vec![enc, enc],
+            }
+        } else {
+            x_ref = act.as_ref().ok_or_else(|| anyhow!("no activation at stage {k}"))?;
+            vec![x_ref]
+        };
+
+        // transient weight upload inside execute
+        accountant.force_add(ctx.profile.stage_bytes(stage));
+        let t0 = ctx.tracer.now_ms();
+        let out = ctx
+            .runtime
+            .execute_entry(profile, entry, &act_refs, shard)
+            .with_context(|| format!("baseline executing stage {k}"))?;
+        let t1 = ctx.tracer.now_ms();
+        ctx.tracer.record(Lane::Inference, Kind::Compute, Some(k), t0, t1);
+        stats.compute_ms_total += t1 - t0;
+        accountant.free(ctx.profile.stage_bytes(stage));
+
+        let out_bytes = entry.output.num_bytes() as u64;
+        accountant.force_add(out_bytes);
+        accountant.free(act_bytes);
+        act_bytes = out_bytes;
+        act = Some(out);
+        ctx.signals.emit(Signal::Comp { stage: k, agent: 0 });
+    }
+    if enc_out.is_some() {
+        accountant.free(enc_out_bytes);
+    }
+    accountant.free(act_bytes);
+    stats.peak_bytes = accountant.peak();
+    Ok((act.unwrap(), stats))
+}

@@ -1,0 +1,125 @@
+//! Repo paths + engine configuration defaults.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+/// Standard repo locations, overridable via environment.
+#[derive(Debug, Clone)]
+pub struct Paths {
+    pub root: PathBuf,
+    pub artifacts: PathBuf,
+    pub weights: PathBuf,
+    pub results: PathBuf,
+}
+
+impl Paths {
+    /// Resolve from `HERMES_ROOT` or the crate's source location (so tests,
+    /// examples, and benches all find `artifacts/` regardless of cwd).
+    pub fn detect() -> Paths {
+        let root = std::env::var("HERMES_ROOT")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+        Paths {
+            artifacts: root.join("artifacts"),
+            weights: root.join("weights"),
+            results: root.join("results"),
+            root,
+        }
+    }
+}
+
+/// Execution mode for a run (paper section V-A2: the Execution Engine's
+/// three operational modes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// load the whole model, then infer (non-pipeline)
+    Baseline,
+    /// standard pipeline, one loading stream, no destruction (PipeSwitch-like)
+    PipeSwitch,
+    /// the paper's contribution
+    PipeLoad,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode> {
+        Ok(match s {
+            "baseline" => Mode::Baseline,
+            "pipeswitch" => Mode::PipeSwitch,
+            "pipeload" => Mode::PipeLoad,
+            _ => anyhow::bail!("unknown mode '{s}' (baseline|pipeswitch|pipeload)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Baseline => "baseline",
+            Mode::PipeSwitch => "pipeswitch",
+            Mode::PipeLoad => "pipeload",
+        }
+    }
+}
+
+/// Everything one engine run needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub profile: String,
+    pub mode: Mode,
+    /// number of Loading Agents (PIPELOAD only)
+    pub agents: usize,
+    /// memory budget in bytes (None = unconstrained)
+    pub budget: Option<u64>,
+    pub disk: String,
+    pub batch: usize,
+    pub seed: u64,
+    pub trace: bool,
+    /// generative models: tokens to generate (None = profile default)
+    pub gen_tokens: Option<usize>,
+    /// KV-cache extension (OFF reproduces the paper's per-token reload)
+    pub kv_cache: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            profile: "tiny-bert".into(),
+            mode: Mode::PipeLoad,
+            agents: 4,
+            budget: None,
+            disk: "edge-emmc".into(),
+            batch: 1,
+            seed: 42,
+            trace: false,
+            gen_tokens: None,
+            kv_cache: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [Mode::Baseline, Mode::PipeSwitch, Mode::PipeLoad] {
+            assert_eq!(Mode::parse(m.name()).unwrap(), m);
+        }
+        assert!(Mode::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn paths_detect_contains_artifacts() {
+        let p = Paths::detect();
+        assert!(p.artifacts.ends_with("artifacts"));
+        assert!(p.weights.ends_with("weights"));
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.mode, Mode::PipeLoad);
+        assert!(c.agents >= 1);
+        assert!(!c.kv_cache);
+    }
+}

@@ -1,0 +1,308 @@
+//! Throttled disk reader: the edge-storage simulator.
+//!
+//! The paper's testbed reads checkpoints from server-class storage inside a
+//! docker memory jail; its key premise (Obs II) is that **per-layer load
+//! latency dwarfs compute latency** on edge devices (eMMC/SD-class storage),
+//! and that several Loading Agents can stream in parallel until the medium's
+//! aggregate bandwidth saturates.
+//!
+//! This module reproduces exactly that regime on any host:
+//!
+//! * a **per-stream** bandwidth limit (one Loading Agent's sequential read
+//!   speed — controller queue depth 1),
+//! * a global **aggregate** token bucket shared by all streams (the
+//!   medium's total bandwidth — parallel agents scale until they hit it),
+//! * a fixed **per-open latency** (seek / FTL lookup).
+//!
+//! Throttling is sleep-based, so on a 1-core box loading overlaps compute
+//! exactly like real blocking I/O would. `unthrottled` passes reads through
+//! for raw-host benchmarking.
+
+use std::io::Read;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+/// Simulated storage medium parameters.
+#[derive(Debug, Clone)]
+pub struct DiskProfile {
+    pub name: String,
+    /// one stream's max sequential read bandwidth (bytes/sec); 0 = unlimited
+    pub per_stream_bps: u64,
+    /// total medium bandwidth shared across streams; 0 = unlimited
+    pub aggregate_bps: u64,
+    /// fixed cost per file open (seek, FTL)
+    pub open_latency: Duration,
+    /// throttle granularity
+    pub chunk_bytes: usize,
+}
+
+impl DiskProfile {
+    /// Named presets; calibration notes in EXPERIMENTS.md Fig-3 section.
+    pub fn preset(name: &str) -> Result<DiskProfile> {
+        let mb = |x: u64| x * 1000 * 1000;
+        Ok(match name {
+            // eMMC 5.1-class: ~90 MB/s a stream, controller tops out ~620
+            "edge-emmc" => DiskProfile {
+                name: name.into(),
+                per_stream_bps: mb(90),
+                aggregate_bps: mb(620),
+                open_latency: Duration::from_micros(1500),
+                chunk_bytes: 256 * 1024,
+            },
+            // SD/UHS-I card: slow streams, saturates at ~80 MB/s total
+            "edge-sd" => DiskProfile {
+                name: name.into(),
+                per_stream_bps: mb(23),
+                aggregate_bps: mb(80),
+                open_latency: Duration::from_micros(4000),
+                chunk_bytes: 128 * 1024,
+            },
+            // small NVMe (Jetson-class): fast streams, wide controller
+            "edge-nvme" => DiskProfile {
+                name: name.into(),
+                per_stream_bps: mb(450),
+                aggregate_bps: mb(2200),
+                open_latency: Duration::from_micros(300),
+                chunk_bytes: 512 * 1024,
+            },
+            "unthrottled" => DiskProfile {
+                name: name.into(),
+                per_stream_bps: 0,
+                aggregate_bps: 0,
+                open_latency: Duration::ZERO,
+                chunk_bytes: 1024 * 1024,
+            },
+            _ => bail!(
+                "unknown disk profile '{name}' (edge-emmc, edge-sd, edge-nvme, unthrottled)"
+            ),
+        })
+    }
+
+    /// Custom profile (used by tests and the Fig-3 calibration sweep).
+    pub fn custom(per_stream_bps: u64, aggregate_bps: u64, open_us: u64) -> DiskProfile {
+        DiskProfile {
+            name: "custom".into(),
+            per_stream_bps,
+            aggregate_bps,
+            open_latency: Duration::from_micros(open_us),
+            chunk_bytes: 64 * 1024,
+        }
+    }
+}
+
+/// Shared token bucket enforcing the aggregate bandwidth cap.
+#[derive(Debug)]
+struct TokenBucket {
+    state: Mutex<BucketState>,
+    rate_bps: f64,
+    burst: f64,
+}
+
+#[derive(Debug)]
+struct BucketState {
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(rate_bps: u64) -> TokenBucket {
+        let burst = (rate_bps as f64 * 0.01).max(128.0 * 1024.0); // ~10ms of burst
+        TokenBucket {
+            state: Mutex::new(BucketState { tokens: burst, last: Instant::now() }),
+            rate_bps: rate_bps as f64,
+            burst,
+        }
+    }
+
+    /// Block until `n` bytes of budget are available, then consume them.
+    fn take(&self, n: usize) {
+        let need = n as f64;
+        loop {
+            let wait = {
+                let mut s = self.state.lock().unwrap();
+                let now = Instant::now();
+                s.tokens =
+                    (s.tokens + now.duration_since(s.last).as_secs_f64() * self.rate_bps)
+                        .min(self.burst.max(need));
+                s.last = now;
+                if s.tokens >= need {
+                    s.tokens -= need;
+                    return;
+                }
+                (need - s.tokens) / self.rate_bps
+            };
+            std::thread::sleep(Duration::from_secs_f64(wait.min(0.05)));
+        }
+    }
+}
+
+/// A simulated storage device; cheap to clone (shared bucket).
+#[derive(Debug, Clone)]
+pub struct Disk {
+    pub profile: DiskProfile,
+    bucket: Option<Arc<TokenBucket>>,
+    bytes_read: Arc<Mutex<u64>>,
+}
+
+impl Disk {
+    pub fn new(profile: DiskProfile) -> Disk {
+        let bucket = if profile.aggregate_bps > 0 {
+            Some(Arc::new(TokenBucket::new(profile.aggregate_bps)))
+        } else {
+            None
+        };
+        Disk { profile, bucket, bytes_read: Arc::new(Mutex::new(0)) }
+    }
+
+    pub fn preset(name: &str) -> Result<Disk> {
+        Ok(Disk::new(DiskProfile::preset(name)?))
+    }
+
+    pub fn total_bytes_read(&self) -> u64 {
+        *self.bytes_read.lock().unwrap()
+    }
+
+    /// Open a file as one throttled stream.
+    pub fn open(&self, path: &Path) -> Result<ThrottledReader> {
+        if !self.profile.open_latency.is_zero() {
+            std::thread::sleep(self.profile.open_latency);
+        }
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Ok(ThrottledReader {
+            file,
+            disk: self.clone(),
+            started: Instant::now(),
+            bytes: 0,
+        })
+    }
+
+    /// Read a whole file through the throttle; returns (bytes, wall time).
+    pub fn read_file(&self, path: &Path) -> Result<(Vec<u8>, Duration)> {
+        let t0 = Instant::now();
+        let mut r = self.open(path)?;
+        let size = r.file.metadata().map(|m| m.len() as usize).unwrap_or(0);
+        let mut buf = Vec::with_capacity(size);
+        r.read_to_end(&mut buf)?;
+        Ok((buf, t0.elapsed()))
+    }
+}
+
+/// One throttled sequential read stream.
+pub struct ThrottledReader {
+    file: std::fs::File,
+    disk: Disk,
+    started: Instant,
+    bytes: u64,
+}
+
+impl Read for ThrottledReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let cap = buf.len().min(self.disk.profile.chunk_bytes.max(1));
+        let n = self.file.read(&mut buf[..cap])?;
+        if n == 0 {
+            return Ok(0);
+        }
+        if let Some(bucket) = &self.disk.bucket {
+            bucket.take(n);
+        }
+        self.bytes += n as u64;
+        *self.disk.bytes_read.lock().unwrap() += n as u64;
+        if self.disk.profile.per_stream_bps > 0 {
+            // enforce cumulative per-stream rate: sleep up to the ideal time
+            let ideal = self.bytes as f64 / self.disk.profile.per_stream_bps as f64;
+            let actual = self.started.elapsed().as_secs_f64();
+            if ideal > actual {
+                std::thread::sleep(Duration::from_secs_f64(ideal - actual));
+            }
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpfile(bytes: usize) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("hermes_diskio_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("f{bytes}_{:?}.bin", std::thread::current().id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(&vec![0xAB; bytes]).unwrap();
+        path
+    }
+
+    #[test]
+    fn unthrottled_reads_verbatim() {
+        let path = tmpfile(100_000);
+        let disk = Disk::preset("unthrottled").unwrap();
+        let (buf, _) = disk.read_file(&path).unwrap();
+        assert_eq!(buf.len(), 100_000);
+        assert!(buf.iter().all(|&b| b == 0xAB));
+        assert_eq!(disk.total_bytes_read(), 100_000);
+    }
+
+    #[test]
+    fn per_stream_rate_enforced() {
+        let path = tmpfile(500_000);
+        // 5 MB/s -> 500 KB should take ~100 ms
+        let disk = Disk::new(DiskProfile::custom(5_000_000, 0, 0));
+        let (_, dt) = disk.read_file(&path).unwrap();
+        let ms = dt.as_millis();
+        assert!(ms >= 80, "too fast: {ms} ms");
+        assert!(ms <= 400, "too slow: {ms} ms");
+    }
+
+    #[test]
+    fn aggregate_cap_limits_parallel_streams() {
+        // 2 streams, each capped at 8 MB/s stream rate, but aggregate 8 MB/s:
+        // 2 x 400KB at 8MB/s aggregate ≈ 100ms total, vs ~50ms uncapped.
+        let path1 = tmpfile(400_000);
+        let path2 = tmpfile(400_001);
+        let disk = Disk::new(DiskProfile::custom(8_000_000, 8_000_000, 0));
+        let t0 = Instant::now();
+        let d2 = disk.clone();
+        let h = std::thread::spawn(move || d2.read_file(&path2).unwrap());
+        disk.read_file(&path1).unwrap();
+        h.join().unwrap();
+        let ms = t0.elapsed().as_millis();
+        assert!(ms >= 70, "aggregate cap not enforced: {ms} ms");
+    }
+
+    #[test]
+    fn parallel_streams_scale_below_aggregate() {
+        // per-stream 4 MB/s, aggregate 100 MB/s: two parallel 200KB reads
+        // should take ~50ms (like one), not ~100ms (serialized).
+        let path1 = tmpfile(200_000);
+        let path2 = tmpfile(200_001);
+        let disk = Disk::new(DiskProfile::custom(4_000_000, 100_000_000, 0));
+        let t0 = Instant::now();
+        let d2 = disk.clone();
+        let h = std::thread::spawn(move || d2.read_file(&path2).unwrap());
+        disk.read_file(&path1).unwrap();
+        h.join().unwrap();
+        let ms = t0.elapsed().as_millis();
+        assert!(ms < 95, "parallel streams serialized: {ms} ms");
+    }
+
+    #[test]
+    fn open_latency_applied() {
+        let path = tmpfile(10);
+        let disk = Disk::new(DiskProfile::custom(0, 0, 20_000)); // 20ms seek
+        let (_, dt) = disk.read_file(&path).unwrap();
+        assert!(dt.as_millis() >= 18, "{:?}", dt);
+    }
+
+    #[test]
+    fn presets_parse() {
+        for p in ["edge-emmc", "edge-sd", "edge-nvme", "unthrottled"] {
+            Disk::preset(p).unwrap();
+        }
+        assert!(Disk::preset("floppy").is_err());
+    }
+}

@@ -1,0 +1,36 @@
+//! # Hermes — memory-efficient PIPELOAD pipeline inference (reproduction)
+//!
+//! Reproduction of *"Hermes: Memory-Efficient Pipeline Inference for Large
+//! Models on Edge Devices"* (Han et al., CS.DC 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system: PIPELOAD's Loading Agents /
+//!   Inference Agent / Daemon Agent ([`pipeload`]), the Baseline and
+//!   PipeSwitch-style comparators ([`baseline`]), and the Hermes framework
+//!   ([`profiler`], [`planner`], [`engine`], [`server`]).
+//! * **L2/L1 (python, build-time only)** — per-layer-type JAX forwards
+//!   calling a Pallas flash-attention kernel, AOT-lowered to HLO text;
+//!   loaded and executed here via PJRT ([`runtime`]).
+//!
+//! Weights are runtime parameters streamed from `.hws` shards
+//! ([`weights`]) through an edge-storage simulator ([`diskio`]), gated by
+//! the Daemon's memory accountant ([`memory`]).  See DESIGN.md for the
+//! full inventory and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod baseline;
+pub mod config;
+pub mod diskio;
+pub mod engine;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod pipeload;
+pub mod planner;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod server;
+pub mod signals;
+pub mod trace;
+pub mod util;
+pub mod weights;

@@ -1,0 +1,356 @@
+//! `hermes` CLI — leader entrypoint for the Hermes framework.
+//!
+//! Subcommands mirror the framework components (paper Fig. 6):
+//!
+//! * `gen-weights` — synthesize `.hws` stage shards for a profile
+//! * `profile`     — Layer Profiler pre-run (per-layer load/compute/mem)
+//! * `plan`        — Pipeline Planner: budgets -> optimal #Loading-Agents
+//! * `run`         — Execution Engine: one run in a chosen mode
+//! * `serve`       — batched serving session with SLO report
+//! * `report`      — regenerate the paper's tables and figures
+//! * `list`        — show available model profiles
+
+use anyhow::{bail, Result};
+
+use hermes::config::{Mode, RunConfig};
+use hermes::engine::Engine;
+use hermes::planner;
+use hermes::report;
+use hermes::server::{serve, ServeConfig};
+use hermes::trace::Tracer;
+use hermes::util::cli::{render_help, Args, Opt};
+use hermes::util::{human_bytes, human_ms};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print_usage();
+        return;
+    }
+    let cmd = argv[0].clone();
+    let rest = argv[1..].to_vec();
+    let code = match dispatch(&cmd, &rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "hermes — memory-efficient PIPELOAD pipeline inference (paper reproduction)\n\n\
+         usage: hermes <command> [options]\n\n\
+         commands:\n\
+           list          show model profiles from the AOT manifest\n\
+           gen-weights   synthesize .hws stage shards for a profile\n\
+           profile       Layer Profiler: per-layer load/compute/memory\n\
+           plan          Pipeline Planner: budgets -> optimal #LAs\n\
+           run           Execution Engine: one run (baseline|pipeswitch|pipeload)\n\
+           serve         batched serving session with SLO report\n\
+           report        regenerate paper tables (1,2,3) / figures (1b,2,3,7)\n\n\
+         run `hermes <command> --help` for per-command options"
+    );
+}
+
+fn common_opts() -> Vec<Opt> {
+    vec![
+        Opt { name: "model", takes_value: true, default: Some("bert-large-sim"), help: "model profile name (see `hermes list`)" },
+        Opt { name: "disk", takes_value: true, default: Some("edge-emmc"), help: "storage preset: edge-emmc|edge-sd|edge-nvme|unthrottled" },
+        Opt { name: "seed", takes_value: true, default: Some("42"), help: "input seed" },
+        Opt { name: "help", takes_value: false, default: None, help: "show help" },
+    ]
+}
+
+fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
+    match cmd {
+        "list" => cmd_list(),
+        "gen-weights" => cmd_gen_weights(rest),
+        "profile" => cmd_profile(rest),
+        "plan" => cmd_plan(rest),
+        "run" => cmd_run(rest),
+        "serve" => cmd_serve(rest),
+        "report" => cmd_report(rest),
+        _ => bail!("unknown command '{cmd}' (try --help)"),
+    }
+}
+
+fn cmd_list() -> Result<()> {
+    let engine = Engine::with_default_paths()?;
+    let mut names: Vec<&String> = engine.runtime.manifest.profiles.keys().collect();
+    names.sort();
+    println!("{:<18} {:>8} {:>8} {:>12}  {}", "profile", "stages", "layers", "weights", "paper model");
+    for n in names {
+        let p = engine.runtime.profile(n)?;
+        println!(
+            "{:<18} {:>8} {:>8} {:>12}  {}",
+            p.name,
+            p.stages.len(),
+            p.layers,
+            human_bytes(p.total_weight_bytes),
+            p.paper_model
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen_weights(rest: &[String]) -> Result<()> {
+    let mut opts = common_opts();
+    opts.push(Opt { name: "force", takes_value: false, default: None, help: "overwrite existing shards" });
+    opts.push(Opt { name: "all", takes_value: false, default: None, help: "generate every profile" });
+    let a = Args::parse(rest, &opts)?;
+    if a.flag("help") {
+        println!("{}", render_help("gen-weights", "synthesize stage shards", &opts));
+        return Ok(());
+    }
+    let engine = Engine::with_default_paths()?;
+    let names: Vec<String> = if a.flag("all") {
+        engine.runtime.manifest.profiles.keys().cloned().collect()
+    } else {
+        vec![a.req("model")?.to_string()]
+    };
+    for name in names {
+        let p = engine.runtime.profile(&name)?;
+        let bytes = hermes::weights::gen::gen_profile_weights(
+            p,
+            &engine.paths.weights,
+            hermes::engine::WEIGHTS_SEED,
+            0.05,
+            a.flag("force"),
+        )?;
+        println!("{name}: {} of shards in {}", human_bytes(bytes), engine.paths.weights.display());
+    }
+    Ok(())
+}
+
+fn cmd_profile(rest: &[String]) -> Result<()> {
+    let mut opts = common_opts();
+    opts.push(Opt { name: "out", takes_value: true, default: None, help: "write profile JSON here" });
+    let a = Args::parse(rest, &opts)?;
+    if a.flag("help") {
+        println!("{}", render_help("profile", "Layer Profiler pre-run", &opts));
+        return Ok(());
+    }
+    let engine = Engine::with_default_paths()?;
+    let model = a.req("model")?;
+    let mp = report::profile_one(&engine, model, a.req("disk")?)?;
+    let p = engine.runtime.profile(model)?;
+    let (l, c, b) = mp.body_means(p.body_kind());
+    println!("{model} on disk={}", mp.disk);
+    println!("  body layers: load {} / compute {} per layer ({} each)", human_ms(l), human_ms(c), human_bytes(b));
+    println!("  load/compute ratio: {:.1}x", mp.load_compute_ratio(p.body_kind()));
+    println!("  totals: load {}  compute {}", human_ms(mp.total_load_ms()), human_ms(mp.total_compute_ms()));
+    let out = a
+        .get("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| engine.paths.results.join(format!("profile_{model}.json")));
+    mp.save(&out)?;
+    println!("  saved -> {}", out.display());
+    Ok(())
+}
+
+fn cmd_plan(rest: &[String]) -> Result<()> {
+    let mut opts = common_opts();
+    opts.push(Opt { name: "budgets-mb", takes_value: true, default: None, help: "comma-separated budgets in MB (default: fractions of model size)" });
+    opts.push(Opt { name: "max-agents", takes_value: true, default: Some("8"), help: "largest LA count to consider" });
+    opts.push(Opt { name: "analytic", takes_value: false, default: None, help: "skip empirical pre-runs" });
+    opts.push(Opt { name: "out", takes_value: true, default: None, help: "write schedule JSON here" });
+    let a = Args::parse(rest, &opts)?;
+    if a.flag("help") {
+        println!("{}", render_help("plan", "Pipeline Planner", &opts));
+        return Ok(());
+    }
+    let engine = Engine::with_default_paths()?;
+    let model = a.req("model")?;
+    let stats = report::profile_one(&engine, model, a.req("disk")?)?;
+    let p = engine.runtime.profile(model)?;
+    let budgets: Vec<u64> = if let Some(_) = a.get("budgets-mb") {
+        a.list("budgets-mb")
+            .iter()
+            .map(|s| Ok((s.parse::<f64>()? * 1024.0 * 1024.0) as u64))
+            .collect::<Result<_>>()?
+    } else {
+        let min = planner::min_feasible_budget(&stats, p.body_kind());
+        [0.15, 0.25, 0.4, 0.6, 0.8]
+            .iter()
+            .map(|f| ((p.total_weight_bytes as f64 * f) as u64).max(min))
+            .collect()
+    };
+    let sched = planner::plan(&engine, &stats, &budgets, a.usize("max-agents")?, !a.flag("analytic"))?;
+    println!("schedule for {model} (disk={}):", sched.disk);
+    for e in &sched.entries {
+        println!(
+            "  budget {:>10} -> {} LAs  (latency {} predicted{}, peak {} predicted{})",
+            human_bytes(e.budget_bytes),
+            e.agents,
+            human_ms(e.predicted_latency_ms),
+            e.measured_latency_ms.map(|m| format!(", {} measured", human_ms(m))).unwrap_or_default(),
+            human_bytes(e.predicted_peak_bytes),
+            e.measured_peak_bytes.map(|m| format!(", {} measured", human_bytes(m))).unwrap_or_default(),
+        );
+    }
+    let out = a
+        .get("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| engine.paths.results.join(format!("schedule_{model}.json")));
+    sched.save(&out)?;
+    println!("saved -> {}", out.display());
+    Ok(())
+}
+
+fn cmd_run(rest: &[String]) -> Result<()> {
+    let mut opts = common_opts();
+    opts.push(Opt { name: "mode", takes_value: true, default: Some("pipeload"), help: "baseline|pipeswitch|pipeload" });
+    opts.push(Opt { name: "agents", takes_value: true, default: Some("4"), help: "number of Loading Agents (pipeload)" });
+    opts.push(Opt { name: "budget-mb", takes_value: true, default: None, help: "memory budget in MB" });
+    opts.push(Opt { name: "batch", takes_value: true, default: Some("1"), help: "batch size (must be AOT-compiled)" });
+    opts.push(Opt { name: "tokens", takes_value: true, default: None, help: "generated tokens (generative models)" });
+    opts.push(Opt { name: "trace", takes_value: false, default: None, help: "print the execution Gantt chart" });
+    opts.push(Opt { name: "schedule", takes_value: true, default: None, help: "pick #LAs from a planner schedule JSON given --budget-mb" });
+    let a = Args::parse(rest, &opts)?;
+    if a.flag("help") {
+        println!("{}", render_help("run", "Execution Engine", &opts));
+        return Ok(());
+    }
+    let engine = Engine::with_default_paths()?;
+    let budget = a.get("budget-mb").map(|s| -> Result<u64> {
+        Ok((s.parse::<f64>()? * 1024.0 * 1024.0) as u64)
+    }).transpose()?;
+    let mut agents = a.usize("agents")?;
+    if let Some(path) = a.get("schedule") {
+        let sched = planner::Schedule::load(std::path::Path::new(path))?;
+        let b = budget.ok_or_else(|| anyhow::anyhow!("--schedule needs --budget-mb"))?;
+        let entry = sched
+            .pick(b)
+            .ok_or_else(|| anyhow::anyhow!("no schedule entry fits budget"))?;
+        agents = entry.agents;
+        println!("schedule picked {} LAs for budget {}", agents, human_bytes(b));
+    }
+    let cfg = RunConfig {
+        profile: a.req("model")?.to_string(),
+        mode: Mode::parse(a.req("mode")?)?,
+        agents,
+        budget,
+        disk: a.req("disk")?.to_string(),
+        batch: a.usize("batch")?,
+        seed: a.u64("seed")?,
+        trace: a.flag("trace"),
+        gen_tokens: a.get("tokens").map(|s| s.parse()).transpose()?,
+        kv_cache: false,
+    };
+    let tracer = Tracer::new(cfg.trace);
+    let (rep, out) = engine.run_with(&cfg, &tracer)?;
+    println!("model={} mode={} agents={}", rep.model, rep.mode, rep.agents);
+    println!("  latency:    {}", human_ms(rep.latency_ms));
+    println!("  peak mem:   {}", human_bytes(rep.peak_bytes));
+    println!("  mem stalls: {}   wait stalls: {}", human_ms(rep.mem_stall_ms), human_ms(rep.wait_stall_ms));
+    if rep.tokens > 0 {
+        println!("  generated {} tokens: {:?}", rep.tokens, out.generated);
+    }
+    if !out.head_sample.is_empty() {
+        let h: Vec<String> = out.head_sample.iter().take(6).map(|v| format!("{v:.4}")).collect();
+        println!("  head sample: [{}]", h.join(", "));
+    }
+    if cfg.trace {
+        println!("\n{}", tracer.ascii_gantt(100));
+        println!("inference idle fraction: {:.0}%", tracer.inference_idle_fraction().unwrap_or(0.0) * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let mut opts = common_opts();
+    opts.push(Opt { name: "mode", takes_value: true, default: Some("pipeload"), help: "baseline|pipeswitch|pipeload" });
+    opts.push(Opt { name: "agents", takes_value: true, default: Some("4"), help: "Loading Agents" });
+    opts.push(Opt { name: "budget-mb", takes_value: true, default: None, help: "memory budget in MB" });
+    opts.push(Opt { name: "requests", takes_value: true, default: Some("16"), help: "requests to serve" });
+    opts.push(Opt { name: "rps", takes_value: true, default: Some("0"), help: "mean arrival rate (0 = closed loop)" });
+    opts.push(Opt { name: "max-batch", takes_value: true, default: Some("4"), help: "max requests per batch" });
+    opts.push(Opt { name: "slo-ms", takes_value: true, default: Some("5000"), help: "p95 latency SLO" });
+    let a = Args::parse(rest, &opts)?;
+    if a.flag("help") {
+        println!("{}", render_help("serve", "batched serving session", &opts));
+        return Ok(());
+    }
+    let engine = Engine::with_default_paths()?;
+    let budget = a.get("budget-mb").map(|s| -> Result<u64> {
+        Ok((s.parse::<f64>()? * 1024.0 * 1024.0) as u64)
+    }).transpose()?;
+    let cfg = ServeConfig {
+        run: RunConfig {
+            profile: a.req("model")?.to_string(),
+            mode: Mode::parse(a.req("mode")?)?,
+            agents: a.usize("agents")?,
+            budget,
+            disk: a.req("disk")?.to_string(),
+            seed: a.u64("seed")?,
+            ..RunConfig::default()
+        },
+        num_requests: a.usize("requests")?,
+        arrival_rps: a.f64("rps")?,
+        max_batch: a.usize("max-batch")?,
+        slo_ms: a.f64("slo-ms")?,
+        ..ServeConfig::default()
+    };
+    let s = serve(&engine, &cfg)?;
+    println!("served {} requests in {} batches (mean batch {:.2})", s.served, s.batches, s.mean_batch_size);
+    println!("  throughput: {:.2} req/s", s.throughput_rps);
+    println!("  latency p50 {}  p95 {}  p99 {}", human_ms(s.latency.p50()), human_ms(s.latency.p95()), human_ms(s.latency.p99()));
+    println!("  peak mem: {}", human_bytes(s.peak_bytes));
+    println!("  SLO p95 <= {}: {}", human_ms(s.slo.target_ms), if s.slo.met { "MET" } else { "MISSED" });
+    Ok(())
+}
+
+fn cmd_report(rest: &[String]) -> Result<()> {
+    let mut opts = common_opts();
+    opts.push(Opt { name: "table", takes_value: true, default: None, help: "1 | 2 | 3" });
+    opts.push(Opt { name: "figure", takes_value: true, default: None, help: "1b | 2 | 3 | 7" });
+    opts.push(Opt { name: "agents", takes_value: true, default: Some("2,4,6"), help: "PIPELOAD agent counts for tables 2/3" });
+    opts.push(Opt { name: "tokens", takes_value: true, default: None, help: "generated tokens override (speeds up sweeps)" });
+    opts.push(Opt { name: "fresh", takes_value: false, default: None, help: "ignore cached sweep results" });
+    opts.push(Opt { name: "all", takes_value: false, default: None, help: "print every table and figure" });
+    let a = Args::parse(rest, &opts)?;
+    if a.flag("help") {
+        println!("{}", render_help("report", "regenerate paper tables/figures", &opts));
+        return Ok(());
+    }
+    let engine = Engine::with_default_paths()?;
+    let disk = a.req("disk")?;
+    let agents: Vec<usize> = a.list("agents").iter().map(|s| s.parse().unwrap_or(2)).collect();
+    let tokens = a.get("tokens").map(|s| s.parse()).transpose()?;
+    let mut wanted_tables: Vec<String> = a.get("table").map(|t| vec![t.to_string()]).unwrap_or_default();
+    let mut wanted_figs: Vec<String> = a.get("figure").map(|f| vec![f.to_string()]).unwrap_or_default();
+    if a.flag("all") {
+        wanted_tables = vec!["1".into(), "2".into(), "3".into()];
+        wanted_figs = vec!["2".into(), "3".into(), "7".into(), "1b".into()];
+    }
+    if wanted_tables.is_empty() && wanted_figs.is_empty() {
+        bail!("pass --table N, --figure N, or --all");
+    }
+    for t in &wanted_tables {
+        match t.as_str() {
+            "1" => println!("{}", report::table1(&engine)?),
+            "2" | "3" => {
+                let reports = report::sweep_table23(&engine, disk, &agents, tokens, a.flag("fresh"))?;
+                if t == "2" {
+                    println!("{}", report::table2(&reports, &agents));
+                } else {
+                    println!("{}", report::table3(&reports, &agents));
+                }
+            }
+            _ => bail!("unknown table '{t}'"),
+        }
+    }
+    for f in &wanted_figs {
+        match f.as_str() {
+            "2" => println!("{}", report::fig2(&engine)?),
+            "3" => println!("{}", report::fig3(&engine, disk)?),
+            "7" => println!("{}", report::fig7(&engine, disk, &[0.15, 0.25, 0.4, 0.6, 0.8], 8)?),
+            "1b" => println!("{}", report::fig1b(&engine, disk, a.req("model")?)?),
+            _ => bail!("unknown figure '{f}'"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,258 @@
+//! Memory accountant: the Daemon Agent's budget enforcement.
+//!
+//! The paper enforces edge-device memory limits with `docker --memory`; the
+//! PIPELOAD daemon reacts to its *own* usage tracking and pauses Loading
+//! Agents (the `S^stop` signal) when the budget would be exceeded.  This
+//! module is that tracking: `acquire()` blocks while `used + want > budget`
+//! (the loading agent is "stopped"), `free()` (the daemon's destruction)
+//! wakes the waiters.  Peak usage is the paper's "memory footprint" metric
+//! (max occupancy over the execution lifecycle).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+#[derive(Debug)]
+struct State {
+    used: u64,
+    peak: u64,
+    budget: Option<u64>,
+    shutdown: bool,
+    /// cumulative time any acquirer spent blocked (the paper's stall time)
+    stalled: Duration,
+    stall_events: u64,
+}
+
+/// Thread-safe budget accountant; clone freely (Arc inside).
+#[derive(Debug, Clone)]
+pub struct MemoryAccountant {
+    inner: Arc<(Mutex<State>, Condvar)>,
+}
+
+impl MemoryAccountant {
+    pub fn new(budget: Option<u64>) -> MemoryAccountant {
+        MemoryAccountant {
+            inner: Arc::new((
+                Mutex::new(State {
+                    used: 0,
+                    peak: 0,
+                    budget,
+                    shutdown: false,
+                    stalled: Duration::ZERO,
+                    stall_events: 0,
+                }),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    pub fn unlimited() -> MemoryAccountant {
+        MemoryAccountant::new(None)
+    }
+
+    /// Block until `bytes` fit under the budget, then account them.
+    /// Returns how long the caller was stalled (S^stop duration).
+    /// Errors on shutdown or if `bytes` alone exceeds the budget (a single
+    /// layer that can never fit — a planning error, not a transient).
+    pub fn acquire(&self, bytes: u64) -> Result<Duration> {
+        let (lock, cv) = &*self.inner;
+        let mut s = lock.lock().unwrap();
+        if let Some(b) = s.budget {
+            if bytes > b {
+                bail!("allocation of {bytes} B can never fit budget {b} B");
+            }
+        }
+        let t0 = Instant::now();
+        let mut stalled = false;
+        while !s.shutdown && s.budget.map(|b| s.used + bytes > b).unwrap_or(false) {
+            stalled = true;
+            s = cv.wait_timeout(s, Duration::from_millis(100)).unwrap().0;
+        }
+        if s.shutdown {
+            bail!("accountant shut down");
+        }
+        let waited = t0.elapsed();
+        if stalled {
+            s.stalled += waited;
+            s.stall_events += 1;
+        }
+        s.used += bytes;
+        s.peak = s.peak.max(s.used);
+        Ok(waited)
+    }
+
+    /// Non-blocking acquire; false if it would exceed the budget.
+    pub fn try_acquire(&self, bytes: u64) -> bool {
+        let (lock, _) = &*self.inner;
+        let mut s = lock.lock().unwrap();
+        if s.shutdown || s.budget.map(|b| s.used + bytes > b).unwrap_or(false) {
+            return false;
+        }
+        s.used += bytes;
+        s.peak = s.peak.max(s.used);
+        true
+    }
+
+    /// Account bytes that must not block (activations on the compute path).
+    /// May push usage above the budget; peak still records it honestly.
+    pub fn force_add(&self, bytes: u64) {
+        let (lock, _) = &*self.inner;
+        let mut s = lock.lock().unwrap();
+        s.used += bytes;
+        s.peak = s.peak.max(s.used);
+    }
+
+    /// Release bytes (the daemon's memory destruction) and wake waiters.
+    pub fn free(&self, bytes: u64) {
+        let (lock, cv) = &*self.inner;
+        let mut s = lock.lock().unwrap();
+        assert!(s.used >= bytes, "free({bytes}) underflows used={}", s.used);
+        s.used -= bytes;
+        cv.notify_all();
+    }
+
+    /// Abort all waiters (pipeline teardown on error).
+    pub fn shutdown(&self) {
+        let (lock, cv) = &*self.inner;
+        lock.lock().unwrap().shutdown = true;
+        cv.notify_all();
+    }
+
+    pub fn used(&self) -> u64 {
+        self.inner.0.lock().unwrap().used
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.inner.0.lock().unwrap().peak
+    }
+
+    pub fn budget(&self) -> Option<u64> {
+        self.inner.0.lock().unwrap().budget
+    }
+
+    /// Total time acquirers spent blocked + how many times they blocked.
+    pub fn stall_stats(&self) -> (Duration, u64) {
+        let s = self.inner.0.lock().unwrap();
+        (s.stalled, s.stall_events)
+    }
+
+    /// Reset usage/peak/stall counters, keeping the budget (profiler reuse).
+    pub fn reset(&self) {
+        let (lock, cv) = &*self.inner;
+        let mut s = lock.lock().unwrap();
+        s.used = 0;
+        s.peak = 0;
+        s.stalled = Duration::ZERO;
+        s.stall_events = 0;
+        s.shutdown = false;
+        cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_used_and_peak() {
+        let m = MemoryAccountant::unlimited();
+        m.acquire(100).unwrap();
+        m.acquire(50).unwrap();
+        assert_eq!(m.used(), 150);
+        m.free(120);
+        assert_eq!(m.used(), 30);
+        assert_eq!(m.peak(), 150);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflows")]
+    fn free_underflow_panics() {
+        let m = MemoryAccountant::unlimited();
+        m.acquire(10).unwrap();
+        m.free(20);
+    }
+
+    #[test]
+    fn oversized_allocation_rejected() {
+        let m = MemoryAccountant::new(Some(100));
+        assert!(m.acquire(101).is_err());
+    }
+
+    #[test]
+    fn blocks_until_freed() {
+        let m = MemoryAccountant::new(Some(100));
+        m.acquire(80).unwrap();
+        let m2 = m.clone();
+        let h = std::thread::spawn(move || m2.acquire(50).unwrap());
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(m.used(), 80); // still blocked
+        m.free(80);
+        let waited = h.join().unwrap();
+        assert!(waited.as_millis() >= 40);
+        assert_eq!(m.used(), 50);
+        let (stalled, events) = m.stall_stats();
+        assert!(stalled.as_millis() >= 40);
+        assert_eq!(events, 1);
+    }
+
+    #[test]
+    fn try_acquire_respects_budget() {
+        let m = MemoryAccountant::new(Some(100));
+        assert!(m.try_acquire(60));
+        assert!(!m.try_acquire(60));
+        m.free(60);
+        assert!(m.try_acquire(60));
+    }
+
+    #[test]
+    fn force_add_exceeds_budget_but_records_peak() {
+        let m = MemoryAccountant::new(Some(100));
+        m.acquire(90).unwrap();
+        m.force_add(30);
+        assert_eq!(m.used(), 120);
+        assert_eq!(m.peak(), 120);
+    }
+
+    #[test]
+    fn shutdown_unblocks_waiters_with_error() {
+        let m = MemoryAccountant::new(Some(10));
+        m.acquire(10).unwrap();
+        let m2 = m.clone();
+        let h = std::thread::spawn(move || m2.acquire(5));
+        std::thread::sleep(Duration::from_millis(30));
+        m.shutdown();
+        assert!(h.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn reset_clears_counters() {
+        let m = MemoryAccountant::new(Some(100));
+        m.acquire(70).unwrap();
+        m.free(70);
+        m.reset();
+        assert_eq!(m.used(), 0);
+        assert_eq!(m.peak(), 0);
+        assert_eq!(m.budget(), Some(100));
+    }
+
+    #[test]
+    fn concurrent_acquire_free_consistency() {
+        let m = MemoryAccountant::new(Some(1000));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..200 {
+                    m.acquire(10).unwrap();
+                    m.free(10);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.used(), 0);
+        assert!(m.peak() <= 1000);
+    }
+}

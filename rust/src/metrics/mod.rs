@@ -1,0 +1,247 @@
+//! Metrics: latency distributions, throughput, SLO checks, run reports,
+//! and fixed-width table rendering for the paper-table harness.
+
+use std::time::Duration;
+
+use crate::util::json::Value;
+
+/// Latency sample recorder with percentile queries.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> LatencyRecorder {
+        LatencyRecorder::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_ms.push(d.as_secs_f64() * 1000.0);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_ms.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    /// Percentile via nearest-rank on a sorted copy (p in [0,1]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[(((v.len() - 1) as f64) * p) as usize]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples_ms.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("count", self.len())
+            .set("mean_ms", self.mean())
+            .set("p50_ms", self.p50())
+            .set("p95_ms", self.p95())
+            .set("p99_ms", self.p99())
+            .set("max_ms", self.max())
+    }
+}
+
+/// Result of one engine run (one table cell in the paper's evaluation).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub model: String,
+    pub mode: String,
+    pub agents: usize,
+    pub latency_ms: f64,
+    pub peak_bytes: u64,
+    /// time loading agents spent paused on the memory gate
+    pub mem_stall_ms: f64,
+    /// time the inference agent spent waiting for layers
+    pub wait_stall_ms: f64,
+    /// inference-lane idle fraction (Obs II / Fig 1b)
+    pub idle_fraction: f64,
+    pub tokens: usize,
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("model", self.model.clone())
+            .set("mode", self.mode.clone())
+            .set("agents", self.agents)
+            .set("latency_ms", self.latency_ms)
+            .set("peak_bytes", self.peak_bytes)
+            .set("mem_stall_ms", self.mem_stall_ms)
+            .set("wait_stall_ms", self.wait_stall_ms)
+            .set("idle_fraction", self.idle_fraction)
+            .set("tokens", self.tokens)
+    }
+}
+
+/// SLO verdict for the §V-C serving evaluation.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub target_ms: f64,
+    pub p95_ms: f64,
+    pub met: bool,
+}
+
+pub fn check_slo(lat: &LatencyRecorder, target_ms: f64) -> SloReport {
+    let p95 = lat.p95();
+    SloReport { target_ms, p95_ms: p95, met: p95 <= target_ms }
+}
+
+// ---------------------------------------------------------------------------
+// fixed-width table rendering (the report harness prints paper-style rows)
+// ---------------------------------------------------------------------------
+
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&line(r));
+        }
+        out
+    }
+}
+
+/// Format helpers used across report rows.
+pub fn fmt_ms(ms: f64) -> String {
+    format!("{ms:.1}")
+}
+
+pub fn fmt_mb(bytes: u64) -> String {
+    format!("{:.1}", bytes as f64 / (1024.0 * 1024.0))
+}
+
+pub fn fmt_ratio(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut l = LatencyRecorder::new();
+        for i in 1..=100 {
+            l.record_ms(i as f64);
+        }
+        assert_eq!(l.p50(), 50.0);
+        assert_eq!(l.p95(), 95.0);
+        assert_eq!(l.p99(), 99.0);
+        assert_eq!(l.max(), 100.0);
+        assert!((l.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_recorder_safe() {
+        let l = LatencyRecorder::new();
+        assert_eq!(l.p95(), 0.0);
+        assert_eq!(l.mean(), 0.0);
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn slo_check() {
+        let mut l = LatencyRecorder::new();
+        for _ in 0..99 {
+            l.record_ms(10.0);
+        }
+        l.record_ms(100.0);
+        assert!(check_slo(&l, 50.0).met); // p95 = 10
+        assert!(!check_slo(&l, 5.0).met);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "latency"]);
+        t.row(vec!["bert".into(), "15891.5".into()]);
+        t.row(vec!["vit-large-sim".into(), "3.1".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(lines[2].contains("bert"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_mb(1024 * 1024), "1.0");
+        assert_eq!(fmt_ms(12.34), "12.3");
+        assert_eq!(fmt_ratio(0.28111), "0.281");
+    }
+}

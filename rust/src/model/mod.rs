@@ -1,0 +1,416 @@
+//! Model registry: typed view of `artifacts/manifest.json`.
+//!
+//! The AOT step (`python -m compile.aot`) is the single source of truth for
+//! architecture dims, per-layer tensor specs, stage tables, and HLO entry
+//! shapes; this module only *parses* it. Rust never re-derives tensor
+//! shapes, so the two languages cannot drift (DESIGN.md section 2).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Element type of a tensor (matches the .hws dtype codes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+    F16,
+}
+
+impl DType {
+    pub fn from_str(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            "f16" => DType::F16,
+            _ => bail!("unknown dtype '{s}'"),
+        })
+    }
+
+    pub fn from_code(c: u8) -> Result<DType> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U32,
+            3 => DType::F16,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::U32 => 2,
+            DType::F16 => 3,
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::F16 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+            DType::F16 => "f16",
+        }
+    }
+
+    /// Matching XLA element type for literal construction.
+    pub fn xla(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+            DType::U32 => xla::ElementType::U32,
+            DType::F16 => xla::ElementType::F16,
+        }
+    }
+}
+
+/// One named tensor inside a stage shard (ordered).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn num_bytes(&self) -> usize {
+        self.num_elements() * self.dtype.size_bytes()
+    }
+
+    fn parse(v: &Value) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: DType::from_str(v.req("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// One pipeline stage (what a Loading Agent loads and the Daemon destroys).
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub index: usize,
+    pub kind: String,
+    pub shard: String,
+}
+
+/// One AOT-compiled HLO entry (layer kind x batch).
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub key: String,
+    pub kind: String,
+    pub batch: usize,
+    /// path relative to the artifacts root
+    pub hlo: String,
+    pub activations: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// Per-layer-kind parameter table.
+#[derive(Debug, Clone)]
+pub struct KindSpec {
+    pub params: Vec<TensorSpec>,
+    pub param_bytes: u64,
+}
+
+/// A model profile: architecture dims + stage table + HLO entry index.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub name: String,
+    pub family: String,
+    pub arch: String,
+    pub paper_model: String,
+    pub hidden: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub layers: usize,
+    pub decoder_layers: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub num_classes: usize,
+    pub patch_dim: usize,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+    pub batches: Vec<usize>,
+    pub stages: Vec<StageSpec>,
+    pub kinds: HashMap<String, KindSpec>,
+    pub entries: HashMap<String, EntrySpec>,
+    pub total_weight_bytes: u64,
+}
+
+impl Profile {
+    /// Is this a generative (per-token pipelined decode) model?
+    pub fn is_generative(&self) -> bool {
+        self.family == "gpt2" || self.family == "gptj" || self.family == "bart"
+    }
+
+    /// The dominant body layer kind ("encoder_layer", "decoder_layer", ...).
+    pub fn body_kind(&self) -> &str {
+        match self.family.as_str() {
+            "bert" | "vit" => "encoder_layer",
+            "gpt2" => "decoder_layer",
+            "gptj" => "gptj_layer",
+            "bart" => "cross_decoder_layer",
+            _ => "encoder_layer",
+        }
+    }
+
+    /// Ordered tensor specs for a stage (by its layer kind).
+    pub fn stage_params(&self, stage: &StageSpec) -> Result<&[TensorSpec]> {
+        Ok(&self
+            .kinds
+            .get(&stage.kind)
+            .ok_or_else(|| anyhow!("no kind spec for '{}'", stage.kind))?
+            .params)
+    }
+
+    /// Weight bytes of one stage.
+    pub fn stage_bytes(&self, stage: &StageSpec) -> u64 {
+        self.kinds.get(&stage.kind).map(|k| k.param_bytes).unwrap_or(0)
+    }
+
+    /// HLO entry for (kind, batch).
+    pub fn entry(&self, kind: &str, batch: usize) -> Result<&EntrySpec> {
+        self.entries
+            .get(&format!("{kind}@b{batch}"))
+            .ok_or_else(|| anyhow!("profile {} has no entry {kind}@b{batch}", self.name))
+    }
+
+    /// Average body-layer weight bytes (planner's per-LA memory increment).
+    pub fn body_layer_bytes(&self) -> u64 {
+        self.kinds.get(self.body_kind()).map(|k| k.param_bytes).unwrap_or(0)
+    }
+
+    /// Bytes of non-body stages (embedding + head resident overhead).
+    pub fn other_bytes(&self) -> u64 {
+        self.stages
+            .iter()
+            .filter(|s| s.kind != self.body_kind() && s.kind != "encoder_layer")
+            .map(|s| self.stage_bytes(s))
+            .sum()
+    }
+
+    fn parse(name: &str, v: &Value) -> Result<Profile> {
+        let cfg = v.req("config")?;
+        let geti = |k: &str| -> usize { cfg.get(k).and_then(|x| x.as_usize().ok()).unwrap_or(0) };
+        let stages = v
+            .req("stages")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(StageSpec {
+                    index: s.req("index")?.as_usize()?,
+                    kind: s.req("kind")?.as_str()?.to_string(),
+                    shard: s.req("shard")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut kinds = HashMap::new();
+        for (k, kv) in v.req("kinds")?.as_obj()? {
+            let params = kv
+                .req("params")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let param_bytes = kv.req("param_bytes")?.as_f64()? as u64;
+            kinds.insert(k.clone(), KindSpec { params, param_bytes });
+        }
+        let mut entries = HashMap::new();
+        for (k, ev) in v.req("entries")?.as_obj()? {
+            let activations = ev
+                .req("activations")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                k.clone(),
+                EntrySpec {
+                    key: k.clone(),
+                    kind: ev.req("kind")?.as_str()?.to_string(),
+                    batch: ev.req("batch")?.as_usize()?,
+                    hlo: ev.req("hlo")?.as_str()?.to_string(),
+                    activations,
+                    output: TensorSpec::parse(ev.req("output")?)?,
+                },
+            );
+        }
+        Ok(Profile {
+            name: name.to_string(),
+            family: cfg.req("family")?.as_str()?.to_string(),
+            arch: cfg.req("arch")?.as_str()?.to_string(),
+            paper_model: cfg
+                .get("paper_model")
+                .and_then(|x| x.as_str().ok())
+                .unwrap_or("")
+                .to_string(),
+            hidden: geti("hidden"),
+            heads: geti("heads"),
+            ffn: geti("ffn"),
+            layers: geti("layers"),
+            decoder_layers: geti("decoder_layers"),
+            vocab: geti("vocab"),
+            max_seq: geti("max_seq"),
+            num_classes: geti("num_classes"),
+            patch_dim: geti("patch_dim"),
+            prompt_tokens: geti("prompt_tokens"),
+            gen_tokens: geti("gen_tokens"),
+            batches: cfg
+                .get("batches")
+                .and_then(|b| b.as_arr().ok())
+                .map(|a| a.iter().filter_map(|x| x.as_usize().ok()).collect())
+                .unwrap_or_else(|| vec![1]),
+            stages,
+            kinds,
+            entries,
+            total_weight_bytes: v.req("total_weight_bytes")?.as_f64()? as u64,
+        })
+    }
+}
+
+/// The parsed artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub profiles: HashMap<String, Profile>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let v = Value::from_file(&path).with_context(|| {
+            format!(
+                "loading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let mut profiles = HashMap::new();
+        for (name, pv) in v.req("profiles")?.as_obj()? {
+            profiles.insert(
+                name.clone(),
+                Profile::parse(name, pv).with_context(|| format!("profile {name}"))?,
+            );
+        }
+        Ok(Manifest { root: artifacts_dir.to_path_buf(), profiles })
+    }
+
+    pub fn profile(&self, name: &str) -> Result<&Profile> {
+        self.profiles.get(name).ok_or_else(|| {
+            anyhow!(
+                "unknown profile '{name}' (have: {})",
+                self.profiles.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, entry: &EntrySpec) -> PathBuf {
+        self.root.join(&entry.hlo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "profiles": {
+        "t": {
+          "config": {"family": "bert", "arch": "encoder", "hidden": 8,
+                     "heads": 2, "ffn": 16, "layers": 2, "vocab": 16,
+                     "max_seq": 4, "batches": [1]},
+          "stages": [
+            {"index": 0, "kind": "embedding", "shard": "stage_000.hws"},
+            {"index": 1, "kind": "encoder_layer", "shard": "stage_001.hws"},
+            {"index": 2, "kind": "encoder_layer", "shard": "stage_002.hws"},
+            {"index": 3, "kind": "pooler", "shard": "stage_003.hws"}
+          ],
+          "kinds": {
+            "embedding": {"params": [{"name": "tok", "shape": [16, 8], "dtype": "f32"}],
+                          "param_bytes": 512},
+            "encoder_layer": {"params": [{"name": "wq", "shape": [8, 8], "dtype": "f32"}],
+                              "param_bytes": 256},
+            "pooler": {"params": [{"name": "pw", "shape": [8, 8], "dtype": "f32"}],
+                       "param_bytes": 256}
+          },
+          "entries": {
+            "encoder_layer@b1": {
+              "kind": "encoder_layer", "batch": 1, "hlo": "t/encoder_layer.b1.hlo.txt",
+              "activations": [{"name": "x", "shape": [1, 4, 8], "dtype": "f32"}],
+              "output": {"name": "x", "shape": [1, 4, 8], "dtype": "f32"}
+            }
+          },
+          "total_weight_bytes": 1280
+        }
+      }
+    }"#;
+
+    fn sample() -> Profile {
+        let v = Value::parse(SAMPLE).unwrap();
+        Profile::parse("t", v.req("profiles").unwrap().get("t").unwrap()).unwrap()
+    }
+
+    #[test]
+    fn parses_profile() {
+        let p = sample();
+        assert_eq!(p.hidden, 8);
+        assert_eq!(p.stages.len(), 4);
+        assert_eq!(p.body_kind(), "encoder_layer");
+        assert_eq!(p.body_layer_bytes(), 256);
+        assert_eq!(p.other_bytes(), 512 + 256);
+        assert!(!p.is_generative());
+    }
+
+    #[test]
+    fn entry_lookup() {
+        let p = sample();
+        let e = p.entry("encoder_layer", 1).unwrap();
+        assert_eq!(e.activations[0].shape, vec![1, 4, 8]);
+        assert_eq!(e.output.num_elements(), 32);
+        assert!(p.entry("encoder_layer", 9).is_err());
+        assert!(p.entry("nope", 1).is_err());
+    }
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let t = TensorSpec { name: "w".into(), shape: vec![3, 4], dtype: DType::F32 };
+        assert_eq!(t.num_elements(), 12);
+        assert_eq!(t.num_bytes(), 48);
+        assert_eq!(DType::F16.size_bytes(), 2);
+        for d in [DType::F32, DType::I32, DType::U32, DType::F16] {
+            assert_eq!(DType::from_code(d.code()).unwrap(), d);
+            assert_eq!(DType::from_str(d.name()).unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn stage_param_access() {
+        let p = sample();
+        let st = &p.stages[1];
+        assert_eq!(p.stage_params(st).unwrap()[0].name, "wq");
+        assert_eq!(p.stage_bytes(st), 256);
+    }
+}

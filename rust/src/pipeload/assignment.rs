@@ -1,0 +1,69 @@
+//! Layer-to-agent assignment (paper section III-B).
+//!
+//! The i-th Loading Agent (1-based in the paper) owns layers `L_{i+jm}`:
+//! a round-robin partition by stage index.  With m agents the inference
+//! time of m layers overlaps a single layer's loading time — the paper's
+//! mechanism for closing the load≫compute gap (Obs II).
+
+/// Stages owned by each of `agents` Loading Agents over `stages` stages.
+/// 0-based: agent a gets a, a+m, a+2m, ...
+pub fn assignment(stages: usize, agents: usize) -> Vec<Vec<usize>> {
+    assert!(agents >= 1, "need at least one loading agent");
+    let mut out = vec![Vec::new(); agents];
+    for s in 0..stages {
+        out[s % agents].push(s);
+    }
+    out
+}
+
+/// Which agent owns a stage.
+pub fn owner(stage: usize, agents: usize) -> usize {
+    stage % agents
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_example() {
+        // Fig 5: LA1 -> L1,L4,L7..., LA2 -> L2,L5,L8..., LA3 -> L3,L6,L9...
+        // (0-based here)
+        let a = assignment(9, 3);
+        assert_eq!(a[0], vec![0, 3, 6]);
+        assert_eq!(a[1], vec![1, 4, 7]);
+        assert_eq!(a[2], vec![2, 5, 8]);
+    }
+
+    #[test]
+    fn partition_covers_all_exactly_once() {
+        for stages in [1, 5, 26, 30] {
+            for agents in [1, 2, 3, 6, 40] {
+                let a = assignment(stages, agents);
+                let mut seen = vec![0u32; stages];
+                for (ai, list) in a.iter().enumerate() {
+                    for &s in list {
+                        seen[s] += 1;
+                        assert_eq!(owner(s, agents), ai);
+                    }
+                }
+                assert!(seen.iter().all(|&c| c == 1), "stages={stages} agents={agents}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_agent_lists_sorted() {
+        for list in assignment(30, 4) {
+            assert!(list.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn more_agents_than_stages() {
+        let a = assignment(2, 6);
+        assert_eq!(a[0], vec![0]);
+        assert_eq!(a[1], vec![1]);
+        assert!(a[2..].iter().all(|l| l.is_empty()));
+    }
+}

@@ -1,0 +1,204 @@
+//! Ordered memory-admission gate.
+//!
+//! The Daemon's raw budget check ([`MemoryAccountant::acquire`]) admits
+//! waiters in arbitrary wake-up order.  Under a tight budget that can
+//! deadlock the pipeline: the budget fills with *future* layers while the
+//! layer the Inference Agent needs next is still waiting; nothing can be
+//! computed, so nothing is ever freed.
+//!
+//! This gate makes admission **strictly sequential by stage index**: stage
+//! s is admitted only after stages 0..s-1 were admitted and the budget has
+//! room.  Loading stays m-way parallel (admission is just accounting; the
+//! actual disk reads overlap), but memory is granted in exactly the order
+//! the Inference Agent will consume it.  Liveness: the next-needed stage k
+//! is always the next admission; once admitted its agent loads it, the
+//! Inference Agent computes it, the Daemon frees it, and admission k+1
+//! proceeds.  This is the concrete realization of the paper's `S^stop`
+//! protocol — "waiting for admission" == "paused by the Daemon".
+//!
+//! [`MemoryAccountant::acquire`]: crate::memory::MemoryAccountant::acquire
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::memory::MemoryAccountant;
+
+#[derive(Debug)]
+struct GateState {
+    next_admit: usize,
+    shutdown: bool,
+}
+
+/// Stage-ordered admission on top of a [`MemoryAccountant`].
+///
+/// One gate serves one pipeline pass (admissions 0..N in order); create a
+/// fresh gate per pass (per generated token for GPT-style decode).
+#[derive(Debug, Clone)]
+pub struct OrderedGate {
+    accountant: MemoryAccountant,
+    state: Arc<(Mutex<GateState>, Condvar)>,
+}
+
+impl OrderedGate {
+    pub fn new(accountant: MemoryAccountant) -> OrderedGate {
+        OrderedGate {
+            accountant,
+            state: Arc::new((
+                Mutex::new(GateState { next_admit: 0, shutdown: false }),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    pub fn accountant(&self) -> &MemoryAccountant {
+        &self.accountant
+    }
+
+    /// Block until it is `stage`'s turn and `bytes` fit the budget, then
+    /// account them.  Returns time spent stalled (the S^stop duration).
+    pub fn admit(&self, stage: usize, bytes: u64) -> Result<Duration> {
+        if let Some(b) = self.accountant.budget() {
+            if bytes > b {
+                bail!("stage {stage}: {bytes} B can never fit budget {b} B");
+            }
+        }
+        let (lock, cv) = &*self.state;
+        let t0 = Instant::now();
+        let mut s = lock.lock().unwrap();
+        loop {
+            if s.shutdown {
+                bail!("gate shut down");
+            }
+            if s.next_admit == stage && self.accountant.try_acquire(bytes) {
+                s.next_admit += 1;
+                cv.notify_all();
+                return Ok(t0.elapsed());
+            }
+            // Short timeout: frees go through the accountant, whose condvar
+            // we are not parked on; poll cheaply instead of missing wakeups.
+            s = cv.wait_timeout(s, Duration::from_millis(2)).unwrap().0;
+        }
+    }
+
+    /// Free bytes (daemon destruction) and wake admission waiters.
+    pub fn free(&self, bytes: u64) {
+        self.accountant.free(bytes);
+        self.state.1.notify_all();
+    }
+
+    pub fn shutdown(&self) {
+        self.state.0.lock().unwrap().shutdown = true;
+        self.state.1.notify_all();
+        self.accountant.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_in_stage_order_under_pressure() {
+        // budget fits exactly one layer; stages 2,1,0 arrive out of order.
+        let gate = OrderedGate::new(MemoryAccountant::new(Some(100)));
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for stage in [2usize, 1, 0] {
+            let g = gate.clone();
+            let ord = order.clone();
+            handles.push(std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(10 * (2 - stage) as u64));
+                g.admit(stage, 100).unwrap();
+                ord.lock().unwrap().push(stage);
+            }));
+        }
+        // drain: free after each admission so the next can proceed
+        for _ in 0..3 {
+            while gate.accountant().used() < 100 {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            gate.free(100);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn no_deadlock_with_tight_budget() {
+        // budget = 1 layer, 3 agents racing, consumer strictly in order.
+        let gate = OrderedGate::new(MemoryAccountant::new(Some(10)));
+        let (tx, rx) = std::sync::mpsc::channel::<usize>();
+        let mut handles = Vec::new();
+        for agent in 0..3usize {
+            let g = gate.clone();
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || {
+                for stage in (agent..12).step_by(3) {
+                    g.admit(stage, 10).unwrap();
+                    tx.send(stage).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut next = 0;
+        let mut pending = std::collections::BTreeSet::new();
+        while next < 12 {
+            let s = rx.recv_timeout(Duration::from_secs(5)).expect("pipeline deadlocked");
+            pending.insert(s);
+            while pending.remove(&next) {
+                gate.free(10); // "computed" -> daemon frees
+                next += 1;
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(gate.accountant().used(), 0);
+    }
+
+    #[test]
+    fn oversized_request_rejected() {
+        let gate = OrderedGate::new(MemoryAccountant::new(Some(50)));
+        assert!(gate.admit(0, 51).is_err());
+    }
+
+    #[test]
+    fn shutdown_unblocks() {
+        let gate = OrderedGate::new(MemoryAccountant::new(Some(10)));
+        gate.admit(0, 10).unwrap();
+        let g = gate.clone();
+        let h = std::thread::spawn(move || g.admit(1, 10));
+        std::thread::sleep(Duration::from_millis(30));
+        gate.shutdown();
+        assert!(h.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn sequential_admissions_fast_when_unconstrained() {
+        let gate = OrderedGate::new(MemoryAccountant::unlimited());
+        let t0 = Instant::now();
+        for s in 0..50 {
+            gate.admit(s, 1000).unwrap();
+        }
+        assert!(t0.elapsed().as_millis() < 200);
+        assert_eq!(gate.accountant().used(), 50_000);
+    }
+
+    #[test]
+    fn out_of_turn_request_waits_for_predecessor() {
+        let gate = OrderedGate::new(MemoryAccountant::unlimited());
+        let g = gate.clone();
+        let h = std::thread::spawn(move || {
+            let waited = g.admit(1, 10).unwrap();
+            waited
+        });
+        std::thread::sleep(Duration::from_millis(40));
+        gate.admit(0, 10).unwrap();
+        let waited = h.join().unwrap();
+        assert!(waited.as_millis() >= 30, "{waited:?}");
+    }
+}

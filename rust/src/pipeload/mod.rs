@@ -1,0 +1,400 @@
+//! PIPELOAD: the paper's memory-efficient pipeline execution mechanism.
+//!
+//! Three worker kinds cooperate over one model pass (paper Fig. 4):
+//!
+//! * **Loading Agents** (m threads) — stream their assigned stage shards
+//!   ([`assignment`]) disk→memory through the edge-storage simulator,
+//!   gated by the Daemon's ordered memory admission ([`gate`]); emit
+//!   `S_comp` when a layer is resident.
+//! * **Inference Agent** (the calling thread — it owns the non-Send PJRT
+//!   runtime) — maintains the inference queue (an index-ordered pending
+//!   map), computes layers strictly in stage order, emits `S_dest`.
+//! * **Daemon Agent** (one thread) — receives `S_dest`, destroys the
+//!   layer's weights and returns their bytes to the budget; its admission
+//!   gate embodies `S_stop` (loading pauses while memory is short).
+//!
+//! The same machinery with `destroy_after_compute = false` and one agent
+//! is the PipeSwitch-style *standard pipeline* comparator: layers stay
+//! resident, so peak memory equals the whole model.
+
+pub mod assignment;
+pub mod gate;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::diskio::Disk;
+use crate::memory::MemoryAccountant;
+use crate::model::{Profile, TensorSpec};
+use crate::runtime::{literal_for_spec, Runtime};
+use crate::signals::{Signal, SignalLog};
+use crate::trace::{Kind, Lane, Tracer};
+use crate::weights::{read_shard_from, validate_against, Shard};
+use gate::OrderedGate;
+
+/// Input to one model pass.
+#[derive(Debug, Clone)]
+pub enum ModelInput {
+    /// token ids (BERT / GPT-2 / GPT-J / BART), padded to max_seq * batch
+    Ids(Vec<i32>),
+    /// flattened image patches (ViT): batch * (seq-1) * patch_dim
+    Patches(Vec<f32>),
+}
+
+impl ModelInput {
+    pub fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        match self {
+            ModelInput::Ids(v) => literal_for_spec(spec, None, Some(v)),
+            ModelInput::Patches(v) => literal_for_spec(spec, Some(v), None),
+        }
+    }
+
+    /// Upload directly to a device buffer (the hot-path entry point).
+    pub fn to_buffer(&self, rt: &Runtime, spec: &TensorSpec) -> Result<xla::PjRtBuffer> {
+        let n: usize = spec.shape.iter().product();
+        match self {
+            ModelInput::Ids(v) => {
+                if v.len() != n {
+                    anyhow::bail!("ids len {} != spec {:?}", v.len(), spec.shape);
+                }
+                rt.buffer_i32(v, &spec.shape)
+            }
+            ModelInput::Patches(v) => {
+                if v.len() != n {
+                    anyhow::bail!("patches len {} != spec {:?}", v.len(), spec.shape);
+                }
+                rt.buffer_f32(v, &spec.shape)
+            }
+        }
+    }
+}
+
+/// Pipeline configuration knobs.
+#[derive(Debug, Clone)]
+pub struct PipelineOpts {
+    /// number of Loading Agents (m)
+    pub agents: usize,
+    /// PIPELOAD destroys weights after compute; PipeSwitch keeps them
+    pub destroy_after_compute: bool,
+    /// verify shard tensors against manifest specs while loading
+    pub validate_shards: bool,
+}
+
+impl PipelineOpts {
+    pub fn pipeload(agents: usize) -> PipelineOpts {
+        PipelineOpts { agents, destroy_after_compute: true, validate_shards: false }
+    }
+
+    /// Standard pipeline (the paper's PipeSwitch comparator): one loading
+    /// stream, layer-granularity overlap, no destruction.
+    pub fn pipeswitch() -> PipelineOpts {
+        PipelineOpts { agents: 1, destroy_after_compute: false, validate_shards: false }
+    }
+}
+
+/// Everything one pass needs (runtime stays on the calling thread).
+pub struct ExecCtx<'rt> {
+    pub runtime: &'rt Runtime,
+    pub profile: &'rt Profile,
+    /// directory holding this profile's shards: <weights>/<profile>/
+    pub shard_dir: PathBuf,
+    pub disk: Disk,
+    pub tracer: Tracer,
+    pub signals: SignalLog,
+    pub batch: usize,
+}
+
+impl<'rt> ExecCtx<'rt> {
+    pub fn new(runtime: &'rt Runtime, profile_name: &str, weights_dir: &Path, disk: Disk) -> Result<ExecCtx<'rt>> {
+        let profile = runtime.profile(profile_name)?;
+        Ok(ExecCtx {
+            runtime,
+            profile,
+            shard_dir: weights_dir.join(&profile.name),
+            disk,
+            tracer: Tracer::disabled(),
+            signals: SignalLog::new(),
+            batch: 1,
+        })
+    }
+}
+
+/// Per-pass measurements (the engine aggregates these into a RunReport).
+#[derive(Debug, Clone, Default)]
+pub struct PassStats {
+    pub peak_bytes: u64,
+    pub mem_stall_ms: f64,
+    pub wait_stall_ms: f64,
+    pub load_ms_total: f64,
+    pub compute_ms_total: f64,
+}
+
+struct StageMsg {
+    stage: usize,
+    #[allow(dead_code)]
+    agent: usize,
+    shard: Shard,
+    bytes: u64,
+}
+
+/// Run one full pipelined pass; returns the head output buffer + stats.
+pub fn run_pipeline(
+    ctx: &ExecCtx,
+    opts: &PipelineOpts,
+    budget: Option<u64>,
+    input: &ModelInput,
+) -> Result<(xla::PjRtBuffer, PassStats)> {
+    let profile = ctx.profile;
+    let n_stages = profile.stages.len();
+    if opts.agents == 0 {
+        bail!("need at least one loading agent");
+    }
+    if !opts.destroy_after_compute {
+        if let Some(b) = budget {
+            if b < profile.total_weight_bytes {
+                bail!(
+                    "standard pipeline keeps all weights resident; model needs {} B > budget {} B",
+                    profile.total_weight_bytes,
+                    b
+                );
+            }
+        }
+    }
+
+    let accountant = MemoryAccountant::new(budget);
+    let gate = OrderedGate::new(accountant.clone());
+    let (tx_load, rx_load) = mpsc::channel::<Result<StageMsg>>();
+    let (tx_dest, rx_dest) = mpsc::channel::<StageMsg>();
+    let mem_stall_ms = Arc::new(Mutex::new(0.0f64));
+    let load_ms = Arc::new(Mutex::new(0.0f64));
+    let plan = assignment::assignment(n_stages, opts.agents);
+
+    let result = std::thread::scope(|scope| -> Result<(xla::PjRtBuffer, PassStats)> {
+        // ---- Daemon Agent -------------------------------------------------
+        let daemon_gate = gate.clone();
+        let daemon_tracer = ctx.tracer.clone();
+        let destroy = opts.destroy_after_compute;
+        scope.spawn(move || {
+            let mut kept: Vec<StageMsg> = Vec::new();
+            for msg in rx_dest {
+                if destroy {
+                    let t0 = daemon_tracer.now_ms();
+                    drop(msg.shard); // the destruction
+                    daemon_gate.free(msg.bytes);
+                    daemon_tracer.record(
+                        Lane::Daemon,
+                        Kind::Destroy,
+                        Some(msg.stage),
+                        t0,
+                        daemon_tracer.now_ms(),
+                    );
+                } else {
+                    kept.push(msg); // standard pipeline: stays resident
+                }
+            }
+            for msg in kept {
+                daemon_gate.free(msg.bytes);
+            }
+        });
+
+        // ---- Loading Agents ----------------------------------------------
+        for (agent, my_stages) in plan.iter().enumerate() {
+            if my_stages.is_empty() {
+                continue;
+            }
+            let gate = gate.clone();
+            let tx = tx_load.clone();
+            let tracer = ctx.tracer.clone();
+            let signals = ctx.signals.clone();
+            let disk = ctx.disk.clone();
+            let shard_dir = ctx.shard_dir.clone();
+            let stall_acc = mem_stall_ms.clone();
+            let load_acc = load_ms.clone();
+            let my_stages = my_stages.clone();
+            let validate = opts.validate_shards;
+            scope.spawn(move || {
+                for &stage_idx in &my_stages {
+                    let stage = &profile.stages[stage_idx];
+                    let bytes = profile.stage_bytes(stage);
+                    // S^stop: wait for the Daemon's memory admission.
+                    let t_gate0 = tracer.now_ms();
+                    let waited = match gate.admit(stage_idx, bytes) {
+                        Ok(w) => w,
+                        Err(e) => {
+                            let _ = tx.send(Err(e.context(format!("admitting stage {stage_idx}"))));
+                            return;
+                        }
+                    };
+                    let waited_ms = waited.as_secs_f64() * 1000.0;
+                    if waited_ms > 0.05 {
+                        tracer.record(
+                            Lane::Loader(agent),
+                            Kind::StallMem,
+                            Some(stage_idx),
+                            t_gate0,
+                            tracer.now_ms(),
+                        );
+                        signals.emit(Signal::Stop { agent, ms: waited_ms });
+                        *stall_acc.lock().unwrap() += waited_ms;
+                    }
+                    // Load disk -> memory through the throttled stream.
+                    let t0 = tracer.now_ms();
+                    let loaded: Result<Shard> = (|| {
+                        let reader = disk.open(&shard_dir.join(&stage.shard))?;
+                        let shard = read_shard_from(reader)
+                            .with_context(|| format!("shard {}", stage.shard))?;
+                        if validate {
+                            validate_against(&shard, profile.stage_params(stage)?)?;
+                        }
+                        Ok(shard)
+                    })();
+                    match loaded {
+                        Ok(shard) => {
+                            let t1 = tracer.now_ms();
+                            tracer.record(Lane::Loader(agent), Kind::Load, Some(stage_idx), t0, t1);
+                            *load_acc.lock().unwrap() += t1 - t0;
+                            // S_comp: layer ready for computation.
+                            signals.emit(Signal::Comp { stage: stage_idx, agent });
+                            let _ = tx.send(Ok(StageMsg { stage: stage_idx, agent, shard, bytes }));
+                        }
+                        Err(e) => {
+                            gate.free(bytes);
+                            let _ = tx.send(Err(e));
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+        drop(tx_load);
+
+        // ---- Inference Agent (this thread owns the PJRT runtime) ----------
+        let run = inference_loop(ctx, profile, input, rx_load, &tx_dest, &accountant, &gate);
+        drop(tx_dest); // closes the daemon; scope joins it
+        match &run {
+            Ok(_) => {}
+            Err(_) => gate.shutdown(), // unblock any still-waiting loaders
+        }
+        let (out, mut stats) = run?;
+        stats.peak_bytes = accountant.peak();
+        stats.mem_stall_ms = *mem_stall_ms.lock().unwrap();
+        stats.load_ms_total = *load_ms.lock().unwrap();
+        Ok((out, stats))
+    });
+
+    result
+}
+
+/// The Inference Agent: strict stage-order compute with a pending queue.
+fn inference_loop(
+    ctx: &ExecCtx,
+    profile: &Profile,
+    input: &ModelInput,
+    rx_load: mpsc::Receiver<Result<StageMsg>>,
+    tx_dest: &mpsc::Sender<StageMsg>,
+    accountant: &MemoryAccountant,
+    gate: &OrderedGate,
+) -> Result<(xla::PjRtBuffer, PassStats)> {
+    let mut stats = PassStats::default();
+    let mut pending: HashMap<usize, StageMsg> = HashMap::new();
+    let n_stages = profile.stages.len();
+
+    // current activation buffer(s); starts as the model input
+    let mut act: Option<xla::PjRtBuffer> = None; // built at stage 0
+    let mut act_bytes: u64 = 0;
+    let mut enc_out: Option<xla::PjRtBuffer> = None; // BART cross-attention
+    let mut enc_out_bytes: u64 = 0;
+
+    for k in 0..n_stages {
+        // wait for S_comp(k) — the inference queue guarantees order
+        while !pending.contains_key(&k) {
+            let t0 = ctx.tracer.now_ms();
+            match rx_load.recv() {
+                Ok(Ok(msg)) => {
+                    let t1 = ctx.tracer.now_ms();
+                    if msg.stage != k {
+                        // arrived early; queue it and keep waiting
+                        ctx.tracer.record(Lane::Inference, Kind::StallWait, Some(k), t0, t1);
+                        stats.wait_stall_ms += t1 - t0;
+                        pending.insert(msg.stage, msg);
+                    } else {
+                        ctx.tracer.record(Lane::Inference, Kind::StallWait, Some(k), t0, t1);
+                        stats.wait_stall_ms += t1 - t0;
+                        pending.insert(k, msg);
+                    }
+                }
+                Ok(Err(e)) => {
+                    gate.shutdown();
+                    return Err(e.context("loading agent failed"));
+                }
+                Err(_) => {
+                    return Err(anyhow!(
+                        "loading agents exited before stage {k} arrived (of {n_stages})"
+                    ));
+                }
+            }
+        }
+        let msg = pending.remove(&k).unwrap();
+        let stage = &profile.stages[k];
+        let entry = profile.entry(&stage.kind, ctx.batch)?;
+
+        // assemble activation inputs for this entry
+        if k == 0 {
+            let b = input.to_buffer(ctx.runtime, &entry.activations[0])?;
+            act_bytes = entry.activations[0].num_bytes() as u64;
+            accountant.force_add(act_bytes);
+            act = Some(b);
+        } else if stage.kind == "cross_decoder_layer" && enc_out.is_none() {
+            // first decoder layer: the encoder output doubles as the
+            // decoder seed (simplified seq2seq trace, DESIGN.md §2)
+            enc_out_bytes = act_bytes;
+            accountant.force_add(enc_out_bytes);
+            enc_out = act.take();
+            act = None;
+        }
+        let x_ref;
+        let act_refs: Vec<&xla::PjRtBuffer> = if stage.kind == "cross_decoder_layer" {
+            let enc = enc_out.as_ref().unwrap();
+            match act.as_ref() {
+                Some(x) => vec![x, enc],
+                None => vec![enc, enc], // first cross layer: seed = enc out
+            }
+        } else {
+            x_ref = act.as_ref().ok_or_else(|| anyhow!("no activation at stage {k}"))?;
+            vec![x_ref]
+        };
+
+        // transient copy of weights inside execute (device upload)
+        accountant.force_add(msg.bytes);
+        let t0 = ctx.tracer.now_ms();
+        let out = ctx
+            .runtime
+            .execute_entry(profile, entry, &act_refs, &msg.shard)
+            .with_context(|| format!("executing stage {k} ({})", stage.kind))?;
+        let t1 = ctx.tracer.now_ms();
+        ctx.tracer.record(Lane::Inference, Kind::Compute, Some(k), t0, t1);
+        stats.compute_ms_total += t1 - t0;
+        accountant.free(msg.bytes);
+
+        // swap activation accounting: new out replaces old act
+        let out_bytes = entry.output.num_bytes() as u64;
+        accountant.force_add(out_bytes);
+        accountant.free(act_bytes);
+        act_bytes = out_bytes;
+        act = Some(out);
+
+        // S_dest: hand the layer to the Daemon for destruction
+        ctx.signals.emit(Signal::Dest { stage: k });
+        let _ = tx_dest.send(msg);
+    }
+    if enc_out.is_some() {
+        accountant.free(enc_out_bytes);
+    }
+    accountant.free(act_bytes);
+    ctx.signals.emit(Signal::Done);
+    Ok((act.unwrap(), stats))
+}

@@ -1,0 +1,367 @@
+//! Pipeline Planner (paper section IV-2).
+//!
+//! From the Layer Profiler's data it derives, for each memory constraint,
+//! the number of Loading Agents to use:
+//!
+//! 1. an **analytic model** bounds the feasible agent range — peak memory
+//!    grows by one resident body layer per extra agent, latency shrinks as
+//!    m layer-computes overlap one layer-load (until compute- or
+//!    aggregate-bandwidth-bound);
+//! 2. optional **empirical pre-runs** (the paper's approach) refine the
+//!    exact optimum within that range.
+//!
+//! The resulting [`Schedule`] is what the Execution Engine consults at
+//! run time given the device's current constraint (`Schedule::pick`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Mode, RunConfig};
+use crate::engine::Engine;
+use crate::profiler::ModelProfile;
+use crate::util::json::Value;
+
+/// Analytic peak-memory estimate for m Loading Agents.
+///
+/// Admission is sequential: besides the layer being computed (plus its
+/// transient device upload) there are at most m admitted-but-uncomputed
+/// layers resident.  The per-agent increment is a *body* layer (the layers
+/// PIPELOAD streams); the largest stage (often the embedding table) is
+/// charged once, since sequential admission never holds two copies of it.
+pub fn predict_peak_bytes(
+    max_stage_bytes: u64,
+    body_layer_bytes: u64,
+    act_bytes: u64,
+    agents: usize,
+) -> u64 {
+    max_stage_bytes + (agents as u64 + 1) * body_layer_bytes + act_bytes
+}
+
+/// Analytic end-to-end latency estimate (one pass) for m agents.
+///
+/// Loads proceed m-wide: the loading frontier finishes around
+/// `ceil(n/m) * load`; compute consumes serially (`n * compute`) behind a
+/// one-layer pipeline fill.  The pass ends when both are done.
+pub fn predict_latency_ms(load_ms: f64, compute_ms: f64, n_layers: usize, agents: usize) -> f64 {
+    let n = n_layers as f64;
+    let waves = (n_layers as f64 / agents as f64).ceil();
+    let load_bound = waves * load_ms + compute_ms;
+    let compute_bound = load_ms + n * compute_ms;
+    load_bound.max(compute_bound)
+}
+
+/// Feasible agent counts under a budget, by the analytic peak model.
+pub fn candidate_agents(
+    profile_stats: &ModelProfile,
+    body_kind: &str,
+    budget: u64,
+    max_agents: usize,
+) -> Vec<usize> {
+    let max_stage = profile_stats.max_stage_bytes();
+    let (_, _, body) = profile_stats.body_means(body_kind);
+    let body = if body == 0 { max_stage } else { body };
+    let act = act_estimate(profile_stats);
+    (1..=max_agents)
+        .filter(|&m| predict_peak_bytes(max_stage, body, act, m) <= budget)
+        .collect()
+}
+
+/// Rough activation overhead: largest output the profile produced is not
+/// recorded per-layer, so reserve half a max stage as a conservative pad.
+pub fn act_estimate(profile_stats: &ModelProfile) -> u64 {
+    profile_stats.max_stage_bytes() / 2
+}
+
+/// Smallest budget the analytic model considers runnable (1 agent).
+pub fn min_feasible_budget(profile_stats: &ModelProfile, body_kind: &str) -> u64 {
+    let max_stage = profile_stats.max_stage_bytes();
+    let (_, _, body) = profile_stats.body_means(body_kind);
+    let body = if body == 0 { max_stage } else { body };
+    predict_peak_bytes(max_stage, body, act_estimate(profile_stats), 1)
+}
+
+/// One (budget -> agents) decision with its evidence.
+#[derive(Debug, Clone)]
+pub struct PlanEntry {
+    pub budget_bytes: u64,
+    pub agents: usize,
+    pub predicted_latency_ms: f64,
+    pub predicted_peak_bytes: u64,
+    pub measured_latency_ms: Option<f64>,
+    pub measured_peak_bytes: Option<u64>,
+}
+
+/// The PIPELOAD execution schedule for one model on one storage medium.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub profile: String,
+    pub disk: String,
+    pub entries: Vec<PlanEntry>,
+}
+
+impl Schedule {
+    /// Strategy selection: the largest planned budget <= the device's
+    /// current constraint (paper Fig. 6c).
+    pub fn pick(&self, budget_bytes: u64) -> Option<&PlanEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.budget_bytes <= budget_bytes)
+            .max_by_key(|e| e.budget_bytes)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("profile", self.profile.clone())
+            .set("disk", self.disk.clone())
+            .set(
+                "entries",
+                Value::Arr(
+                    self.entries
+                        .iter()
+                        .map(|e| {
+                            let mut o = Value::obj()
+                                .set("budget_bytes", e.budget_bytes)
+                                .set("agents", e.agents)
+                                .set("predicted_latency_ms", e.predicted_latency_ms)
+                                .set("predicted_peak_bytes", e.predicted_peak_bytes);
+                            if let Some(m) = e.measured_latency_ms {
+                                o = o.set("measured_latency_ms", m);
+                            }
+                            if let Some(m) = e.measured_peak_bytes {
+                                o = o.set("measured_peak_bytes", m);
+                            }
+                            o
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    pub fn from_json(v: &Value) -> Result<Schedule> {
+        Ok(Schedule {
+            profile: v.req("profile")?.as_str()?.to_string(),
+            disk: v.req("disk")?.as_str()?.to_string(),
+            entries: v
+                .req("entries")?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(PlanEntry {
+                        budget_bytes: e.req("budget_bytes")?.as_f64()? as u64,
+                        agents: e.req("agents")?.as_usize()?,
+                        predicted_latency_ms: e.req("predicted_latency_ms")?.as_f64()?,
+                        predicted_peak_bytes: e.req("predicted_peak_bytes")?.as_f64()? as u64,
+                        measured_latency_ms: e
+                            .get("measured_latency_ms")
+                            .and_then(|x| x.as_f64().ok()),
+                        measured_peak_bytes: e
+                            .get("measured_peak_bytes")
+                            .map(|x| x.as_f64().map(|f| f as u64))
+                            .transpose()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_json().to_file(path)
+    }
+
+    pub fn load(path: &Path) -> Result<Schedule> {
+        Schedule::from_json(&Value::from_file(path)?)
+            .with_context(|| format!("parsing schedule {}", path.display()))
+    }
+}
+
+/// Build a schedule from a profile.  With `empirical`, pre-runs PIPELOAD
+/// for each candidate agent count (the paper's method); otherwise the
+/// analytic model decides alone.
+pub fn plan(
+    engine: &Engine,
+    stats: &ModelProfile,
+    budgets: &[u64],
+    max_agents: usize,
+    empirical: bool,
+) -> Result<Schedule> {
+    plan_with_tokens(engine, stats, budgets, max_agents, empirical, None)
+}
+
+/// Like [`plan`] but overriding generated-token count for the pre-runs
+/// (bounds Fig-7 sweep cost for generative models).
+pub fn plan_with_tokens(
+    engine: &Engine,
+    stats: &ModelProfile,
+    budgets: &[u64],
+    max_agents: usize,
+    empirical: bool,
+    gen_tokens: Option<usize>,
+) -> Result<Schedule> {
+    let profile = engine.runtime.profile(&stats.profile)?;
+    let body_kind = profile.body_kind().to_string();
+    let (load_ms, compute_ms, _) = stats.body_means(&body_kind);
+    let n = profile.stages.len();
+    let mut entries = Vec::new();
+
+    for &budget in budgets {
+        let candidates = candidate_agents(stats, &body_kind, budget, max_agents);
+        if candidates.is_empty() {
+            bail!(
+                "budget {} B infeasible for {} (max stage {} B)",
+                budget,
+                stats.profile,
+                stats.max_stage_bytes()
+            );
+        }
+        let (_, _, body_bytes) = stats.body_means(&body_kind);
+        let body_bytes = if body_bytes == 0 { stats.max_stage_bytes() } else { body_bytes };
+        let mut best: Option<PlanEntry> = None;
+        for &m in &candidates {
+            let predicted_latency = predict_latency_ms(load_ms, compute_ms, n, m);
+            let predicted_peak =
+                predict_peak_bytes(stats.max_stage_bytes(), body_bytes, act_estimate(stats), m);
+            let (measured_latency, measured_peak) = if empirical {
+                let cfg = RunConfig {
+                    profile: stats.profile.clone(),
+                    mode: Mode::PipeLoad,
+                    agents: m,
+                    budget: Some(budget),
+                    disk: stats.disk.clone(),
+                    batch: stats.batch,
+                    gen_tokens,
+                    ..RunConfig::default()
+                };
+                let (report, _) = engine
+                    .run(&cfg)
+                    .with_context(|| format!("pre-run m={m} budget={budget}"))?;
+                (Some(report.latency_ms), Some(report.peak_bytes))
+            } else {
+                (None, None)
+            };
+            let score = measured_latency.unwrap_or(predicted_latency);
+            let entry = PlanEntry {
+                budget_bytes: budget,
+                agents: m,
+                predicted_latency_ms: predicted_latency,
+                predicted_peak_bytes: predicted_peak,
+                measured_latency_ms: measured_latency,
+                measured_peak_bytes: measured_peak,
+            };
+            let better = match &best {
+                None => true,
+                Some(b) => score < b.measured_latency_ms.unwrap_or(b.predicted_latency_ms),
+            };
+            if better {
+                best = Some(entry);
+            }
+        }
+        entries.push(best.unwrap());
+    }
+    Ok(Schedule { profile: stats.profile.clone(), disk: stats.disk.clone(), entries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::LayerProfile;
+
+    fn stats(load: f64, compute: f64, bytes: u64, n: usize) -> ModelProfile {
+        ModelProfile {
+            profile: "t".into(),
+            disk: "edge-emmc".into(),
+            batch: 1,
+            layers: (0..n)
+                .map(|i| LayerProfile {
+                    stage: i,
+                    kind: "encoder_layer".into(),
+                    load_ms: load,
+                    compute_ms: compute,
+                    bytes,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn latency_model_monotone_in_agents_when_load_bound() {
+        // load 10x compute: more agents must not predict higher latency
+        let mut prev = f64::INFINITY;
+        for m in 1..=8 {
+            let t = predict_latency_ms(20.0, 2.0, 24, m);
+            assert!(t <= prev + 1e-9, "m={m}: {t} > {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn latency_model_saturates_at_compute_bound() {
+        // with many agents the floor is load + n*compute
+        let t = predict_latency_ms(20.0, 2.0, 24, 100);
+        assert!((t - (20.0 + 48.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_model_grows_one_body_layer_per_agent() {
+        let base = predict_peak_bytes(400, 100, 50, 1);
+        for m in 2..6 {
+            assert_eq!(predict_peak_bytes(400, 100, 50, m) - base, 100 * (m as u64 - 1));
+        }
+        // largest stage charged once, not per agent
+        assert_eq!(predict_peak_bytes(400, 100, 50, 1), 400 + 200 + 50);
+    }
+
+    #[test]
+    fn candidates_respect_budget() {
+        let s = stats(20.0, 2.0, 100, 10);
+        // peak(m) = 100 + (m+1)*100 + 50 <= budget
+        assert_eq!(candidate_agents(&s, "encoder_layer", 350, 8), vec![1]);
+        assert_eq!(candidate_agents(&s, "encoder_layer", 450, 8), vec![1, 2]);
+        assert!(candidate_agents(&s, "encoder_layer", 200, 8).is_empty());
+    }
+
+    #[test]
+    fn candidates_monotone_in_budget() {
+        let s = stats(20.0, 2.0, 100, 10);
+        let mut prev = 0;
+        for budget in [350u64, 450, 650, 1050] {
+            let c = candidate_agents(&s, "encoder_layer", budget, 8);
+            assert!(c.len() >= prev);
+            prev = c.len();
+        }
+    }
+
+    #[test]
+    fn schedule_pick_selects_largest_fitting() {
+        let sched = Schedule {
+            profile: "t".into(),
+            disk: "d".into(),
+            entries: vec![
+                PlanEntry { budget_bytes: 100, agents: 1, predicted_latency_ms: 10.0, predicted_peak_bytes: 90, measured_latency_ms: None, measured_peak_bytes: None },
+                PlanEntry { budget_bytes: 200, agents: 3, predicted_latency_ms: 6.0, predicted_peak_bytes: 180, measured_latency_ms: None, measured_peak_bytes: None },
+            ],
+        };
+        assert_eq!(sched.pick(150).unwrap().agents, 1);
+        assert_eq!(sched.pick(500).unwrap().agents, 3);
+        assert!(sched.pick(50).is_none());
+    }
+
+    #[test]
+    fn schedule_json_roundtrip() {
+        let sched = Schedule {
+            profile: "t".into(),
+            disk: "d".into(),
+            entries: vec![PlanEntry {
+                budget_bytes: 128,
+                agents: 2,
+                predicted_latency_ms: 5.5,
+                predicted_peak_bytes: 120,
+                measured_latency_ms: Some(6.0),
+                measured_peak_bytes: Some(110),
+            }],
+        };
+        let rt = Schedule::from_json(&sched.to_json()).unwrap();
+        assert_eq!(rt.entries[0].agents, 2);
+        assert_eq!(rt.entries[0].measured_peak_bytes, Some(110));
+    }
+}

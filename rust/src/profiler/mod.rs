@@ -1,0 +1,256 @@
+//! Layer Profiler (paper section IV-1).
+//!
+//! Pre-runs a standard model inference, measuring for every individual
+//! layer: **loading time** (through the edge-storage simulator), **compute
+//! time** (PJRT execution), and **memory size** (shard weight bytes).
+//! The Pipeline Planner consumes this profile to size the Loading-Agent
+//! pool per memory constraint; `hermes report --figure 3` renders the
+//! load-vs-compute decomposition (Obs II).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::diskio::Disk;
+use crate::model::Profile;
+use crate::pipeload::{ExecCtx, ModelInput};
+use crate::runtime::Runtime;
+use crate::util::json::Value;
+use crate::weights::read_shard_from;
+
+/// One layer's measurements.
+#[derive(Debug, Clone)]
+pub struct LayerProfile {
+    pub stage: usize,
+    pub kind: String,
+    pub load_ms: f64,
+    pub compute_ms: f64,
+    pub bytes: u64,
+}
+
+/// The whole model's profile.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub profile: String,
+    pub disk: String,
+    pub batch: usize,
+    pub layers: Vec<LayerProfile>,
+}
+
+impl ModelProfile {
+    /// Mean load/compute over the body (encoder/decoder) layers only —
+    /// the layers PIPELOAD schedules around (Obs I).
+    pub fn body_means(&self, body_kind: &str) -> (f64, f64, u64) {
+        let body: Vec<&LayerProfile> =
+            self.layers.iter().filter(|l| l.kind == body_kind).collect();
+        if body.is_empty() {
+            return (0.0, 0.0, 0);
+        }
+        let n = body.len() as f64;
+        (
+            body.iter().map(|l| l.load_ms).sum::<f64>() / n,
+            body.iter().map(|l| l.compute_ms).sum::<f64>() / n,
+            (body.iter().map(|l| l.bytes).sum::<u64>() as f64 / n) as u64,
+        )
+    }
+
+    /// Load/compute ratio over body layers (paper Fig 3: ~10x for ~1 GB
+    /// models, ~2x for GPT-J).
+    pub fn load_compute_ratio(&self, body_kind: &str) -> f64 {
+        let (l, c, _) = self.body_means(body_kind);
+        if c > 0.0 {
+            l / c
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn total_load_ms(&self) -> f64 {
+        self.layers.iter().map(|l| l.load_ms).sum()
+    }
+
+    pub fn total_compute_ms(&self) -> f64 {
+        self.layers.iter().map(|l| l.compute_ms).sum()
+    }
+
+    pub fn max_stage_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.bytes).max().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("profile", self.profile.clone())
+            .set("disk", self.disk.clone())
+            .set("batch", self.batch)
+            .set(
+                "layers",
+                Value::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            Value::obj()
+                                .set("stage", l.stage)
+                                .set("kind", l.kind.clone())
+                                .set("load_ms", l.load_ms)
+                                .set("compute_ms", l.compute_ms)
+                                .set("bytes", l.bytes)
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    pub fn from_json(v: &Value) -> Result<ModelProfile> {
+        Ok(ModelProfile {
+            profile: v.req("profile")?.as_str()?.to_string(),
+            disk: v.req("disk")?.as_str()?.to_string(),
+            batch: v.req("batch")?.as_usize()?,
+            layers: v
+                .req("layers")?
+                .as_arr()?
+                .iter()
+                .map(|l| {
+                    Ok(LayerProfile {
+                        stage: l.req("stage")?.as_usize()?,
+                        kind: l.req("kind")?.as_str()?.to_string(),
+                        load_ms: l.req("load_ms")?.as_f64()?,
+                        compute_ms: l.req("compute_ms")?.as_f64()?,
+                        bytes: l.req("bytes")?.as_f64()? as u64,
+                    })
+                })
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_json().to_file(path)
+    }
+
+    pub fn load(path: &Path) -> Result<ModelProfile> {
+        ModelProfile::from_json(&Value::from_file(path)?)
+            .with_context(|| format!("parsing profile {}", path.display()))
+    }
+}
+
+/// Pre-run: load + execute every stage once, measuring each phase.
+pub fn profile_model(
+    runtime: &Runtime,
+    profile: &Profile,
+    weights_dir: &Path,
+    disk: &Disk,
+    batch: usize,
+    input: &ModelInput,
+) -> Result<ModelProfile> {
+    let ctx = ExecCtx {
+        runtime,
+        profile,
+        shard_dir: weights_dir.join(&profile.name),
+        disk: disk.clone(),
+        tracer: crate::trace::Tracer::disabled(),
+        signals: crate::signals::SignalLog::new(),
+        batch,
+    };
+    runtime.prepare(profile)?;
+    let mut layers = Vec::with_capacity(profile.stages.len());
+    let mut act: Option<xla::PjRtBuffer> = None;
+    let mut enc_out: Option<xla::PjRtBuffer> = None;
+
+    for (k, stage) in profile.stages.iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        let reader = ctx.disk.open(&ctx.shard_dir.join(&stage.shard))?;
+        let shard = read_shard_from(reader)
+            .with_context(|| format!("profiling shard {}", stage.shard))?;
+        let load_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+        let entry = profile.entry(&stage.kind, batch)?;
+        if k == 0 {
+            act = Some(input.to_buffer(runtime, &entry.activations[0])?);
+        } else if stage.kind == "cross_decoder_layer" && enc_out.is_none() {
+            enc_out = act.take();
+        }
+        let x_ref;
+        let act_refs: Vec<&xla::PjRtBuffer> = if stage.kind == "cross_decoder_layer" {
+            let enc = enc_out.as_ref().unwrap();
+            match act.as_ref() {
+                Some(x) => vec![x, enc],
+                None => vec![enc, enc],
+            }
+        } else {
+            x_ref = act.as_ref().unwrap();
+            vec![x_ref]
+        };
+        let t1 = std::time::Instant::now();
+        let out = runtime.execute_entry(profile, entry, &act_refs, &shard)?;
+        let compute_ms = t1.elapsed().as_secs_f64() * 1000.0;
+        act = Some(out);
+
+        layers.push(LayerProfile {
+            stage: k,
+            kind: stage.kind.clone(),
+            load_ms,
+            compute_ms,
+            bytes: profile.stage_bytes(stage),
+        });
+    }
+    Ok(ModelProfile {
+        profile: profile.name.clone(),
+        disk: disk.profile.name.clone(),
+        batch,
+        layers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ModelProfile {
+        ModelProfile {
+            profile: "p".into(),
+            disk: "edge-emmc".into(),
+            batch: 1,
+            layers: vec![
+                LayerProfile { stage: 0, kind: "embedding".into(), load_ms: 5.0, compute_ms: 1.0, bytes: 100 },
+                LayerProfile { stage: 1, kind: "encoder_layer".into(), load_ms: 20.0, compute_ms: 2.0, bytes: 400 },
+                LayerProfile { stage: 2, kind: "encoder_layer".into(), load_ms: 24.0, compute_ms: 2.0, bytes: 400 },
+                LayerProfile { stage: 3, kind: "pooler".into(), load_ms: 1.0, compute_ms: 0.5, bytes: 50 },
+            ],
+        }
+    }
+
+    #[test]
+    fn body_means_filter_body_layers_only() {
+        let p = sample();
+        let (l, c, b) = p.body_means("encoder_layer");
+        assert!((l - 22.0).abs() < 1e-9);
+        assert!((c - 2.0).abs() < 1e-9);
+        assert_eq!(b, 400);
+        assert!((p.load_compute_ratio("encoder_layer") - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn totals_and_max() {
+        let p = sample();
+        assert!((p.total_load_ms() - 50.0).abs() < 1e-9);
+        assert!((p.total_compute_ms() - 5.5).abs() < 1e-9);
+        assert_eq!(p.max_stage_bytes(), 400);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = sample();
+        let v = p.to_json();
+        let q = ModelProfile::from_json(&v).unwrap();
+        assert_eq!(q.layers.len(), 4);
+        assert_eq!(q.layers[1].bytes, 400);
+        assert_eq!(q.profile, "p");
+    }
+
+    #[test]
+    fn empty_body_kind_safe() {
+        let p = sample();
+        let (l, c, b) = p.body_means("gptj_layer");
+        assert_eq!((l, c, b), (0.0, 0.0, 0));
+        assert!(p.load_compute_ratio("gptj_layer").is_infinite());
+    }
+}

@@ -1,0 +1,429 @@
+//! Paper table/figure harness: regenerates every evaluation artifact.
+//!
+//! | paper artifact | function | CLI |
+//! |----------------|----------|-----|
+//! | Table I  (model configs)            | [`table1`]  | `hermes report --table 1` |
+//! | Table II (latency / speedup)        | [`table2`]  | `hermes report --table 2` |
+//! | Table III (memory / ratio)          | [`table3`]  | `hermes report --table 3` |
+//! | Fig 2 (per-layer-type memory share) | [`fig2`]    | `hermes report --figure 2` |
+//! | Fig 3 (load vs compute latency)     | [`fig3`]    | `hermes report --figure 3` |
+//! | Fig 7 (latency & #LAs vs budget)    | [`fig7`]    | `hermes report --figure 7` |
+//! | Fig 1b (pipeline stall, Obs II)     | [`fig1b`]   | `hermes report --figure 1b` |
+//!
+//! Absolute numbers come from the scaled sim profiles + storage simulator;
+//! the *shape* (who wins, by what factor, where crossovers fall) is the
+//! reproduction target (DESIGN.md section 3).  Table II/III share one
+//! sweep, cached under `results/` so the two tables agree.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Mode, RunConfig};
+use crate::diskio::Disk;
+use crate::engine::{make_input, Engine};
+use crate::metrics::{fmt_mb, fmt_ms, fmt_ratio, RunReport, Table};
+use crate::planner;
+use crate::profiler::{profile_model, ModelProfile};
+use crate::trace::Tracer;
+use crate::util::json::Value;
+
+/// The paper's four evaluated models (Table I order).
+pub const PAPER_MODELS: [&str; 4] =
+    ["vit-large-sim", "gpt2-base-sim", "bert-large-sim", "gptj-sim"];
+
+/// Fig 2 additionally decomposes the two BART variants.
+pub const FIG2_MODELS: [&str; 6] = [
+    "vit-large-sim",
+    "bert-large-sim",
+    "gpt2-base-sim",
+    "gptj-sim",
+    "bart-base-sim",
+    "bart-large-sim",
+];
+
+const MB: f64 = 1024.0 * 1024.0;
+
+fn params_millions(engine: &Engine, name: &str) -> Result<f64> {
+    let p = engine.runtime.profile(name)?;
+    let mut elems: u64 = 0;
+    for stage in &p.stages {
+        for spec in p.stage_params(stage)? {
+            elems += spec.num_elements() as u64;
+        }
+    }
+    Ok(elems as f64 / 1e6)
+}
+
+/// Table I: model configurations.
+pub fn table1(engine: &Engine) -> Result<String> {
+    let mut t = Table::new(&[
+        "Model",
+        "Params (M)",
+        "Layer kind",
+        "#Layers",
+        "DType",
+        "Mem layers/total (MB)",
+        "Mem per layer (MB)",
+        "Paper model",
+    ]);
+    for name in PAPER_MODELS {
+        let p = engine.runtime.profile(name)?;
+        let body_kind = p.body_kind().to_string();
+        let body_bytes: u64 = p
+            .stages
+            .iter()
+            .filter(|s| s.kind == body_kind)
+            .map(|s| p.stage_bytes(s))
+            .sum();
+        let n_body = p.stages.iter().filter(|s| s.kind == body_kind).count();
+        t.row(vec![
+            name.into(),
+            format!("{:.1}", params_millions(engine, name)?),
+            body_kind.clone(),
+            n_body.to_string(),
+            "f32".into(),
+            format!("{:.0} / {:.0}", body_bytes as f64 / MB, p.total_weight_bytes as f64 / MB),
+            format!("{:.1}", body_bytes as f64 / n_body.max(1) as f64 / MB),
+            p.paper_model.clone(),
+        ]);
+    }
+    Ok(format!("TABLE I: Model Configurations (sim profiles)\n{}", t.render()))
+}
+
+/// Fig 2: memory decomposition across layer types (Obs I).
+pub fn fig2(engine: &Engine) -> Result<String> {
+    let mut out = String::from("Fig 2: decomposition of layers' memory usage (Obs I)\n");
+    let mut t = Table::new(&["Model", "Embed %", "Enc/Dec %", "Other %", "bar (enc/dec share)"]);
+    for name in FIG2_MODELS {
+        let p = engine.runtime.profile(name)?;
+        let body_kinds = ["encoder_layer", "decoder_layer", "gptj_layer", "cross_decoder_layer"];
+        let mut emb = 0u64;
+        let mut body = 0u64;
+        let mut other = 0u64;
+        for s in &p.stages {
+            let b = p.stage_bytes(s);
+            if s.kind == "embedding" || s.kind == "patch_embed" {
+                emb += b;
+            } else if body_kinds.contains(&s.kind.as_str()) {
+                body += b;
+            } else {
+                other += b;
+            }
+        }
+        let total = (emb + body + other).max(1) as f64;
+        let share = body as f64 / total;
+        let bar = "#".repeat((share * 30.0).round() as usize);
+        t.row(vec![
+            name.into(),
+            format!("{:.1}", emb as f64 / total * 100.0),
+            format!("{:.1}", share * 100.0),
+            format!("{:.1}", other as f64 / total * 100.0),
+            bar,
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str("paper: encoder/decoder layers consume 70-95% of total memory\n");
+    Ok(out)
+}
+
+/// Run the Layer Profiler for one model (helper shared by fig3 / planner).
+pub fn profile_one(engine: &Engine, name: &str, disk_name: &str) -> Result<ModelProfile> {
+    engine.ensure_weights(name)?;
+    let profile = engine.runtime.profile(name)?;
+    let disk = Disk::preset(disk_name)?;
+    let (input, _, _) = make_input(profile, 1, 7);
+    profile_model(&engine.runtime, profile, &engine.paths.weights, &disk, 1, &input)
+}
+
+/// Fig 3: per-layer loading vs inference latency (Obs II).
+pub fn fig3(engine: &Engine, disk_name: &str) -> Result<String> {
+    let mut out = format!("Fig 3: loading vs inference latency per body layer (disk={disk_name})\n");
+    let mut t = Table::new(&["Model", "load ms/layer", "compute ms/layer", "ratio", "idle frac (std pipeline est.)"]);
+    for name in PAPER_MODELS {
+        let mp = profile_one(engine, name, disk_name)?;
+        let p = engine.runtime.profile(name)?;
+        let (l, c, _) = mp.body_means(p.body_kind());
+        // standard pipeline leaves compute idle ~ (l-c)/l of the time
+        let idle = if l > 0.0 { ((l - c) / l).max(0.0) } else { 0.0 };
+        t.row(vec![
+            name.into(),
+            fmt_ms(l),
+            fmt_ms(c),
+            format!("{:.1}x", if c > 0.0 { l / c } else { f64::INFINITY }),
+            format!("{:.0}%", idle * 100.0),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str("paper: ratio ~10x for ~1 GB models, ~2x for GPT-J; 60-80% idle\n");
+    Ok(out)
+}
+
+/// One sweep powers Tables II and III (cached so the tables agree).
+pub fn sweep_table23(
+    engine: &Engine,
+    disk_name: &str,
+    agents: &[usize],
+    gen_tokens: Option<usize>,
+    fresh: bool,
+) -> Result<Vec<RunReport>> {
+    let cache: PathBuf = engine.paths.results.join(format!("table23_{disk_name}.json"));
+    if !fresh && cache.exists() {
+        if let Ok(v) = Value::from_file(&cache) {
+            if let Ok(reports) = parse_reports(&v) {
+                return Ok(reports);
+            }
+        }
+    }
+    let mut reports = Vec::new();
+    for name in PAPER_MODELS {
+        for (mode, m) in std::iter::once((Mode::Baseline, 1))
+            .chain(std::iter::once((Mode::PipeSwitch, 1)))
+            .chain(agents.iter().map(|&m| (Mode::PipeLoad, m)))
+        {
+            let cfg = RunConfig {
+                profile: name.into(),
+                mode,
+                agents: m,
+                disk: disk_name.into(),
+                gen_tokens,
+                ..RunConfig::default()
+            };
+            let (report, _) = engine
+                .run(&cfg)
+                .with_context(|| format!("sweep {name} {} m={m}", mode.name()))?;
+            eprintln!(
+                "  [sweep] {name:<16} {:<10} m={m}: {:.1} ms, peak {:.1} MB",
+                mode.name(),
+                report.latency_ms,
+                report.peak_bytes as f64 / MB
+            );
+            reports.push(report);
+        }
+    }
+    let v = Value::Arr(reports.iter().map(|r| r.to_json()).collect());
+    v.to_file(&cache)?;
+    Ok(reports)
+}
+
+fn parse_reports(v: &Value) -> Result<Vec<RunReport>> {
+    v.as_arr()?
+        .iter()
+        .map(|r| {
+            Ok(RunReport {
+                model: r.req("model")?.as_str()?.to_string(),
+                mode: r.req("mode")?.as_str()?.to_string(),
+                agents: r.req("agents")?.as_usize()?,
+                latency_ms: r.req("latency_ms")?.as_f64()?,
+                peak_bytes: r.req("peak_bytes")?.as_f64()? as u64,
+                mem_stall_ms: r.req("mem_stall_ms")?.as_f64()?,
+                wait_stall_ms: r.req("wait_stall_ms")?.as_f64()?,
+                idle_fraction: r.req("idle_fraction")?.as_f64()?,
+                tokens: r.req("tokens")?.as_usize()?,
+            })
+        })
+        .collect()
+}
+
+fn find<'a>(reports: &'a [RunReport], model: &str, mode: &str, agents: usize) -> Option<&'a RunReport> {
+    reports
+        .iter()
+        .find(|r| r.model == model && r.mode == mode && (mode != "pipeload" || r.agents == agents))
+}
+
+/// Table II: performance comparison (latency + speedup vs baseline).
+pub fn table2(reports: &[RunReport], agents: &[usize]) -> String {
+    let mut headers: Vec<String> =
+        vec!["Model".into(), "Baseline (ms)".into(), "PipeSwitch (ms)".into(), "PS speedup".into()];
+    for m in agents {
+        headers.push(format!("PL {m} LAs (ms)"));
+        headers.push(format!("PL {m} speedup"));
+    }
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs);
+    for model in PAPER_MODELS {
+        let base = match find(reports, model, "baseline", 1) {
+            Some(b) => b,
+            None => continue,
+        };
+        let mut row = vec![model.to_string(), fmt_ms(base.latency_ms)];
+        if let Some(ps) = find(reports, model, "pipeswitch", 1) {
+            row.push(fmt_ms(ps.latency_ms));
+            row.push(fmt_ratio(base.latency_ms / ps.latency_ms));
+        } else {
+            row.push("-".into());
+            row.push("-".into());
+        }
+        for &m in agents {
+            if let Some(pl) = find(reports, model, "pipeload", m) {
+                row.push(fmt_ms(pl.latency_ms));
+                row.push(fmt_ratio(base.latency_ms / pl.latency_ms));
+            } else {
+                row.push("-".into());
+                row.push("-".into());
+            }
+        }
+        t.row(row);
+    }
+    format!(
+        "TABLE II: Performance comparison (speedup = T_baseline / T_other)\n{}",
+        t.render()
+    )
+}
+
+/// Table III: memory footprints (peak bytes + ratio vs baseline).
+pub fn table3(reports: &[RunReport], agents: &[usize]) -> String {
+    let mut headers: Vec<String> =
+        vec!["Model".into(), "Baseline (MB)".into(), "PipeSwitch (MB)".into(), "PS ratio".into()];
+    for m in agents {
+        headers.push(format!("PL {m} LAs (MB)"));
+        headers.push(format!("PL {m} ratio"));
+    }
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hrefs);
+    for model in PAPER_MODELS {
+        let base = match find(reports, model, "baseline", 1) {
+            Some(b) => b,
+            None => continue,
+        };
+        let mut row = vec![model.to_string(), fmt_mb(base.peak_bytes)];
+        if let Some(ps) = find(reports, model, "pipeswitch", 1) {
+            row.push(fmt_mb(ps.peak_bytes));
+            row.push(fmt_ratio(ps.peak_bytes as f64 / base.peak_bytes as f64));
+        } else {
+            row.push("-".into());
+            row.push("-".into());
+        }
+        for &m in agents {
+            if let Some(pl) = find(reports, model, "pipeload", m) {
+                row.push(fmt_mb(pl.peak_bytes));
+                row.push(fmt_ratio(pl.peak_bytes as f64 / base.peak_bytes as f64));
+            } else {
+                row.push("-".into());
+                row.push("-".into());
+            }
+        }
+        t.row(row);
+    }
+    format!(
+        "TABLE III: Memory footprints comparison (ratio = M_other / M_baseline)\n{}",
+        t.render()
+    )
+}
+
+/// Fig 7: latency + optimal #LAs under different memory constraints.
+/// Generative pre-runs are bounded to 2 tokens (trend-preserving).
+pub fn fig7(engine: &Engine, disk_name: &str, fractions: &[f64], max_agents: usize) -> Result<String> {
+    let mut out = format!("Fig 7: evaluation under memory constraints (disk={disk_name})\n");
+    for name in PAPER_MODELS {
+        let stats = profile_one(engine, name, disk_name)?;
+        let p = engine.runtime.profile(name)?;
+        let total = p.total_weight_bytes;
+        let min_feasible = planner::min_feasible_budget(&stats, p.body_kind());
+        let budgets: Vec<u64> = fractions
+            .iter()
+            .map(|f| ((total as f64 * f) as u64).max(min_feasible))
+            .collect();
+        let p_gen = p.is_generative();
+        let sched = planner::plan_with_tokens(
+            engine, &stats, &budgets, max_agents, true,
+            if p_gen { Some(2) } else { None },
+        )?;
+        out.push_str(&format!("\n{name} (model {:.0} MB):\n", total as f64 / MB));
+        let mut t = Table::new(&["budget (MB)", "optimal #LAs", "latency (ms)", "peak (MB)"]);
+        for e in &sched.entries {
+            t.row(vec![
+                fmt_mb(e.budget_bytes),
+                e.agents.to_string(),
+                fmt_ms(e.measured_latency_ms.unwrap_or(e.predicted_latency_ms)),
+                e.measured_peak_bytes.map(fmt_mb).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    out.push_str("\npaper: latency falls and optimal #LAs grows as the constraint relaxes\n");
+    Ok(out)
+}
+
+/// Fig 1b / Obs II: pipeline-stall illustration on the standard pipeline.
+pub fn fig1b(engine: &Engine, disk_name: &str, model: &str) -> Result<String> {
+    let tracer = Tracer::new(true);
+    let cfg = RunConfig {
+        profile: model.into(),
+        mode: Mode::PipeSwitch,
+        disk: disk_name.into(),
+        trace: true,
+        ..RunConfig::default()
+    };
+    let (report, _) = engine.run_with(&cfg, &tracer)?;
+    let idle = tracer.inference_idle_fraction().unwrap_or(0.0);
+    let mut out = format!(
+        "Fig 1b: pipeline stall under the standard pipeline ({model}, disk={disk_name})\n\
+         inference-lane idle fraction: {:.0}%  (paper: 60-80%)\n\
+         end-to-end: {:.1} ms\n\n",
+        idle * 100.0,
+        report.latency_ms
+    );
+    out.push_str(&tracer.ascii_gantt(100));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rep(model: &str, mode: &str, agents: usize, lat: f64, peak: u64) -> RunReport {
+        RunReport {
+            model: model.into(),
+            mode: mode.into(),
+            agents,
+            latency_ms: lat,
+            peak_bytes: peak,
+            mem_stall_ms: 0.0,
+            wait_stall_ms: 0.0,
+            idle_fraction: 0.0,
+            tokens: 0,
+        }
+    }
+
+    #[test]
+    fn table2_computes_speedups() {
+        let reports = vec![
+            rep("bert-large-sim", "baseline", 1, 100.0, 1000),
+            rep("bert-large-sim", "pipeswitch", 1, 50.0, 1100),
+            rep("bert-large-sim", "pipeload", 2, 25.0, 400),
+        ];
+        let s = table2(&reports, &[2]);
+        assert!(s.contains("2.000"), "{s}"); // 100/50
+        assert!(s.contains("4.000"), "{s}"); // 100/25
+    }
+
+    #[test]
+    fn table3_computes_ratios() {
+        let reports = vec![
+            rep("bert-large-sim", "baseline", 1, 100.0, 1000 * 1024 * 1024),
+            rep("bert-large-sim", "pipeload", 2, 25.0, 280 * 1024 * 1024),
+        ];
+        let s = table3(&reports, &[2]);
+        assert!(s.contains("0.280"), "{s}");
+    }
+
+    #[test]
+    fn reports_json_roundtrip() {
+        let reports = vec![rep("m", "pipeload", 4, 12.5, 77)];
+        let v = Value::Arr(reports.iter().map(|r| r.to_json()).collect());
+        let back = parse_reports(&v).unwrap();
+        assert_eq!(back[0].agents, 4);
+        assert_eq!(back[0].peak_bytes, 77);
+    }
+
+    #[test]
+    fn find_matches_pipeload_by_agents() {
+        let reports = vec![
+            rep("m", "pipeload", 2, 1.0, 1),
+            rep("m", "pipeload", 4, 2.0, 2),
+        ];
+        assert_eq!(find(&reports, "m", "pipeload", 4).unwrap().latency_ms, 2.0);
+        assert!(find(&reports, "m", "pipeload", 6).is_none());
+    }
+}

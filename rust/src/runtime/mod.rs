@@ -1,0 +1,234 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute layers.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO **text** is the interchange
+//! format (`HloModuleProto::from_text_file` reassigns instruction ids, which
+//! sidesteps the 64-bit-id protos jax >= 0.5 emits that xla_extension 0.5.1
+//! rejects).  One `PjRtLoadedExecutable` per (profile, layer kind, batch),
+//! compiled lazily and cached for the life of the process.
+//!
+//! THREADING: the `xla` crate's client/executable/literal types wrap
+//! `Rc`/raw pointers and are **not Send**.  The Runtime therefore lives on
+//! the inference thread only; Loading Agents ship plain `weights::Shard`
+//! byte buffers over channels and weight literals are built here, on the
+//! compute thread, right before execution.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{DType, EntrySpec, Manifest, Profile, TensorSpec};
+use crate::weights::{Shard, Tensor};
+
+/// PJRT CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, executables: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn profile(&self, name: &str) -> Result<&Profile> {
+        self.manifest.profile(name)
+    }
+
+    /// Compile (or fetch cached) the executable for one HLO entry.
+    pub fn executable(
+        &self,
+        profile: &Profile,
+        entry: &EntrySpec,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{}/{}", profile.name, entry.key);
+        if let Some(e) = self.executables.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(entry);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", entry.key))?;
+        let exe = Rc::new(exe);
+        self.executables.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile every entry a profile needs (engine warmup; keeps
+    /// compilation off the measured path, like the paper's pre-run).
+    pub fn prepare(&self, profile: &Profile) -> Result<usize> {
+        let mut n = 0;
+        for entry in profile.entries.values() {
+            self.executable(profile, entry)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Execute one layer: activation buffers first, then the stage's
+    /// weights (uploaded here, owned here, freed on return) in manifest
+    /// order.  Returns the single output buffer, which feeds the next
+    /// layer's call directly — activations never round-trip through host
+    /// literals on the hot path.
+    ///
+    /// NOTE: this deliberately uses `execute_b` with self-owned input
+    /// buffers.  The `xla` crate's literal-based `execute` *leaks every
+    /// input buffer* (xla_rs.cc `buffer.release()` without a deleter),
+    /// which with per-layer weight inputs leaks the whole model per pass —
+    /// see EXPERIMENTS.md §Perf.
+    pub fn execute_entry(
+        &self,
+        profile: &Profile,
+        entry: &EntrySpec,
+        activations: &[&xla::PjRtBuffer],
+        shard: &Shard,
+    ) -> Result<xla::PjRtBuffer> {
+        let exe = self.executable(profile, entry)?;
+        if activations.len() != entry.activations.len() {
+            bail!(
+                "{}: expected {} activation(s), got {}",
+                entry.key,
+                entry.activations.len(),
+                activations.len()
+            );
+        }
+        let weight_bufs: Vec<xla::PjRtBuffer> = shard
+            .tensors
+            .iter()
+            .map(|t| self.buffer_from_tensor(t))
+            .collect::<Result<_>>()?;
+        let mut inputs: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(activations.len() + weight_bufs.len());
+        inputs.extend_from_slice(activations);
+        inputs.extend(weight_bufs.iter());
+        let mut out = exe.execute_b::<&xla::PjRtBuffer>(&inputs)?;
+        // return_tuple=False in aot.py: exactly one output array buffer.
+        if out.is_empty() || out[0].is_empty() {
+            bail!("{}: executable produced no outputs", entry.key);
+        }
+        Ok(out[0].swap_remove(0))
+    }
+
+    /// Upload a shard tensor to a device buffer.
+    ///
+    /// Uses the typed `buffer_from_host_buffer`, the only upload wrapper in
+    /// the crate that is BOTH type-correct (it passes `PrimitiveType` over
+    /// the C ABI; `buffer_from_host_raw_bytes` passes `ElementType`
+    /// discriminants, turning F32 into F16) AND synchronous
+    /// (`kImmutableOnlyDuringCall` copies before returning;
+    /// `buffer_from_host_literal` transfers async and segfaults if the
+    /// literal is dropped before the copy lands).  The typed slice costs
+    /// one aligned host copy per tensor.
+    pub fn buffer_from_tensor(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        match t.dtype {
+            DType::F32 => {
+                Ok(self.client.buffer_from_host_buffer(&t.as_f32()?, &t.shape, None)?)
+            }
+            DType::I32 => {
+                Ok(self.client.buffer_from_host_buffer(&t.as_i32()?, &t.shape, None)?)
+            }
+            other => bail!("unsupported upload dtype {other:?}"),
+        }
+    }
+
+    /// Upload typed host values to a device buffer.
+    pub fn buffer_f32(&self, values: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(values, shape, None)?)
+    }
+
+    pub fn buffer_i32(&self, values: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(values, shape, None)?)
+    }
+
+    /// Pull a device buffer back to host f32s (final outputs only).
+    pub fn buffer_to_f32(&self, b: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        Ok(b.to_literal_sync()?.to_vec::<f32>()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal construction / extraction helpers
+// ---------------------------------------------------------------------------
+
+/// Build an XLA literal from a shard tensor's raw little-endian bytes.
+pub fn literal_from_tensor(t: &Tensor) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(t.dtype.xla(), &t.shape, &t.data)?)
+}
+
+/// f32 literal from values + shape.
+pub fn literal_f32(shape: &[usize], values: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != values.len() {
+        bail!("shape {:?} needs {} values, got {}", shape, n, values.len());
+    }
+    let bytes: Vec<u8> = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, &bytes)?)
+}
+
+/// i32 literal from values + shape.
+pub fn literal_i32(shape: &[usize], values: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != values.len() {
+        bail!("shape {:?} needs {} values, got {}", shape, n, values.len());
+    }
+    let bytes: Vec<u8> = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+    Ok(xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, &bytes)?)
+}
+
+/// Pull an f32 literal back into a Vec.
+pub fn literal_to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Build the input literal described by an activation spec from raw values.
+pub fn literal_for_spec(spec: &TensorSpec, f32s: Option<&[f32]>, i32s: Option<&[i32]>) -> Result<xla::Literal> {
+    match spec.dtype {
+        DType::F32 => literal_f32(&spec.shape, f32s.context("f32 input required")?),
+        DType::I32 => literal_i32(&spec.shape, i32s.context("i32 input required")?),
+        other => bail!("unsupported input dtype {other:?}"),
+    }
+}
+
+/// Total bytes of an activation spec (for the memory accountant).
+pub fn spec_bytes(spec: &TensorSpec) -> u64 {
+    spec.num_bytes() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_f32_roundtrip() {
+        let l = literal_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(literal_to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[2, 2], &[1.0]).is_err());
+        assert!(literal_i32(&[3], &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn literal_from_tensor_preserves_bytes() {
+        let t = Tensor {
+            name: "w".into(),
+            dtype: DType::F32,
+            shape: vec![4],
+            data: [1f32, -2.0, 3.5, 0.0].iter().flat_map(|v| v.to_le_bytes()).collect(),
+        };
+        let l = literal_from_tensor(&t).unwrap();
+        assert_eq!(literal_to_f32(&l).unwrap(), vec![1.0, -2.0, 3.5, 0.0]);
+    }
+}

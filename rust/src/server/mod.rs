@@ -1,0 +1,189 @@
+//! Serving loop: batched request execution with SLO reporting.
+//!
+//! The end-to-end driver for the paper's §V-C serving claim ("all results
+//! meeting SLO expectations").  A workload generator thread produces
+//! requests with Poisson arrivals into a queue; the serving loop batches
+//! them (size- and deadline-bounded) and executes each batch as one engine
+//! pass in the configured mode.  The engine (and its non-Send PJRT
+//! runtime) stays on the caller's thread — a TCP front-end would feed the
+//! same queue without touching this loop.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{Mode, RunConfig};
+use crate::engine::Engine;
+use crate::metrics::{check_slo, LatencyRecorder, SloReport};
+use crate::util::rng::Rng;
+
+/// Serving workload + policy.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub run: RunConfig,
+    /// total requests to serve
+    pub num_requests: usize,
+    /// mean arrival rate (requests/sec); 0 = closed loop (back to back)
+    pub arrival_rps: f64,
+    /// max requests folded into one batch (capped by AOT batch sizes)
+    pub max_batch: usize,
+    /// how long the batcher waits to fill a batch
+    pub batch_window: Duration,
+    /// p95 latency target
+    pub slo_ms: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            run: RunConfig::default(),
+            num_requests: 16,
+            arrival_rps: 0.0,
+            max_batch: 4,
+            batch_window: Duration::from_millis(20),
+            slo_ms: 1000.0,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Request {
+    id: usize,
+    enqueued: Instant,
+}
+
+/// Summary of a serving session.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub served: usize,
+    pub batches: usize,
+    pub latency: LatencyRecorder,
+    pub throughput_rps: f64,
+    pub peak_bytes: u64,
+    pub slo: SloReport,
+    pub mean_batch_size: f64,
+}
+
+/// Pick the smallest AOT-compiled batch size that fits `n` requests (or
+/// the largest available if none fit).
+pub fn pick_batch(available: &[usize], n: usize) -> usize {
+    let mut sorted: Vec<usize> = available.to_vec();
+    sorted.sort_unstable();
+    for &b in &sorted {
+        if b >= n {
+            return b;
+        }
+    }
+    sorted.last().copied().unwrap_or(1)
+}
+
+/// Run the serving session; engine passes happen on this thread.
+pub fn serve(engine: &Engine, cfg: &ServeConfig) -> Result<ServeSummary> {
+    let profile = engine.runtime.profile(&cfg.run.profile)?;
+    let batches_avail = profile.batches.clone();
+    let (tx, rx) = mpsc::channel::<Request>();
+    let num = cfg.num_requests;
+    let rps = cfg.arrival_rps;
+    let seed = cfg.run.seed;
+
+    // workload generator (open loop with Poisson arrivals, or closed loop)
+    let producer = std::thread::spawn(move || {
+        let mut rng = Rng::new(seed ^ 0x5e7e);
+        for id in 0..num {
+            if rps > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(rng.exp(1.0 / rps)));
+            }
+            if tx.send(Request { id, enqueued: Instant::now() }).is_err() {
+                return;
+            }
+        }
+    });
+
+    let mut latency = LatencyRecorder::new();
+    let mut served = 0usize;
+    let mut batches = 0usize;
+    let mut peak = 0u64;
+    let mut batch_sizes = 0usize;
+    let t_start = Instant::now();
+
+    while served < cfg.num_requests {
+        // block for the first request, then fill the batch within the window
+        let first = rx.recv().expect("producer ended early");
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.batch_window;
+        let cap = cfg.max_batch.min(batches_avail.iter().copied().max().unwrap_or(1));
+        while batch.len() < cap {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+        let b = pick_batch(&batches_avail, batch.len());
+        let mut run_cfg = cfg.run.clone();
+        run_cfg.batch = b;
+        run_cfg.seed = cfg.run.seed.wrapping_add(batches as u64);
+        let (report, _) = engine.run(&run_cfg)?;
+        peak = peak.max(report.peak_bytes);
+        batches += 1;
+        batch_sizes += batch.len();
+        for r in &batch {
+            latency.record(r.enqueued.elapsed());
+            let _ = r.id;
+        }
+        served += batch.len();
+    }
+    producer.join().ok();
+
+    let wall = t_start.elapsed().as_secs_f64();
+    let slo = check_slo(&latency, cfg.slo_ms);
+    Ok(ServeSummary {
+        served,
+        batches,
+        throughput_rps: served as f64 / wall.max(1e-9),
+        peak_bytes: peak,
+        slo,
+        mean_batch_size: batch_sizes as f64 / batches.max(1) as f64,
+        latency,
+    })
+}
+
+/// Convenience: serving defaults for the E2E example (PIPELOAD on the
+/// BERT sim profile with a batch-4 entry).
+pub fn e2e_default(profile: &str, agents: usize, budget: Option<u64>) -> ServeConfig {
+    ServeConfig {
+        run: RunConfig {
+            profile: profile.into(),
+            mode: Mode::PipeLoad,
+            agents,
+            budget,
+            ..RunConfig::default()
+        },
+        ..ServeConfig::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_batch_smallest_fitting() {
+        assert_eq!(pick_batch(&[1, 4], 1), 1);
+        assert_eq!(pick_batch(&[1, 4], 2), 4);
+        assert_eq!(pick_batch(&[1, 4], 4), 4);
+        assert_eq!(pick_batch(&[1, 4], 9), 4); // overflow -> largest
+        assert_eq!(pick_batch(&[], 3), 1);
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = ServeConfig::default();
+        assert!(c.num_requests > 0);
+        assert!(c.slo_ms > 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! The PIPELOAD signalling vocabulary (paper Fig. 4).
+//!
+//! Three signal families connect the agents:
+//!
+//! * `S_comp(k)` — Loading Agent -> Inference Agent: layer k is resident
+//!   and ready for compute (carried on an mpsc channel with the payload).
+//! * `S_dest(k)` — Inference Agent -> Daemon Agent: layer k has been
+//!   computed; destroy its weights.
+//! * `S_stop`   — Daemon Agent -> all Loading Agents: pause loading until
+//!   memory frees up.  Realized as the blocking gate in
+//!   [`crate::memory::MemoryAccountant::acquire`] (acquire-before-load is
+//!   exactly "stop when usage is about to exceed the constraint").
+//!
+//! `SignalLog` records every signal with a timestamp so tests can assert
+//! protocol properties (ordering, pairing) and traces can render them.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One signal instance (for the log; payloads travel on channels).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Signal {
+    /// computation ready: layer `stage` loaded by agent `agent`
+    Comp { stage: usize, agent: usize },
+    /// memory destruction: layer `stage` computed, weights can go
+    Dest { stage: usize },
+    /// loading stop: some agent blocked on the memory gate for `ms`
+    Stop { agent: usize, ms: f64 },
+    /// pipeline-level completion/abort markers
+    Done,
+    Abort { reason: String },
+}
+
+/// Append-only, thread-safe signal log with relative timestamps.
+#[derive(Debug, Clone)]
+pub struct SignalLog {
+    start: Instant,
+    entries: Arc<Mutex<Vec<(f64, Signal)>>>,
+}
+
+impl Default for SignalLog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SignalLog {
+    pub fn new() -> SignalLog {
+        SignalLog { start: Instant::now(), entries: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    pub fn emit(&self, s: Signal) {
+        let t = self.start.elapsed().as_secs_f64() * 1000.0;
+        self.entries.lock().unwrap().push((t, s));
+    }
+
+    pub fn snapshot(&self) -> Vec<(f64, Signal)> {
+        self.entries.lock().unwrap().clone()
+    }
+
+    /// All stages that got a Comp signal, in emission order.
+    pub fn comp_order(&self) -> Vec<usize> {
+        self.snapshot()
+            .iter()
+            .filter_map(|(_, s)| match s {
+                Signal::Comp { stage, .. } => Some(*stage),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// All stages that got a Dest signal, in emission order.
+    pub fn dest_order(&self) -> Vec<usize> {
+        self.snapshot()
+            .iter()
+            .filter_map(|(_, s)| match s {
+                Signal::Dest { stage } => Some(*stage),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Protocol check: every Dest(k) must come after Comp(k); used by tests.
+    pub fn verify_dest_after_comp(&self) -> Result<(), String> {
+        let log = self.snapshot();
+        for (i, (_, s)) in log.iter().enumerate() {
+            if let Signal::Dest { stage } = s {
+                let comp_before = log[..i]
+                    .iter()
+                    .any(|(_, x)| matches!(x, Signal::Comp { stage: c, .. } if c == stage));
+                if !comp_before {
+                    return Err(format!("Dest({stage}) emitted before Comp({stage})"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn stop_count(&self) -> usize {
+        self.snapshot().iter().filter(|(_, s)| matches!(s, Signal::Stop { .. })).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logs_in_order_with_timestamps() {
+        let log = SignalLog::new();
+        log.emit(Signal::Comp { stage: 0, agent: 1 });
+        log.emit(Signal::Dest { stage: 0 });
+        log.emit(Signal::Done);
+        let snap = log.snapshot();
+        assert_eq!(snap.len(), 3);
+        assert!(snap[0].0 <= snap[1].0 && snap[1].0 <= snap[2].0);
+        assert_eq!(log.comp_order(), vec![0]);
+        assert_eq!(log.dest_order(), vec![0]);
+    }
+
+    #[test]
+    fn protocol_violation_detected() {
+        let log = SignalLog::new();
+        log.emit(Signal::Dest { stage: 3 });
+        assert!(log.verify_dest_after_comp().is_err());
+
+        let ok = SignalLog::new();
+        ok.emit(Signal::Comp { stage: 3, agent: 0 });
+        ok.emit(Signal::Dest { stage: 3 });
+        assert!(ok.verify_dest_after_comp().is_ok());
+    }
+
+    #[test]
+    fn stop_counting() {
+        let log = SignalLog::new();
+        log.emit(Signal::Stop { agent: 0, ms: 5.0 });
+        log.emit(Signal::Stop { agent: 2, ms: 1.0 });
+        assert_eq!(log.stop_count(), 2);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let log = SignalLog::new();
+        let mut hs = Vec::new();
+        for a in 0..4 {
+            let l = log.clone();
+            hs.push(std::thread::spawn(move || {
+                for s in 0..10 {
+                    l.emit(Signal::Comp { stage: s, agent: a });
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(log.snapshot().len(), 40);
+    }
+}

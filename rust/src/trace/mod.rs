@@ -1,0 +1,274 @@
+//! Execution trace: spans per agent, stall analysis, ASCII Gantt.
+//!
+//! Feeds two paper artifacts: the Fig-1b pipeline-stall illustration (the
+//! standard pipeline leaves compute idle 60–80% of the time — Obs II) and
+//! debugging output for the PIPELOAD schedule itself
+//! (`hermes report --figure 1b`, `hermes run --trace`).
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Value;
+
+/// Which worker produced a span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lane {
+    Loader(usize),
+    Inference,
+    Daemon,
+    Driver,
+}
+
+impl Lane {
+    pub fn label(&self) -> String {
+        match self {
+            Lane::Loader(i) => format!("LA{}", i + 1),
+            Lane::Inference => "IA".into(),
+            Lane::Daemon => "DA".into(),
+            Lane::Driver => "drv".into(),
+        }
+    }
+}
+
+/// What the span was doing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Load,
+    Compute,
+    Destroy,
+    /// blocked on the memory gate (S^stop)
+    StallMem,
+    /// inference waiting for the next layer (pipeline stall, Fig 1b)
+    StallWait,
+}
+
+impl Kind {
+    fn glyph(&self) -> char {
+        match self {
+            Kind::Load => 'L',
+            Kind::Compute => '#',
+            Kind::Destroy => 'd',
+            Kind::StallMem => 's',
+            Kind::StallWait => '.',
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            Kind::Load => "load",
+            Kind::Compute => "compute",
+            Kind::Destroy => "destroy",
+            Kind::StallMem => "stall_mem",
+            Kind::StallWait => "stall_wait",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub lane: Lane,
+    pub kind: Kind,
+    pub stage: Option<usize>,
+    /// ms since trace start
+    pub t0: f64,
+    pub t1: f64,
+}
+
+/// Thread-safe trace recorder; clone shares the buffer.
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    start: Instant,
+    spans: Arc<Mutex<Vec<Span>>>,
+    enabled: bool,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new(true)
+    }
+}
+
+impl Tracer {
+    pub fn new(enabled: bool) -> Tracer {
+        Tracer { start: Instant::now(), spans: Arc::new(Mutex::new(Vec::new())), enabled }
+    }
+
+    pub fn disabled() -> Tracer {
+        Tracer::new(false)
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1000.0
+    }
+
+    /// Record a span with explicit timestamps (ms since trace start).
+    pub fn record(&self, lane: Lane, kind: Kind, stage: Option<usize>, t0: f64, t1: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.spans.lock().unwrap().push(Span { lane, kind, stage, t0, t1 });
+    }
+
+    /// Time a closure and record it.
+    pub fn span<R>(&self, lane: Lane, kind: Kind, stage: Option<usize>, f: impl FnOnce() -> R) -> R {
+        let t0 = self.now_ms();
+        let r = f();
+        self.record(lane, kind, stage, t0, self.now_ms());
+        r
+    }
+
+    pub fn snapshot(&self) -> Vec<Span> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    /// Fraction of the busy window the inference lane spent NOT computing
+    /// (the paper's "60–80% idle" stall metric, Obs II).
+    pub fn inference_idle_fraction(&self) -> Option<f64> {
+        let spans = self.snapshot();
+        let inf: Vec<&Span> = spans.iter().filter(|s| s.lane == Lane::Inference).collect();
+        if inf.is_empty() {
+            return None;
+        }
+        let t_first = inf.iter().map(|s| s.t0).fold(f64::INFINITY, f64::min);
+        let t_last = inf.iter().map(|s| s.t1).fold(0.0, f64::max);
+        let window = t_last - t_first;
+        if window <= 0.0 {
+            return None;
+        }
+        let busy: f64 = inf
+            .iter()
+            .filter(|s| s.kind == Kind::Compute)
+            .map(|s| s.t1 - s.t0)
+            .sum();
+        Some((1.0 - busy / window).clamp(0.0, 1.0))
+    }
+
+    /// Total stall time per kind across lanes.
+    pub fn stall_ms(&self, kind: Kind) -> f64 {
+        self.snapshot()
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.t1 - s.t0)
+            .sum()
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::Arr(
+            self.snapshot()
+                .iter()
+                .map(|s| {
+                    let mut o = Value::obj()
+                        .set("lane", s.lane.label())
+                        .set("kind", s.kind.name())
+                        .set("t0_ms", s.t0)
+                        .set("t1_ms", s.t1);
+                    if let Some(stage) = s.stage {
+                        o = o.set("stage", stage);
+                    }
+                    o
+                })
+                .collect(),
+        )
+    }
+
+    /// ASCII Gantt chart: one row per lane, `width` columns over the trace
+    /// window.  `L` load, `#` compute, `d` destroy, `s` memory stall,
+    /// `.` waiting for a layer.
+    pub fn ascii_gantt(&self, width: usize) -> String {
+        let spans = self.snapshot();
+        if spans.is_empty() {
+            return "(empty trace)\n".into();
+        }
+        let t_max = spans.iter().map(|s| s.t1).fold(0.0, f64::max).max(1e-9);
+        let mut lanes: Vec<Lane> = Vec::new();
+        for s in &spans {
+            if !lanes.contains(&s.lane) {
+                lanes.push(s.lane);
+            }
+        }
+        lanes.sort_by_key(|l| match l {
+            Lane::Driver => (0, 0),
+            Lane::Loader(i) => (1, *i),
+            Lane::Inference => (2, 0),
+            Lane::Daemon => (3, 0),
+        });
+        let mut out = String::new();
+        out.push_str(&format!("trace window: {:.1} ms, {} spans\n", t_max, spans.len()));
+        for lane in lanes {
+            let mut row = vec![' '; width];
+            for s in spans.iter().filter(|s| s.lane == lane) {
+                let a = ((s.t0 / t_max) * width as f64) as usize;
+                let b = (((s.t1 / t_max) * width as f64).ceil() as usize).min(width);
+                for c in row.iter_mut().take(b.max(a + 1)).skip(a.min(width - 1)) {
+                    *c = s.kind.glyph();
+                }
+            }
+            out.push_str(&format!("{:>4} |{}|\n", lane.label(), row.iter().collect::<String>()));
+        }
+        out.push_str("      L=load  #=compute  d=destroy  s=mem-stall  .=wait-stall\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_fraction_computation() {
+        let t = Tracer::new(true);
+        // window 0..100, compute 20..40 => idle 80%
+        t.record(Lane::Inference, Kind::StallWait, None, 0.0, 20.0);
+        t.record(Lane::Inference, Kind::Compute, Some(0), 20.0, 40.0);
+        t.record(Lane::Inference, Kind::StallWait, None, 40.0, 100.0);
+        let idle = t.inference_idle_fraction().unwrap();
+        assert!((idle - 0.8).abs() < 1e-9, "{idle}");
+    }
+
+    #[test]
+    fn no_inference_spans_none() {
+        let t = Tracer::new(true);
+        t.record(Lane::Loader(0), Kind::Load, Some(0), 0.0, 10.0);
+        assert!(t.inference_idle_fraction().is_none());
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        t.record(Lane::Inference, Kind::Compute, None, 0.0, 1.0);
+        assert!(t.snapshot().is_empty());
+    }
+
+    #[test]
+    fn gantt_renders_lanes() {
+        let t = Tracer::new(true);
+        t.record(Lane::Loader(0), Kind::Load, Some(0), 0.0, 50.0);
+        t.record(Lane::Loader(1), Kind::Load, Some(1), 0.0, 60.0);
+        t.record(Lane::Inference, Kind::Compute, Some(0), 50.0, 55.0);
+        let g = t.ascii_gantt(40);
+        assert!(g.contains("LA1"), "{g}");
+        assert!(g.contains("LA2"));
+        assert!(g.contains("IA"));
+        assert!(g.contains('L'));
+        assert!(g.contains('#'));
+    }
+
+    #[test]
+    fn stall_totals() {
+        let t = Tracer::new(true);
+        t.record(Lane::Loader(0), Kind::StallMem, None, 0.0, 5.0);
+        t.record(Lane::Loader(1), Kind::StallMem, None, 2.0, 4.0);
+        assert!((t.stall_ms(Kind::StallMem) - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let t = Tracer::new(true);
+        t.record(Lane::Daemon, Kind::Destroy, Some(2), 1.0, 2.0);
+        let v = t.to_json();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("lane").unwrap().as_str().unwrap(), "DA");
+        assert_eq!(arr[0].get("stage").unwrap().as_usize().unwrap(), 2);
+    }
+}

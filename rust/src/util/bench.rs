@@ -1,0 +1,182 @@
+//! Micro-benchmark harness (no `criterion` in the offline crate set).
+//!
+//! Drives the `cargo bench` targets (declared with `harness = false`):
+//! warmup, fixed-duration or fixed-iteration sampling, and robust stats
+//! (median, mean, p95, stddev, min/max).  Timings use `Instant`; results
+//! can be dumped as JSON for the EXPERIMENTS.md perf log.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(name: &str, mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| ns[(((n - 1) as f64) * p) as usize];
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: pct(0.5),
+            p95_ns: pct(0.95),
+            stddev_ns: var.sqrt(),
+            min_ns: ns[0],
+            max_ns: ns[n - 1],
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("name", self.name.clone())
+            .set("iters", self.iters)
+            .set("mean_ns", self.mean_ns)
+            .set("median_ns", self.median_ns)
+            .set("p95_ns", self.p95_ns)
+            .set("stddev_ns", self.stddev_ns)
+            .set("min_ns", self.min_ns)
+            .set("max_ns", self.max_ns)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // HERMES_BENCH_FAST=1 shrinks budgets so CI smoke runs stay quick.
+        let fast = std::env::var("HERMES_BENCH_FAST").is_ok();
+        Bencher {
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            target: if fast { Duration::from_millis(300) } else { Duration::from_secs(2) },
+            min_iters: if fast { 3 } else { 10 },
+            max_iters: if fast { 50 } else { 10_000 },
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        Bencher::default()
+    }
+
+    /// Benchmark `f`, printing a criterion-style line.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Stats {
+        // warmup
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // estimate per-iter cost from one timed call
+        let t = Instant::now();
+        std::hint::black_box(f());
+        let est = t.elapsed().max(Duration::from_nanos(50));
+        let planned = ((self.target.as_nanos() / est.as_nanos().max(1)) as usize)
+            .clamp(self.min_iters, self.max_iters);
+        let mut samples = Vec::with_capacity(planned);
+        for _ in 0..planned {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let s = Stats::from_samples(name, samples);
+        println!(
+            "{:<44} median {:>10}  mean {:>10}  p95 {:>10}  ({} iters)",
+            s.name,
+            fmt_ns(s.median_ns),
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.p95_ns),
+            s.iters
+        );
+        self.results.push(s);
+        self.results.last().unwrap()
+    }
+
+    /// One-shot measurement for expensive end-to-end runs (no warmup loop).
+    pub fn once<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> (R, Duration) {
+        let t = Instant::now();
+        let r = f();
+        let d = t.elapsed();
+        println!("{:<44} once   {:>10}", name, fmt_ns(d.as_nanos() as f64));
+        self.results.push(Stats::from_samples(name, vec![d.as_nanos() as f64]));
+        (r, d)
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Dump all results as a JSON array (for EXPERIMENTS.md §Perf logs).
+    pub fn dump_json(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let v = Value::Arr(self.results.iter().map(|s| s.to_json()).collect());
+        v.to_file(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples("t", vec![10.0, 20.0, 30.0, 40.0, 100.0]);
+        assert_eq!(s.min_ns, 10.0);
+        assert_eq!(s.max_ns, 100.0);
+        assert_eq!(s.median_ns, 30.0);
+        assert!(s.mean_ns > s.median_ns); // skewed sample
+    }
+
+    #[test]
+    fn bench_runs_and_records() {
+        std::env::set_var("HERMES_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let mut x = 0u64;
+        b.bench("noop", || {
+            x = x.wrapping_add(1);
+            x
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].iters >= 3);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

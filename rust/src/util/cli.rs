@@ -1,0 +1,174 @@
+//! Tiny CLI argument parser (no `clap` in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Each subcommand declares its options up-front so `--help` output and
+//! unknown-flag errors are accurate.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Declared option for help text + validation.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+pub struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` against the declared options.
+    pub fn parse(argv: &[String], opts: &[Opt]) -> Result<Args> {
+        let decl: HashMap<&str, &Opt> = opts.iter().map(|o| (o.name, o)).collect();
+        let mut values = HashMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let Some(o) = decl.get(name) else {
+                    bail!("unknown option --{name} (try --help)");
+                };
+                if o.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    values.insert(name.to_string(), v);
+                } else {
+                    if inline.is_some() {
+                        bail!("--{name} does not take a value");
+                    }
+                    flags.push(name.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // apply defaults
+        for o in opts {
+            if let Some(d) = o.default {
+                values.entry(o.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow::anyhow!("missing required --{name}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        Ok(self.req(name)?.parse()?)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        Ok(self.req(name)?.parse()?)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        Ok(self.req(name)?.parse()?)
+    }
+
+    /// Comma-separated list value.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|s| {
+                s.split(',')
+                    .map(|x| x.trim().to_string())
+                    .filter(|x| !x.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+}
+
+pub fn render_help(cmd: &str, summary: &str, opts: &[Opt]) -> String {
+    let mut s = format!("hermes {cmd} — {summary}\n\noptions:\n");
+    for o in opts {
+        let val = if o.takes_value { " <value>" } else { "" };
+        let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("  --{}{}\n      {}{}\n", o.name, val, o.help, def));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> Vec<Opt> {
+        vec![
+            Opt { name: "model", takes_value: true, default: None, help: "" },
+            Opt { name: "agents", takes_value: true, default: Some("4"), help: "" },
+            Opt { name: "verbose", takes_value: false, default: None, help: "" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_kv_and_flags() {
+        let a = Args::parse(&sv(&["--model", "bert", "--verbose", "pos1"]), &opts()).unwrap();
+        assert_eq!(a.get("model"), Some("bert"));
+        assert_eq!(a.usize("agents").unwrap(), 4); // default
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn parse_eq_form() {
+        let a = Args::parse(&sv(&["--model=vit", "--agents=6"]), &opts()).unwrap();
+        assert_eq!(a.get("model"), Some("vit"));
+        assert_eq!(a.usize("agents").unwrap(), 6);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(Args::parse(&sv(&["--nope"]), &opts()).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--model"]), &opts()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(Args::parse(&sv(&["--verbose=1"]), &opts()).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let o = vec![Opt { name: "budgets", takes_value: true, default: None, help: "" }];
+        let a = Args::parse(&sv(&["--budgets", "100, 200,300"]), &o).unwrap();
+        assert_eq!(a.list("budgets"), vec!["100", "200", "300"]);
+    }
+}

@@ -1,0 +1,58 @@
+//! Hand-rolled substrate utilities.
+//!
+//! The offline crate set for this image contains only the `xla` crate's
+//! dependency closure (no serde/clap/criterion/proptest/rand/tokio), so the
+//! roles those crates usually play are implemented here and tested like any
+//! other module. See DESIGN.md section 5.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Format a byte count with binary units ("12.3 MiB").
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = b as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u < UNITS.len() - 1 {
+        x /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{x:.1} {}", UNITS[u])
+    }
+}
+
+/// Format milliseconds compactly ("1.23 s" / "45.6 ms").
+pub fn human_ms(ms: f64) -> String {
+    if ms >= 1000.0 {
+        format!("{:.2} s", ms / 1000.0)
+    } else if ms >= 1.0 {
+        format!("{ms:.1} ms")
+    } else {
+        format!("{:.0} µs", ms * 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn ms_formatting() {
+        assert_eq!(human_ms(0.5), "500 µs");
+        assert_eq!(human_ms(12.34), "12.3 ms");
+        assert_eq!(human_ms(1500.0), "1.50 s");
+    }
+}

@@ -1,0 +1,161 @@
+//! Property-testing mini-framework (no `proptest` in the offline set).
+//!
+//! Runs a property over many seeded random cases; on failure it reports the
+//! seed and case number so the exact case replays deterministically, then
+//! attempts a bounded "shrink" by re-running with smaller size hints.
+//!
+//! Used by `rust/tests/prop_invariants.rs` for the coordinator invariants
+//! (layer-assignment partition, inference ordering, accountant bounds,
+//! planner monotonicity, shard round-trips).
+
+use crate::util::rng::Rng;
+
+/// Controls for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// max "size" hint passed to generators (shrink retries lower it)
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // HERMES_PROP_SEED / HERMES_PROP_CASES override for replay.
+        let seed = std::env::var("HERMES_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        let cases = std::env::var("HERMES_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Config { cases, seed, max_size: 64 }
+    }
+}
+
+/// A generated case: the rng to draw from plus a size hint.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.usize(lo, hi.max(lo + 1))
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range(lo, hi.max(lo + 1))
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool()
+    }
+
+    /// A vec with size-hint-bounded length.
+    pub fn vec<T>(&mut self, min_len: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        let len = self.usize(min_len, min_len + self.size.max(1));
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. Panics with replay info on the
+/// first failing case (after trying smaller sizes to find a simpler one).
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut failures: Option<(usize, usize, String)> = None;
+    'outer: for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let mut g = Gen { rng: &mut rng, size: cfg.max_size };
+        if let Err(msg) = prop(&mut g) {
+            // bounded shrink: retry the same seed with smaller size hints
+            for size in [1usize, 2, 4, 8, 16, 32] {
+                if size >= cfg.max_size {
+                    break;
+                }
+                let mut rng = Rng::new(case_seed);
+                let mut g = Gen { rng: &mut rng, size };
+                if let Err(small_msg) = prop(&mut g) {
+                    failures = Some((case, size, small_msg));
+                    break 'outer;
+                }
+            }
+            failures = Some((case, cfg.max_size, msg));
+            break 'outer;
+        }
+    }
+    if let Some((case, size, msg)) = failures {
+        panic!(
+            "property '{name}' failed (case {case}, size {size}, replay with \
+             HERMES_PROP_SEED={} HERMES_PROP_CASES={}):\n  {msg}",
+            cfg.seed,
+            case + 1
+        );
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", Config { cases: 10, seed: 1, max_size: 8 }, |g| {
+            n += 1;
+            let x = g.usize(0, 100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_replay() {
+        check("fails", Config { cases: 10, seed: 2, max_size: 8 }, |g| {
+            let v = g.vec(0, |g| g.usize(0, 10));
+            if v.len() < 3 {
+                Ok(())
+            } else {
+                Err(format!("len {}", v.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mut first: Vec<usize> = Vec::new();
+        check("record", Config { cases: 5, seed: 3, max_size: 8 }, |g| {
+            first.push(g.usize(0, 1000));
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        check("record", Config { cases: 5, seed: 3, max_size: 8 }, |g| {
+            second.push(g.usize(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

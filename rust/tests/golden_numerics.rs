@@ -1,0 +1,176 @@
+//! Cross-language golden numerics: the Rust per-stage chain must equal the
+//! python full-model forward on identical weights.
+//!
+//! `python -m compile.aot` writes, for each tiny profile:
+//!   artifacts/golden/<p>/weights/stage_*.hws   (python-written shards)
+//!   artifacts/golden/<p>/input.bin             (ids i32 / patches f32)
+//!   artifacts/golden/<p>/expected.bin          (jax full_forward output)
+//!   artifacts/golden/<p>/golden.json           (shapes + tolerances)
+//!
+//! This single test exercises L1 (the Pallas attention kernel inside the
+//! HLO), L2 (the per-layer jax functions), the .hws interop, and the L3
+//! execution chain at once.  Run `make artifacts` first.
+
+use std::path::PathBuf;
+
+use hermes::baseline::{forward_resident, ResidentModel};
+use hermes::config::Paths;
+use hermes::memory::MemoryAccountant;
+use hermes::pipeload::{run_pipeline, ExecCtx, ModelInput, PipelineOpts};
+
+use hermes::util::json::Value;
+use hermes::weights::read_shard;
+
+const GOLDEN_PROFILES: [&str; 4] = ["tiny-bert", "tiny-gpt", "tiny-vit", "tiny-gptj"];
+
+struct Golden {
+    dir: PathBuf,
+    input_i32: Option<Vec<i32>>,
+    input_f32: Option<Vec<f32>>,
+    expected: Vec<f32>,
+    rtol: f64,
+    atol: f64,
+}
+
+fn load_golden(paths: &Paths, profile: &str) -> Golden {
+    let dir = paths.artifacts.join("golden").join(profile);
+    let meta = Value::from_file(&dir.join("golden.json"))
+        .unwrap_or_else(|e| panic!("missing golden for {profile} — run `make artifacts` ({e})"));
+    let in_dtype = meta.req("input").unwrap().req("dtype").unwrap().as_str().unwrap().to_string();
+    let raw = std::fs::read(dir.join("input.bin")).unwrap();
+    let (input_i32, input_f32) = if in_dtype == "i32" {
+        (Some(raw.chunks_exact(4).map(|b| i32::from_le_bytes(b.try_into().unwrap())).collect()), None)
+    } else {
+        (None, Some(raw.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())).collect()))
+    };
+    let expected = std::fs::read(dir.join("expected.bin"))
+        .unwrap()
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    Golden {
+        dir,
+        input_i32,
+        input_f32,
+        expected,
+        rtol: meta.req("rtol").unwrap().as_f64().unwrap(),
+        atol: meta.req("atol").unwrap().as_f64().unwrap(),
+    }
+}
+
+fn assert_allclose(got: &[f32], want: &[f32], rtol: f64, atol: f64, label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: length mismatch");
+    let mut worst = 0.0f64;
+    let mut worst_i = 0;
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let err = (g as f64 - w as f64).abs();
+        let bound = atol + rtol * (w as f64).abs();
+        if err - bound > worst {
+            worst = err - bound;
+            worst_i = i;
+        }
+    }
+    assert!(
+        worst <= 0.0,
+        "{label}: worst violation at [{worst_i}]: got {} want {} (excess {worst:.3e})",
+        got[worst_i],
+        want[worst_i]
+    );
+}
+
+fn golden_ctx<'rt>(
+    runtime: &'rt hermes::runtime::Runtime,
+    profile: &str,
+    golden: &Golden,
+) -> ExecCtx<'rt> {
+    // shards live under golden/<p>/weights/<p>? No: golden/<p>/weights/stage_*.hws
+    // ExecCtx joins profile name, so point weights_dir at golden/<p> and
+    // rename: shard_dir = golden/<p>/weights
+    let mut ctx = ExecCtx::new(
+        runtime,
+        profile,
+        &golden.dir, // placeholder; fixed below
+        hermes::diskio::Disk::preset("unthrottled").unwrap(),
+    )
+    .unwrap();
+    ctx.shard_dir = golden.dir.join("weights");
+    ctx
+}
+
+fn model_input(g: &Golden) -> ModelInput {
+    match (&g.input_i32, &g.input_f32) {
+        (Some(ids), _) => ModelInput::Ids(ids.clone()),
+        (_, Some(p)) => ModelInput::Patches(p.clone()),
+        _ => unreachable!(),
+    }
+}
+
+#[test]
+fn rust_chain_matches_python_forward_all_tiny_profiles() {
+    let paths = Paths::detect();
+    let runtime = hermes::runtime::Runtime::new(&paths.artifacts).unwrap();
+    for profile_name in GOLDEN_PROFILES {
+        let golden = load_golden(&paths, profile_name);
+        let profile = runtime.profile(profile_name).unwrap();
+        let ctx = golden_ctx(&runtime, profile_name, &golden);
+
+        // resident (baseline) chain
+        let shards = profile
+            .stages
+            .iter()
+            .map(|s| read_shard(&ctx.shard_dir.join(&s.shard)).unwrap())
+            .collect::<Vec<_>>();
+        let bytes = shards.iter().map(|s| s.total_data_bytes()).sum();
+        let model = ResidentModel { shards, bytes, load_ms: 0.0 };
+        let accountant = MemoryAccountant::unlimited();
+        let (out, _) = forward_resident(&ctx, &model, &accountant, &model_input(&golden)).unwrap();
+        let got = runtime.buffer_to_f32(&out).unwrap();
+        assert_allclose(&got, &golden.expected, golden.rtol, golden.atol, profile_name);
+    }
+}
+
+#[test]
+fn pipeload_output_equals_python_golden() {
+    let paths = Paths::detect();
+    let runtime = hermes::runtime::Runtime::new(&paths.artifacts).unwrap();
+    for profile_name in ["tiny-bert", "tiny-gptj"] {
+        let golden = load_golden(&paths, profile_name);
+        let ctx = golden_ctx(&runtime, profile_name, &golden);
+        let (out, _) = run_pipeline(
+            &ctx,
+            &PipelineOpts::pipeload(3),
+            None,
+            &model_input(&golden),
+        )
+        .unwrap();
+        let got = runtime.buffer_to_f32(&out).unwrap();
+        assert_allclose(&got, &golden.expected, golden.rtol, golden.atol, profile_name);
+    }
+}
+
+#[test]
+fn all_three_modes_agree_bitwise_on_golden_weights() {
+    let paths = Paths::detect();
+    let runtime = hermes::runtime::Runtime::new(&paths.artifacts).unwrap();
+    let golden = load_golden(&paths, "tiny-gpt");
+    let ctx = golden_ctx(&runtime, "tiny-gpt", &golden);
+    let input = model_input(&golden);
+
+    let (pl, _) = run_pipeline(&ctx, &PipelineOpts::pipeload(2), None, &input).unwrap();
+    let (ps, _) = run_pipeline(&ctx, &PipelineOpts::pipeswitch(), None, &input).unwrap();
+    let profile = runtime.profile("tiny-gpt").unwrap();
+    let shards = profile
+        .stages
+        .iter()
+        .map(|s| read_shard(&ctx.shard_dir.join(&s.shard)).unwrap())
+        .collect::<Vec<_>>();
+    let model = ResidentModel { bytes: 0, load_ms: 0.0, shards };
+    let accountant = MemoryAccountant::unlimited();
+    let (bl, _) = forward_resident(&ctx, &model, &accountant, &input).unwrap();
+
+    let a = runtime.buffer_to_f32(&pl).unwrap();
+    let b = runtime.buffer_to_f32(&ps).unwrap();
+    let c = runtime.buffer_to_f32(&bl).unwrap();
+    assert_eq!(a, b, "pipeload vs pipeswitch must be bitwise identical");
+    assert_eq!(a, c, "pipeload vs baseline must be bitwise identical");
+}

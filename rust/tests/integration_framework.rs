@@ -1,0 +1,178 @@
+//! Integration tests for the Hermes framework layer: Engine modes, Layer
+//! Profiler, Pipeline Planner, serving loop, report harness.
+//! Needs `make artifacts`.
+
+use hermes::config::{Mode, Paths, RunConfig};
+use hermes::engine::Engine;
+use hermes::planner;
+use hermes::report;
+use hermes::server::{serve, ServeConfig};
+
+fn engine() -> Engine {
+    Engine::new(Paths::detect()).unwrap()
+}
+
+fn quick_cfg(model: &str, mode: Mode, agents: usize) -> RunConfig {
+    RunConfig {
+        profile: model.into(),
+        mode,
+        agents,
+        disk: "unthrottled".into(),
+        gen_tokens: Some(2),
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn all_modes_produce_identical_outputs() {
+    let e = engine();
+    let mut heads: Vec<Vec<f32>> = Vec::new();
+    let mut gens: Vec<Vec<i32>> = Vec::new();
+    for (mode, agents) in [(Mode::Baseline, 1), (Mode::PipeSwitch, 1), (Mode::PipeLoad, 3)] {
+        let (_, out) = e.run(&quick_cfg("tiny-gpt", mode, agents)).unwrap();
+        heads.push(out.head_sample);
+        gens.push(out.generated);
+    }
+    assert_eq!(heads[0], heads[1], "baseline vs pipeswitch outputs differ");
+    assert_eq!(heads[0], heads[2], "baseline vs pipeload outputs differ");
+    assert_eq!(gens[0], gens[1]);
+    assert_eq!(gens[0], gens[2]);
+    assert_eq!(gens[0].len(), 2);
+}
+
+#[test]
+fn generative_decode_is_deterministic_across_runs() {
+    let e = engine();
+    let (_, a) = e.run(&quick_cfg("tiny-gptj", Mode::PipeLoad, 2)).unwrap();
+    let (_, b) = e.run(&quick_cfg("tiny-gptj", Mode::PipeLoad, 4)).unwrap();
+    assert_eq!(a.generated, b.generated, "agent count must not change outputs");
+}
+
+#[test]
+fn profiler_reflects_disk_speed() {
+    let e = engine();
+    let fast = report::profile_one(&e, "tiny-bert", "unthrottled").unwrap();
+    let slow = report::profile_one(&e, "tiny-bert", "edge-sd").unwrap();
+    let p = e.runtime.profile("tiny-bert").unwrap();
+    let (l_fast, c_fast, _) = fast.body_means(p.body_kind());
+    let (l_slow, c_slow, _) = slow.body_means(p.body_kind());
+    assert!(l_slow > l_fast * 3.0, "throttle not visible: {l_slow} vs {l_fast}");
+    // compute time should be roughly disk-independent
+    assert!((c_slow - c_fast).abs() < c_fast.max(c_slow), "{c_fast} vs {c_slow}");
+}
+
+#[test]
+fn planner_empirical_schedule_is_sane() {
+    let e = engine();
+    let stats = report::profile_one(&e, "tiny-bert", "edge-sd").unwrap();
+    let p = e.runtime.profile("tiny-bert").unwrap();
+    let min = planner::min_feasible_budget(&stats, p.body_kind());
+    let budgets = vec![min, min + 2 * stats.max_stage_bytes(), p.total_weight_bytes * 2];
+    let sched = planner::plan(&e, &stats, &budgets, 6, true).unwrap();
+    assert_eq!(sched.entries.len(), 3);
+    // agents monotone non-decreasing with budget
+    let agents: Vec<usize> = sched.entries.iter().map(|x| x.agents).collect();
+    assert!(agents.windows(2).all(|w| w[0] <= w[1]), "{agents:?}");
+    // every entry's measured peak respects its budget (within transient slack)
+    for entry in &sched.entries {
+        let peak = entry.measured_peak_bytes.unwrap();
+        assert!(
+            peak <= entry.budget_bytes + 2 * stats.max_stage_bytes(),
+            "peak {peak} above budget {}",
+            entry.budget_bytes
+        );
+    }
+}
+
+#[test]
+fn schedule_pick_drives_engine() {
+    let e = engine();
+    let stats = report::profile_one(&e, "tiny-gpt", "unthrottled").unwrap();
+    let p = e.runtime.profile("tiny-gpt").unwrap();
+    let budgets = vec![p.total_weight_bytes, p.total_weight_bytes * 4];
+    let sched = planner::plan(&e, &stats, &budgets, 4, false).unwrap();
+    let pick = sched.pick(p.total_weight_bytes * 2).unwrap();
+    let cfg = RunConfig {
+        profile: "tiny-gpt".into(),
+        mode: Mode::PipeLoad,
+        agents: pick.agents,
+        budget: Some(p.total_weight_bytes * 2),
+        disk: "unthrottled".into(),
+        gen_tokens: Some(1),
+        ..RunConfig::default()
+    };
+    let (rep, _) = e.run(&cfg).unwrap();
+    assert_eq!(rep.agents, pick.agents);
+}
+
+#[test]
+fn serving_meets_relaxed_slo_and_batches() {
+    let e = engine();
+    let cfg = ServeConfig {
+        run: RunConfig {
+            profile: "tiny-bert".into(),
+            mode: Mode::PipeLoad,
+            agents: 2,
+            disk: "unthrottled".into(),
+            ..RunConfig::default()
+        },
+        num_requests: 6,
+        arrival_rps: 0.0, // closed loop
+        max_batch: 2,
+        slo_ms: 60_000.0,
+        ..ServeConfig::default()
+    };
+    let s = serve(&e, &cfg).unwrap();
+    assert_eq!(s.served, 6);
+    assert!(s.batches <= 6);
+    assert!(s.slo.met);
+    assert!(s.throughput_rps > 0.0);
+    assert_eq!(s.latency.len(), 6);
+}
+
+#[test]
+fn report_table1_and_fig2_render() {
+    let e = engine();
+    let t1 = report::table1(&e).unwrap();
+    for m in report::PAPER_MODELS {
+        assert!(t1.contains(m), "table1 missing {m}:\n{t1}");
+    }
+    assert!(t1.contains("TABLE I"));
+    let f2 = report::fig2(&e).unwrap();
+    assert!(f2.contains("bart-large-sim"));
+    // Obs I shows up: every paper model's body share in the 70..99.6 band
+    for line in f2.lines().filter(|l| l.contains("-sim")) {
+        let cols: Vec<&str> = line.split('|').map(|c| c.trim()).collect();
+        let share: f64 = cols[3].parse().unwrap();
+        assert!((70.0..=99.9).contains(&share), "{line}");
+    }
+}
+
+#[test]
+fn engine_rejects_bad_configs() {
+    let e = engine();
+    assert!(e.run(&RunConfig { profile: "nope".into(), ..RunConfig::default() }).is_err());
+    assert!(e
+        .run(&RunConfig {
+            profile: "tiny-bert".into(),
+            disk: "floppy".into(),
+            ..RunConfig::default()
+        })
+        .is_err());
+    assert!(e
+        .run(&RunConfig {
+            profile: "tiny-bert".into(),
+            batch: 3, // no such AOT entry
+            disk: "unthrottled".into(),
+            ..RunConfig::default()
+        })
+        .is_err());
+}
+
+#[test]
+fn fig1b_reports_idle_fraction() {
+    let e = engine();
+    let s = report::fig1b(&e, "edge-sd", "tiny-bert").unwrap();
+    assert!(s.contains("idle fraction"), "{s}");
+    assert!(s.contains("IA"), "{s}");
+}

@@ -1,0 +1,216 @@
+//! Integration tests for the PIPELOAD mechanism itself: memory discipline,
+//! signal protocol, stall behaviour, failure injection.
+//!
+//! Needs `make artifacts` (tiny profiles) — weights are generated here.
+
+use hermes::config::Paths;
+use hermes::diskio::Disk;
+use hermes::engine::{make_input, WEIGHTS_SEED};
+use hermes::pipeload::{run_pipeline, ExecCtx, PipelineOpts};
+use hermes::runtime::Runtime;
+use hermes::signals::Signal;
+use hermes::trace::Tracer;
+use hermes::weights::gen::gen_profile_weights;
+
+fn setup(profile: &str) -> (Paths, Runtime) {
+    let paths = Paths::detect();
+    let runtime = Runtime::new(&paths.artifacts).unwrap();
+    let p = runtime.profile(profile).unwrap();
+    gen_profile_weights(p, &paths.weights, WEIGHTS_SEED, 0.05, false).unwrap();
+    (paths, runtime)
+}
+
+fn ctx<'rt>(runtime: &'rt Runtime, paths: &Paths, profile: &str) -> ExecCtx<'rt> {
+    ExecCtx::new(runtime, profile, &paths.weights, Disk::preset("unthrottled").unwrap()).unwrap()
+}
+
+#[test]
+fn pipeload_respects_memory_budget() {
+    let (paths, runtime) = setup("tiny-bert");
+    let profile = runtime.profile("tiny-bert").unwrap();
+    let ctx = ctx(&runtime, &paths, "tiny-bert");
+    let (input, _, _) = make_input(profile, 1, 1);
+    // budget: 3 max stages + slack — far below the full model
+    let max_stage = profile.stages.iter().map(|s| profile.stage_bytes(s)).max().unwrap();
+    let budget = 4 * max_stage;
+    assert!(budget < profile.total_weight_bytes);
+    let (_, stats) = run_pipeline(&ctx, &PipelineOpts::pipeload(6), Some(budget), &input).unwrap();
+    assert!(
+        stats.peak_bytes <= budget + 2 * max_stage, // force_add transient + acts may exceed
+        "peak {} vastly above budget {budget}",
+        stats.peak_bytes
+    );
+    // a tight budget with many agents must stall loading (S^stop fired)
+    assert!(stats.mem_stall_ms >= 0.0);
+}
+
+#[test]
+fn pipeload_peak_is_fraction_of_pipeswitch_peak() {
+    let (paths, runtime) = setup("tiny-bert");
+    let profile = runtime.profile("tiny-bert").unwrap();
+    let (input, _, _) = make_input(profile, 1, 1);
+    // On slow storage PIPELOAD's pacing alone keeps few layers resident.
+    let slow = Disk::new(hermes::diskio::DiskProfile::custom(250_000, 0, 200));
+    let mut c_slow = ctx(&runtime, &paths, "tiny-bert");
+    c_slow.disk = slow;
+    let (_, pl) = run_pipeline(&c_slow, &PipelineOpts::pipeload(1), None, &input).unwrap();
+    let c = ctx(&runtime, &paths, "tiny-bert");
+    let (_, ps) = run_pipeline(&c, &PipelineOpts::pipeswitch(), None, &input).unwrap();
+    // standard pipeline keeps everything resident
+    assert!(ps.peak_bytes >= profile.total_weight_bytes, "ps peak {}", ps.peak_bytes);
+    // PIPELOAD holds only a few layers
+    assert!(
+        (pl.peak_bytes as f64) < 0.8 * ps.peak_bytes as f64,
+        "pipeload peak {} not below pipeswitch {}",
+        pl.peak_bytes,
+        ps.peak_bytes
+    );
+}
+
+#[test]
+fn signal_protocol_comp_before_dest_and_complete() {
+    let (paths, runtime) = setup("tiny-gpt");
+    let profile = runtime.profile("tiny-gpt").unwrap();
+    let c = ctx(&runtime, &paths, "tiny-gpt");
+    let (input, _, _) = make_input(profile, 1, 2);
+    let (_, _) = run_pipeline(&c, &PipelineOpts::pipeload(3), None, &input).unwrap();
+    let log = c.signals;
+    log.verify_dest_after_comp().unwrap();
+    // every stage got exactly one Comp and one Dest
+    let mut comp = log.comp_order();
+    comp.sort_unstable();
+    assert_eq!(comp, (0..profile.stages.len()).collect::<Vec<_>>());
+    let dest = log.dest_order();
+    // Dest is emitted by the in-order inference agent: strictly ascending
+    assert_eq!(dest, (0..profile.stages.len()).collect::<Vec<_>>());
+    assert!(log.snapshot().iter().any(|(_, s)| matches!(s, Signal::Done)));
+}
+
+#[test]
+fn tight_budget_fires_stop_signals_but_completes() {
+    let (paths, runtime) = setup("tiny-bert");
+    let profile = runtime.profile("tiny-bert").unwrap();
+    let c = ctx(&runtime, &paths, "tiny-bert");
+    let (input, _, _) = make_input(profile, 1, 3);
+    let max_stage = profile.stages.iter().map(|s| profile.stage_bytes(s)).max().unwrap();
+    // room for barely 2 stages: agents must repeatedly pause
+    let budget = 2 * max_stage + max_stage / 2;
+    let (_, stats) =
+        run_pipeline(&c, &PipelineOpts::pipeload(4), Some(budget), &input).unwrap();
+    assert!(c.signals.stop_count() > 0, "expected S^stop under tight budget");
+    assert!(stats.peak_bytes <= budget + 2 * max_stage);
+}
+
+#[test]
+fn trace_records_all_lanes() {
+    let (paths, runtime) = setup("tiny-bert");
+    let profile = runtime.profile("tiny-bert").unwrap();
+    let mut c = ctx(&runtime, &paths, "tiny-bert");
+    c.tracer = Tracer::new(true);
+    let (input, _, _) = make_input(profile, 1, 4);
+    run_pipeline(&c, &PipelineOpts::pipeload(2), None, &input).unwrap();
+    let spans = c.tracer.snapshot();
+    use hermes::trace::{Kind, Lane};
+    assert!(spans.iter().any(|s| matches!(s.lane, Lane::Loader(_)) && s.kind == Kind::Load));
+    assert!(spans.iter().any(|s| s.lane == Lane::Inference && s.kind == Kind::Compute));
+    assert!(spans.iter().any(|s| s.lane == Lane::Daemon && s.kind == Kind::Destroy));
+    let gantt = c.tracer.ascii_gantt(60);
+    assert!(gantt.contains("LA1") && gantt.contains("IA") && gantt.contains("DA"));
+}
+
+#[test]
+fn corrupted_shard_fails_cleanly_with_validation() {
+    let (paths, runtime) = setup("tiny-vit");
+    let profile = runtime.profile("tiny-vit").unwrap();
+    // copy shards to a scratch dir and corrupt one
+    let src = paths.weights.join("tiny-vit");
+    let dst = std::env::temp_dir().join("hermes_corrupt_test");
+    let _ = std::fs::remove_dir_all(&dst);
+    std::fs::create_dir_all(dst.join("tiny-vit")).unwrap();
+    for s in &profile.stages {
+        std::fs::copy(src.join(&s.shard), dst.join("tiny-vit").join(&s.shard)).unwrap();
+    }
+    let victim = dst.join("tiny-vit").join(&profile.stages[2].shard);
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&victim, bytes).unwrap();
+
+    let mut c = ExecCtx::new(&runtime, "tiny-vit", &dst, Disk::preset("unthrottled").unwrap()).unwrap();
+    c.batch = 1;
+    let (input, _, _) = make_input(profile, 1, 5);
+    let mut opts = PipelineOpts::pipeload(2);
+    opts.validate_shards = true;
+    let err = match run_pipeline(&c, &opts, None, &input) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("expected corruption error"),
+    };
+    assert!(err.contains("checksum"), "{err}");
+}
+
+#[test]
+fn missing_shard_file_errors() {
+    let (paths, runtime) = setup("tiny-gptj");
+    let profile = runtime.profile("tiny-gptj").unwrap();
+    let dst = std::env::temp_dir().join("hermes_missing_test");
+    let _ = std::fs::remove_dir_all(&dst);
+    std::fs::create_dir_all(dst.join("tiny-gptj")).unwrap(); // empty dir
+    let c = ExecCtx::new(&runtime, "tiny-gptj", &dst, Disk::preset("unthrottled").unwrap()).unwrap();
+    let (input, _, _) = make_input(profile, 1, 6);
+    assert!(run_pipeline(&c, &PipelineOpts::pipeload(2), None, &input).is_err());
+    let _ = paths;
+}
+
+#[test]
+fn oversized_single_layer_budget_rejected() {
+    let (paths, runtime) = setup("tiny-bert");
+    let profile = runtime.profile("tiny-bert").unwrap();
+    let c = ctx(&runtime, &paths, "tiny-bert");
+    let (input, _, _) = make_input(profile, 1, 7);
+    // budget below the biggest single stage can never work
+    let max_stage = profile.stages.iter().map(|s| profile.stage_bytes(s)).max().unwrap();
+    let err = match run_pipeline(&c, &PipelineOpts::pipeload(2), Some(max_stage - 1), &input) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("expected budget error"),
+    };
+    assert!(err.contains("can never fit"), "{err}");
+}
+
+#[test]
+fn pipeswitch_under_model_size_budget_rejected() {
+    let (paths, runtime) = setup("tiny-bert");
+    let profile = runtime.profile("tiny-bert").unwrap();
+    let c = ctx(&runtime, &paths, "tiny-bert");
+    let (input, _, _) = make_input(profile, 1, 8);
+    let err = match run_pipeline(
+        &c,
+        &PipelineOpts::pipeswitch(),
+        Some(profile.total_weight_bytes / 2),
+        &input,
+    ) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("expected pipeswitch budget error"),
+    };
+    assert!(err.contains("keeps all weights resident"), "{err}");
+}
+
+#[test]
+fn more_agents_reduce_wait_stalls_on_throttled_disk() {
+    let (paths, runtime) = setup("tiny-bert");
+    let profile = runtime.profile("tiny-bert").unwrap();
+    let (input, _, _) = make_input(profile, 1, 9);
+    let run = |agents: usize| {
+        let mut c = ExecCtx::new(&runtime, "tiny-bert", &paths.weights,
+            Disk::new(hermes::diskio::DiskProfile::custom(2_000_000, 0, 500))).unwrap();
+        c.tracer = Tracer::disabled();
+        let t0 = std::time::Instant::now();
+        run_pipeline(&c, &PipelineOpts::pipeload(agents), None, &input).unwrap();
+        t0.elapsed().as_secs_f64()
+    };
+    let t1 = run(1);
+    let t4 = run(4);
+    assert!(
+        t4 < t1 * 0.75,
+        "4 agents ({t4:.3}s) should be well below 1 agent ({t1:.3}s)"
+    );
+}

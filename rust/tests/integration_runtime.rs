@@ -1,0 +1,157 @@
+//! Integration tests for the PJRT runtime layer: manifest -> compile ->
+//! execute, shapes, caching, batching.  Needs `make artifacts`.
+
+use hermes::config::Paths;
+use hermes::engine::{make_input, WEIGHTS_SEED};
+use hermes::pipeload::ModelInput;
+use hermes::runtime::Runtime;
+use hermes::weights::gen::gen_profile_weights;
+use hermes::weights::read_shard;
+
+fn runtime() -> (Paths, Runtime) {
+    let paths = Paths::detect();
+    let rt = Runtime::new(&paths.artifacts).unwrap();
+    (paths, rt)
+}
+
+#[test]
+fn manifest_loads_all_expected_profiles() {
+    let (_, rt) = runtime();
+    for name in [
+        "bert-large-sim",
+        "gpt2-base-sim",
+        "vit-large-sim",
+        "gptj-sim",
+        "bart-base-sim",
+        "bart-large-sim",
+        "tiny-bert",
+        "tiny-gpt",
+        "tiny-vit",
+        "tiny-gptj",
+    ] {
+        let p = rt.profile(name).unwrap();
+        assert!(!p.stages.is_empty(), "{name}");
+        assert!(p.total_weight_bytes > 0);
+        // every stage's kind has specs and an entry at batch 1
+        for s in &p.stages {
+            assert!(!p.stage_params(s).unwrap().is_empty(), "{name}/{}", s.kind);
+            p.entry(&s.kind, 1).unwrap();
+        }
+    }
+}
+
+#[test]
+fn paper_profiles_mirror_table1_structure() {
+    let (_, rt) = runtime();
+    let bert = rt.profile("bert-large-sim").unwrap();
+    assert_eq!(bert.layers, 24);
+    assert_eq!(bert.stages.len(), 26); // embedding + 24 + pooler
+    let gptj = rt.profile("gptj-sim").unwrap();
+    assert_eq!(gptj.layers, 28);
+    assert_eq!(gptj.body_kind(), "gptj_layer");
+    let vit = rt.profile("vit-large-sim").unwrap();
+    assert_eq!(vit.stages[0].kind, "patch_embed");
+    // Obs I: body layers dominate
+    for name in ["bert-large-sim", "gpt2-base-sim", "vit-large-sim", "gptj-sim"] {
+        let p = rt.profile(name).unwrap();
+        let body: u64 = p
+            .stages
+            .iter()
+            .filter(|s| s.kind == p.body_kind())
+            .map(|s| p.stage_bytes(s))
+            .sum();
+        let share = body as f64 / p.total_weight_bytes as f64;
+        assert!(share > 0.7, "{name} body share {share}");
+    }
+}
+
+#[test]
+fn executes_single_encoder_layer_with_expected_shapes() {
+    let (paths, rt) = runtime();
+    let p = rt.profile("tiny-bert").unwrap();
+    gen_profile_weights(p, &paths.weights, WEIGHTS_SEED, 0.05, false).unwrap();
+    let stage = &p.stages[1];
+    assert_eq!(stage.kind, "encoder_layer");
+    let shard = read_shard(&paths.weights.join("tiny-bert").join(&stage.shard)).unwrap();
+    let entry = p.entry("encoder_layer", 1).unwrap();
+    let n_in: usize = entry.activations[0].num_elements();
+    let x = rt.buffer_f32(&vec![0.1; n_in], &entry.activations[0].shape).unwrap();
+    let out = rt.execute_entry(p, entry, &[&x], &shard).unwrap();
+    let v = rt.buffer_to_f32(&out).unwrap();
+    assert_eq!(v.len(), entry.output.num_elements());
+    assert!(v.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn executable_cache_reuses_compiles() {
+    let (_, rt) = runtime();
+    let p = rt.profile("tiny-gpt").unwrap();
+    let entry = p.entry("decoder_layer", 1).unwrap();
+    let t0 = std::time::Instant::now();
+    rt.executable(p, entry).unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for _ in 0..50 {
+        rt.executable(p, entry).unwrap();
+    }
+    let cached = t1.elapsed() / 50;
+    assert!(cached < first / 10, "cache not effective: {cached:?} vs {first:?}");
+}
+
+#[test]
+fn batch_variants_compile_and_run() {
+    let (paths, rt) = runtime();
+    let p = rt.profile("tiny-bert").unwrap();
+    gen_profile_weights(p, &paths.weights, WEIGHTS_SEED, 0.05, false).unwrap();
+    for &b in &p.batches {
+        let entry = p.entry("encoder_layer", b).unwrap();
+        assert_eq!(entry.activations[0].shape[0], b);
+        let shard =
+            read_shard(&paths.weights.join("tiny-bert").join(&p.stages[1].shard)).unwrap();
+        let n: usize = entry.activations[0].num_elements();
+        let x = rt.buffer_f32(&vec![0.05; n], &entry.activations[0].shape).unwrap();
+        let out = rt.execute_entry(p, entry, &[&x], &shard).unwrap();
+        assert_eq!(rt.buffer_to_f32(&out).unwrap().len(), entry.output.num_elements());
+    }
+}
+
+#[test]
+fn batched_rows_with_identical_inputs_agree() {
+    // batch-2 entry fed two identical rows must give two identical outputs
+    let (paths, rt) = runtime();
+    let p = rt.profile("tiny-bert").unwrap();
+    gen_profile_weights(p, &paths.weights, WEIGHTS_SEED, 0.05, false).unwrap();
+    let (_, row, _) = make_input(p, 1, 11);
+    let mut ids = row.clone();
+    ids.extend_from_slice(&row); // duplicate the row across the batch
+    let input = ModelInput::Ids(ids);
+    let entry = p.entry("embedding", 2).unwrap();
+    let shard = read_shard(&paths.weights.join("tiny-bert").join(&p.stages[0].shard)).unwrap();
+    let l = input.to_buffer(&rt, &entry.activations[0]).unwrap();
+    let out = rt.execute_entry(p, entry, &[&l], &shard).unwrap();
+    let v = rt.buffer_to_f32(&out).unwrap();
+    let half = v.len() / 2;
+    assert_eq!(&v[..half], &v[half..], "batch rows diverged");
+}
+
+#[test]
+fn wrong_activation_count_is_rejected() {
+    let (paths, rt) = runtime();
+    let p = rt.profile("tiny-bert").unwrap();
+    gen_profile_weights(p, &paths.weights, WEIGHTS_SEED, 0.05, false).unwrap();
+    let entry = p.entry("encoder_layer", 1).unwrap();
+    let shard = read_shard(&paths.weights.join("tiny-bert").join(&p.stages[1].shard)).unwrap();
+    let err = match rt.execute_entry(p, entry, &[], &shard) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected error"),
+    };
+    assert!(err.contains("expected 1 activation"), "{err}");
+}
+
+#[test]
+fn prepare_compiles_everything_once() {
+    let (_, rt) = runtime();
+    let p = rt.profile("tiny-vit").unwrap();
+    let n = rt.prepare(p).unwrap();
+    assert_eq!(n, p.entries.len());
+}

@@ -1,0 +1,275 @@
+//! Property-based tests over the coordinator invariants (DESIGN.md section 7),
+//! driven by the in-repo prop framework (`hermes::util::prop`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use hermes::memory::MemoryAccountant;
+use hermes::model::DType;
+use hermes::pipeload::assignment::{assignment, owner};
+use hermes::pipeload::gate::OrderedGate;
+use hermes::planner::{candidate_agents, predict_latency_ms, predict_peak_bytes};
+use hermes::profiler::{LayerProfile, ModelProfile};
+use hermes::prop_assert;
+use hermes::util::json::Value;
+use hermes::util::prop::{check, Config};
+use hermes::util::rng::Rng;
+use hermes::weights::{decode, encode, Shard, Tensor};
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, ..Config::default() }
+}
+
+#[test]
+fn prop_assignment_is_partition() {
+    check("assignment partition", cfg(128), |g| {
+        let stages = g.usize(1, 200);
+        let agents = g.usize(1, 40);
+        let plan = assignment(stages, agents);
+        let mut seen = vec![0u32; stages];
+        for (a, list) in plan.iter().enumerate() {
+            prop_assert!(
+                list.windows(2).all(|w| w[0] < w[1]),
+                "agent {a} list not ascending: {list:?}"
+            );
+            for &s in list {
+                prop_assert!(s < stages, "stage {s} out of range");
+                prop_assert!(owner(s, agents) == a, "owner mismatch for {s}");
+                seen[s] += 1;
+            }
+        }
+        prop_assert!(seen.iter().all(|&c| c == 1), "not a partition: {seen:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ordered_gate_admits_sequentially_and_never_exceeds_budget() {
+    check("gate order+budget", cfg(24), |g| {
+        let n_stages = g.usize(2, 24);
+        let agents = g.usize(1, 5);
+        let stage_bytes: Vec<u64> = (0..n_stages).map(|_| g.u64(1, 50)).collect();
+        let max = *stage_bytes.iter().max().unwrap();
+        let budget = max + g.u64(0, 2 * max + 1);
+        let accountant = MemoryAccountant::new(Some(budget));
+        let gate = OrderedGate::new(accountant.clone());
+        let admitted = Arc::new(AtomicU64::new(0));
+        let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+
+        let plan = assignment(n_stages, agents);
+        std::thread::scope(|scope| {
+            // consumer: free in strict stage order as "computed"
+            let consumer_gate = gate.clone();
+            let (tx, rx) = std::sync::mpsc::channel::<(usize, u64)>();
+            scope.spawn(move || {
+                let mut next = 0usize;
+                let mut pending = std::collections::BTreeMap::new();
+                while next < n_stages {
+                    let (s, b) = rx.recv().unwrap();
+                    pending.insert(s, b);
+                    while let Some(b) = pending.remove(&next) {
+                        consumer_gate.free(b);
+                        next += 1;
+                    }
+                }
+            });
+            for (_a, list) in plan.iter().enumerate() {
+                let gate = gate.clone();
+                let tx = tx.clone();
+                let order = order.clone();
+                let admitted = admitted.clone();
+                let bytes = stage_bytes.clone();
+                let list = list.clone();
+                scope.spawn(move || {
+                    for s in list {
+                        gate.admit(s, bytes[s]).unwrap();
+                        order.lock().unwrap().push(s);
+                        admitted.fetch_add(1, Ordering::SeqCst);
+                        tx.send((s, bytes[s])).unwrap();
+                    }
+                });
+            }
+            drop(tx);
+        });
+        // NOTE: the gate admits strictly in stage order internally, but the
+        // log push below races with other threads' admissions, so only the
+        // per-agent subsequences are reliably ordered observations.
+        let order = order.lock().unwrap();
+        for (a, list) in plan.iter().enumerate() {
+            let mine: Vec<usize> =
+                order.iter().copied().filter(|s| list.contains(s)).collect();
+            prop_assert!(
+                mine.windows(2).all(|w| w[0] < w[1]),
+                "agent {a} admissions out of order: {mine:?}"
+            );
+        }
+        prop_assert!(
+            admitted.load(Ordering::SeqCst) == n_stages as u64,
+            "not all stages admitted"
+        );
+        prop_assert!(accountant.used() == 0, "leak: {} bytes", accountant.used());
+        prop_assert!(accountant.peak() <= budget, "peak {} > budget {budget}", accountant.peak());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_accountant_never_exceeds_budget_under_try_acquire() {
+    check("accountant budget", cfg(64), |g| {
+        let budget = g.u64(10, 1000);
+        let m = MemoryAccountant::new(Some(budget));
+        let mut held: Vec<u64> = Vec::new();
+        for _ in 0..g.usize(1, 100) {
+            if g.bool() || held.is_empty() {
+                let want = g.u64(1, budget + 10);
+                if m.try_acquire(want) {
+                    held.push(want);
+                }
+            } else {
+                let i = g.usize(0, held.len());
+                m.free(held.swap_remove(i));
+            }
+            prop_assert!(m.used() <= budget, "used {} > budget {budget}", m.used());
+            prop_assert!(m.peak() <= budget, "peak {} > budget {budget}", m.peak());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_roundtrip_random_tensors() {
+    check("shard roundtrip", cfg(64), |g| {
+        let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+        let n = g.usize(0, 8);
+        let tensors: Vec<Tensor> = (0..n)
+            .map(|i| {
+                let ndim = rng.usize(1, 4);
+                let shape: Vec<usize> = (0..ndim).map(|_| rng.usize(1, 6)).collect();
+                let dtype = [DType::F32, DType::I32, DType::F16][rng.usize(0, 3)];
+                let bytes: usize = shape.iter().product::<usize>() * dtype.size_bytes();
+                Tensor {
+                    name: format!("t{i}"),
+                    dtype,
+                    shape,
+                    data: (0..bytes).map(|_| rng.next_u64() as u8).collect(),
+                }
+            })
+            .collect();
+        let shard = Shard { kind: "k".into(), stage: rng.next_u64() as u32, tensors };
+        let rt = decode(&encode(&shard)).map_err(|e| e.to_string())?;
+        prop_assert!(rt == shard, "roundtrip mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_bitflip_always_detected() {
+    check("shard corruption", cfg(48), |g| {
+        let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+        let shard = Shard {
+            kind: "encoder_layer".into(),
+            stage: 1,
+            tensors: vec![Tensor {
+                name: "w".into(),
+                dtype: DType::F32,
+                shape: vec![g.usize(1, 32)],
+                data: (0..g.usize(1, 32) * 4).map(|_| rng.next_u64() as u8).collect(),
+            }],
+        };
+        // note: shape and data len must agree; rebuild data to match
+        let n = shard.tensors[0].shape[0] * 4;
+        let mut shard = shard;
+        shard.tensors[0].data = (0..n).map(|_| rng.next_u64() as u8).collect();
+        let mut bytes = encode(&shard);
+        let pos = rng.usize(0, bytes.len());
+        let bit = 1u8 << rng.usize(0, 8);
+        bytes[pos] ^= bit;
+        prop_assert!(decode(&bytes).is_err(), "bit flip at {pos} undetected");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planner_latency_monotone_and_peak_linear() {
+    check("planner models", cfg(128), |g| {
+        let load = g.f64() * 100.0 + 0.1;
+        let compute = g.f64() * 20.0 + 0.01;
+        let n = g.usize(1, 64);
+        let mut prev = f64::INFINITY;
+        for m in 1..=12 {
+            let t = predict_latency_ms(load, compute, n, m);
+            prop_assert!(t <= prev + 1e-9, "latency not monotone at m={m}");
+            prop_assert!(t >= load + n as f64 * compute - 1e-9, "below compute bound");
+            prev = t;
+        }
+        let max_stage = g.u64(1, 1_000_000);
+        let body = g.u64(1, max_stage + 1);
+        let act = g.u64(0, max_stage);
+        for m in 1..8 {
+            let d = predict_peak_bytes(max_stage, body, act, m + 1)
+                - predict_peak_bytes(max_stage, body, act, m);
+            prop_assert!(d == body, "peak not linear in agents");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_candidate_agents_monotone_in_budget() {
+    check("candidates monotone", cfg(64), |g| {
+        let bytes = g.u64(100, 10_000);
+        let layers: Vec<LayerProfile> = (0..g.usize(1, 30))
+            .map(|i| LayerProfile {
+                stage: i,
+                kind: "encoder_layer".into(),
+                load_ms: 1.0,
+                compute_ms: 0.1,
+                bytes,
+            })
+            .collect();
+        let mp = ModelProfile { profile: "p".into(), disk: "d".into(), batch: 1, layers };
+        let mut prev_len = 0;
+        for mult in 1..8u64 {
+            let c = candidate_agents(&mp, "encoder_layer", bytes * (2 + mult), 10);
+            prop_assert!(c.len() >= prev_len, "candidates shrank with budget");
+            // contiguous from 1
+            prop_assert!(
+                c.iter().enumerate().all(|(i, &m)| m == i + 1),
+                "candidates not contiguous: {c:?}"
+            );
+            prev_len = c.len();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth == 0 { rng.usize(0, 4) } else { rng.usize(0, 6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.bool()),
+            2 => Value::Num((rng.next_u64() % 1_000_000) as f64 / 8.0),
+            3 => Value::Str(
+                (0..rng.usize(0, 12))
+                    .map(|_| char::from_u32(0x20 + rng.next_u64() as u32 % 0x50).unwrap())
+                    .collect(),
+            ),
+            4 => Value::Arr((0..rng.usize(0, 4)).map(|_| gen_value(rng, depth.saturating_sub(1))).collect()),
+            _ => Value::Obj(
+                (0..rng.usize(0, 4))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth.saturating_sub(1))))
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", cfg(200), |g| {
+        let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+        let v = gen_value(&mut rng, 4);
+        let compact = Value::parse(&v.compact()).map_err(|e| e.to_string())?;
+        prop_assert!(compact == v, "compact roundtrip mismatch:\n{v}\n{compact}");
+        let pretty = Value::parse(&v.pretty()).map_err(|e| e.to_string())?;
+        prop_assert!(pretty == v, "pretty roundtrip mismatch");
+        Ok(())
+    });
+}
