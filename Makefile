@@ -1,0 +1,31 @@
+# Hermes build drivers.
+#
+# `make artifacts` runs the python AOT step (jax -> HLO text + manifest +
+# golden vectors) into rust/artifacts — the Rust crate's single source of
+# truth.  Everything after that is pure Rust (tier-1: `make test`).
+
+PY ?= python3
+
+.PHONY: artifacts golden build test fmt clippy clean
+
+artifacts:
+	cd python && $(PY) -m compile.aot --out-dir ../rust/artifacts
+
+golden:
+	cd python && $(PY) -m compile.aot --out-dir ../rust/artifacts --golden-only
+
+build:
+	cargo build --release
+
+test:
+	cargo build --release && cargo test -q
+
+fmt:
+	cargo fmt --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+clean:
+	cargo clean
+	rm -rf rust/weights rust/results

@@ -28,6 +28,7 @@ import json
 import os
 import sys
 import time
+import zlib
 
 import jax
 import numpy as np
@@ -126,7 +127,9 @@ def gen_golden(p: Profile, out_dir: str, kc: KernelChoice) -> None:
     gdir = os.path.join(out_dir, "golden", p.name)
     wdir = os.path.join(gdir, "weights")
     os.makedirs(wdir, exist_ok=True)
-    rng = np.random.RandomState(hash(p.name) % (2**31))
+    # zlib.crc32, not hash(): str hashing is salted per process
+    # (PYTHONHASHSEED), which would make `make artifacts` nondeterministic.
+    rng = np.random.RandomState(zlib.crc32(p.name.encode()) % (2**31))
     stages = configs.stage_table(p)
     stage_weights = []
     for st in stages:

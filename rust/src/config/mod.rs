@@ -69,6 +69,11 @@ pub struct RunConfig {
     pub agents: usize,
     /// memory budget in bytes (None = unconstrained)
     pub budget: Option<u64>,
+    /// hot-layer cache pin budget in bytes (PIPELOAD sessions only).
+    /// None/0 reproduces the paper's always-destroy semantics; >0 lets the
+    /// Daemon keep up to this many bytes of computed layers resident
+    /// across passes when the memory budget has slack.
+    pub pin_budget: Option<u64>,
     pub disk: String,
     pub batch: usize,
     pub seed: u64,
@@ -86,6 +91,7 @@ impl Default for RunConfig {
             mode: Mode::PipeLoad,
             agents: 4,
             budget: None,
+            pin_budget: None,
             disk: "edge-emmc".into(),
             batch: 1,
             seed: 42,

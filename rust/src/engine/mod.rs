@@ -8,18 +8,32 @@
 //! while the Baseline loads once and runs one resident forward per token —
 //! the source of the paper's Table II crossover where pipelines lose to
 //! the baseline at low agent counts.
+//!
+//! # Sessions & hot-layer cache
+//!
+//! [`Engine::run`] is one-shot sugar over the [`session`] subsystem:
+//! it opens a [`Session`] (profile resolution + weight validation +
+//! [`Runtime::prepare`], each exactly once), runs one request, and drops
+//! it.  Long-lived callers — the serving loop ([`crate::server::serve`])
+//! and anything issuing repeated requests — keep the session instead and
+//! call [`Session::run_batch`] per request, amortizing setup and letting
+//! the hot-layer cache (`RunConfig::pin_budget`) keep layers resident
+//! across decode tokens whenever the memory budget has slack.
+//!
+//! [`Runtime::prepare`]: crate::runtime::Runtime::prepare
+//! [`Session::run_batch`]: session::Session::run_batch
+//! [`Session`]: session::Session
 
-use std::time::Instant;
+pub mod session;
 
-use anyhow::{bail, Result};
+pub use session::Session;
 
-use crate::baseline;
-use crate::config::{Mode, Paths, RunConfig};
-use crate::diskio::Disk;
-use crate::memory::MemoryAccountant;
+use anyhow::Result;
+
+use crate::config::{Paths, RunConfig};
 use crate::metrics::RunReport;
 use crate::model::Profile;
-use crate::pipeload::{run_pipeline, ExecCtx, ModelInput, PassStats, PipelineOpts};
+use crate::pipeload::ModelInput;
 use crate::runtime::Runtime;
 use crate::trace::Tracer;
 use crate::util::rng::Rng;
@@ -32,7 +46,7 @@ pub const WEIGHTS_SEED: u64 = 0xBEEF;
 /// Output of a run, beyond the metrics.
 #[derive(Debug, Clone)]
 pub struct RunOutput {
-    /// generated token ids (generative) or empty
+    /// generated token ids of batch row 0 (generative) or empty
     pub generated: Vec<i32>,
     /// final head output values (pooled vector / class logits / last-token
     /// logits), truncated to at most 16 values for reporting
@@ -67,102 +81,10 @@ impl Engine {
 
     /// Like [`Engine::run`] but records into a caller-supplied tracer
     /// (shared buffer), so callers can render Gantt charts / stall stats.
+    /// One-shot: opens a [`Session`], runs one request, drops it.
     pub fn run_with(&self, cfg: &RunConfig, tracer: &Tracer) -> Result<(RunReport, RunOutput)> {
-        let profile = self.runtime.profile(&cfg.profile)?;
-        if cfg.kv_cache {
-            bail!("--kv-cache is an ablation extension; see benches/ablation.rs");
-        }
-        self.ensure_weights(&cfg.profile)?;
-        let disk = Disk::preset(&cfg.disk)?;
-        let mut ctx = ExecCtx::new(&self.runtime, &cfg.profile, &self.paths.weights, disk)?;
-        ctx.tracer = tracer.clone();
-        ctx.batch = cfg.batch;
-        // compile off the measured path (the paper's pre-run)
-        self.runtime.prepare(profile)?;
-
-        let (input, mut ids, prompt_len) = make_input(profile, cfg.batch, cfg.seed);
-        let gen_tokens = if profile.is_generative() {
-            cfg.gen_tokens.unwrap_or(profile.gen_tokens.max(1))
-        } else {
-            0
-        };
-
-        let t0 = Instant::now();
-        let mut passes: Vec<PassStats> = Vec::new();
-        let mut generated = Vec::new();
-        let mut head: Vec<f32> = Vec::new();
-
-        match (cfg.mode, profile.is_generative()) {
-            (Mode::Baseline, false) => {
-                let accountant = MemoryAccountant::new(cfg.budget);
-                let model = baseline::load_all(&ctx, &accountant)?;
-                let (out, stats) = baseline::forward_resident(&ctx, &model, &accountant, &input)?;
-                head = self.runtime.buffer_to_f32(&out)?;
-                passes.push(stats);
-            }
-            (Mode::Baseline, true) => {
-                let accountant = MemoryAccountant::new(cfg.budget);
-                let model = baseline::load_all(&ctx, &accountant)?;
-                let mut cur_len = prompt_len;
-                for _ in 0..gen_tokens {
-                    let inp = ModelInput::Ids(ids.clone());
-                    let (out, stats) =
-                        baseline::forward_resident(&ctx, &model, &accountant, &inp)?;
-                    let logits = self.runtime.buffer_to_f32(&out)?;
-                    let next = argmax_at(&logits, profile, cur_len);
-                    push_token(&mut ids, profile, cur_len, next);
-                    generated.push(next);
-                    cur_len += 1;
-                    head = last_logits(&logits, profile, cur_len - 1);
-                    passes.push(stats);
-                }
-            }
-            (mode, false) => {
-                let opts = opts_for(mode, cfg.agents);
-                let (out, stats) = run_pipeline(&ctx, &opts, cfg.budget, &input)?;
-                head = self.runtime.buffer_to_f32(&out)?;
-                passes.push(stats);
-            }
-            (mode, true) => {
-                let opts = opts_for(mode, cfg.agents);
-                let mut cur_len = prompt_len;
-                for _ in 0..gen_tokens {
-                    let inp = ModelInput::Ids(ids.clone());
-                    // fresh pass: weights were destroyed after the last token
-                    let (out, stats) = run_pipeline(&ctx, &opts, cfg.budget, &inp)?;
-                    let logits = self.runtime.buffer_to_f32(&out)?;
-                    let next = argmax_at(&logits, profile, cur_len);
-                    push_token(&mut ids, profile, cur_len, next);
-                    generated.push(next);
-                    cur_len += 1;
-                    head = last_logits(&logits, profile, cur_len - 1);
-                    passes.push(stats);
-                }
-            }
-        }
-        let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
-
-        let report = RunReport {
-            model: cfg.profile.clone(),
-            mode: cfg.mode.name().to_string(),
-            agents: if cfg.mode == Mode::PipeLoad { cfg.agents } else { 1 },
-            latency_ms,
-            peak_bytes: passes.iter().map(|p| p.peak_bytes).max().unwrap_or(0),
-            mem_stall_ms: passes.iter().map(|p| p.mem_stall_ms).sum(),
-            wait_stall_ms: passes.iter().map(|p| p.wait_stall_ms).sum(),
-            idle_fraction: ctx.tracer.inference_idle_fraction().unwrap_or(0.0),
-            tokens: generated.len(),
-        };
-        head.truncate(16);
-        Ok((report, RunOutput { generated, head_sample: head }))
-    }
-}
-
-fn opts_for(mode: Mode, agents: usize) -> PipelineOpts {
-    match mode {
-        Mode::PipeSwitch => PipelineOpts::pipeswitch(),
-        Mode::PipeLoad => PipelineOpts::pipeload(agents),
-        Mode::Baseline => unreachable!("baseline handled separately"),
+        let mut session = self.open_session_with(cfg, tracer)?;
+        session.run()
     }
 }
 
@@ -185,35 +107,49 @@ pub fn make_input(profile: &Profile, batch: usize, seed: u64) -> (ModelInput, Ve
     }
 }
 
-/// argmax over the vocab at position `pos-1` of batch row 0.
-fn argmax_at(logits: &[f32], profile: &Profile, cur_len: usize) -> i32 {
+/// Per-row argmax over the vocab at position `cur_len - 1`: one next-token
+/// id for every batch row.  Logits are `[batch, max_seq, vocab]` flattened.
+pub(crate) fn argmax_rows(
+    logits: &[f32],
+    profile: &Profile,
+    batch: usize,
+    cur_len: usize,
+) -> Vec<i32> {
     let v = profile.vocab;
-    let pos = cur_len.saturating_sub(1).min(profile.max_seq - 1);
-    let row = &logits[pos * v..(pos + 1) * v];
-    let mut best = 0usize;
-    for (i, &x) in row.iter().enumerate() {
-        if x > row[best] {
-            best = i;
-        }
-    }
-    best as i32
+    let s = profile.max_seq;
+    let pos = cur_len.saturating_sub(1).min(s - 1);
+    (0..batch)
+        .map(|b| {
+            let row = &logits[b * s * v + pos * v..b * s * v + (pos + 1) * v];
+            let mut best = 0usize;
+            for (i, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = i;
+                }
+            }
+            best as i32
+        })
+        .collect()
 }
 
-fn last_logits(logits: &[f32], profile: &Profile, cur_len: usize) -> Vec<f32> {
+pub(crate) fn last_logits(logits: &[f32], profile: &Profile, cur_len: usize) -> Vec<f32> {
     let v = profile.vocab;
     let pos = cur_len.saturating_sub(1).min(profile.max_seq - 1);
     logits[pos * v..(pos + 1) * v].to_vec()
 }
 
-/// Append a generated token at `cur_len` in every batch row.
-fn push_token(ids: &mut [i32], profile: &Profile, cur_len: usize, token: i32) {
+/// Append each batch row's own generated token at `cur_len`.  (A single
+/// shared token here would silently collapse batch>1 decoding onto row 0's
+/// continuation — every row must follow its own argmax.)
+pub(crate) fn push_tokens(ids: &mut [i32], profile: &Profile, cur_len: usize, tokens: &[i32]) {
     let s = profile.max_seq;
     if cur_len >= s {
         return; // sequence full; decode loop will stop via gen_tokens bound
     }
     let batch = ids.len() / s;
+    debug_assert_eq!(batch, tokens.len(), "one token per batch row");
     for b in 0..batch {
-        ids[b * s + cur_len] = token;
+        ids[b * s + cur_len] = tokens[b];
     }
 }
 
@@ -248,23 +184,27 @@ mod tests {
     }
 
     #[test]
-    fn argmax_reads_correct_row() {
+    fn argmax_reads_correct_row_per_batch() {
         let p = fake_profile();
-        // seq 4 x vocab 10; put max at pos 1 (cur_len=2), index 7
-        let mut logits = vec![0.0f32; 40];
-        logits[1 * 10 + 7] = 5.0;
-        assert_eq!(argmax_at(&logits, &p, 2), 7);
+        // batch 2 x seq 4 x vocab 10; at pos 1 (cur_len=2) put the max at
+        // index 7 for row 0 and index 3 for row 1
+        let mut logits = vec![0.0f32; 80];
+        logits[10 + 7] = 5.0; // row 0, pos 1
+        logits[40 + 10 + 3] = 5.0; // row 1, pos 1
+        assert_eq!(argmax_rows(&logits, &p, 2, 2), vec![7, 3]);
+        assert_eq!(argmax_rows(&logits, &p, 1, 2), vec![7]);
     }
 
     #[test]
-    fn push_token_fills_all_batch_rows() {
+    fn push_tokens_writes_each_row_its_own_token() {
         let p = fake_profile();
         let mut ids = vec![0i32; 8]; // batch 2 x seq 4
-        push_token(&mut ids, &p, 2, 9);
-        assert_eq!(ids[2], 9);
-        assert_eq!(ids[6], 9);
+        push_tokens(&mut ids, &p, 2, &[9, 5]);
+        assert_eq!(ids[2], 9, "row 0 gets its own argmax");
+        assert_eq!(ids[6], 5, "row 1 must NOT inherit row 0's token");
         // out of range is a no-op
-        push_token(&mut ids, &p, 4, 3);
+        push_tokens(&mut ids, &p, 4, &[3, 3]);
+        assert_eq!(&ids, &[0, 0, 9, 0, 0, 0, 5, 0]);
     }
 
     #[test]

@@ -1,0 +1,266 @@
+//! Reusable inference sessions: setup once, many passes.
+//!
+//! [`Engine::run`] reproduces the paper's per-run semantics — resolve the
+//! profile, validate weights, AOT-prepare, build channels/threads, run one
+//! request.  A serving loop doing that per batch (and a decode loop doing
+//! it per token) pays the setup tax on every hot-path iteration.
+//!
+//! A [`Session`] hoists everything that survives a pass out of the loop:
+//!
+//! * profile resolution + weight generation/validation + [`Runtime::prepare`]
+//!   run **exactly once** at [`Engine::open_session`];
+//! * the [`MemoryAccountant`] persists, so the budget (and any pinned
+//!   hot layers) carries across passes;
+//! * the [`OrderedGate`] is rearmed with `reset()` instead of rebuilt;
+//! * the stage-to-agent [`assignment`] is precomputed;
+//! * an optional hot-layer [`LayerCache`] (`RunConfig::pin_budget`) lets
+//!   the Daemon pin computed layers instead of destroying them, so the
+//!   next decode token / serve batch skips disk for pinned stages.
+//!
+//! The pin budget is capped at `budget - max_stage_bytes` so a stalled
+//! admission can always make progress: pinned-but-in-flight stages later
+//! in the admission order are not evictable, so at least one unpinned
+//! stage must always fit beside them (liveness; see `pipeload::gate`).
+//!
+//! [`Runtime::prepare`]: crate::runtime::Runtime::prepare
+//! [`assignment`]: crate::pipeload::assignment
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::{argmax_rows, last_logits, make_input, push_tokens, Engine, RunOutput};
+use crate::baseline;
+use crate::baseline::ResidentModel;
+use crate::config::{Mode, RunConfig};
+use crate::diskio::Disk;
+use crate::memory::MemoryAccountant;
+use crate::metrics::RunReport;
+use crate::model::Profile;
+use crate::pipeload::assignment::assignment;
+use crate::pipeload::cache::{CacheStats, LayerCache};
+use crate::pipeload::gate::OrderedGate;
+use crate::pipeload::{run_pass, ExecCtx, ModelInput, PassEnv, PassStats, PipelineOpts};
+use crate::trace::Tracer;
+
+/// Long-lived pipeline state for one (profile, mode, budget) configuration.
+/// Obtained from [`Engine::open_session`]; run requests with
+/// [`Session::run`] / [`Session::run_batch`].
+pub struct Session<'e> {
+    engine: &'e Engine,
+    cfg: RunConfig,
+    ctx: ExecCtx<'e>,
+    /// None for Baseline (non-pipelined) mode
+    opts: Option<PipelineOpts>,
+    accountant: MemoryAccountant,
+    gate: OrderedGate,
+    plan: Vec<Vec<usize>>,
+    cache: Option<LayerCache>,
+    /// Baseline mode: the whole model, loaded on first use
+    resident: Option<ResidentModel>,
+    prepared_entries: usize,
+    passes_run: usize,
+}
+
+impl Engine {
+    /// Open a reusable session: profile resolution, weight generation, and
+    /// AOT prepare happen here, once, instead of per run.
+    pub fn open_session(&self, cfg: &RunConfig) -> Result<Session<'_>> {
+        let tracer = Tracer::new(cfg.trace);
+        self.open_session_with(cfg, &tracer)
+    }
+
+    /// Like [`Engine::open_session`] but records into a caller-supplied
+    /// tracer (shared buffer), so callers can render Gantt charts.
+    pub fn open_session_with(&self, cfg: &RunConfig, tracer: &Tracer) -> Result<Session<'_>> {
+        Session::open(self, cfg, tracer)
+    }
+}
+
+impl<'e> Session<'e> {
+    fn open(engine: &'e Engine, cfg: &RunConfig, tracer: &Tracer) -> Result<Session<'e>> {
+        let profile = engine.runtime.profile(&cfg.profile)?;
+        if cfg.kv_cache {
+            bail!("--kv-cache is an ablation extension; see benches/ablation.rs");
+        }
+        engine.ensure_weights(&cfg.profile)?;
+        let disk = Disk::preset(&cfg.disk)?;
+        let mut ctx = ExecCtx::new(&engine.runtime, &cfg.profile, &engine.paths.weights, disk)?;
+        ctx.tracer = tracer.clone();
+        ctx.batch = cfg.batch;
+        // compile off the measured path (the paper's pre-run) — once
+        let prepared_entries = engine.runtime.prepare(profile)?;
+
+        let opts = match cfg.mode {
+            Mode::Baseline => None,
+            Mode::PipeSwitch => Some(PipelineOpts::pipeswitch()),
+            Mode::PipeLoad => Some(PipelineOpts::pipeload(cfg.agents)),
+        };
+        let accountant = MemoryAccountant::new(cfg.budget);
+        let cache = Self::build_cache(cfg, profile);
+        let gate = match &cache {
+            Some(c) => OrderedGate::with_cache(accountant.clone(), c.clone()),
+            None => OrderedGate::new(accountant.clone()),
+        };
+        let agents = opts.as_ref().map(|o| o.agents.max(1)).unwrap_or(1);
+        let plan = assignment(profile.stages.len(), agents);
+        Ok(Session {
+            engine,
+            cfg: cfg.clone(),
+            ctx,
+            opts,
+            accountant,
+            gate,
+            plan,
+            cache,
+            resident: None,
+            prepared_entries,
+            passes_run: 0,
+        })
+    }
+
+    /// Hot-layer cache sizing.  Only PIPELOAD destroys layers, so only it
+    /// can pin; the pin budget is clipped below `budget - max_stage` so an
+    /// unpinned admission always fits beside in-flight pinned stages.
+    fn build_cache(cfg: &RunConfig, profile: &Profile) -> Option<LayerCache> {
+        if cfg.mode != Mode::PipeLoad {
+            return None;
+        }
+        let mut pin = cfg.pin_budget.unwrap_or(0);
+        if let Some(budget) = cfg.budget {
+            let max_stage =
+                profile.stages.iter().map(|s| profile.stage_bytes(s)).max().unwrap_or(0);
+            pin = pin.min(budget.saturating_sub(max_stage));
+        }
+        if pin == 0 {
+            None
+        } else {
+            Some(LayerCache::new(pin))
+        }
+    }
+
+    pub fn profile(&self) -> &Profile {
+        self.ctx.profile
+    }
+
+    /// Entries compiled by the session's single prepare call.
+    pub fn prepared_entries(&self) -> usize {
+        self.prepared_entries
+    }
+
+    /// Pipeline passes executed so far (tokens count individually).
+    pub fn passes_run(&self) -> usize {
+        self.passes_run
+    }
+
+    /// Hot-layer cache counters (zeros when no cache is attached).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.as_ref().map(|c| c.stats()).unwrap_or_default()
+    }
+
+    /// Run one request with the session's configured batch and seed.
+    pub fn run(&mut self) -> Result<(RunReport, RunOutput)> {
+        let (batch, seed) = (self.cfg.batch, self.cfg.seed);
+        self.run_batch(batch, seed)
+    }
+
+    /// Run one request (a full forward, or a whole decode loop for
+    /// generative profiles) at the given batch size.  Setup, compiled
+    /// executables, budget, and pinned layers are reused across calls.
+    pub fn run_batch(&mut self, batch: usize, seed: u64) -> Result<(RunReport, RunOutput)> {
+        let profile = self.ctx.profile;
+        self.ctx.batch = batch;
+        let (input, mut ids, prompt_len) = make_input(profile, batch, seed);
+        let gen_tokens = if profile.is_generative() {
+            self.cfg.gen_tokens.unwrap_or(profile.gen_tokens.max(1))
+        } else {
+            0
+        };
+
+        let t0 = Instant::now();
+        let mut passes: Vec<PassStats> = Vec::new();
+        let mut generated = Vec::new();
+        let mut head: Vec<f32> = Vec::new();
+
+        if !profile.is_generative() {
+            let (out, stats) = if self.opts.is_none() {
+                self.baseline_forward(&input)?
+            } else {
+                self.pass(&input)?
+            };
+            head = self.engine.runtime.buffer_to_f32(&out)?;
+            passes.push(stats);
+        } else {
+            let mut cur_len = prompt_len;
+            for _ in 0..gen_tokens {
+                let inp = ModelInput::Ids(ids.clone());
+                // pipelined modes: fresh pass per token (weights were
+                // destroyed — or pinned — after the previous one)
+                let (out, stats) = if self.opts.is_none() {
+                    self.baseline_forward(&inp)?
+                } else {
+                    self.pass(&inp)?
+                };
+                let logits = self.engine.runtime.buffer_to_f32(&out)?;
+                let next = argmax_rows(&logits, profile, batch, cur_len);
+                push_tokens(&mut ids, profile, cur_len, &next);
+                generated.push(next[0]);
+                cur_len += 1;
+                head = last_logits(&logits, profile, cur_len - 1);
+                passes.push(stats);
+            }
+        }
+        let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+        let report = RunReport {
+            model: self.cfg.profile.clone(),
+            mode: self.cfg.mode.name().to_string(),
+            agents: if self.cfg.mode == Mode::PipeLoad { self.cfg.agents } else { 1 },
+            latency_ms,
+            peak_bytes: passes.iter().map(|p| p.peak_bytes).max().unwrap_or(0),
+            mem_stall_ms: passes.iter().map(|p| p.mem_stall_ms).sum(),
+            wait_stall_ms: passes.iter().map(|p| p.wait_stall_ms).sum(),
+            idle_fraction: self.ctx.tracer.inference_idle_fraction().unwrap_or(0.0),
+            tokens: generated.len(),
+            cache_hits: passes.iter().map(|p| p.cache_hits).sum(),
+            cache_misses: passes.iter().map(|p| p.cache_misses).sum(),
+        };
+        head.truncate(16);
+        Ok((report, RunOutput { generated, head_sample: head }))
+    }
+
+    /// One pipelined pass over persistent session state.
+    fn pass(&mut self, input: &ModelInput) -> Result<(xla::PjRtBuffer, PassStats)> {
+        let opts = self.opts.as_ref().expect("pass() requires a pipelined mode");
+        self.gate.reset();
+        self.accountant.reset_peak_to_used();
+        let env = PassEnv { gate: &self.gate, cache: self.cache.as_ref(), plan: &self.plan };
+        let r = run_pass(&self.ctx, opts, &env, input);
+        if r.is_err() {
+            // A failed pass can leave in-flight bytes accounted; drop any
+            // pins and restart the accounting so the session stays usable.
+            if let Some(c) = &self.cache {
+                c.clear();
+            }
+            self.accountant.reset();
+        } else {
+            self.passes_run += 1;
+        }
+        r
+    }
+
+    /// Baseline mode: load the whole model once per session, then run
+    /// resident forwards (the paper's non-pipeline comparator).
+    fn baseline_forward(&mut self, input: &ModelInput) -> Result<(xla::PjRtBuffer, PassStats)> {
+        if self.resident.is_none() {
+            self.resident = Some(baseline::load_all(&self.ctx, &self.accountant)?);
+        }
+        self.accountant.reset_peak_to_used();
+        let model = self.resident.as_ref().unwrap();
+        let r = baseline::forward_resident(&self.ctx, model, &self.accountant, input);
+        if r.is_ok() {
+            self.passes_run += 1;
+        }
+        r
+    }
+}

@@ -205,6 +205,7 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "mode", takes_value: true, default: Some("pipeload"), help: "baseline|pipeswitch|pipeload" });
     opts.push(Opt { name: "agents", takes_value: true, default: Some("4"), help: "number of Loading Agents (pipeload)" });
     opts.push(Opt { name: "budget-mb", takes_value: true, default: None, help: "memory budget in MB" });
+    opts.push(Opt { name: "pin-budget-mb", takes_value: true, default: None, help: "hot-layer cache pin budget in MB (pipeload: keep layers resident across decode tokens when the budget has slack)" });
     opts.push(Opt { name: "batch", takes_value: true, default: Some("1"), help: "batch size (must be AOT-compiled)" });
     opts.push(Opt { name: "tokens", takes_value: true, default: None, help: "generated tokens (generative models)" });
     opts.push(Opt { name: "trace", takes_value: false, default: None, help: "print the execution Gantt chart" });
@@ -215,9 +216,8 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         return Ok(());
     }
     let engine = Engine::with_default_paths()?;
-    let budget = a.get("budget-mb").map(|s| -> Result<u64> {
-        Ok((s.parse::<f64>()? * 1024.0 * 1024.0) as u64)
-    }).transpose()?;
+    let budget = a.mb_bytes("budget-mb")?;
+    let pin_budget = a.mb_bytes("pin-budget-mb")?;
     let mut agents = a.usize("agents")?;
     if let Some(path) = a.get("schedule") {
         let sched = planner::Schedule::load(std::path::Path::new(path))?;
@@ -233,6 +233,7 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         mode: Mode::parse(a.req("mode")?)?,
         agents,
         budget,
+        pin_budget,
         disk: a.req("disk")?.to_string(),
         batch: a.usize("batch")?,
         seed: a.u64("seed")?,
@@ -246,6 +247,14 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     println!("  latency:    {}", human_ms(rep.latency_ms));
     println!("  peak mem:   {}", human_bytes(rep.peak_bytes));
     println!("  mem stalls: {}   wait stalls: {}", human_ms(rep.mem_stall_ms), human_ms(rep.wait_stall_ms));
+    if rep.cache_hits + rep.cache_misses > 0 {
+        println!(
+            "  hot cache:  {} hits / {} misses ({:.0}% hit rate)",
+            rep.cache_hits,
+            rep.cache_misses,
+            rep.cache_hit_rate() * 100.0
+        );
+    }
     if rep.tokens > 0 {
         println!("  generated {} tokens: {:?}", rep.tokens, out.generated);
     }
@@ -265,6 +274,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "mode", takes_value: true, default: Some("pipeload"), help: "baseline|pipeswitch|pipeload" });
     opts.push(Opt { name: "agents", takes_value: true, default: Some("4"), help: "Loading Agents" });
     opts.push(Opt { name: "budget-mb", takes_value: true, default: None, help: "memory budget in MB" });
+    opts.push(Opt { name: "pin-budget-mb", takes_value: true, default: None, help: "hot-layer cache pin budget in MB (pipeload)" });
     opts.push(Opt { name: "requests", takes_value: true, default: Some("16"), help: "requests to serve" });
     opts.push(Opt { name: "rps", takes_value: true, default: Some("0"), help: "mean arrival rate (0 = closed loop)" });
     opts.push(Opt { name: "max-batch", takes_value: true, default: Some("4"), help: "max requests per batch" });
@@ -275,15 +285,15 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         return Ok(());
     }
     let engine = Engine::with_default_paths()?;
-    let budget = a.get("budget-mb").map(|s| -> Result<u64> {
-        Ok((s.parse::<f64>()? * 1024.0 * 1024.0) as u64)
-    }).transpose()?;
+    let budget = a.mb_bytes("budget-mb")?;
+    let pin_budget = a.mb_bytes("pin-budget-mb")?;
     let cfg = ServeConfig {
         run: RunConfig {
             profile: a.req("model")?.to_string(),
             mode: Mode::parse(a.req("mode")?)?,
             agents: a.usize("agents")?,
             budget,
+            pin_budget,
             disk: a.req("disk")?.to_string(),
             seed: a.u64("seed")?,
             ..RunConfig::default()
@@ -299,6 +309,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     println!("  throughput: {:.2} req/s", s.throughput_rps);
     println!("  latency p50 {}  p95 {}  p99 {}", human_ms(s.latency.p50()), human_ms(s.latency.p95()), human_ms(s.latency.p99()));
     println!("  peak mem: {}", human_bytes(s.peak_bytes));
+    if s.cache_hits + s.cache_misses > 0 {
+        println!(
+            "  hot cache: {} hits / {} misses",
+            s.cache_hits, s.cache_misses
+        );
+    }
     println!("  SLO p95 <= {}: {}", human_ms(s.slo.target_ms), if s.slo.met { "MET" } else { "MISSED" });
     Ok(())
 }

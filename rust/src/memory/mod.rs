@@ -94,6 +94,14 @@ impl MemoryAccountant {
         true
     }
 
+    /// Would acquiring `bytes` right now exceed the budget?  (Snapshot —
+    /// callers that need atomicity use [`MemoryAccountant::try_acquire`];
+    /// the hot-layer cache uses this to decide how far to evict.)
+    pub fn would_block(&self, bytes: u64) -> bool {
+        let s = self.inner.0.lock().unwrap();
+        s.budget.map(|b| s.used + bytes > b).unwrap_or(false)
+    }
+
     /// Account bytes that must not block (activations on the compute path).
     /// May push usage above the budget; peak still records it honestly.
     pub fn force_add(&self, bytes: u64) {
@@ -135,6 +143,14 @@ impl MemoryAccountant {
     pub fn stall_stats(&self) -> (Duration, u64) {
         let s = self.inner.0.lock().unwrap();
         (s.stalled, s.stall_events)
+    }
+
+    /// Start a new peak-measurement window at the current occupancy.
+    /// Sessions call this at pass boundaries so each pass reports its own
+    /// peak while pinned hot layers stay accounted across passes.
+    pub fn reset_peak_to_used(&self) {
+        let mut s = self.inner.0.lock().unwrap();
+        s.peak = s.used;
     }
 
     /// Reset usage/peak/stall counters, keeping the budget (profiler reuse).
@@ -234,6 +250,29 @@ mod tests {
         assert_eq!(m.used(), 0);
         assert_eq!(m.peak(), 0);
         assert_eq!(m.budget(), Some(100));
+    }
+
+    #[test]
+    fn would_block_tracks_budget_headroom() {
+        let m = MemoryAccountant::new(Some(100));
+        assert!(!m.would_block(100));
+        m.acquire(60).unwrap();
+        assert!(!m.would_block(40));
+        assert!(m.would_block(41));
+        let unlimited = MemoryAccountant::unlimited();
+        assert!(!unlimited.would_block(u64::MAX));
+    }
+
+    #[test]
+    fn reset_peak_to_used_starts_new_window() {
+        let m = MemoryAccountant::unlimited();
+        m.acquire(100).unwrap();
+        m.free(80);
+        assert_eq!(m.peak(), 100);
+        m.reset_peak_to_used();
+        assert_eq!(m.peak(), 20);
+        m.acquire(30).unwrap();
+        assert_eq!(m.peak(), 50);
     }
 
     #[test]

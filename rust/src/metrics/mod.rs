@@ -91,9 +91,23 @@ pub struct RunReport {
     /// inference-lane idle fraction (Obs II / Fig 1b)
     pub idle_fraction: f64,
     pub tokens: usize,
+    /// hot-layer cache: stages served from memory across the run's passes
+    pub cache_hits: u64,
+    /// hot-layer cache: stages that went to disk while a cache was attached
+    pub cache_misses: u64,
 }
 
 impl RunReport {
+    /// Hot-layer cache hit fraction (0.0 when no cache was attached).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
     pub fn to_json(&self) -> Value {
         Value::obj()
             .set("model", self.model.clone())
@@ -105,6 +119,9 @@ impl RunReport {
             .set("wait_stall_ms", self.wait_stall_ms)
             .set("idle_fraction", self.idle_fraction)
             .set("tokens", self.tokens)
+            .set("cache_hits", self.cache_hits)
+            .set("cache_misses", self.cache_misses)
+            .set("cache_hit_rate", self.cache_hit_rate())
     }
 }
 
@@ -217,6 +234,29 @@ mod tests {
         l.record_ms(100.0);
         assert!(check_slo(&l, 50.0).met); // p95 = 10
         assert!(!check_slo(&l, 5.0).met);
+    }
+
+    #[test]
+    fn cache_hit_rate_math() {
+        let mut r = RunReport {
+            model: "m".into(),
+            mode: "pipeload".into(),
+            agents: 2,
+            latency_ms: 1.0,
+            peak_bytes: 0,
+            mem_stall_ms: 0.0,
+            wait_stall_ms: 0.0,
+            idle_fraction: 0.0,
+            tokens: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+        };
+        assert_eq!(r.cache_hit_rate(), 0.0); // no cache attached
+        r.cache_hits = 3;
+        r.cache_misses = 1;
+        assert!((r.cache_hit_rate() - 0.75).abs() < 1e-9);
+        let v = r.to_json();
+        assert_eq!(v.get("cache_hits").unwrap().as_usize().unwrap(), 3);
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Hot-layer cache: the Daemon's "pin instead of destroy" policy.
+//!
+//! The paper's dynamic memory management always destroys a layer's weights
+//! after compute (`S_dest`).  That is optimal when the budget is the model
+//! bottleneck, but generative decode re-loads every layer once per token —
+//! pure waste whenever the budget has slack.  This cache generalizes the
+//! policy from *always destroy* to *destroy when the budget needs it*:
+//!
+//! * after compute, the Daemon may **pin** a layer here (up to a dedicated
+//!   pin budget) instead of dropping it — the bytes stay accounted in the
+//!   pass's [`MemoryAccountant`];
+//! * on the next pass, a Loading Agent that finds its stage pinned takes it
+//!   straight from the cache — no disk read, no memory admission;
+//! * when an admission stalls on the budget (`S^stop` pressure), the
+//!   [`OrderedGate`] evicts pinned layers LRU-first until the admission
+//!   fits, so pinning can never deadlock a tight-budget run.
+//!
+//! A taken entry leaves the cache for the duration of its pass (its bytes
+//! travel with the `StageMsg`); the Daemon re-pins it after compute.  That
+//! keeps eviction trivially safe: only layers not in flight are evictable.
+//!
+//! [`OrderedGate`]: crate::pipeload::gate::OrderedGate
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::memory::MemoryAccountant;
+use crate::weights::Shard;
+
+/// Counters for the cache-hit metrics in `RunReport`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// passes found the stage pinned (skipped disk + admission)
+    pub hits: u64,
+    /// passes had to load the stage from disk
+    pub misses: u64,
+    /// pinned layers reclaimed under `S^stop` pressure
+    pub evictions: u64,
+    /// bytes currently pinned
+    pub pinned_bytes: u64,
+    /// layers currently pinned
+    pub pinned_layers: usize,
+}
+
+impl CacheStats {
+    /// Hit fraction over all lookups (0.0 when the cache was never used).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    shard: Arc<Shard>,
+    bytes: u64,
+    /// logical clock of the last take/pin (LRU victim = smallest)
+    last_use: u64,
+}
+
+#[derive(Debug)]
+struct CacheState {
+    entries: HashMap<usize, Entry>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    pinned_bytes: u64,
+}
+
+/// Shared pinned-layer store; clone freely (Arc inside).
+#[derive(Debug, Clone)]
+pub struct LayerCache {
+    pin_budget: u64,
+    inner: Arc<Mutex<CacheState>>,
+}
+
+impl LayerCache {
+    /// `pin_budget` caps the bytes the Daemon may keep resident between
+    /// passes; eviction under memory pressure can still undercut it.
+    pub fn new(pin_budget: u64) -> LayerCache {
+        LayerCache {
+            pin_budget,
+            inner: Arc::new(Mutex::new(CacheState {
+                entries: HashMap::new(),
+                clock: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                pinned_bytes: 0,
+            })),
+        }
+    }
+
+    pub fn pin_budget(&self) -> u64 {
+        self.pin_budget
+    }
+
+    /// Take a pinned stage out of the cache (hit).  The entry's bytes stay
+    /// accounted with the caller, who must hand them back via
+    /// [`LayerCache::pin`] or free them through the gate.
+    pub fn take(&self, stage: usize) -> Option<(Arc<Shard>, u64)> {
+        let mut s = self.inner.lock().unwrap();
+        match s.entries.remove(&stage) {
+            Some(e) => {
+                s.pinned_bytes -= e.bytes;
+                s.hits += 1;
+                Some((e.shard, e.bytes))
+            }
+            None => None,
+        }
+    }
+
+    /// Record that a stage had to come from disk (miss).
+    pub fn record_miss(&self) {
+        self.inner.lock().unwrap().misses += 1;
+    }
+
+    /// Try to pin a computed stage instead of destroying it.  Returns false
+    /// when the pin budget has no room — the caller destroys as usual.
+    /// The stage's bytes remain accounted in the pass accountant on success.
+    pub fn pin(&self, stage: usize, shard: Arc<Shard>, bytes: u64) -> bool {
+        let mut s = self.inner.lock().unwrap();
+        if s.pinned_bytes + bytes > self.pin_budget {
+            return false;
+        }
+        s.clock += 1;
+        let clock = s.clock;
+        s.pinned_bytes += bytes;
+        s.entries.insert(stage, Entry { shard, bytes, last_use: clock });
+        true
+    }
+
+    /// `S^stop` pressure valve: evict LRU-pinned layers until `bytes` fit
+    /// the accountant's budget or nothing is left.  Returns bytes freed.
+    pub fn evict_for(&self, bytes: u64, accountant: &MemoryAccountant) -> u64 {
+        let mut s = self.inner.lock().unwrap();
+        let mut freed = 0u64;
+        while accountant.would_block(bytes) {
+            let victim = match s.entries.iter().min_by_key(|(_, e)| e.last_use) {
+                Some((&stage, _)) => stage,
+                None => break,
+            };
+            let e = s.entries.remove(&victim).unwrap();
+            s.pinned_bytes -= e.bytes;
+            s.evictions += 1;
+            freed += e.bytes;
+            drop(e.shard); // the destruction
+            accountant.free(e.bytes);
+        }
+        freed
+    }
+
+    /// Drop every pinned layer without touching the accountant (used when a
+    /// failed pass resets the accountant wholesale).
+    pub fn clear(&self) {
+        let mut s = self.inner.lock().unwrap();
+        s.entries.clear();
+        s.pinned_bytes = 0;
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let s = self.inner.lock().unwrap();
+        CacheStats {
+            hits: s.hits,
+            misses: s.misses,
+            evictions: s.evictions,
+            pinned_bytes: s.pinned_bytes,
+            pinned_layers: s.entries.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(stage: u32) -> Arc<Shard> {
+        Arc::new(Shard { kind: "encoder_layer".into(), stage, tensors: vec![] })
+    }
+
+    #[test]
+    fn pin_take_roundtrip_counts_hits() {
+        let c = LayerCache::new(1000);
+        assert!(c.pin(3, shard(3), 400));
+        let (s, b) = c.take(3).unwrap();
+        assert_eq!(s.stage, 3);
+        assert_eq!(b, 400);
+        assert!(c.take(3).is_none()); // taken entries leave the cache
+        let st = c.stats();
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.pinned_bytes, 0);
+        assert_eq!(st.pinned_layers, 0);
+    }
+
+    #[test]
+    fn pin_budget_enforced() {
+        let c = LayerCache::new(500);
+        assert!(c.pin(0, shard(0), 300));
+        assert!(!c.pin(1, shard(1), 300)); // would exceed 500
+        assert!(c.pin(2, shard(2), 200));
+        assert_eq!(c.stats().pinned_bytes, 500);
+        assert_eq!(c.stats().pinned_layers, 2);
+    }
+
+    #[test]
+    fn evict_for_frees_lru_first_until_fit() {
+        let accountant = MemoryAccountant::new(Some(1000));
+        let c = LayerCache::new(1000);
+        for stage in 0..3usize {
+            assert!(accountant.try_acquire(300));
+            assert!(c.pin(stage, shard(stage as u32), 300));
+        }
+        assert_eq!(accountant.used(), 900);
+        // wanting 500 forces two evictions (oldest pins first: 0 then 1)
+        let freed = c.evict_for(500, &accountant);
+        assert_eq!(freed, 600);
+        assert_eq!(accountant.used(), 300);
+        let st = c.stats();
+        assert_eq!(st.evictions, 2);
+        assert!(c.take(2).is_some(), "newest pin must survive");
+        assert!(c.take(0).is_none());
+        assert!(c.take(1).is_none());
+    }
+
+    #[test]
+    fn evict_for_stops_when_cache_empty() {
+        let accountant = MemoryAccountant::new(Some(100));
+        assert!(accountant.try_acquire(100));
+        let c = LayerCache::new(100);
+        assert_eq!(c.evict_for(50, &accountant), 0);
+        assert_eq!(accountant.used(), 100);
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let c = LayerCache::new(100);
+        assert_eq!(c.stats().hit_rate(), 0.0);
+        c.pin(0, shard(0), 10);
+        c.take(0);
+        c.record_miss();
+        assert!((c.stats().hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clear_drops_everything() {
+        let c = LayerCache::new(100);
+        c.pin(0, shard(0), 50);
+        c.clear();
+        assert_eq!(c.stats().pinned_layers, 0);
+        assert_eq!(c.stats().pinned_bytes, 0);
+        assert!(c.take(0).is_none());
+    }
+}

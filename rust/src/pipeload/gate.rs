@@ -16,13 +16,25 @@
 //! proceeds.  This is the concrete realization of the paper's `S^stop`
 //! protocol — "waiting for admission" == "paused by the Daemon".
 //!
+//! Waiters park on the gate's own condvar — no polling.  This is sound
+//! because every event that can unblock an admission notifies it: each
+//! admission/skip (turn advance), [`OrderedGate::free`] (every
+//! budget-relevant release in the pipeline routes through it), shutdown,
+//! and hot-layer eviction (performed inline by the stalled admitter via
+//! the attached [`LayerCache`], so it needs no wakeup at all).
+//!
+//! One gate serves one pipeline pass; a [`Session`] reuses the same gate
+//! across passes via [`OrderedGate::reset`].
+//!
 //! [`MemoryAccountant::acquire`]: crate::memory::MemoryAccountant::acquire
+//! [`Session`]: crate::engine::session::Session
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use super::cache::LayerCache;
 use crate::memory::MemoryAccountant;
 
 #[derive(Debug)]
@@ -32,12 +44,10 @@ struct GateState {
 }
 
 /// Stage-ordered admission on top of a [`MemoryAccountant`].
-///
-/// One gate serves one pipeline pass (admissions 0..N in order); create a
-/// fresh gate per pass (per generated token for GPT-style decode).
 #[derive(Debug, Clone)]
 pub struct OrderedGate {
     accountant: MemoryAccountant,
+    cache: Option<LayerCache>,
     state: Arc<(Mutex<GateState>, Condvar)>,
 }
 
@@ -45,11 +55,20 @@ impl OrderedGate {
     pub fn new(accountant: MemoryAccountant) -> OrderedGate {
         OrderedGate {
             accountant,
+            cache: None,
             state: Arc::new((
                 Mutex::new(GateState { next_admit: 0, shutdown: false }),
                 Condvar::new(),
             )),
         }
+    }
+
+    /// Gate with a hot-layer cache attached: admissions that stall on the
+    /// budget evict pinned layers (LRU) before parking.
+    pub fn with_cache(accountant: MemoryAccountant, cache: LayerCache) -> OrderedGate {
+        let mut g = OrderedGate::new(accountant);
+        g.cache = Some(cache);
+        g
     }
 
     pub fn accountant(&self) -> &MemoryAccountant {
@@ -71,21 +90,72 @@ impl OrderedGate {
             if s.shutdown {
                 bail!("gate shut down");
             }
-            if s.next_admit == stage && self.accountant.try_acquire(bytes) {
+            if s.next_admit == stage {
+                if self.accountant.try_acquire(bytes) {
+                    s.next_admit += 1;
+                    cv.notify_all();
+                    return Ok(t0.elapsed());
+                }
+                // S^stop pressure: reclaim pinned hot layers before parking.
+                if let Some(cache) = &self.cache {
+                    if cache.evict_for(bytes, &self.accountant) > 0 {
+                        continue; // retry with the reclaimed headroom
+                    }
+                }
+            }
+            s = cv.wait(s).unwrap();
+        }
+    }
+
+    /// Advance the admission order past `stage` without acquiring memory —
+    /// used for cache hits, whose bytes are already resident and accounted.
+    /// Blocks until it is `stage`'s turn so ordering stays intact; returns
+    /// the time spent waiting (recorded like an admit() stall, so cache
+    /// hits and misses report their ordering waits symmetrically).
+    pub fn skip(&self, stage: usize) -> Result<Duration> {
+        let (lock, cv) = &*self.state;
+        let t0 = Instant::now();
+        let mut s = lock.lock().unwrap();
+        loop {
+            if s.shutdown {
+                bail!("gate shut down");
+            }
+            if s.next_admit == stage {
                 s.next_admit += 1;
                 cv.notify_all();
                 return Ok(t0.elapsed());
             }
-            // Short timeout: frees go through the accountant, whose condvar
-            // we are not parked on; poll cheaply instead of missing wakeups.
-            s = cv.wait_timeout(s, Duration::from_millis(2)).unwrap().0;
+            s = cv.wait(s).unwrap();
         }
     }
 
-    /// Free bytes (daemon destruction) and wake admission waiters.
+    /// Free bytes (daemon destruction, transient uploads, activations) and
+    /// wake admission waiters.  All budget-relevant releases inside a
+    /// pipeline pass MUST route through here, not the raw accountant —
+    /// admit() parks on this gate's condvar.
+    ///
+    /// The notify happens while holding the gate mutex: admit() checks the
+    /// budget under that mutex before parking, so an unlocked notify could
+    /// land in the window between a failed `try_acquire` and `cv.wait` and
+    /// be lost forever (the classic lost-wakeup).  Taking the mutex
+    /// serializes this free against that window.  No lock-order inversion:
+    /// the accountant lock inside `free` is released before the gate mutex
+    /// is taken.
     pub fn free(&self, bytes: u64) {
         self.accountant.free(bytes);
+        let _guard = self.state.0.lock().unwrap();
         self.state.1.notify_all();
+    }
+
+    /// Rearm for the next pass of the same session: admission restarts at
+    /// stage 0.  The accountant is NOT touched — pinned hot layers keep
+    /// their bytes accounted across passes.
+    pub fn reset(&self) {
+        let (lock, cv) = &*self.state;
+        let mut s = lock.lock().unwrap();
+        s.next_admit = 0;
+        s.shutdown = false;
+        cv.notify_all();
     }
 
     pub fn shutdown(&self) {
@@ -200,5 +270,54 @@ mod tests {
         gate.admit(0, 10).unwrap();
         let waited = h.join().unwrap();
         assert!(waited.as_millis() >= 30, "{waited:?}");
+    }
+
+    #[test]
+    fn skip_advances_order_without_memory() {
+        let gate = OrderedGate::new(MemoryAccountant::new(Some(10)));
+        gate.skip(0).unwrap();
+        assert_eq!(gate.accountant().used(), 0);
+        // stage 1 can now admit immediately
+        gate.admit(1, 10).unwrap();
+        assert_eq!(gate.accountant().used(), 10);
+    }
+
+    #[test]
+    fn skip_waits_for_turn_and_unblocks_successor() {
+        let gate = OrderedGate::new(MemoryAccountant::unlimited());
+        let g = gate.clone();
+        let h = std::thread::spawn(move || g.skip(1));
+        std::thread::sleep(Duration::from_millis(20));
+        gate.admit(0, 5).unwrap(); // unblocks the skipper
+        h.join().unwrap().unwrap();
+        gate.admit(2, 5).unwrap(); // order advanced past the skip
+    }
+
+    #[test]
+    fn reset_rearms_for_next_pass() {
+        let gate = OrderedGate::new(MemoryAccountant::new(Some(100)));
+        gate.admit(0, 40).unwrap();
+        gate.admit(1, 40).unwrap();
+        gate.free(80);
+        gate.reset();
+        // admission restarts at stage 0; budget intact
+        gate.admit(0, 100).unwrap();
+        assert_eq!(gate.accountant().used(), 100);
+    }
+
+    #[test]
+    fn stalled_admit_evicts_pinned_layers() {
+        use crate::weights::Shard;
+        let accountant = MemoryAccountant::new(Some(100));
+        let cache = LayerCache::new(100);
+        let gate = OrderedGate::with_cache(accountant.clone(), cache.clone());
+        // a previous pass pinned 80 bytes
+        assert!(accountant.try_acquire(80));
+        assert!(cache.pin(7, Arc::new(Shard { kind: "k".into(), stage: 7, tensors: vec![] }), 80));
+        // a new admission needing 60 must evict the pin, not deadlock
+        let waited = gate.admit(0, 60).unwrap();
+        assert!(waited.as_millis() < 1000);
+        assert_eq!(accountant.used(), 60);
+        assert_eq!(cache.stats().evictions, 1);
     }
 }

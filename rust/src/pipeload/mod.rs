@@ -16,8 +16,30 @@
 //! The same machinery with `destroy_after_compute = false` and one agent
 //! is the PipeSwitch-style *standard pipeline* comparator: layers stay
 //! resident, so peak memory equals the whole model.
+//!
+//! # Sessions & hot-layer cache
+//!
+//! [`run_pipeline`] is the one-shot entry point: it builds a fresh
+//! accountant + gate + assignment per pass (the paper's semantics, where
+//! every generated token reloads the model).  Long-lived callers — the
+//! serving loop and the generative decode loop — instead construct those
+//! once in an [`engine::session::Session`] and drive [`run_pass`]
+//! directly, which accepts a [`PassEnv`]:
+//!
+//! * a reusable [`gate::OrderedGate`] (rearmed with `reset()` per pass, so
+//!   the budget and any pinned bytes persist across passes);
+//! * a precomputed agent [`assignment`];
+//! * an optional [`cache::LayerCache`].  With the cache attached, the
+//!   Daemon *pins* computed layers (up to the pin budget) instead of
+//!   destroying them, and the next pass's Loading Agents take pinned
+//!   stages straight from memory — no disk read, no admission.  Under
+//!   `S^stop` pressure the gate evicts pins LRU-first, so the cache only
+//!   ever consumes budget slack.
+//!
+//! [`engine::session::Session`]: crate::engine::session::Session
 
 pub mod assignment;
+pub mod cache;
 pub mod gate;
 
 use std::collections::HashMap;
@@ -34,7 +56,12 @@ use crate::runtime::{literal_for_spec, Runtime};
 use crate::signals::{Signal, SignalLog};
 use crate::trace::{Kind, Lane, Tracer};
 use crate::weights::{read_shard_from, validate_against, Shard};
+use cache::LayerCache;
 use gate::OrderedGate;
+
+/// Trace/stat threshold: spans shorter than this are scheduling noise, not
+/// stalls (a `recv` that found its message already waiting is not a stall).
+const STALL_EPS_MS: f64 = 0.05;
 
 /// Input to one model pass.
 #[derive(Debug, Clone)]
@@ -131,30 +158,64 @@ pub struct PassStats {
     pub wait_stall_ms: f64,
     pub load_ms_total: f64,
     pub compute_ms_total: f64,
+    /// stages served from the hot-layer cache (sessions only)
+    pub cache_hits: u64,
+    /// stages loaded from disk while a cache was attached
+    pub cache_misses: u64,
 }
 
+/// Long-lived pipeline state a pass runs against.  [`run_pipeline`] builds
+/// a throwaway one; a `Session` owns one across passes.
+pub struct PassEnv<'a> {
+    pub gate: &'a OrderedGate,
+    /// hot-layer cache (pin-instead-of-destroy); None = paper semantics
+    pub cache: Option<&'a LayerCache>,
+    /// stage-to-agent assignment; must cover `opts.agents` agents
+    pub plan: &'a [Vec<usize>],
+}
+
+// Whether a shard came from disk or the hot-layer cache, its accounting is
+// identical once in flight: bytes ride with the message, and the Daemon
+// either pins them (stay accounted) or destroys them (freed via the gate).
 struct StageMsg {
     stage: usize,
     #[allow(dead_code)]
     agent: usize,
-    shard: Shard,
+    shard: Arc<Shard>,
     bytes: u64,
 }
 
-/// Run one full pipelined pass; returns the head output buffer + stats.
+/// Run one full pipelined pass with throwaway state; returns the head
+/// output buffer + stats.  (Sessions call [`run_pass`] with persistent
+/// state instead.)
 pub fn run_pipeline(
     ctx: &ExecCtx,
     opts: &PipelineOpts,
     budget: Option<u64>,
     input: &ModelInput,
 ) -> Result<(xla::PjRtBuffer, PassStats)> {
+    let accountant = MemoryAccountant::new(budget);
+    let gate = OrderedGate::new(accountant);
+    let plan = assignment::assignment(ctx.profile.stages.len(), opts.agents.max(1));
+    let env = PassEnv { gate: &gate, cache: None, plan: &plan };
+    run_pass(ctx, opts, &env, input)
+}
+
+/// Run one pipelined pass against caller-owned state (gate, assignment,
+/// optional hot-layer cache).  The gate must be rearmed (`reset`) by the
+/// caller between passes.
+pub fn run_pass(
+    ctx: &ExecCtx,
+    opts: &PipelineOpts,
+    env: &PassEnv,
+    input: &ModelInput,
+) -> Result<(xla::PjRtBuffer, PassStats)> {
     let profile = ctx.profile;
-    let n_stages = profile.stages.len();
     if opts.agents == 0 {
         bail!("need at least one loading agent");
     }
     if !opts.destroy_after_compute {
-        if let Some(b) = budget {
+        if let Some(b) = env.gate.accountant().budget() {
             if b < profile.total_weight_bytes {
                 bail!(
                     "standard pipeline keeps all weights resident; model needs {} B > budget {} B",
@@ -165,17 +226,18 @@ pub fn run_pipeline(
         }
     }
 
-    let accountant = MemoryAccountant::new(budget);
-    let gate = OrderedGate::new(accountant.clone());
+    let gate = env.gate;
+    let accountant = gate.accountant().clone();
     let (tx_load, rx_load) = mpsc::channel::<Result<StageMsg>>();
     let (tx_dest, rx_dest) = mpsc::channel::<StageMsg>();
     let mem_stall_ms = Arc::new(Mutex::new(0.0f64));
     let load_ms = Arc::new(Mutex::new(0.0f64));
-    let plan = assignment::assignment(n_stages, opts.agents);
+    let stats0 = env.cache.map(|c| c.stats());
 
     let result = std::thread::scope(|scope| -> Result<(xla::PjRtBuffer, PassStats)> {
         // ---- Daemon Agent -------------------------------------------------
         let daemon_gate = gate.clone();
+        let daemon_cache = env.cache.cloned();
         let daemon_tracer = ctx.tracer.clone();
         let destroy = opts.destroy_after_compute;
         scope.spawn(move || {
@@ -183,6 +245,20 @@ pub fn run_pipeline(
             for msg in rx_dest {
                 if destroy {
                     let t0 = daemon_tracer.now_ms();
+                    // Pin instead of destroy when the pin budget has room;
+                    // the layer's bytes stay accounted for the next pass.
+                    if let Some(cache) = &daemon_cache {
+                        if cache.pin(msg.stage, msg.shard.clone(), msg.bytes) {
+                            daemon_tracer.record(
+                                Lane::Daemon,
+                                Kind::Pin,
+                                Some(msg.stage),
+                                t0,
+                                daemon_tracer.now_ms(),
+                            );
+                            continue;
+                        }
+                    }
                     drop(msg.shard); // the destruction
                     daemon_gate.free(msg.bytes);
                     daemon_tracer.record(
@@ -202,11 +278,12 @@ pub fn run_pipeline(
         });
 
         // ---- Loading Agents ----------------------------------------------
-        for (agent, my_stages) in plan.iter().enumerate() {
+        for (agent, my_stages) in env.plan.iter().enumerate() {
             if my_stages.is_empty() {
                 continue;
             }
             let gate = gate.clone();
+            let cache = env.cache.cloned();
             let tx = tx_load.clone();
             let tracer = ctx.tracer.clone();
             let signals = ctx.signals.clone();
@@ -220,6 +297,38 @@ pub fn run_pipeline(
                 for &stage_idx in &my_stages {
                     let stage = &profile.stages[stage_idx];
                     let bytes = profile.stage_bytes(stage);
+                    // Hot-layer cache: a pinned stage skips disk AND
+                    // admission (its bytes are already resident), but must
+                    // still take its slot in the admission order — and its
+                    // ordering wait is recorded exactly like a miss's.
+                    if let Some(cache) = &cache {
+                        if let Some((shard, bytes)) = cache.take(stage_idx) {
+                            let t_gate0 = tracer.now_ms();
+                            let waited = match gate.skip(stage_idx) {
+                                Ok(w) => w,
+                                Err(e) => {
+                                    let _ = tx.send(Err(e));
+                                    return;
+                                }
+                            };
+                            let waited_ms = waited.as_secs_f64() * 1000.0;
+                            if waited_ms > STALL_EPS_MS {
+                                tracer.record(
+                                    Lane::Loader(agent),
+                                    Kind::StallMem,
+                                    Some(stage_idx),
+                                    t_gate0,
+                                    tracer.now_ms(),
+                                );
+                                signals.emit(Signal::Stop { agent, ms: waited_ms });
+                                *stall_acc.lock().unwrap() += waited_ms;
+                            }
+                            signals.emit(Signal::Comp { stage: stage_idx, agent });
+                            let _ = tx.send(Ok(StageMsg { stage: stage_idx, agent, shard, bytes }));
+                            continue;
+                        }
+                        cache.record_miss();
+                    }
                     // S^stop: wait for the Daemon's memory admission.
                     let t_gate0 = tracer.now_ms();
                     let waited = match gate.admit(stage_idx, bytes) {
@@ -230,7 +339,7 @@ pub fn run_pipeline(
                         }
                     };
                     let waited_ms = waited.as_secs_f64() * 1000.0;
-                    if waited_ms > 0.05 {
+                    if waited_ms > STALL_EPS_MS {
                         tracer.record(
                             Lane::Loader(agent),
                             Kind::StallMem,
@@ -259,7 +368,12 @@ pub fn run_pipeline(
                             *load_acc.lock().unwrap() += t1 - t0;
                             // S_comp: layer ready for computation.
                             signals.emit(Signal::Comp { stage: stage_idx, agent });
-                            let _ = tx.send(Ok(StageMsg { stage: stage_idx, agent, shard, bytes }));
+                            let _ = tx.send(Ok(StageMsg {
+                                stage: stage_idx,
+                                agent,
+                                shard: Arc::new(shard),
+                                bytes,
+                            }));
                         }
                         Err(e) => {
                             gate.free(bytes);
@@ -273,7 +387,7 @@ pub fn run_pipeline(
         drop(tx_load);
 
         // ---- Inference Agent (this thread owns the PJRT runtime) ----------
-        let run = inference_loop(ctx, profile, input, rx_load, &tx_dest, &accountant, &gate);
+        let run = inference_loop(ctx, profile, input, rx_load, &tx_dest, gate);
         drop(tx_dest); // closes the daemon; scope joins it
         match &run {
             Ok(_) => {}
@@ -283,6 +397,11 @@ pub fn run_pipeline(
         stats.peak_bytes = accountant.peak();
         stats.mem_stall_ms = *mem_stall_ms.lock().unwrap();
         stats.load_ms_total = *load_ms.lock().unwrap();
+        if let (Some(c), Some(s0)) = (env.cache, stats0) {
+            let s1 = c.stats();
+            stats.cache_hits = s1.hits - s0.hits;
+            stats.cache_misses = s1.misses - s0.misses;
+        }
         Ok((out, stats))
     });
 
@@ -296,9 +415,9 @@ fn inference_loop(
     input: &ModelInput,
     rx_load: mpsc::Receiver<Result<StageMsg>>,
     tx_dest: &mpsc::Sender<StageMsg>,
-    accountant: &MemoryAccountant,
     gate: &OrderedGate,
 ) -> Result<(xla::PjRtBuffer, PassStats)> {
+    let accountant = gate.accountant();
     let mut stats = PassStats::default();
     let mut pending: HashMap<usize, StageMsg> = HashMap::new();
     let n_stages = profile.stages.len();
@@ -316,16 +435,14 @@ fn inference_loop(
             match rx_load.recv() {
                 Ok(Ok(msg)) => {
                     let t1 = ctx.tracer.now_ms();
-                    if msg.stage != k {
-                        // arrived early; queue it and keep waiting
+                    // Only a recv that actually blocked is a pipeline stall
+                    // (Fig 1b); a message that was already waiting returns
+                    // in ~microseconds and must not inflate idle_fraction.
+                    if t1 - t0 > STALL_EPS_MS {
                         ctx.tracer.record(Lane::Inference, Kind::StallWait, Some(k), t0, t1);
                         stats.wait_stall_ms += t1 - t0;
-                        pending.insert(msg.stage, msg);
-                    } else {
-                        ctx.tracer.record(Lane::Inference, Kind::StallWait, Some(k), t0, t1);
-                        stats.wait_stall_ms += t1 - t0;
-                        pending.insert(k, msg);
                     }
+                    pending.insert(msg.stage, msg);
                 }
                 Ok(Err(e)) => {
                     gate.shutdown();
@@ -378,23 +495,23 @@ fn inference_loop(
         let t1 = ctx.tracer.now_ms();
         ctx.tracer.record(Lane::Inference, Kind::Compute, Some(k), t0, t1);
         stats.compute_ms_total += t1 - t0;
-        accountant.free(msg.bytes);
+        gate.free(msg.bytes);
 
         // swap activation accounting: new out replaces old act
         let out_bytes = entry.output.num_bytes() as u64;
         accountant.force_add(out_bytes);
-        accountant.free(act_bytes);
+        gate.free(act_bytes);
         act_bytes = out_bytes;
         act = Some(out);
 
-        // S_dest: hand the layer to the Daemon for destruction
+        // S_dest: hand the layer to the Daemon for destruction (or pinning)
         ctx.signals.emit(Signal::Dest { stage: k });
         let _ = tx_dest.send(msg);
     }
     if enc_out.is_some() {
-        accountant.free(enc_out_bytes);
+        gate.free(enc_out_bytes);
     }
-    accountant.free(act_bytes);
+    gate.free(act_bytes);
     ctx.signals.emit(Signal::Done);
     Ok((act.unwrap(), stats))
 }

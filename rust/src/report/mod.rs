@@ -220,6 +220,10 @@ fn parse_reports(v: &Value) -> Result<Vec<RunReport>> {
                 wait_stall_ms: r.req("wait_stall_ms")?.as_f64()?,
                 idle_fraction: r.req("idle_fraction")?.as_f64()?,
                 tokens: r.req("tokens")?.as_usize()?,
+                // absent in caches written before the hot-layer cache landed
+                cache_hits: r.get("cache_hits").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64,
+                cache_misses: r.get("cache_misses").and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+                    as u64,
             })
         })
         .collect()
@@ -383,6 +387,8 @@ mod tests {
             wait_stall_ms: 0.0,
             idle_fraction: 0.0,
             tokens: 0,
+            cache_hits: 0,
+            cache_misses: 0,
         }
     }
 

@@ -27,13 +27,19 @@ pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     executables: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    prepare_calls: std::cell::Cell<u64>,
 }
 
 impl Runtime {
     pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, manifest, executables: RefCell::new(HashMap::new()) })
+        Ok(Runtime {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+            prepare_calls: std::cell::Cell::new(0),
+        })
     }
 
     pub fn profile(&self, name: &str) -> Result<&Profile> {
@@ -66,12 +72,19 @@ impl Runtime {
     /// Pre-compile every entry a profile needs (engine warmup; keeps
     /// compilation off the measured path, like the paper's pre-run).
     pub fn prepare(&self, profile: &Profile) -> Result<usize> {
+        self.prepare_calls.set(self.prepare_calls.get() + 1);
         let mut n = 0;
         for entry in profile.entries.values() {
             self.executable(profile, entry)?;
             n += 1;
         }
         Ok(n)
+    }
+
+    /// How many times [`Runtime::prepare`] ran (tests assert sessions
+    /// amortize AOT preparation to exactly once per session).
+    pub fn prepare_calls(&self) -> u64 {
+        self.prepare_calls.get()
     }
 
     /// Execute one layer: activation buffers first, then the stage's

@@ -3,10 +3,15 @@
 //! The end-to-end driver for the paper's §V-C serving claim ("all results
 //! meeting SLO expectations").  A workload generator thread produces
 //! requests with Poisson arrivals into a queue; the serving loop batches
-//! them (size- and deadline-bounded) and executes each batch as one engine
-//! pass in the configured mode.  The engine (and its non-Send PJRT
-//! runtime) stays on the caller's thread — a TCP front-end would feed the
-//! same queue without touching this loop.
+//! them (size- and deadline-bounded) and executes each batch as one pass
+//! of a single long-lived [`Session`] in the configured mode — profile
+//! resolution, weight validation, and AOT prepare run once per serving
+//! session, not once per batch, and PIPELOAD's hot-layer cache (if a pin
+//! budget is set) carries pinned layers from batch to batch.  The session
+//! (and its non-Send PJRT runtime) stays on the caller's thread — a TCP
+//! front-end would feed the same queue without touching this loop.
+//!
+//! [`Session`]: crate::engine::Session
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -63,6 +68,9 @@ pub struct ServeSummary {
     pub peak_bytes: u64,
     pub slo: SloReport,
     pub mean_batch_size: f64,
+    /// hot-layer cache hits/misses across all batches (0/0 = no cache)
+    pub cache_hits: u64,
+    pub cache_misses: u64,
 }
 
 /// Pick the smallest AOT-compiled batch size that fits `n` requests (or
@@ -79,9 +87,11 @@ pub fn pick_batch(available: &[usize], n: usize) -> usize {
 }
 
 /// Run the serving session; engine passes happen on this thread.
+/// One [`crate::engine::Session`] serves every batch: `Runtime::prepare`
+/// runs exactly once here, regardless of how many batches follow.
 pub fn serve(engine: &Engine, cfg: &ServeConfig) -> Result<ServeSummary> {
-    let profile = engine.runtime.profile(&cfg.run.profile)?;
-    let batches_avail = profile.batches.clone();
+    let mut session = engine.open_session(&cfg.run)?;
+    let batches_avail = session.profile().batches.clone();
     let (tx, rx) = mpsc::channel::<Request>();
     let num = cfg.num_requests;
     let rps = cfg.arrival_rps;
@@ -124,10 +134,8 @@ pub fn serve(engine: &Engine, cfg: &ServeConfig) -> Result<ServeSummary> {
             }
         }
         let b = pick_batch(&batches_avail, batch.len());
-        let mut run_cfg = cfg.run.clone();
-        run_cfg.batch = b;
-        run_cfg.seed = cfg.run.seed.wrapping_add(batches as u64);
-        let (report, _) = engine.run(&run_cfg)?;
+        let seed = cfg.run.seed.wrapping_add(batches as u64);
+        let (report, _) = session.run_batch(b, seed)?;
         peak = peak.max(report.peak_bytes);
         batches += 1;
         batch_sizes += batch.len();
@@ -141,6 +149,7 @@ pub fn serve(engine: &Engine, cfg: &ServeConfig) -> Result<ServeSummary> {
 
     let wall = t_start.elapsed().as_secs_f64();
     let slo = check_slo(&latency, cfg.slo_ms);
+    let cache = session.cache_stats();
     Ok(ServeSummary {
         served,
         batches,
@@ -149,6 +158,8 @@ pub fn serve(engine: &Engine, cfg: &ServeConfig) -> Result<ServeSummary> {
         slo,
         mean_batch_size: batch_sizes as f64 / batches.max(1) as f64,
         latency,
+        cache_hits: cache.hits,
+        cache_misses: cache.misses,
     })
 }
 

@@ -40,6 +40,8 @@ pub enum Kind {
     StallMem,
     /// inference waiting for the next layer (pipeline stall, Fig 1b)
     StallWait,
+    /// daemon pinned a layer into the hot-layer cache instead of destroying
+    Pin,
 }
 
 impl Kind {
@@ -50,6 +52,7 @@ impl Kind {
             Kind::Destroy => 'd',
             Kind::StallMem => 's',
             Kind::StallWait => '.',
+            Kind::Pin => 'P',
         }
     }
 
@@ -60,6 +63,7 @@ impl Kind {
             Kind::Destroy => "destroy",
             Kind::StallMem => "stall_mem",
             Kind::StallWait => "stall_wait",
+            Kind::Pin => "pin",
         }
     }
 }
@@ -205,7 +209,7 @@ impl Tracer {
             }
             out.push_str(&format!("{:>4} |{}|\n", lane.label(), row.iter().collect::<String>()));
         }
-        out.push_str("      L=load  #=compute  d=destroy  s=mem-stall  .=wait-stall\n");
+        out.push_str("      L=load  #=compute  d=destroy  P=pin  s=mem-stall  .=wait-stall\n");
         out
     }
 }

@@ -95,6 +95,19 @@ impl Args {
         Ok(self.req(name)?.parse()?)
     }
 
+    /// Optional `--<name>` given in megabytes, returned as bytes.
+    /// Shared by the budget-style knobs (`--budget-mb`, `--pin-budget-mb`).
+    pub fn mb_bytes(&self, name: &str) -> Result<Option<u64>> {
+        self.get(name)
+            .map(|s| -> Result<u64> {
+                let mb: f64 = s
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--{name} expects a number (MB), got '{s}'"))?;
+                Ok((mb * 1024.0 * 1024.0) as u64)
+            })
+            .transpose()
+    }
+
     /// Comma-separated list value.
     pub fn list(&self, name: &str) -> Vec<String> {
         self.get(name)
@@ -163,6 +176,17 @@ mod tests {
     #[test]
     fn flag_with_value_errors() {
         assert!(Args::parse(&sv(&["--verbose=1"]), &opts()).is_err());
+    }
+
+    #[test]
+    fn mb_bytes_parsing() {
+        let o = vec![Opt { name: "budget-mb", takes_value: true, default: None, help: "" }];
+        let a = Args::parse(&sv(&["--budget-mb", "1.5"]), &o).unwrap();
+        assert_eq!(a.mb_bytes("budget-mb").unwrap(), Some(1536 * 1024));
+        let b = Args::parse(&sv(&[]), &o).unwrap();
+        assert_eq!(b.mb_bytes("budget-mb").unwrap(), None);
+        let c = Args::parse(&sv(&["--budget-mb", "lots"]), &o).unwrap();
+        assert!(c.mb_bytes("budget-mb").is_err());
     }
 
     #[test]
