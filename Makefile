@@ -6,7 +6,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts golden build test fmt clippy clean
+.PHONY: artifacts golden build test examples fmt clippy clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../rust/artifacts
@@ -19,6 +19,9 @@ build:
 
 test:
 	cargo build --release && cargo test -q
+
+examples:
+	cargo build --release --examples
 
 fmt:
 	cargo fmt --check

@@ -1,0 +1,126 @@
+//! Multi-model serving through one Router and one shared memory budget.
+//!
+//! Two model profiles — an encoder (BERT sim) and a generative decoder
+//! (GPT sim) — are served by a single [`hermes::server::Router`]: one
+//! long-lived session per profile, both opened against one shared
+//! `MemoryAccountant` whose budget is the device-wide memory limit.  A
+//! producer thread interleaves requests for both models through a cloned
+//! `RouterHandle`; the router batches per profile, applies
+//! deadline-aware admission, and lets one model's `S^stop` pressure evict
+//! the other model's pinned hot layers.
+//!
+//! ```bash
+//! cargo run --release --example router_multi_model
+//! ```
+
+use std::time::Duration;
+
+use hermes::config::{Mode, RunConfig};
+use hermes::engine::Engine;
+use hermes::server::{InferRequest, Router, RouterConfig};
+use hermes::util::{human_bytes, human_ms};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::with_default_paths()?;
+    let encoder = std::env::var("HERMES_ROUTER_ENCODER").unwrap_or_else(|_| "tiny-bert".into());
+    let decoder = std::env::var("HERMES_ROUTER_DECODER").unwrap_or_else(|_| "tiny-gpt".into());
+    let requests: usize = std::env::var("HERMES_ROUTER_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+
+    let total_a = engine.runtime.profile(&encoder)?.total_weight_bytes;
+    let total_b = engine.runtime.profile(&decoder)?.total_weight_bytes;
+    // both models fit only *together with pins evicted*: real contention
+    let budget = total_a + total_b / 2;
+
+    println!("== Hermes multi-model router: {encoder} + {decoder} ==");
+    println!(
+        "models {} + {}; shared budget {}\n",
+        human_bytes(total_a),
+        human_bytes(total_b),
+        human_bytes(budget),
+    );
+
+    let base = |profile: &str| RunConfig {
+        profile: profile.into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        pin_budget: Some(budget / 4),
+        ..RunConfig::default()
+    };
+    let mut dec = base(&decoder);
+    dec.gen_tokens = Some(2);
+
+    let router = Router::new(
+        &engine,
+        RouterConfig {
+            models: vec![base(&encoder), dec],
+            budget: Some(budget),
+            max_batch: 2,
+            batch_window: Duration::from_millis(10),
+        },
+    )?;
+    let handle = router.handle();
+
+    let enc = encoder.clone();
+    let dec_name = decoder.clone();
+    let producer = std::thread::spawn(move || -> anyhow::Result<()> {
+        let tickets: Vec<_> = (0..requests)
+            .map(|i| {
+                let profile = if i % 2 == 0 { enc.clone() } else { dec_name.clone() };
+                handle.submit(InferRequest {
+                    profile,
+                    deadline: Some(Duration::from_secs(120)),
+                    ..InferRequest::default()
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        for t in tickets {
+            let r = t.wait()?;
+            println!(
+                "  [{}] #{} {} in {} (batch {}, {} tokens)",
+                r.profile,
+                r.id,
+                if r.ok { "ok" } else { "REJECTED" },
+                human_ms(r.latency_ms),
+                r.batch,
+                r.tokens,
+            );
+        }
+        handle.shutdown();
+        Ok(())
+    });
+
+    let s = router.run()?;
+    producer.join().expect("producer thread")?;
+
+    println!(
+        "\nserved {} requests ({} rejected) in {} batches (mean batch {:.2})",
+        s.served, s.rejected, s.batches, s.mean_batch_size
+    );
+    println!("throughput: {:.2} req/s", s.throughput_rps);
+    println!(
+        "latency   : p50 {}  p95 {}  max {}",
+        human_ms(s.latency.p50()),
+        human_ms(s.latency.p95()),
+        human_ms(s.latency.max())
+    );
+    println!("peak mem  : {}  (shared budget {})", human_bytes(s.peak_bytes), human_bytes(budget));
+    for m in &s.per_model {
+        println!(
+            "  [{}] served {} in {} batches, p95 {}, cache {}/{}",
+            m.profile,
+            m.served,
+            m.batches,
+            human_ms(m.latency.p95()),
+            m.cache_hits,
+            m.cache_hits + m.cache_misses,
+        );
+    }
+
+    anyhow::ensure!(s.served == requests, "all requests must complete");
+    anyhow::ensure!(s.peak_bytes <= budget + budget / 4, "peak far above shared budget");
+    Ok(())
+}

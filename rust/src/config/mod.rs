@@ -84,6 +84,47 @@ pub struct RunConfig {
     pub kv_cache: bool,
 }
 
+impl RunConfig {
+    /// Central config validation — every entrypoint (`run`, `serve`, the
+    /// Router, the TCP front-end) funnels through [`Session::open`], which
+    /// calls this, so bad configs are rejected with one message everywhere.
+    ///
+    /// [`Session::open`]: crate::engine::Session
+    pub fn validate(&self, profile: &crate::model::Profile) -> Result<()> {
+        self.validate_with_budget(profile, self.budget)
+    }
+
+    /// Like [`RunConfig::validate`], with the budget overridden — sessions
+    /// opened against a shared accountant are constrained by *its* budget,
+    /// not the per-config one.
+    pub fn validate_with_budget(
+        &self,
+        profile: &crate::model::Profile,
+        budget: Option<u64>,
+    ) -> Result<()> {
+        if self.kv_cache {
+            anyhow::bail!("--kv-cache is an ablation extension; see benches/ablation.rs");
+        }
+        if self.agents == 0 {
+            anyhow::bail!("agents must be >= 1 (got 0)");
+        }
+        if !profile.batches.contains(&self.batch) {
+            anyhow::bail!(
+                "batch {} is not AOT-compiled for profile '{}' (available: {:?})",
+                self.batch,
+                profile.name,
+                profile.batches
+            );
+        }
+        if let (Some(pin), Some(b)) = (self.pin_budget, budget) {
+            if pin > b {
+                anyhow::bail!("pin budget {pin} B exceeds memory budget {b} B");
+            }
+        }
+        Ok(())
+    }
+}
+
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
@@ -127,5 +168,60 @@ mod tests {
         assert_eq!(c.mode, Mode::PipeLoad);
         assert!(c.agents >= 1);
         assert!(!c.kv_cache);
+    }
+
+    fn profile_with_batches(batches: Vec<usize>) -> crate::model::Profile {
+        crate::model::Profile {
+            name: "p".into(),
+            family: "bert".into(),
+            arch: "encoder".into(),
+            paper_model: String::new(),
+            hidden: 8,
+            heads: 2,
+            ffn: 16,
+            layers: 2,
+            decoder_layers: 0,
+            vocab: 10,
+            max_seq: 4,
+            num_classes: 0,
+            patch_dim: 0,
+            prompt_tokens: 2,
+            gen_tokens: 0,
+            batches,
+            stages: Vec::new(),
+            kinds: Default::default(),
+            entries: Default::default(),
+            total_weight_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs_with_one_message_each() {
+        let p = profile_with_batches(vec![1, 4]);
+        let ok = RunConfig { batch: 1, ..RunConfig::default() };
+        assert!(ok.validate(&p).is_ok());
+
+        let kv = RunConfig { kv_cache: true, ..ok.clone() };
+        let e = kv.validate(&p).unwrap_err().to_string();
+        assert!(e.contains("--kv-cache is an ablation extension"), "{e}");
+
+        let zero_agents = RunConfig { agents: 0, ..ok.clone() };
+        assert!(zero_agents.validate(&p).unwrap_err().to_string().contains("agents"));
+
+        let bad_batch = RunConfig { batch: 3, ..ok.clone() };
+        let e = bad_batch.validate(&p).unwrap_err().to_string();
+        assert!(e.contains("not AOT-compiled"), "{e}");
+
+        let pin_over = RunConfig {
+            budget: Some(100),
+            pin_budget: Some(200),
+            ..ok.clone()
+        };
+        assert!(pin_over.validate(&p).unwrap_err().to_string().contains("pin budget"));
+        // shared-accountant budget overrides the per-config one
+        assert!(pin_over.validate_with_budget(&p, Some(400)).is_ok());
+        // unconstrained budget never rejects a pin budget
+        let pin_unbounded = RunConfig { pin_budget: Some(200), ..ok };
+        assert!(pin_unbounded.validate(&p).is_ok());
     }
 }

@@ -26,7 +26,7 @@
 
 pub mod session;
 
-pub use session::Session;
+pub use session::{Session, SessionBuilder};
 
 use anyhow::Result;
 

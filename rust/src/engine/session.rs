@@ -22,12 +22,25 @@
 //! in the admission order are not evictable, so at least one unpinned
 //! stage must always fit beside them (liveness; see `pipeload::gate`).
 //!
+//! # Shared accountants (multi-model serving)
+//!
+//! By default a session creates its own [`MemoryAccountant`] from
+//! `RunConfig::budget`.  [`Engine::open_session_shared`] (or
+//! [`SessionBuilder::accountant`]) opens the session against a
+//! caller-supplied accountant instead, so N sessions — one per model
+//! profile — contend for a single device-wide budget; the shared budget
+//! outranks `RunConfig::budget`.  [`Session::add_eviction_victim`] lets one
+//! session's `S^stop` pressure reclaim another session's pinned hot layers
+//! (the [`crate::server::Router`] wires every pair).  Config validation is
+//! centralized here through [`RunConfig::validate`], so every entrypoint
+//! rejects bad configs with the same message.
+//!
 //! [`Runtime::prepare`]: crate::runtime::Runtime::prepare
 //! [`assignment`]: crate::pipeload::assignment
 
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use super::{argmax_rows, last_logits, make_input, push_tokens, Engine, RunOutput};
 use crate::baseline;
@@ -53,6 +66,10 @@ pub struct Session<'e> {
     /// None for Baseline (non-pipelined) mode
     opts: Option<PipelineOpts>,
     accountant: MemoryAccountant,
+    /// false when the accountant was supplied by the caller (shared across
+    /// sessions, e.g. by a [`crate::server::Router`]) — error recovery must
+    /// then release only this session's bytes, never reset wholesale.
+    owns_accountant: bool,
     gate: OrderedGate,
     plan: Vec<Vec<usize>>,
     cache: Option<LayerCache>,
@@ -62,27 +79,96 @@ pub struct Session<'e> {
     passes_run: usize,
 }
 
+/// Options for opening a [`Session`] — sugar methods on [`Engine`] cover
+/// the common cases ([`Engine::open_session`],
+/// [`Engine::open_session_shared`]); the builder composes them.
+///
+/// ```ignore
+/// let shared = MemoryAccountant::new(Some(budget));
+/// let mut s = engine.session(&cfg).accountant(&shared).tracer(&t).open()?;
+/// ```
+pub struct SessionBuilder<'e> {
+    engine: &'e Engine,
+    cfg: RunConfig,
+    tracer: Tracer,
+    accountant: Option<MemoryAccountant>,
+}
+
+impl<'e> SessionBuilder<'e> {
+    /// Record spans into a caller-supplied tracer (shared buffer), so the
+    /// caller can render Gantt charts / stall stats afterwards.
+    pub fn tracer(mut self, tracer: &Tracer) -> SessionBuilder<'e> {
+        self.tracer = tracer.clone();
+        self
+    }
+
+    /// Account this session's memory into a caller-supplied accountant
+    /// instead of a private one.  The accountant's budget (not
+    /// `RunConfig::budget`) constrains the session, so N sessions opened
+    /// against the same accountant contend for one device-wide budget.
+    pub fn accountant(mut self, accountant: &MemoryAccountant) -> SessionBuilder<'e> {
+        self.accountant = Some(accountant.clone());
+        self
+    }
+
+    pub fn open(self) -> Result<Session<'e>> {
+        Session::open(self.engine, &self.cfg, &self.tracer, self.accountant)
+    }
+}
+
 impl Engine {
+    /// Start building a session; finish with [`SessionBuilder::open`].
+    pub fn session(&self, cfg: &RunConfig) -> SessionBuilder<'_> {
+        SessionBuilder {
+            engine: self,
+            cfg: cfg.clone(),
+            tracer: Tracer::new(cfg.trace),
+            accountant: None,
+        }
+    }
+
     /// Open a reusable session: profile resolution, weight generation, and
     /// AOT prepare happen here, once, instead of per run.
     pub fn open_session(&self, cfg: &RunConfig) -> Result<Session<'_>> {
-        let tracer = Tracer::new(cfg.trace);
-        self.open_session_with(cfg, &tracer)
+        self.session(cfg).open()
     }
 
     /// Like [`Engine::open_session`] but records into a caller-supplied
     /// tracer (shared buffer), so callers can render Gantt charts.
     pub fn open_session_with(&self, cfg: &RunConfig, tracer: &Tracer) -> Result<Session<'_>> {
-        Session::open(self, cfg, tracer)
+        self.session(cfg).tracer(tracer).open()
+    }
+
+    /// Open a session against a **shared** accountant: the session's loads
+    /// and pins are admitted under `accountant`'s budget, alongside every
+    /// other session opened against it.  `cfg.budget` is ignored (the
+    /// shared budget outranks it).  This is the multi-model serving
+    /// primitive: one `Session` per profile, one global budget.
+    pub fn open_session_shared(
+        &self,
+        cfg: &RunConfig,
+        accountant: &MemoryAccountant,
+    ) -> Result<Session<'_>> {
+        self.session(cfg).accountant(accountant).open()
     }
 }
 
 impl<'e> Session<'e> {
-    fn open(engine: &'e Engine, cfg: &RunConfig, tracer: &Tracer) -> Result<Session<'e>> {
+    fn open(
+        engine: &'e Engine,
+        cfg: &RunConfig,
+        tracer: &Tracer,
+        shared: Option<MemoryAccountant>,
+    ) -> Result<Session<'e>> {
         let profile = engine.runtime.profile(&cfg.profile)?;
-        if cfg.kv_cache {
-            bail!("--kv-cache is an ablation extension; see benches/ablation.rs");
-        }
+        // Central validation: every entrypoint (run / serve / Router / TCP)
+        // opens a session, so every entrypoint rejects bad configs with the
+        // same message.  A shared accountant's budget is the binding one.
+        let budget = match &shared {
+            Some(a) => a.budget(),
+            None => cfg.budget,
+        };
+        cfg.validate_with_budget(profile, budget)?;
         engine.ensure_weights(&cfg.profile)?;
         let disk = Disk::preset(&cfg.disk)?;
         let mut ctx = ExecCtx::new(&engine.runtime, &cfg.profile, &engine.paths.weights, disk)?;
@@ -96,8 +182,9 @@ impl<'e> Session<'e> {
             Mode::PipeSwitch => Some(PipelineOpts::pipeswitch()),
             Mode::PipeLoad => Some(PipelineOpts::pipeload(cfg.agents)),
         };
-        let accountant = MemoryAccountant::new(cfg.budget);
-        let cache = Self::build_cache(cfg, profile);
+        let owns_accountant = shared.is_none();
+        let accountant = shared.unwrap_or_else(|| MemoryAccountant::new(cfg.budget));
+        let cache = Self::build_cache(cfg, profile, budget);
         let gate = match &cache {
             Some(c) => OrderedGate::with_cache(accountant.clone(), c.clone()),
             None => OrderedGate::new(accountant.clone()),
@@ -110,6 +197,7 @@ impl<'e> Session<'e> {
             ctx,
             opts,
             accountant,
+            owns_accountant,
             gate,
             plan,
             cache,
@@ -122,12 +210,12 @@ impl<'e> Session<'e> {
     /// Hot-layer cache sizing.  Only PIPELOAD destroys layers, so only it
     /// can pin; the pin budget is clipped below `budget - max_stage` so an
     /// unpinned admission always fits beside in-flight pinned stages.
-    fn build_cache(cfg: &RunConfig, profile: &Profile) -> Option<LayerCache> {
+    fn build_cache(cfg: &RunConfig, profile: &Profile, budget: Option<u64>) -> Option<LayerCache> {
         if cfg.mode != Mode::PipeLoad {
             return None;
         }
         let mut pin = cfg.pin_budget.unwrap_or(0);
-        if let Some(budget) = cfg.budget {
+        if let Some(budget) = budget {
             let max_stage =
                 profile.stages.iter().map(|s| profile.stage_bytes(s)).max().unwrap_or(0);
             pin = pin.min(budget.saturating_sub(max_stage));
@@ -156,6 +244,30 @@ impl<'e> Session<'e> {
     /// Hot-layer cache counters (zeros when no cache is attached).
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.as_ref().map(|c| c.stats()).unwrap_or_default()
+    }
+
+    /// The accountant this session admits memory through (shared when the
+    /// session was opened via [`Engine::open_session_shared`]).
+    pub fn accountant(&self) -> &MemoryAccountant {
+        &self.accountant
+    }
+
+    /// The session's hot-layer cache handle, if one is attached.
+    pub fn layer_cache(&self) -> Option<&LayerCache> {
+        self.cache.as_ref()
+    }
+
+    /// The configuration this session was opened with.
+    pub fn run_config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Register another session's hot-layer cache as an eviction target:
+    /// when an admission here stalls on the (shared) budget, it reclaims
+    /// that session's pins after its own.  Only meaningful — and only
+    /// sound — between sessions opened against the same shared accountant.
+    pub fn add_eviction_victim(&mut self, cache: LayerCache) {
+        self.gate.add_victim(cache);
     }
 
     /// Run one request with the session's configured batch and seed.
@@ -233,16 +345,42 @@ impl<'e> Session<'e> {
     fn pass(&mut self, input: &ModelInput) -> Result<(xla::PjRtBuffer, PassStats)> {
         let opts = self.opts.as_ref().expect("pass() requires a pipelined mode");
         self.gate.reset();
+        // Snapshots for shared-accountant error recovery (see below).
+        let used0 = self.accountant.used();
+        let own_pins0 = self.cache.as_ref().map(|c| c.stats().pinned_bytes).unwrap_or(0);
+        let victim_pins0 = self.gate.victim_pinned_bytes();
         self.accountant.reset_peak_to_used();
         let env = PassEnv { gate: &self.gate, cache: self.cache.as_ref(), plan: &self.plan };
         let r = run_pass(&self.ctx, opts, &env, input);
         if r.is_err() {
-            // A failed pass can leave in-flight bytes accounted; drop any
-            // pins and restart the accounting so the session stays usable.
-            if let Some(c) = &self.cache {
-                c.clear();
+            if self.owns_accountant {
+                // A failed pass can leave in-flight bytes accounted; drop
+                // any pins and restart the accounting wholesale.
+                if let Some(c) = &self.cache {
+                    c.clear();
+                }
+                self.accountant.reset();
+            } else {
+                // Shared accountant: other sessions' pins and residents are
+                // still accounted in it, so release exactly what this pass
+                // left behind — our pins plus any in-flight bytes — and
+                // clear the shutdown the failed pass raised.  Other
+                // sessions' bytes after the pass = what they held before,
+                // minus any of their pins we evicted while running; the
+                // router runs one pass at a time, so the snapshots are
+                // exact.
+                if let Some(c) = &self.cache {
+                    c.drain(&self.accountant);
+                }
+                let victims_evicted =
+                    victim_pins0.saturating_sub(self.gate.victim_pinned_bytes());
+                let others_now = used0.saturating_sub(own_pins0).saturating_sub(victims_evicted);
+                let leaked = self.accountant.used().saturating_sub(others_now);
+                if leaked > 0 {
+                    self.accountant.free(leaked);
+                }
+                self.accountant.revive();
             }
-            self.accountant.reset();
         } else {
             self.passes_run += 1;
         }

@@ -16,7 +16,7 @@ use hermes::config::{Mode, RunConfig};
 use hermes::engine::Engine;
 use hermes::planner;
 use hermes::report;
-use hermes::server::{serve, ServeConfig};
+use hermes::server::{serve, RouterConfig, ServeConfig, TcpFrontend};
 use hermes::trace::Tracer;
 use hermes::util::cli::{render_help, Args, Opt};
 use hermes::util::{human_bytes, human_ms};
@@ -49,7 +49,8 @@ fn print_usage() {
            profile       Layer Profiler: per-layer load/compute/memory\n\
            plan          Pipeline Planner: budgets -> optimal #LAs\n\
            run           Execution Engine: one run (baseline|pipeswitch|pipeload)\n\
-           serve         batched serving session with SLO report\n\
+           serve         serving session: synthetic workload, or a multi-model\n\
+                         TCP front-end (--listen) with a shared memory budget\n\
            report        regenerate paper tables (1,2,3) / figures (1b,2,3,7)\n\n\
          run `hermes <command> --help` for per-command options"
     );
@@ -273,31 +274,76 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let mut opts = common_opts();
     opts.push(Opt { name: "mode", takes_value: true, default: Some("pipeload"), help: "baseline|pipeswitch|pipeload" });
     opts.push(Opt { name: "agents", takes_value: true, default: Some("4"), help: "Loading Agents" });
-    opts.push(Opt { name: "budget-mb", takes_value: true, default: None, help: "memory budget in MB" });
+    opts.push(Opt { name: "budget-mb", takes_value: true, default: None, help: "global memory budget in MB (shared by all models)" });
     opts.push(Opt { name: "pin-budget-mb", takes_value: true, default: None, help: "hot-layer cache pin budget in MB (pipeload)" });
-    opts.push(Opt { name: "requests", takes_value: true, default: Some("16"), help: "requests to serve" });
+    opts.push(Opt { name: "requests", takes_value: true, default: Some("16"), help: "requests to serve (synthetic workload mode)" });
     opts.push(Opt { name: "rps", takes_value: true, default: Some("0"), help: "mean arrival rate (0 = closed loop)" });
     opts.push(Opt { name: "max-batch", takes_value: true, default: Some("4"), help: "max requests per batch" });
     opts.push(Opt { name: "slo-ms", takes_value: true, default: Some("5000"), help: "p95 latency SLO" });
+    opts.push(Opt { name: "listen", takes_value: true, default: None, help: "serve a TCP front-end on this address (e.g. 127.0.0.1:7070; one JSON object per line; {\"op\":\"shutdown\"} stops it); --model may list several profiles, comma-separated" });
+    opts.push(Opt { name: "json", takes_value: false, default: None, help: "print the machine-readable summary instead of the human one" });
     let a = Args::parse(rest, &opts)?;
     if a.flag("help") {
-        println!("{}", render_help("serve", "batched serving session", &opts));
+        println!("{}", render_help("serve", "serving session (synthetic workload, or multi-model TCP front-end)", &opts));
         return Ok(());
     }
     let engine = Engine::with_default_paths()?;
     let budget = a.mb_bytes("budget-mb")?;
     let pin_budget = a.mb_bytes("pin-budget-mb")?;
-    let cfg = ServeConfig {
-        run: RunConfig {
-            profile: a.req("model")?.to_string(),
-            mode: Mode::parse(a.req("mode")?)?,
-            agents: a.usize("agents")?,
+    let models = a.list("model");
+    let runs: Vec<RunConfig> = models
+        .iter()
+        .map(|m| -> Result<RunConfig> {
+            Ok(RunConfig {
+                profile: m.clone(),
+                mode: Mode::parse(a.req("mode")?)?,
+                agents: a.usize("agents")?,
+                budget,
+                pin_budget,
+                disk: a.req("disk")?.to_string(),
+                seed: a.u64("seed")?,
+                ..RunConfig::default()
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    if let Some(addr) = a.get("listen") {
+        // synthetic-workload knobs have no meaning for the TCP front-end
+        let non_default = |name: &str| {
+            let declared = opts.iter().find(|o| o.name == name).and_then(|o| o.default);
+            a.get(name) != declared
+        };
+        if non_default("requests") || non_default("rps") || non_default("slo-ms") {
+            eprintln!("hermes serve: --requests/--rps/--slo-ms drive the synthetic workload and are ignored with --listen");
+        }
+        let router_cfg = RouterConfig {
+            models: runs,
             budget,
-            pin_budget,
-            disk: a.req("disk")?.to_string(),
-            seed: a.u64("seed")?,
-            ..RunConfig::default()
-        },
+            max_batch: a.usize("max-batch")?,
+            ..RouterConfig::default()
+        };
+        let frontend = TcpFrontend::bind(addr)?;
+        eprintln!("hermes serve: listening on {} ({} model(s): {})", frontend.local_addr()?, models.len(), models.join(", "));
+        let s = frontend.run(&engine, router_cfg)?;
+        if a.flag("json") {
+            println!("{}", s.to_json().pretty());
+        } else {
+            println!("served {} requests ({} rejected) in {} batches (mean batch {:.2})", s.served, s.rejected, s.batches, s.mean_batch_size);
+            println!("  throughput: {:.2} req/s", s.throughput_rps);
+            println!("  latency p50 {}  p95 {}  p99 {}", human_ms(s.latency.p50()), human_ms(s.latency.p95()), human_ms(s.latency.p99()));
+            println!("  peak mem: {}{}", human_bytes(s.peak_bytes), s.budget_bytes.map(|b| format!("  (budget {})", human_bytes(b))).unwrap_or_default());
+            for m in &s.per_model {
+                println!("  [{}] served {} / rejected {} in {} batches, p95 {}", m.profile, m.served, m.rejected, m.batches, human_ms(m.latency.p95()));
+            }
+        }
+        return Ok(());
+    }
+
+    if runs.len() != 1 {
+        bail!("the synthetic workload serves one model; pass --listen for multi-model serving");
+    }
+    let cfg = ServeConfig {
+        run: runs.into_iter().next().unwrap(),
         num_requests: a.usize("requests")?,
         arrival_rps: a.f64("rps")?,
         max_batch: a.usize("max-batch")?,
@@ -305,6 +351,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         ..ServeConfig::default()
     };
     let s = serve(&engine, &cfg)?;
+    if a.flag("json") {
+        println!("{}", s.to_json().pretty());
+        return Ok(());
+    }
     println!("served {} requests in {} batches (mean batch {:.2})", s.served, s.batches, s.mean_batch_size);
     println!("  throughput: {:.2} req/s", s.throughput_rps);
     println!("  latency p50 {}  p95 {}  p99 {}", human_ms(s.latency.p50()), human_ms(s.latency.p95()), human_ms(s.latency.p99()));

@@ -153,6 +153,15 @@ impl MemoryAccountant {
         s.peak = s.used;
     }
 
+    /// Clear a shutdown without touching usage (multi-session recovery: one
+    /// session's failed pass must not permanently poison an accountant that
+    /// other sessions still account into).
+    pub fn revive(&self) {
+        let (lock, cv) = &*self.inner;
+        lock.lock().unwrap().shutdown = false;
+        cv.notify_all();
+    }
+
     /// Reset usage/peak/stall counters, keeping the budget (profiler reuse).
     pub fn reset(&self) {
         let (lock, cv) = &*self.inner;
@@ -239,6 +248,17 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30));
         m.shutdown();
         assert!(h.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn revive_clears_shutdown_only() {
+        let m = MemoryAccountant::new(Some(100));
+        m.acquire(40).unwrap();
+        m.shutdown();
+        assert!(m.acquire(10).is_err());
+        m.revive();
+        m.acquire(10).unwrap();
+        assert_eq!(m.used(), 50, "revive must not touch usage");
     }
 
     #[test]

@@ -65,6 +65,11 @@ impl LatencyRecorder {
         self.samples_ms.iter().copied().fold(0.0, f64::max)
     }
 
+    /// Raw samples in milliseconds, in record order (summary merging).
+    pub fn samples_ms(&self) -> &[f64] {
+        &self.samples_ms
+    }
+
     pub fn to_json(&self) -> Value {
         Value::obj()
             .set("count", self.len())
@@ -131,6 +136,15 @@ pub struct SloReport {
     pub target_ms: f64,
     pub p95_ms: f64,
     pub met: bool,
+}
+
+impl SloReport {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("target_ms", self.target_ms)
+            .set("p95_ms", self.p95_ms)
+            .set("met", self.met)
+    }
 }
 
 pub fn check_slo(lat: &LatencyRecorder, target_ms: f64) -> SloReport {

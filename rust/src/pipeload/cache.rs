@@ -155,6 +155,22 @@ impl LayerCache {
         freed
     }
 
+    /// Drop every pinned layer AND return its bytes to `accountant` (used
+    /// when a failed pass must release its pins without resetting a shared
+    /// accountant that other sessions still account into).  Not counted as
+    /// evictions — this is error cleanup, not `S^stop` pressure.
+    pub fn drain(&self, accountant: &MemoryAccountant) -> u64 {
+        let mut s = self.inner.lock().unwrap();
+        let mut freed = 0u64;
+        for (_, e) in s.entries.drain() {
+            freed += e.bytes;
+            drop(e.shard);
+            accountant.free(e.bytes);
+        }
+        s.pinned_bytes = 0;
+        freed
+    }
+
     /// Drop every pinned layer without touching the accountant (used when a
     /// failed pass resets the accountant wholesale).
     pub fn clear(&self) {
@@ -244,6 +260,20 @@ mod tests {
         c.take(0);
         c.record_miss();
         assert!((c.stats().hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drain_frees_through_accountant() {
+        let accountant = MemoryAccountant::new(Some(1000));
+        let c = LayerCache::new(1000);
+        for stage in 0..2usize {
+            assert!(accountant.try_acquire(300));
+            assert!(c.pin(stage, shard(stage as u32), 300));
+        }
+        assert_eq!(c.drain(&accountant), 600);
+        assert_eq!(accountant.used(), 0);
+        assert_eq!(c.stats().pinned_layers, 0);
+        assert_eq!(c.stats().evictions, 0, "drain is not an eviction");
     }
 
     #[test]

@@ -48,6 +48,11 @@ struct GateState {
 pub struct OrderedGate {
     accountant: MemoryAccountant,
     cache: Option<LayerCache>,
+    /// Other sessions' hot-layer caches on the same (shared) accountant.
+    /// A stalled admission reclaims from these after its own cache — this
+    /// is how one model's `S^stop` pressure evicts another model's pins
+    /// when a Router multiplexes several sessions under one budget.
+    victims: Vec<LayerCache>,
     state: Arc<(Mutex<GateState>, Condvar)>,
 }
 
@@ -56,6 +61,7 @@ impl OrderedGate {
         OrderedGate {
             accountant,
             cache: None,
+            victims: Vec::new(),
             state: Arc::new((
                 Mutex::new(GateState { next_admit: 0, shutdown: false }),
                 Condvar::new(),
@@ -69,6 +75,19 @@ impl OrderedGate {
         let mut g = OrderedGate::new(accountant);
         g.cache = Some(cache);
         g
+    }
+
+    /// Register another session's cache as an eviction target.  Its pins
+    /// must be accounted in this gate's accountant (i.e. both sessions were
+    /// opened against the same shared accountant), or eviction would free
+    /// bytes this budget never held.
+    pub fn add_victim(&mut self, cache: LayerCache) {
+        self.victims.push(cache);
+    }
+
+    /// Bytes currently pinned across all registered victim caches.
+    pub fn victim_pinned_bytes(&self) -> u64 {
+        self.victims.iter().map(|c| c.stats().pinned_bytes).sum()
     }
 
     pub fn accountant(&self) -> &MemoryAccountant {
@@ -96,11 +115,13 @@ impl OrderedGate {
                     cv.notify_all();
                     return Ok(t0.elapsed());
                 }
-                // S^stop pressure: reclaim pinned hot layers before parking.
-                if let Some(cache) = &self.cache {
-                    if cache.evict_for(bytes, &self.accountant) > 0 {
-                        continue; // retry with the reclaimed headroom
-                    }
+                // S^stop pressure: reclaim pinned hot layers before parking
+                // — own cache first (LRU), then other sessions' caches on
+                // the same shared accountant.
+                let own = self.cache.iter();
+                if own.chain(self.victims.iter()).any(|c| c.evict_for(bytes, &self.accountant) > 0)
+                {
+                    continue; // retry with the reclaimed headroom
                 }
             }
             s = cv.wait(s).unwrap();
@@ -303,6 +324,26 @@ mod tests {
         // admission restarts at stage 0; budget intact
         gate.admit(0, 100).unwrap();
         assert_eq!(gate.accountant().used(), 100);
+    }
+
+    #[test]
+    fn stalled_admit_evicts_victim_session_pins() {
+        use crate::weights::Shard;
+        // Two sessions share one accountant; session B's gate carries
+        // session A's cache as a victim.  B's admission under pressure must
+        // reclaim A's pins (cross-model S^stop contention).
+        let accountant = MemoryAccountant::new(Some(100));
+        let cache_a = LayerCache::new(100);
+        let mut gate_b = OrderedGate::new(accountant.clone());
+        gate_b.add_victim(cache_a.clone());
+        assert!(accountant.try_acquire(90));
+        assert!(cache_a.pin(2, Arc::new(Shard { kind: "k".into(), stage: 2, tensors: vec![] }), 90));
+        assert_eq!(gate_b.victim_pinned_bytes(), 90);
+        let waited = gate_b.admit(0, 60).unwrap();
+        assert!(waited.as_millis() < 1000);
+        assert_eq!(accountant.used(), 60);
+        assert_eq!(cache_a.stats().evictions, 1);
+        assert_eq!(gate_b.victim_pinned_bytes(), 0);
     }
 
     #[test]

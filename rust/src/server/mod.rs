@@ -1,200 +1,39 @@
-//! Serving loop: batched request execution with SLO reporting.
+//! Serving layer: multi-model router, TCP front-end, and the single-model
+//! compatibility shim.
 //!
-//! The end-to-end driver for the paper's §V-C serving claim ("all results
-//! meeting SLO expectations").  A workload generator thread produces
-//! requests with Poisson arrivals into a queue; the serving loop batches
-//! them (size- and deadline-bounded) and executes each batch as one pass
-//! of a single long-lived [`Session`] in the configured mode — profile
-//! resolution, weight validation, and AOT prepare run once per serving
-//! session, not once per batch, and PIPELOAD's hot-layer cache (if a pin
-//! budget is set) carries pinned layers from batch to batch.  The session
-//! (and its non-Send PJRT runtime) stays on the caller's thread — a TCP
-//! front-end would feed the same queue without touching this loop.
+//! The end-to-end realization of the paper's §V-C serving claim ("all
+//! results meeting SLO expectations"), redesigned around a request router:
+//!
+//! * [`router`] — the core.  A [`Router`] owns one long-lived
+//!   [`Session`] per model profile, **all opened against one shared
+//!   [`MemoryAccountant`]** ([`Engine::open_session_shared`]) so N models
+//!   contend for a single device-wide budget; one model's `S^stop`
+//!   pressure can evict another model's pinned hot layers.  Producers on
+//!   any thread submit typed [`InferRequest`]s through a cloneable,
+//!   mpsc-backed [`RouterHandle`] and await [`InferResponse`]s via
+//!   [`Ticket`]s.  Scheduling is per-profile: earliest-deadline-first
+//!   lane selection, a batch-fill window, and deadline-aware admission
+//!   that rejects expired requests instead of spending passes on them.
+//!   The router loop runs on the caller's thread — the session (and its
+//!   non-Send PJRT runtime) never migrates.
+//! * [`tcp`] — a minimal line-delimited-JSON TCP front-end
+//!   (`hermes serve --listen <addr>`): external clients drive the same
+//!   queue through per-connection reader threads.
+//! * [`summary`] — [`serve`]/[`ServeSummary`], the original single-model
+//!   serving API, rebuilt as a thin shim over a one-model router so
+//!   existing benches, tests, and examples keep working unchanged.
 //!
 //! [`Session`]: crate::engine::Session
+//! [`MemoryAccountant`]: crate::memory::MemoryAccountant
+//! [`Engine::open_session_shared`]: crate::engine::Engine::open_session_shared
 
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+pub mod router;
+pub mod summary;
+pub mod tcp;
 
-use anyhow::Result;
-
-use crate::config::{Mode, RunConfig};
-use crate::engine::Engine;
-use crate::metrics::{check_slo, LatencyRecorder, SloReport};
-use crate::util::rng::Rng;
-
-/// Serving workload + policy.
-#[derive(Debug, Clone)]
-pub struct ServeConfig {
-    pub run: RunConfig,
-    /// total requests to serve
-    pub num_requests: usize,
-    /// mean arrival rate (requests/sec); 0 = closed loop (back to back)
-    pub arrival_rps: f64,
-    /// max requests folded into one batch (capped by AOT batch sizes)
-    pub max_batch: usize,
-    /// how long the batcher waits to fill a batch
-    pub batch_window: Duration,
-    /// p95 latency target
-    pub slo_ms: f64,
-}
-
-impl Default for ServeConfig {
-    fn default() -> Self {
-        ServeConfig {
-            run: RunConfig::default(),
-            num_requests: 16,
-            arrival_rps: 0.0,
-            max_batch: 4,
-            batch_window: Duration::from_millis(20),
-            slo_ms: 1000.0,
-        }
-    }
-}
-
-#[derive(Debug)]
-struct Request {
-    id: usize,
-    enqueued: Instant,
-}
-
-/// Summary of a serving session.
-#[derive(Debug, Clone)]
-pub struct ServeSummary {
-    pub served: usize,
-    pub batches: usize,
-    pub latency: LatencyRecorder,
-    pub throughput_rps: f64,
-    pub peak_bytes: u64,
-    pub slo: SloReport,
-    pub mean_batch_size: f64,
-    /// hot-layer cache hits/misses across all batches (0/0 = no cache)
-    pub cache_hits: u64,
-    pub cache_misses: u64,
-}
-
-/// Pick the smallest AOT-compiled batch size that fits `n` requests (or
-/// the largest available if none fit).
-pub fn pick_batch(available: &[usize], n: usize) -> usize {
-    let mut sorted: Vec<usize> = available.to_vec();
-    sorted.sort_unstable();
-    for &b in &sorted {
-        if b >= n {
-            return b;
-        }
-    }
-    sorted.last().copied().unwrap_or(1)
-}
-
-/// Run the serving session; engine passes happen on this thread.
-/// One [`crate::engine::Session`] serves every batch: `Runtime::prepare`
-/// runs exactly once here, regardless of how many batches follow.
-pub fn serve(engine: &Engine, cfg: &ServeConfig) -> Result<ServeSummary> {
-    let mut session = engine.open_session(&cfg.run)?;
-    let batches_avail = session.profile().batches.clone();
-    let (tx, rx) = mpsc::channel::<Request>();
-    let num = cfg.num_requests;
-    let rps = cfg.arrival_rps;
-    let seed = cfg.run.seed;
-
-    // workload generator (open loop with Poisson arrivals, or closed loop)
-    let producer = std::thread::spawn(move || {
-        let mut rng = Rng::new(seed ^ 0x5e7e);
-        for id in 0..num {
-            if rps > 0.0 {
-                std::thread::sleep(Duration::from_secs_f64(rng.exp(1.0 / rps)));
-            }
-            if tx.send(Request { id, enqueued: Instant::now() }).is_err() {
-                return;
-            }
-        }
-    });
-
-    let mut latency = LatencyRecorder::new();
-    let mut served = 0usize;
-    let mut batches = 0usize;
-    let mut peak = 0u64;
-    let mut batch_sizes = 0usize;
-    let t_start = Instant::now();
-
-    while served < cfg.num_requests {
-        // block for the first request, then fill the batch within the window
-        let first = rx.recv().expect("producer ended early");
-        let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.batch_window;
-        let cap = cfg.max_batch.min(batches_avail.iter().copied().max().unwrap_or(1));
-        while batch.len() < cap {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(_) => break,
-            }
-        }
-        let b = pick_batch(&batches_avail, batch.len());
-        let seed = cfg.run.seed.wrapping_add(batches as u64);
-        let (report, _) = session.run_batch(b, seed)?;
-        peak = peak.max(report.peak_bytes);
-        batches += 1;
-        batch_sizes += batch.len();
-        for r in &batch {
-            latency.record(r.enqueued.elapsed());
-            let _ = r.id;
-        }
-        served += batch.len();
-    }
-    producer.join().ok();
-
-    let wall = t_start.elapsed().as_secs_f64();
-    let slo = check_slo(&latency, cfg.slo_ms);
-    let cache = session.cache_stats();
-    Ok(ServeSummary {
-        served,
-        batches,
-        throughput_rps: served as f64 / wall.max(1e-9),
-        peak_bytes: peak,
-        slo,
-        mean_batch_size: batch_sizes as f64 / batches.max(1) as f64,
-        latency,
-        cache_hits: cache.hits,
-        cache_misses: cache.misses,
-    })
-}
-
-/// Convenience: serving defaults for the E2E example (PIPELOAD on the
-/// BERT sim profile with a batch-4 entry).
-pub fn e2e_default(profile: &str, agents: usize, budget: Option<u64>) -> ServeConfig {
-    ServeConfig {
-        run: RunConfig {
-            profile: profile.into(),
-            mode: Mode::PipeLoad,
-            agents,
-            budget,
-            ..RunConfig::default()
-        },
-        ..ServeConfig::default()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn pick_batch_smallest_fitting() {
-        assert_eq!(pick_batch(&[1, 4], 1), 1);
-        assert_eq!(pick_batch(&[1, 4], 2), 4);
-        assert_eq!(pick_batch(&[1, 4], 4), 4);
-        assert_eq!(pick_batch(&[1, 4], 9), 4); // overflow -> largest
-        assert_eq!(pick_batch(&[], 3), 1);
-    }
-
-    #[test]
-    fn default_config_sane() {
-        let c = ServeConfig::default();
-        assert!(c.num_requests > 0);
-        assert!(c.slo_ms > 0.0);
-    }
-}
+pub use router::{
+    pick_batch, InferRequest, InferResponse, ModelStats, Router, RouterConfig, RouterHandle,
+    RouterSummary, Ticket,
+};
+pub use summary::{e2e_default, serve, ServeConfig, ServeSummary};
+pub use tcp::TcpFrontend;

@@ -1,0 +1,804 @@
+//! Multi-model request router: N model sessions, one memory budget.
+//!
+//! The [`Router`] is the serving core.  [`Router::new`] opens one
+//! long-lived [`Session`] per configured model profile, **all against a
+//! single shared [`MemoryAccountant`]** whose budget is the device-wide
+//! memory limit — cross-model contention flows through the same `S^stop`
+//! admission machinery as intra-model contention, and every session's
+//! hot-layer pins are eviction victims for every other session's pressure.
+//!
+//! Requests enter through a cloneable, mpsc-backed [`RouterHandle`]:
+//! producers on any thread [`RouterHandle::submit`] a typed
+//! [`InferRequest`] and get back a [`Ticket`] (a receiver for the
+//! [`InferResponse`]).  The router loop itself runs on the thread that
+//! built the engine — the PJRT runtime is not `Send`, so sessions cannot
+//! migrate; scheduling work moves to the requests instead of the models.
+//!
+//! Per-profile scheduling: requests queue per model; the loop serves the
+//! queue whose head has the earliest deadline (absent deadlines last,
+//! FIFO tie-break), fills a batch within [`RouterConfig::batch_window`],
+//! and rejects requests whose deadline already passed before admission
+//! (deadline-aware admission) without spending a pass on them.
+//!
+//! [`Session`]: crate::engine::Session
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::RunConfig;
+use crate::engine::{Engine, Session};
+use crate::memory::MemoryAccountant;
+use crate::metrics::LatencyRecorder;
+use crate::util::json::Value;
+
+/// Router policy + the model fleet.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// One entry per model profile (profiles must be distinct).  Each
+    /// entry's `budget` is overridden by the shared [`RouterConfig::budget`].
+    pub models: Vec<RunConfig>,
+    /// Global memory budget shared by every session (None = unconstrained).
+    pub budget: Option<u64>,
+    /// Max requests folded into one batch (capped by AOT batch sizes).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch for one profile.
+    pub batch_window: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            models: Vec::new(),
+            budget: None,
+            max_batch: 4,
+            batch_window: Duration::from_millis(20),
+        }
+    }
+}
+
+/// A typed inference request submitted through a [`RouterHandle`].
+#[derive(Debug, Clone)]
+pub struct InferRequest {
+    /// Target model profile (must be one of the router's configured models).
+    pub profile: String,
+    /// Logical rows this request needs (>= 1); the router sums the folded
+    /// requests' hints and picks the smallest AOT batch covering the sum
+    /// (folding stops before the sum would overflow the largest AOT batch).
+    pub batch_hint: usize,
+    /// Deadline relative to submission; a request still queued when its
+    /// deadline passes is rejected instead of executed.
+    pub deadline: Option<Duration>,
+    /// Input seed (None = the session's configured seed stream).
+    pub seed: Option<u64>,
+}
+
+impl Default for InferRequest {
+    fn default() -> Self {
+        InferRequest { profile: String::new(), batch_hint: 1, deadline: None, seed: None }
+    }
+}
+
+impl InferRequest {
+    pub fn new(profile: impl Into<String>) -> InferRequest {
+        InferRequest { profile: profile.into(), ..InferRequest::default() }
+    }
+
+    /// Wire format (the TCP front-end's line protocol).
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj().set("op", "infer").set("profile", self.profile.clone());
+        v = v.set("batch_hint", self.batch_hint);
+        if let Some(d) = self.deadline {
+            v = v.set("deadline_ms", d.as_secs_f64() * 1000.0);
+        }
+        if let Some(s) = self.seed {
+            v = v.set("seed", s);
+        }
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<InferRequest> {
+        Ok(InferRequest {
+            profile: v.req("profile")?.as_str()?.to_string(),
+            batch_hint: v.get("batch_hint").map(|b| b.as_usize()).transpose()?.unwrap_or(1),
+            deadline: v
+                .get("deadline_ms")
+                .map(|d| d.as_f64())
+                .transpose()?
+                // clamp: a hostile/huge value must not panic the server
+                .filter(|ms| ms.is_finite())
+                .map(|ms| Duration::from_secs_f64(ms.clamp(0.0, 1e12) / 1000.0)),
+            seed: v.get("seed").map(|s| s.as_f64()).transpose()?.map(|s| s as u64),
+        })
+    }
+}
+
+/// Outcome of one routed request.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: u64,
+    pub profile: String,
+    pub ok: bool,
+    pub error: Option<String>,
+    /// queue + execution latency, submission to response
+    pub latency_ms: f64,
+    /// AOT batch size the request was folded into (0 on rejection)
+    pub batch: usize,
+    /// generated tokens (generative profiles)
+    pub tokens: usize,
+    /// shared-accountant peak during the batch's pass window
+    pub peak_bytes: u64,
+}
+
+impl InferResponse {
+    fn rejected(id: u64, profile: &str, enqueued: Instant, err: impl Into<String>) -> Self {
+        InferResponse {
+            id,
+            profile: profile.to_string(),
+            ok: false,
+            error: Some(err.into()),
+            latency_ms: enqueued.elapsed().as_secs_f64() * 1000.0,
+            batch: 0,
+            tokens: 0,
+            peak_bytes: 0,
+        }
+    }
+
+    /// Wire format (the TCP front-end's line protocol).
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj()
+            .set("ok", self.ok)
+            .set("id", self.id)
+            .set("profile", self.profile.clone())
+            .set("latency_ms", self.latency_ms)
+            .set("batch", self.batch)
+            .set("tokens", self.tokens)
+            .set("peak_bytes", self.peak_bytes);
+        if let Some(e) = &self.error {
+            v = v.set("error", e.clone());
+        }
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<InferResponse> {
+        Ok(InferResponse {
+            id: v.get("id").map(|x| x.as_f64()).transpose()?.unwrap_or(0.0) as u64,
+            profile: v
+                .get("profile")
+                .map(|p| p.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_default(),
+            ok: v.req("ok")?.as_bool()?,
+            error: v.get("error").map(|e| e.as_str().map(str::to_string)).transpose()?,
+            latency_ms: v.get("latency_ms").map(|x| x.as_f64()).transpose()?.unwrap_or(0.0),
+            batch: v.get("batch").map(|x| x.as_usize()).transpose()?.unwrap_or(0),
+            tokens: v.get("tokens").map(|x| x.as_usize()).transpose()?.unwrap_or(0),
+            peak_bytes: v.get("peak_bytes").map(|x| x.as_f64()).transpose()?.unwrap_or(0.0)
+                as u64,
+        })
+    }
+}
+
+enum Envelope {
+    Infer(PendingReq),
+    Shutdown,
+}
+
+struct PendingReq {
+    id: u64,
+    req: InferRequest,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    reply: mpsc::Sender<InferResponse>,
+}
+
+/// Cloneable, `Send` submission handle to a [`Router`]'s queue.  All clones
+/// feed the same router; dropping every handle ends the router loop.
+#[derive(Clone)]
+pub struct RouterHandle {
+    tx: mpsc::Sender<Envelope>,
+    ids: Arc<AtomicU64>,
+}
+
+/// Receiver for one request's [`InferResponse`].
+pub struct Ticket {
+    pub id: u64,
+    rx: mpsc::Receiver<InferResponse>,
+}
+
+impl Ticket {
+    /// Block until the router responds.  Errors if the router exited
+    /// (shutdown or crash) before serving this request.
+    pub fn wait(self) -> Result<InferResponse> {
+        self.rx.recv().map_err(|_| anyhow!("router exited before responding"))
+    }
+
+    /// Non-blocking poll; `Ok(None)` while the request is still
+    /// queued/running, `Err` once the router has exited without serving it
+    /// (so poll loops terminate instead of spinning forever).
+    pub fn poll(&self) -> Result<Option<InferResponse>> {
+        match self.rx.try_recv() {
+            Ok(r) => Ok(Some(r)),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Err(anyhow!("router exited before responding"))
+            }
+        }
+    }
+}
+
+impl RouterHandle {
+    /// Enqueue a request; returns a [`Ticket`] for its response.  Errors
+    /// only if the router has already exited (a dropped consumer must be a
+    /// graceful error, never a panic).
+    pub fn submit(&self, req: InferRequest) -> Result<Ticket> {
+        let id = self.ids.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        let enqueued = Instant::now();
+        // checked: Duration::MAX-style deadlines mean "no deadline", not a panic
+        let deadline = req.deadline.and_then(|d| enqueued.checked_add(d));
+        self.tx
+            .send(Envelope::Infer(PendingReq { id, req, enqueued, deadline, reply }))
+            .map_err(|_| anyhow!("router is no longer running"))?;
+        Ok(Ticket { id, rx })
+    }
+
+    /// Submit and block for the response (convenience for benches/tests).
+    pub fn submit_wait(&self, req: InferRequest) -> Result<InferResponse> {
+        self.submit(req)?.wait()
+    }
+
+    /// Ask the router to finish queued work and exit its loop.  Best-effort:
+    /// a router that already exited is not an error.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Envelope::Shutdown);
+    }
+}
+
+/// Per-model serving counters inside a [`RouterSummary`].
+#[derive(Debug, Clone)]
+pub struct ModelStats {
+    pub profile: String,
+    pub served: usize,
+    pub rejected: usize,
+    pub batches: usize,
+    pub latency: LatencyRecorder,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// Summary of one router run (all models, shared budget).
+#[derive(Debug, Clone)]
+pub struct RouterSummary {
+    pub served: usize,
+    /// deadline-expired, unknown-profile, or failed-pass requests
+    pub rejected: usize,
+    pub batches: usize,
+    pub latency: LatencyRecorder,
+    pub throughput_rps: f64,
+    /// max per-pass peak of the shared accountant across all batches
+    pub peak_bytes: u64,
+    pub budget_bytes: Option<u64>,
+    pub mean_batch_size: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub per_model: Vec<ModelStats>,
+    /// first engine-pass failure, if any batch failed (full error chain —
+    /// individual responses carry their own copies, but callers that drop
+    /// their tickets still get the root cause from here)
+    pub first_error: Option<String>,
+}
+
+impl RouterSummary {
+    /// Machine-readable summary (the `serve --json` output).
+    pub fn to_json(&self) -> Value {
+        let models: Vec<Value> = self
+            .per_model
+            .iter()
+            .map(|m| {
+                Value::obj()
+                    .set("profile", m.profile.clone())
+                    .set("served", m.served)
+                    .set("rejected", m.rejected)
+                    .set("batches", m.batches)
+                    .set("latency", m.latency.to_json())
+                    .set("cache_hits", m.cache_hits)
+                    .set("cache_misses", m.cache_misses)
+            })
+            .collect();
+        let mut v = Value::obj()
+            .set("served", self.served)
+            .set("rejected", self.rejected)
+            .set("batches", self.batches)
+            .set("throughput_rps", self.throughput_rps)
+            .set("latency", self.latency.to_json())
+            .set("peak_bytes", self.peak_bytes)
+            .set("mean_batch_size", self.mean_batch_size)
+            .set("cache_hits", self.cache_hits)
+            .set("cache_misses", self.cache_misses)
+            .set("models", models);
+        if let Some(b) = self.budget_bytes {
+            v = v.set("budget_bytes", b);
+        }
+        if let Some(e) = &self.first_error {
+            v = v.set("first_error", e.clone());
+        }
+        v
+    }
+}
+
+/// Pick the smallest AOT-compiled batch size that fits `n` requests (or
+/// the largest available if none fit).
+pub fn pick_batch(available: &[usize], n: usize) -> usize {
+    let mut sorted: Vec<usize> = available.to_vec();
+    sorted.sort_unstable();
+    for &b in &sorted {
+        if b >= n {
+            return b;
+        }
+    }
+    sorted.last().copied().unwrap_or(1)
+}
+
+struct ModelLane<'e> {
+    profile: String,
+    session: Session<'e>,
+    queue: VecDeque<PendingReq>,
+    served: usize,
+    rejected: usize,
+    batches: usize,
+    latency: LatencyRecorder,
+}
+
+/// The multi-model serving loop.  Owns one session per model; runs on the
+/// engine's thread (see module docs).  Build handles before calling
+/// [`Router::run`], which consumes the router.
+pub struct Router<'e> {
+    lanes: Vec<ModelLane<'e>>,
+    accountant: MemoryAccountant,
+    cfg: RouterConfig,
+    /// Some until [`Router::run`] starts; dropped there so the queue
+    /// disconnects once every external handle is gone.
+    tx: Option<mpsc::Sender<Envelope>>,
+    rx: mpsc::Receiver<Envelope>,
+    ids: Arc<AtomicU64>,
+    /// requests for profiles this router does not serve
+    unroutable: usize,
+}
+
+impl<'e> Router<'e> {
+    /// Open one session per configured model, all sharing one accountant
+    /// budgeted at [`RouterConfig::budget`], and wire every session's
+    /// hot-layer cache as an eviction victim of every other session.
+    pub fn new(engine: &'e Engine, cfg: RouterConfig) -> Result<Router<'e>> {
+        if cfg.models.is_empty() {
+            bail!("router needs at least one model entry");
+        }
+        if cfg.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        let accountant = MemoryAccountant::new(cfg.budget);
+        let mut lanes: Vec<ModelLane<'e>> = Vec::with_capacity(cfg.models.len());
+        for model in &cfg.models {
+            if lanes.iter().any(|l| l.profile == model.profile) {
+                bail!("duplicate model entry '{}'", model.profile);
+            }
+            // the shared budget outranks any per-entry budget
+            let mut run = model.clone();
+            run.budget = cfg.budget;
+            let session = engine.open_session_shared(&run, &accountant)?;
+            lanes.push(ModelLane {
+                profile: model.profile.clone(),
+                session,
+                queue: VecDeque::new(),
+                served: 0,
+                rejected: 0,
+                batches: 0,
+                latency: LatencyRecorder::new(),
+            });
+        }
+        // cross-model eviction: each session may reclaim the others' pins
+        let caches: Vec<(usize, crate::pipeload::cache::LayerCache)> = lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| l.session.layer_cache().map(|c| (i, c.clone())))
+            .collect();
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            for (j, cache) in &caches {
+                if *j != i {
+                    lane.session.add_eviction_victim(cache.clone());
+                }
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        Ok(Router {
+            lanes,
+            accountant,
+            cfg,
+            tx: Some(tx),
+            rx,
+            ids: Arc::new(AtomicU64::new(0)),
+            unroutable: 0,
+        })
+    }
+
+    /// A cloneable submission handle.  Clone freely across threads; the
+    /// router exits when every handle is dropped (or on
+    /// [`RouterHandle::shutdown`]).  Call before [`Router::run`] (which
+    /// consumes the router).
+    pub fn handle(&self) -> RouterHandle {
+        let tx = self.tx.as_ref().expect("handle() after run()").clone();
+        RouterHandle { tx, ids: self.ids.clone() }
+    }
+
+    /// The shared accountant (inspect budget/usage/peak from outside).
+    pub fn accountant(&self) -> &MemoryAccountant {
+        &self.accountant
+    }
+
+    fn lane_index(&self, profile: &str) -> Option<usize> {
+        self.lanes.iter().position(|l| l.profile == profile)
+    }
+
+    /// Effective batch cap for a lane: the configured max, clipped to the
+    /// largest AOT-compiled batch of that lane's profile.
+    fn lane_cap(&self, lane: &ModelLane<'_>) -> usize {
+        let largest = lane.session.profile().batches.iter().copied().max().unwrap_or(1);
+        self.cfg.max_batch.min(largest).max(1)
+    }
+
+    /// Does any lane already hold a full effective batch?  (If so, the
+    /// batch-fill window is pointless and the scheduler should run now.)
+    fn any_lane_full(&self) -> bool {
+        self.lanes.iter().any(|l| l.queue.len() >= self.lane_cap(l))
+    }
+
+    /// Earliest deadline among all queued requests, if any.
+    fn earliest_deadline(&self) -> Option<Instant> {
+        self.lanes.iter().flat_map(|l| l.queue.iter()).filter_map(|p| p.deadline).min()
+    }
+
+    /// Drive the serving loop on this thread until every handle is dropped
+    /// or a shutdown arrives, then summarize.  Engine passes happen here.
+    pub fn run(mut self) -> Result<RouterSummary> {
+        self.tx.take(); // only external handles keep the queue open now
+        let t_start = Instant::now();
+        let mut open = true;
+        let mut batch_sizes = 0usize;
+        let mut total_batches = 0usize;
+        let mut peak = 0u64;
+        let mut first_error: Option<String> = None;
+
+        loop {
+            let backlog = self.lanes.iter().any(|l| !l.queue.is_empty());
+            if !backlog {
+                if !open {
+                    break;
+                }
+                // idle: park until the next request (or the end of input)
+                match self.rx.recv() {
+                    Ok(env) => {
+                        if !self.enqueue(env) {
+                            open = false;
+                        }
+                        continue;
+                    }
+                    Err(_) => break,
+                }
+            }
+
+            // admit everything already queued in the channel (free), then
+            // wait out the batch window only if no lane can fill a batch yet
+            if open {
+                loop {
+                    match self.rx.try_recv() {
+                        Ok(env) => {
+                            if !self.enqueue(env) {
+                                open = false;
+                                break;
+                            }
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            if open && !self.any_lane_full() {
+                // the window never waits past a queued request's deadline —
+                // otherwise any deadline shorter than the window could never
+                // be served, even on an idle server
+                let mut fill_deadline = Instant::now() + self.cfg.batch_window;
+                if let Some(d) = self.earliest_deadline() {
+                    fill_deadline = fill_deadline.min(d);
+                }
+                loop {
+                    let now = Instant::now();
+                    if now >= fill_deadline {
+                        break;
+                    }
+                    match self.rx.recv_timeout(fill_deadline - now) {
+                        Ok(env) => {
+                            if !self.enqueue(env) {
+                                open = false;
+                                break;
+                            }
+                            // a full batch ends the window early — no point
+                            // sleeping out the remainder (the old serve()
+                            // fill loop had the same cut-off)
+                            if self.any_lane_full() {
+                                break;
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+            }
+
+            // earliest-deadline-first across lane heads (FIFO tie-break)
+            let Some(li) = self.pick_lane() else { continue };
+            let cap = self.lane_cap(&self.lanes[li]);
+            let lane = &mut self.lanes[li];
+            let avail = lane.session.profile().batches.clone();
+            let largest_avail = avail.iter().copied().max().unwrap_or(1);
+
+            // deadline-aware admission: expired requests are rejected
+            // without costing a pass.  A batch shares one engine pass (and
+            // one input seed), so requests with conflicting explicit seeds
+            // are never folded together, and folding stops once the summed
+            // batch hints would overflow the largest AOT batch (each
+            // request's hint is logical rows it must be granted, not a
+            // suggestion to be max()-ed away).
+            let mut batch: Vec<PendingReq> = Vec::new();
+            let mut hint_rows = 0usize;
+            let now = Instant::now();
+            while batch.len() < cap {
+                let Some(p) = lane.queue.pop_front() else { break };
+                if p.deadline.map(|d| d <= now).unwrap_or(false) {
+                    lane.rejected += 1;
+                    let resp = InferResponse::rejected(
+                        p.id,
+                        &lane.profile,
+                        p.enqueued,
+                        "deadline exceeded before admission",
+                    );
+                    let _ = p.reply.send(resp);
+                    continue;
+                }
+                let rows = p.req.batch_hint.max(1);
+                if rows > largest_avail {
+                    // a hint is rows the caller must be granted; serving
+                    // fewer silently would be a lie — reject like an
+                    // expired deadline, without spending a pass
+                    lane.rejected += 1;
+                    let resp = InferResponse::rejected(
+                        p.id,
+                        &lane.profile,
+                        p.enqueued,
+                        format!("batch_hint {rows} exceeds largest AOT batch {largest_avail}"),
+                    );
+                    let _ = p.reply.send(resp);
+                    continue;
+                }
+                if let Some(first) = batch.first() {
+                    if first.req.seed != p.req.seed || hint_rows + rows > largest_avail {
+                        lane.queue.push_front(p);
+                        break;
+                    }
+                }
+                hint_rows += rows;
+                batch.push(p);
+            }
+            if batch.is_empty() {
+                continue;
+            }
+
+            let b = pick_batch(&avail, hint_rows);
+            let seed = batch[0]
+                .req
+                .seed
+                .unwrap_or_else(|| lane.session.run_config().seed.wrapping_add(lane.batches as u64));
+
+            match lane.session.run_batch(b, seed) {
+                Ok((report, _out)) => {
+                    peak = peak.max(report.peak_bytes);
+                    lane.batches += 1;
+                    total_batches += 1;
+                    batch_sizes += batch.len();
+                    for p in &batch {
+                        let latency = p.enqueued.elapsed();
+                        lane.latency.record(latency);
+                        lane.served += 1;
+                        let _ = p.reply.send(InferResponse {
+                            id: p.id,
+                            profile: lane.profile.clone(),
+                            ok: true,
+                            error: None,
+                            latency_ms: latency.as_secs_f64() * 1000.0,
+                            batch: b,
+                            tokens: report.tokens,
+                            peak_bytes: report.peak_bytes,
+                        });
+                    }
+                }
+                Err(e) => {
+                    // the session recovered its accounting; fail the batch's
+                    // requests and keep serving (no panic, no poisoned loop)
+                    if first_error.is_none() {
+                        first_error = Some(format!("{e:#}"));
+                    }
+                    for p in &batch {
+                        lane.rejected += 1;
+                        let _ = p.reply.send(InferResponse::rejected(
+                            p.id,
+                            &lane.profile,
+                            p.enqueued,
+                            format!("pass failed: {e:#}"),
+                        ));
+                    }
+                }
+            }
+        }
+
+        // reject anything still sitting in the channel after shutdown
+        while let Ok(env) = self.rx.try_recv() {
+            if let Envelope::Infer(p) = env {
+                self.unroutable += 1;
+                let _ = p.reply.send(InferResponse::rejected(
+                    p.id,
+                    &p.req.profile,
+                    p.enqueued,
+                    "router shut down",
+                ));
+            }
+        }
+
+        let wall = t_start.elapsed().as_secs_f64();
+        let mut latency = LatencyRecorder::new();
+        let (mut served, mut rejected) = (0usize, self.unroutable);
+        let (mut hits, mut misses) = (0u64, 0u64);
+        let per_model: Vec<ModelStats> = self
+            .lanes
+            .iter()
+            .map(|l| {
+                served += l.served;
+                rejected += l.rejected;
+                for &ms in l.latency.samples_ms() {
+                    latency.record_ms(ms);
+                }
+                let cs = l.session.cache_stats();
+                hits += cs.hits;
+                misses += cs.misses;
+                ModelStats {
+                    profile: l.profile.clone(),
+                    served: l.served,
+                    rejected: l.rejected,
+                    batches: l.batches,
+                    latency: l.latency.clone(),
+                    cache_hits: cs.hits,
+                    cache_misses: cs.misses,
+                }
+            })
+            .collect();
+        Ok(RouterSummary {
+            served,
+            rejected,
+            batches: total_batches,
+            latency,
+            throughput_rps: served as f64 / wall.max(1e-9),
+            peak_bytes: peak,
+            budget_bytes: self.cfg.budget,
+            mean_batch_size: batch_sizes as f64 / total_batches.max(1) as f64,
+            cache_hits: hits,
+            cache_misses: misses,
+            per_model,
+            first_error,
+        })
+    }
+
+    /// Queue an envelope; false = shutdown requested.  Unknown profiles are
+    /// rejected immediately (graceful error, not a panic).
+    fn enqueue(&mut self, env: Envelope) -> bool {
+        match env {
+            Envelope::Shutdown => false,
+            Envelope::Infer(p) => {
+                match self.lane_index(&p.req.profile) {
+                    Some(li) => self.lanes[li].queue.push_back(p),
+                    None => {
+                        self.unroutable += 1;
+                        let resp = InferResponse::rejected(
+                            p.id,
+                            &p.req.profile,
+                            p.enqueued,
+                            format!("unknown profile '{}'", p.req.profile),
+                        );
+                        let _ = p.reply.send(resp);
+                    }
+                }
+                true
+            }
+        }
+    }
+
+    /// Earliest-deadline-first over non-empty lane heads; requests without
+    /// a deadline come after deadlined ones, FIFO by arrival within a tie.
+    fn pick_lane(&self) -> Option<usize> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| l.queue.front().map(|p| (i, p)))
+            .min_by_key(|(_, p)| (p.deadline.is_none(), p.deadline, p.enqueued))
+            .map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_batch_smallest_fitting() {
+        assert_eq!(pick_batch(&[1, 4], 1), 1);
+        assert_eq!(pick_batch(&[1, 4], 2), 4);
+        assert_eq!(pick_batch(&[1, 4], 4), 4);
+        assert_eq!(pick_batch(&[1, 4], 9), 4); // overflow -> largest
+        assert_eq!(pick_batch(&[], 3), 1);
+    }
+
+    #[test]
+    fn request_json_roundtrip() {
+        let req = InferRequest {
+            profile: "tiny-bert".into(),
+            batch_hint: 2,
+            deadline: Some(Duration::from_millis(1500)),
+            seed: Some(7),
+        };
+        let v = req.to_json();
+        assert_eq!(v.get("op").unwrap().as_str().unwrap(), "infer");
+        let back = InferRequest::from_json(&v).unwrap();
+        assert_eq!(back.profile, "tiny-bert");
+        assert_eq!(back.batch_hint, 2);
+        assert_eq!(back.seed, Some(7));
+        assert!((back.deadline.unwrap().as_secs_f64() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn response_json_roundtrip() {
+        let resp = InferResponse {
+            id: 3,
+            profile: "tiny-gpt".into(),
+            ok: true,
+            error: None,
+            latency_ms: 12.5,
+            batch: 4,
+            tokens: 8,
+            peak_bytes: 1024,
+        };
+        let back = InferResponse::from_json(&resp.to_json()).unwrap();
+        assert!(back.ok);
+        assert_eq!(back.id, 3);
+        assert_eq!(back.batch, 4);
+        assert_eq!(back.tokens, 8);
+        assert_eq!(back.peak_bytes, 1024);
+        let rej = InferResponse::rejected(9, "m", Instant::now(), "nope");
+        let back = InferResponse::from_json(&rej.to_json()).unwrap();
+        assert!(!back.ok);
+        assert_eq!(back.error.as_deref(), Some("nope"));
+    }
+
+    #[test]
+    fn default_router_config_sane() {
+        let c = RouterConfig::default();
+        assert!(c.max_batch >= 1);
+        assert!(c.batch_window > Duration::ZERO);
+    }
+}

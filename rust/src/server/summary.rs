@@ -1,0 +1,215 @@
+//! Single-model serving compatibility layer + summaries.
+//!
+//! [`serve`] reproduces the original serving API (the paper's §V-C driver:
+//! Poisson workload generator -> batcher -> one session) as a thin shim
+//! over the [`Router`]: it builds a one-model [`RouterConfig`], spawns the
+//! workload generator as a producer thread feeding a [`RouterHandle`], and
+//! runs the router loop on the calling thread.  Benches, tests, and
+//! examples written against `serve()` / [`ServeSummary`] keep working
+//! unchanged; new callers should use the [`Router`] directly.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::router::{InferRequest, Router, RouterConfig, RouterSummary};
+use crate::config::{Mode, RunConfig};
+use crate::engine::Engine;
+use crate::metrics::{check_slo, LatencyRecorder, SloReport};
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// Serving workload + policy.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub run: RunConfig,
+    /// total requests to serve
+    pub num_requests: usize,
+    /// mean arrival rate (requests/sec); 0 = closed loop (back to back)
+    pub arrival_rps: f64,
+    /// max requests folded into one batch (capped by AOT batch sizes)
+    pub max_batch: usize,
+    /// how long the batcher waits to fill a batch
+    pub batch_window: Duration,
+    /// p95 latency target
+    pub slo_ms: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            run: RunConfig::default(),
+            num_requests: 16,
+            arrival_rps: 0.0,
+            max_batch: 4,
+            batch_window: Duration::from_millis(20),
+            slo_ms: 1000.0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// The equivalent one-model router configuration.
+    pub fn router_config(&self) -> RouterConfig {
+        RouterConfig {
+            models: vec![self.run.clone()],
+            budget: self.run.budget,
+            max_batch: self.max_batch,
+            batch_window: self.batch_window,
+        }
+    }
+}
+
+/// Summary of a serving session.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub served: usize,
+    pub batches: usize,
+    pub latency: LatencyRecorder,
+    pub throughput_rps: f64,
+    pub peak_bytes: u64,
+    pub slo: SloReport,
+    pub mean_batch_size: f64,
+    /// hot-layer cache hits/misses across all batches (0/0 = no cache)
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl ServeSummary {
+    /// Collapse a router summary into the single-model serving report.
+    pub fn from_router(s: RouterSummary, slo_ms: f64) -> ServeSummary {
+        let slo = check_slo(&s.latency, slo_ms);
+        ServeSummary {
+            served: s.served,
+            batches: s.batches,
+            throughput_rps: s.throughput_rps,
+            peak_bytes: s.peak_bytes,
+            slo,
+            mean_batch_size: s.mean_batch_size,
+            latency: s.latency,
+            cache_hits: s.cache_hits,
+            cache_misses: s.cache_misses,
+        }
+    }
+
+    /// Machine-readable summary (the `serve --json` output; stable keys so
+    /// future PRs can record bench trajectories in `BENCH_*.json`).
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .set("served", self.served)
+            .set("batches", self.batches)
+            .set("mean_batch_size", self.mean_batch_size)
+            .set("throughput_rps", self.throughput_rps)
+            .set("latency", self.latency.to_json())
+            .set("peak_bytes", self.peak_bytes)
+            .set("slo", self.slo.to_json())
+            .set("cache_hits", self.cache_hits)
+            .set("cache_misses", self.cache_misses)
+    }
+}
+
+/// Run the serving session; engine passes happen on this thread.  One
+/// [`crate::engine::Session`] (inside the one-model router) serves every
+/// batch: `Runtime::prepare` runs exactly once here, regardless of how
+/// many batches follow.  A dropped producer ends the run gracefully — it
+/// is a short workload, never a panic.
+pub fn serve(engine: &Engine, cfg: &ServeConfig) -> Result<ServeSummary> {
+    let router = Router::new(engine, cfg.router_config())?;
+    let handle = router.handle();
+    let profile = cfg.run.profile.clone();
+    let num = cfg.num_requests;
+    let rps = cfg.arrival_rps;
+    let seed = cfg.run.seed;
+
+    // workload generator (open loop with Poisson arrivals, or closed loop)
+    let producer = std::thread::spawn(move || {
+        let mut rng = Rng::new(seed ^ 0x5e7e);
+        for _ in 0..num {
+            if rps > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(rng.exp(1.0 / rps)));
+            }
+            if handle.submit(InferRequest::new(profile.clone())).is_err() {
+                return; // router exited early; nothing left to feed
+            }
+        }
+        handle.shutdown();
+    });
+
+    let summary = router.run()?;
+    producer.join().map_err(|_| anyhow::anyhow!("workload generator panicked"))?;
+    // the shim submits no deadlines and only known profiles, so a rejected
+    // request can only mean a failed engine pass — surface its root cause
+    // as an error, exactly like the pre-router serve() did
+    if summary.rejected > 0 {
+        anyhow::bail!(
+            "{} of {} requests failed: {}",
+            summary.rejected,
+            cfg.num_requests,
+            summary.first_error.as_deref().unwrap_or("see per-request responses"),
+        );
+    }
+    Ok(ServeSummary::from_router(summary, cfg.slo_ms))
+}
+
+/// Convenience: serving defaults for the E2E example (PIPELOAD on the
+/// BERT sim profile with a batch-4 entry).
+pub fn e2e_default(profile: &str, agents: usize, budget: Option<u64>) -> ServeConfig {
+    ServeConfig {
+        run: RunConfig {
+            profile: profile.into(),
+            mode: Mode::PipeLoad,
+            agents,
+            budget,
+            ..RunConfig::default()
+        },
+        ..ServeConfig::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_sane() {
+        let c = ServeConfig::default();
+        assert!(c.num_requests > 0);
+        assert!(c.slo_ms > 0.0);
+    }
+
+    #[test]
+    fn router_config_mirrors_serve_config() {
+        let c = ServeConfig {
+            run: RunConfig { budget: Some(1234), ..RunConfig::default() },
+            max_batch: 7,
+            ..ServeConfig::default()
+        };
+        let rc = c.router_config();
+        assert_eq!(rc.models.len(), 1);
+        assert_eq!(rc.budget, Some(1234));
+        assert_eq!(rc.max_batch, 7);
+        assert_eq!(rc.batch_window, c.batch_window);
+    }
+
+    #[test]
+    fn summary_json_has_stable_keys() {
+        let s = ServeSummary {
+            served: 4,
+            batches: 2,
+            latency: LatencyRecorder::new(),
+            throughput_rps: 1.5,
+            peak_bytes: 2048,
+            slo: check_slo(&LatencyRecorder::new(), 100.0),
+            mean_batch_size: 2.0,
+            cache_hits: 1,
+            cache_misses: 3,
+        };
+        let v = s.to_json();
+        for key in
+            ["served", "batches", "throughput_rps", "latency", "peak_bytes", "slo", "cache_hits"]
+        {
+            assert!(v.get(key).is_some(), "missing key {key}");
+        }
+        assert_eq!(v.get("slo").unwrap().get("target_ms").unwrap().as_f64().unwrap(), 100.0);
+    }
+}

@@ -1,0 +1,283 @@
+//! Line-delimited-JSON TCP front-end over the [`Router`] queue.
+//!
+//! `hermes serve --listen <addr>` binds a std [`TcpListener`]; each
+//! accepted connection gets a thread that parses one JSON object per line
+//! (`util::json`, no serde in the offline crate set), submits it through a
+//! cloned [`RouterHandle`], blocks on the [`Ticket`], and writes the JSON
+//! response line back.  The router loop itself stays on the caller's
+//! thread (the PJRT runtime is not `Send`), exactly as the original
+//! serving loop promised: "a TCP front-end would feed the same queue
+//! without touching this loop".
+//!
+//! Protocol (one JSON object per line, both directions):
+//!
+//! ```text
+//! -> {"op":"infer","profile":"tiny-bert","batch_hint":1,"deadline_ms":5000,"seed":7}
+//! <- {"ok":true,"id":0,"profile":"tiny-bert","latency_ms":12.3,"batch":1,"tokens":0,"peak_bytes":1048576}
+//! -> {"op":"ping"}
+//! <- {"ok":true,"op":"pong"}
+//! -> {"op":"shutdown"}        # drains queued work, stops the server
+//! <- {"ok":true,"op":"shutdown"}
+//! ```
+//!
+//! [`Ticket`]: super::router::Ticket
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::router::{InferRequest, Router, RouterConfig, RouterHandle, RouterSummary};
+use crate::engine::Engine;
+use crate::util::json::Value;
+
+/// A bound-but-not-yet-serving TCP front-end.  Binding is split from
+/// running so callers (and tests) can learn the ephemeral port before the
+/// blocking serve loop starts.
+pub struct TcpFrontend {
+    listener: TcpListener,
+}
+
+impl TcpFrontend {
+    /// Bind the listen address (e.g. `127.0.0.1:7070`, or port 0 for an
+    /// ephemeral port).
+    pub fn bind(addr: &str) -> Result<TcpFrontend> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding TCP listener on {addr}"))?;
+        Ok(TcpFrontend { listener })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until a client sends `{"op":"shutdown"}`.  The router loop
+    /// (and every engine pass) runs on this thread; the accept loop and
+    /// the per-connection readers run on background threads feeding the
+    /// router's queue.
+    pub fn run(self, engine: &Engine, cfg: RouterConfig) -> Result<RouterSummary> {
+        let router = Router::new(engine, cfg)?;
+        let handle = router.handle();
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // Non-blocking accept + stop flag: once the router exits, the
+        // accept thread notices and unbinds instead of lingering forever.
+        self.listener.set_nonblocking(true)?;
+        let listener = self.listener;
+        let accept_stop = stop.clone();
+        let active = Arc::new(AtomicUsize::new(0));
+        let accept = std::thread::spawn(move || {
+            loop {
+                if accept_stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((mut stream, _peer)) => {
+                        // bound the thread-per-connection model: past the
+                        // cap, answer "busy" and close instead of letting a
+                        // connection flood exhaust threads/queue memory
+                        // (the line-length cap alone doesn't cover that)
+                        if active.load(Ordering::Relaxed) >= MAX_CONNECTIONS {
+                            let reply = Value::obj()
+                                .set("ok", false)
+                                .set("error", "server busy: too many connections");
+                            let _ = stream.write_all(reply.compact().as_bytes());
+                            let _ = stream.write_all(b"\n");
+                            // FIN before close: dropping with the client's
+                            // request unread would RST and may discard the
+                            // reply before the peer reads it
+                            let _ = stream.shutdown(std::net::Shutdown::Write);
+                            continue;
+                        }
+                        active.fetch_add(1, Ordering::Relaxed);
+                        let h = handle.clone();
+                        let done = active.clone();
+                        std::thread::spawn(move || {
+                            let _ = client_loop(stream, h);
+                            done.fetch_sub(1, Ordering::Relaxed);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(_) => {
+                        // transient accept errors (ECONNABORTED from a
+                        // client RST, EMFILE during a burst) must not kill
+                        // the listener; the stop flag bounds this loop
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            }
+            // dropping `handle`'s last clone here lets the router drain
+        });
+
+        let summary = router.run();
+        stop.store(true, Ordering::Relaxed);
+        let _ = accept.join();
+        summary
+    }
+}
+
+/// Longest request line a client may send (a valid request is well under
+/// 1 KiB; anything bigger is a protocol violation, and an unbounded read
+/// would let one peer grow a String until the whole server is OOM-killed).
+const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Concurrent connection cap (thread-per-connection model).  Each
+/// connection has at most one request in flight, so this also bounds the
+/// router queue's growth from TCP clients.
+const MAX_CONNECTIONS: usize = 64;
+
+/// Idle-read timeout per connection.  Without one, 64 silent peers would
+/// hold the connection cap forever (a standing lock-out), and reader
+/// threads would outlive the server.  A peer idle this long is dropped.
+const CLIENT_IDLE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Read one `\n`-terminated line with a hard length cap.  `Ok(None)` on a
+/// clean EOF; `Err` on I/O failure or an oversized line.
+fn read_bounded_line<R: BufRead>(reader: &mut R) -> std::io::Result<Option<String>> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (done, used) = {
+            let available = reader.fill_buf()?;
+            if available.is_empty() {
+                return Ok(if buf.is_empty() {
+                    None
+                } else {
+                    Some(String::from_utf8_lossy(&buf).into_owned())
+                });
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    buf.extend_from_slice(&available[..pos]);
+                    (true, pos + 1)
+                }
+                None => {
+                    buf.extend_from_slice(available);
+                    (false, available.len())
+                }
+            }
+        };
+        reader.consume(used);
+        if buf.len() > MAX_LINE_BYTES {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+            ));
+        }
+        if done {
+            return Ok(Some(String::from_utf8_lossy(&buf).into_owned()));
+        }
+    }
+}
+
+/// One connection: read JSON lines, route them, write JSON lines back.
+/// Any error (bad JSON, oversized line, dead router, closed socket)
+/// answers or ends the connection gracefully — library code must not
+/// panic or balloon on a bad peer.
+fn client_loop(stream: TcpStream, handle: RouterHandle) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(CLIENT_IDLE_TIMEOUT)).ok();
+    let mut writer = stream.try_clone().context("cloning TCP stream")?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_bounded_line(&mut reader) {
+            Ok(Some(l)) => l,
+            Ok(None) => break, // peer closed the connection
+            Err(e) => {
+                // oversized/broken line: answer once, then drop the peer
+                // (the stream can no longer be resynchronized to lines)
+                let reply = Value::obj().set("ok", false).set("error", e.to_string());
+                let _ = writer.write_all(reply.compact().as_bytes());
+                let _ = writer.write_all(b"\n");
+                let _ = writer.flush();
+                break;
+            }
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (reply, shutdown) = handle_line(&line, &handle);
+        writer.write_all(reply.compact().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        // the ack is on the wire before the router is told to stop, so a
+        // client's shutdown reply can never race the process exiting
+        if shutdown {
+            handle.shutdown();
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Dispatch one request line; returns the reply and whether the peer
+/// asked for a server shutdown (performed by the caller *after* the reply
+/// is flushed).
+fn handle_line(line: &str, handle: &RouterHandle) -> (Value, bool) {
+    let err = |msg: String| (Value::obj().set("ok", false).set("error", msg), false);
+    let parsed = match Value::parse(line) {
+        Ok(v) => v,
+        Err(e) => return err(format!("bad json: {e:#}")),
+    };
+    let op = parsed.get("op").and_then(|o| o.as_str().ok()).unwrap_or("infer");
+    match op {
+        "ping" => (Value::obj().set("ok", true).set("op", "pong"), false),
+        "shutdown" => (Value::obj().set("ok", true).set("op", "shutdown"), true),
+        "infer" => {
+            let req = match InferRequest::from_json(&parsed) {
+                Ok(r) => r,
+                Err(e) => return err(format!("bad request: {e:#}")),
+            };
+            match handle.submit(req).and_then(|t| t.wait()) {
+                Ok(resp) => (resp.to_json(), false),
+                Err(e) => err(format!("{e:#}")),
+            }
+        }
+        other => err(format!("unknown op '{other}'")),
+    }
+}
+
+/// Client-side convenience for tests/tools: one blocking round-trip on an
+/// existing connection.
+pub fn roundtrip(stream: &mut TcpStream, request: &Value) -> Result<Value> {
+    let mut line = request.compact();
+    line.push('\n');
+    stream.write_all(line.as_bytes())?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut reply = String::new();
+    reader.read_line(&mut reply)?;
+    if reply.trim().is_empty() {
+        anyhow::bail!("server closed the connection without replying");
+    }
+    Value::parse(reply.trim()).context("parsing server reply")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_ephemeral_reports_port() {
+        let f = TcpFrontend::bind("127.0.0.1:0").unwrap();
+        let addr = f.local_addr().unwrap();
+        assert_ne!(addr.port(), 0);
+    }
+
+    #[test]
+    fn bounded_line_reader_caps_hostile_input() {
+        use std::io::Cursor;
+        let mut ok = Cursor::new(b"{\"op\":\"ping\"}\nrest".to_vec());
+        assert_eq!(read_bounded_line(&mut ok).unwrap().unwrap(), "{\"op\":\"ping\"}");
+        assert_eq!(read_bounded_line(&mut ok).unwrap().unwrap(), "rest"); // EOF-terminated
+        assert!(read_bounded_line(&mut ok).unwrap().is_none());
+
+        // a newline-free flood errors out instead of growing without bound
+        let mut flood = Cursor::new(vec![b'x'; MAX_LINE_BYTES + 2]);
+        assert!(read_bounded_line(&mut flood).is_err());
+    }
+}

@@ -120,7 +120,7 @@ fn hot_layer_cache_survives_tight_budget_via_eviction() {
     // the run must complete rather than deadlock
     let mut c = cfg("tiny-gpt", Mode::PipeLoad, 3);
     c.budget = Some(3 * max_stage);
-    c.pin_budget = Some(u64::MAX); // session clips this to budget - max_stage
+    c.pin_budget = Some(3 * max_stage); // session clips this to budget - max_stage
     c.gen_tokens = Some(3);
     let (rep, _) = e.run(&c).unwrap();
     assert_eq!(rep.tokens, 3);
