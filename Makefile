@@ -6,7 +6,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts golden build test examples fmt clippy clean
+.PHONY: artifacts golden build test examples bench fmt clippy clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../rust/artifacts
@@ -22,6 +22,11 @@ test:
 
 examples:
 	cargo build --release --examples
+
+# Record a serve --json perf trajectory (one-model kv off/on + a two-lane
+# router run) into BENCH_pr3.json; CI uploads it as a build artifact.
+bench:
+	cargo run --release --example bench_trajectory
 
 fmt:
 	cargo fmt --check

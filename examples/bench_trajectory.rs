@@ -1,0 +1,99 @@
+//! `make bench` driver: record a machine-readable perf trajectory in
+//! `BENCH_pr3.json` so future PRs can diff serving behavior.
+//!
+//! Three runs, all on tiny profiles with unthrottled storage (fast + free
+//! of disk variance):
+//!
+//! * `one_model`         — generative serve, KV cache OFF (paper decode)
+//! * `one_model_kv`      — same workload with `--kv-cache`
+//! * `router_two_kv_lanes` — tiny-gpt + tiny-gptj lanes under one shared
+//!   budget, each with a KV allocation
+//!
+//! The JSON keys are the stable `serve --json` / router summary keys.
+//! CI runs this and uploads the file as a build artifact.
+
+use std::time::Duration;
+
+use anyhow::Result;
+use hermes::config::{Mode, RunConfig};
+use hermes::engine::Engine;
+use hermes::server::{serve, InferRequest, Router, RouterConfig, ServeConfig};
+use hermes::util::json::Value;
+
+fn main() -> Result<()> {
+    let engine = Engine::with_default_paths()?;
+    let gpt = engine.runtime.profile("tiny-gpt")?.total_weight_bytes;
+    let gptj = engine.runtime.profile("tiny-gptj")?.total_weight_bytes;
+
+    let base = RunConfig {
+        profile: "tiny-gpt".into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        gen_tokens: Some(4),
+        ..RunConfig::default()
+    };
+
+    // one-model serve, KV off vs on, identical workload
+    let off_cfg =
+        ServeConfig { run: base.clone(), num_requests: 6, max_batch: 2, ..ServeConfig::default() };
+    let off = serve(&engine, &off_cfg)?;
+    let mut kv_run = base.clone();
+    kv_run.kv_cache = true;
+    let on_cfg = ServeConfig {
+        run: kv_run.clone(),
+        num_requests: 6,
+        max_batch: 2,
+        ..ServeConfig::default()
+    };
+    let on = serve(&engine, &on_cfg)?;
+
+    // two generative KV lanes under one shared budget
+    let mut lane_b = kv_run.clone();
+    lane_b.profile = "tiny-gptj".into();
+    let router = Router::new(
+        &engine,
+        RouterConfig {
+            models: vec![kv_run, lane_b],
+            budget: Some(gpt + gptj),
+            kv_budget: Some(1 << 20),
+            max_batch: 2,
+            batch_window: Duration::from_millis(5),
+        },
+    )?;
+    let handle = router.handle();
+    let producer = std::thread::spawn(move || {
+        let tickets: Vec<_> = (0..8)
+            .map(|i| {
+                let profile = if i % 2 == 0 { "tiny-gpt" } else { "tiny-gptj" };
+                handle.submit(InferRequest::new(profile)).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            let _ = t.wait();
+        }
+        handle.shutdown();
+    });
+    let router_summary = router.run()?;
+    producer.join().expect("producer panicked");
+
+    let v = Value::obj()
+        .set("bench", "pr3-kv-cache")
+        .set("one_model", off.to_json())
+        .set("one_model_kv", on.to_json())
+        .set("router_two_kv_lanes", router_summary.to_json());
+    let out = std::path::PathBuf::from("BENCH_pr3.json");
+    v.to_file(&out)?;
+    println!("wrote {}", out.display());
+    println!(
+        "one-model p50 {:.1} ms (kv off) vs {:.1} ms (kv on, {} incremental passes); \
+         router: {} served, {} kv incremental passes, peak {} B",
+        off.latency.p50(),
+        on.latency.p50(),
+        on.kv_inc_passes,
+        router_summary.served,
+        router_summary.kv_inc_passes,
+        router_summary.peak_bytes,
+    );
+    Ok(())
+}

@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
         RouterConfig {
             models: vec![base(&encoder), dec],
             budget: Some(budget),
+            kv_budget: None,
             max_batch: 2,
             batch_window: Duration::from_millis(10),
         },

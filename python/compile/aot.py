@@ -75,7 +75,10 @@ def lower_entry(p: Profile, kind: str, batch: int, kc: KernelChoice) -> str:
     ]
     for spec in configs.SPEC_FNS[kind](p):
         arg_specs.append(jax.ShapeDtypeStruct(spec.shape, _DT[spec.dtype]))
-    lowered = jax.jit(entry_fn(p, kind, kc)).lower(*arg_specs)
+    # keep_unused: the Rust side always passes a stage shard's FULL tensor
+    # list; entries that use a subset (the *_kv prime entries) must keep the
+    # unused weights as dead parameters or the arity would not match.
+    lowered = jax.jit(entry_fn(p, kind, kc), keep_unused=True).lower(*arg_specs)
     return to_hlo_text(lowered)
 
 
@@ -90,7 +93,7 @@ def build_profile(p: Profile, out_dir: str, kc: KernelChoice) -> dict:
             "param_bytes": sum(s.num_bytes() for s in configs.SPEC_FNS[kind](p)),
         }
     entries = {}
-    for kind in configs.layer_kinds_for(p):
+    for kind in configs.layer_kinds_for(p) + configs.aux_entry_kinds_for(p):
         for batch in p.batches:
             t0 = time.time()
             text = lower_entry(p, kind, batch, kc)

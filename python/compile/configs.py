@@ -260,6 +260,15 @@ SPEC_FNS = {
     "pooler": pooler_specs,
     "classifier": classifier_specs,
     "lm_head": lm_head_specs,
+    # Incremental-decode entry variants take the SAME weight list as their
+    # base kind — one stage shard feeds both executables (the prime entries
+    # simply leave their unused tensors as dead HLO parameters).
+    "embedding_inc": embedding_specs,
+    "decoder_layer_inc": decoder_layer_specs,
+    "gptj_layer_inc": gptj_layer_specs,
+    "decoder_layer_kv": decoder_layer_specs,
+    "gptj_layer_kv": gptj_layer_specs,
+    "lm_head_inc": lm_head_specs,
 }
 
 
@@ -276,6 +285,19 @@ def layer_kinds_for(p: Profile) -> List[str]:
     if p.family == "bart":
         return ["embedding", "encoder_layer", "cross_decoder_layer", "lm_head"]
     raise ValueError(f"unknown family {p.family}")
+
+
+def aux_entry_kinds_for(p: Profile) -> List[str]:
+    """Extra HLO entries lowered beyond the stage kinds: the incremental
+    single-token decode path (GPT-style families only; the Rust kvcache
+    subsystem drives these)."""
+    if p.family == "gpt2":
+        return ["embedding_inc", "decoder_layer_inc", "decoder_layer_kv",
+                "lm_head_inc"]
+    if p.family == "gptj":
+        return ["embedding_inc", "gptj_layer_inc", "gptj_layer_kv",
+                "lm_head_inc"]
+    return []
 
 
 def stage_table(p: Profile) -> List[dict]:

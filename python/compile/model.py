@@ -179,6 +179,113 @@ def cross_decoder_layer_fwd(p: Profile, x: jax.Array, enc: jax.Array, *w,
     return _ln(x + f, ln3_g, ln3_b, kc)
 
 
+# ---------------------------------------------------------------------------
+# incremental-decode entries (the Rust kvcache subsystem's compute)
+#
+# GPT-style decode with a KV cache runs three entry variants per token:
+#   embedding_inc      ids[B,1] + pos[1]                  -> x[B,1,H]
+#   <body>_inc         x[B,1,H] + K/V[B,S,H] + pos[1]     -> [B,3,H]
+#                      (concat of x_out / k_new / v_new along axis 1 — one
+#                       output array keeps the Rust execute path untouched)
+#   lm_head_inc        x[B,1,H]                           -> logits[B,1,V]
+# plus one prime entry run during the full-prefix pass to seed the cache:
+#   <body>_kv          x[B,S,H]                           -> [B,2S,H]
+#                      (concat of K / V along axis 1, all positions)
+#
+# The K/V cache tensors arrive zero-padded past `pos`; attention masks
+# scores to positions <= pos, so the padding never leaks into the softmax.
+# Weight parameter lists are identical to the base layer kind (the prime
+# entry simply ignores the tensors it does not use), so the same stage
+# shard feeds both the full and the incremental executables.
+# ---------------------------------------------------------------------------
+
+
+def _mha_cached(p: Profile, h: jax.Array, k_full: jax.Array, v_full: jax.Array,
+                pos: jax.Array, wq, bq, wo, bo) -> jax.Array:
+    """One-token attention over a cached K/V prefix.
+
+    h: [B,1,H] (LN'd input); k/v_full: [B,S,H] valid at positions <= pos.
+    Plain jnp (no Pallas): the kernel is shaped for S x S self-attention,
+    and a 1 x S masked read is a trivial matmul either way.
+    """
+    B, _, H = h.shape
+    S = k_full.shape[1]
+    nh, dh = p.heads, p.head_dim
+
+    def split(x, s):
+        return x.reshape(B, s, nh, dh).transpose(0, 2, 1, 3).reshape(B * nh, s, dh)
+
+    q = split(h @ wq + bq, 1)
+    k = split(k_full, S)
+    v = split(v_full, S)
+    scores = (q @ k.transpose(0, 2, 1)) / jnp.sqrt(jnp.float32(dh))  # [B*nh,1,S]
+    mask = jnp.arange(S)[None, None, :] <= pos[0]
+    scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    w = jax.nn.softmax(scores, axis=-1)
+    o = (w @ v).reshape(B, nh, 1, dh).transpose(0, 2, 1, 3).reshape(B, 1, H)
+    return o @ wo + bo
+
+
+def embedding_inc_fwd(p: Profile, ids: jax.Array, pos: jax.Array, *w,
+                      kc: KernelChoice = DEFAULT_KERNELS):
+    """One decode token's embedding: ids[B,1] at position pos[1] -> [B,1,H]."""
+    tok, pos_table = w
+    return tok[ids] + pos_table[pos][None, :, :]
+
+
+def decoder_layer_inc_fwd(p: Profile, x: jax.Array, k_cache: jax.Array,
+                          v_cache: jax.Array, pos: jax.Array, *w,
+                          kc: KernelChoice = DEFAULT_KERNELS):
+    """GPT-2 block, one token against a cached prefix -> [B,3,H]
+    (x_out / k_new / v_new concatenated along axis 1)."""
+    (ln1_g, ln1_b, wq, bq, wk, bk, wv, bv, wo, bo,
+     ln2_g, ln2_b, w1, b1, w2, b2) = w
+    p0 = pos[0]
+    h = _ln(x, ln1_g, ln1_b, kc)
+    k_new = h @ wk + bk
+    v_new = h @ wv + bv
+    k_full = jax.lax.dynamic_update_slice(k_cache, k_new, (0, p0, 0))
+    v_full = jax.lax.dynamic_update_slice(v_cache, v_new, (0, p0, 0))
+    x = x + _mha_cached(p, h, k_full, v_full, pos, wq, bq, wo, bo)
+    h2 = _ln(x, ln2_g, ln2_b, kc)
+    x = x + _ffn(h2, w1, b1, w2, b2, kc)
+    return jnp.concatenate([x, k_new, v_new], axis=1)
+
+
+def gptj_layer_inc_fwd(p: Profile, x: jax.Array, k_cache: jax.Array,
+                       v_cache: jax.Array, pos: jax.Array, *w,
+                       kc: KernelChoice = DEFAULT_KERNELS):
+    """GPT-J block, one token against a cached prefix -> [B,3,H]."""
+    ln_g, ln_b, wq, wk, wv, wo, w1, b1, w2, b2 = w
+    p0 = pos[0]
+    z = jnp.zeros((p.hidden,), x.dtype)
+    h = _ln(x, ln_g, ln_b, kc)
+    k_new = h @ wk
+    v_new = h @ wv
+    k_full = jax.lax.dynamic_update_slice(k_cache, k_new, (0, p0, 0))
+    v_full = jax.lax.dynamic_update_slice(v_cache, v_new, (0, p0, 0))
+    a = _mha_cached(p, h, k_full, v_full, pos, wq, z, wo, z)
+    f = _ffn(h, w1, b1, w2, b2, kc)
+    return jnp.concatenate([x + a + f, k_new, v_new], axis=1)
+
+
+def decoder_layer_kv_fwd(p: Profile, x: jax.Array, *w,
+                         kc: KernelChoice = DEFAULT_KERNELS):
+    """Prime entry: the GPT-2 layer's K/V for every position -> [B,2S,H]."""
+    ln1_g, ln1_b = w[0], w[1]
+    wk, bk, wv, bv = w[4], w[5], w[6], w[7]
+    h = _ln(x, ln1_g, ln1_b, kc)
+    return jnp.concatenate([h @ wk + bk, h @ wv + bv], axis=1)
+
+
+def gptj_layer_kv_fwd(p: Profile, x: jax.Array, *w,
+                      kc: KernelChoice = DEFAULT_KERNELS):
+    """Prime entry: the GPT-J layer's K/V for every position -> [B,2S,H]."""
+    ln_g, ln_b, wq, wk, wv = w[0], w[1], w[2], w[3], w[4]
+    h = _ln(x, ln_g, ln_b, kc)
+    return jnp.concatenate([h @ wk, h @ wv], axis=1)
+
+
 def pooler_fwd(p: Profile, x: jax.Array, *w, kc: KernelChoice = DEFAULT_KERNELS):
     """BERT pooler: tanh(x[:,0] @ W + b) -> [B,H]."""
     pw, pb = w
@@ -211,6 +318,13 @@ FWD_FNS = {
     "pooler": pooler_fwd,
     "classifier": classifier_fwd,
     "lm_head": lm_head_fwd,
+    # incremental-decode variants (Rust kvcache subsystem)
+    "embedding_inc": embedding_inc_fwd,
+    "decoder_layer_inc": decoder_layer_inc_fwd,
+    "gptj_layer_inc": gptj_layer_inc_fwd,
+    "decoder_layer_kv": decoder_layer_kv_fwd,
+    "gptj_layer_kv": gptj_layer_kv_fwd,
+    "lm_head_inc": lm_head_fwd,  # LN + projection is shape-agnostic
 }
 
 
@@ -224,6 +338,20 @@ def activation_in_specs(p: Profile, kind: str, batch: int) -> List[dict]:
     B, S, H = batch, p.max_seq, p.hidden
     if kind == "embedding":
         return [{"name": "ids", "shape": [B, S], "dtype": "i32"}]
+    if kind == "embedding_inc":
+        return [
+            {"name": "ids", "shape": [B, 1], "dtype": "i32"},
+            {"name": "pos", "shape": [1], "dtype": "i32"},
+        ]
+    if kind in ("decoder_layer_inc", "gptj_layer_inc"):
+        return [
+            {"name": "x", "shape": [B, 1, H], "dtype": "f32"},
+            {"name": "k_cache", "shape": [B, S, H], "dtype": "f32"},
+            {"name": "v_cache", "shape": [B, S, H], "dtype": "f32"},
+            {"name": "pos", "shape": [1], "dtype": "i32"},
+        ]
+    if kind == "lm_head_inc":
+        return [{"name": "x", "shape": [B, 1, H], "dtype": "f32"}]
     if kind == "patch_embed":
         return [{"name": "patches", "shape": [B, S - 1, p.patch_dim], "dtype": "f32"}]
     if kind == "cross_decoder_layer":
@@ -242,6 +370,16 @@ def activation_out_spec(p: Profile, kind: str, batch: int) -> dict:
         return {"name": "logits", "shape": [B, p.num_classes], "dtype": "f32"}
     if kind == "lm_head":
         return {"name": "logits", "shape": [B, S, p.vocab], "dtype": "f32"}
+    if kind == "lm_head_inc":
+        return {"name": "logits", "shape": [B, 1, p.vocab], "dtype": "f32"}
+    if kind == "embedding_inc":
+        return {"name": "x", "shape": [B, 1, H], "dtype": "f32"}
+    if kind in ("decoder_layer_inc", "gptj_layer_inc"):
+        # x_out / k_new / v_new stacked along axis 1
+        return {"name": "xkv", "shape": [B, 3, H], "dtype": "f32"}
+    if kind in ("decoder_layer_kv", "gptj_layer_kv"):
+        # K / V for all positions stacked along axis 1
+        return {"name": "kv", "shape": [B, 2 * S, H], "dtype": "f32"}
     return {"name": "x", "shape": [B, S, H], "dtype": "f32"}
 
 

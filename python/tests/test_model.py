@@ -133,3 +133,70 @@ def test_table1_shares_sane():
         share[n] = body / configs.profile_total_bytes(p)
     assert share["vit-large-sim"] > share["bert-large-sim"]
     assert share["gptj-sim"] > share["gpt2-base-sim"]
+
+
+@pytest.mark.parametrize("name", ["tiny-gpt", "tiny-gptj"])
+@pytest.mark.parametrize("batch", [1, 2])
+def test_incremental_decode_matches_full_recompute(name, batch):
+    """The *_inc/_kv entries' math: greedy decode with a KV cache must pick
+    bit-identical tokens to per-token full-prefix recompute (the Rust
+    kvcache subsystem's correctness contract)."""
+    import jax
+
+    p = PROFILES[name]
+    body = "decoder_layer" if p.family == "gpt2" else "gptj_layer"
+    stages = configs.stage_table(p)
+    rng = np.random.RandomState(11)
+    weights = [model.make_example_weights(p, s["kind"], rng) for s in stages]
+    B, S, H = batch, p.max_seq, p.hidden
+    prompt, gen = p.prompt_tokens, 6
+    ids = np.zeros((B, S), dtype=np.int32)
+    ids[:, :prompt] = rng.randint(1, p.vocab, size=(B, prompt))
+
+    def full_logits(cur_ids, cur):
+        out = model.full_forward(p, jnp.asarray(cur_ids), weights)
+        return np.asarray(out)[:, cur - 1, :]
+
+    # reference: full recompute every token
+    ref_ids, cur, ref = ids.copy(), prompt, []
+    for _ in range(gen):
+        nxt = full_logits(ref_ids, cur).argmax(axis=-1)
+        ref.append(nxt)
+        ref_ids[:, cur] = nxt
+        cur += 1
+
+    # KV path: one full pass primes the cache, then incremental passes
+    body_idx = [i for i, s in enumerate(stages) if s["kind"] == body]
+    k_cache = {i: np.zeros((B, S, H), np.float32) for i in body_idx}
+    v_cache = {i: np.zeros((B, S, H), np.float32) for i in body_idx}
+    kv_ids, cur, got = ids.copy(), prompt, []
+    x = jnp.asarray(kv_ids)
+    for si, st in enumerate(stages):
+        if st["kind"] == body:
+            kv = np.asarray(model.FWD_FNS[body + "_kv"](p, x, *weights[si]))
+            k_cache[si][:, :cur, :] = kv[:, :cur, :]
+            v_cache[si][:, :cur, :] = kv[:, S:S + cur, :]
+        x = model.FWD_FNS[st["kind"]](p, x, *weights[si])
+    nxt = np.asarray(x)[:, cur - 1, :].argmax(axis=-1)
+    got.append(nxt)
+    kv_ids[:, cur] = nxt
+    cur += 1
+    for _ in range(gen - 1):
+        pos = cur - 1
+        posb = jnp.asarray([pos], jnp.int32)
+        x = model.embedding_inc_fwd(p, jnp.asarray(kv_ids[:, pos:pos + 1]),
+                                    posb, *weights[0])
+        for si in body_idx:
+            out = np.asarray(model.FWD_FNS[body + "_inc"](
+                p, x, jnp.asarray(k_cache[si]), jnp.asarray(v_cache[si]),
+                posb, *weights[si]))
+            x = jnp.asarray(out[:, 0:1, :])
+            k_cache[si][:, pos, :] = out[:, 1, :]
+            v_cache[si][:, pos, :] = out[:, 2, :]
+        logits = np.asarray(model.FWD_FNS["lm_head"](p, x, *weights[-1]))[:, 0, :]
+        nxt = logits.argmax(axis=-1)
+        got.append(nxt)
+        kv_ids[:, cur] = nxt
+        cur += 1
+
+    assert (np.array(ref) == np.array(got)).all()

@@ -60,6 +60,36 @@ impl Mode {
     }
 }
 
+/// Hot-layer cache pin policy (which computed layers the Daemon keeps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PinPolicy {
+    /// pin in compute order until the pin budget fills (first come wins)
+    #[default]
+    Fifo,
+    /// pin by load-cost-per-byte score: a newly computed layer displaces
+    /// lower-scoring pins, so the bytes kept are the ones that are most
+    /// expensive to re-read from the edge medium (seek-heavy small stages
+    /// score above bandwidth-bound large ones)
+    Cost,
+}
+
+impl PinPolicy {
+    pub fn parse(s: &str) -> Result<PinPolicy> {
+        Ok(match s {
+            "fifo" => PinPolicy::Fifo,
+            "cost" => PinPolicy::Cost,
+            _ => anyhow::bail!("unknown pin policy '{s}' (fifo|cost)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PinPolicy::Fifo => "fifo",
+            PinPolicy::Cost => "cost",
+        }
+    }
+}
+
 /// Everything one engine run needs.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -74,14 +104,22 @@ pub struct RunConfig {
     /// Daemon keep up to this many bytes of computed layers resident
     /// across passes when the memory budget has slack.
     pub pin_budget: Option<u64>,
+    /// which layers the Daemon pins when the pin budget is contended
+    pub pin_policy: PinPolicy,
     pub disk: String,
     pub batch: usize,
     pub seed: u64,
     pub trace: bool,
     /// generative models: tokens to generate (None = profile default)
     pub gen_tokens: Option<usize>,
-    /// KV-cache extension (OFF reproduces the paper's per-token reload)
+    /// KV-cache decode (OFF reproduces the paper's full-prefix re-execution
+    /// per token; ON runs one full-prefix pass then incremental single-token
+    /// passes against the paged KV pool — GPT-style profiles only)
     pub kv_cache: bool,
+    /// KV pool byte cap (None = bounded only by the memory budget).
+    /// Validated `pin_budget + kv_budget <= budget` so weights-in-flight,
+    /// pins, and attention state are jointly planned.
+    pub kv_budget: Option<u64>,
 }
 
 impl RunConfig {
@@ -102,8 +140,14 @@ impl RunConfig {
         profile: &crate::model::Profile,
         budget: Option<u64>,
     ) -> Result<()> {
-        if self.kv_cache {
-            anyhow::bail!("--kv-cache is an ablation extension; see benches/ablation.rs");
+        if self.kv_cache && self.mode == Mode::Baseline {
+            anyhow::bail!(
+                "--kv-cache needs a pipelined mode (the baseline keeps the \
+                 whole model resident and has no per-token reload to save)"
+            );
+        }
+        if self.kv_budget.is_some() && !self.kv_cache {
+            anyhow::bail!("--kv-budget-mb only makes sense with --kv-cache");
         }
         if self.agents == 0 {
             anyhow::bail!("agents must be >= 1 (got 0)");
@@ -116,8 +160,15 @@ impl RunConfig {
                 profile.batches
             );
         }
-        if let (Some(pin), Some(b)) = (self.pin_budget, budget) {
-            if pin > b {
+        if let Some(b) = budget {
+            let pin = self.pin_budget.unwrap_or(0);
+            let kv = self.kv_budget.unwrap_or(0);
+            if pin + kv > b {
+                if kv > 0 {
+                    anyhow::bail!(
+                        "pin budget {pin} B + kv budget {kv} B exceed memory budget {b} B"
+                    );
+                }
                 anyhow::bail!("pin budget {pin} B exceeds memory budget {b} B");
             }
         }
@@ -133,12 +184,14 @@ impl Default for RunConfig {
             agents: 4,
             budget: None,
             pin_budget: None,
+            pin_policy: PinPolicy::Fifo,
             disk: "edge-emmc".into(),
             batch: 1,
             seed: 42,
             trace: false,
             gen_tokens: None,
             kv_cache: false,
+            kv_budget: None,
         }
     }
 }
@@ -201,9 +254,15 @@ mod tests {
         let ok = RunConfig { batch: 1, ..RunConfig::default() };
         assert!(ok.validate(&p).is_ok());
 
+        // kv-cache is live now; only the baseline mode rejects it
         let kv = RunConfig { kv_cache: true, ..ok.clone() };
-        let e = kv.validate(&p).unwrap_err().to_string();
-        assert!(e.contains("--kv-cache is an ablation extension"), "{e}");
+        assert!(kv.validate(&p).is_ok());
+        let kv_baseline = RunConfig { kv_cache: true, mode: Mode::Baseline, ..ok.clone() };
+        let e = kv_baseline.validate(&p).unwrap_err().to_string();
+        assert!(e.contains("pipelined mode"), "{e}");
+        let kv_budget_alone = RunConfig { kv_budget: Some(64), ..ok.clone() };
+        let e = kv_budget_alone.validate(&p).unwrap_err().to_string();
+        assert!(e.contains("--kv-cache"), "{e}");
 
         let zero_agents = RunConfig { agents: 0, ..ok.clone() };
         assert!(zero_agents.validate(&p).unwrap_err().to_string().contains("agents"));
@@ -221,7 +280,28 @@ mod tests {
         // shared-accountant budget overrides the per-config one
         assert!(pin_over.validate_with_budget(&p, Some(400)).is_ok());
         // unconstrained budget never rejects a pin budget
-        let pin_unbounded = RunConfig { pin_budget: Some(200), ..ok };
+        let pin_unbounded = RunConfig { pin_budget: Some(200), ..ok.clone() };
         assert!(pin_unbounded.validate(&p).is_ok());
+
+        // pin + kv must jointly fit the budget
+        let pin_kv_over = RunConfig {
+            budget: Some(300),
+            pin_budget: Some(200),
+            kv_cache: true,
+            kv_budget: Some(150),
+            ..ok.clone()
+        };
+        let e = pin_kv_over.validate(&p).unwrap_err().to_string();
+        assert!(e.contains("kv budget"), "{e}");
+        let pin_kv_fits = RunConfig { budget: Some(400), ..pin_kv_over };
+        assert!(pin_kv_fits.validate(&p).is_ok());
+    }
+
+    #[test]
+    fn pin_policy_parse_roundtrip() {
+        for p in [PinPolicy::Fifo, PinPolicy::Cost] {
+            assert_eq!(PinPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(PinPolicy::parse("lru").is_err());
     }
 }

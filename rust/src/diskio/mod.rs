@@ -165,6 +165,18 @@ impl Disk {
         *self.bytes_read.lock().unwrap()
     }
 
+    /// Predicted single-stream cost of loading `bytes` (open latency +
+    /// per-stream bandwidth), in ms.  The cost pin policy scores layers by
+    /// this estimate per byte: seek-dominated small stages score higher
+    /// than bandwidth-bound large ones, so they are kept preferentially.
+    pub fn est_load_ms(&self, bytes: u64) -> f64 {
+        let mut ms = self.profile.open_latency.as_secs_f64() * 1000.0;
+        if self.profile.per_stream_bps > 0 {
+            ms += bytes as f64 / self.profile.per_stream_bps as f64 * 1000.0;
+        }
+        ms
+    }
+
     /// Open a file as one throttled stream.
     pub fn open(&self, path: &Path) -> Result<ThrottledReader> {
         if !self.profile.open_latency.is_zero() {

@@ -46,8 +46,12 @@ pub const WEIGHTS_SEED: u64 = 0xBEEF;
 /// Output of a run, beyond the metrics.
 #[derive(Debug, Clone)]
 pub struct RunOutput {
-    /// generated token ids of batch row 0 (generative) or empty
+    /// generated token ids of batch row 0 (generative) or empty —
+    /// kept for callers that predate [`RunOutput::generated_rows`]
     pub generated: Vec<i32>,
+    /// generated token ids per batch row (generative profiles; empty
+    /// otherwise).  Row 0 equals [`RunOutput::generated`].
+    pub generated_rows: Vec<Vec<i32>>,
     /// final head output values (pooled vector / class logits / last-token
     /// logits), truncated to at most 16 values for reporting
     pub head_sample: Vec<f32>,
@@ -107,6 +111,19 @@ pub fn make_input(profile: &Profile, batch: usize, seed: u64) -> (ModelInput, Ve
     }
 }
 
+/// First-max argmax over one row of logits.  BOTH decode paths (full and
+/// incremental) funnel through this, so their tie-breaking can never
+/// diverge — a divergence would break the bit-identical token contract.
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
 /// Per-row argmax over the vocab at position `cur_len - 1`: one next-token
 /// id for every batch row.  Logits are `[batch, max_seq, vocab]` flattened.
 pub(crate) fn argmax_rows(
@@ -119,17 +136,14 @@ pub(crate) fn argmax_rows(
     let s = profile.max_seq;
     let pos = cur_len.saturating_sub(1).min(s - 1);
     (0..batch)
-        .map(|b| {
-            let row = &logits[b * s * v + pos * v..b * s * v + (pos + 1) * v];
-            let mut best = 0usize;
-            for (i, &x) in row.iter().enumerate() {
-                if x > row[best] {
-                    best = i;
-                }
-            }
-            best as i32
-        })
+        .map(|b| argmax(&logits[b * s * v + pos * v..b * s * v + (pos + 1) * v]))
         .collect()
+}
+
+/// Per-row argmax over single-position logits `[batch, 1, vocab]` (the
+/// incremental decode entries' output — no position indexing needed).
+pub(crate) fn argmax_rows_flat(logits: &[f32], vocab: usize, batch: usize) -> Vec<i32> {
+    (0..batch).map(|b| argmax(&logits[b * vocab..(b + 1) * vocab])).collect()
 }
 
 pub(crate) fn last_logits(logits: &[f32], profile: &Profile, cur_len: usize) -> Vec<f32> {
@@ -205,6 +219,15 @@ mod tests {
         // out of range is a no-op
         push_tokens(&mut ids, &p, 4, &[3, 3]);
         assert_eq!(&ids, &[0, 0, 9, 0, 0, 0, 5, 0]);
+    }
+
+    #[test]
+    fn argmax_rows_flat_reads_per_row() {
+        // batch 2 x vocab 5
+        let mut logits = vec![0.0f32; 10];
+        logits[3] = 2.0; // row 0 -> 3
+        logits[5 + 1] = 2.0; // row 1 -> 1
+        assert_eq!(argmax_rows_flat(&logits, 5, 2), vec![3, 1]);
     }
 
     #[test]

@@ -15,7 +15,13 @@
 //! * the stage-to-agent [`assignment`] is precomputed;
 //! * an optional hot-layer [`LayerCache`] (`RunConfig::pin_budget`) lets
 //!   the Daemon pin computed layers instead of destroying them, so the
-//!   next decode token / serve batch skips disk for pinned stages.
+//!   next decode token / serve batch skips disk for pinned stages;
+//! * an optional paged [`KvPool`] (`RunConfig::kv_cache` /
+//!   `RunConfig::kv_budget`) holds attention state for GPT-style decode:
+//!   [`Session::run_batch`] then runs ONE full-prefix pass (priming a
+//!   [`KvSeq`] via the `*_kv` entries) and incremental single-token
+//!   passes for the rest, falling back to full-prefix recompute whenever
+//!   blocks are denied or evicted — tokens never depend on residency.
 //!
 //! The pin budget is capped at `budget - max_stage_bytes` so a stalled
 //! admission can always make progress: pinned-but-in-flight stages later
@@ -42,18 +48,22 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::{argmax_rows, last_logits, make_input, push_tokens, Engine, RunOutput};
+use super::{argmax_rows, argmax_rows_flat, last_logits, make_input, push_tokens, Engine, RunOutput};
 use crate::baseline;
 use crate::baseline::ResidentModel;
 use crate::config::{Mode, RunConfig};
 use crate::diskio::Disk;
+use crate::kvcache::{KvPool, KvPoolStats, KvSeq};
 use crate::memory::MemoryAccountant;
 use crate::metrics::RunReport;
 use crate::model::Profile;
 use crate::pipeload::assignment::assignment;
 use crate::pipeload::cache::{CacheStats, LayerCache};
 use crate::pipeload::gate::OrderedGate;
-use crate::pipeload::{run_pass, ExecCtx, ModelInput, PassEnv, PassStats, PipelineOpts};
+use crate::pipeload::{
+    run_pass_mode, ExecCtx, ModelInput, PassEnv, PassMode, PassStats, PipelineOpts,
+    KV_EVICTED_MIDPASS,
+};
 use crate::trace::Tracer;
 
 /// Long-lived pipeline state for one (profile, mode, budget) configuration.
@@ -73,10 +83,21 @@ pub struct Session<'e> {
     gate: OrderedGate,
     plan: Vec<Vec<usize>>,
     cache: Option<LayerCache>,
+    /// Paged KV pool (Some when `kv_cache` is on and the profile ships the
+    /// incremental decode entries); blocks charge the session accountant.
+    kv_pool: Option<KvPool>,
+    /// Other lanes' KV pools registered as eviction victims (snapshots for
+    /// shared-accountant error recovery).
+    kv_victims: Vec<KvPool>,
     /// Baseline mode: the whole model, loaded on first use
     resident: Option<ResidentModel>,
     prepared_entries: usize,
     passes_run: usize,
+    /// decode tokens served by incremental passes (cache hits)
+    kv_inc_total: u64,
+    /// decode tokens that fell back to full-prefix recompute after the
+    /// cache was primed (eviction or exhausted KV budget)
+    kv_recompute_total: u64,
 }
 
 /// Options for opening a [`Session`] — sugar methods on [`Engine`] cover
@@ -185,10 +206,16 @@ impl<'e> Session<'e> {
         let owns_accountant = shared.is_none();
         let accountant = shared.unwrap_or_else(|| MemoryAccountant::new(cfg.budget));
         let cache = Self::build_cache(cfg, profile, budget);
-        let gate = match &cache {
+        let mut gate = match &cache {
             Some(c) => OrderedGate::with_cache(accountant.clone(), c.clone()),
             None => OrderedGate::new(accountant.clone()),
         };
+        let kv_pool = Self::build_kv_pool(cfg, profile, &accountant);
+        if let Some(pool) = &kv_pool {
+            // this session's own weight admissions may reclaim its KV
+            // blocks under S^stop pressure (after pinned layers)
+            gate.add_kv_pool(pool.clone());
+        }
         let agents = opts.as_ref().map(|o| o.agents.max(1)).unwrap_or(1);
         let plan = assignment(profile.stages.len(), agents);
         Ok(Session {
@@ -201,10 +228,33 @@ impl<'e> Session<'e> {
             gate,
             plan,
             cache,
+            kv_pool,
+            kv_victims: Vec::new(),
             resident: None,
             prepared_entries,
             passes_run: 0,
+            kv_inc_total: 0,
+            kv_recompute_total: 0,
         })
+    }
+
+    /// Paged KV pool construction: only when the extension is on, the mode
+    /// is pipelined, and the profile's artifacts ship the incremental
+    /// decode entries (GPT-style families; BART/encoder profiles fall
+    /// back to full-prefix decode even with `--kv-cache`).
+    fn build_kv_pool(
+        cfg: &RunConfig,
+        profile: &Profile,
+        accountant: &MemoryAccountant,
+    ) -> Option<KvPool> {
+        if !cfg.kv_cache || cfg.mode == Mode::Baseline || !profile.is_generative() {
+            return None;
+        }
+        let body_inc = format!("{}_inc@", profile.body_kind());
+        if !profile.entries.keys().any(|k| k.starts_with(&body_inc)) {
+            return None;
+        }
+        Some(KvPool::new(accountant.clone(), cfg.kv_budget))
     }
 
     /// Hot-layer cache sizing.  Only PIPELOAD destroys layers, so only it
@@ -223,7 +273,7 @@ impl<'e> Session<'e> {
         if pin == 0 {
             None
         } else {
-            Some(LayerCache::new(pin))
+            Some(LayerCache::with_policy(pin, cfg.pin_policy))
         }
     }
 
@@ -262,12 +312,45 @@ impl<'e> Session<'e> {
         &self.cfg
     }
 
+    /// The session's paged KV pool, if the KV-cache extension is active.
+    pub fn kv_pool(&self) -> Option<&KvPool> {
+        self.kv_pool.as_ref()
+    }
+
+    /// KV pool counters (zeros when no pool is attached).
+    pub fn kv_pool_stats(&self) -> KvPoolStats {
+        self.kv_pool.as_ref().map(|p| p.stats()).unwrap_or_default()
+    }
+
+    /// Cumulative (incremental passes, full-prefix recomputes) across this
+    /// session's decode loops — the `Runtime::prepare_calls`-style counters
+    /// tests assert pass-shape with.
+    pub fn kv_counters(&self) -> (u64, u64) {
+        (self.kv_inc_total, self.kv_recompute_total)
+    }
+
     /// Register another session's hot-layer cache as an eviction target:
     /// when an admission here stalls on the (shared) budget, it reclaims
     /// that session's pins after its own.  Only meaningful — and only
     /// sound — between sessions opened against the same shared accountant.
     pub fn add_eviction_victim(&mut self, cache: LayerCache) {
         self.gate.add_victim(cache);
+    }
+
+    /// Register another session's KV pool as an eviction target (same
+    /// shared-accountant requirement as [`Session::add_eviction_victim`]).
+    /// The victim lane's evicted sequences fall back to full-prefix
+    /// recompute — degraded, never wrong.
+    ///
+    /// NOTE: under today's per-request KV lifecycle (blocks freed when
+    /// `run_batch` returns) a victim pool is empty whenever this lane
+    /// runs a pass, so cross-lane KV eviction cannot fire yet.  It is
+    /// wired — and the failed-pass recovery snapshots victim-KV bytes —
+    /// so the accounting stays exact the day sequences outlive requests
+    /// (the ROADMAP's prefix-sharing follow-up).
+    pub fn add_kv_eviction_victim(&mut self, pool: KvPool) {
+        self.kv_victims.push(pool.clone());
+        self.gate.add_kv_pool(pool);
     }
 
     /// Run one request with the session's configured batch and seed.
@@ -279,6 +362,15 @@ impl<'e> Session<'e> {
     /// Run one request (a full forward, or a whole decode loop for
     /// generative profiles) at the given batch size.  Setup, compiled
     /// executables, budget, and pinned layers are reused across calls.
+    ///
+    /// With `--kv-cache` the decode loop runs ONE full-prefix pass (which
+    /// primes a [`KvSeq`] through the `*_kv` entries) and then incremental
+    /// single-token passes; a sequence evicted under `S^stop` pressure —
+    /// or denied blocks by the KV budget — falls back to full-prefix
+    /// recompute for that token and re-primes, so generated tokens are
+    /// identical to the cache-off path regardless of cache residency.
+    /// The sequence's blocks are freed when this call returns (per-request
+    /// lifecycle; the Router relies on it).
     pub fn run_batch(&mut self, batch: usize, seed: u64) -> Result<(RunReport, RunOutput)> {
         let profile = self.ctx.profile;
         self.ctx.batch = batch;
@@ -292,7 +384,11 @@ impl<'e> Session<'e> {
         let t0 = Instant::now();
         let mut passes: Vec<PassStats> = Vec::new();
         let mut generated = Vec::new();
+        let mut generated_rows: Vec<Vec<i32>> = Vec::new();
         let mut head: Vec<f32> = Vec::new();
+        let mut kv_inc = 0u64;
+        let mut kv_rec = 0u64;
+        let kv_evicted0 = self.kv_pool_stats().evicted_blocks;
 
         if !profile.is_generative() {
             let (out, stats) = if self.opts.is_none() {
@@ -303,26 +399,124 @@ impl<'e> Session<'e> {
             head = self.engine.runtime.buffer_to_f32(&out)?;
             passes.push(stats);
         } else {
+            generated_rows = vec![Vec::new(); batch];
+            let kv_enabled = self.kv_pool.is_some()
+                && self.opts.is_some()
+                && profile.entry("embedding_inc", batch).is_ok()
+                && profile.entry(&format!("{}_inc", profile.body_kind()), batch).is_ok()
+                && profile.entry(&format!("{}_kv", profile.body_kind()), batch).is_ok()
+                && profile.entry("lm_head_inc", batch).is_ok();
+            let n_body = profile.stages.iter().filter(|s| s.kind == profile.body_kind()).count();
+            let mut kv_seq: Option<KvSeq> = None;
+            let mut last_next: Vec<i32> = Vec::new();
             let mut cur_len = prompt_len;
-            for _ in 0..gen_tokens {
-                let inp = ModelInput::Ids(ids.clone());
-                // pipelined modes: fresh pass per token (weights were
-                // destroyed — or pinned — after the previous one)
-                let (out, stats) = if self.opts.is_none() {
-                    self.baseline_forward(&inp)?
-                } else {
-                    self.pass(&inp)?
+
+            for step in 0..gen_tokens {
+                // Incremental when the cached prefix lines up exactly with
+                // the ids (tokens == cur_len - 1: everything but the token
+                // appended after the previous pass) and one more block row
+                // can be reserved.  Anything else recomputes full-prefix.
+                let can_inc = kv_enabled
+                    && step > 0
+                    && last_next.len() == batch
+                    && cur_len <= profile.max_seq
+                    && kv_seq
+                        .as_ref()
+                        .map(|s| s.valid() && s.tokens() + 1 == cur_len && s.reserve(cur_len))
+                        .unwrap_or(false);
+
+                let mut step_out: Option<(Vec<f32>, bool, PassStats)> = None;
+                if can_inc {
+                    let seq = kv_seq.as_ref().unwrap();
+                    let inp = ModelInput::Ids(last_next.clone());
+                    let pos = cur_len - 1;
+                    match self.pass_mode(&inp, &PassMode::Incremental { kv: seq, pos }) {
+                        Ok((out, stats)) => {
+                            seq.set_tokens(cur_len);
+                            kv_inc += 1;
+                            let logits = self.engine.runtime.buffer_to_f32(&out)?;
+                            step_out = Some((logits, true, stats));
+                        }
+                        Err(e) => {
+                            // Mid-pass eviction is the ONLY recoverable
+                            // failure: the token was not produced, so fall
+                            // through to a full-prefix recompute.  Matched
+                            // by marker, not by `seq.valid()` — the error
+                            // recovery in `pass_mode` invalidates every
+                            // sequence on ANY failure, so validity cannot
+                            // distinguish eviction from a real error.
+                            let evicted = e
+                                .chain()
+                                .any(|c| c.to_string().contains(KV_EVICTED_MIDPASS));
+                            if !evicted {
+                                return Err(e);
+                            }
+                        }
+                    }
+                }
+                let (logits, incremental, stats) = match step_out {
+                    Some(x) => x,
+                    None => {
+                        // Count a recompute only where a cache COULD have
+                        // served (within max_seq); overrun steps are plain
+                        // full passes on either path, not cache misses.
+                        if kv_enabled && step > 0 && cur_len <= profile.max_seq {
+                            kv_rec += 1; // primed cache could not serve this token
+                        }
+                        // (re)prime: a fresh sequence, if blocks are grantable
+                        let mut primed = false;
+                        if kv_enabled && cur_len <= profile.max_seq {
+                            kv_seq = None; // free any stale sequence first
+                            let pool = self.kv_pool.as_ref().unwrap();
+                            let seq = pool.open_seq(n_body, batch, profile.hidden);
+                            if seq.reserve(cur_len) {
+                                kv_seq = Some(seq);
+                                primed = true;
+                            }
+                        }
+                        let inp = ModelInput::Ids(ids.clone());
+                        let (out, stats) = if self.opts.is_none() {
+                            self.baseline_forward(&inp)?
+                        } else if primed {
+                            let mode = PassMode::PrimeKv {
+                                kv: kv_seq.as_ref().unwrap(),
+                                prefix_len: cur_len,
+                            };
+                            let r = self.pass_mode(&inp, &mode)?;
+                            kv_seq.as_ref().unwrap().set_tokens(cur_len);
+                            r
+                        } else {
+                            self.pass(&inp)?
+                        };
+                        (self.engine.runtime.buffer_to_f32(&out)?, false, stats)
+                    }
                 };
-                let logits = self.engine.runtime.buffer_to_f32(&out)?;
-                let next = argmax_rows(&logits, profile, batch, cur_len);
+
+                let next = if incremental {
+                    argmax_rows_flat(&logits, profile.vocab, batch)
+                } else {
+                    argmax_rows(&logits, profile, batch, cur_len)
+                };
                 push_tokens(&mut ids, profile, cur_len, &next);
                 generated.push(next[0]);
+                for (row, t) in next.iter().enumerate() {
+                    generated_rows[row].push(*t);
+                }
                 cur_len += 1;
-                head = last_logits(&logits, profile, cur_len - 1);
+                head = if incremental {
+                    logits[..profile.vocab].to_vec()
+                } else {
+                    last_logits(&logits, profile, cur_len - 1)
+                };
+                last_next = next;
                 passes.push(stats);
             }
+            // request over: blocks go back to the budget here
+            drop(kv_seq);
         }
         let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        self.kv_inc_total += kv_inc;
+        self.kv_recompute_total += kv_rec;
 
         let report = RunReport {
             model: self.cfg.profile.clone(),
@@ -336,45 +530,73 @@ impl<'e> Session<'e> {
             tokens: generated.len(),
             cache_hits: passes.iter().map(|p| p.cache_hits).sum(),
             cache_misses: passes.iter().map(|p| p.cache_misses).sum(),
+            kv_inc_passes: kv_inc,
+            kv_recomputes: kv_rec,
+            kv_evicted_blocks: self.kv_pool_stats().evicted_blocks - kv_evicted0,
         };
         head.truncate(16);
-        Ok((report, RunOutput { generated, head_sample: head }))
+        Ok((report, RunOutput { generated, generated_rows, head_sample: head }))
     }
 
     /// One pipelined pass over persistent session state.
     fn pass(&mut self, input: &ModelInput) -> Result<(xla::PjRtBuffer, PassStats)> {
+        self.pass_mode(input, &PassMode::Full)
+    }
+
+    /// [`Session::pass`] with an explicit [`PassMode`] (KV decode paths).
+    fn pass_mode(
+        &mut self,
+        input: &ModelInput,
+        mode: &PassMode,
+    ) -> Result<(xla::PjRtBuffer, PassStats)> {
         let opts = self.opts.as_ref().expect("pass() requires a pipelined mode");
         self.gate.reset();
         // Snapshots for shared-accountant error recovery (see below).
         let used0 = self.accountant.used();
         let own_pins0 = self.cache.as_ref().map(|c| c.stats().pinned_bytes).unwrap_or(0);
+        let own_kv0 = self.kv_pool.as_ref().map(|p| p.used_bytes()).unwrap_or(0);
         let victim_pins0 = self.gate.victim_pinned_bytes();
+        let victim_kv0: u64 = self.kv_victims.iter().map(|p| p.used_bytes()).sum();
         self.accountant.reset_peak_to_used();
         let env = PassEnv { gate: &self.gate, cache: self.cache.as_ref(), plan: &self.plan };
-        let r = run_pass(&self.ctx, opts, &env, input);
+        let r = run_pass_mode(&self.ctx, opts, &env, input, mode);
         if r.is_err() {
             if self.owns_accountant {
                 // A failed pass can leave in-flight bytes accounted; drop
-                // any pins and restart the accounting wholesale.
+                // any pins and cached KV, then restart the accounting
+                // wholesale (the pool frees BEFORE the reset so its own
+                // byte tracking stays consistent with the accountant's).
                 if let Some(c) = &self.cache {
                     c.clear();
+                }
+                if let Some(p) = &self.kv_pool {
+                    p.invalidate_all();
                 }
                 self.accountant.reset();
             } else {
                 // Shared accountant: other sessions' pins and residents are
                 // still accounted in it, so release exactly what this pass
-                // left behind — our pins plus any in-flight bytes — and
-                // clear the shutdown the failed pass raised.  Other
-                // sessions' bytes after the pass = what they held before,
-                // minus any of their pins we evicted while running; the
-                // router runs one pass at a time, so the snapshots are
-                // exact.
+                // left behind — our pins, our KV blocks, and any in-flight
+                // bytes — and clear the shutdown the failed pass raised.
+                // Other sessions' bytes after the pass = what they held
+                // before, minus any of their pins/KV we evicted while
+                // running; the router runs one pass at a time, so the
+                // snapshots are exact.
                 if let Some(c) = &self.cache {
                     c.drain(&self.accountant);
                 }
+                if let Some(p) = &self.kv_pool {
+                    p.invalidate_all();
+                }
                 let victims_evicted =
                     victim_pins0.saturating_sub(self.gate.victim_pinned_bytes());
-                let others_now = used0.saturating_sub(own_pins0).saturating_sub(victims_evicted);
+                let victim_kv_now: u64 = self.kv_victims.iter().map(|p| p.used_bytes()).sum();
+                let victim_kv_evicted = victim_kv0.saturating_sub(victim_kv_now);
+                let others_now = used0
+                    .saturating_sub(own_pins0)
+                    .saturating_sub(own_kv0)
+                    .saturating_sub(victims_evicted)
+                    .saturating_sub(victim_kv_evicted);
                 let leaked = self.accountant.used().saturating_sub(others_now);
                 if leaked > 0 {
                     self.accountant.free(leaked);

@@ -1,0 +1,622 @@
+//! Paged KV-cache pool: memory-accounted attention state for incremental
+//! decode.
+//!
+//! The paper's decode loop re-runs the full growing prefix for every
+//! generated token; TPI-LLM (arXiv:2410.00531) and EdgeInfinite
+//! (arXiv:2503.22196) both observe that on edge devices the KV cache is
+//! the dominant *dynamic* memory consumer, so attention state must live
+//! under the same budget as the pipeline's weights — not in an
+//! unaccounted side buffer.  This module is that budget citizen:
+//!
+//! * a [`KvPool`] holds the cached K/V tensors for one session's
+//!   in-flight sequences, allocated in **blocks** of
+//!   [`KvPool::block_tokens`] tokens per layer.  Every block is charged
+//!   against the shared [`MemoryAccountant`] (the same one the Loading
+//!   Agents admit weights through) and additionally capped by the pool's
+//!   own `kv_budget` — the per-lane allocation a
+//!   [`crate::server::Router`] grants so one model's long generations
+//!   cannot starve another model's weights or KV;
+//! * a [`KvSeq`] is one sequence's RAII handle: dropping it (request
+//!   completion or rejection) returns every block to the budget;
+//! * under `S^stop` pressure the pool is an eviction target of the
+//!   [`crate::pipeload::gate::OrderedGate`], alongside pinned hot
+//!   layers: [`KvPool::evict_for`] reclaims whole sequences LRU-first.
+//!   An evicted sequence is marked invalid, **not** an error — the decode
+//!   loop falls back to a full-prefix recompute for that sequence, so
+//!   correctness never depends on cache residency.
+//!
+//! Allocation never blocks: block grants use
+//! [`MemoryAccountant::try_acquire`] (after trying to evict *other*
+//! sequences), because the grab happens on the inference thread in the
+//! middle of a pass — parking there would deadlock the pipeline that is
+//! supposed to free the memory.  A failed grant degrades to uncached
+//! decode, it never stalls.
+//!
+//! K/V data is stored token-major (`[token][batch][hidden]` per layer) so
+//! appending one decoded token is a plain extend;
+//! [`KvPool::dense_kv`] re-packs a layer into the `[batch, seq, hidden]`
+//! buffers the `*_inc` HLO entries take, zero-filling past the cached
+//! prefix (the entries mask attention at `pos`, so the padding is inert).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::memory::MemoryAccountant;
+
+/// Default tokens per block (allocation granularity).  Small enough that
+/// tiny test profiles (`max_seq` 16) exercise multi-block sequences.
+pub const DEFAULT_BLOCK_TOKENS: usize = 8;
+
+/// Pool counters (surfaced through `RunReport` / `ServeSummary` /
+/// `serve --json`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvPoolStats {
+    /// blocks ever granted
+    pub allocated_blocks: u64,
+    /// blocks reclaimed under `S^stop` pressure (gate eviction)
+    pub evicted_blocks: u64,
+    /// bytes currently accounted by the pool
+    pub pool_bytes: u64,
+    /// blocks currently held
+    pub pool_blocks: u64,
+    /// sequences currently registered (valid or evicted-but-open)
+    pub sequences: usize,
+}
+
+#[derive(Debug)]
+struct SeqState {
+    /// per-layer K (and V) data, token-major [token][batch][hidden]
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    batch: usize,
+    hidden: usize,
+    /// cached prefix length in tokens (positions `0..tokens` are valid)
+    tokens: usize,
+    /// reserved capacity in tokens (grows in whole blocks)
+    capacity: usize,
+    /// bytes currently accounted for this sequence
+    bytes: u64,
+    /// blocks currently held by this sequence
+    blocks: u64,
+    /// LRU clock of the last reserve/advance (eviction victim = smallest)
+    last_use: u64,
+    /// cleared by eviction: data is gone, owner must recompute
+    valid: bool,
+}
+
+impl SeqState {
+    fn layers(&self) -> usize {
+        self.k.len()
+    }
+}
+
+#[derive(Debug, Default)]
+struct PoolState {
+    seqs: HashMap<u64, SeqState>,
+    next_id: u64,
+    clock: u64,
+    used: u64,
+    blocks: u64,
+    allocated_blocks: u64,
+    evicted_blocks: u64,
+}
+
+impl PoolState {
+    /// Drop one sequence's storage and return its (bytes, blocks), without
+    /// removing the entry (eviction keeps the tombstone so the owner can
+    /// observe the invalidation; release removes it entirely).
+    fn strip(seq: &mut SeqState) -> (u64, u64) {
+        let freed = (seq.bytes, seq.blocks);
+        seq.k = Vec::new();
+        seq.v = Vec::new();
+        seq.tokens = 0;
+        seq.capacity = 0;
+        seq.bytes = 0;
+        seq.blocks = 0;
+        seq.valid = false;
+        freed
+    }
+}
+
+/// Shared paged KV pool; clone freely (Arc inside).  One per session.
+#[derive(Debug, Clone)]
+pub struct KvPool {
+    accountant: MemoryAccountant,
+    /// pool-level byte cap (the lane's KV allocation); `None` = only the
+    /// accountant's budget constrains the pool
+    kv_budget: Option<u64>,
+    block_tokens: usize,
+    inner: Arc<Mutex<PoolState>>,
+}
+
+impl KvPool {
+    pub fn new(accountant: MemoryAccountant, kv_budget: Option<u64>) -> KvPool {
+        KvPool::with_block_tokens(accountant, kv_budget, DEFAULT_BLOCK_TOKENS)
+    }
+
+    pub fn with_block_tokens(
+        accountant: MemoryAccountant,
+        kv_budget: Option<u64>,
+        block_tokens: usize,
+    ) -> KvPool {
+        KvPool {
+            accountant,
+            kv_budget,
+            block_tokens: block_tokens.max(1),
+            inner: Arc::new(Mutex::new(PoolState::default())),
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn kv_budget(&self) -> Option<u64> {
+        self.kv_budget
+    }
+
+    /// Bytes of one block: `block_tokens` positions of K **and** V for one
+    /// layer at the given (batch, hidden).
+    fn block_bytes(&self, batch: usize, hidden: usize) -> u64 {
+        (self.block_tokens * batch * hidden * 4 * 2) as u64
+    }
+
+    /// Register a new sequence (no memory is granted yet); returns its
+    /// RAII handle.  `layers` is the number of body layers caching K/V.
+    pub fn open_seq(&self, layers: usize, batch: usize, hidden: usize) -> KvSeq {
+        let mut s = self.inner.lock().unwrap();
+        let id = s.next_id;
+        s.next_id += 1;
+        s.clock += 1;
+        let clock = s.clock;
+        s.seqs.insert(
+            id,
+            SeqState {
+                k: vec![Vec::new(); layers],
+                v: vec![Vec::new(); layers],
+                batch,
+                hidden,
+                tokens: 0,
+                capacity: 0,
+                bytes: 0,
+                blocks: 0,
+                last_use: clock,
+                valid: true,
+            },
+        );
+        KvSeq { pool: self.clone(), id }
+    }
+
+    /// Grow a sequence's reserved capacity to at least `tokens` positions.
+    /// Grants whole blocks across every layer, charged to the accountant
+    /// (non-blocking) and the pool budget.  On budget pressure it first
+    /// evicts *other* sequences LRU-first.  `false` = could not reserve;
+    /// the sequence stays as it was (caller decodes uncached).
+    fn reserve(&self, id: u64, tokens: usize) -> bool {
+        let (want, granted_blocks, new_capacity) = {
+            let mut s = self.inner.lock().unwrap();
+            s.clock += 1;
+            let clock = s.clock;
+            let Some(seq) = s.seqs.get_mut(&id) else { return false };
+            if !seq.valid {
+                return false;
+            }
+            seq.last_use = clock;
+            if tokens <= seq.capacity {
+                return true;
+            }
+            let new_capacity = tokens.div_ceil(self.block_tokens) * self.block_tokens;
+            let need_blocks = (new_capacity - seq.capacity) / self.block_tokens * seq.layers();
+            let per_block = self.block_bytes(seq.batch, seq.hidden);
+            let want = need_blocks as u64 * per_block;
+            if let Some(cap) = self.kv_budget {
+                if s.used + want > cap {
+                    return false;
+                }
+            }
+            (want, need_blocks as u64, new_capacity)
+        };
+        // Take the grant outside the pool lock; under pressure, evict other
+        // sequences first (never this one), then retry once.  Never block:
+        // this runs on the inference thread mid-pass.
+        if !self.accountant.try_acquire(want) {
+            self.evict_lru_except(Some(id), want);
+            if !self.accountant.try_acquire(want) {
+                return false;
+            }
+        }
+        let mut s = self.inner.lock().unwrap();
+        let ok = s.seqs.get(&id).map(|seq| seq.valid).unwrap_or(false);
+        if !ok {
+            // evicted/released between locks: hand the grant straight back
+            drop(s);
+            self.accountant.free(want);
+            return false;
+        }
+        let seq = s.seqs.get_mut(&id).unwrap();
+        seq.capacity = new_capacity;
+        seq.bytes += want;
+        seq.blocks += granted_blocks;
+        let cap_elems = new_capacity * seq.batch * seq.hidden;
+        for l in 0..seq.layers() {
+            seq.k[l].resize(cap_elems, 0.0);
+            seq.v[l].resize(cap_elems, 0.0);
+        }
+        s.used += want;
+        s.blocks += granted_blocks;
+        s.allocated_blocks += granted_blocks;
+        true
+    }
+
+    /// Write one token's K/V rows for one layer at position `pos`
+    /// (token-major rows: `batch * hidden` values each).  Silently ignored
+    /// if the sequence was evicted mid-pass — the pass still completes,
+    /// only the cache write is lost.
+    fn write_token(&self, id: u64, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let mut s = self.inner.lock().unwrap();
+        let Some(seq) = s.seqs.get_mut(&id) else { return };
+        if !seq.valid || pos >= seq.capacity || layer >= seq.layers() {
+            return;
+        }
+        let row = seq.batch * seq.hidden;
+        debug_assert_eq!(k.len(), row);
+        debug_assert_eq!(v.len(), row);
+        seq.k[layer][pos * row..(pos + 1) * row].copy_from_slice(k);
+        seq.v[layer][pos * row..(pos + 1) * row].copy_from_slice(v);
+    }
+
+    /// Bulk-write positions `0..tokens` of one layer (the full-prefix
+    /// prime).  `k`/`v` are token-major `[tokens][batch][hidden]`.
+    fn write_prefix(&self, id: u64, layer: usize, tokens: usize, k: &[f32], v: &[f32]) {
+        let mut s = self.inner.lock().unwrap();
+        let Some(seq) = s.seqs.get_mut(&id) else { return };
+        if !seq.valid || tokens > seq.capacity || layer >= seq.layers() {
+            return;
+        }
+        let n = tokens * seq.batch * seq.hidden;
+        debug_assert_eq!(k.len(), n);
+        debug_assert_eq!(v.len(), n);
+        seq.k[layer][..n].copy_from_slice(k);
+        seq.v[layer][..n].copy_from_slice(v);
+    }
+
+    /// Commit the cached prefix length (only after a pass fully succeeds,
+    /// so a failed pass can never leave a half-written prefix readable).
+    fn set_tokens(&self, id: u64, tokens: usize) {
+        let mut s = self.inner.lock().unwrap();
+        s.clock += 1;
+        let clock = s.clock;
+        if let Some(seq) = s.seqs.get_mut(&id) {
+            if seq.valid && tokens <= seq.capacity {
+                seq.tokens = tokens;
+                seq.last_use = clock;
+            }
+        }
+    }
+
+    /// Re-pack one layer's cached K/V into dense `[batch, seq_len, hidden]`
+    /// buffers (zero past the prefix), for upload to an `*_inc` entry.
+    /// `None` if the sequence is gone or was evicted.
+    fn dense_kv(&self, id: u64, layer: usize, seq_len: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+        let s = self.inner.lock().unwrap();
+        let seq = s.seqs.get(&id)?;
+        if !seq.valid || layer >= seq.layers() {
+            return None;
+        }
+        let (b, h) = (seq.batch, seq.hidden);
+        let t = seq.tokens.min(seq_len);
+        let mut dk = vec![0.0f32; b * seq_len * h];
+        let mut dv = vec![0.0f32; b * seq_len * h];
+        for tok in 0..t {
+            for row in 0..b {
+                let src = tok * b * h + row * h;
+                let dst = row * seq_len * h + tok * h;
+                dk[dst..dst + h].copy_from_slice(&seq.k[layer][src..src + h]);
+                dv[dst..dst + h].copy_from_slice(&seq.v[layer][src..src + h]);
+            }
+        }
+        Some((dk, dv))
+    }
+
+    fn seq_tokens(&self, id: u64) -> Option<usize> {
+        let s = self.inner.lock().unwrap();
+        s.seqs.get(&id).filter(|q| q.valid).map(|q| q.tokens)
+    }
+
+    fn seq_valid(&self, id: u64) -> bool {
+        let s = self.inner.lock().unwrap();
+        s.seqs.get(&id).map(|q| q.valid).unwrap_or(false)
+    }
+
+    /// Drop a sequence's storage without removing it (the owner sees
+    /// `valid() == false` and recomputes).  Used on pass failure.
+    fn invalidate(&self, id: u64) {
+        let mut s = self.inner.lock().unwrap();
+        let Some(seq) = s.seqs.get_mut(&id) else { return };
+        let (bytes, blocks) = PoolState::strip(seq);
+        s.used -= bytes;
+        s.blocks -= blocks;
+        drop(s);
+        if bytes > 0 {
+            self.accountant.free(bytes);
+        }
+    }
+
+    /// Remove a sequence entirely, returning its blocks to the budget
+    /// (request completion/rejection; `KvSeq::drop` calls this).
+    fn release(&self, id: u64) {
+        let mut s = self.inner.lock().unwrap();
+        let Some(mut seq) = s.seqs.remove(&id) else { return };
+        let (bytes, blocks) = PoolState::strip(&mut seq);
+        s.used -= bytes;
+        s.blocks -= blocks;
+        drop(s);
+        if bytes > 0 {
+            self.accountant.free(bytes);
+        }
+    }
+
+    /// Evict LRU sequences (optionally sparing one) until either `bytes`
+    /// fit the accountant's budget or nothing is left.  Returns bytes
+    /// freed.  Evicted sequences keep a tombstone entry so their owners
+    /// observe the invalidation and fall back to full-prefix recompute.
+    fn evict_lru_except(&self, spare: Option<u64>, bytes: u64) -> u64 {
+        let mut freed = 0u64;
+        loop {
+            if !self.accountant.would_block(bytes) {
+                break;
+            }
+            let mut s = self.inner.lock().unwrap();
+            let victim = s
+                .seqs
+                .iter()
+                .filter(|(id, q)| q.valid && q.bytes > 0 && Some(**id) != spare)
+                .min_by_key(|(_, q)| q.last_use)
+                .map(|(id, _)| *id);
+            let Some(vid) = victim else { break };
+            let seq = s.seqs.get_mut(&vid).unwrap();
+            let (b, blocks) = PoolState::strip(seq);
+            s.used -= b;
+            s.blocks -= blocks;
+            s.evicted_blocks += blocks;
+            drop(s);
+            self.accountant.free(b);
+            freed += b;
+        }
+        freed
+    }
+
+    /// Strip every sequence's storage and return all blocks to the
+    /// accountant, keeping tombstones so owners observe the invalidation
+    /// (failed-pass recovery: the session must release exactly its own
+    /// bytes without guessing which sequences were mid-flight).  Returns
+    /// bytes freed.
+    pub fn invalidate_all(&self) -> u64 {
+        let mut s = self.inner.lock().unwrap();
+        let mut freed = 0u64;
+        let ids: Vec<u64> = s.seqs.keys().copied().collect();
+        for id in ids {
+            let seq = s.seqs.get_mut(&id).unwrap();
+            let (bytes, blocks) = PoolState::strip(seq);
+            s.used -= bytes;
+            s.blocks -= blocks;
+            freed += bytes;
+        }
+        drop(s);
+        if freed > 0 {
+            self.accountant.free(freed);
+        }
+        freed
+    }
+
+    /// `S^stop` pressure valve (gate eviction target, like
+    /// [`crate::pipeload::cache::LayerCache::evict_for`]): evict whole
+    /// sequences LRU-first until `bytes` fit this pool's accountant —
+    /// which is the same shared accountant the gate admits against, by
+    /// construction.  Returns bytes freed.
+    pub fn evict_for(&self, bytes: u64) -> u64 {
+        self.evict_lru_except(None, bytes)
+    }
+
+    /// Bytes currently accounted by the pool.
+    pub fn used_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().used
+    }
+
+    pub fn stats(&self) -> KvPoolStats {
+        let s = self.inner.lock().unwrap();
+        KvPoolStats {
+            allocated_blocks: s.allocated_blocks,
+            evicted_blocks: s.evicted_blocks,
+            pool_bytes: s.used,
+            pool_blocks: s.blocks,
+            sequences: s.seqs.len(),
+        }
+    }
+}
+
+/// RAII handle to one sequence's cached K/V.  Dropping it frees every
+/// block back to the budget — the per-request lifecycle the Router relies
+/// on (blocks are gone when the ticket resolves, served or rejected).
+#[derive(Debug)]
+pub struct KvSeq {
+    pool: KvPool,
+    id: u64,
+}
+
+impl KvSeq {
+    /// Cached prefix length (`None`/0 once evicted).
+    pub fn tokens(&self) -> usize {
+        self.pool.seq_tokens(self.id).unwrap_or(0)
+    }
+
+    /// False once the gate (or a failed pass) reclaimed this sequence.
+    pub fn valid(&self) -> bool {
+        self.pool.seq_valid(self.id)
+    }
+
+    /// Ensure capacity for a prefix of `tokens` positions (block-granular,
+    /// non-blocking).  `false` = budget pressure; decode uncached.
+    pub fn reserve(&self, tokens: usize) -> bool {
+        self.pool.reserve(self.id, tokens)
+    }
+
+    pub fn write_token(&self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.pool.write_token(self.id, layer, pos, k, v);
+    }
+
+    pub fn write_prefix(&self, layer: usize, tokens: usize, k: &[f32], v: &[f32]) {
+        self.pool.write_prefix(self.id, layer, tokens, k, v);
+    }
+
+    pub fn set_tokens(&self, tokens: usize) {
+        self.pool.set_tokens(self.id, tokens);
+    }
+
+    pub fn dense_kv(&self, layer: usize, seq_len: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+        self.pool.dense_kv(self.id, layer, seq_len)
+    }
+
+    /// Drop the cached data (kept registered, marked invalid).
+    pub fn invalidate(&self) {
+        self.pool.invalidate(self.id);
+    }
+}
+
+impl Drop for KvSeq {
+    fn drop(&mut self) {
+        self.pool.release(self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(budget: Option<u64>, kv_budget: Option<u64>) -> (KvPool, MemoryAccountant) {
+        let a = MemoryAccountant::new(budget);
+        (KvPool::with_block_tokens(a.clone(), kv_budget, 4), a)
+    }
+
+    #[test]
+    fn reserve_charges_blocks_and_release_refunds() {
+        let (p, a) = pool(Some(100_000), None);
+        let seq = p.open_seq(2, 1, 8); // 2 layers, B=1, H=8
+        // block = 4 tokens * 1 * 8 * 4 B * 2(K+V) = 256 B; 2 layers = 512 B
+        assert!(seq.reserve(1));
+        assert_eq!(a.used(), 512);
+        assert_eq!(p.used_bytes(), 512);
+        assert_eq!(p.stats().pool_blocks, 2);
+        // within the same block: no new charge
+        assert!(seq.reserve(4));
+        assert_eq!(a.used(), 512);
+        // fifth token needs a second block row across both layers
+        assert!(seq.reserve(5));
+        assert_eq!(a.used(), 1024);
+        assert_eq!(p.stats().allocated_blocks, 4);
+        drop(seq);
+        assert_eq!(a.used(), 0);
+        assert_eq!(p.stats().sequences, 0);
+    }
+
+    #[test]
+    fn kv_budget_caps_pool_even_with_accountant_headroom() {
+        let (p, a) = pool(Some(1_000_000), Some(600));
+        let seq = p.open_seq(2, 1, 8); // 512 B per block row
+        assert!(seq.reserve(4));
+        assert!(!seq.reserve(5), "second block row would exceed the 600 B kv budget");
+        assert_eq!(a.used(), 512);
+        // the failed reserve must not have leaked anything
+        assert_eq!(p.used_bytes(), 512);
+        assert!(seq.valid());
+        assert_eq!(seq.tokens(), 0);
+    }
+
+    #[test]
+    fn write_commit_dense_roundtrip() {
+        let (p, _a) = pool(None, None);
+        let seq = p.open_seq(1, 2, 4); // 1 layer, B=2, H=4
+        assert!(seq.reserve(2));
+        // prime position 0 for both rows, then append position 1
+        let k0: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let v0: Vec<f32> = (0..8).map(|i| 10.0 + i as f32).collect();
+        seq.write_prefix(0, 1, &k0, &v0);
+        seq.set_tokens(1);
+        let k1: Vec<f32> = (0..8).map(|i| 100.0 + i as f32).collect();
+        let v1: Vec<f32> = (0..8).map(|i| 110.0 + i as f32).collect();
+        seq.write_token(0, 1, &k1, &v1);
+        seq.set_tokens(2);
+        assert_eq!(seq.tokens(), 2);
+        let (dk, dv) = seq.dense_kv(0, 3).unwrap(); // dense [2, 3, 4]
+        // row 0: tokens 0,1 then zero padding
+        assert_eq!(&dk[0..4], &k0[0..4]);
+        assert_eq!(&dk[4..8], &k1[0..4]);
+        assert_eq!(&dk[8..12], &[0.0; 4]);
+        // row 1 lives at stride seq_len*H = 12
+        assert_eq!(&dk[12..16], &k0[4..8]);
+        assert_eq!(&dv[16..20], &v1[4..8]);
+    }
+
+    #[test]
+    fn eviction_invalidates_lru_sequence_and_frees_budget() {
+        let (p, a) = pool(Some(1100), None);
+        let old = p.open_seq(1, 1, 8); // block = 256 B
+        let newer = p.open_seq(1, 1, 8);
+        assert!(old.reserve(4));
+        assert!(newer.reserve(4));
+        assert_eq!(a.used(), 512);
+        // an outside admission of 800 B needs 212 B reclaimed -> evict `old`
+        let freed = p.evict_for(800);
+        assert_eq!(freed, 256);
+        assert!(!old.valid());
+        assert!(newer.valid());
+        assert_eq!(p.stats().evicted_blocks, 1);
+        assert_eq!(a.used(), 256);
+        // evicted sequence degrades gracefully
+        assert_eq!(old.tokens(), 0);
+        assert!(old.dense_kv(0, 4).is_none());
+        assert!(!old.reserve(1));
+        old.write_token(0, 0, &[0.0; 8], &[0.0; 8]); // ignored, no panic
+    }
+
+    #[test]
+    fn reserve_evicts_other_sequences_before_failing() {
+        let (p, a) = pool(Some(512), None);
+        let a_seq = p.open_seq(1, 1, 8);
+        assert!(a_seq.reserve(4)); // 256 B
+        let b_seq = p.open_seq(1, 1, 8);
+        assert!(b_seq.reserve(4)); // 256 B, budget now full
+        // a third sequence's reserve must evict the LRU (a_seq), not fail
+        let c_seq = p.open_seq(1, 1, 8);
+        assert!(c_seq.reserve(4));
+        assert!(!a_seq.valid(), "LRU sequence evicted to make room");
+        assert!(b_seq.valid());
+        assert_eq!(a.used(), 512);
+    }
+
+    #[test]
+    fn invalidate_frees_but_keeps_tombstone() {
+        let (p, a) = pool(None, None);
+        let seq = p.open_seq(1, 1, 8);
+        assert!(seq.reserve(4));
+        assert!(a.used() > 0);
+        seq.invalidate();
+        assert_eq!(a.used(), 0);
+        assert!(!seq.valid());
+        assert_eq!(p.stats().sequences, 1, "tombstone remains until drop");
+        drop(seq);
+        assert_eq!(p.stats().sequences, 0);
+    }
+
+    #[test]
+    fn failed_pass_never_reads_uncommitted_prefix() {
+        let (p, _a) = pool(None, None);
+        let seq = p.open_seq(1, 1, 4);
+        assert!(seq.reserve(1));
+        seq.write_token(0, 0, &[1.0; 4], &[2.0; 4]);
+        // no set_tokens: the write is invisible
+        assert_eq!(seq.tokens(), 0);
+        let (dk, _dv) = seq.dense_kv(0, 2).unwrap();
+        assert_eq!(dk, vec![0.0; 8]);
+    }
+}

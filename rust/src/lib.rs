@@ -21,6 +21,7 @@ pub mod baseline;
 pub mod config;
 pub mod diskio;
 pub mod engine;
+pub mod kvcache;
 pub mod memory;
 pub mod metrics;
 pub mod model;

@@ -12,7 +12,7 @@
 
 use anyhow::{bail, Result};
 
-use hermes::config::{Mode, RunConfig};
+use hermes::config::{Mode, PinPolicy, RunConfig};
 use hermes::engine::Engine;
 use hermes::planner;
 use hermes::report;
@@ -207,6 +207,9 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "agents", takes_value: true, default: Some("4"), help: "number of Loading Agents (pipeload)" });
     opts.push(Opt { name: "budget-mb", takes_value: true, default: None, help: "memory budget in MB" });
     opts.push(Opt { name: "pin-budget-mb", takes_value: true, default: None, help: "hot-layer cache pin budget in MB (pipeload: keep layers resident across decode tokens when the budget has slack)" });
+    opts.push(Opt { name: "pin-policy", takes_value: true, default: Some("fifo"), help: "hot-layer pin policy: fifo (compute order) | cost (keep layers by reload-cost per byte)" });
+    opts.push(Opt { name: "kv-cache", takes_value: false, default: None, help: "paged KV cache: decode runs 1 full-prefix pass + incremental single-token passes (GPT-style profiles)" });
+    opts.push(Opt { name: "kv-budget-mb", takes_value: true, default: None, help: "KV pool cap in MB (with --kv-cache; pin + kv must fit --budget-mb)" });
     opts.push(Opt { name: "batch", takes_value: true, default: Some("1"), help: "batch size (must be AOT-compiled)" });
     opts.push(Opt { name: "tokens", takes_value: true, default: None, help: "generated tokens (generative models)" });
     opts.push(Opt { name: "trace", takes_value: false, default: None, help: "print the execution Gantt chart" });
@@ -235,12 +238,14 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         agents,
         budget,
         pin_budget,
+        pin_policy: PinPolicy::parse(a.req("pin-policy")?)?,
         disk: a.req("disk")?.to_string(),
         batch: a.usize("batch")?,
         seed: a.u64("seed")?,
         trace: a.flag("trace"),
         gen_tokens: a.get("tokens").map(|s| s.parse()).transpose()?,
-        kv_cache: false,
+        kv_cache: a.flag("kv-cache"),
+        kv_budget: a.mb_bytes("kv-budget-mb")?,
     };
     let tracer = Tracer::new(cfg.trace);
     let (rep, out) = engine.run_with(&cfg, &tracer)?;
@@ -256,8 +261,19 @@ fn cmd_run(rest: &[String]) -> Result<()> {
             rep.cache_hit_rate() * 100.0
         );
     }
+    if rep.kv_inc_passes + rep.kv_recomputes > 0 {
+        println!(
+            "  kv cache:   {} incremental passes / {} full recomputes ({} blocks evicted)",
+            rep.kv_inc_passes, rep.kv_recomputes, rep.kv_evicted_blocks
+        );
+    }
     if rep.tokens > 0 {
         println!("  generated {} tokens: {:?}", rep.tokens, out.generated);
+        if cfg.batch > 1 {
+            for (row, toks) in out.generated_rows.iter().enumerate().skip(1) {
+                println!("    row {row}: {toks:?}");
+            }
+        }
     }
     if !out.head_sample.is_empty() {
         let h: Vec<String> = out.head_sample.iter().take(6).map(|v| format!("{v:.4}")).collect();
@@ -276,6 +292,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "agents", takes_value: true, default: Some("4"), help: "Loading Agents" });
     opts.push(Opt { name: "budget-mb", takes_value: true, default: None, help: "global memory budget in MB (shared by all models)" });
     opts.push(Opt { name: "pin-budget-mb", takes_value: true, default: None, help: "hot-layer cache pin budget in MB (pipeload)" });
+    opts.push(Opt { name: "pin-policy", takes_value: true, default: Some("fifo"), help: "hot-layer pin policy: fifo | cost" });
+    opts.push(Opt { name: "kv-cache", takes_value: false, default: None, help: "paged KV cache for generative lanes (incremental decode)" });
+    opts.push(Opt { name: "kv-budget-mb", takes_value: true, default: None, help: "global KV allocation in MB, split across --kv-cache lanes" });
     opts.push(Opt { name: "requests", takes_value: true, default: Some("16"), help: "requests to serve (synthetic workload mode)" });
     opts.push(Opt { name: "rps", takes_value: true, default: Some("0"), help: "mean arrival rate (0 = closed loop)" });
     opts.push(Opt { name: "max-batch", takes_value: true, default: Some("4"), help: "max requests per batch" });
@@ -290,6 +309,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let engine = Engine::with_default_paths()?;
     let budget = a.mb_bytes("budget-mb")?;
     let pin_budget = a.mb_bytes("pin-budget-mb")?;
+    let kv_budget = a.mb_bytes("kv-budget-mb")?;
+    // same rule as `run` / session validation — the --listen path would
+    // otherwise silently ignore the flag (no lane ever carries it)
+    if kv_budget.is_some() && !a.flag("kv-cache") {
+        bail!("--kv-budget-mb only makes sense with --kv-cache");
+    }
     let models = a.list("model");
     let runs: Vec<RunConfig> = models
         .iter()
@@ -300,6 +325,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                 agents: a.usize("agents")?,
                 budget,
                 pin_budget,
+                pin_policy: PinPolicy::parse(a.req("pin-policy")?)?,
+                kv_cache: a.flag("kv-cache"),
                 disk: a.req("disk")?.to_string(),
                 seed: a.u64("seed")?,
                 ..RunConfig::default()
@@ -319,6 +346,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         let router_cfg = RouterConfig {
             models: runs,
             budget,
+            kv_budget,
             max_batch: a.usize("max-batch")?,
             ..RouterConfig::default()
         };
@@ -342,8 +370,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     if runs.len() != 1 {
         bail!("the synthetic workload serves one model; pass --listen for multi-model serving");
     }
+    let mut run = runs.into_iter().next().unwrap();
+    run.kv_budget = kv_budget;
     let cfg = ServeConfig {
-        run: runs.into_iter().next().unwrap(),
+        run,
         num_requests: a.usize("requests")?,
         arrival_rps: a.f64("rps")?,
         max_batch: a.usize("max-batch")?,
@@ -363,6 +393,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         println!(
             "  hot cache: {} hits / {} misses",
             s.cache_hits, s.cache_misses
+        );
+    }
+    if s.kv_inc_passes + s.kv_recomputes > 0 {
+        println!(
+            "  kv cache:  {} incremental passes / {} recomputes ({} blocks evicted)",
+            s.kv_inc_passes, s.kv_recomputes, s.kv_evicted_blocks
         );
     }
     println!("  SLO p95 <= {}: {}", human_ms(s.slo.target_ms), if s.slo.met { "MET" } else { "MISSED" });

@@ -100,6 +100,13 @@ pub struct RunReport {
     pub cache_hits: u64,
     /// hot-layer cache: stages that went to disk while a cache was attached
     pub cache_misses: u64,
+    /// KV cache: decode tokens served by incremental single-token passes
+    pub kv_inc_passes: u64,
+    /// KV cache: decode tokens that fell back to full-prefix recompute
+    /// after priming (eviction or exhausted KV budget)
+    pub kv_recomputes: u64,
+    /// KV cache: blocks reclaimed under `S^stop` pressure during this run
+    pub kv_evicted_blocks: u64,
 }
 
 impl RunReport {
@@ -127,6 +134,9 @@ impl RunReport {
             .set("cache_hits", self.cache_hits)
             .set("cache_misses", self.cache_misses)
             .set("cache_hit_rate", self.cache_hit_rate())
+            .set("kv_inc_passes", self.kv_inc_passes)
+            .set("kv_recomputes", self.kv_recomputes)
+            .set("kv_evicted_blocks", self.kv_evicted_blocks)
     }
 }
 
@@ -264,6 +274,9 @@ mod tests {
             tokens: 0,
             cache_hits: 0,
             cache_misses: 0,
+            kv_inc_passes: 0,
+            kv_recomputes: 0,
+            kv_evicted_blocks: 0,
         };
         assert_eq!(r.cache_hit_rate(), 0.0); // no cache attached
         r.cache_hits = 3;

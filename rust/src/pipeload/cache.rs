@@ -24,6 +24,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::config::PinPolicy;
 use crate::memory::MemoryAccountant;
 use crate::weights::Shard;
 
@@ -36,6 +37,9 @@ pub struct CacheStats {
     pub misses: u64,
     /// pinned layers reclaimed under `S^stop` pressure
     pub evictions: u64,
+    /// lower-scoring pins displaced by the cost policy (their bytes go
+    /// back to the budget via the gate, not counted as `evictions`)
+    pub displaced: u64,
     /// bytes currently pinned
     pub pinned_bytes: u64,
     /// layers currently pinned
@@ -60,6 +64,8 @@ struct Entry {
     bytes: u64,
     /// logical clock of the last take/pin (LRU victim = smallest)
     last_use: u64,
+    /// load-cost-per-byte (cost policy's keep score; 0 under fifo)
+    score: f64,
 }
 
 #[derive(Debug)]
@@ -69,6 +75,7 @@ struct CacheState {
     hits: u64,
     misses: u64,
     evictions: u64,
+    displaced: u64,
     pinned_bytes: u64,
 }
 
@@ -76,6 +83,7 @@ struct CacheState {
 #[derive(Debug, Clone)]
 pub struct LayerCache {
     pin_budget: u64,
+    policy: PinPolicy,
     inner: Arc<Mutex<CacheState>>,
 }
 
@@ -83,14 +91,20 @@ impl LayerCache {
     /// `pin_budget` caps the bytes the Daemon may keep resident between
     /// passes; eviction under memory pressure can still undercut it.
     pub fn new(pin_budget: u64) -> LayerCache {
+        LayerCache::with_policy(pin_budget, PinPolicy::Fifo)
+    }
+
+    pub fn with_policy(pin_budget: u64, policy: PinPolicy) -> LayerCache {
         LayerCache {
             pin_budget,
+            policy,
             inner: Arc::new(Mutex::new(CacheState {
                 entries: HashMap::new(),
                 clock: 0,
                 hits: 0,
                 misses: 0,
                 evictions: 0,
+                displaced: 0,
                 pinned_bytes: 0,
             })),
         }
@@ -98,6 +112,10 @@ impl LayerCache {
 
     pub fn pin_budget(&self) -> u64 {
         self.pin_budget
+    }
+
+    pub fn policy(&self) -> PinPolicy {
+        self.policy
     }
 
     /// Take a pinned stage out of the cache (hit).  The entry's bytes stay
@@ -124,15 +142,66 @@ impl LayerCache {
     /// when the pin budget has no room — the caller destroys as usual.
     /// The stage's bytes remain accounted in the pass accountant on success.
     pub fn pin(&self, stage: usize, shard: Arc<Shard>, bytes: u64) -> bool {
+        let (pinned, displaced) = self.pin_scored(stage, shard, bytes, 0.0);
+        debug_assert_eq!(displaced, 0, "unscored pins never displace");
+        pinned
+    }
+
+    /// [`LayerCache::pin`] with a load-cost-per-byte score.  Under the
+    /// `cost` policy a full cache still pins the new layer if strictly
+    /// lower-scoring pins can be displaced to make room; the displaced
+    /// bytes are returned and MUST be freed by the caller through the
+    /// gate (they were accounted while pinned).  Under `fifo`, or when
+    /// nothing cheap enough can be displaced, behaves like `pin`.
+    pub fn pin_scored(
+        &self,
+        stage: usize,
+        shard: Arc<Shard>,
+        bytes: u64,
+        score: f64,
+    ) -> (bool, u64) {
         let mut s = self.inner.lock().unwrap();
+        let mut displaced_bytes = 0u64;
         if s.pinned_bytes + bytes > self.pin_budget {
-            return false;
+            if self.policy != PinPolicy::Cost || bytes > self.pin_budget {
+                return (false, 0);
+            }
+            // cheapest-to-reload pins go first, oldest within a tie
+            let mut victims: Vec<(usize, u64, f64, u64)> = s
+                .entries
+                .iter()
+                .filter(|(_, e)| e.score < score)
+                .map(|(&st, e)| (st, e.bytes, e.score, e.last_use))
+                .collect();
+            victims.sort_by(|a, b| {
+                a.2.partial_cmp(&b.2).unwrap_or(std::cmp::Ordering::Equal).then(a.3.cmp(&b.3))
+            });
+            let need = s.pinned_bytes + bytes - self.pin_budget;
+            let mut reclaim = 0u64;
+            let mut chosen = Vec::new();
+            for (st, b, _, _) in victims {
+                if reclaim >= need {
+                    break;
+                }
+                reclaim += b;
+                chosen.push(st);
+            }
+            if reclaim < need {
+                return (false, 0); // not enough cheap pins to displace
+            }
+            for st in chosen {
+                let e = s.entries.remove(&st).unwrap();
+                s.pinned_bytes -= e.bytes;
+                s.displaced += 1;
+                displaced_bytes += e.bytes;
+                drop(e.shard); // the destruction
+            }
         }
         s.clock += 1;
         let clock = s.clock;
         s.pinned_bytes += bytes;
-        s.entries.insert(stage, Entry { shard, bytes, last_use: clock });
-        true
+        s.entries.insert(stage, Entry { shard, bytes, last_use: clock, score });
+        (true, displaced_bytes)
     }
 
     /// `S^stop` pressure valve: evict LRU-pinned layers until `bytes` fit
@@ -185,6 +254,7 @@ impl LayerCache {
             hits: s.hits,
             misses: s.misses,
             evictions: s.evictions,
+            displaced: s.displaced,
             pinned_bytes: s.pinned_bytes,
             pinned_layers: s.entries.len(),
         }
@@ -274,6 +344,37 @@ mod tests {
         assert_eq!(accountant.used(), 0);
         assert_eq!(c.stats().pinned_layers, 0);
         assert_eq!(c.stats().evictions, 0, "drain is not an eviction");
+    }
+
+    #[test]
+    fn cost_policy_displaces_cheaper_pins() {
+        use crate::config::PinPolicy;
+        let c = LayerCache::with_policy(500, PinPolicy::Cost);
+        assert!(c.pin_scored(0, shard(0), 300, 1.0).0);
+        assert!(c.pin_scored(1, shard(1), 200, 5.0).0);
+        // cache full; a higher-scoring layer displaces the cheapest pin
+        let (pinned, displaced) = c.pin_scored(2, shard(2), 250, 3.0);
+        assert!(pinned);
+        assert_eq!(displaced, 300, "stage 0 (score 1.0) was displaced");
+        let st = c.stats();
+        assert_eq!(st.displaced, 1);
+        assert_eq!(st.evictions, 0, "displacement is not S^stop eviction");
+        assert_eq!(st.pinned_bytes, 450);
+        assert!(c.take(0).is_none());
+        assert!(c.take(1).is_some());
+        // a lower-scoring layer cannot displace anything
+        let (pinned, displaced) = c.pin_scored(3, shard(3), 300, 0.5);
+        assert!(!pinned);
+        assert_eq!(displaced, 0);
+    }
+
+    #[test]
+    fn fifo_policy_never_displaces() {
+        let c = LayerCache::new(500);
+        assert!(c.pin_scored(0, shard(0), 400, 1.0).0);
+        let (pinned, displaced) = c.pin_scored(1, shard(1), 200, 99.0);
+        assert!(!pinned);
+        assert_eq!(displaced, 0);
     }
 
     #[test]

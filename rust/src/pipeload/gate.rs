@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use super::cache::LayerCache;
+use crate::kvcache::KvPool;
 use crate::memory::MemoryAccountant;
 
 #[derive(Debug)]
@@ -53,6 +54,11 @@ pub struct OrderedGate {
     /// is how one model's `S^stop` pressure evicts another model's pins
     /// when a Router multiplexes several sessions under one budget.
     victims: Vec<LayerCache>,
+    /// KV pools on the same shared accountant (own session's first, then
+    /// other lanes').  Reclaimed after pinned layers: evicting KV is the
+    /// costlier sacrifice (that sequence recomputes its full prefix for
+    /// every remaining token, while an unpinned layer is one disk read).
+    kv_pools: Vec<KvPool>,
     state: Arc<(Mutex<GateState>, Condvar)>,
 }
 
@@ -62,6 +68,7 @@ impl OrderedGate {
             accountant,
             cache: None,
             victims: Vec::new(),
+            kv_pools: Vec::new(),
             state: Arc::new((
                 Mutex::new(GateState { next_admit: 0, shutdown: false }),
                 Condvar::new(),
@@ -88,6 +95,12 @@ impl OrderedGate {
     /// Bytes currently pinned across all registered victim caches.
     pub fn victim_pinned_bytes(&self) -> u64 {
         self.victims.iter().map(|c| c.stats().pinned_bytes).sum()
+    }
+
+    /// Register a KV pool as an eviction target.  Its blocks must be
+    /// accounted in this gate's accountant (same shared accountant).
+    pub fn add_kv_pool(&mut self, pool: KvPool) {
+        self.kv_pools.push(pool);
     }
 
     pub fn accountant(&self) -> &MemoryAccountant {
@@ -117,9 +130,12 @@ impl OrderedGate {
                 }
                 // S^stop pressure: reclaim pinned hot layers before parking
                 // — own cache first (LRU), then other sessions' caches on
-                // the same shared accountant.
+                // the same shared accountant, then (last resort) cached KV
+                // sequences, whose owners fall back to full-prefix
+                // recompute rather than fail.
                 let own = self.cache.iter();
                 if own.chain(self.victims.iter()).any(|c| c.evict_for(bytes, &self.accountant) > 0)
+                    || self.kv_pools.iter().any(|p| p.evict_for(bytes) > 0)
                 {
                     continue; // retry with the reclaimed headroom
                 }
@@ -344,6 +360,32 @@ mod tests {
         assert_eq!(accountant.used(), 60);
         assert_eq!(cache_a.stats().evictions, 1);
         assert_eq!(gate_b.victim_pinned_bytes(), 0);
+    }
+
+    #[test]
+    fn stalled_admit_evicts_kv_blocks_after_pins() {
+        use crate::weights::Shard;
+        // One accountant holds a pinned layer (40 B) and a KV sequence
+        // (256 B).  An admission needing 90 B must reclaim the pin first;
+        // one needing more must then also take the KV blocks.
+        let accountant = MemoryAccountant::new(Some(300));
+        let cache = LayerCache::new(300);
+        let pool = KvPool::with_block_tokens(accountant.clone(), None, 4);
+        let mut gate = OrderedGate::with_cache(accountant.clone(), cache.clone());
+        gate.add_kv_pool(pool.clone());
+        assert!(accountant.try_acquire(40));
+        assert!(cache.pin(1, Arc::new(Shard { kind: "k".into(), stage: 1, tensors: vec![] }), 40));
+        let seq = pool.open_seq(1, 1, 8); // one block = 4*8*4*2 = 256 B
+        assert!(seq.reserve(1));
+        assert_eq!(accountant.used(), 296);
+        // needs 90: evicting the 40 B pin is enough (296-40+90 = 346 > 300?
+        // no: 256+90 = 346 > 300, so KV must go too)
+        let waited = gate.admit(0, 90).unwrap();
+        assert!(waited.as_millis() < 1000);
+        assert_eq!(cache.stats().evictions, 1, "pin reclaimed first");
+        assert!(!seq.valid(), "KV sequence reclaimed under pressure");
+        assert_eq!(pool.stats().evicted_blocks, 1);
+        assert_eq!(accountant.used(), 90);
     }
 
     #[test]

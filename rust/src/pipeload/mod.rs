@@ -50,6 +50,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::diskio::Disk;
+use crate::kvcache::KvSeq;
 use crate::memory::MemoryAccountant;
 use crate::model::{Profile, TensorSpec};
 use crate::runtime::{literal_for_spec, Runtime};
@@ -164,6 +165,12 @@ pub struct PassStats {
     pub cache_misses: u64,
 }
 
+/// Error marker for a KV sequence reclaimed while its incremental pass was
+/// mid-flight (`S^stop` pressure from that pass's own weight admissions).
+/// The session matches on this to fall back to full-prefix recompute;
+/// every other pass failure propagates.
+pub const KV_EVICTED_MIDPASS: &str = "kv sequence evicted mid-pass";
+
 /// Long-lived pipeline state a pass runs against.  [`run_pipeline`] builds
 /// a throwaway one; a `Session` owns one across passes.
 pub struct PassEnv<'a> {
@@ -172,6 +179,23 @@ pub struct PassEnv<'a> {
     pub cache: Option<&'a LayerCache>,
     /// stage-to-agent assignment; must cover `opts.agents` agents
     pub plan: &'a [Vec<usize>],
+}
+
+/// What the Inference Agent computes during one pass.  Loading, admission,
+/// and destruction are identical in every mode — the KV cache changes the
+/// *compute* per stage, not the weight streaming the paper is about.
+pub enum PassMode<'k> {
+    /// full-sequence entries over the whole (padded) prefix — the paper's
+    /// per-token semantics
+    Full,
+    /// full-sequence pass that additionally runs each body stage's `*_kv`
+    /// prime entry and seeds `kv` with K/V for positions `0..prefix_len`
+    PrimeKv { kv: &'k KvSeq, prefix_len: usize },
+    /// single-token pass over the `*_inc` entries: the new token at
+    /// position `pos` attends to the cached prefix, and each body stage
+    /// appends its K/V row to `kv`.  Requires `kv.tokens() == pos` and
+    /// reserved capacity for `pos + 1`.
+    Incremental { kv: &'k KvSeq, pos: usize },
 }
 
 // Whether a shard came from disk or the hot-layer cache, its accounting is
@@ -210,6 +234,17 @@ pub fn run_pass(
     env: &PassEnv,
     input: &ModelInput,
 ) -> Result<(xla::PjRtBuffer, PassStats)> {
+    run_pass_mode(ctx, opts, env, input, &PassMode::Full)
+}
+
+/// [`run_pass`] with an explicit [`PassMode`] (the KV decode paths).
+pub fn run_pass_mode(
+    ctx: &ExecCtx,
+    opts: &PipelineOpts,
+    env: &PassEnv,
+    input: &ModelInput,
+    mode: &PassMode,
+) -> Result<(xla::PjRtBuffer, PassStats)> {
     let profile = ctx.profile;
     if opts.agents == 0 {
         bail!("need at least one loading agent");
@@ -239,6 +274,7 @@ pub fn run_pass(
         let daemon_gate = gate.clone();
         let daemon_cache = env.cache.cloned();
         let daemon_tracer = ctx.tracer.clone();
+        let daemon_disk = ctx.disk.clone();
         let destroy = opts.destroy_after_compute;
         scope.spawn(move || {
             let mut kept: Vec<StageMsg> = Vec::new();
@@ -247,8 +283,19 @@ pub fn run_pass(
                     let t0 = daemon_tracer.now_ms();
                     // Pin instead of destroy when the pin budget has room;
                     // the layer's bytes stay accounted for the next pass.
+                    // The score (predicted reload cost per byte) only
+                    // matters under the cost policy, where an expensive
+                    // layer may displace cheaper pins; displaced bytes go
+                    // back to the budget through the gate.
                     if let Some(cache) = &daemon_cache {
-                        if cache.pin(msg.stage, msg.shard.clone(), msg.bytes) {
+                        let score =
+                            daemon_disk.est_load_ms(msg.bytes) / msg.bytes.max(1) as f64;
+                        let (pinned, displaced) =
+                            cache.pin_scored(msg.stage, msg.shard.clone(), msg.bytes, score);
+                        if displaced > 0 {
+                            daemon_gate.free(displaced);
+                        }
+                        if pinned {
                             daemon_tracer.record(
                                 Lane::Daemon,
                                 Kind::Pin,
@@ -387,7 +434,7 @@ pub fn run_pass(
         drop(tx_load);
 
         // ---- Inference Agent (this thread owns the PJRT runtime) ----------
-        let run = inference_loop(ctx, profile, input, rx_load, &tx_dest, gate);
+        let run = inference_loop(ctx, profile, input, rx_load, &tx_dest, gate, mode);
         drop(tx_dest); // closes the daemon; scope joins it
         match &run {
             Ok(_) => {}
@@ -409,6 +456,16 @@ pub fn run_pass(
 }
 
 /// The Inference Agent: strict stage-order compute with a pending queue.
+///
+/// In [`PassMode::Incremental`] every stage executes its `*_inc` entry:
+/// the activation chain is `[B,1,H]`, body stages take the dense cached
+/// K/V plus the position, and their `[B,3,H]` output is unpacked on the
+/// host (row 0 continues the pass; rows 1–2 are the token's K/V, appended
+/// to the sequence).  In [`PassMode::PrimeKv`] the pass runs the normal
+/// full-sequence entries but each body stage also executes its `*_kv`
+/// prime entry to seed the cache with the whole prefix.  Weight loading,
+/// admission, and destruction are identical in every mode.
+#[allow(clippy::too_many_arguments)]
 fn inference_loop(
     ctx: &ExecCtx,
     profile: &Profile,
@@ -416,11 +473,16 @@ fn inference_loop(
     rx_load: mpsc::Receiver<Result<StageMsg>>,
     tx_dest: &mpsc::Sender<StageMsg>,
     gate: &OrderedGate,
+    mode: &PassMode,
 ) -> Result<(xla::PjRtBuffer, PassStats)> {
     let accountant = gate.accountant();
     let mut stats = PassStats::default();
     let mut pending: HashMap<usize, StageMsg> = HashMap::new();
     let n_stages = profile.stages.len();
+    let incremental = matches!(mode, PassMode::Incremental { .. });
+    let body_kind = profile.body_kind();
+    // ordinal of the current body stage among the KV sequence's layers
+    let mut kv_layer = 0usize;
 
     // current activation buffer(s); starts as the model input
     let mut act: Option<xla::PjRtBuffer> = None; // built at stage 0
@@ -457,7 +519,14 @@ fn inference_loop(
         }
         let msg = pending.remove(&k).unwrap();
         let stage = &profile.stages[k];
-        let entry = profile.entry(&stage.kind, ctx.batch)?;
+        let is_body = stage.kind == body_kind;
+        let entry = if incremental {
+            profile
+                .entry(&format!("{}_inc", stage.kind), ctx.batch)
+                .with_context(|| format!("incremental decode entry for stage {k}"))?
+        } else {
+            profile.entry(&stage.kind, ctx.batch)?
+        };
 
         // assemble activation inputs for this entry
         if k == 0 {
@@ -473,8 +542,45 @@ fn inference_loop(
             enc_out = act.take();
             act = None;
         }
+
+        // incremental-only inputs: position scalar + dense cached K/V
+        let mut pos_buf: Option<xla::PjRtBuffer> = None;
+        let mut kv_bufs: Option<(xla::PjRtBuffer, xla::PjRtBuffer)> = None;
+        let mut kv_in_bytes = 0u64;
+        if let PassMode::Incremental { kv, pos } = mode {
+            if k == 0 || is_body {
+                pos_buf = Some(ctx.runtime.buffer_i32(&[*pos as i32], &[1])?);
+            }
+            if is_body {
+                // A sequence evicted mid-pass (S^stop pressure from this
+                // very pass's weight admissions) cannot finish this token
+                // incrementally; the caller recomputes it full-prefix.
+                let (dk, dv) = kv
+                    .dense_kv(kv_layer, profile.max_seq)
+                    .ok_or_else(|| anyhow!("{KV_EVICTED_MIDPASS} at stage {k}"))?;
+                kv_in_bytes = entry.activations[1].num_bytes() as u64
+                    + entry.activations[2].num_bytes() as u64;
+                accountant.force_add(kv_in_bytes);
+                let shape = [ctx.batch, profile.max_seq, profile.hidden];
+                kv_bufs = Some((
+                    ctx.runtime.buffer_f32(&dk, &shape)?,
+                    ctx.runtime.buffer_f32(&dv, &shape)?,
+                ));
+            }
+        }
+
         let x_ref;
-        let act_refs: Vec<&xla::PjRtBuffer> = if stage.kind == "cross_decoder_layer" {
+        let act_refs: Vec<&xla::PjRtBuffer> = if incremental {
+            let x = act.as_ref().ok_or_else(|| anyhow!("no activation at stage {k}"))?;
+            if k == 0 {
+                vec![x, pos_buf.as_ref().unwrap()]
+            } else if is_body {
+                let (kb, vb) = kv_bufs.as_ref().unwrap();
+                vec![x, kb, vb, pos_buf.as_ref().unwrap()]
+            } else {
+                vec![x]
+            }
+        } else if stage.kind == "cross_decoder_layer" {
             let enc = enc_out.as_ref().unwrap();
             match act.as_ref() {
                 Some(x) => vec![x, enc],
@@ -485,24 +591,92 @@ fn inference_loop(
             vec![x_ref]
         };
 
+        // full-prefix K/V prime: seed the cache from this stage's input
+        // activation before the main entry consumes it
+        if let PassMode::PrimeKv { kv, prefix_len } = mode {
+            if is_body {
+                let kv_entry = profile.entry(&format!("{}_kv", stage.kind), ctx.batch)?;
+                let kv_out_bytes = kv_entry.output.num_bytes() as u64;
+                accountant.force_add(kv_out_bytes);
+                let kv_out = ctx
+                    .runtime
+                    .execute_entry(profile, kv_entry, &act_refs, &msg.shard)
+                    .with_context(|| format!("priming kv at stage {k}"))?;
+                let host = ctx.runtime.buffer_to_f32(&kv_out)?;
+                drop(kv_out);
+                gate.free(kv_out_bytes);
+                // [B, 2S, H] -> token-major [T][B][H] rows for K and V
+                let (s_len, h, b_sz, n) = (profile.max_seq, profile.hidden, ctx.batch, *prefix_len);
+                let mut kx = vec![0f32; n * b_sz * h];
+                let mut vx = vec![0f32; n * b_sz * h];
+                for row in 0..b_sz {
+                    for t in 0..n {
+                        let src_k = row * 2 * s_len * h + t * h;
+                        let src_v = row * 2 * s_len * h + (s_len + t) * h;
+                        let dst = t * b_sz * h + row * h;
+                        kx[dst..dst + h].copy_from_slice(&host[src_k..src_k + h]);
+                        vx[dst..dst + h].copy_from_slice(&host[src_v..src_v + h]);
+                    }
+                }
+                kv.write_prefix(kv_layer, n, &kx, &vx);
+            }
+        }
+
         // transient copy of weights inside execute (device upload)
         accountant.force_add(msg.bytes);
         let t0 = ctx.tracer.now_ms();
         let out = ctx
             .runtime
             .execute_entry(profile, entry, &act_refs, &msg.shard)
-            .with_context(|| format!("executing stage {k} ({})", stage.kind))?;
+            .with_context(|| format!("executing stage {k} ({})", entry.kind))?;
         let t1 = ctx.tracer.now_ms();
         ctx.tracer.record(Lane::Inference, Kind::Compute, Some(k), t0, t1);
         stats.compute_ms_total += t1 - t0;
         gate.free(msg.bytes);
+        drop(act_refs);
+        if kv_in_bytes > 0 {
+            drop(kv_bufs.take()); // dense K/V uploads die with the stage
+            gate.free(kv_in_bytes);
+        }
 
-        // swap activation accounting: new out replaces old act
-        let out_bytes = entry.output.num_bytes() as u64;
-        accountant.force_add(out_bytes);
-        gate.free(act_bytes);
-        act_bytes = out_bytes;
-        act = Some(out);
+        if incremental && is_body {
+            // unpack [B,3,H]: row 0 continues the pass, rows 1–2 are the
+            // token's K/V, appended to the cached sequence
+            let out_bytes = entry.output.num_bytes() as u64;
+            accountant.force_add(out_bytes);
+            let host = ctx.runtime.buffer_to_f32(&out)?;
+            drop(out);
+            let (h, b_sz) = (profile.hidden, ctx.batch);
+            let mut xr = vec![0f32; b_sz * h];
+            let mut kr = vec![0f32; b_sz * h];
+            let mut vr = vec![0f32; b_sz * h];
+            for row in 0..b_sz {
+                let base = row * 3 * h;
+                xr[row * h..(row + 1) * h].copy_from_slice(&host[base..base + h]);
+                kr[row * h..(row + 1) * h].copy_from_slice(&host[base + h..base + 2 * h]);
+                vr[row * h..(row + 1) * h].copy_from_slice(&host[base + 2 * h..base + 3 * h]);
+            }
+            if let PassMode::Incremental { kv, pos } = mode {
+                kv.write_token(kv_layer, *pos, &kr, &vr);
+            }
+            let new_act = ctx.runtime.buffer_f32(&xr, &[b_sz, 1, h])?;
+            let new_bytes = (b_sz * h * 4) as u64;
+            accountant.force_add(new_bytes);
+            gate.free(out_bytes);
+            gate.free(act_bytes);
+            act_bytes = new_bytes;
+            act = Some(new_act);
+        } else {
+            // swap activation accounting: new out replaces old act
+            let out_bytes = entry.output.num_bytes() as u64;
+            accountant.force_add(out_bytes);
+            gate.free(act_bytes);
+            act_bytes = out_bytes;
+            act = Some(out);
+        }
+        if is_body {
+            kv_layer += 1;
+        }
 
         // S_dest: hand the layer to the Daemon for destruction (or pinning)
         ctx.signals.emit(Signal::Dest { stage: k });

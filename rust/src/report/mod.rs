@@ -224,6 +224,15 @@ fn parse_reports(v: &Value) -> Result<Vec<RunReport>> {
                 cache_hits: r.get("cache_hits").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64,
                 cache_misses: r.get("cache_misses").and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
                     as u64,
+                // absent in caches written before the KV-cache subsystem
+                kv_inc_passes: r.get("kv_inc_passes").and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+                    as u64,
+                kv_recomputes: r.get("kv_recomputes").and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+                    as u64,
+                kv_evicted_blocks: r
+                    .get("kv_evicted_blocks")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0) as u64,
             })
         })
         .collect()
@@ -389,6 +398,9 @@ mod tests {
             tokens: 0,
             cache_hits: 0,
             cache_misses: 0,
+            kv_inc_passes: 0,
+            kv_recomputes: 0,
+            kv_evicted_blocks: 0,
         }
     }
 

@@ -43,6 +43,11 @@ pub struct RouterConfig {
     pub models: Vec<RunConfig>,
     /// Global memory budget shared by every session (None = unconstrained).
     pub budget: Option<u64>,
+    /// Global KV allocation, split evenly across the lanes that run with
+    /// `kv_cache` (a lane's own `RunConfig::kv_budget` wins if set).  The
+    /// per-lane grant is what keeps one model's long generations from
+    /// starving another lane's weights or attention state.
+    pub kv_budget: Option<u64>,
     /// Max requests folded into one batch (capped by AOT batch sizes).
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch for one profile.
@@ -54,6 +59,7 @@ impl Default for RouterConfig {
         RouterConfig {
             models: Vec::new(),
             budget: None,
+            kv_budget: None,
             max_batch: 4,
             batch_window: Duration::from_millis(20),
         }
@@ -129,6 +135,9 @@ pub struct InferResponse {
     pub batch: usize,
     /// generated tokens (generative profiles)
     pub tokens: usize,
+    /// generated token ids for THIS request's rows (generative profiles;
+    /// row count = the request's `batch_hint`)
+    pub generated_rows: Vec<Vec<i32>>,
     /// shared-accountant peak during the batch's pass window
     pub peak_bytes: u64,
 }
@@ -143,6 +152,7 @@ impl InferResponse {
             latency_ms: enqueued.elapsed().as_secs_f64() * 1000.0,
             batch: 0,
             tokens: 0,
+            generated_rows: Vec::new(),
             peak_bytes: 0,
         }
     }
@@ -157,6 +167,16 @@ impl InferResponse {
             .set("batch", self.batch)
             .set("tokens", self.tokens)
             .set("peak_bytes", self.peak_bytes);
+        if !self.generated_rows.is_empty() {
+            let rows: Vec<Value> = self
+                .generated_rows
+                .iter()
+                .map(|row| {
+                    Value::Arr(row.iter().map(|&t| Value::int(t as i64)).collect())
+                })
+                .collect();
+            v = v.set("generated_rows", rows);
+        }
         if let Some(e) = &self.error {
             v = v.set("error", e.clone());
         }
@@ -176,6 +196,19 @@ impl InferResponse {
             latency_ms: v.get("latency_ms").map(|x| x.as_f64()).transpose()?.unwrap_or(0.0),
             batch: v.get("batch").map(|x| x.as_usize()).transpose()?.unwrap_or(0),
             tokens: v.get("tokens").map(|x| x.as_usize()).transpose()?.unwrap_or(0),
+            generated_rows: match v.get("generated_rows") {
+                Some(rows) => rows
+                    .as_arr()?
+                    .iter()
+                    .map(|row| {
+                        row.as_arr()?
+                            .iter()
+                            .map(|t| Ok(t.as_i64()? as i32))
+                            .collect::<Result<Vec<i32>>>()
+                    })
+                    .collect::<Result<Vec<Vec<i32>>>>()?,
+                None => Vec::new(),
+            },
             peak_bytes: v.get("peak_bytes").map(|x| x.as_f64()).transpose()?.unwrap_or(0.0)
                 as u64,
         })
@@ -268,6 +301,12 @@ pub struct ModelStats {
     pub latency: LatencyRecorder,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// decode tokens served by incremental KV passes
+    pub kv_inc_passes: u64,
+    /// decode tokens recomputed full-prefix after priming
+    pub kv_recomputes: u64,
+    /// KV blocks reclaimed under `S^stop` pressure
+    pub kv_evicted_blocks: u64,
 }
 
 /// Summary of one router run (all models, shared budget).
@@ -285,6 +324,9 @@ pub struct RouterSummary {
     pub mean_batch_size: f64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    pub kv_inc_passes: u64,
+    pub kv_recomputes: u64,
+    pub kv_evicted_blocks: u64,
     pub per_model: Vec<ModelStats>,
     /// first engine-pass failure, if any batch failed (full error chain —
     /// individual responses carry their own copies, but callers that drop
@@ -307,6 +349,9 @@ impl RouterSummary {
                     .set("latency", m.latency.to_json())
                     .set("cache_hits", m.cache_hits)
                     .set("cache_misses", m.cache_misses)
+                    .set("kv_inc_passes", m.kv_inc_passes)
+                    .set("kv_recomputes", m.kv_recomputes)
+                    .set("kv_evicted_blocks", m.kv_evicted_blocks)
             })
             .collect();
         let mut v = Value::obj()
@@ -319,6 +364,9 @@ impl RouterSummary {
             .set("mean_batch_size", self.mean_batch_size)
             .set("cache_hits", self.cache_hits)
             .set("cache_misses", self.cache_misses)
+            .set("kv_inc_passes", self.kv_inc_passes)
+            .set("kv_recomputes", self.kv_recomputes)
+            .set("kv_evicted_blocks", self.kv_evicted_blocks)
             .set("models", models);
         if let Some(b) = self.budget_bytes {
             v = v.set("budget_bytes", b);
@@ -381,6 +429,12 @@ impl<'e> Router<'e> {
             bail!("max_batch must be >= 1");
         }
         let accountant = MemoryAccountant::new(cfg.budget);
+        // Per-lane KV grants: the router's kv_budget is divided evenly
+        // among the lanes that decode with a KV cache, so one lane's long
+        // generations can never starve another's (a lane's own explicit
+        // kv_budget overrides its share).
+        let kv_lanes = cfg.models.iter().filter(|m| m.kv_cache).count();
+        let kv_share = cfg.kv_budget.map(|b| b / kv_lanes.max(1) as u64);
         let mut lanes: Vec<ModelLane<'e>> = Vec::with_capacity(cfg.models.len());
         for model in &cfg.models {
             if lanes.iter().any(|l| l.profile == model.profile) {
@@ -389,6 +443,9 @@ impl<'e> Router<'e> {
             // the shared budget outranks any per-entry budget
             let mut run = model.clone();
             run.budget = cfg.budget;
+            if run.kv_cache && run.kv_budget.is_none() {
+                run.kv_budget = kv_share;
+            }
             let session = engine.open_session_shared(&run, &accountant)?;
             lanes.push(ModelLane {
                 profile: model.profile.clone(),
@@ -401,15 +458,26 @@ impl<'e> Router<'e> {
             });
         }
         // cross-model eviction: each session may reclaim the others' pins
+        // and, as a last resort, the others' KV blocks
         let caches: Vec<(usize, crate::pipeload::cache::LayerCache)> = lanes
             .iter()
             .enumerate()
             .filter_map(|(i, l)| l.session.layer_cache().map(|c| (i, c.clone())))
             .collect();
+        let kv_pools: Vec<(usize, crate::kvcache::KvPool)> = lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| l.session.kv_pool().map(|p| (i, p.clone())))
+            .collect();
         for (i, lane) in lanes.iter_mut().enumerate() {
             for (j, cache) in &caches {
                 if *j != i {
                     lane.session.add_eviction_victim(cache.clone());
+                }
+            }
+            for (j, pool) in &kv_pools {
+                if *j != i {
+                    lane.session.add_kv_eviction_victim(pool.clone());
                 }
             }
         }
@@ -609,12 +677,30 @@ impl<'e> Router<'e> {
                 .unwrap_or_else(|| lane.session.run_config().seed.wrapping_add(lane.batches as u64));
 
             match lane.session.run_batch(b, seed) {
-                Ok((report, _out)) => {
+                Ok((report, out)) => {
                     peak = peak.max(report.peak_bytes);
                     lane.batches += 1;
                     total_batches += 1;
                     batch_sizes += batch.len();
+                    // KV blocks are per-request state: the sequence died
+                    // with the pass, so nothing may stay accounted now
+                    debug_assert_eq!(
+                        lane.session.kv_pool().map(|p| p.used_bytes()).unwrap_or(0),
+                        0,
+                        "KV blocks must be freed when the ticket resolves"
+                    );
+                    // each folded request gets its own rows, in fold order
+                    let mut row_off = 0usize;
                     for p in &batch {
+                        let rows = p.req.batch_hint.max(1);
+                        let generated_rows: Vec<Vec<i32>> = out
+                            .generated_rows
+                            .iter()
+                            .skip(row_off)
+                            .take(rows)
+                            .cloned()
+                            .collect();
+                        row_off += rows;
                         let latency = p.enqueued.elapsed();
                         lane.latency.record(latency);
                         lane.served += 1;
@@ -626,6 +712,7 @@ impl<'e> Router<'e> {
                             latency_ms: latency.as_secs_f64() * 1000.0,
                             batch: b,
                             tokens: report.tokens,
+                            generated_rows,
                             peak_bytes: report.peak_bytes,
                         });
                     }
@@ -666,6 +753,7 @@ impl<'e> Router<'e> {
         let mut latency = LatencyRecorder::new();
         let (mut served, mut rejected) = (0usize, self.unroutable);
         let (mut hits, mut misses) = (0u64, 0u64);
+        let (mut kv_inc, mut kv_rec, mut kv_evicted) = (0u64, 0u64, 0u64);
         let per_model: Vec<ModelStats> = self
             .lanes
             .iter()
@@ -678,6 +766,11 @@ impl<'e> Router<'e> {
                 let cs = l.session.cache_stats();
                 hits += cs.hits;
                 misses += cs.misses;
+                let (inc, rec) = l.session.kv_counters();
+                let kvp = l.session.kv_pool_stats();
+                kv_inc += inc;
+                kv_rec += rec;
+                kv_evicted += kvp.evicted_blocks;
                 ModelStats {
                     profile: l.profile.clone(),
                     served: l.served,
@@ -686,6 +779,9 @@ impl<'e> Router<'e> {
                     latency: l.latency.clone(),
                     cache_hits: cs.hits,
                     cache_misses: cs.misses,
+                    kv_inc_passes: inc,
+                    kv_recomputes: rec,
+                    kv_evicted_blocks: kvp.evicted_blocks,
                 }
             })
             .collect();
@@ -700,6 +796,9 @@ impl<'e> Router<'e> {
             mean_batch_size: batch_sizes as f64 / total_batches.max(1) as f64,
             cache_hits: hits,
             cache_misses: misses,
+            kv_inc_passes: kv_inc,
+            kv_recomputes: kv_rec,
+            kv_evicted_blocks: kv_evicted,
             per_model,
             first_error,
         })
@@ -781,6 +880,7 @@ mod tests {
             latency_ms: 12.5,
             batch: 4,
             tokens: 8,
+            generated_rows: vec![vec![7, 9], vec![3, 5]],
             peak_bytes: 1024,
         };
         let back = InferResponse::from_json(&resp.to_json()).unwrap();
@@ -789,10 +889,12 @@ mod tests {
         assert_eq!(back.batch, 4);
         assert_eq!(back.tokens, 8);
         assert_eq!(back.peak_bytes, 1024);
+        assert_eq!(back.generated_rows, vec![vec![7, 9], vec![3, 5]]);
         let rej = InferResponse::rejected(9, "m", Instant::now(), "nope");
         let back = InferResponse::from_json(&rej.to_json()).unwrap();
         assert!(!back.ok);
         assert_eq!(back.error.as_deref(), Some("nope"));
+        assert!(back.generated_rows.is_empty());
     }
 
     #[test]

@@ -54,6 +54,7 @@ impl ServeConfig {
         RouterConfig {
             models: vec![self.run.clone()],
             budget: self.run.budget,
+            kv_budget: self.run.kv_budget,
             max_batch: self.max_batch,
             batch_window: self.batch_window,
         }
@@ -73,6 +74,11 @@ pub struct ServeSummary {
     /// hot-layer cache hits/misses across all batches (0/0 = no cache)
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// KV cache: incremental decode passes / full-prefix recomputes /
+    /// blocks evicted under memory pressure (all 0 = KV off)
+    pub kv_inc_passes: u64,
+    pub kv_recomputes: u64,
+    pub kv_evicted_blocks: u64,
 }
 
 impl ServeSummary {
@@ -89,6 +95,9 @@ impl ServeSummary {
             latency: s.latency,
             cache_hits: s.cache_hits,
             cache_misses: s.cache_misses,
+            kv_inc_passes: s.kv_inc_passes,
+            kv_recomputes: s.kv_recomputes,
+            kv_evicted_blocks: s.kv_evicted_blocks,
         }
     }
 
@@ -105,6 +114,9 @@ impl ServeSummary {
             .set("slo", self.slo.to_json())
             .set("cache_hits", self.cache_hits)
             .set("cache_misses", self.cache_misses)
+            .set("kv_inc_passes", self.kv_inc_passes)
+            .set("kv_recomputes", self.kv_recomputes)
+            .set("kv_evicted_blocks", self.kv_evicted_blocks)
     }
 }
 
@@ -203,6 +215,9 @@ mod tests {
             mean_batch_size: 2.0,
             cache_hits: 1,
             cache_misses: 3,
+            kv_inc_passes: 5,
+            kv_recomputes: 1,
+            kv_evicted_blocks: 2,
         };
         let v = s.to_json();
         for key in

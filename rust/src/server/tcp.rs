@@ -14,11 +14,16 @@
 //! ```text
 //! -> {"op":"infer","profile":"tiny-bert","batch_hint":1,"deadline_ms":5000,"seed":7}
 //! <- {"ok":true,"id":0,"profile":"tiny-bert","latency_ms":12.3,"batch":1,"tokens":0,"peak_bytes":1048576}
+//! -> {"op":"infer","profile":"tiny-gpt","batch_hint":2}
+//! <- {"ok":true,"id":1,...,"tokens":2,"generated_rows":[[17,202],[65,9]]}
 //! -> {"op":"ping"}
 //! <- {"ok":true,"op":"pong"}
 //! -> {"op":"shutdown"}        # drains queued work, stops the server
 //! <- {"ok":true,"op":"shutdown"}
 //! ```
+//!
+//! Generative profiles answer with `generated_rows`: one token list per
+//! requested row (`batch_hint` rows, each row's own argmax).
 //!
 //! [`Ticket`]: super::router::Ticket
 

@@ -1,0 +1,172 @@
+//! KV-cache decode integration tests: incremental decode must be a pure
+//! optimization — bit-identical tokens to the cache-off path on the golden
+//! profiles, 1 full-prefix pass + (N-1) incremental passes when the cache
+//! holds, graceful full-prefix fallback when blocks are denied or evicted
+//! mid-decode, and per-request block lifecycle.  Needs `make artifacts`.
+
+use hermes::config::{Mode, Paths, RunConfig};
+use hermes::engine::Engine;
+
+fn engine() -> Engine {
+    Engine::new(Paths::detect()).unwrap()
+}
+
+fn cfg(model: &str, kv: bool) -> RunConfig {
+    RunConfig {
+        profile: model.into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        kv_cache: kv,
+        gen_tokens: Some(6),
+        ..RunConfig::default()
+    }
+}
+
+/// The acceptance contract: for every generative golden profile and batch
+/// size, `--kv-cache` decode yields exactly the tokens the cache-off path
+/// yields — every row — and the pass shape is 1 full + (N-1) incremental.
+#[test]
+fn kv_decode_matches_cache_off_bit_exactly() {
+    let e = engine();
+    for model in ["tiny-gpt", "tiny-gptj"] {
+        for batch in [1usize, 2] {
+            let mut off = e.open_session(&cfg(model, false)).unwrap();
+            let (off_rep, off_out) = off.run_batch(batch, 1234).unwrap();
+            drop(off);
+
+            let mut on = e.open_session(&cfg(model, true)).unwrap();
+            let (on_rep, on_out) = on.run_batch(batch, 1234).unwrap();
+
+            assert_eq!(
+                off_out.generated_rows, on_out.generated_rows,
+                "{model} batch {batch}: kv decode must be bit-identical"
+            );
+            assert_eq!(off_out.generated, on_out.generated);
+            assert_eq!(on_out.generated_rows.len(), batch);
+            assert_eq!(off_rep.tokens, 6);
+            assert_eq!(on_rep.tokens, 6);
+
+            // pass shape: 1 full-prefix (prime) + 5 incremental
+            assert_eq!(on_rep.kv_inc_passes, 5, "{model} batch {batch}: {on_rep:?}");
+            assert_eq!(on_rep.kv_recomputes, 0);
+            let (inc, rec) = on.kv_counters();
+            assert_eq!((inc, rec), (5, 0));
+            // cache-off decode never touches the KV counters
+            assert_eq!(off_rep.kv_inc_passes, 0);
+
+            // per-request lifecycle: every block freed at run_batch exit
+            assert_eq!(on.kv_pool().unwrap().used_bytes(), 0);
+            assert!(on.kv_pool_stats().allocated_blocks > 0);
+        }
+    }
+}
+
+/// Exhausting the KV budget mid-decode (pool cap, not accountant pressure)
+/// forces full-prefix recomputes — tokens stay identical.
+#[test]
+fn kv_budget_exhaustion_falls_back_to_recompute_with_identical_tokens() {
+    let e = engine();
+    let profile = e.runtime.profile("tiny-gpt").unwrap();
+    // One block row covers 8 tokens/layer; prompt(4) + 6 generated = 10
+    // tokens, so a cap of exactly one block row per layer (stages * block
+    // bytes for batch 1) exhausts after token 8 and forces recomputes.
+    let n_body = profile.stages.iter().filter(|s| s.kind == "decoder_layer").count() as u64;
+    let block_bytes = 8 * profile.hidden as u64 * 4 * 2;
+    let mut kv_cfg = cfg("tiny-gpt", true);
+    kv_cfg.kv_budget = Some(n_body * block_bytes);
+
+    let mut off = e.open_session(&cfg("tiny-gpt", false)).unwrap();
+    let (_, off_out) = off.run_batch(1, 77).unwrap();
+    drop(off);
+
+    let mut on = e.open_session(&kv_cfg).unwrap();
+    let (rep, on_out) = on.run_batch(1, 77).unwrap();
+    assert_eq!(off_out.generated_rows, on_out.generated_rows, "{rep:?}");
+    let (inc, rec) = on.kv_counters();
+    assert!(inc > 0, "the first block row must serve incrementally: {rep:?}");
+    assert!(rec > 0, "the cap must force at least one recompute: {rep:?}");
+    assert_eq!(inc + rec, 5, "every non-prime token is either inc or recompute");
+    assert_eq!(on.kv_pool().unwrap().used_bytes(), 0, "blocks freed at exit");
+}
+
+/// A memory budget too tight to hold weights-in-flight AND the cached KV
+/// forces the gate to evict KV blocks mid-decode (`S^stop` pressure).
+/// Decode must degrade to recompute, not fail, and tokens stay identical.
+#[test]
+fn forced_mid_decode_eviction_keeps_tokens_identical() {
+    let e = engine();
+    let profile = e.runtime.profile("tiny-gpt").unwrap();
+    let max_stage = profile.stages.iter().map(|s| profile.stage_bytes(s)).max().unwrap();
+    // Enough for the pipeline to make progress (ordered admission needs one
+    // stage at a time) but far too small to ALSO keep the KV pool resident:
+    // the pool's block spans all 4 body layers and then some.
+    let budget = max_stage + max_stage / 2;
+
+    let mut off_cfg = cfg("tiny-gpt", false);
+    off_cfg.budget = Some(budget);
+    let mut off = e.open_session(&off_cfg).unwrap();
+    let (_, off_out) = off.run_batch(1, 55).unwrap();
+    drop(off);
+
+    let mut on_cfg = cfg("tiny-gpt", true);
+    on_cfg.budget = Some(budget);
+    let mut on = e.open_session(&on_cfg).unwrap();
+    let (rep, on_out) = on.run_batch(1, 55).unwrap();
+
+    assert_eq!(
+        off_out.generated_rows, on_out.generated_rows,
+        "tokens must survive forced KV eviction: {rep:?}"
+    );
+    assert!(
+        rep.kv_evicted_blocks > 0,
+        "budget {budget} must force mid-decode KV eviction: {rep:?}"
+    );
+    let (_inc, rec) = on.kv_counters();
+    assert!(rec > 0, "evicted sequences must recompute: {rep:?}");
+    assert_eq!(on.kv_pool().unwrap().used_bytes(), 0, "blocks freed at exit");
+    assert!(
+        rep.peak_bytes <= budget + 2 * max_stage,
+        "peak {} far above budget {}",
+        rep.peak_bytes,
+        budget
+    );
+}
+
+/// BART is generative but ships no incremental entries: `--kv-cache` must
+/// quietly fall back to full-prefix decode (identical tokens, no pool).
+#[test]
+fn kv_cache_on_bart_degrades_to_full_prefix() {
+    let e = engine();
+    let mut off_cfg = cfg("bart-base-sim", false);
+    off_cfg.gen_tokens = Some(2);
+    let mut off = e.open_session(&off_cfg).unwrap();
+    let (_, off_out) = off.run_batch(1, 3).unwrap();
+    drop(off);
+
+    let mut on_cfg = cfg("bart-base-sim", true);
+    on_cfg.gen_tokens = Some(2);
+    let mut on = e.open_session(&on_cfg).unwrap();
+    assert!(on.kv_pool().is_none(), "no inc entries -> no pool");
+    let (rep, on_out) = on.run_batch(1, 3).unwrap();
+    assert_eq!(off_out.generated_rows, on_out.generated_rows);
+    assert_eq!(rep.kv_inc_passes, 0);
+    assert_eq!(rep.kv_recomputes, 0);
+}
+
+/// Batched decode returns every row's own continuation (regression guard
+/// for the row-0-only `RunOutput::generated`).
+#[test]
+fn generated_rows_differ_across_batch_rows() {
+    let e = engine();
+    let mut s = e.open_session(&cfg("tiny-gpt", true)).unwrap();
+    let (_, out) = s.run_batch(2, 99).unwrap();
+    assert_eq!(out.generated_rows.len(), 2);
+    assert_eq!(out.generated_rows[0], out.generated);
+    assert_eq!(out.generated_rows[0].len(), 6);
+    assert_eq!(out.generated_rows[1].len(), 6);
+    // different prompts per row -> (with overwhelming probability over the
+    // golden weights) different continuations; equality would indicate the
+    // old row-0 broadcast bug
+    assert_ne!(out.generated_rows[0], out.generated_rows[1]);
+}

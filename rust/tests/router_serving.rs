@@ -39,6 +39,7 @@ fn router_serves_two_profiles_under_one_shared_budget() {
     let cfg = RouterConfig {
         models: vec![run_cfg("tiny-bert", 2), gpt],
         budget: Some(budget),
+        kv_budget: None,
         max_batch: 2,
         batch_window: Duration::from_millis(5),
     };
@@ -82,6 +83,68 @@ fn router_serves_two_profiles_under_one_shared_budget() {
         2,
         "one AOT prepare per session (per model), never per batch"
     );
+}
+
+#[test]
+fn router_two_generative_kv_lanes_stay_under_budget() {
+    // Acceptance: two GPT-style lanes decode with --kv-cache under ONE
+    // shared budget; peak accounted bytes never exceed it, every request
+    // gets its own per-row tokens, and the decode is incremental.
+    let e = engine();
+    let total_a = e.runtime.profile("tiny-gpt").unwrap().total_weight_bytes;
+    let total_b = e.runtime.profile("tiny-gptj").unwrap().total_weight_bytes;
+    let budget = total_a + total_b;
+
+    let mut ga = run_cfg("tiny-gpt", 2);
+    ga.kv_cache = true;
+    ga.gen_tokens = Some(4);
+    let mut gb = run_cfg("tiny-gptj", 2);
+    gb.kv_cache = true;
+    gb.gen_tokens = Some(4);
+    let cfg = RouterConfig {
+        models: vec![ga, gb],
+        budget: Some(budget),
+        // split across the two kv lanes; ample for tiny profiles
+        kv_budget: Some(1 << 20),
+        max_batch: 2,
+        batch_window: Duration::from_millis(5),
+    };
+    let router = Router::new(&e, cfg).unwrap();
+    let handle = router.handle();
+    let producer = std::thread::spawn(move || {
+        let tickets: Vec<_> = (0..6)
+            .map(|i| {
+                let profile = if i % 2 == 0 { "tiny-gpt" } else { "tiny-gptj" };
+                handle.submit(InferRequest::new(profile)).unwrap()
+            })
+            .collect();
+        let responses: Vec<_> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+        handle.shutdown();
+        responses
+    });
+    let summary = router.run().unwrap();
+    let responses = producer.join().unwrap();
+
+    assert_eq!(summary.served, 6, "{:?}", summary.first_error);
+    assert_eq!(summary.rejected, 0);
+    assert!(
+        summary.peak_bytes <= budget,
+        "kv blocks + weights peaked at {} over the shared budget {}",
+        summary.peak_bytes,
+        budget
+    );
+    assert!(summary.kv_inc_passes > 0, "decode must run incrementally: {summary:?}");
+    assert_eq!(summary.kv_recomputes, 0, "no pressure -> no recompute: {summary:?}");
+    for r in &responses {
+        assert!(r.ok, "{r:?}");
+        assert_eq!(r.tokens, 4);
+        assert_eq!(r.generated_rows.len(), 1, "one row per batch_hint=1 request");
+        assert_eq!(r.generated_rows[0].len(), 4);
+    }
+    // per-lane counters surfaced
+    for m in &summary.per_model {
+        assert!(m.kv_inc_passes > 0, "{m:?}");
+    }
 }
 
 #[test]
@@ -150,6 +213,7 @@ fn expired_deadline_is_rejected_without_a_pass() {
     let cfg = RouterConfig {
         models: vec![run_cfg("tiny-bert", 2)],
         budget: None,
+        kv_budget: None,
         max_batch: 1,
         batch_window: Duration::from_millis(1),
     };
@@ -190,6 +254,7 @@ fn dropped_producer_ends_serving_gracefully() {
     let cfg = RouterConfig {
         models: vec![run_cfg("tiny-bert", 2)],
         budget: None,
+        kv_budget: None,
         max_batch: 4,
         batch_window: Duration::from_millis(1),
     };
@@ -210,10 +275,17 @@ fn config_validation_rejects_bad_entries_at_open() {
     let err = e.open_session(&bad_batch).unwrap_err().to_string();
     assert!(err.contains("not AOT-compiled"), "{err}");
 
+    // --kv-cache is live for pipelined modes now; the baseline still bails
     let mut kv = run_cfg("tiny-bert", 2);
     kv.kv_cache = true;
+    kv.mode = Mode::Baseline;
     let err = e.open_session(&kv).unwrap_err().to_string();
-    assert!(err.contains("--kv-cache is an ablation extension"), "{err}");
+    assert!(err.contains("pipelined mode"), "{err}");
+
+    let mut kv_budget_alone = run_cfg("tiny-bert", 2);
+    kv_budget_alone.kv_budget = Some(1 << 20);
+    let err = e.open_session(&kv_budget_alone).unwrap_err().to_string();
+    assert!(err.contains("--kv-cache"), "{err}");
 
     let mut pin_over = run_cfg("tiny-bert", 2);
     pin_over.budget = Some(1000);
@@ -225,6 +297,7 @@ fn config_validation_rejects_bad_entries_at_open() {
     let cfg = RouterConfig {
         models: vec![run_cfg("tiny-bert", 2), RunConfig { agents: 0, ..run_cfg("tiny-gpt", 2) }],
         budget: None,
+        kv_budget: None,
         max_batch: 2,
         batch_window: Duration::from_millis(1),
     };
@@ -235,6 +308,7 @@ fn config_validation_rejects_bad_entries_at_open() {
     let cfg = RouterConfig {
         models: vec![run_cfg("tiny-bert", 2), run_cfg("tiny-bert", 4)],
         budget: None,
+        kv_budget: None,
         max_batch: 2,
         batch_window: Duration::from_millis(1),
     };
@@ -248,6 +322,7 @@ fn tcp_front_end_round_trip() {
     let cfg = RouterConfig {
         models: vec![run_cfg("tiny-bert", 2)],
         budget: None,
+        kv_budget: None,
         max_batch: 1,
         batch_window: Duration::from_millis(1),
     };
