@@ -6,7 +6,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts golden build test examples bench fmt clippy clean
+.PHONY: artifacts golden build test examples bench bench-diff fmt clippy clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../rust/artifacts
@@ -23,10 +23,20 @@ test:
 examples:
 	cargo build --release --examples
 
-# Record a serve --json perf trajectory (one-model kv off/on + a two-lane
-# router run) into BENCH_pr3.json; CI uploads it as a build artifact.
+# Record serve --json perf trajectories (one-model kv off/on, a two-lane
+# router run, and an elastic shrink-grow run) into BENCH_pr3.json (PR 3
+# layout, for cross-PR diffing) + BENCH_pr4.json; CI uploads both.
 bench:
 	cargo run --release --example bench_trajectory
+
+# Fail-soft per-metric deltas between the PR 3 and PR 4 trajectories
+# (advisory: a missing file prints a note instead of failing the build).
+# NOTE: one `make bench` run writes both files from the same summaries, so
+# the shared sections diff to zero by construction — the deltas carry
+# signal when BENCH_pr3.json comes from an earlier checkout or a previous
+# CI run's artifact dropped in place.
+bench-diff:
+	$(PY) scripts/bench_diff.py BENCH_pr3.json BENCH_pr4.json
 
 fmt:
 	cargo fmt --check

@@ -1,28 +1,35 @@
-//! `make bench` driver: record a machine-readable perf trajectory in
-//! `BENCH_pr3.json` so future PRs can diff serving behavior.
+//! `make bench` driver: record a machine-readable perf trajectory so
+//! future PRs can diff serving behavior (`make bench-diff`).
 //!
-//! Three runs, all on tiny profiles with unthrottled storage (fast + free
+//! Four runs, all on tiny profiles with unthrottled storage (fast + free
 //! of disk variance):
 //!
 //! * `one_model`         — generative serve, KV cache OFF (paper decode)
 //! * `one_model_kv`      — same workload with `--kv-cache`
 //! * `router_two_kv_lanes` — tiny-gpt + tiny-gptj lanes under one shared
 //!   budget, each with a KV allocation
+//! * `elastic_shrink_grow` — the KV serve again, with a shrink-grow
+//!   memory-pressure trace resizing the budget mid-run
 //!
 //! The JSON keys are the stable `serve --json` / router summary keys.
-//! CI runs this and uploads the file as a build artifact.
+//! The first three runs also land in `BENCH_pr3.json` (the PR 3 baseline
+//! layout, for cross-PR diffing); all four land in `BENCH_pr4.json`.  CI
+//! uploads both files as build artifacts.
 
 use std::time::Duration;
 
 use anyhow::Result;
 use hermes::config::{Mode, RunConfig};
+use hermes::elastic::{PressureStep, PressureTrace};
 use hermes::engine::Engine;
 use hermes::server::{serve, InferRequest, Router, RouterConfig, ServeConfig};
 use hermes::util::json::Value;
 
 fn main() -> Result<()> {
     let engine = Engine::with_default_paths()?;
-    let gpt = engine.runtime.profile("tiny-gpt")?.total_weight_bytes;
+    let gpt_profile = engine.runtime.profile("tiny-gpt")?;
+    let gpt = gpt_profile.total_weight_bytes;
+    let gpt_max_stage = gpt_profile.max_stage_bytes();
     let gptj = engine.runtime.profile("tiny-gptj")?.total_weight_bytes;
 
     let base = RunConfig {
@@ -54,11 +61,12 @@ fn main() -> Result<()> {
     let router = Router::new(
         &engine,
         RouterConfig {
-            models: vec![kv_run, lane_b],
+            models: vec![kv_run.clone(), lane_b],
             budget: Some(gpt + gptj),
             kv_budget: Some(1 << 20),
             max_batch: 2,
             batch_window: Duration::from_millis(5),
+            ..RouterConfig::default()
         },
     )?;
     let handle = router.handle();
@@ -77,23 +85,57 @@ fn main() -> Result<()> {
     let router_summary = router.run()?;
     producer.join().expect("producer panicked");
 
-    let v = Value::obj()
+    // elastic: the same KV workload while a shrink-grow trace resizes the
+    // budget mid-run (pins + KV give the shrink something to reclaim).
+    // Steps are aligned to batch boundaries: serve polls the trace between
+    // batches, and each request runs 4 passes, so at_pass 4 lands before
+    // batch 2 and at_pass 12 before batch 4 — the canonical shrink_grow
+    // constants (2/4) would both fall due at the first boundary and
+    // collapse into the settled (grow) value.
+    let elastic_budget = gpt + gpt_max_stage;
+    let mut elastic_run = kv_run.clone();
+    elastic_run.budget = Some(elastic_budget);
+    elastic_run.pin_budget = Some(gpt);
+    let trace = PressureTrace::new(vec![
+        PressureStep { at_pass: 4, budget_bytes: elastic_budget * 60 / 100 },
+        PressureStep { at_pass: 12, budget_bytes: elastic_budget },
+    ])?;
+    let elastic_cfg = ServeConfig {
+        run: elastic_run,
+        num_requests: 6,
+        max_batch: 1, // one request per batch: more pass boundaries for steps
+        memory_trace: Some(trace),
+        ..ServeConfig::default()
+    };
+    let elastic = serve(&engine, &elastic_cfg)?;
+
+    let pr3 = Value::obj()
         .set("bench", "pr3-kv-cache")
         .set("one_model", off.to_json())
         .set("one_model_kv", on.to_json())
         .set("router_two_kv_lanes", router_summary.to_json());
-    let out = std::path::PathBuf::from("BENCH_pr3.json");
-    v.to_file(&out)?;
-    println!("wrote {}", out.display());
+    pr3.to_file(&std::path::PathBuf::from("BENCH_pr3.json"))?;
+    let pr4 = Value::obj()
+        .set("bench", "pr4-elastic")
+        .set("one_model", off.to_json())
+        .set("one_model_kv", on.to_json())
+        .set("router_two_kv_lanes", router_summary.to_json())
+        .set("elastic_shrink_grow", elastic.to_json());
+    pr4.to_file(&std::path::PathBuf::from("BENCH_pr4.json"))?;
+    println!("wrote BENCH_pr3.json + BENCH_pr4.json");
     println!(
         "one-model p50 {:.1} ms (kv off) vs {:.1} ms (kv on, {} incremental passes); \
-         router: {} served, {} kv incremental passes, peak {} B",
+         router: {} served, {} kv incremental passes, peak {} B; \
+         elastic: {} budget steps, {} evictions, p50 {:.1} ms",
         off.latency.p50(),
         on.latency.p50(),
         on.kv_inc_passes,
         router_summary.served,
         router_summary.kv_inc_passes,
         router_summary.peak_bytes,
+        elastic.budget_steps,
+        elastic.elastic_evictions,
+        elastic.latency.p50(),
     );
     Ok(())
 }

@@ -61,6 +61,7 @@ fn main() -> anyhow::Result<()> {
             kv_budget: None,
             max_batch: 2,
             batch_window: Duration::from_millis(10),
+            ..RouterConfig::default()
         },
     )?;
     let handle = router.handle();

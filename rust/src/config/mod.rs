@@ -120,6 +120,10 @@ pub struct RunConfig {
     /// Validated `pin_budget + kv_budget <= budget` so weights-in-flight,
     /// pins, and attention state are jointly planned.
     pub kv_budget: Option<u64>,
+    /// KV pool allocation granularity in tokens per block (None = the
+    /// pool's default).  Small blocks waste less memory on short tails;
+    /// large blocks amortize reserve calls.  Validated >= 1.
+    pub kv_block_tokens: Option<usize>,
 }
 
 impl RunConfig {
@@ -148,6 +152,13 @@ impl RunConfig {
         }
         if self.kv_budget.is_some() && !self.kv_cache {
             anyhow::bail!("--kv-budget-mb only makes sense with --kv-cache");
+        }
+        match self.kv_block_tokens {
+            Some(0) => anyhow::bail!("--kv-block-tokens must be >= 1 (got 0)"),
+            Some(_) if !self.kv_cache => {
+                anyhow::bail!("--kv-block-tokens only makes sense with --kv-cache")
+            }
+            _ => {}
         }
         if self.agents == 0 {
             anyhow::bail!("agents must be >= 1 (got 0)");
@@ -192,6 +203,7 @@ impl Default for RunConfig {
             gen_tokens: None,
             kv_cache: false,
             kv_budget: None,
+            kv_block_tokens: None,
         }
     }
 }
@@ -263,6 +275,17 @@ mod tests {
         let kv_budget_alone = RunConfig { kv_budget: Some(64), ..ok.clone() };
         let e = kv_budget_alone.validate(&p).unwrap_err().to_string();
         assert!(e.contains("--kv-cache"), "{e}");
+
+        // block tokens: >= 1, and only with the kv cache on
+        let zero_blocks =
+            RunConfig { kv_cache: true, kv_block_tokens: Some(0), ..ok.clone() };
+        let e = zero_blocks.validate(&p).unwrap_err().to_string();
+        assert!(e.contains(">= 1"), "{e}");
+        let blocks_alone = RunConfig { kv_block_tokens: Some(4), ..ok.clone() };
+        let e = blocks_alone.validate(&p).unwrap_err().to_string();
+        assert!(e.contains("--kv-cache"), "{e}");
+        let blocks_ok = RunConfig { kv_cache: true, kv_block_tokens: Some(4), ..ok.clone() };
+        assert!(blocks_ok.validate(&p).is_ok());
 
         let zero_agents = RunConfig { agents: 0, ..ok.clone() };
         assert!(zero_agents.validate(&p).unwrap_err().to_string().contains("agents"));

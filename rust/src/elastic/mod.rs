@@ -1,0 +1,324 @@
+//! Elastic memory controller: runtime budget adaptation under
+//! memory-pressure traces.
+//!
+//! Hermes plans for *a* memory constraint, but an edge device's available
+//! memory is not a constant: co-resident apps come and go, and the budget
+//! that held at session-open can be wrong ten tokens later.  TPI-LLM
+//! (arXiv:2410.00531) schedules inside a sliding memory window and
+//! EdgePipe (see PAPERS.md) re-partitions when device capacity changes;
+//! this module brings the same reactivity to the PIPELOAD stack:
+//!
+//! * a [`PressureTrace`] is a replayable sequence of budget steps
+//!   `(at_pass, budget)` — loaded from JSON (`--memory-trace <file>`) or
+//!   synthesized (`--memory-trace shrink-grow`).  `at_pass` counts
+//!   completed engine passes (each generated token is one pass), so a
+//!   trace is deterministic: the same trace + the same workload replays
+//!   the same pressure, which is what makes elastic runs testable against
+//!   static runs;
+//! * a [`BudgetController`] walks the trace between passes and reports
+//!   which budget should now be in force ([`BudgetController::poll`]);
+//! * the [`Session`](crate::engine::Session) (and, for multi-model
+//!   serving, the [`Router`](crate::server::Router) with its **shared**
+//!   accountant) applies each step: `MemoryAccountant::resize`, then the
+//!   existing eviction chain — pinned hot layers first, then cached KV
+//!   sequences, through `OrderedGate::reclaim_to_budget` — until
+//!   `used <= budget`; then re-derives the pin/KV caps under the
+//!   `budget - max_stage` liveness rule and re-consults
+//!   [`Schedule::pick`](crate::planner::Schedule::pick) for the Loading
+//!   Agent count (epoch re-planning).
+//!
+//! Correctness bar: tokens are bit-identical to a static-budget run.
+//! A shrink only evicts (and every eviction path already has a recompute
+//! fallback); a grow only widens headroom.  Each applied step is recorded
+//! as a [`BudgetEpoch`] so tests (and `examples/elastic_pressure.rs`) can
+//! assert that `used` settled under the instantaneous budget and that the
+//! plan actually adapted.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Spec string that synthesizes a trace instead of reading a file.
+pub const SHRINK_GROW_SPEC: &str = "shrink-grow";
+
+/// Synthesized shrink-grow shape: shrink to 60% of the base budget before
+/// pass [`SHRINK_AT_PASS`], restore the base before [`GROW_AT_PASS`].
+pub const SHRINK_FRACTION_PCT: u64 = 60;
+pub const SHRINK_AT_PASS: usize = 2;
+pub const GROW_AT_PASS: usize = 4;
+
+/// One budget change: from the moment `at_pass` passes have completed,
+/// `budget_bytes` is the device's memory constraint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PressureStep {
+    /// applies once this many engine passes have completed (0 = before the
+    /// first pass)
+    pub at_pass: usize,
+    /// the new memory budget in bytes (> 0)
+    pub budget_bytes: u64,
+}
+
+/// A replayable memory-pressure trace: budget steps ordered by `at_pass`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PressureTrace {
+    steps: Vec<PressureStep>,
+}
+
+impl PressureTrace {
+    /// Build a trace; steps are sorted by `at_pass` (ties keep insertion
+    /// order — the later entry wins when applied, like a real fluctuation
+    /// that settles).  Zero budgets are rejected: a device with 0 bytes
+    /// free is not a constraint to adapt to, it is an OOM kill.
+    pub fn new(steps: Vec<PressureStep>) -> Result<PressureTrace> {
+        for s in &steps {
+            if s.budget_bytes == 0 {
+                bail!("pressure step at pass {} has a 0 B budget", s.at_pass);
+            }
+        }
+        let mut steps = steps;
+        steps.sort_by_key(|s| s.at_pass);
+        Ok(PressureTrace { steps })
+    }
+
+    /// The canonical synthetic trace: shrink to [`SHRINK_FRACTION_PCT`]%
+    /// of `base_budget` once [`SHRINK_AT_PASS`] passes have completed, and
+    /// grow back to `base_budget` once [`GROW_AT_PASS`] passes have.
+    pub fn shrink_grow(base_budget: u64) -> PressureTrace {
+        let shrunk = (base_budget * SHRINK_FRACTION_PCT / 100).max(1);
+        PressureTrace {
+            steps: vec![
+                PressureStep { at_pass: SHRINK_AT_PASS, budget_bytes: shrunk },
+                PressureStep { at_pass: GROW_AT_PASS, budget_bytes: base_budget },
+            ],
+        }
+    }
+
+    /// Resolve a `--memory-trace` spec: the literal `shrink-grow` (scaled
+    /// from `base_budget`, which must then be set) or a JSON file path.
+    pub fn from_spec(spec: &str, base_budget: Option<u64>) -> Result<PressureTrace> {
+        if spec == SHRINK_GROW_SPEC {
+            let base = base_budget.ok_or_else(|| {
+                anyhow!("--memory-trace shrink-grow needs a base budget (--budget-mb)")
+            })?;
+            return Ok(PressureTrace::shrink_grow(base));
+        }
+        PressureTrace::load(Path::new(spec))
+    }
+
+    pub fn load(path: &Path) -> Result<PressureTrace> {
+        PressureTrace::from_json(&Value::from_file(path)?)
+            .with_context(|| format!("parsing memory trace {}", path.display()))
+    }
+
+    /// Accepts `{"steps": [{"at_pass": N, "budget_mb": X}, ...]}` or the
+    /// bare array.  Budgets are megabytes (fractions allowed), matching
+    /// the CLI's `--budget-mb` convention.
+    pub fn from_json(v: &Value) -> Result<PressureTrace> {
+        let arr = match v.get("steps") {
+            Some(steps) => steps.as_arr()?,
+            None => v.as_arr()?,
+        };
+        let steps = arr
+            .iter()
+            .map(|e| {
+                let mb = e.req("budget_mb")?.as_f64()?;
+                if !mb.is_finite() || mb <= 0.0 {
+                    bail!("budget_mb must be a positive number, got {mb}");
+                }
+                Ok(PressureStep {
+                    at_pass: e.req("at_pass")?.as_usize()?,
+                    budget_bytes: (mb * 1024.0 * 1024.0) as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        PressureTrace::new(steps)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj().set(
+            "steps",
+            Value::Arr(
+                self.steps
+                    .iter()
+                    .map(|s| {
+                        Value::obj()
+                            .set("at_pass", s.at_pass)
+                            .set("budget_mb", s.budget_bytes as f64 / (1024.0 * 1024.0))
+                    })
+                    .collect(),
+            ),
+        )
+    }
+
+    pub fn steps(&self) -> &[PressureStep] {
+        &self.steps
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+}
+
+/// Walks a [`PressureTrace`] as passes complete.  One controller drives
+/// one accountant — a session's own, or the router's shared one.
+#[derive(Debug, Clone)]
+pub struct BudgetController {
+    trace: PressureTrace,
+    next: usize,
+}
+
+impl BudgetController {
+    pub fn new(trace: PressureTrace) -> BudgetController {
+        BudgetController { trace, next: 0 }
+    }
+
+    /// Consume every step due once `passes_done` passes have completed and
+    /// return the last of them (the budget now in force), or `None` when
+    /// no step is due.  Intermediate due steps are skipped, not applied —
+    /// a fluctuation that came and went between two pass boundaries only
+    /// ever lands at its settled value.
+    pub fn poll(&mut self, passes_done: usize) -> Option<PressureStep> {
+        let mut due = None;
+        while self.next < self.trace.steps.len()
+            && self.trace.steps[self.next].at_pass <= passes_done
+        {
+            due = Some(self.trace.steps[self.next]);
+            self.next += 1;
+        }
+        due
+    }
+
+    /// Steps not yet consumed by [`BudgetController::poll`].
+    pub fn remaining(&self) -> usize {
+        self.trace.steps.len() - self.next
+    }
+
+    pub fn trace(&self) -> &PressureTrace {
+        &self.trace
+    }
+}
+
+/// Record of one applied budget step (the session keeps a log of these;
+/// see [`Session::budget_epochs`](crate::engine::Session::budget_epochs)).
+#[derive(Debug, Clone)]
+pub struct BudgetEpoch {
+    /// passes completed BY THE APPLYING SESSION when the step was applied.
+    /// Under a Router this is lane-local and may differ from the trace's
+    /// `at_pass`, which counts passes fleet-wide.
+    pub at_pass: usize,
+    /// the budget now in force (a step below the session's feasibility
+    /// floor is clamped up to it — see `Session::budget_floor`)
+    pub budget_bytes: u64,
+    /// bytes the apply returned to the budget while settling — under a
+    /// shared accountant this can include victim lanes' reclaimed state
+    pub freed_bytes: u64,
+    /// the session's OWN pinned layers + KV blocks reclaimed while
+    /// settling (victim lanes' losses are attributed to the victims)
+    pub evictions: u64,
+    /// accountant `used` after the eviction chain settled — the elastic
+    /// invariant is `used_after_bytes <= budget_bytes` whenever everything
+    /// over budget was evictable (pins/KV; in-flight weights are not)
+    pub used_after_bytes: u64,
+    /// Loading Agents in force after epoch re-planning
+    pub agents: usize,
+    /// hot-layer pin cap after the `budget - max_stage` re-derivation
+    pub pin_cap_bytes: u64,
+    /// KV pool cap after rebalancing (None = accountant-bounded only)
+    pub kv_cap_bytes: Option<u64>,
+    /// did `Schedule::pick` change the agent count this epoch?
+    pub replanned: bool,
+}
+
+/// Elastic counters surfaced in `RunReport` / `ServeSummary` /
+/// `RouterSummary` / `serve --json`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ElasticStats {
+    /// budget steps applied
+    pub budget_steps: u64,
+    /// own pinned layers + KV blocks evicted by elastic shrinks (distinct
+    /// from `S^stop` admission pressure, which counts elsewhere)
+    pub elastic_evictions: u64,
+    /// epoch re-plans that changed the Loading Agent count
+    pub replans: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shrink_grow_shape() {
+        let t = PressureTrace::shrink_grow(1000);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.steps()[0], PressureStep { at_pass: SHRINK_AT_PASS, budget_bytes: 600 });
+        assert_eq!(t.steps()[1], PressureStep { at_pass: GROW_AT_PASS, budget_bytes: 1000 });
+    }
+
+    #[test]
+    fn from_spec_requires_base_for_shrink_grow() {
+        assert!(PressureTrace::from_spec(SHRINK_GROW_SPEC, None).is_err());
+        let t = PressureTrace::from_spec(SHRINK_GROW_SPEC, Some(1 << 20)).unwrap();
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip_and_bare_array() {
+        let t = PressureTrace::new(vec![
+            PressureStep { at_pass: 3, budget_bytes: 2 * 1024 * 1024 },
+            PressureStep { at_pass: 1, budget_bytes: 512 * 1024 },
+        ])
+        .unwrap();
+        // sorted by at_pass
+        assert_eq!(t.steps()[0].at_pass, 1);
+        let rt = PressureTrace::from_json(&t.to_json()).unwrap();
+        assert_eq!(rt, t);
+        // bare-array form parses too
+        let bare = Value::parse(r#"[{"at_pass": 0, "budget_mb": 1.5}]"#).unwrap();
+        let t2 = PressureTrace::from_json(&bare).unwrap();
+        assert_eq!(t2.steps()[0].budget_bytes, 1536 * 1024);
+    }
+
+    #[test]
+    fn json_rejects_nonpositive_budgets() {
+        let bad = Value::parse(r#"[{"at_pass": 0, "budget_mb": 0}]"#).unwrap();
+        assert!(PressureTrace::from_json(&bad).is_err());
+        let neg = Value::parse(r#"[{"at_pass": 0, "budget_mb": -2}]"#).unwrap();
+        assert!(PressureTrace::from_json(&neg).is_err());
+    }
+
+    #[test]
+    fn controller_applies_steps_in_order_last_wins() {
+        let t = PressureTrace::new(vec![
+            PressureStep { at_pass: 0, budget_bytes: 100 },
+            PressureStep { at_pass: 2, budget_bytes: 60 },
+            PressureStep { at_pass: 2, budget_bytes: 50 },
+            PressureStep { at_pass: 5, budget_bytes: 100 },
+        ])
+        .unwrap();
+        let mut c = BudgetController::new(t);
+        assert_eq!(c.remaining(), 4);
+        // pass 0 boundary: only the first step is due
+        assert_eq!(c.poll(0).unwrap().budget_bytes, 100);
+        assert_eq!(c.poll(1), None, "no step between 1 and 2");
+        // both at_pass=2 steps are due; the settled (last) value wins
+        assert_eq!(c.poll(2).unwrap().budget_bytes, 50);
+        assert_eq!(c.poll(3), None);
+        // jumping past the end consumes the tail
+        assert_eq!(c.poll(10).unwrap().budget_bytes, 100);
+        assert_eq!(c.remaining(), 0);
+        assert_eq!(c.poll(11), None);
+    }
+
+    #[test]
+    fn empty_trace_never_fires() {
+        let mut c = BudgetController::new(PressureTrace::default());
+        assert_eq!(c.poll(0), None);
+        assert_eq!(c.remaining(), 0);
+    }
+}

@@ -28,6 +28,20 @@
 //! in the admission order are not evictable, so at least one unpinned
 //! stage must always fit beside them (liveness; see `pipeload::gate`).
 //!
+//! # Elastic budgets
+//!
+//! A session opened with a memory-pressure trace
+//! ([`SessionBuilder::memory_trace`], `--memory-trace`) re-reads its
+//! budget between passes: each due [`crate::elastic::PressureStep`]
+//! resizes the accountant, drives the eviction chain (pins, then KV
+//! sequences) until `used` fits again, re-derives the pin/KV caps under
+//! the `budget - max_stage` liveness rule, and — when a planner
+//! [`Schedule`] is attached ([`SessionBuilder::schedule`]) — re-consults
+//! [`Schedule::pick`] for the Loading Agent count (epoch re-planning).
+//! Tokens stay bit-identical to a static-budget run: a shrink only evicts
+//! state that every consumer can rebuild (pins reload, KV recomputes),
+//! and a grow only widens headroom.
+//!
 //! # Shared accountants (multi-model serving)
 //!
 //! By default a session creates its own [`MemoryAccountant`] from
@@ -53,7 +67,8 @@ use crate::baseline;
 use crate::baseline::ResidentModel;
 use crate::config::{Mode, RunConfig};
 use crate::diskio::Disk;
-use crate::kvcache::{KvPool, KvPoolStats, KvSeq};
+use crate::elastic::{BudgetController, BudgetEpoch, ElasticStats, PressureTrace};
+use crate::kvcache::{KvPool, KvPoolStats, KvSeq, DEFAULT_BLOCK_TOKENS};
 use crate::memory::MemoryAccountant;
 use crate::metrics::RunReport;
 use crate::model::Profile;
@@ -64,6 +79,7 @@ use crate::pipeload::{
     run_pass_mode, ExecCtx, ModelInput, PassEnv, PassMode, PassStats, PipelineOpts,
     KV_EVICTED_MIDPASS,
 };
+use crate::planner::Schedule;
 use crate::trace::Tracer;
 
 /// Long-lived pipeline state for one (profile, mode, budget) configuration.
@@ -98,6 +114,14 @@ pub struct Session<'e> {
     /// decode tokens that fell back to full-prefix recompute after the
     /// cache was primed (eviction or exhausted KV budget)
     kv_recompute_total: u64,
+    /// planner schedule consulted on elastic budget steps (epoch
+    /// re-planning: the agent count follows the current constraint)
+    schedule: Option<Schedule>,
+    /// elastic controller walking a memory-pressure trace between passes
+    elastic: Option<BudgetController>,
+    /// one record per applied budget step
+    epochs: Vec<BudgetEpoch>,
+    elastic_totals: ElasticStats,
 }
 
 /// Options for opening a [`Session`] — sugar methods on [`Engine`] cover
@@ -113,6 +137,8 @@ pub struct SessionBuilder<'e> {
     cfg: RunConfig,
     tracer: Tracer,
     accountant: Option<MemoryAccountant>,
+    schedule: Option<Schedule>,
+    memory_trace: Option<PressureTrace>,
 }
 
 impl<'e> SessionBuilder<'e> {
@@ -120,6 +146,24 @@ impl<'e> SessionBuilder<'e> {
     /// caller can render Gantt charts / stall stats afterwards.
     pub fn tracer(mut self, tracer: &Tracer) -> SessionBuilder<'e> {
         self.tracer = tracer.clone();
+        self
+    }
+
+    /// Consult this planner schedule on every elastic budget step (epoch
+    /// re-planning): `Schedule::pick(new_budget)` decides the Loading
+    /// Agent count for the epoch.  Without a schedule, budget steps still
+    /// resize/reclaim/re-cap but never change the agent count.
+    pub fn schedule(mut self, schedule: Schedule) -> SessionBuilder<'e> {
+        self.schedule = Some(schedule);
+        self
+    }
+
+    /// React to this memory-pressure trace: between passes the session
+    /// applies every due budget step (see [`crate::elastic`]).  Only
+    /// meaningful for sessions that own their accountant — shared-budget
+    /// fleets are resized by the [`crate::server::Router`] instead.
+    pub fn memory_trace(mut self, trace: PressureTrace) -> SessionBuilder<'e> {
+        self.memory_trace = Some(trace);
         self
     }
 
@@ -133,7 +177,11 @@ impl<'e> SessionBuilder<'e> {
     }
 
     pub fn open(self) -> Result<Session<'e>> {
-        Session::open(self.engine, &self.cfg, &self.tracer, self.accountant)
+        let mut session =
+            Session::open(self.engine, &self.cfg, &self.tracer, self.accountant)?;
+        session.schedule = self.schedule;
+        session.elastic = self.memory_trace.map(BudgetController::new);
+        Ok(session)
     }
 }
 
@@ -145,6 +193,8 @@ impl Engine {
             cfg: cfg.clone(),
             tracer: Tracer::new(cfg.trace),
             accountant: None,
+            schedule: None,
+            memory_trace: None,
         }
     }
 
@@ -235,6 +285,10 @@ impl<'e> Session<'e> {
             passes_run: 0,
             kv_inc_total: 0,
             kv_recompute_total: 0,
+            schedule: None,
+            elastic: None,
+            epochs: Vec::new(),
+            elastic_totals: ElasticStats::default(),
         })
     }
 
@@ -254,27 +308,28 @@ impl<'e> Session<'e> {
         if !profile.entries.keys().any(|k| k.starts_with(&body_inc)) {
             return None;
         }
-        Some(KvPool::new(accountant.clone(), cfg.kv_budget))
+        Some(KvPool::with_block_tokens(
+            accountant.clone(),
+            cfg.kv_budget,
+            cfg.kv_block_tokens.unwrap_or(DEFAULT_BLOCK_TOKENS),
+        ))
     }
 
     /// Hot-layer cache sizing.  Only PIPELOAD destroys layers, so only it
     /// can pin; the pin budget is clipped below `budget - max_stage` so an
     /// unpinned admission always fits beside in-flight pinned stages.
+    /// The cache is built whenever a pin budget was *asked for* — even if
+    /// the current clip leaves it at 0 bytes — so an elastic budget grow
+    /// can re-raise the cap on a live session.
     fn build_cache(cfg: &RunConfig, profile: &Profile, budget: Option<u64>) -> Option<LayerCache> {
-        if cfg.mode != Mode::PipeLoad {
+        if cfg.mode != Mode::PipeLoad || cfg.pin_budget.unwrap_or(0) == 0 {
             return None;
         }
         let mut pin = cfg.pin_budget.unwrap_or(0);
         if let Some(budget) = budget {
-            let max_stage =
-                profile.stages.iter().map(|s| profile.stage_bytes(s)).max().unwrap_or(0);
-            pin = pin.min(budget.saturating_sub(max_stage));
+            pin = pin.min(budget.saturating_sub(profile.max_stage_bytes()));
         }
-        if pin == 0 {
-            None
-        } else {
-            Some(LayerCache::with_policy(pin, cfg.pin_policy))
-        }
+        Some(LayerCache::with_policy(pin, cfg.pin_policy))
     }
 
     pub fn profile(&self) -> &Profile {
@@ -353,6 +408,178 @@ impl<'e> Session<'e> {
         self.gate.add_kv_pool(pool);
     }
 
+    /// Attach a planner schedule after opening (see
+    /// [`SessionBuilder::schedule`]).
+    pub fn set_schedule(&mut self, schedule: Schedule) {
+        self.schedule = Some(schedule);
+    }
+
+    /// Attach a memory-pressure trace after opening (see
+    /// [`SessionBuilder::memory_trace`]).  Replaces any earlier trace;
+    /// already-applied steps are not revisited.
+    pub fn set_memory_trace(&mut self, trace: PressureTrace) {
+        self.elastic = Some(BudgetController::new(trace));
+    }
+
+    /// Loading Agents currently in force (1 outside PIPELOAD).  Changes
+    /// when an elastic budget step re-plans against the schedule.
+    pub fn current_agents(&self) -> usize {
+        self.opts.as_ref().map(|o| o.agents.max(1)).unwrap_or(1)
+    }
+
+    /// One record per applied elastic budget step, in application order.
+    pub fn budget_epochs(&self) -> &[BudgetEpoch] {
+        &self.epochs
+    }
+
+    /// Cumulative elastic counters across this session's lifetime.
+    pub fn elastic_stats(&self) -> ElasticStats {
+        self.elastic_totals
+    }
+
+    /// Cumulative own-state eviction count (pinned layers + KV blocks over
+    /// this session's lifetime, from any pressure source) — the base the
+    /// Router reconciles cross-lane elastic attribution from.
+    pub fn own_eviction_count(&self) -> u64 {
+        self.cache.as_ref().map(|c| c.stats().evictions).unwrap_or(0)
+            + self.kv_pool.as_ref().map(|p| p.stats().evicted_blocks).unwrap_or(0)
+    }
+
+    /// Credit elastic evictions observed OUTSIDE this session's own apply
+    /// window: while a shared budget step settles, another lane's reclaim
+    /// chain may take this session's pins/KV, and only the Router can see
+    /// whose state went where.  (The corresponding [`BudgetEpoch`] keeps
+    /// its in-window count; only the cumulative totals are corrected.)
+    pub fn note_elastic_evictions(&mut self, n: u64) {
+        self.elastic_totals.elastic_evictions += n;
+    }
+
+    /// Pin cap under the current constraint: the configured pin budget,
+    /// clipped below `budget - max_stage` so a stalled admission can
+    /// always make progress (the same liveness rule `Session::open`
+    /// derives the cap from).
+    fn pin_cap_for(&self, budget: u64) -> u64 {
+        self.cfg
+            .pin_budget
+            .unwrap_or(0)
+            .min(budget.saturating_sub(self.ctx.profile.max_stage_bytes()))
+    }
+
+    /// Smallest budget an elastic step may shrink this session to without
+    /// wedging it: PIPELOAD must still admit its largest stage (the gate
+    /// rejects any admission bigger than the whole budget), and the
+    /// resident modes must keep the whole model.  Steps below the floor
+    /// are clamped up — a device under that much real pressure has
+    /// OOM-killed the process, not asked it to adapt.
+    pub fn budget_floor(&self) -> u64 {
+        match self.cfg.mode {
+            Mode::PipeLoad => self.ctx.profile.max_stage_bytes(),
+            Mode::Baseline | Mode::PipeSwitch => self.ctx.profile.total_weight_bytes,
+        }
+    }
+
+    /// Apply a new memory budget to this session (an elastic step): resize
+    /// the accountant (owned sessions only — a shared accountant is
+    /// resized once by its [`crate::server::Router`]), drive the eviction
+    /// chain until `used` fits again, re-derive the pin/KV caps, and
+    /// re-plan the agent count against the schedule, if one is attached.
+    /// Returns the recorded epoch.
+    pub fn apply_budget(&mut self, new_budget: u64) -> &BudgetEpoch {
+        let new_budget = new_budget.max(self.budget_floor());
+        let pin_cap = self.pin_cap_for(new_budget);
+        // the lane's KV allocation never grows past what was configured,
+        // and shrinks so pins + KV still fit the new budget jointly (the
+        // `pin + kv <= budget` validation rule, re-derived)
+        let kv_cap = self
+            .cfg
+            .kv_budget
+            .map(|orig| orig.min(new_budget.saturating_sub(pin_cap)));
+        self.apply_budget_with_kv(new_budget, kv_cap)
+    }
+
+    /// [`Session::apply_budget`] with the KV pool cap dictated by the
+    /// caller — the Router's rebalanced per-lane share of the global KV
+    /// allocation.  `None` leaves the pool bounded by the accountant only.
+    pub fn apply_budget_with_kv(
+        &mut self,
+        new_budget: u64,
+        kv_cap: Option<u64>,
+    ) -> &BudgetEpoch {
+        // feasibility clamp (see [`Session::budget_floor`]): a step below
+        // the floor would bail the next admission (PIPELOAD) or hang the
+        // resident load, neither of which is "adapting"
+        let new_budget = new_budget.max(self.budget_floor());
+        if self.owns_accountant {
+            self.accountant.resize(Some(new_budget));
+        }
+        // Eviction ATTRIBUTION is own-state only: the gate chain may also
+        // reclaim victim lanes' pins/KV under a shared accountant, but
+        // charging them here would make per-model `elastic_evictions`
+        // blame the wrong lane — the Router reconciles those onto the
+        // victims after the step ([`Session::note_elastic_evictions`]).
+        // `freed` stays the total bytes this apply returned to the budget,
+        // victim state included.
+        let ev0 = self.own_eviction_count();
+        let mut freed = 0u64;
+        // caps first: a shrunk cap evicts its own overflow, then the gate
+        // chain settles whatever is still over the accountant budget
+        let pin_cap = self.pin_cap_for(new_budget);
+        if let Some(cache) = &self.cache {
+            freed += cache.set_pin_budget(pin_cap, &self.accountant);
+        }
+        if let Some(pool) = &self.kv_pool {
+            freed += pool.set_kv_budget(kv_cap);
+        }
+        let (gate_freed, _chain_evictions) = self.gate.reclaim_to_budget();
+        freed += gate_freed;
+        let evictions = self.own_eviction_count() - ev0;
+
+        // epoch re-planning: the schedule knows the best agent count for
+        // the new constraint (paper Fig. 6c, consulted per epoch now)
+        let mut replanned = false;
+        if self.cfg.mode == Mode::PipeLoad {
+            if let (Some(sched), Some(opts)) = (&self.schedule, self.opts.as_mut()) {
+                if let Some(entry) = sched.pick(new_budget) {
+                    let agents = entry.agents.max(1);
+                    if agents != opts.agents {
+                        opts.agents = agents;
+                        self.plan = assignment(self.ctx.profile.stages.len(), agents);
+                        replanned = true;
+                    }
+                }
+            }
+        }
+
+        // each epoch measures its own peaks against its own budget
+        self.accountant.reset_peak_to_used();
+        self.elastic_totals.budget_steps += 1;
+        self.elastic_totals.elastic_evictions += evictions;
+        if replanned {
+            self.elastic_totals.replans += 1;
+        }
+        self.epochs.push(BudgetEpoch {
+            at_pass: self.passes_run,
+            budget_bytes: new_budget,
+            freed_bytes: freed,
+            evictions,
+            used_after_bytes: self.accountant.used(),
+            agents: self.current_agents(),
+            pin_cap_bytes: self.cache.as_ref().map(|c| c.pin_budget()).unwrap_or(0),
+            kv_cap_bytes: self.kv_pool.as_ref().and_then(|p| p.kv_budget()),
+            replanned,
+        });
+        self.epochs.last().unwrap()
+    }
+
+    /// Pass-boundary hook: apply every trace step due at the current pass
+    /// count.  Decode loops call this before each token's pass, so a
+    /// budget step lands between passes — never mid-admission.
+    fn poll_elastic(&mut self) {
+        let Some(ctrl) = self.elastic.as_mut() else { return };
+        let Some(step) = ctrl.poll(self.passes_run) else { return };
+        self.apply_budget(step.budget_bytes);
+    }
+
     /// Run one request with the session's configured batch and seed.
     pub fn run(&mut self) -> Result<(RunReport, RunOutput)> {
         let (batch, seed) = (self.cfg.batch, self.cfg.seed);
@@ -389,8 +616,10 @@ impl<'e> Session<'e> {
         let mut kv_inc = 0u64;
         let mut kv_rec = 0u64;
         let kv_evicted0 = self.kv_pool_stats().evicted_blocks;
+        let elastic0 = self.elastic_totals;
 
         if !profile.is_generative() {
+            self.poll_elastic();
             let (out, stats) = if self.opts.is_none() {
                 self.baseline_forward(&input)?
             } else {
@@ -412,6 +641,8 @@ impl<'e> Session<'e> {
             let mut cur_len = prompt_len;
 
             for step in 0..gen_tokens {
+                // elastic budget steps land here, between token passes
+                self.poll_elastic();
                 // Incremental when the cached prefix lines up exactly with
                 // the ids (tokens == cur_len - 1: everything but the token
                 // appended after the previous pass) and one more block row
@@ -521,7 +752,9 @@ impl<'e> Session<'e> {
         let report = RunReport {
             model: self.cfg.profile.clone(),
             mode: self.cfg.mode.name().to_string(),
-            agents: if self.cfg.mode == Mode::PipeLoad { self.cfg.agents } else { 1 },
+            // the agents in force NOW — an elastic re-plan may have moved
+            // this away from the configured count
+            agents: if self.cfg.mode == Mode::PipeLoad { self.current_agents() } else { 1 },
             latency_ms,
             peak_bytes: passes.iter().map(|p| p.peak_bytes).max().unwrap_or(0),
             mem_stall_ms: passes.iter().map(|p| p.mem_stall_ms).sum(),
@@ -533,6 +766,10 @@ impl<'e> Session<'e> {
             kv_inc_passes: kv_inc,
             kv_recomputes: kv_rec,
             kv_evicted_blocks: self.kv_pool_stats().evicted_blocks - kv_evicted0,
+            budget_steps: self.elastic_totals.budget_steps - elastic0.budget_steps,
+            elastic_evictions: self.elastic_totals.elastic_evictions
+                - elastic0.elastic_evictions,
+            replans: self.elastic_totals.replans - elastic0.replans,
         };
         head.truncate(16);
         Ok((report, RunOutput { generated, generated_rows, head_sample: head }))

@@ -99,6 +99,10 @@ struct PoolState {
     blocks: u64,
     allocated_blocks: u64,
     evicted_blocks: u64,
+    /// pool-level byte cap (the lane's KV allocation); `None` = only the
+    /// accountant's budget constrains the pool.  Mutable at run time —
+    /// elastic budget steps rebalance it via [`KvPool::set_kv_budget`].
+    kv_budget: Option<u64>,
 }
 
 impl PoolState {
@@ -122,9 +126,6 @@ impl PoolState {
 #[derive(Debug, Clone)]
 pub struct KvPool {
     accountant: MemoryAccountant,
-    /// pool-level byte cap (the lane's KV allocation); `None` = only the
-    /// accountant's budget constrains the pool
-    kv_budget: Option<u64>,
     block_tokens: usize,
     inner: Arc<Mutex<PoolState>>,
 }
@@ -141,9 +142,8 @@ impl KvPool {
     ) -> KvPool {
         KvPool {
             accountant,
-            kv_budget,
             block_tokens: block_tokens.max(1),
-            inner: Arc::new(Mutex::new(PoolState::default())),
+            inner: Arc::new(Mutex::new(PoolState { kv_budget, ..PoolState::default() })),
         }
     }
 
@@ -152,7 +152,43 @@ impl KvPool {
     }
 
     pub fn kv_budget(&self) -> Option<u64> {
-        self.kv_budget
+        self.inner.lock().unwrap().kv_budget
+    }
+
+    /// Retarget the pool cap (elastic budget step).  Shrinking below the
+    /// currently held bytes evicts whole sequences LRU-first until the pool
+    /// fits the new cap (their owners fall back to full-prefix recompute —
+    /// degraded, never wrong); growing widens future reserve headroom.
+    /// Returns bytes freed.
+    pub fn set_kv_budget(&self, new_budget: Option<u64>) -> u64 {
+        let mut freed = 0u64;
+        loop {
+            let victim = {
+                let mut s = self.inner.lock().unwrap();
+                s.kv_budget = new_budget;
+                let Some(cap) = new_budget else { return freed };
+                if s.used <= cap {
+                    return freed;
+                }
+                s.seqs
+                    .iter()
+                    .filter(|(_, q)| q.valid && q.bytes > 0)
+                    .min_by_key(|(_, q)| q.last_use)
+                    .map(|(id, _)| *id)
+            };
+            let Some(vid) = victim else { return freed };
+            let mut s = self.inner.lock().unwrap();
+            let Some(seq) = s.seqs.get_mut(&vid) else { continue };
+            let (b, blocks) = PoolState::strip(seq);
+            s.used -= b;
+            s.blocks -= blocks;
+            s.evicted_blocks += blocks;
+            drop(s);
+            if b > 0 {
+                self.accountant.free(b);
+            }
+            freed += b;
+        }
     }
 
     /// Bytes of one block: `block_tokens` positions of K **and** V for one
@@ -209,7 +245,7 @@ impl KvPool {
             let need_blocks = (new_capacity - seq.capacity) / self.block_tokens * seq.layers();
             let per_block = self.block_bytes(seq.batch, seq.hidden);
             let want = need_blocks as u64 * per_block;
-            if let Some(cap) = self.kv_budget {
+            if let Some(cap) = s.kv_budget {
                 if s.used + want > cap {
                     return false;
                 }
@@ -592,6 +628,30 @@ mod tests {
         assert!(!a_seq.valid(), "LRU sequence evicted to make room");
         assert!(b_seq.valid());
         assert_eq!(a.used(), 512);
+    }
+
+    #[test]
+    fn set_kv_budget_shrink_evicts_lru_sequences() {
+        let (p, a) = pool(None, None);
+        let old = p.open_seq(1, 1, 8); // block = 256 B
+        let newer = p.open_seq(1, 1, 8);
+        assert!(old.reserve(4));
+        assert!(newer.reserve(4));
+        assert_eq!(p.used_bytes(), 512);
+        // cap 256: LRU sequence evicted, newer survives intact
+        let freed = p.set_kv_budget(Some(256));
+        assert_eq!(freed, 256);
+        assert_eq!(p.kv_budget(), Some(256));
+        assert!(!old.valid());
+        assert!(newer.valid());
+        assert_eq!(a.used(), 256);
+        assert_eq!(p.stats().evicted_blocks, 1);
+        // the new cap is live: the survivor cannot grow past it
+        assert!(!newer.reserve(5));
+        // grow re-opens headroom without touching anything
+        assert_eq!(p.set_kv_budget(Some(1024)), 0);
+        assert!(newer.reserve(5));
+        assert_eq!(p.used_bytes(), 512);
     }
 
     #[test]

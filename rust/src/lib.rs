@@ -20,6 +20,7 @@
 pub mod baseline;
 pub mod config;
 pub mod diskio;
+pub mod elastic;
 pub mod engine;
 pub mod kvcache;
 pub mod memory;

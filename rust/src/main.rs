@@ -13,6 +13,7 @@
 use anyhow::{bail, Result};
 
 use hermes::config::{Mode, PinPolicy, RunConfig};
+use hermes::elastic::PressureTrace;
 use hermes::engine::Engine;
 use hermes::planner;
 use hermes::report;
@@ -210,10 +211,12 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "pin-policy", takes_value: true, default: Some("fifo"), help: "hot-layer pin policy: fifo (compute order) | cost (keep layers by reload-cost per byte)" });
     opts.push(Opt { name: "kv-cache", takes_value: false, default: None, help: "paged KV cache: decode runs 1 full-prefix pass + incremental single-token passes (GPT-style profiles)" });
     opts.push(Opt { name: "kv-budget-mb", takes_value: true, default: None, help: "KV pool cap in MB (with --kv-cache; pin + kv must fit --budget-mb)" });
+    opts.push(Opt { name: "kv-block-tokens", takes_value: true, default: None, help: "KV pool allocation granularity in tokens per block (with --kv-cache; >= 1)" });
     opts.push(Opt { name: "batch", takes_value: true, default: Some("1"), help: "batch size (must be AOT-compiled)" });
     opts.push(Opt { name: "tokens", takes_value: true, default: None, help: "generated tokens (generative models)" });
     opts.push(Opt { name: "trace", takes_value: false, default: None, help: "print the execution Gantt chart" });
-    opts.push(Opt { name: "schedule", takes_value: true, default: None, help: "pick #LAs from a planner schedule JSON given --budget-mb" });
+    opts.push(Opt { name: "schedule", takes_value: true, default: None, help: "pick #LAs from a planner schedule JSON given --budget-mb (with --memory-trace, re-consulted on every budget step)" });
+    opts.push(Opt { name: "memory-trace", takes_value: true, default: None, help: "elastic budget: JSON steps file {\"steps\":[{\"at_pass\":N,\"budget_mb\":X},...]}, or 'shrink-grow' to synthesize one from --budget-mb" });
     let a = Args::parse(rest, &opts)?;
     if a.flag("help") {
         println!("{}", render_help("run", "Execution Engine", &opts));
@@ -223,6 +226,7 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     let budget = a.mb_bytes("budget-mb")?;
     let pin_budget = a.mb_bytes("pin-budget-mb")?;
     let mut agents = a.usize("agents")?;
+    let mut schedule: Option<planner::Schedule> = None;
     if let Some(path) = a.get("schedule") {
         let sched = planner::Schedule::load(std::path::Path::new(path))?;
         let b = budget.ok_or_else(|| anyhow::anyhow!("--schedule needs --budget-mb"))?;
@@ -231,7 +235,10 @@ fn cmd_run(rest: &[String]) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("no schedule entry fits budget"))?;
         agents = entry.agents;
         println!("schedule picked {} LAs for budget {}", agents, human_bytes(b));
+        schedule = Some(sched);
     }
+    let memory_trace =
+        a.get("memory-trace").map(|spec| PressureTrace::from_spec(spec, budget)).transpose()?;
     let cfg = RunConfig {
         profile: a.req("model")?.to_string(),
         mode: Mode::parse(a.req("mode")?)?,
@@ -246,9 +253,18 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         gen_tokens: a.get("tokens").map(|s| s.parse()).transpose()?,
         kv_cache: a.flag("kv-cache"),
         kv_budget: a.mb_bytes("kv-budget-mb")?,
+        kv_block_tokens: a.get("kv-block-tokens").map(|s| s.parse()).transpose()?,
     };
     let tracer = Tracer::new(cfg.trace);
-    let (rep, out) = engine.run_with(&cfg, &tracer)?;
+    let mut builder = engine.session(&cfg).tracer(&tracer);
+    if let Some(t) = memory_trace {
+        builder = builder.memory_trace(t);
+    }
+    if let Some(s) = schedule {
+        builder = builder.schedule(s);
+    }
+    let mut session = builder.open()?;
+    let (rep, out) = session.run()?;
     println!("model={} mode={} agents={}", rep.model, rep.mode, rep.agents);
     println!("  latency:    {}", human_ms(rep.latency_ms));
     println!("  peak mem:   {}", human_bytes(rep.peak_bytes));
@@ -266,6 +282,23 @@ fn cmd_run(rest: &[String]) -> Result<()> {
             "  kv cache:   {} incremental passes / {} full recomputes ({} blocks evicted)",
             rep.kv_inc_passes, rep.kv_recomputes, rep.kv_evicted_blocks
         );
+    }
+    if rep.budget_steps > 0 {
+        println!(
+            "  elastic:    {} budget steps, {} evictions, {} re-plans",
+            rep.budget_steps, rep.elastic_evictions, rep.replans
+        );
+        for ep in session.budget_epochs() {
+            println!(
+                "    pass {:>3}: budget {:>10} -> used {:>10}  ({} agents, pin cap {}{})",
+                ep.at_pass,
+                human_bytes(ep.budget_bytes),
+                human_bytes(ep.used_after_bytes),
+                ep.agents,
+                human_bytes(ep.pin_cap_bytes),
+                if ep.replanned { ", re-planned" } else { "" },
+            );
+        }
     }
     if rep.tokens > 0 {
         println!("  generated {} tokens: {:?}", rep.tokens, out.generated);
@@ -294,7 +327,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "pin-budget-mb", takes_value: true, default: None, help: "hot-layer cache pin budget in MB (pipeload)" });
     opts.push(Opt { name: "pin-policy", takes_value: true, default: Some("fifo"), help: "hot-layer pin policy: fifo | cost" });
     opts.push(Opt { name: "kv-cache", takes_value: false, default: None, help: "paged KV cache for generative lanes (incremental decode)" });
-    opts.push(Opt { name: "kv-budget-mb", takes_value: true, default: None, help: "global KV allocation in MB, split across --kv-cache lanes" });
+    opts.push(Opt { name: "kv-budget-mb", takes_value: true, default: None, help: "global KV allocation in MB, split across --kv-cache lanes (remainder to the first lane)" });
+    opts.push(Opt { name: "kv-block-tokens", takes_value: true, default: None, help: "KV pool allocation granularity in tokens per block (with --kv-cache; >= 1)" });
+    opts.push(Opt { name: "memory-trace", takes_value: true, default: None, help: "elastic budget for the SHARED accountant: JSON steps file, or 'shrink-grow' from --budget-mb (at_pass counts passes across all lanes)" });
     opts.push(Opt { name: "requests", takes_value: true, default: Some("16"), help: "requests to serve (synthetic workload mode)" });
     opts.push(Opt { name: "rps", takes_value: true, default: Some("0"), help: "mean arrival rate (0 = closed loop)" });
     opts.push(Opt { name: "max-batch", takes_value: true, default: Some("4"), help: "max requests per batch" });
@@ -315,6 +350,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     if kv_budget.is_some() && !a.flag("kv-cache") {
         bail!("--kv-budget-mb only makes sense with --kv-cache");
     }
+    let memory_trace =
+        a.get("memory-trace").map(|spec| PressureTrace::from_spec(spec, budget)).transpose()?;
     let models = a.list("model");
     let runs: Vec<RunConfig> = models
         .iter()
@@ -327,6 +364,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                 pin_budget,
                 pin_policy: PinPolicy::parse(a.req("pin-policy")?)?,
                 kv_cache: a.flag("kv-cache"),
+                kv_block_tokens: a.get("kv-block-tokens").map(|s| s.parse()).transpose()?,
                 disk: a.req("disk")?.to_string(),
                 seed: a.u64("seed")?,
                 ..RunConfig::default()
@@ -348,6 +386,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             budget,
             kv_budget,
             max_batch: a.usize("max-batch")?,
+            memory_trace,
             ..RouterConfig::default()
         };
         let frontend = TcpFrontend::bind(addr)?;
@@ -360,6 +399,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             println!("  throughput: {:.2} req/s", s.throughput_rps);
             println!("  latency p50 {}  p95 {}  p99 {}", human_ms(s.latency.p50()), human_ms(s.latency.p95()), human_ms(s.latency.p99()));
             println!("  peak mem: {}{}", human_bytes(s.peak_bytes), s.budget_bytes.map(|b| format!("  (budget {})", human_bytes(b))).unwrap_or_default());
+            if s.budget_steps > 0 {
+                println!("  elastic:  {} budget steps, {} evictions, {} re-plans", s.budget_steps, s.elastic_evictions, s.replans);
+            }
             for m in &s.per_model {
                 println!("  [{}] served {} / rejected {} in {} batches, p95 {}", m.profile, m.served, m.rejected, m.batches, human_ms(m.latency.p95()));
             }
@@ -378,6 +420,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         arrival_rps: a.f64("rps")?,
         max_batch: a.usize("max-batch")?,
         slo_ms: a.f64("slo-ms")?,
+        memory_trace,
         ..ServeConfig::default()
     };
     let s = serve(&engine, &cfg)?;
@@ -399,6 +442,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         println!(
             "  kv cache:  {} incremental passes / {} recomputes ({} blocks evicted)",
             s.kv_inc_passes, s.kv_recomputes, s.kv_evicted_blocks
+        );
+    }
+    if s.budget_steps > 0 {
+        println!(
+            "  elastic:   {} budget steps, {} evictions, {} re-plans",
+            s.budget_steps, s.elastic_evictions, s.replans
         );
     }
     println!("  SLO p95 <= {}: {}", human_ms(s.slo.target_ms), if s.slo.met { "MET" } else { "MISSED" });

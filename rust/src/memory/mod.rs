@@ -153,6 +153,30 @@ impl MemoryAccountant {
         s.peak = s.used;
     }
 
+    /// Replace the budget at run time (the elastic memory controller's
+    /// primitive; see [`crate::elastic`]).  Growing wakes blocked waiters —
+    /// the new headroom may admit them.  Shrinking only changes the bound:
+    /// `used` may now exceed it, and it is the caller's job to drive the
+    /// eviction chain (pinned layers first, then KV sequences, via
+    /// `OrderedGate::reclaim_to_budget`) until `used <= budget` again; the
+    /// accountant itself owns no evictable state.
+    pub fn resize(&self, new_budget: Option<u64>) {
+        let (lock, cv) = &*self.inner;
+        let mut s = lock.lock().unwrap();
+        s.budget = new_budget;
+        cv.notify_all();
+    }
+
+    /// Bytes currently accounted above the budget (0 when unconstrained or
+    /// within bounds) — how much an elastic shrink still has to reclaim.
+    pub fn over_budget_bytes(&self) -> u64 {
+        let s = self.inner.0.lock().unwrap();
+        match s.budget {
+            Some(b) => s.used.saturating_sub(b),
+            None => 0,
+        }
+    }
+
     /// Clear a shutdown without touching usage (multi-session recovery: one
     /// session's failed pass must not permanently poison an accountant that
     /// other sessions still account into).
@@ -293,6 +317,33 @@ mod tests {
         assert_eq!(m.peak(), 20);
         m.acquire(30).unwrap();
         assert_eq!(m.peak(), 50);
+    }
+
+    #[test]
+    fn resize_grow_wakes_waiters() {
+        let m = MemoryAccountant::new(Some(100));
+        m.acquire(100).unwrap();
+        let m2 = m.clone();
+        let h = std::thread::spawn(move || m2.acquire(50).unwrap());
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(m.used(), 100); // still blocked
+        m.resize(Some(200));
+        h.join().unwrap();
+        assert_eq!(m.used(), 150);
+        assert_eq!(m.budget(), Some(200));
+    }
+
+    #[test]
+    fn resize_shrink_reports_overage_without_evicting() {
+        let m = MemoryAccountant::new(Some(100));
+        m.acquire(80).unwrap();
+        assert_eq!(m.over_budget_bytes(), 0);
+        m.resize(Some(50));
+        assert_eq!(m.used(), 80, "resize never touches usage");
+        assert_eq!(m.over_budget_bytes(), 30);
+        assert!(m.would_block(0));
+        m.resize(None);
+        assert_eq!(m.over_budget_bytes(), 0);
     }
 
     #[test]

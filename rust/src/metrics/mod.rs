@@ -107,6 +107,12 @@ pub struct RunReport {
     pub kv_recomputes: u64,
     /// KV cache: blocks reclaimed under `S^stop` pressure during this run
     pub kv_evicted_blocks: u64,
+    /// elastic controller: budget steps applied during this run
+    pub budget_steps: u64,
+    /// elastic controller: pins + KV blocks evicted by budget shrinks
+    pub elastic_evictions: u64,
+    /// elastic controller: epoch re-plans that changed the agent count
+    pub replans: u64,
 }
 
 impl RunReport {
@@ -137,6 +143,9 @@ impl RunReport {
             .set("kv_inc_passes", self.kv_inc_passes)
             .set("kv_recomputes", self.kv_recomputes)
             .set("kv_evicted_blocks", self.kv_evicted_blocks)
+            .set("budget_steps", self.budget_steps)
+            .set("elastic_evictions", self.elastic_evictions)
+            .set("replans", self.replans)
     }
 }
 
@@ -277,6 +286,9 @@ mod tests {
             kv_inc_passes: 0,
             kv_recomputes: 0,
             kv_evicted_blocks: 0,
+            budget_steps: 0,
+            elastic_evictions: 0,
+            replans: 0,
         };
         assert_eq!(r.cache_hit_rate(), 0.0); // no cache attached
         r.cache_hits = 3;

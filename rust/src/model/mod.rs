@@ -192,6 +192,13 @@ impl Profile {
         self.kinds.get(&stage.kind).map(|k| k.param_bytes).unwrap_or(0)
     }
 
+    /// Bytes of the largest stage — the admission-feasibility floor (a
+    /// budget below this can never admit that stage; the pin-cap liveness
+    /// rule and the elastic controller's clamp both derive from it).
+    pub fn max_stage_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| self.stage_bytes(s)).max().unwrap_or(0)
+    }
+
     /// HLO entry for (kind, batch).
     pub fn entry(&self, kind: &str, batch: usize) -> Result<&EntrySpec> {
         self.entries

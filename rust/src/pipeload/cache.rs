@@ -77,12 +77,14 @@ struct CacheState {
     evictions: u64,
     displaced: u64,
     pinned_bytes: u64,
+    /// current pin cap — mutable at run time (elastic budget steps resize
+    /// it through [`LayerCache::set_pin_budget`])
+    pin_budget: u64,
 }
 
 /// Shared pinned-layer store; clone freely (Arc inside).
 #[derive(Debug, Clone)]
 pub struct LayerCache {
-    pin_budget: u64,
     policy: PinPolicy,
     inner: Arc<Mutex<CacheState>>,
 }
@@ -96,7 +98,6 @@ impl LayerCache {
 
     pub fn with_policy(pin_budget: u64, policy: PinPolicy) -> LayerCache {
         LayerCache {
-            pin_budget,
             policy,
             inner: Arc::new(Mutex::new(CacheState {
                 entries: HashMap::new(),
@@ -106,12 +107,59 @@ impl LayerCache {
                 evictions: 0,
                 displaced: 0,
                 pinned_bytes: 0,
+                pin_budget,
             })),
         }
     }
 
     pub fn pin_budget(&self) -> u64 {
-        self.pin_budget
+        self.inner.lock().unwrap().pin_budget
+    }
+
+    /// Victim choice under pressure, honoring the pin policy: `fifo`
+    /// evicts LRU; `cost` evicts the cheapest-to-reload pin first (oldest
+    /// within a tie) — the same ordering `pin_scored` displaces by, so the
+    /// bytes kept are always the most expensive to re-read.
+    fn victim_of(s: &CacheState, policy: PinPolicy) -> Option<usize> {
+        match policy {
+            PinPolicy::Fifo => s.entries.iter().min_by_key(|(_, e)| e.last_use).map(|(&st, _)| st),
+            PinPolicy::Cost => s
+                .entries
+                .iter()
+                .min_by(|a, b| {
+                    a.1.score
+                        .partial_cmp(&b.1.score)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.1.last_use.cmp(&b.1.last_use))
+                })
+                .map(|(&st, _)| st),
+        }
+    }
+
+    /// Retarget the pin cap (elastic budget step).  Shrinking below the
+    /// currently pinned bytes evicts pins (policy-ordered; see
+    /// [`LayerCache::victim_of`]) until the new cap holds, returning their
+    /// bytes through `accountant` (they were accounted while pinned).
+    /// Growing just widens future pin headroom.  Returns bytes freed; the
+    /// freed bytes count as `evictions` — this IS memory pressure,
+    /// arriving from outside instead of from an admission.
+    pub fn set_pin_budget(&self, new_budget: u64, accountant: &MemoryAccountant) -> u64 {
+        let mut s = self.inner.lock().unwrap();
+        s.pin_budget = new_budget;
+        let mut freed = 0u64;
+        while s.pinned_bytes > new_budget {
+            let victim = match Self::victim_of(&s, self.policy) {
+                Some(stage) => stage,
+                None => break,
+            };
+            let e = s.entries.remove(&victim).unwrap();
+            s.pinned_bytes -= e.bytes;
+            s.evictions += 1;
+            freed += e.bytes;
+            drop(e.shard); // the destruction
+            accountant.free(e.bytes);
+        }
+        freed
     }
 
     pub fn policy(&self) -> PinPolicy {
@@ -161,9 +209,10 @@ impl LayerCache {
         score: f64,
     ) -> (bool, u64) {
         let mut s = self.inner.lock().unwrap();
+        let pin_budget = s.pin_budget;
         let mut displaced_bytes = 0u64;
-        if s.pinned_bytes + bytes > self.pin_budget {
-            if self.policy != PinPolicy::Cost || bytes > self.pin_budget {
+        if s.pinned_bytes + bytes > pin_budget {
+            if self.policy != PinPolicy::Cost || bytes > pin_budget {
                 return (false, 0);
             }
             // cheapest-to-reload pins go first, oldest within a tie
@@ -176,7 +225,7 @@ impl LayerCache {
             victims.sort_by(|a, b| {
                 a.2.partial_cmp(&b.2).unwrap_or(std::cmp::Ordering::Equal).then(a.3.cmp(&b.3))
             });
-            let need = s.pinned_bytes + bytes - self.pin_budget;
+            let need = s.pinned_bytes + bytes - pin_budget;
             let mut reclaim = 0u64;
             let mut chosen = Vec::new();
             for (st, b, _, _) in victims {
@@ -204,14 +253,15 @@ impl LayerCache {
         (true, displaced_bytes)
     }
 
-    /// `S^stop` pressure valve: evict LRU-pinned layers until `bytes` fit
-    /// the accountant's budget or nothing is left.  Returns bytes freed.
+    /// `S^stop` pressure valve: evict pinned layers (policy-ordered; see
+    /// [`LayerCache::victim_of`]) until `bytes` fit the accountant's
+    /// budget or nothing is left.  Returns bytes freed.
     pub fn evict_for(&self, bytes: u64, accountant: &MemoryAccountant) -> u64 {
         let mut s = self.inner.lock().unwrap();
         let mut freed = 0u64;
         while accountant.would_block(bytes) {
-            let victim = match s.entries.iter().min_by_key(|(_, e)| e.last_use) {
-                Some((&stage, _)) => stage,
+            let victim = match Self::victim_of(&s, self.policy) {
+                Some(stage) => stage,
                 None => break,
             };
             let e = s.entries.remove(&victim).unwrap();
@@ -375,6 +425,54 @@ mod tests {
         let (pinned, displaced) = c.pin_scored(1, shard(1), 200, 99.0);
         assert!(!pinned);
         assert_eq!(displaced, 0);
+    }
+
+    #[test]
+    fn set_pin_budget_shrink_evicts_lru_down_to_cap() {
+        let accountant = MemoryAccountant::new(Some(1000));
+        let c = LayerCache::new(900);
+        for stage in 0..3usize {
+            assert!(accountant.try_acquire(300));
+            assert!(c.pin(stage, shard(stage as u32), 300));
+        }
+        // cap 400: two LRU pins (0, 1) must go, newest survives
+        let freed = c.set_pin_budget(400, &accountant);
+        assert_eq!(freed, 600);
+        assert_eq!(c.pin_budget(), 400);
+        assert_eq!(accountant.used(), 300);
+        assert_eq!(c.stats().evictions, 2);
+        let (_, taken) = c.take(2).expect("newest pin must survive");
+        accountant.free(taken);
+        // grow widens headroom without evicting anything
+        assert_eq!(c.set_pin_budget(900, &accountant), 0);
+        assert_eq!(c.pin_budget(), 900);
+        // and the new cap is live for future pins
+        assert!(accountant.try_acquire(800));
+        assert!(c.pin(5, shard(5), 800));
+    }
+
+    #[test]
+    fn cost_policy_pressure_evicts_cheapest_pins_first() {
+        use crate::config::PinPolicy;
+        let accountant = MemoryAccountant::new(Some(1000));
+        let c = LayerCache::with_policy(900, PinPolicy::Cost);
+        // expensive layer pinned FIRST (oldest): pure LRU would evict it
+        assert!(accountant.try_acquire(300));
+        assert!(c.pin_scored(0, shard(0), 300, 9.0).0);
+        assert!(accountant.try_acquire(300));
+        assert!(c.pin_scored(1, shard(1), 300, 1.0).0);
+        assert!(accountant.try_acquire(300));
+        assert!(c.pin_scored(2, shard(2), 300, 5.0).0);
+        // elastic shrink to 300: the two cheapest pins (1, then 2) go
+        let freed = c.set_pin_budget(300, &accountant);
+        assert_eq!(freed, 600);
+        assert!(c.take(0).is_some(), "the costliest pin must survive the shrink");
+        // S^stop pressure uses the same ordering: re-pin cheap, then stall
+        assert!(accountant.try_acquire(300));
+        assert!(c.pin_scored(3, shard(3), 300, 1.0).0);
+        let freed = c.evict_for(700, &accountant);
+        assert_eq!(freed, 300, "cheap pin evicted under admission pressure");
+        assert!(c.take(3).is_none());
     }
 
     #[test]

@@ -184,6 +184,48 @@ impl OrderedGate {
         self.state.1.notify_all();
     }
 
+    /// Drive the full eviction chain — own pinned layers, then victim
+    /// sessions' pins, then cached KV sequences (own pool first) — until
+    /// the accountant's `used` fits back under its (just-shrunk) budget or
+    /// nothing evictable remains.  This is the elastic memory controller's
+    /// `S^stop`-from-outside: a budget step arriving between passes applies
+    /// the same pressure an admission stall would, through the same chain
+    /// and in the same order.  Returns `(bytes_freed, evictions)` where
+    /// `evictions` counts reclaimed pins + KV blocks.  Waiters parked on
+    /// the gate are woken — freed bytes (or a grown budget) may admit them.
+    pub fn reclaim_to_budget(&self) -> (u64, u64) {
+        let ev0: u64 = self
+            .cache
+            .iter()
+            .chain(self.victims.iter())
+            .map(|c| c.stats().evictions)
+            .sum::<u64>()
+            + self.kv_pools.iter().map(|p| p.stats().evicted_blocks).sum::<u64>();
+        let mut freed = 0u64;
+        for c in self.cache.iter().chain(self.victims.iter()) {
+            if !self.accountant.would_block(0) {
+                break;
+            }
+            freed += c.evict_for(0, &self.accountant);
+        }
+        for p in &self.kv_pools {
+            if !self.accountant.would_block(0) {
+                break;
+            }
+            freed += p.evict_for(0);
+        }
+        let ev1: u64 = self
+            .cache
+            .iter()
+            .chain(self.victims.iter())
+            .map(|c| c.stats().evictions)
+            .sum::<u64>()
+            + self.kv_pools.iter().map(|p| p.stats().evicted_blocks).sum::<u64>();
+        let _guard = self.state.0.lock().unwrap();
+        self.state.1.notify_all();
+        (freed, ev1 - ev0)
+    }
+
     /// Rearm for the next pass of the same session: admission restarts at
     /// stage 0.  The accountant is NOT touched — pinned hot layers keep
     /// their bytes accounted across passes.
@@ -386,6 +428,38 @@ mod tests {
         assert!(!seq.valid(), "KV sequence reclaimed under pressure");
         assert_eq!(pool.stats().evicted_blocks, 1);
         assert_eq!(accountant.used(), 90);
+    }
+
+    #[test]
+    fn reclaim_to_budget_drives_pins_then_kv_after_shrink() {
+        use crate::weights::Shard;
+        // 40 B pinned + one 256 B KV block under a 400 B budget; shrinking
+        // to 200 B must evict the pin first, then the KV sequence.
+        let accountant = MemoryAccountant::new(Some(400));
+        let cache = LayerCache::new(400);
+        let pool = KvPool::with_block_tokens(accountant.clone(), None, 4);
+        let mut gate = OrderedGate::with_cache(accountant.clone(), cache.clone());
+        gate.add_kv_pool(pool.clone());
+        assert!(accountant.try_acquire(40));
+        assert!(cache.pin(1, Arc::new(Shard { kind: "k".into(), stage: 1, tensors: vec![] }), 40));
+        let seq = pool.open_seq(1, 1, 8); // one block = 256 B
+        assert!(seq.reserve(1));
+        assert_eq!(accountant.used(), 296);
+
+        // within budget: reclaim is a no-op
+        assert_eq!(gate.reclaim_to_budget(), (0, 0));
+
+        accountant.resize(Some(200));
+        let (freed, evictions) = gate.reclaim_to_budget();
+        assert_eq!(freed, 296, "pin AND kv must go to fit 200 B");
+        assert_eq!(evictions, 2, "1 pin + 1 kv block");
+        assert_eq!(accountant.used(), 0);
+        assert!(!seq.valid());
+        assert_eq!(cache.stats().evictions, 1);
+
+        // growing back requires no reclaim at all
+        accountant.resize(Some(400));
+        assert_eq!(gate.reclaim_to_budget(), (0, 0));
     }
 
     #[test]

@@ -347,6 +347,65 @@ mod tests {
     }
 
     #[test]
+    fn single_layer_model_boundaries() {
+        let s = stats(10.0, 1.0, 200, 1);
+        // one layer: min feasible = peak(1 agent) = 200 + 2*200 + 100
+        let min = min_feasible_budget(&s, "encoder_layer");
+        assert_eq!(min, predict_peak_bytes(200, 200, 100, 1));
+        assert_eq!(min, 700);
+        // one byte below the smallest feasible plan: nothing fits
+        assert!(candidate_agents(&s, "encoder_layer", min - 1, 4).is_empty());
+        // exactly at the boundary: the 1-agent plan fits
+        assert_eq!(candidate_agents(&s, "encoder_layer", min, 4), vec![1]);
+        // a body kind with no layers falls back to max_stage (body == 0)
+        assert_eq!(min_feasible_budget(&s, "decoder_layer"), min);
+        // a single layer can't overlap anything: latency is flat in agents
+        assert_eq!(predict_latency_ms(10.0, 1.0, 1, 1), 11.0);
+        assert_eq!(predict_latency_ms(10.0, 1.0, 1, 8), 11.0);
+    }
+
+    #[test]
+    fn schedule_pick_boundary_cases() {
+        let entry = |budget: u64, agents: usize| PlanEntry {
+            budget_bytes: budget,
+            agents,
+            predicted_latency_ms: 1.0,
+            predicted_peak_bytes: budget,
+            measured_latency_ms: None,
+            measured_peak_bytes: None,
+        };
+        let sched = Schedule {
+            profile: "t".into(),
+            disk: "d".into(),
+            entries: vec![entry(100, 1), entry(200, 3)],
+        };
+        // below the smallest planned budget: no plan, the caller must
+        // keep (or refuse) its current configuration
+        assert!(sched.pick(99).is_none());
+        // exactly on a row is inclusive
+        assert_eq!(sched.pick(100).unwrap().agents, 1);
+        assert_eq!(sched.pick(200).unwrap().agents, 3);
+        // between rows: the largest planned budget that still fits
+        assert_eq!(sched.pick(199).unwrap().agents, 1);
+        // single-row schedule behaves the same way
+        let one = Schedule { profile: "t".into(), disk: "d".into(), entries: vec![entry(64, 2)] };
+        assert!(one.pick(63).is_none());
+        assert_eq!(one.pick(1 << 40).unwrap().agents, 2);
+        // empty schedule never picks
+        let empty = Schedule { profile: "t".into(), disk: "d".into(), entries: vec![] };
+        assert!(empty.pick(u64::MAX).is_none());
+    }
+
+    #[test]
+    fn peak_model_boundary_at_exact_budget() {
+        let s = stats(20.0, 2.0, 100, 10);
+        // peak(m) = 100 + (m+1)*100 + 50; m=3 -> 550
+        assert_eq!(predict_peak_bytes(100, 100, 50, 3), 550);
+        assert_eq!(candidate_agents(&s, "encoder_layer", 550, 8), vec![1, 2, 3]);
+        assert_eq!(candidate_agents(&s, "encoder_layer", 549, 8), vec![1, 2]);
+    }
+
+    #[test]
     fn schedule_json_roundtrip() {
         let sched = Schedule {
             profile: "t".into(),

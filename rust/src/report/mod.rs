@@ -233,6 +233,14 @@ fn parse_reports(v: &Value) -> Result<Vec<RunReport>> {
                     .get("kv_evicted_blocks")
                     .and_then(|v| v.as_f64().ok())
                     .unwrap_or(0.0) as u64,
+                // absent in caches written before the elastic controller
+                budget_steps: r.get("budget_steps").and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+                    as u64,
+                elastic_evictions: r
+                    .get("elastic_evictions")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0) as u64,
+                replans: r.get("replans").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64,
             })
         })
         .collect()
@@ -401,6 +409,9 @@ mod tests {
             kv_inc_passes: 0,
             kv_recomputes: 0,
             kv_evicted_blocks: 0,
+            budget_steps: 0,
+            elastic_evictions: 0,
+            replans: 0,
         }
     }
 

@@ -32,8 +32,8 @@ pub mod summary;
 pub mod tcp;
 
 pub use router::{
-    pick_batch, InferRequest, InferResponse, ModelStats, Router, RouterConfig, RouterHandle,
-    RouterSummary, Ticket,
+    kv_shares, pick_batch, InferRequest, InferResponse, ModelStats, Router, RouterConfig,
+    RouterHandle, RouterSummary, Ticket,
 };
 pub use summary::{e2e_default, serve, ServeConfig, ServeSummary};
 pub use tcp::TcpFrontend;

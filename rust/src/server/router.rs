@@ -30,9 +30,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::RunConfig;
+use crate::elastic::{BudgetController, PressureTrace};
 use crate::engine::{Engine, Session};
 use crate::memory::MemoryAccountant;
 use crate::metrics::LatencyRecorder;
+use crate::planner::Schedule;
 use crate::util::json::Value;
 
 /// Router policy + the model fleet.
@@ -52,6 +54,14 @@ pub struct RouterConfig {
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch for one profile.
     pub batch_window: Duration,
+    /// Memory-pressure trace applied to the SHARED accountant between
+    /// batches (`at_pass` counts engine passes across all lanes).  Each
+    /// step resizes the one device-wide budget, drives every lane's
+    /// eviction chain, rebalances the per-lane KV shares proportionally,
+    /// and re-plans the agent count of lanes given a schedule through
+    /// [`Router::set_lane_schedule`] — so the EDF scheduler's next
+    /// admission sees the new headroom.
+    pub memory_trace: Option<PressureTrace>,
 }
 
 impl Default for RouterConfig {
@@ -62,6 +72,7 @@ impl Default for RouterConfig {
             kv_budget: None,
             max_batch: 4,
             batch_window: Duration::from_millis(20),
+            memory_trace: None,
         }
     }
 }
@@ -307,6 +318,10 @@ pub struct ModelStats {
     pub kv_recomputes: u64,
     /// KV blocks reclaimed under `S^stop` pressure
     pub kv_evicted_blocks: u64,
+    /// pins + KV blocks this lane lost to elastic budget shrinks
+    pub elastic_evictions: u64,
+    /// elastic epoch re-plans that changed this lane's agent count
+    pub replans: u64,
 }
 
 /// Summary of one router run (all models, shared budget).
@@ -327,6 +342,12 @@ pub struct RouterSummary {
     pub kv_inc_passes: u64,
     pub kv_recomputes: u64,
     pub kv_evicted_blocks: u64,
+    /// elastic budget steps applied to the shared accountant
+    pub budget_steps: u64,
+    /// pins + KV blocks evicted by those steps, across all lanes
+    pub elastic_evictions: u64,
+    /// elastic re-plans that changed some lane's agent count
+    pub replans: u64,
     pub per_model: Vec<ModelStats>,
     /// first engine-pass failure, if any batch failed (full error chain —
     /// individual responses carry their own copies, but callers that drop
@@ -352,6 +373,8 @@ impl RouterSummary {
                     .set("kv_inc_passes", m.kv_inc_passes)
                     .set("kv_recomputes", m.kv_recomputes)
                     .set("kv_evicted_blocks", m.kv_evicted_blocks)
+                    .set("elastic_evictions", m.elastic_evictions)
+                    .set("replans", m.replans)
             })
             .collect();
         let mut v = Value::obj()
@@ -367,6 +390,9 @@ impl RouterSummary {
             .set("kv_inc_passes", self.kv_inc_passes)
             .set("kv_recomputes", self.kv_recomputes)
             .set("kv_evicted_blocks", self.kv_evicted_blocks)
+            .set("budget_steps", self.budget_steps)
+            .set("elastic_evictions", self.elastic_evictions)
+            .set("replans", self.replans)
             .set("models", models);
         if let Some(b) = self.budget_bytes {
             v = v.set("budget_bytes", b);
@@ -376,6 +402,27 @@ impl RouterSummary {
         }
         v
     }
+}
+
+/// Split a global KV allocation across `lanes` share-taking lanes: an even
+/// share each, with the integer-division remainder granted to the first
+/// lane, so the granted total always equals the configured budget (a
+/// remainder silently dropped would be bytes nobody may use).
+pub fn kv_shares(total: Option<u64>, lanes: usize) -> Vec<Option<u64>> {
+    let Some(total) = total else { return vec![None; lanes] };
+    if lanes == 0 {
+        return Vec::new();
+    }
+    let share = total / lanes as u64;
+    let remainder = total % lanes as u64;
+    (0..lanes).map(|i| Some(if i == 0 { share + remainder } else { share })).collect()
+}
+
+/// Proportional rebalance of one lane's KV share when the shared budget
+/// moves from `orig_budget` to `new_budget` (u128 intermediate: byte
+/// products overflow u64 for GB-scale budgets).
+fn scaled_share(orig_share: u64, orig_budget: u64, new_budget: u64) -> u64 {
+    ((orig_share as u128 * new_budget as u128) / (orig_budget.max(1) as u128)) as u64
 }
 
 /// Pick the smallest AOT-compiled batch size that fits `n` requests (or
@@ -415,6 +462,14 @@ pub struct Router<'e> {
     ids: Arc<AtomicU64>,
     /// requests for profiles this router does not serve
     unroutable: usize,
+    /// per-lane KV share granted from [`RouterConfig::kv_budget`] (None
+    /// for non-KV lanes and lanes with their own explicit cap) — the base
+    /// the elastic rebalance scales from
+    kv_lane_shares: Vec<Option<u64>>,
+    /// elastic controller over the shared accountant
+    elastic: Option<BudgetController>,
+    /// budget steps applied to the shared accountant
+    budget_steps: u64,
 }
 
 impl<'e> Router<'e> {
@@ -430,11 +485,15 @@ impl<'e> Router<'e> {
         }
         let accountant = MemoryAccountant::new(cfg.budget);
         // Per-lane KV grants: the router's kv_budget is divided evenly
-        // among the lanes that decode with a KV cache, so one lane's long
-        // generations can never starve another's (a lane's own explicit
-        // kv_budget overrides its share).
-        let kv_lanes = cfg.models.iter().filter(|m| m.kv_cache).count();
-        let kv_share = cfg.kv_budget.map(|b| b / kv_lanes.max(1) as u64);
+        // among the lanes that decode with a KV cache and don't carry
+        // their own explicit cap; the division remainder goes to the
+        // first such lane so granted bytes always sum to the configured
+        // budget.  The per-lane grant is what keeps one lane's long
+        // generations from starving another's weights or attention state.
+        let share_takers =
+            cfg.models.iter().filter(|m| m.kv_cache && m.kv_budget.is_none()).count();
+        let mut shares = kv_shares(cfg.kv_budget, share_takers).into_iter();
+        let mut kv_lane_shares: Vec<Option<u64>> = Vec::with_capacity(cfg.models.len());
         let mut lanes: Vec<ModelLane<'e>> = Vec::with_capacity(cfg.models.len());
         for model in &cfg.models {
             if lanes.iter().any(|l| l.profile == model.profile) {
@@ -444,7 +503,11 @@ impl<'e> Router<'e> {
             let mut run = model.clone();
             run.budget = cfg.budget;
             if run.kv_cache && run.kv_budget.is_none() {
-                run.kv_budget = kv_share;
+                let share = shares.next().flatten();
+                run.kv_budget = share;
+                kv_lane_shares.push(share);
+            } else {
+                kv_lane_shares.push(None);
             }
             let session = engine.open_session_shared(&run, &accountant)?;
             lanes.push(ModelLane {
@@ -482,6 +545,7 @@ impl<'e> Router<'e> {
             }
         }
         let (tx, rx) = mpsc::channel();
+        let elastic = cfg.memory_trace.clone().map(BudgetController::new);
         Ok(Router {
             lanes,
             accountant,
@@ -490,6 +554,9 @@ impl<'e> Router<'e> {
             rx,
             ids: Arc::new(AtomicU64::new(0)),
             unroutable: 0,
+            kv_lane_shares,
+            elastic,
+            budget_steps: 0,
         })
     }
 
@@ -505,6 +572,92 @@ impl<'e> Router<'e> {
     /// The shared accountant (inspect budget/usage/peak from outside).
     pub fn accountant(&self) -> &MemoryAccountant {
         &self.accountant
+    }
+
+    /// Per-lane KV pool caps currently in force (None for lanes without a
+    /// pool or cap).  Useful for asserting that every byte of
+    /// [`RouterConfig::kv_budget`] was granted to some lane.
+    pub fn lane_kv_budgets(&self) -> Vec<Option<u64>> {
+        self.lanes.iter().map(|l| l.session.kv_pool().and_then(|p| p.kv_budget())).collect()
+    }
+
+    /// Attach a planner [`Schedule`] to one lane: elastic budget steps
+    /// ([`RouterConfig::memory_trace`]) then re-plan that lane's
+    /// Loading-Agent count through `Schedule::pick` at every step.  Call
+    /// before [`Router::run`] (which consumes the router).  Errors on a
+    /// profile this router does not serve.
+    pub fn set_lane_schedule(&mut self, profile: &str, schedule: Schedule) -> Result<()> {
+        let li = self
+            .lane_index(profile)
+            .ok_or_else(|| anyhow!("unknown profile '{profile}' (no such lane)"))?;
+        self.lanes[li].session.set_schedule(schedule);
+        Ok(())
+    }
+
+    /// Apply any due memory-trace step (between batches).  `at_pass` is
+    /// measured in engine passes summed across all lanes, so a trace means
+    /// the same thing whether one lane or five are busy.
+    fn poll_elastic(&mut self) {
+        if self.elastic.is_none() {
+            return;
+        }
+        let passes: usize = self.lanes.iter().map(|l| l.session.passes_run()).sum();
+        let step = self.elastic.as_mut().unwrap().poll(passes);
+        if let Some(step) = step {
+            self.apply_budget_step(step.budget_bytes);
+        }
+    }
+
+    /// Resize the shared accountant and push the new constraint through
+    /// every lane: eviction chains settle (`used <= budget` again), pin
+    /// caps re-derive under the liveness rule, KV shares rebalance
+    /// proportionally to the budget move, and lanes with schedules
+    /// ([`Router::set_lane_schedule`]) re-plan their agent count.  The
+    /// next pick/admission — the EDF scheduler's world — runs against the
+    /// new headroom.
+    fn apply_budget_step(&mut self, new_budget: u64) {
+        // fleet-wide feasibility clamp: the shared budget must stay above
+        // every lane's floor (largest stage / resident model — see
+        // [`Session::budget_floor`]) or the next admission bails instead
+        // of adapting
+        let floor = self.lanes.iter().map(|l| l.session.budget_floor()).max().unwrap_or(0);
+        let new_budget = new_budget.max(floor);
+        self.accountant.resize(Some(new_budget));
+        self.budget_steps += 1;
+        let orig_budget = self.cfg.budget;
+        // per-lane own-eviction baselines: lane A's reclaim chain may take
+        // lane B's pins/KV through the victim wiring, and B's own apply
+        // window cannot see that
+        let before: Vec<u64> =
+            self.lanes.iter().map(|l| l.session.own_eviction_count()).collect();
+        let mut in_window: Vec<u64> = Vec::with_capacity(self.lanes.len());
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            let epoch_evictions = match (self.kv_lane_shares[i], orig_budget) {
+                (Some(share), Some(orig)) => {
+                    // proportional on shrink, but a grow past the original
+                    // budget never raises a lane above its configured share
+                    // (`--kv-budget-mb` stays a hard global cap, matching
+                    // the single-model path's `orig.min(...)` rule)
+                    let cap = scaled_share(share, orig, new_budget).min(share);
+                    lane.session.apply_budget_with_kv(new_budget, Some(cap)).evictions
+                }
+                (Some(share), None) => {
+                    lane.session.apply_budget_with_kv(new_budget, Some(share)).evictions
+                }
+                (None, _) => lane.session.apply_budget(new_budget).evictions,
+            };
+            in_window.push(epoch_evictions);
+        }
+        // reconcile: anything a lane lost to the step beyond its own apply
+        // window was taken by another lane's chain — credit the owner, so
+        // per-model `elastic_evictions` stays truthful lane by lane
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            let total = lane.session.own_eviction_count().saturating_sub(before[i]);
+            let missed = total.saturating_sub(in_window[i]);
+            if missed > 0 {
+                lane.session.note_elastic_evictions(missed);
+            }
+        }
     }
 
     fn lane_index(&self, profile: &str) -> Option<usize> {
@@ -611,6 +764,9 @@ impl<'e> Router<'e> {
                     }
                 }
             }
+
+            // memory-pressure steps land here, between batches
+            self.poll_elastic();
 
             // earliest-deadline-first across lane heads (FIFO tie-break)
             let Some(li) = self.pick_lane() else { continue };
@@ -754,6 +910,7 @@ impl<'e> Router<'e> {
         let (mut served, mut rejected) = (0usize, self.unroutable);
         let (mut hits, mut misses) = (0u64, 0u64);
         let (mut kv_inc, mut kv_rec, mut kv_evicted) = (0u64, 0u64, 0u64);
+        let (mut elastic_ev, mut replans) = (0u64, 0u64);
         let per_model: Vec<ModelStats> = self
             .lanes
             .iter()
@@ -768,9 +925,12 @@ impl<'e> Router<'e> {
                 misses += cs.misses;
                 let (inc, rec) = l.session.kv_counters();
                 let kvp = l.session.kv_pool_stats();
+                let es = l.session.elastic_stats();
                 kv_inc += inc;
                 kv_rec += rec;
                 kv_evicted += kvp.evicted_blocks;
+                elastic_ev += es.elastic_evictions;
+                replans += es.replans;
                 ModelStats {
                     profile: l.profile.clone(),
                     served: l.served,
@@ -782,6 +942,8 @@ impl<'e> Router<'e> {
                     kv_inc_passes: inc,
                     kv_recomputes: rec,
                     kv_evicted_blocks: kvp.evicted_blocks,
+                    elastic_evictions: es.elastic_evictions,
+                    replans: es.replans,
                 }
             })
             .collect();
@@ -799,6 +961,9 @@ impl<'e> Router<'e> {
             kv_inc_passes: kv_inc,
             kv_recomputes: kv_rec,
             kv_evicted_blocks: kv_evicted,
+            budget_steps: self.budget_steps,
+            elastic_evictions: elastic_ev,
+            replans,
             per_model,
             first_error,
         })
@@ -843,6 +1008,35 @@ impl<'e> Router<'e> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn kv_shares_pin_total_granted_to_budget() {
+        // the old even split dropped `total % lanes` bytes on the floor;
+        // the remainder now lands on the first lane so the sum is exact
+        for (total, lanes) in [(1001u64, 2usize), (10, 3), (7, 7), (5, 8), (1 << 20, 3)] {
+            let shares = kv_shares(Some(total), lanes);
+            assert_eq!(shares.len(), lanes);
+            let granted: u64 = shares.iter().map(|s| s.unwrap()).sum();
+            assert_eq!(granted, total, "total={total} lanes={lanes}");
+            // even up to the remainder: no lane beats lane 0
+            for s in &shares[1..] {
+                assert!(s.unwrap() <= shares[0].unwrap());
+            }
+        }
+        assert_eq!(kv_shares(None, 3), vec![None, None, None]);
+        assert!(kv_shares(Some(10), 0).is_empty());
+    }
+
+    #[test]
+    fn scaled_share_is_proportional_and_overflow_safe() {
+        assert_eq!(scaled_share(512, 1024, 512), 256);
+        assert_eq!(scaled_share(512, 1024, 2048), 1024);
+        // GB-scale products must not overflow u64
+        let gb = 1u64 << 30;
+        assert_eq!(scaled_share(40 * gb, 80 * gb, 60 * gb), 30 * gb);
+        // degenerate original budget: no division by zero
+        assert_eq!(scaled_share(100, 0, 50), 5000);
+    }
 
     #[test]
     fn pick_batch_smallest_fitting() {

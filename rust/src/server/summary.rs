@@ -14,6 +14,7 @@ use anyhow::Result;
 
 use super::router::{InferRequest, Router, RouterConfig, RouterSummary};
 use crate::config::{Mode, RunConfig};
+use crate::elastic::PressureTrace;
 use crate::engine::Engine;
 use crate::metrics::{check_slo, LatencyRecorder, SloReport};
 use crate::util::json::Value;
@@ -33,6 +34,8 @@ pub struct ServeConfig {
     pub batch_window: Duration,
     /// p95 latency target
     pub slo_ms: f64,
+    /// memory-pressure trace applied between batches (see [`crate::elastic`])
+    pub memory_trace: Option<PressureTrace>,
 }
 
 impl Default for ServeConfig {
@@ -44,6 +47,7 @@ impl Default for ServeConfig {
             max_batch: 4,
             batch_window: Duration::from_millis(20),
             slo_ms: 1000.0,
+            memory_trace: None,
         }
     }
 }
@@ -57,6 +61,7 @@ impl ServeConfig {
             kv_budget: self.run.kv_budget,
             max_batch: self.max_batch,
             batch_window: self.batch_window,
+            memory_trace: self.memory_trace.clone(),
         }
     }
 }
@@ -79,6 +84,11 @@ pub struct ServeSummary {
     pub kv_inc_passes: u64,
     pub kv_recomputes: u64,
     pub kv_evicted_blocks: u64,
+    /// elastic controller: budget steps applied / pins+KV blocks evicted
+    /// by them / agent-count re-plans (all 0 = no memory trace)
+    pub budget_steps: u64,
+    pub elastic_evictions: u64,
+    pub replans: u64,
 }
 
 impl ServeSummary {
@@ -98,6 +108,9 @@ impl ServeSummary {
             kv_inc_passes: s.kv_inc_passes,
             kv_recomputes: s.kv_recomputes,
             kv_evicted_blocks: s.kv_evicted_blocks,
+            budget_steps: s.budget_steps,
+            elastic_evictions: s.elastic_evictions,
+            replans: s.replans,
         }
     }
 
@@ -117,6 +130,9 @@ impl ServeSummary {
             .set("kv_inc_passes", self.kv_inc_passes)
             .set("kv_recomputes", self.kv_recomputes)
             .set("kv_evicted_blocks", self.kv_evicted_blocks)
+            .set("budget_steps", self.budget_steps)
+            .set("elastic_evictions", self.elastic_evictions)
+            .set("replans", self.replans)
     }
 }
 
@@ -218,6 +234,9 @@ mod tests {
             kv_inc_passes: 5,
             kv_recomputes: 1,
             kv_evicted_blocks: 2,
+            budget_steps: 1,
+            elastic_evictions: 4,
+            replans: 1,
         };
         let v = s.to_json();
         for key in

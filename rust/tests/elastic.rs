@@ -1,0 +1,257 @@
+//! Elastic memory controller integration tests: under a shrink-grow
+//! memory-pressure trace the stack must (a) settle `used` back under each
+//! step's budget, (b) generate bit-identical tokens to a static-budget
+//! run, and (c) demonstrably adapt — the agent count and the pin cap
+//! re-raise on grow — including across a two-lane router sharing one
+//! resizing accountant.  Needs `make artifacts`.
+
+use std::time::Duration;
+
+use hermes::config::{Mode, Paths, RunConfig};
+use hermes::elastic::{PressureStep, PressureTrace, GROW_AT_PASS, SHRINK_AT_PASS};
+use hermes::engine::Engine;
+use hermes::planner::{PlanEntry, Schedule};
+use hermes::server::{InferRequest, Router, RouterConfig};
+
+fn engine() -> Engine {
+    Engine::new(Paths::detect()).unwrap()
+}
+
+fn gpt_cfg() -> RunConfig {
+    RunConfig {
+        profile: "tiny-gpt".into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        gen_tokens: Some(6),
+        ..RunConfig::default()
+    }
+}
+
+/// (a) + (b): a shrink-grow trace must evict pins back under each step's
+/// budget (used <= budget after every step settles, per-epoch peak window
+/// reset) while the generated tokens stay bit-identical to a static run.
+#[test]
+fn shrink_grow_settles_under_budget_with_identical_tokens() {
+    let e = engine();
+    let profile = e.runtime.profile("tiny-gpt").unwrap();
+    let total = profile.total_weight_bytes;
+    let max_stage = profile.max_stage_bytes();
+    // pin everything while the budget is wide: the shrink then has real
+    // state to reclaim
+    let base = total + max_stage;
+    let mut cfg = gpt_cfg();
+    cfg.budget = Some(base);
+    cfg.pin_budget = Some(total);
+
+    let trace = PressureTrace::shrink_grow(base);
+    let shrunk = trace.steps()[0].budget_bytes;
+    assert!(shrunk >= max_stage, "shrunk budget must still admit the largest stage");
+    assert!(total > shrunk, "pins must overflow the shrunk budget for this test to bite");
+
+    let mut stat = e.open_session(&cfg).unwrap();
+    let (_, static_out) = stat.run_batch(1, 4242).unwrap();
+    drop(stat);
+
+    let mut s = e.session(&cfg).memory_trace(trace).open().unwrap();
+    let (rep, out) = s.run_batch(1, 4242).unwrap();
+
+    // (b) bit-identical: shrink only evicts, grow only widens
+    assert_eq!(static_out.generated_rows, out.generated_rows, "{rep:?}");
+    assert_eq!(static_out.generated, out.generated);
+    assert_eq!(rep.tokens, 6);
+
+    // (a) the instantaneous invariant, via the per-step epoch records
+    assert_eq!(rep.budget_steps, 2, "{rep:?}");
+    let epochs = s.budget_epochs();
+    assert_eq!(epochs.len(), 2);
+    for ep in epochs {
+        assert!(
+            ep.used_after_bytes <= ep.budget_bytes,
+            "used {} must settle under budget {} at pass {}",
+            ep.used_after_bytes,
+            ep.budget_bytes,
+            ep.at_pass
+        );
+    }
+    assert_eq!(epochs[0].budget_bytes, shrunk);
+    assert_eq!(epochs[1].budget_bytes, base);
+    assert_eq!(epochs[0].at_pass, SHRINK_AT_PASS);
+    assert_eq!(epochs[1].at_pass, GROW_AT_PASS);
+
+    // the shrink had to reclaim pinned layers
+    assert!(rep.elastic_evictions > 0, "{rep:?}");
+    assert!(epochs[0].freed_bytes > 0);
+    // (c) the grow re-raises the pin cap (budget - max_stage re-derivation)
+    assert!(
+        epochs[1].pin_cap_bytes > epochs[0].pin_cap_bytes,
+        "grow must widen the pin cap: {epochs:?}"
+    );
+    assert_eq!(epochs[1].pin_cap_bytes, total.min(base - max_stage));
+    // no schedule attached: the agent count never moved
+    assert_eq!(rep.replans, 0);
+    assert_eq!(s.current_agents(), 2);
+}
+
+/// (c) epoch re-planning: with a schedule attached, the shrink drops the
+/// Loading Agent count and the grow restores it (counters prove it).
+/// KV-cache decode rides along: evicted sequences recompute, tokens match.
+#[test]
+fn grow_step_restores_agents_via_schedule_replanning() {
+    let e = engine();
+    let profile = e.runtime.profile("tiny-gpt").unwrap();
+    let max_stage = profile.max_stage_bytes();
+    let base = profile.total_weight_bytes + max_stage;
+    let trace = PressureTrace::shrink_grow(base);
+    let shrunk = trace.steps()[0].budget_bytes;
+    assert!(shrunk >= max_stage);
+
+    let mut cfg = gpt_cfg();
+    cfg.agents = 3;
+    cfg.budget = Some(base);
+    cfg.kv_cache = true;
+
+    let entry = |budget: u64, agents: usize| PlanEntry {
+        budget_bytes: budget,
+        agents,
+        predicted_latency_ms: 1.0,
+        predicted_peak_bytes: budget,
+        measured_latency_ms: None,
+        measured_peak_bytes: None,
+    };
+    let schedule = Schedule {
+        profile: "tiny-gpt".into(),
+        disk: "unthrottled".into(),
+        entries: vec![entry(shrunk, 1), entry(base, 3)],
+    };
+
+    let mut stat = e.open_session(&cfg).unwrap();
+    let (_, static_out) = stat.run_batch(1, 777).unwrap();
+    drop(stat);
+
+    let mut s = e.session(&cfg).memory_trace(trace).schedule(schedule).open().unwrap();
+    let (rep, out) = s.run_batch(1, 777).unwrap();
+
+    assert_eq!(static_out.generated_rows, out.generated_rows, "{rep:?}");
+    assert_eq!(rep.budget_steps, 2);
+    assert_eq!(rep.replans, 2, "shrink AND grow must re-plan: {rep:?}");
+    let epochs = s.budget_epochs();
+    assert!(epochs[0].replanned && epochs[1].replanned);
+    assert_eq!(epochs[0].agents, 1, "shrink drops to the 1-agent plan");
+    assert_eq!(epochs[1].agents, 3, "grow re-raises the agent count");
+    assert_eq!(s.current_agents(), 3);
+    assert_eq!(rep.agents, 3, "the report carries the agents now in force");
+    for ep in epochs {
+        assert!(ep.used_after_bytes <= ep.budget_bytes, "{ep:?}");
+    }
+}
+
+/// Two generative KV lanes under ONE shared, resizing accountant: the
+/// router applies the trace to the shared budget, rebalances the per-lane
+/// KV shares, and every response stays bit-identical to the static run.
+#[test]
+fn router_two_lanes_adapt_under_shared_resizing_accountant() {
+    let e = engine();
+    let gpt = e.runtime.profile("tiny-gpt").unwrap();
+    let gptj = e.runtime.profile("tiny-gptj").unwrap();
+    let base = gpt.total_weight_bytes + gptj.total_weight_bytes;
+    let max_stage = gpt.max_stage_bytes().max(gptj.max_stage_bytes());
+    let shrunk = base * 60 / 100;
+    assert!(shrunk >= max_stage);
+    // serialized requests generate 4 passes each; put the shrink after
+    // request 1 and the grow after request 2 so both land between batches
+    let trace = PressureTrace::new(vec![
+        PressureStep { at_pass: 4, budget_bytes: shrunk },
+        PressureStep { at_pass: 8, budget_bytes: base },
+    ])
+    .unwrap();
+
+    let kv_budget = (1u64 << 20) + 1; // odd on purpose: the split must not drop the remainder
+    let mk = |p: &str| RunConfig {
+        profile: p.into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        kv_cache: true,
+        gen_tokens: Some(4),
+        ..RunConfig::default()
+    };
+    let run_fleet = |trace: Option<PressureTrace>| {
+        let cfg = RouterConfig {
+            models: vec![mk("tiny-gpt"), mk("tiny-gptj")],
+            budget: Some(base),
+            kv_budget: Some(kv_budget),
+            max_batch: 2,
+            batch_window: Duration::from_millis(2),
+            memory_trace: trace,
+        };
+        let mut router = Router::new(&e, cfg).unwrap();
+        // satellite guard: the split grants every configured KV byte
+        let granted: u64 = router.lane_kv_budgets().iter().map(|b| b.unwrap()).sum();
+        assert_eq!(granted, kv_budget, "kv split must not drop the remainder");
+        // the gpt lane re-plans per epoch: 2 agents wide, 1 when shrunk
+        let entry = |budget: u64, agents: usize| PlanEntry {
+            budget_bytes: budget,
+            agents,
+            predicted_latency_ms: 1.0,
+            predicted_peak_bytes: budget,
+            measured_latency_ms: None,
+            measured_peak_bytes: None,
+        };
+        router
+            .set_lane_schedule(
+                "tiny-gpt",
+                Schedule {
+                    profile: "tiny-gpt".into(),
+                    disk: "unthrottled".into(),
+                    entries: vec![entry(shrunk, 1), entry(base, 2)],
+                },
+            )
+            .unwrap();
+        let handle = router.handle();
+        let producer = std::thread::spawn(move || {
+            let mut outs = Vec::new();
+            for i in 0..6u64 {
+                let profile = if i % 2 == 0 { "tiny-gpt" } else { "tiny-gptj" };
+                let resp = handle
+                    .submit(InferRequest {
+                        profile: profile.into(),
+                        batch_hint: 1,
+                        deadline: None,
+                        seed: Some(9000 + i),
+                    })
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                assert!(resp.ok, "request {i} failed: {:?}", resp.error);
+                outs.push(resp.generated_rows);
+            }
+            handle.shutdown();
+            outs
+        });
+        let summary = router.run().unwrap();
+        let outs = producer.join().unwrap();
+        (summary, outs)
+    };
+
+    let (static_summary, static_outs) = run_fleet(None);
+    let (elastic_summary, elastic_outs) = run_fleet(Some(trace));
+
+    assert_eq!(static_summary.budget_steps, 0);
+    assert_eq!(static_summary.replans, 0, "no trace, no re-planning");
+    assert_eq!(elastic_summary.budget_steps, 2, "shrink and grow must both land");
+    assert_eq!(elastic_summary.served, 6);
+    assert_eq!(elastic_summary.rejected, 0);
+    assert_eq!(
+        static_outs, elastic_outs,
+        "tokens must be bit-identical under the resizing shared budget"
+    );
+    // the scheduled lane re-planned on BOTH steps (2 -> 1 -> 2 agents);
+    // the unscheduled lane never moved
+    assert_eq!(elastic_summary.replans, 2, "{elastic_summary:?}");
+    for m in &elastic_summary.per_model {
+        assert_eq!(m.served, 3, "{m:?}");
+        let want = if m.profile == "tiny-gpt" { 2 } else { 0 };
+        assert_eq!(m.replans, want, "{m:?}");
+    }
+}

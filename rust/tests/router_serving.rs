@@ -42,6 +42,7 @@ fn router_serves_two_profiles_under_one_shared_budget() {
         kv_budget: None,
         max_batch: 2,
         batch_window: Duration::from_millis(5),
+        ..RouterConfig::default()
     };
     let router = Router::new(&e, cfg).unwrap();
     assert_eq!(router.accountant().budget(), Some(budget));
@@ -108,6 +109,7 @@ fn router_two_generative_kv_lanes_stay_under_budget() {
         kv_budget: Some(1 << 20),
         max_batch: 2,
         batch_window: Duration::from_millis(5),
+        ..RouterConfig::default()
     };
     let router = Router::new(&e, cfg).unwrap();
     let handle = router.handle();
@@ -216,6 +218,7 @@ fn expired_deadline_is_rejected_without_a_pass() {
         kv_budget: None,
         max_batch: 1,
         batch_window: Duration::from_millis(1),
+        ..RouterConfig::default()
     };
     let router = Router::new(&e, cfg).unwrap();
     let handle = router.handle();
@@ -257,6 +260,7 @@ fn dropped_producer_ends_serving_gracefully() {
         kv_budget: None,
         max_batch: 4,
         batch_window: Duration::from_millis(1),
+        ..RouterConfig::default()
     };
     let router = Router::new(&e, cfg).unwrap();
     let handle = router.handle();
@@ -300,6 +304,7 @@ fn config_validation_rejects_bad_entries_at_open() {
         kv_budget: None,
         max_batch: 2,
         batch_window: Duration::from_millis(1),
+        ..RouterConfig::default()
     };
     let err = Router::new(&e, cfg).unwrap_err().to_string();
     assert!(err.contains("agents"), "{err}");
@@ -311,6 +316,7 @@ fn config_validation_rejects_bad_entries_at_open() {
         kv_budget: None,
         max_batch: 2,
         batch_window: Duration::from_millis(1),
+        ..RouterConfig::default()
     };
     let err = Router::new(&e, cfg).unwrap_err().to_string();
     assert!(err.contains("duplicate"), "{err}");
@@ -325,6 +331,7 @@ fn tcp_front_end_round_trip() {
         kv_budget: None,
         max_batch: 1,
         batch_window: Duration::from_millis(1),
+        ..RouterConfig::default()
     };
     let frontend = TcpFrontend::bind("127.0.0.1:0").unwrap();
     let addr = frontend.local_addr().unwrap();

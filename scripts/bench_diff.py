@@ -1,0 +1,64 @@
+#!/usr/bin/env python3
+"""Fail-soft bench diff: print per-metric deltas between two BENCH_*.json
+trajectory files (`make bench-diff`).
+
+Every numeric leaf shared by both files is reported as old -> new with an
+absolute and relative delta; keys present in only one file are listed so a
+new counter (or a dropped one) is visible at a glance.  The script never
+fails the build: a missing or unparsable file prints a note and exits 0 —
+the diff is advisory, the bench artifact itself is the record.
+"""
+
+import json
+import sys
+
+
+def flatten(value, prefix=""):
+    """Flatten nested dicts/lists into {dotted.path: numeric leaf}."""
+    out = {}
+    if isinstance(value, dict):
+        for k, v in value.items():
+            out.update(flatten(v, f"{prefix}.{k}" if prefix else k))
+    elif isinstance(value, list):
+        for i, v in enumerate(value):
+            out.update(flatten(v, f"{prefix}[{i}]"))
+    elif isinstance(value, (int, float)) and not isinstance(value, bool):
+        out[prefix] = float(value)
+    return out
+
+
+def main(argv):
+    old_path = argv[1] if len(argv) > 1 else "BENCH_pr3.json"
+    new_path = argv[2] if len(argv) > 2 else "BENCH_pr4.json"
+    sides = {}
+    for name, path in (("old", old_path), ("new", new_path)):
+        try:
+            with open(path) as f:
+                sides[name] = flatten(json.load(f))
+        except (OSError, ValueError) as e:
+            print(f"bench-diff: cannot read {path}: {e} (skipping diff)")
+            return 0
+    old, new = sides["old"], sides["new"]
+    shared = sorted(set(old) & set(new))
+    print(f"bench-diff: {old_path} -> {new_path} ({len(shared)} shared metrics)")
+    for key in shared:
+        a, b = old[key], new[key]
+        if a == b:
+            continue
+        rel = f" ({(b - a) / a * 100:+.1f}%)" if a else ""
+        print(f"  {key}: {a:g} -> {b:g}  [{b - a:+g}{rel}]")
+    only_old = sorted(set(old) - set(new))
+    only_new = sorted(set(new) - set(old))
+    if only_old:
+        print(f"  only in {old_path}: {', '.join(only_old[:20])}"
+              + (" ..." if len(only_old) > 20 else ""))
+    if only_new:
+        print(f"  only in {new_path}: {', '.join(only_new[:20])}"
+              + (" ..." if len(only_new) > 20 else ""))
+    if not only_old and not only_new and all(old[k] == new[k] for k in shared):
+        print("  no differences")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
