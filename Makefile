@@ -23,20 +23,22 @@ test:
 examples:
 	cargo build --release --examples
 
-# Record serve --json perf trajectories (one-model kv off/on, a two-lane
-# router run, and an elastic shrink-grow run) into BENCH_pr3.json (PR 3
-# layout, for cross-PR diffing) + BENCH_pr4.json; CI uploads both.
+# Record perf trajectories (one-model kv off/on, a two-lane router run,
+# an elastic shrink-grow run, and a pinned gpt2-base-sim decode measured
+# with PR 4 semantics AND with the overlapped decode path) into
+# BENCH_pr4.json + BENCH_pr5.json; CI uploads both.
 bench:
 	cargo run --release --example bench_trajectory
 
-# Fail-soft per-metric deltas between the PR 3 and PR 4 trajectories
+# Fail-soft per-metric deltas between the PR 4 and PR 5 trajectories
 # (advisory: a missing file prints a note instead of failing the build).
 # NOTE: one `make bench` run writes both files from the same summaries, so
-# the shared sections diff to zero by construction — the deltas carry
-# signal when BENCH_pr3.json comes from an earlier checkout or a previous
-# CI run's artifact dropped in place.
+# the serve sections diff to zero by construction — the signal is the
+# `decode_gpt2_pinned` section (non-overlapped vs overlapped decode) plus
+# whatever a previous CI run's BENCH_pr4 artifact contributes when dropped
+# in place.
 bench-diff:
-	$(PY) scripts/bench_diff.py BENCH_pr3.json BENCH_pr4.json
+	$(PY) scripts/bench_diff.py BENCH_pr4.json BENCH_pr5.json
 
 fmt:
 	cargo fmt --check

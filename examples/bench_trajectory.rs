@@ -1,8 +1,7 @@
 //! `make bench` driver: record a machine-readable perf trajectory so
 //! future PRs can diff serving behavior (`make bench-diff`).
 //!
-//! Four runs, all on tiny profiles with unthrottled storage (fast + free
-//! of disk variance):
+//! Five runs, all with unthrottled storage (fast + free of disk variance):
 //!
 //! * `one_model`         — generative serve, KV cache OFF (paper decode)
 //! * `one_model_kv`      — same workload with `--kv-cache`
@@ -10,11 +9,16 @@
 //!   budget, each with a KV allocation
 //! * `elastic_shrink_grow` — the KV serve again, with a shrink-grow
 //!   memory-pressure trace resizing the budget mid-run
+//! * `decode_gpt2_pinned` — a pinned (`--pin-budget-mb`) gpt2-base-sim
+//!   decode, recorded TWICE under the same key: overlap off (PR 4's
+//!   feature semantics; the worker-pool refactor is common to both) into
+//!   `BENCH_pr4.json` and overlapped (`--prefetch-depth` +
+//!   device-resident cache) into `BENCH_pr5.json`, so `make bench-diff`
+//!   reports the per-token speedup of the overlap features directly.
 //!
-//! The JSON keys are the stable `serve --json` / router summary keys.
-//! The first three runs also land in `BENCH_pr3.json` (the PR 3 baseline
-//! layout, for cross-PR diffing); all four land in `BENCH_pr4.json`.  CI
-//! uploads both files as build artifacts.
+//! The JSON keys are the stable `serve --json` / summary keys (the decode
+//! run uses the `RunReport` keys, incl. `decode_p50_ms` / `decode_p95_ms`
+//! / `tokens_per_sec`).  CI uploads both files as build artifacts.
 
 use std::time::Duration;
 
@@ -109,20 +113,51 @@ fn main() -> Result<()> {
     };
     let elastic = serve(&engine, &elastic_cfg)?;
 
-    let pr3 = Value::obj()
-        .set("bench", "pr3-kv-cache")
-        .set("one_model", off.to_json())
-        .set("one_model_kv", on.to_json())
-        .set("router_two_kv_lanes", router_summary.to_json());
-    pr3.to_file(&std::path::PathBuf::from("BENCH_pr3.json"))?;
+    // gpt2-base-sim pinned decode, measured both ways: overlap OFF
+    // (`--prefetch-depth 0` + device cache disabled — PR 4's FEATURE
+    // semantics; note both runs ride the persistent worker pool, so the
+    // thread-spawn savings are shared, not part of this delta) and
+    // overlap ON.  Same profile, seed, and token count — the per-token
+    // delta isolates prefetch + device-resident weights.
+    let gpt2_total = engine.runtime.profile("gpt2-base-sim")?.total_weight_bytes;
+    let decode_base = RunConfig {
+        profile: "gpt2-base-sim".into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        gen_tokens: Some(4),
+        pin_budget: Some(gpt2_total),
+        prefetch_depth: 0,
+        device_cache: false,
+        ..RunConfig::default()
+    };
+    let mut session = engine.open_session(&decode_base)?;
+    let (decode_pr4, _) = session.run_batch(1, 42)?;
+    drop(session);
+    let mut decode_overlap_cfg = decode_base.clone();
+    decode_overlap_cfg.prefetch_depth = 4;
+    decode_overlap_cfg.device_cache = true;
+    let mut session = engine.open_session(&decode_overlap_cfg)?;
+    let (decode_pr5, _) = session.run_batch(1, 42)?;
+    drop(session);
+
     let pr4 = Value::obj()
         .set("bench", "pr4-elastic")
         .set("one_model", off.to_json())
         .set("one_model_kv", on.to_json())
         .set("router_two_kv_lanes", router_summary.to_json())
-        .set("elastic_shrink_grow", elastic.to_json());
+        .set("elastic_shrink_grow", elastic.to_json())
+        .set("decode_gpt2_pinned", decode_pr4.to_json());
     pr4.to_file(&std::path::PathBuf::from("BENCH_pr4.json"))?;
-    println!("wrote BENCH_pr3.json + BENCH_pr4.json");
+    let pr5 = Value::obj()
+        .set("bench", "pr5-overlapped-decode")
+        .set("one_model", off.to_json())
+        .set("one_model_kv", on.to_json())
+        .set("router_two_kv_lanes", router_summary.to_json())
+        .set("elastic_shrink_grow", elastic.to_json())
+        .set("decode_gpt2_pinned", decode_pr5.to_json());
+    pr5.to_file(&std::path::PathBuf::from("BENCH_pr5.json"))?;
+    println!("wrote BENCH_pr4.json + BENCH_pr5.json");
     println!(
         "one-model p50 {:.1} ms (kv off) vs {:.1} ms (kv on, {} incremental passes); \
          router: {} served, {} kv incremental passes, peak {} B; \
@@ -136,6 +171,17 @@ fn main() -> Result<()> {
         elastic.budget_steps,
         elastic.elastic_evictions,
         elastic.latency.p50(),
+    );
+    println!(
+        "gpt2 pinned decode: token p50 {:.1} ms -> {:.1} ms, {:.2} -> {:.2} tokens/s \
+         ({} device hits, {} prefetched, {} spawns avoided)",
+        decode_pr4.decode_p50_ms,
+        decode_pr5.decode_p50_ms,
+        decode_pr4.tokens_per_sec,
+        decode_pr5.tokens_per_sec,
+        decode_pr5.device_cache_hits,
+        decode_pr5.prefetched_stages,
+        decode_pr5.spawns_avoided,
     );
     Ok(())
 }

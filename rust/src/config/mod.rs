@@ -124,6 +124,16 @@ pub struct RunConfig {
     /// pool's default).  Small blocks waste less memory on short tails;
     /// large blocks amortize reserve calls.  Validated >= 1.
     pub kv_block_tokens: Option<usize>,
+    /// Cross-pass prefetch: while pass k's tail computes, idle Loading
+    /// Agents may speculatively load the first `prefetch_depth` stages of
+    /// pass k+1 (0 = off, the paper's strict per-pass semantics).
+    /// PIPELOAD sessions only; speculation only ever takes budget slack
+    /// and is first in the eviction chain.
+    pub prefetch_depth: usize,
+    /// Device-resident layer cache: keep hot stages' weight `PjRtBuffer`s
+    /// alive across passes so pinned stages skip the host→device re-upload
+    /// (on by default; only active when `pin_budget` > 0 leaves cap room).
+    pub device_cache: bool,
 }
 
 impl RunConfig {
@@ -162,6 +172,12 @@ impl RunConfig {
         }
         if self.agents == 0 {
             anyhow::bail!("agents must be >= 1 (got 0)");
+        }
+        if self.prefetch_depth > 0 && self.mode != Mode::PipeLoad {
+            anyhow::bail!(
+                "--prefetch-depth needs pipeload mode (the other modes keep \
+                 or preload the whole model; there is no next-pass load to hide)"
+            );
         }
         if !profile.batches.contains(&self.batch) {
             anyhow::bail!(
@@ -204,6 +220,8 @@ impl Default for RunConfig {
             kv_cache: false,
             kv_budget: None,
             kv_block_tokens: None,
+            prefetch_depth: 0,
+            device_cache: true,
         }
     }
 }
@@ -289,6 +307,14 @@ mod tests {
 
         let zero_agents = RunConfig { agents: 0, ..ok.clone() };
         assert!(zero_agents.validate(&p).unwrap_err().to_string().contains("agents"));
+
+        // prefetch is a PIPELOAD-only overlap
+        let prefetch_ok = RunConfig { prefetch_depth: 4, ..ok.clone() };
+        assert!(prefetch_ok.validate(&p).is_ok());
+        let prefetch_baseline =
+            RunConfig { prefetch_depth: 4, mode: Mode::Baseline, ..ok.clone() };
+        let e = prefetch_baseline.validate(&p).unwrap_err().to_string();
+        assert!(e.contains("--prefetch-depth"), "{e}");
 
         let bad_batch = RunConfig { batch: 3, ..ok.clone() };
         let e = bad_batch.validate(&p).unwrap_err().to_string();

@@ -11,8 +11,16 @@
 //!   run **exactly once** at [`Engine::open_session`];
 //! * the [`MemoryAccountant`] persists, so the budget (and any pinned
 //!   hot layers) carries across passes;
-//! * the [`OrderedGate`] is rearmed with `reset()` instead of rebuilt;
+//! * the [`OrderedGate`] is rearmed with `begin_pass` (one admission
+//!   epoch per pass) instead of rebuilt;
 //! * the stage-to-agent [`assignment`] is precomputed;
+//! * the Loading Agents and the Daemon are **persistent threads** in a
+//!   [`WorkerPool`], fed per-pass work descriptors — a multi-token decode
+//!   no longer spawns and joins m+1 threads per token;
+//! * with `prefetch_depth > 0` idle loaders speculatively load the next
+//!   decode pass's head stages ([`PrefetchBuffer`]), and with the
+//!   device cache on, hot stages keep their weight `PjRtBuffer`s alive
+//!   and skip the host→device re-upload ([`DeviceCache`]);
 //! * an optional hot-layer [`LayerCache`] (`RunConfig::pin_budget`) lets
 //!   the Daemon pin computed layers instead of destroying them, so the
 //!   next decode token / serve batch skips disk for pinned stages;
@@ -70,11 +78,14 @@ use crate::diskio::Disk;
 use crate::elastic::{BudgetController, BudgetEpoch, ElasticStats, PressureTrace};
 use crate::kvcache::{KvPool, KvPoolStats, KvSeq, DEFAULT_BLOCK_TOKENS};
 use crate::memory::MemoryAccountant;
-use crate::metrics::RunReport;
+use crate::metrics::{LatencyRecorder, RunReport};
 use crate::model::Profile;
 use crate::pipeload::assignment::assignment;
 use crate::pipeload::cache::{CacheStats, LayerCache};
+use crate::pipeload::device::{DeviceCache, DeviceLedger, DeviceStats};
 use crate::pipeload::gate::OrderedGate;
+use crate::pipeload::pool::{PoolStats, TaskGroup, WorkerPool};
+use crate::pipeload::prefetch::{PrefetchBuffer, PrefetchStats};
 use crate::pipeload::{
     run_pass_mode, ExecCtx, ModelInput, PassEnv, PassMode, PassStats, PipelineOpts,
     KV_EVICTED_MIDPASS,
@@ -99,6 +110,19 @@ pub struct Session<'e> {
     gate: OrderedGate,
     plan: Vec<Vec<usize>>,
     cache: Option<LayerCache>,
+    /// persistent Loading Agent + Daemon threads (pipelined modes only):
+    /// passes dispatch work descriptors instead of spawning m+1 threads
+    pool: Option<WorkerPool>,
+    /// cross-pass prefetch buffer (`prefetch_depth` > 0, PIPELOAD only)
+    prefetch: Option<PrefetchBuffer>,
+    /// in-flight speculative loads; error recovery waits this out before
+    /// reasoning about accounting
+    prefetch_group: TaskGroup,
+    /// device-resident layer cache (inference-side; the Send ledger half
+    /// rides the gate's eviction chain)
+    device: Option<DeviceCache>,
+    /// monotonic admission epoch; one per attempted pass
+    pass_epoch: u64,
     /// Paged KV pool (Some when `kv_cache` is on and the profile ships the
     /// incremental decode entries); blocks charge the session accountant.
     kv_pool: Option<KvPool>,
@@ -266,8 +290,23 @@ impl<'e> Session<'e> {
             // blocks under S^stop pressure (after pinned layers)
             gate.add_kv_pool(pool.clone());
         }
+        // cross-pass prefetch + device-resident cache (PIPELOAD only)
+        let prefetch = (cfg.mode == Mode::PipeLoad && cfg.prefetch_depth > 0)
+            .then(PrefetchBuffer::new);
+        if let Some(buffer) = &prefetch {
+            gate.set_prefetch(buffer.clone());
+        }
+        let pin_cap = cache.as_ref().map(|c| c.pin_budget()).unwrap_or(0);
+        let device_cap = Self::device_cap(cfg, profile, budget, pin_cap);
+        let device = (device_cap > 0).then(|| DeviceCache::new(device_cap));
+        if let Some(d) = &device {
+            gate.set_device(d.ledger().clone());
+        }
         let agents = opts.as_ref().map(|o| o.agents.max(1)).unwrap_or(1);
         let plan = assignment(profile.stages.len(), agents);
+        // the persistent worker pool: Loading Agents + Daemon spawned once
+        // here, fed per-pass descriptors for the life of the session
+        let pool = opts.as_ref().map(|_| WorkerPool::new(agents));
         Ok(Session {
             engine,
             cfg: cfg.clone(),
@@ -278,6 +317,11 @@ impl<'e> Session<'e> {
             gate,
             plan,
             cache,
+            pool,
+            prefetch,
+            prefetch_group: TaskGroup::new(),
+            device,
+            pass_epoch: 0,
             kv_pool,
             kv_victims: Vec::new(),
             resident: None,
@@ -330,6 +374,26 @@ impl<'e> Session<'e> {
             pin = pin.min(budget.saturating_sub(profile.max_stage_bytes()));
         }
         Some(LayerCache::with_policy(pin, cfg.pin_policy))
+    }
+
+    /// Device-resident cache sizing.  Device copies coexist with the host
+    /// pins they mirror, so their cap comes out of the slack the budget
+    /// has *beyond* the pin cap and the `max_stage` liveness headroom —
+    /// `pin_cap + device_cap + max_stage <= budget` keeps the joint
+    /// residency inside the same liveness rule the pin cap obeys alone.
+    /// Unconstrained budgets mirror the configured pin budget.
+    fn device_cap(cfg: &RunConfig, profile: &Profile, budget: Option<u64>, pin_cap: u64) -> u64 {
+        if cfg.mode != Mode::PipeLoad || !cfg.device_cache {
+            return 0;
+        }
+        let pin_cfg = cfg.pin_budget.unwrap_or(0);
+        if pin_cfg == 0 {
+            return 0;
+        }
+        match budget {
+            None => pin_cfg,
+            Some(b) => pin_cfg.min(b.saturating_sub(pin_cap + profile.max_stage_bytes())),
+        }
     }
 
     pub fn profile(&self) -> &Profile {
@@ -392,6 +456,35 @@ impl<'e> Session<'e> {
         self.gate.add_victim(cache);
     }
 
+    /// Cross-pass prefetch counters (zeros when prefetch is off).
+    pub fn prefetch_stats(&self) -> PrefetchStats {
+        self.prefetch.as_ref().map(|b| b.stats()).unwrap_or_default()
+    }
+
+    /// Device-resident cache counters (zeros when the cache is off).
+    pub fn device_stats(&self) -> DeviceStats {
+        self.device.as_ref().map(|d| d.stats()).unwrap_or_default()
+    }
+
+    /// Worker-pool thread accounting (zeros for baseline sessions).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.as_ref().map(|p| p.stats()).unwrap_or_default()
+    }
+
+    /// The Send half of the device cache, for cross-session victim wiring
+    /// (None when the cache is off).
+    pub fn device_ledger(&self) -> Option<DeviceLedger> {
+        self.device.as_ref().map(|d| d.ledger().clone())
+    }
+
+    /// Register another session's device ledger as an eviction target
+    /// (same shared-accountant requirement as
+    /// [`Session::add_eviction_victim`]; the victim re-uploads on its next
+    /// pass — degraded, never wrong).
+    pub fn add_device_eviction_victim(&mut self, ledger: DeviceLedger) {
+        self.gate.add_victim_device(ledger);
+    }
+
     /// Register another session's KV pool as an eviction target (same
     /// shared-accountant requirement as [`Session::add_eviction_victim`]).
     /// The victim lane's evicted sequences fall back to full-prefix
@@ -437,12 +530,15 @@ impl<'e> Session<'e> {
         self.elastic_totals
     }
 
-    /// Cumulative own-state eviction count (pinned layers + KV blocks over
-    /// this session's lifetime, from any pressure source) — the base the
-    /// Router reconciles cross-lane elastic attribution from.
+    /// Cumulative own-state eviction count (pinned layers + KV blocks +
+    /// device copies + wasted prefetches over this session's lifetime,
+    /// from any pressure source) — the base the Router reconciles
+    /// cross-lane elastic attribution from.
     pub fn own_eviction_count(&self) -> u64 {
         self.cache.as_ref().map(|c| c.stats().evictions).unwrap_or(0)
             + self.kv_pool.as_ref().map(|p| p.stats().evicted_blocks).unwrap_or(0)
+            + self.device.as_ref().map(|d| d.stats().evictions).unwrap_or(0)
+            + self.prefetch.as_ref().map(|b| b.stats().wasted).unwrap_or(0)
     }
 
     /// Credit elastic evictions observed OUTSIDE this session's own apply
@@ -527,6 +623,11 @@ impl<'e> Session<'e> {
         if let Some(cache) = &self.cache {
             freed += cache.set_pin_budget(pin_cap, &self.accountant);
         }
+        let device_cap =
+            Self::device_cap(&self.cfg, self.ctx.profile, Some(new_budget), pin_cap);
+        if let Some(d) = &self.device {
+            freed += d.ledger().set_cap(device_cap, &self.accountant);
+        }
         if let Some(pool) = &self.kv_pool {
             freed += pool.set_kv_budget(kv_cap);
         }
@@ -544,6 +645,9 @@ impl<'e> Session<'e> {
                     if agents != opts.agents {
                         opts.agents = agents;
                         self.plan = assignment(self.ctx.profile.stages.len(), agents);
+                        if let Some(pool) = &self.pool {
+                            pool.ensure_loaders(agents); // pool grows, never respawns
+                        }
                         replanned = true;
                     }
                 }
@@ -617,13 +721,17 @@ impl<'e> Session<'e> {
         let mut kv_rec = 0u64;
         let kv_evicted0 = self.kv_pool_stats().evicted_blocks;
         let elastic0 = self.elastic_totals;
+        let prefetch0 = self.prefetch_stats();
+        let spawns_avoided0 = self.pool_stats().spawns_avoided();
+        // per-token decode latency distribution (generative runs)
+        let mut token_lat = LatencyRecorder::new();
 
         if !profile.is_generative() {
             self.poll_elastic();
             let (out, stats) = if self.opts.is_none() {
                 self.baseline_forward(&input)?
             } else {
-                self.pass(&input)?
+                self.pass(&input, false)?
             };
             head = self.engine.runtime.buffer_to_f32(&out)?;
             passes.push(stats);
@@ -641,6 +749,10 @@ impl<'e> Session<'e> {
             let mut cur_len = prompt_len;
 
             for step in 0..gen_tokens {
+                let t_tok = Instant::now();
+                // idle loaders may prefetch the next token's head stages
+                // while this token's tail still computes
+                let expect_next = step + 1 < gen_tokens;
                 // elastic budget steps land here, between token passes
                 self.poll_elastic();
                 // Incremental when the cached prefix lines up exactly with
@@ -661,7 +773,11 @@ impl<'e> Session<'e> {
                     let seq = kv_seq.as_ref().unwrap();
                     let inp = ModelInput::Ids(last_next.clone());
                     let pos = cur_len - 1;
-                    match self.pass_mode(&inp, &PassMode::Incremental { kv: seq, pos }) {
+                    match self.pass_mode(
+                        &inp,
+                        &PassMode::Incremental { kv: seq, pos },
+                        expect_next,
+                    ) {
                         Ok((out, stats)) => {
                             seq.set_tokens(cur_len);
                             kv_inc += 1;
@@ -713,11 +829,11 @@ impl<'e> Session<'e> {
                                 kv: kv_seq.as_ref().unwrap(),
                                 prefix_len: cur_len,
                             };
-                            let r = self.pass_mode(&inp, &mode)?;
+                            let r = self.pass_mode(&inp, &mode, expect_next)?;
                             kv_seq.as_ref().unwrap().set_tokens(cur_len);
                             r
                         } else {
-                            self.pass(&inp)?
+                            self.pass(&inp, expect_next)?
                         };
                         (self.engine.runtime.buffer_to_f32(&out)?, false, stats)
                     }
@@ -741,6 +857,7 @@ impl<'e> Session<'e> {
                 };
                 last_next = next;
                 passes.push(stats);
+                token_lat.record(t_tok.elapsed());
             }
             // request over: blocks go back to the budget here
             drop(kv_seq);
@@ -748,6 +865,12 @@ impl<'e> Session<'e> {
         let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
         self.kv_inc_total += kv_inc;
         self.kv_recompute_total += kv_rec;
+        let prefetch1 = self.prefetch_stats();
+        let tokens_per_sec = if token_lat.is_empty() {
+            0.0
+        } else {
+            token_lat.len() as f64 / (latency_ms / 1000.0).max(1e-9)
+        };
 
         let report = RunReport {
             model: self.cfg.profile.clone(),
@@ -770,14 +893,27 @@ impl<'e> Session<'e> {
             elastic_evictions: self.elastic_totals.elastic_evictions
                 - elastic0.elastic_evictions,
             replans: self.elastic_totals.replans - elastic0.replans,
+            prefetched_stages: prefetch1.prefetched - prefetch0.prefetched,
+            prefetch_wasted: prefetch1.wasted - prefetch0.wasted,
+            device_cache_hits: passes.iter().map(|p| p.device_cache_hits).sum(),
+            spawns_avoided: self.pool_stats().spawns_avoided() - spawns_avoided0,
+            decode_p50_ms: token_lat.p50(),
+            decode_p95_ms: token_lat.p95(),
+            tokens_per_sec,
         };
         head.truncate(16);
         Ok((report, RunOutput { generated, generated_rows, head_sample: head }))
     }
 
-    /// One pipelined pass over persistent session state.
-    fn pass(&mut self, input: &ModelInput) -> Result<(xla::PjRtBuffer, PassStats)> {
-        self.pass_mode(input, &PassMode::Full)
+    /// One pipelined pass over persistent session state.  `expect_next`
+    /// tells the pass machinery another pass follows (decode loops), so
+    /// idle loaders may prefetch the next pass's head stages.
+    fn pass(
+        &mut self,
+        input: &ModelInput,
+        expect_next: bool,
+    ) -> Result<(xla::PjRtBuffer, PassStats)> {
+        self.pass_mode(input, &PassMode::Full, expect_next)
     }
 
     /// [`Session::pass`] with an explicit [`PassMode`] (KV decode paths).
@@ -785,26 +921,62 @@ impl<'e> Session<'e> {
         &mut self,
         input: &ModelInput,
         mode: &PassMode,
+        expect_next: bool,
     ) -> Result<(xla::PjRtBuffer, PassStats)> {
+        // Quiesce leftover speculative loads from the previous pass before
+        // snapshotting: a prefetch task mutating the accountant between the
+        // snapshots below would skew failed-pass recovery.  Costs ~nothing:
+        // each agent's regular work queues behind its prefetch task anyway.
+        self.prefetch_group.wait_idle();
+        // every attempted pass is a fresh admission epoch: stragglers from
+        // a failed pass error out as stale instead of corrupting the order
+        self.pass_epoch += 1;
+        self.gate.begin_pass(self.pass_epoch);
         let opts = self.opts.as_ref().expect("pass() requires a pipelined mode");
-        self.gate.reset();
+        let pool = self.pool.as_ref().expect("pipelined sessions own a worker pool");
         // Snapshots for shared-accountant error recovery (see below).
         let used0 = self.accountant.used();
         let own_pins0 = self.cache.as_ref().map(|c| c.stats().pinned_bytes).unwrap_or(0);
         let own_kv0 = self.kv_pool.as_ref().map(|p| p.used_bytes()).unwrap_or(0);
+        let own_prefetch0 = self.prefetch.as_ref().map(|b| b.stats().buffered_bytes).unwrap_or(0);
+        let own_device0 = self.device.as_ref().map(|d| d.stats().resident_bytes).unwrap_or(0);
         let victim_pins0 = self.gate.victim_pinned_bytes();
         let victim_kv0: u64 = self.kv_victims.iter().map(|p| p.used_bytes()).sum();
+        let victim_dev0 = self.gate.victim_device_bytes();
         self.accountant.reset_peak_to_used();
-        let env = PassEnv { gate: &self.gate, cache: self.cache.as_ref(), plan: &self.plan };
+        let env = PassEnv {
+            gate: &self.gate,
+            cache: self.cache.as_ref(),
+            plan: &self.plan,
+            pool,
+            epoch: self.pass_epoch,
+            prefetch: self.prefetch.as_ref(),
+            prefetch_depth: self.cfg.prefetch_depth,
+            expect_next,
+            prefetch_group: Some(&self.prefetch_group),
+            device: self.device.as_ref(),
+        };
         let r = run_pass_mode(&self.ctx, opts, &env, input, mode);
         if r.is_err() {
+            // speculative loads may still be mutating the accountant and
+            // the prefetch buffer; wait them out before reasoning about
+            // what the failed pass left behind
+            self.prefetch_group.wait_idle();
             if self.owns_accountant {
                 // A failed pass can leave in-flight bytes accounted; drop
-                // any pins and cached KV, then restart the accounting
-                // wholesale (the pool frees BEFORE the reset so its own
-                // byte tracking stays consistent with the accountant's).
+                // any pins, speculative loads, device copies, and cached
+                // KV, then restart the accounting wholesale (the pool
+                // frees BEFORE the reset so its own byte tracking stays
+                // consistent with the accountant's).
                 if let Some(c) = &self.cache {
                     c.clear();
+                }
+                if let Some(b) = &self.prefetch {
+                    b.clear();
+                }
+                if let Some(d) = &self.device {
+                    d.ledger().clear();
+                    d.sweep();
                 }
                 if let Some(p) = &self.kv_pool {
                     p.invalidate_all();
@@ -813,14 +985,22 @@ impl<'e> Session<'e> {
             } else {
                 // Shared accountant: other sessions' pins and residents are
                 // still accounted in it, so release exactly what this pass
-                // left behind — our pins, our KV blocks, and any in-flight
-                // bytes — and clear the shutdown the failed pass raised.
-                // Other sessions' bytes after the pass = what they held
-                // before, minus any of their pins/KV we evicted while
-                // running; the router runs one pass at a time, so the
-                // snapshots are exact.
+                // left behind — our pins, prefetches, device copies, KV
+                // blocks, and any in-flight bytes — and clear the shutdown
+                // the failed pass raised.  Other sessions' bytes after the
+                // pass = what they held before, minus any of their
+                // pins/KV/device state we evicted while running; the
+                // router runs one pass at a time, so the snapshots are
+                // exact.
                 if let Some(c) = &self.cache {
                     c.drain(&self.accountant);
+                }
+                if let Some(b) = &self.prefetch {
+                    b.drain(&self.accountant);
+                }
+                if let Some(d) = &self.device {
+                    d.ledger().drain(&self.accountant);
+                    d.sweep();
                 }
                 if let Some(p) = &self.kv_pool {
                     p.invalidate_all();
@@ -829,11 +1009,16 @@ impl<'e> Session<'e> {
                     victim_pins0.saturating_sub(self.gate.victim_pinned_bytes());
                 let victim_kv_now: u64 = self.kv_victims.iter().map(|p| p.used_bytes()).sum();
                 let victim_kv_evicted = victim_kv0.saturating_sub(victim_kv_now);
+                let victim_dev_evicted =
+                    victim_dev0.saturating_sub(self.gate.victim_device_bytes());
                 let others_now = used0
                     .saturating_sub(own_pins0)
                     .saturating_sub(own_kv0)
+                    .saturating_sub(own_prefetch0)
+                    .saturating_sub(own_device0)
                     .saturating_sub(victims_evicted)
-                    .saturating_sub(victim_kv_evicted);
+                    .saturating_sub(victim_kv_evicted)
+                    .saturating_sub(victim_dev_evicted);
                 let leaked = self.accountant.used().saturating_sub(others_now);
                 if leaked > 0 {
                     self.accountant.free(leaked);

@@ -212,6 +212,8 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "kv-cache", takes_value: false, default: None, help: "paged KV cache: decode runs 1 full-prefix pass + incremental single-token passes (GPT-style profiles)" });
     opts.push(Opt { name: "kv-budget-mb", takes_value: true, default: None, help: "KV pool cap in MB (with --kv-cache; pin + kv must fit --budget-mb)" });
     opts.push(Opt { name: "kv-block-tokens", takes_value: true, default: None, help: "KV pool allocation granularity in tokens per block (with --kv-cache; >= 1)" });
+    opts.push(Opt { name: "prefetch-depth", takes_value: true, default: Some("0"), help: "cross-pass prefetch: idle loaders preload this many head stages of the next decode pass (pipeload; 0 = off)" });
+    opts.push(Opt { name: "no-device-cache", takes_value: false, default: None, help: "disable the device-resident layer cache (pinned stages then re-upload host->device every pass)" });
     opts.push(Opt { name: "batch", takes_value: true, default: Some("1"), help: "batch size (must be AOT-compiled)" });
     opts.push(Opt { name: "tokens", takes_value: true, default: None, help: "generated tokens (generative models)" });
     opts.push(Opt { name: "trace", takes_value: false, default: None, help: "print the execution Gantt chart" });
@@ -254,6 +256,8 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         kv_cache: a.flag("kv-cache"),
         kv_budget: a.mb_bytes("kv-budget-mb")?,
         kv_block_tokens: a.get("kv-block-tokens").map(|s| s.parse()).transpose()?,
+        prefetch_depth: a.usize("prefetch-depth")?,
+        device_cache: !a.flag("no-device-cache"),
     };
     let tracer = Tracer::new(cfg.trace);
     let mut builder = engine.session(&cfg).tracer(&tracer);
@@ -281,6 +285,20 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         println!(
             "  kv cache:   {} incremental passes / {} full recomputes ({} blocks evicted)",
             rep.kv_inc_passes, rep.kv_recomputes, rep.kv_evicted_blocks
+        );
+    }
+    if rep.prefetched_stages + rep.device_cache_hits + rep.spawns_avoided > 0 {
+        println!(
+            "  overlap:    {} prefetched ({} wasted), {} device-cache hits, {} spawns avoided",
+            rep.prefetched_stages, rep.prefetch_wasted, rep.device_cache_hits, rep.spawns_avoided
+        );
+    }
+    if rep.tokens > 0 && rep.tokens_per_sec > 0.0 {
+        println!(
+            "  decode:     p50 {}  p95 {}  ({:.2} tokens/s)",
+            human_ms(rep.decode_p50_ms),
+            human_ms(rep.decode_p95_ms),
+            rep.tokens_per_sec
         );
     }
     if rep.budget_steps > 0 {
@@ -329,6 +347,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "kv-cache", takes_value: false, default: None, help: "paged KV cache for generative lanes (incremental decode)" });
     opts.push(Opt { name: "kv-budget-mb", takes_value: true, default: None, help: "global KV allocation in MB, split across --kv-cache lanes (remainder to the first lane)" });
     opts.push(Opt { name: "kv-block-tokens", takes_value: true, default: None, help: "KV pool allocation granularity in tokens per block (with --kv-cache; >= 1)" });
+    opts.push(Opt { name: "prefetch-depth", takes_value: true, default: Some("0"), help: "cross-pass prefetch depth for every lane (pipeload; 0 = off)" });
+    opts.push(Opt { name: "no-device-cache", takes_value: false, default: None, help: "disable the device-resident layer cache" });
     opts.push(Opt { name: "memory-trace", takes_value: true, default: None, help: "elastic budget for the SHARED accountant: JSON steps file, or 'shrink-grow' from --budget-mb (at_pass counts passes across all lanes)" });
     opts.push(Opt { name: "requests", takes_value: true, default: Some("16"), help: "requests to serve (synthetic workload mode)" });
     opts.push(Opt { name: "rps", takes_value: true, default: Some("0"), help: "mean arrival rate (0 = closed loop)" });
@@ -365,6 +385,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                 pin_policy: PinPolicy::parse(a.req("pin-policy")?)?,
                 kv_cache: a.flag("kv-cache"),
                 kv_block_tokens: a.get("kv-block-tokens").map(|s| s.parse()).transpose()?,
+                prefetch_depth: a.usize("prefetch-depth")?,
+                device_cache: !a.flag("no-device-cache"),
                 disk: a.req("disk")?.to_string(),
                 seed: a.u64("seed")?,
                 ..RunConfig::default()
@@ -442,6 +464,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         println!(
             "  kv cache:  {} incremental passes / {} recomputes ({} blocks evicted)",
             s.kv_inc_passes, s.kv_recomputes, s.kv_evicted_blocks
+        );
+    }
+    if s.prefetched_stages + s.device_cache_hits + s.spawns_avoided > 0 {
+        println!(
+            "  overlap:   {} prefetched ({} wasted), {} device-cache hits, {} spawns avoided",
+            s.prefetched_stages, s.prefetch_wasted, s.device_cache_hits, s.spawns_avoided
         );
     }
     if s.budget_steps > 0 {

@@ -84,9 +84,18 @@ impl MemoryAccountant {
 
     /// Non-blocking acquire; false if it would exceed the budget.
     pub fn try_acquire(&self, bytes: u64) -> bool {
+        self.try_acquire_reserving(bytes, 0)
+    }
+
+    /// Non-blocking acquire that additionally keeps `reserve` bytes of
+    /// headroom untouched: succeeds only if `used + bytes + reserve` fits
+    /// the budget.  Speculative callers (cross-pass prefetch) use the
+    /// running pass's `max_stage` as the reserve, so speculation can never
+    /// consume the slack the pass's own next admission needs.
+    pub fn try_acquire_reserving(&self, bytes: u64, reserve: u64) -> bool {
         let (lock, _) = &*self.inner;
         let mut s = lock.lock().unwrap();
-        if s.shutdown || s.budget.map(|b| s.used + bytes > b).unwrap_or(false) {
+        if s.shutdown || s.budget.map(|b| s.used + bytes + reserve > b).unwrap_or(false) {
             return false;
         }
         s.used += bytes;
@@ -252,6 +261,20 @@ mod tests {
         assert!(!m.try_acquire(60));
         m.free(60);
         assert!(m.try_acquire(60));
+    }
+
+    #[test]
+    fn try_acquire_reserving_keeps_headroom() {
+        let m = MemoryAccountant::new(Some(100));
+        assert!(!m.try_acquire_reserving(80, 30), "80 + 30 reserve > 100");
+        assert!(m.try_acquire_reserving(70, 30));
+        assert_eq!(m.used(), 70);
+        assert!(!m.try_acquire_reserving(1, 30));
+        // plain acquire may still take the reserved slack
+        assert!(m.try_acquire(30));
+        // unconstrained budget never blocks
+        let u = MemoryAccountant::unlimited();
+        assert!(u.try_acquire_reserving(1 << 40, 1 << 40));
     }
 
     #[test]

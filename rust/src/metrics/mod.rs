@@ -113,6 +113,20 @@ pub struct RunReport {
     pub elastic_evictions: u64,
     /// elastic controller: epoch re-plans that changed the agent count
     pub replans: u64,
+    /// cross-pass prefetch: stages loaded ahead of their pass
+    pub prefetched_stages: u64,
+    /// cross-pass prefetch: speculative loads reclaimed before use
+    pub prefetch_wasted: u64,
+    /// device-resident cache: stages that skipped host->device upload
+    pub device_cache_hits: u64,
+    /// worker pool: thread spawn/joins avoided vs the per-pass design
+    pub spawns_avoided: u64,
+    /// per-token decode latency p50 (generative runs; 0 otherwise)
+    pub decode_p50_ms: f64,
+    /// per-token decode latency p95 (generative runs; 0 otherwise)
+    pub decode_p95_ms: f64,
+    /// decode throughput over the whole request (generative runs)
+    pub tokens_per_sec: f64,
 }
 
 impl RunReport {
@@ -146,6 +160,13 @@ impl RunReport {
             .set("budget_steps", self.budget_steps)
             .set("elastic_evictions", self.elastic_evictions)
             .set("replans", self.replans)
+            .set("prefetched_stages", self.prefetched_stages)
+            .set("prefetch_wasted", self.prefetch_wasted)
+            .set("device_cache_hits", self.device_cache_hits)
+            .set("spawns_avoided", self.spawns_avoided)
+            .set("decode_p50_ms", self.decode_p50_ms)
+            .set("decode_p95_ms", self.decode_p95_ms)
+            .set("tokens_per_sec", self.tokens_per_sec)
     }
 }
 
@@ -289,6 +310,13 @@ mod tests {
             budget_steps: 0,
             elastic_evictions: 0,
             replans: 0,
+            prefetched_stages: 0,
+            prefetch_wasted: 0,
+            device_cache_hits: 0,
+            spawns_avoided: 0,
+            decode_p50_ms: 0.0,
+            decode_p95_ms: 0.0,
+            tokens_per_sec: 0.0,
         };
         assert_eq!(r.cache_hit_rate(), 0.0); // no cache attached
         r.cache_hits = 3;

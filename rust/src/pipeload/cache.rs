@@ -186,6 +186,12 @@ impl LayerCache {
         self.inner.lock().unwrap().misses += 1;
     }
 
+    /// Is this stage currently pinned?  (Snapshot — prefetch tasks use it
+    /// to skip loading stages the next pass will hit anyway.)
+    pub fn is_pinned(&self, stage: usize) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(&stage)
+    }
+
     /// Try to pin a computed stage instead of destroying it.  Returns false
     /// when the pin budget has no room — the caller destroys as usual.
     /// The stage's bytes remain accounted in the pass accountant on success.
@@ -209,6 +215,13 @@ impl LayerCache {
         score: f64,
     ) -> (bool, u64) {
         let mut s = self.inner.lock().unwrap();
+        // Never double-pin a stage: with cross-pass prefetch a pass can
+        // compute a buffer-sourced copy of a stage whose pin was never
+        // taken, and overwriting the entry would orphan the old copy's
+        // accounted bytes.  The caller destroys the duplicate as usual.
+        if s.entries.contains_key(&stage) {
+            return (false, 0);
+        }
         let pin_budget = s.pin_budget;
         let mut displaced_bytes = 0u64;
         if s.pinned_bytes + bytes > pin_budget {

@@ -1,0 +1,369 @@
+//! Device-resident weight cache: skip host→device re-upload on hot stages.
+//!
+//! The hot-layer [`LayerCache`] keeps a pinned stage's *host* bytes across
+//! passes, but every pass still pays `buffer_from_tensor` to re-upload
+//! those bytes to the device before execution.  This cache is the
+//! inference-side companion: after a stage executes, its weight
+//! `PjRtBuffer`s may be kept alive so the next pass executes straight from
+//! the device copy — no upload at all.
+//!
+//! PJRT buffer types are **not Send**, so the buffers themselves live only
+//! on the inference thread, inside [`DeviceCache`].  Byte accounting and
+//! eviction, however, must be visible to the loader threads' `S^stop`
+//! eviction chain and to the elastic controller — that Send half is the
+//! [`DeviceLedger`].  The split works on a mark-and-sweep contract:
+//!
+//! * the ledger tracks per-stage byte counts; the eviction chain frees a
+//!   stage's bytes from the accountant and marks the stage evicted;
+//! * the inference thread **sweeps** at each pass boundary (and before
+//!   every lookup), dropping the buffers of marked stages;
+//! * a stage the inference agent is *currently executing from* is flagged
+//!   in-use and skipped by the chain, so a buffer is never reclaimed out
+//!   from under a running `execute`.
+//!
+//! Device bytes sit between speculative prefetch and pinned host layers in
+//! the eviction order: re-creating them costs one upload (cheaper than a
+//! disk read, dearer than nothing).
+//!
+//! [`LayerCache`]: crate::pipeload::cache::LayerCache
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::memory::MemoryAccountant;
+
+/// Counters for the `device_cache_hits` metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeviceStats {
+    /// stages executed from device-resident weights (upload skipped)
+    pub hits: u64,
+    /// stages whose weight buffers were retained after execution
+    pub retained: u64,
+    /// device entries reclaimed under memory pressure
+    pub evictions: u64,
+    /// bytes currently accounted to device-resident weights
+    pub resident_bytes: u64,
+}
+
+#[derive(Debug)]
+struct DevEntry {
+    bytes: u64,
+    last_use: u64,
+    in_use: bool,
+}
+
+#[derive(Debug)]
+struct LedgerState {
+    live: HashMap<usize, DevEntry>,
+    /// stages evicted by the chain, awaiting the inference-side sweep
+    swept: Vec<usize>,
+    cap: u64,
+    bytes: u64,
+    clock: u64,
+    hits: u64,
+    retained: u64,
+    evictions: u64,
+}
+
+/// Send half of the device cache: byte accounting + eviction marks.
+#[derive(Debug, Clone)]
+pub struct DeviceLedger {
+    inner: Arc<Mutex<LedgerState>>,
+}
+
+impl DeviceLedger {
+    pub fn new(cap: u64) -> DeviceLedger {
+        DeviceLedger {
+            inner: Arc::new(Mutex::new(LedgerState {
+                live: HashMap::new(),
+                swept: Vec::new(),
+                cap,
+                bytes: 0,
+                clock: 0,
+                hits: 0,
+                retained: 0,
+                evictions: 0,
+            })),
+        }
+    }
+
+    pub fn cap(&self) -> u64 {
+        self.inner.lock().unwrap().cap
+    }
+
+    /// Reserve ledger room for a stage's device copy.  The stage's bytes
+    /// must already be accounted (the pass `force_add`s the device copy
+    /// before executing); retention just stops the post-execute free.
+    pub fn try_retain(&self, stage: usize, bytes: u64) -> bool {
+        let mut s = self.inner.lock().unwrap();
+        if s.live.contains_key(&stage) || s.bytes + bytes > s.cap {
+            return false;
+        }
+        s.clock += 1;
+        let clock = s.clock;
+        s.bytes += bytes;
+        s.retained += 1;
+        s.live.insert(stage, DevEntry { bytes, last_use: clock, in_use: true });
+        true
+    }
+
+    /// Mark a stage's device copy in use for the current execute (hit).
+    /// Returns false when the stage is not resident (evicted since the
+    /// caller last looked) — the caller re-uploads.
+    pub fn begin_use(&self, stage: usize) -> bool {
+        let mut s = self.inner.lock().unwrap();
+        s.clock += 1;
+        let clock = s.clock;
+        match s.live.get_mut(&stage) {
+            Some(e) => {
+                e.in_use = true;
+                e.last_use = clock;
+                s.hits += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release the in-use flag after execution.
+    pub fn end_use(&self, stage: usize) {
+        let mut s = self.inner.lock().unwrap();
+        if let Some(e) = s.live.get_mut(&stage) {
+            e.in_use = false;
+        }
+    }
+
+    fn evict_one(s: &mut LedgerState) -> Option<u64> {
+        let victim = s
+            .live
+            .iter()
+            .filter(|(_, e)| !e.in_use)
+            .min_by_key(|(_, e)| e.last_use)
+            .map(|(&st, _)| st)?;
+        let e = s.live.remove(&victim).unwrap();
+        s.bytes -= e.bytes;
+        s.evictions += 1;
+        s.swept.push(victim);
+        Some(e.bytes)
+    }
+
+    /// Pressure valve: reclaim device entries (LRU, skipping the one in
+    /// use) until `bytes` fit the accountant's budget or nothing is left.
+    /// Returns bytes freed.  The buffers die at the next inference sweep.
+    pub fn evict_for(&self, bytes: u64, accountant: &MemoryAccountant) -> u64 {
+        let mut s = self.inner.lock().unwrap();
+        let mut freed = 0u64;
+        while accountant.would_block(bytes) {
+            match Self::evict_one(&mut s) {
+                Some(b) => {
+                    freed += b;
+                    accountant.free(b);
+                }
+                None => break,
+            }
+        }
+        freed
+    }
+
+    /// Retarget the cap (elastic budget step): shrinking evicts LRU device
+    /// entries until the new cap holds, returning their bytes through
+    /// `accountant`.  Returns bytes freed.
+    pub fn set_cap(&self, new_cap: u64, accountant: &MemoryAccountant) -> u64 {
+        let mut s = self.inner.lock().unwrap();
+        s.cap = new_cap;
+        let mut freed = 0u64;
+        while s.bytes > new_cap {
+            match Self::evict_one(&mut s) {
+                Some(b) => {
+                    freed += b;
+                    accountant.free(b);
+                }
+                None => break,
+            }
+        }
+        freed
+    }
+
+    /// Drop every entry AND return its bytes to `accountant` (failed-pass
+    /// recovery under a shared accountant).  Not counted as evictions.
+    pub fn drain(&self, accountant: &MemoryAccountant) -> u64 {
+        let mut s = self.inner.lock().unwrap();
+        let mut freed = 0u64;
+        let stages: Vec<usize> = s.live.keys().copied().collect();
+        for stage in stages {
+            let e = s.live.remove(&stage).unwrap();
+            freed += e.bytes;
+            s.swept.push(stage);
+            accountant.free(e.bytes);
+        }
+        s.bytes = 0;
+        freed
+    }
+
+    /// Drop every entry without touching the accountant (owned-accountant
+    /// wholesale reset).
+    pub fn clear(&self) {
+        let mut s = self.inner.lock().unwrap();
+        let stages: Vec<usize> = s.live.keys().copied().collect();
+        s.swept.extend(stages);
+        s.live.clear();
+        s.bytes = 0;
+    }
+
+    /// Stages evicted since the last sweep — the inference thread drops
+    /// their buffers.
+    pub fn take_swept(&self) -> Vec<usize> {
+        std::mem::take(&mut self.inner.lock().unwrap().swept)
+    }
+
+    pub fn stats(&self) -> DeviceStats {
+        let s = self.inner.lock().unwrap();
+        DeviceStats {
+            hits: s.hits,
+            retained: s.retained,
+            evictions: s.evictions,
+            resident_bytes: s.bytes,
+        }
+    }
+}
+
+/// Inference-thread half: the actual `PjRtBuffer`s, keyed by stage.
+/// NOT Send (PJRT buffers wrap raw pointers) — lives inside the `Session`.
+pub struct DeviceCache {
+    ledger: DeviceLedger,
+    bufs: RefCell<HashMap<usize, Vec<xla::PjRtBuffer>>>,
+}
+
+impl DeviceCache {
+    pub fn new(cap: u64) -> DeviceCache {
+        DeviceCache { ledger: DeviceLedger::new(cap), bufs: RefCell::new(HashMap::new()) }
+    }
+
+    /// The Send accounting handle (for the gate's eviction chain and the
+    /// elastic controller).
+    pub fn ledger(&self) -> &DeviceLedger {
+        &self.ledger
+    }
+
+    /// Drop the buffers of every stage the chain evicted since last sweep.
+    pub fn sweep(&self) {
+        for stage in self.ledger.take_swept() {
+            self.bufs.borrow_mut().remove(&stage);
+        }
+    }
+
+    /// Begin executing from the device copy of `stage`, if resident.
+    /// The returned buffers stay alive until [`DeviceCache::end_use`];
+    /// the ledger skips in-use entries during eviction.
+    pub fn begin_use(&self, stage: usize) -> Option<std::cell::Ref<'_, Vec<xla::PjRtBuffer>>> {
+        self.sweep();
+        if !self.bufs.borrow().contains_key(&stage) {
+            return None;
+        }
+        if !self.ledger.begin_use(stage) {
+            // evicted between sweep and flag: drop our side too
+            self.bufs.borrow_mut().remove(&stage);
+            return None;
+        }
+        Some(std::cell::Ref::map(self.bufs.borrow(), |m| m.get(&stage).unwrap()))
+    }
+
+    pub fn end_use(&self, stage: usize) {
+        self.ledger.end_use(stage);
+    }
+
+    /// Retain a freshly uploaded stage's weight buffers.  Returns true when
+    /// the ledger had cap room — the caller must then SKIP freeing the
+    /// stage's device-copy bytes (they stay accounted with the entry).
+    pub fn retain(&self, stage: usize, bufs: Vec<xla::PjRtBuffer>, bytes: u64) -> bool {
+        self.sweep();
+        if !self.ledger.try_retain(stage, bytes) {
+            return false;
+        }
+        self.bufs.borrow_mut().insert(stage, bufs);
+        self.ledger.end_use(stage);
+        true
+    }
+
+    pub fn stats(&self) -> DeviceStats {
+        self.ledger.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_retain_respects_cap() {
+        let l = DeviceLedger::new(500);
+        assert!(l.try_retain(0, 300));
+        assert!(!l.try_retain(1, 300), "cap 500 cannot hold 600");
+        assert!(l.try_retain(2, 200));
+        assert!(!l.try_retain(0, 1), "duplicate retain rejected");
+        let st = l.stats();
+        assert_eq!(st.resident_bytes, 500);
+        assert_eq!(st.retained, 2);
+    }
+
+    #[test]
+    fn ledger_eviction_skips_in_use_and_marks_sweep() {
+        let accountant = MemoryAccountant::new(Some(600));
+        assert!(accountant.try_acquire(600));
+        let l = DeviceLedger::new(600);
+        assert!(l.try_retain(0, 300));
+        assert!(l.try_retain(1, 300));
+        l.end_use(1);
+        // stage 0 still in use (try_retain leaves it flagged until end_use)
+        let freed = l.evict_for(100, &accountant);
+        assert_eq!(freed, 300, "only the not-in-use entry is reclaimable");
+        assert_eq!(accountant.used(), 300);
+        assert_eq!(l.take_swept(), vec![1]);
+        assert!(l.take_swept().is_empty(), "sweep list drains");
+        l.end_use(0);
+        let freed = l.evict_for(500, &accountant);
+        assert_eq!(freed, 300);
+        assert_eq!(l.stats().evictions, 2);
+    }
+
+    #[test]
+    fn ledger_hits_count_begin_use() {
+        let l = DeviceLedger::new(100);
+        assert!(l.try_retain(7, 50));
+        l.end_use(7);
+        assert!(l.begin_use(7));
+        l.end_use(7);
+        assert!(!l.begin_use(99));
+        assert_eq!(l.stats().hits, 1);
+    }
+
+    #[test]
+    fn set_cap_shrink_evicts_lru() {
+        let accountant = MemoryAccountant::new(Some(1000));
+        assert!(accountant.try_acquire(900));
+        let l = DeviceLedger::new(900);
+        for stage in 0..3 {
+            assert!(l.try_retain(stage, 300));
+            l.end_use(stage);
+        }
+        let freed = l.set_cap(300, &accountant);
+        assert_eq!(freed, 600);
+        assert_eq!(accountant.used(), 300);
+        assert_eq!(l.stats().evictions, 2);
+        assert!(l.begin_use(2), "newest entry survives the shrink");
+    }
+
+    #[test]
+    fn drain_frees_without_counting_evictions() {
+        let accountant = MemoryAccountant::new(Some(500));
+        assert!(accountant.try_acquire(400));
+        let l = DeviceLedger::new(500);
+        assert!(l.try_retain(0, 400));
+        l.end_use(0);
+        assert_eq!(l.drain(&accountant), 400);
+        assert_eq!(accountant.used(), 0);
+        assert_eq!(l.stats().evictions, 0);
+        assert_eq!(l.take_swept(), vec![0]);
+    }
+}

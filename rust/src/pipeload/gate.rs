@@ -20,11 +20,30 @@
 //! because every event that can unblock an admission notifies it: each
 //! admission/skip (turn advance), [`OrderedGate::free`] (every
 //! budget-relevant release in the pipeline routes through it), shutdown,
-//! and hot-layer eviction (performed inline by the stalled admitter via
-//! the attached [`LayerCache`], so it needs no wakeup at all).
+//! pass-boundary rearm ([`OrderedGate::begin_pass`]), and hot-layer
+//! eviction (performed inline by the stalled admitter via the attached
+//! [`LayerCache`], so it needs no wakeup at all).
 //!
-//! One gate serves one pipeline pass; a [`Session`] reuses the same gate
-//! across passes via [`OrderedGate::reset`].
+//! # Epochs
+//!
+//! One gate serves a whole [`Session`]: each pass is an **epoch**, and the
+//! admission cursor is the pair `(epoch, stage)`.  A persistent
+//! worker-pool loader tags its admissions with the epoch of the pass that
+//! dispatched them, so
+//!
+//! * an admission for a *future* epoch parks until
+//!   [`OrderedGate::begin_pass`] opens that epoch (this is how queued
+//!   next-pass work waits out the current pass without corrupting its
+//!   admission order), and
+//! * an admission for a *stale* epoch (its pass already failed and a newer
+//!   one started) errors out instead of admitting bytes nobody will free.
+//!
+//! Cross-pass **prefetch** does not ride the cursor at all:
+//! [`OrderedGate::try_admit_prefetch`] takes budget slack non-blockingly,
+//! always leaving `max_stage` headroom so the running pass's next
+//! admission can never be starved by speculation — the `budget −
+//! max_stage` liveness invariant holds across the pass boundary.
+//! Prefetched bytes are first in the eviction chain.
 //!
 //! [`MemoryAccountant::acquire`]: crate::memory::MemoryAccountant::acquire
 //! [`Session`]: crate::engine::session::Session
@@ -35,11 +54,14 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use super::cache::LayerCache;
+use super::device::DeviceLedger;
+use super::prefetch::PrefetchBuffer;
 use crate::kvcache::KvPool;
 use crate::memory::MemoryAccountant;
 
 #[derive(Debug)]
 struct GateState {
+    epoch: u64,
     next_admit: usize,
     shutdown: bool,
 }
@@ -49,11 +71,19 @@ struct GateState {
 pub struct OrderedGate {
     accountant: MemoryAccountant,
     cache: Option<LayerCache>,
+    /// Speculative cross-pass prefetch buffer — FIRST in the eviction
+    /// chain (reclaiming speculation costs nothing but wasted I/O).
+    prefetch: Option<PrefetchBuffer>,
+    /// Device-resident weight ledger — second in the chain (re-creating a
+    /// device copy is one upload, cheaper than the disk read a pin save).
+    device: Option<DeviceLedger>,
     /// Other sessions' hot-layer caches on the same (shared) accountant.
     /// A stalled admission reclaims from these after its own cache — this
     /// is how one model's `S^stop` pressure evicts another model's pins
     /// when a Router multiplexes several sessions under one budget.
     victims: Vec<LayerCache>,
+    /// Other sessions' device ledgers on the same shared accountant.
+    victim_devices: Vec<DeviceLedger>,
     /// KV pools on the same shared accountant (own session's first, then
     /// other lanes').  Reclaimed after pinned layers: evicting KV is the
     /// costlier sacrifice (that sequence recomputes its full prefix for
@@ -67,10 +97,13 @@ impl OrderedGate {
         OrderedGate {
             accountant,
             cache: None,
+            prefetch: None,
+            device: None,
             victims: Vec::new(),
+            victim_devices: Vec::new(),
             kv_pools: Vec::new(),
             state: Arc::new((
-                Mutex::new(GateState { next_admit: 0, shutdown: false }),
+                Mutex::new(GateState { epoch: 0, next_admit: 0, shutdown: false }),
                 Condvar::new(),
             )),
         }
@@ -103,13 +136,74 @@ impl OrderedGate {
         self.kv_pools.push(pool);
     }
 
+    /// Attach the session's cross-pass prefetch buffer: its entries become
+    /// the first (cheapest) rung of the eviction chain.
+    pub fn set_prefetch(&mut self, buffer: PrefetchBuffer) {
+        self.prefetch = Some(buffer);
+    }
+
+    /// Attach the session's device-resident weight ledger (second rung of
+    /// the eviction chain, before pinned host layers).
+    pub fn set_device(&mut self, ledger: DeviceLedger) {
+        self.device = Some(ledger);
+    }
+
+    /// Register another session's device ledger as an eviction target
+    /// (same shared-accountant requirement as [`OrderedGate::add_victim`]).
+    pub fn add_victim_device(&mut self, ledger: DeviceLedger) {
+        self.victim_devices.push(ledger);
+    }
+
+    /// Bytes currently accounted to victim sessions' device caches.
+    pub fn victim_device_bytes(&self) -> u64 {
+        self.victim_devices.iter().map(|l| l.stats().resident_bytes).sum()
+    }
+
     pub fn accountant(&self) -> &MemoryAccountant {
         &self.accountant
     }
 
+    /// One rung at a time through the eviction chain, cheapest sacrifice
+    /// first: speculative prefetch, own device copies, own pins, victim
+    /// pins, victim device copies, then cached KV sequences.  Returns true
+    /// if anything was reclaimed (the stalled admitter retries).
+    fn evict_chain_for(&self, bytes: u64) -> bool {
+        if let Some(p) = &self.prefetch {
+            if p.evict_for(bytes, &self.accountant) > 0 {
+                return true;
+            }
+        }
+        if let Some(d) = &self.device {
+            if d.evict_for(bytes, &self.accountant) > 0 {
+                return true;
+            }
+        }
+        let own = self.cache.iter();
+        if own.chain(self.victims.iter()).any(|c| c.evict_for(bytes, &self.accountant) > 0) {
+            return true;
+        }
+        if self.victim_devices.iter().any(|l| l.evict_for(bytes, &self.accountant) > 0) {
+            return true;
+        }
+        self.kv_pools.iter().any(|p| p.evict_for(bytes) > 0)
+    }
+
     /// Block until it is `stage`'s turn and `bytes` fit the budget, then
     /// account them.  Returns time spent stalled (the S^stop duration).
+    /// Epoch-agnostic (admits on the current epoch's cursor) — pool
+    /// loaders use [`OrderedGate::admit_at`] instead.
     pub fn admit(&self, stage: usize, bytes: u64) -> Result<Duration> {
+        self.admit_inner(None, stage, bytes)
+    }
+
+    /// Epoch-tagged admission: parks until `epoch` is the gate's current
+    /// pass AND it is `stage`'s turn AND `bytes` fit; errors if the epoch
+    /// is already stale (a newer pass began — the tagged pass failed).
+    pub fn admit_at(&self, epoch: u64, stage: usize, bytes: u64) -> Result<Duration> {
+        self.admit_inner(Some(epoch), stage, bytes)
+    }
+
+    fn admit_inner(&self, epoch: Option<u64>, stage: usize, bytes: u64) -> Result<Duration> {
         if let Some(b) = self.accountant.budget() {
             if bytes > b {
                 bail!("stage {stage}: {bytes} B can never fit budget {b} B");
@@ -122,21 +216,23 @@ impl OrderedGate {
             if s.shutdown {
                 bail!("gate shut down");
             }
-            if s.next_admit == stage {
+            if let Some(e) = epoch {
+                if s.epoch > e {
+                    bail!("stale admission: epoch {e} already superseded by {}", s.epoch);
+                }
+            }
+            let turn = epoch.map(|e| s.epoch == e).unwrap_or(true) && s.next_admit == stage;
+            if turn {
                 if self.accountant.try_acquire(bytes) {
                     s.next_admit += 1;
                     cv.notify_all();
                     return Ok(t0.elapsed());
                 }
-                // S^stop pressure: reclaim pinned hot layers before parking
-                // — own cache first (LRU), then other sessions' caches on
-                // the same shared accountant, then (last resort) cached KV
-                // sequences, whose owners fall back to full-prefix
-                // recompute rather than fail.
-                let own = self.cache.iter();
-                if own.chain(self.victims.iter()).any(|c| c.evict_for(bytes, &self.accountant) > 0)
-                    || self.kv_pools.iter().any(|p| p.evict_for(bytes) > 0)
-                {
+                // S^stop pressure: reclaim resident-but-rebuildable state
+                // before parking — speculation, device copies, pins (own
+                // then victims'), and as a last resort cached KV sequences,
+                // whose owners fall back to full-prefix recompute.
+                if self.evict_chain_for(bytes) {
                     continue; // retry with the reclaimed headroom
                 }
             }
@@ -150,6 +246,15 @@ impl OrderedGate {
     /// the time spent waiting (recorded like an admit() stall, so cache
     /// hits and misses report their ordering waits symmetrically).
     pub fn skip(&self, stage: usize) -> Result<Duration> {
+        self.skip_inner(None, stage)
+    }
+
+    /// Epoch-tagged [`OrderedGate::skip`] (pool loaders).
+    pub fn skip_at(&self, epoch: u64, stage: usize) -> Result<Duration> {
+        self.skip_inner(Some(epoch), stage)
+    }
+
+    fn skip_inner(&self, epoch: Option<u64>, stage: usize) -> Result<Duration> {
         let (lock, cv) = &*self.state;
         let t0 = Instant::now();
         let mut s = lock.lock().unwrap();
@@ -157,13 +262,26 @@ impl OrderedGate {
             if s.shutdown {
                 bail!("gate shut down");
             }
-            if s.next_admit == stage {
+            if let Some(e) = epoch {
+                if s.epoch > e {
+                    bail!("stale skip: epoch {e} already superseded by {}", s.epoch);
+                }
+            }
+            if epoch.map(|e| s.epoch == e).unwrap_or(true) && s.next_admit == stage {
                 s.next_admit += 1;
                 cv.notify_all();
                 return Ok(t0.elapsed());
             }
             s = cv.wait(s).unwrap();
         }
+    }
+
+    /// Non-blocking speculative admission for cross-pass prefetch: acquire
+    /// `bytes` only if the budget can hold them AND still leave `reserve`
+    /// (the profile's `max_stage`) of headroom for the running pass.  Never
+    /// parks, never evicts — prefetch only ever takes free slack.
+    pub fn try_admit_prefetch(&self, bytes: u64, reserve: u64) -> bool {
+        self.accountant.try_acquire_reserving(bytes, reserve)
     }
 
     /// Free bytes (daemon destruction, transient uploads, activations) and
@@ -194,19 +312,29 @@ impl OrderedGate {
     /// `evictions` counts reclaimed pins + KV blocks.  Waiters parked on
     /// the gate are woken — freed bytes (or a grown budget) may admit them.
     pub fn reclaim_to_budget(&self) -> (u64, u64) {
-        let ev0: u64 = self
-            .cache
-            .iter()
-            .chain(self.victims.iter())
-            .map(|c| c.stats().evictions)
-            .sum::<u64>()
-            + self.kv_pools.iter().map(|p| p.stats().evicted_blocks).sum::<u64>();
+        let ev0 = self.chain_eviction_count();
         let mut freed = 0u64;
+        if self.accountant.would_block(0) {
+            if let Some(p) = &self.prefetch {
+                freed += p.evict_for(0, &self.accountant);
+            }
+        }
+        if self.accountant.would_block(0) {
+            if let Some(d) = &self.device {
+                freed += d.evict_for(0, &self.accountant);
+            }
+        }
         for c in self.cache.iter().chain(self.victims.iter()) {
             if !self.accountant.would_block(0) {
                 break;
             }
             freed += c.evict_for(0, &self.accountant);
+        }
+        for l in &self.victim_devices {
+            if !self.accountant.would_block(0) {
+                break;
+            }
+            freed += l.evict_for(0, &self.accountant);
         }
         for p in &self.kv_pools {
             if !self.accountant.would_block(0) {
@@ -214,27 +342,56 @@ impl OrderedGate {
             }
             freed += p.evict_for(0);
         }
-        let ev1: u64 = self
-            .cache
-            .iter()
-            .chain(self.victims.iter())
-            .map(|c| c.stats().evictions)
-            .sum::<u64>()
-            + self.kv_pools.iter().map(|p| p.stats().evicted_blocks).sum::<u64>();
+        let ev1 = self.chain_eviction_count();
         let _guard = self.state.0.lock().unwrap();
         self.state.1.notify_all();
         (freed, ev1 - ev0)
     }
 
+    /// Reclaims performed by every rung of this gate's chain so far
+    /// (prefetch waste + device evictions + pin evictions + KV blocks).
+    fn chain_eviction_count(&self) -> u64 {
+        self.prefetch.iter().map(|p| p.stats().wasted).sum::<u64>()
+            + self.device.iter().map(|d| d.stats().evictions).sum::<u64>()
+            + self
+                .cache
+                .iter()
+                .chain(self.victims.iter())
+                .map(|c| c.stats().evictions)
+                .sum::<u64>()
+            + self.victim_devices.iter().map(|l| l.stats().evictions).sum::<u64>()
+            + self.kv_pools.iter().map(|p| p.stats().evicted_blocks).sum::<u64>()
+    }
+
     /// Rearm for the next pass of the same session: admission restarts at
     /// stage 0.  The accountant is NOT touched — pinned hot layers keep
-    /// their bytes accounted across passes.
+    /// their bytes accounted across passes.  (Epoch-agnostic compatibility
+    /// wrapper; sessions use [`OrderedGate::begin_pass`].)
     pub fn reset(&self) {
         let (lock, cv) = &*self.state;
         let mut s = lock.lock().unwrap();
         s.next_admit = 0;
         s.shutdown = false;
         cv.notify_all();
+    }
+
+    /// Open admission epoch `epoch` (the pass about to run): the cursor
+    /// moves to `(epoch, 0)`, waiters tagged with `epoch` wake, waiters
+    /// tagged with older epochs will error out as stale.  Clears any
+    /// shutdown a failed previous pass raised.
+    pub fn begin_pass(&self, epoch: u64) {
+        let (lock, cv) = &*self.state;
+        let mut s = lock.lock().unwrap();
+        debug_assert!(epoch >= s.epoch, "epochs must be monotonic");
+        s.epoch = epoch;
+        s.next_admit = 0;
+        s.shutdown = false;
+        cv.notify_all();
+    }
+
+    /// The admission epoch currently open.
+    pub fn current_epoch(&self) -> u64 {
+        self.state.0.lock().unwrap().epoch
     }
 
     pub fn shutdown(&self) {
@@ -460,6 +617,106 @@ mod tests {
         // growing back requires no reclaim at all
         accountant.resize(Some(400));
         assert_eq!(gate.reclaim_to_budget(), (0, 0));
+    }
+
+    #[test]
+    fn epoch_ordered_admission_across_pass_boundary() {
+        // A loader dispatched for the NEXT pass parks until begin_pass
+        // opens its epoch — even though budget and stage turn are free.
+        let gate = OrderedGate::new(MemoryAccountant::new(Some(100)));
+        gate.begin_pass(1);
+        let g = gate.clone();
+        let h = std::thread::spawn(move || g.admit_at(2, 0, 10));
+        std::thread::sleep(Duration::from_millis(40));
+        // pass 1 runs to completion in the meantime
+        gate.admit_at(1, 0, 50).unwrap();
+        gate.free(50);
+        assert!(!h.is_finished(), "epoch-2 admission must wait for its pass");
+        gate.begin_pass(2);
+        let waited = h.join().unwrap().unwrap();
+        assert!(waited.as_millis() >= 30, "{waited:?}");
+        assert_eq!(gate.accountant().used(), 10);
+    }
+
+    #[test]
+    fn stale_epoch_admission_and_skip_fail() {
+        let gate = OrderedGate::new(MemoryAccountant::unlimited());
+        gate.begin_pass(3);
+        assert!(gate.admit_at(2, 0, 10).is_err(), "superseded epoch must not admit");
+        assert!(gate.skip_at(2, 0).is_err());
+        // the current epoch still works
+        gate.admit_at(3, 0, 10).unwrap();
+        gate.skip_at(3, 1).unwrap();
+    }
+
+    #[test]
+    fn begin_pass_clears_shutdown_and_restarts_cursor() {
+        let gate = OrderedGate::new(MemoryAccountant::new(Some(100)));
+        gate.begin_pass(1);
+        gate.admit_at(1, 0, 40).unwrap();
+        gate.shutdown();
+        assert!(gate.admit_at(1, 1, 10).is_err());
+        gate.free(40);
+        // begin_pass rearms the gate; the accountant is revived separately
+        // (sessions do this in their failed-pass recovery)
+        gate.accountant().revive();
+        gate.begin_pass(2);
+        assert_eq!(gate.current_epoch(), 2);
+        gate.admit_at(2, 0, 100).unwrap();
+    }
+
+    #[test]
+    fn stalled_admit_evicts_prefetch_before_pins() {
+        use crate::pipeload::prefetch::PrefetchBuffer;
+        use crate::weights::Shard;
+        // 40 B pinned + 50 B prefetched under a 100 B budget.  An admission
+        // needing 60 must reclaim the SPECULATIVE bytes first and leave the
+        // pin alone (prefetch is the cheapest sacrifice in the chain).
+        let accountant = MemoryAccountant::new(Some(100));
+        let cache = LayerCache::new(100);
+        let buffer = PrefetchBuffer::new();
+        let mut gate = OrderedGate::with_cache(accountant.clone(), cache.clone());
+        gate.set_prefetch(buffer.clone());
+        assert!(accountant.try_acquire(40));
+        assert!(cache.pin(1, Arc::new(Shard { kind: "k".into(), stage: 1, tensors: vec![] }), 40));
+        assert!(gate.try_admit_prefetch(50, 0));
+        assert!(buffer.put(5, Arc::new(Shard { kind: "k".into(), stage: 5, tensors: vec![] }), 50));
+        let waited = gate.admit(0, 60).unwrap();
+        assert!(waited.as_millis() < 1000);
+        assert_eq!(buffer.stats().wasted, 1, "prefetched entry reclaimed first");
+        assert_eq!(cache.stats().evictions, 0, "pin must survive");
+        assert_eq!(accountant.used(), 100);
+    }
+
+    #[test]
+    fn prefetch_admission_preserves_headroom_reserve() {
+        let gate = OrderedGate::new(MemoryAccountant::new(Some(100)));
+        // reserve 30 for the running pass: only 70 of slack is speculative
+        assert!(gate.try_admit_prefetch(70, 30));
+        assert!(!gate.try_admit_prefetch(1, 30), "reserve must hold");
+        gate.free(70);
+        assert!(gate.try_admit_prefetch(1, 30));
+    }
+
+    #[test]
+    fn stalled_admit_evicts_device_entries_before_pins() {
+        use crate::pipeload::device::DeviceLedger;
+        use crate::weights::Shard;
+        let accountant = MemoryAccountant::new(Some(100));
+        let cache = LayerCache::new(100);
+        let ledger = DeviceLedger::new(100);
+        let mut gate = OrderedGate::with_cache(accountant.clone(), cache.clone());
+        gate.set_device(ledger.clone());
+        assert!(accountant.try_acquire(40));
+        assert!(cache.pin(1, Arc::new(Shard { kind: "k".into(), stage: 1, tensors: vec![] }), 40));
+        accountant.force_add(50); // the device copy's bytes
+        assert!(ledger.try_retain(2, 50));
+        ledger.end_use(2);
+        let waited = gate.admit(0, 60).unwrap();
+        assert!(waited.as_millis() < 1000);
+        assert_eq!(ledger.stats().evictions, 1, "device copy reclaimed first");
+        assert_eq!(cache.stats().evictions, 0, "pin must survive");
+        assert_eq!(accountant.used(), 100);
     }
 
     #[test]

@@ -17,52 +17,73 @@
 //! is the PipeSwitch-style *standard pipeline* comparator: layers stay
 //! resident, so peak memory equals the whole model.
 //!
-//! # Sessions & hot-layer cache
+//! # Sessions, worker pool & caches
 //!
 //! [`run_pipeline`] is the one-shot entry point: it builds a fresh
-//! accountant + gate + assignment per pass (the paper's semantics, where
-//! every generated token reloads the model).  Long-lived callers — the
-//! serving loop and the generative decode loop — instead construct those
-//! once in an [`engine::session::Session`] and drive [`run_pass`]
-//! directly, which accepts a [`PassEnv`]:
+//! accountant + gate + assignment + throwaway [`pool::WorkerPool`] per
+//! pass (the paper's semantics, where every generated token reloads the
+//! model).  Long-lived callers — the serving loop and the generative
+//! decode loop — instead construct those once in an
+//! [`engine::session::Session`] and drive [`run_pass`] directly, which
+//! accepts a [`PassEnv`]:
 //!
-//! * a reusable [`gate::OrderedGate`] (rearmed with `reset()` per pass, so
-//!   the budget and any pinned bytes persist across passes);
+//! * a reusable [`gate::OrderedGate`] (rearmed with `begin_pass` per
+//!   pass/epoch, so the budget and any pinned bytes persist across
+//!   passes);
 //! * a precomputed agent [`assignment`];
+//! * a persistent [`pool::WorkerPool`] — Loading Agents and the Daemon
+//!   are long-lived threads fed per-pass work descriptors, not per-pass
+//!   spawns;
 //! * an optional [`cache::LayerCache`].  With the cache attached, the
 //!   Daemon *pins* computed layers (up to the pin budget) instead of
 //!   destroying them, and the next pass's Loading Agents take pinned
 //!   stages straight from memory — no disk read, no admission.  Under
 //!   `S^stop` pressure the gate evicts pins LRU-first, so the cache only
-//!   ever consumes budget slack.
+//!   ever consumes budget slack;
+//! * an optional [`prefetch::PrefetchBuffer`] + depth: while this pass's
+//!   tail computes, idle loaders speculatively load the NEXT pass's head
+//!   stages into the buffer (bounded by `--prefetch-depth`; admission
+//!   never takes more than budget slack minus `max_stage` headroom);
+//! * an optional [`device::DeviceCache`]: stages whose weight
+//!   `PjRtBuffer`s were retained after a previous pass's execute skip the
+//!   host→device upload entirely (the inference-side companion to the
+//!   host-byte `LayerCache`).
 //!
 //! [`engine::session::Session`]: crate::engine::session::Session
 
 pub mod assignment;
 pub mod cache;
+pub mod device;
 pub mod gate;
+pub mod pool;
+pub mod prefetch;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::diskio::Disk;
 use crate::kvcache::KvSeq;
 use crate::memory::MemoryAccountant;
-use crate::model::{Profile, TensorSpec};
+use crate::model::{Profile, StageSpec, TensorSpec};
 use crate::runtime::{literal_for_spec, Runtime};
 use crate::signals::{Signal, SignalLog};
 use crate::trace::{Kind, Lane, Tracer};
-use crate::weights::{read_shard_from, validate_against, Shard};
+use crate::weights::Shard;
 use cache::LayerCache;
+use device::DeviceCache;
 use gate::OrderedGate;
+use pool::{
+    DaemonTask, LoadMsg, PassShared, PassTask, PrefetchTask, StageJob, TaskGroup, WorkerPool,
+};
+use prefetch::PrefetchBuffer;
 
 /// Trace/stat threshold: spans shorter than this are scheduling noise, not
 /// stalls (a `recv` that found its message already waiting is not a stall).
-const STALL_EPS_MS: f64 = 0.05;
+pub(crate) const STALL_EPS_MS: f64 = 0.05;
 
 /// Input to one model pass.
 #[derive(Debug, Clone)]
@@ -163,6 +184,8 @@ pub struct PassStats {
     pub cache_hits: u64,
     /// stages loaded from disk while a cache was attached
     pub cache_misses: u64,
+    /// stages executed from device-resident weights (upload skipped)
+    pub device_cache_hits: u64,
 }
 
 /// Error marker for a KV sequence reclaimed while its incremental pass was
@@ -179,6 +202,21 @@ pub struct PassEnv<'a> {
     pub cache: Option<&'a LayerCache>,
     /// stage-to-agent assignment; must cover `opts.agents` agents
     pub plan: &'a [Vec<usize>],
+    /// persistent Loading Agent / Daemon threads
+    pub pool: &'a WorkerPool,
+    /// this pass's admission epoch (monotonic per session)
+    pub epoch: u64,
+    /// cross-pass prefetch buffer; None = no speculation
+    pub prefetch: Option<&'a PrefetchBuffer>,
+    /// head stages of the NEXT pass that idle loaders may load early
+    pub prefetch_depth: usize,
+    /// true when the caller knows another pass follows (decode loops);
+    /// prefetch work is only dispatched then
+    pub expect_next: bool,
+    /// in-flight prefetch task counter (error recovery waits on it)
+    pub prefetch_group: Option<&'a TaskGroup>,
+    /// device-resident weight cache (inference-thread side)
+    pub device: Option<&'a DeviceCache>,
 }
 
 /// What the Inference Agent computes during one pass.  Loading, admission,
@@ -198,15 +236,16 @@ pub enum PassMode<'k> {
     Incremental { kv: &'k KvSeq, pos: usize },
 }
 
-// Whether a shard came from disk or the hot-layer cache, its accounting is
-// identical once in flight: bytes ride with the message, and the Daemon
-// either pins them (stay accounted) or destroys them (freed via the gate).
-struct StageMsg {
-    stage: usize,
+// Whether a shard came from disk, the hot-layer cache, or the prefetch
+// buffer, its accounting is identical once in flight: bytes ride with the
+// message, and the Daemon either pins them (stay accounted) or destroys
+// them (freed via the gate).
+pub(crate) struct StageMsg {
+    pub(crate) stage: usize,
     #[allow(dead_code)]
-    agent: usize,
-    shard: Arc<Shard>,
-    bytes: u64,
+    pub(crate) agent: usize,
+    pub(crate) shard: Arc<Shard>,
+    pub(crate) bytes: u64,
 }
 
 /// Run one full pipelined pass with throwaway state; returns the head
@@ -221,7 +260,19 @@ pub fn run_pipeline(
     let accountant = MemoryAccountant::new(budget);
     let gate = OrderedGate::new(accountant);
     let plan = assignment::assignment(ctx.profile.stages.len(), opts.agents.max(1));
-    let env = PassEnv { gate: &gate, cache: None, plan: &plan };
+    let pool = WorkerPool::new(opts.agents.max(1));
+    let env = PassEnv {
+        gate: &gate,
+        cache: None,
+        plan: &plan,
+        pool: &pool,
+        epoch: 0,
+        prefetch: None,
+        prefetch_depth: 0,
+        expect_next: false,
+        prefetch_group: None,
+        device: None,
+    };
     run_pass(ctx, opts, &env, input)
 }
 
@@ -237,7 +288,35 @@ pub fn run_pass(
     run_pass_mode(ctx, opts, env, input, &PassMode::Full)
 }
 
+/// Build the `'static` per-stage job descriptors one agent's task needs.
+fn make_jobs(profile: &Profile, stages: &[usize], validate: bool) -> Result<Vec<StageJob>> {
+    stages
+        .iter()
+        .map(|&stage_idx| {
+            let stage: &StageSpec = &profile.stages[stage_idx];
+            let params =
+                if validate { Some(profile.stage_params(stage)?.to_vec()) } else { None };
+            Ok(StageJob {
+                stage: stage_idx,
+                shard_file: stage.shard.clone(),
+                bytes: profile.stage_bytes(stage),
+                params,
+            })
+        })
+        .collect()
+}
+
 /// [`run_pass`] with an explicit [`PassMode`] (the KV decode paths).
+///
+/// The pass dispatches work descriptors to the persistent
+/// [`pool::WorkerPool`] (one [`PassTask`] per active agent + one
+/// [`DaemonTask`]), then runs the Inference Agent on the calling thread.
+/// When `env.expect_next` is set and a prefetch buffer is attached, the
+/// NEXT pass's head stages are dispatched as [`PrefetchTask`]s right away:
+/// they queue behind each agent's current-pass work, so idle loaders
+/// overlap them with this pass's tail compute.  Before returning, the pass
+/// waits for its loader done-markers and the daemon's ack — every
+/// pin/destroy decision has landed when the next pass begins.
 pub fn run_pass_mode(
     ctx: &ExecCtx,
     opts: &PipelineOpts,
@@ -263,196 +342,137 @@ pub fn run_pass_mode(
 
     let gate = env.gate;
     let accountant = gate.accountant().clone();
-    let (tx_load, rx_load) = mpsc::channel::<Result<StageMsg>>();
+    let (tx_load, rx_load) = mpsc::channel::<LoadMsg>();
     let (tx_dest, rx_dest) = mpsc::channel::<StageMsg>();
-    let mem_stall_ms = Arc::new(Mutex::new(0.0f64));
-    let load_ms = Arc::new(Mutex::new(0.0f64));
+    let (ack_tx, ack_rx) = mpsc::channel::<()>();
     let stats0 = env.cache.map(|c| c.stats());
 
-    let result = std::thread::scope(|scope| -> Result<(xla::PjRtBuffer, PassStats)> {
-        // ---- Daemon Agent -------------------------------------------------
-        let daemon_gate = gate.clone();
-        let daemon_cache = env.cache.cloned();
-        let daemon_tracer = ctx.tracer.clone();
-        let daemon_disk = ctx.disk.clone();
-        let destroy = opts.destroy_after_compute;
-        scope.spawn(move || {
-            let mut kept: Vec<StageMsg> = Vec::new();
-            for msg in rx_dest {
-                if destroy {
-                    let t0 = daemon_tracer.now_ms();
-                    // Pin instead of destroy when the pin budget has room;
-                    // the layer's bytes stay accounted for the next pass.
-                    // The score (predicted reload cost per byte) only
-                    // matters under the cost policy, where an expensive
-                    // layer may displace cheaper pins; displaced bytes go
-                    // back to the budget through the gate.
-                    if let Some(cache) = &daemon_cache {
-                        let score =
-                            daemon_disk.est_load_ms(msg.bytes) / msg.bytes.max(1) as f64;
-                        let (pinned, displaced) =
-                            cache.pin_scored(msg.stage, msg.shard.clone(), msg.bytes, score);
-                        if displaced > 0 {
-                            daemon_gate.free(displaced);
-                        }
-                        if pinned {
-                            daemon_tracer.record(
-                                Lane::Daemon,
-                                Kind::Pin,
-                                Some(msg.stage),
-                                t0,
-                                daemon_tracer.now_ms(),
-                            );
-                            continue;
-                        }
-                    }
-                    drop(msg.shard); // the destruction
-                    daemon_gate.free(msg.bytes);
-                    daemon_tracer.record(
-                        Lane::Daemon,
-                        Kind::Destroy,
-                        Some(msg.stage),
-                        t0,
-                        daemon_tracer.now_ms(),
-                    );
-                } else {
-                    kept.push(msg); // standard pipeline: stays resident
-                }
-            }
-            for msg in kept {
-                daemon_gate.free(msg.bytes);
-            }
-        });
-
-        // ---- Loading Agents ----------------------------------------------
-        for (agent, my_stages) in env.plan.iter().enumerate() {
-            if my_stages.is_empty() {
-                continue;
-            }
-            let gate = gate.clone();
-            let cache = env.cache.cloned();
-            let tx = tx_load.clone();
-            let tracer = ctx.tracer.clone();
-            let signals = ctx.signals.clone();
-            let disk = ctx.disk.clone();
-            let shard_dir = ctx.shard_dir.clone();
-            let stall_acc = mem_stall_ms.clone();
-            let load_acc = load_ms.clone();
-            let my_stages = my_stages.clone();
-            let validate = opts.validate_shards;
-            scope.spawn(move || {
-                for &stage_idx in &my_stages {
-                    let stage = &profile.stages[stage_idx];
-                    let bytes = profile.stage_bytes(stage);
-                    // Hot-layer cache: a pinned stage skips disk AND
-                    // admission (its bytes are already resident), but must
-                    // still take its slot in the admission order — and its
-                    // ordering wait is recorded exactly like a miss's.
-                    if let Some(cache) = &cache {
-                        if let Some((shard, bytes)) = cache.take(stage_idx) {
-                            let t_gate0 = tracer.now_ms();
-                            let waited = match gate.skip(stage_idx) {
-                                Ok(w) => w,
-                                Err(e) => {
-                                    let _ = tx.send(Err(e));
-                                    return;
-                                }
-                            };
-                            let waited_ms = waited.as_secs_f64() * 1000.0;
-                            if waited_ms > STALL_EPS_MS {
-                                tracer.record(
-                                    Lane::Loader(agent),
-                                    Kind::StallMem,
-                                    Some(stage_idx),
-                                    t_gate0,
-                                    tracer.now_ms(),
-                                );
-                                signals.emit(Signal::Stop { agent, ms: waited_ms });
-                                *stall_acc.lock().unwrap() += waited_ms;
-                            }
-                            signals.emit(Signal::Comp { stage: stage_idx, agent });
-                            let _ = tx.send(Ok(StageMsg { stage: stage_idx, agent, shard, bytes }));
-                            continue;
-                        }
-                        cache.record_miss();
-                    }
-                    // S^stop: wait for the Daemon's memory admission.
-                    let t_gate0 = tracer.now_ms();
-                    let waited = match gate.admit(stage_idx, bytes) {
-                        Ok(w) => w,
-                        Err(e) => {
-                            let _ = tx.send(Err(e.context(format!("admitting stage {stage_idx}"))));
-                            return;
-                        }
-                    };
-                    let waited_ms = waited.as_secs_f64() * 1000.0;
-                    if waited_ms > STALL_EPS_MS {
-                        tracer.record(
-                            Lane::Loader(agent),
-                            Kind::StallMem,
-                            Some(stage_idx),
-                            t_gate0,
-                            tracer.now_ms(),
-                        );
-                        signals.emit(Signal::Stop { agent, ms: waited_ms });
-                        *stall_acc.lock().unwrap() += waited_ms;
-                    }
-                    // Load disk -> memory through the throttled stream.
-                    let t0 = tracer.now_ms();
-                    let loaded: Result<Shard> = (|| {
-                        let reader = disk.open(&shard_dir.join(&stage.shard))?;
-                        let shard = read_shard_from(reader)
-                            .with_context(|| format!("shard {}", stage.shard))?;
-                        if validate {
-                            validate_against(&shard, profile.stage_params(stage)?)?;
-                        }
-                        Ok(shard)
-                    })();
-                    match loaded {
-                        Ok(shard) => {
-                            let t1 = tracer.now_ms();
-                            tracer.record(Lane::Loader(agent), Kind::Load, Some(stage_idx), t0, t1);
-                            *load_acc.lock().unwrap() += t1 - t0;
-                            // S_comp: layer ready for computation.
-                            signals.emit(Signal::Comp { stage: stage_idx, agent });
-                            let _ = tx.send(Ok(StageMsg {
-                                stage: stage_idx,
-                                agent,
-                                shard: Arc::new(shard),
-                                bytes,
-                            }));
-                        }
-                        Err(e) => {
-                            gate.free(bytes);
-                            let _ = tx.send(Err(e));
-                            return;
-                        }
-                    }
-                }
-            });
-        }
-        drop(tx_load);
-
-        // ---- Inference Agent (this thread owns the PJRT runtime) ----------
-        let run = inference_loop(ctx, profile, input, rx_load, &tx_dest, gate, mode);
-        drop(tx_dest); // closes the daemon; scope joins it
-        match &run {
-            Ok(_) => {}
-            Err(_) => gate.shutdown(), // unblock any still-waiting loaders
-        }
-        let (out, mut stats) = run?;
-        stats.peak_bytes = accountant.peak();
-        stats.mem_stall_ms = *mem_stall_ms.lock().unwrap();
-        stats.load_ms_total = *load_ms.lock().unwrap();
-        if let (Some(c), Some(s0)) = (env.cache, stats0) {
-            let s1 = c.stats();
-            stats.cache_hits = s1.hits - s0.hits;
-            stats.cache_misses = s1.misses - s0.misses;
-        }
-        Ok((out, stats))
+    let shared = Arc::new(PassShared {
+        gate: gate.clone(),
+        cache: env.cache.cloned(),
+        buffer: env.prefetch.cloned(),
+        disk: ctx.disk.clone(),
+        tracer: ctx.tracer.clone(),
+        signals: ctx.signals.clone(),
+        shard_dir: ctx.shard_dir.clone(),
     });
 
-    result
+    // Build EVERY per-agent descriptor before dispatching anything: the
+    // realistic dispatch-time failure (a manifest lookup in make_jobs)
+    // must fail here, while no task is running yet — an early return
+    // after a partial dispatch would strand loaders with no join path
+    // (the guarantee the old thread::scope gave for free).
+    let mut pass_work: Vec<(usize, Vec<StageJob>)> = Vec::new();
+    for (agent, my_stages) in env.plan.iter().enumerate() {
+        if my_stages.is_empty() {
+            continue;
+        }
+        pass_work.push((agent, make_jobs(profile, my_stages, opts.validate_shards)?));
+    }
+    let mut prefetch_work: Vec<(usize, Vec<StageJob>)> = Vec::new();
+    if env.expect_next && env.prefetch.is_some() && env.prefetch_depth > 0 {
+        for (agent, my_stages) in env.plan.iter().enumerate() {
+            let head: Vec<usize> =
+                my_stages.iter().copied().filter(|&s| s < env.prefetch_depth).collect();
+            if !head.is_empty() {
+                prefetch_work.push((agent, make_jobs(profile, &head, opts.validate_shards)?));
+            }
+        }
+    }
+
+    // ---- Daemon Agent (persistent thread, per-pass stream) ---------------
+    env.pool.submit_daemon(DaemonTask {
+        rx: rx_dest,
+        shared: shared.clone(),
+        destroy: opts.destroy_after_compute,
+        ack: ack_tx,
+    })?;
+
+    // ---- Loading Agents (persistent threads, per-pass descriptors) -------
+    // A submit can only fail if a worker thread died; collect the error
+    // instead of returning so already-dispatched tasks are still quiesced
+    // below before this pass gives up.
+    let mut dispatch_err: Option<anyhow::Error> = None;
+    let mut active_agents = 0usize;
+    for (agent, jobs) in pass_work {
+        let task = PassTask {
+            epoch: env.epoch,
+            agent,
+            jobs,
+            tx: tx_load.clone(),
+            shared: shared.clone(),
+        };
+        match env.pool.submit_pass(agent, task) {
+            Ok(()) => active_agents += 1,
+            Err(e) => {
+                dispatch_err = Some(e);
+                break;
+            }
+        }
+    }
+    drop(tx_load);
+    env.pool.note_pass(active_agents as u64);
+
+    // ---- Cross-pass prefetch (overlaps this pass's tail compute) ---------
+    if dispatch_err.is_none() && !prefetch_work.is_empty() {
+        let reserve = profile.max_stage_bytes();
+        let group = env.prefetch_group.cloned().unwrap_or_default();
+        for (agent, jobs) in prefetch_work {
+            let task = PrefetchTask {
+                agent,
+                jobs,
+                shared: shared.clone(),
+                reserve,
+                group: group.clone(),
+            };
+            if let Err(e) = env.pool.submit_prefetch(agent, task) {
+                dispatch_err = Some(e);
+                break;
+            }
+        }
+    }
+
+    // ---- Inference Agent (this thread owns the PJRT runtime) -------------
+    let run = match dispatch_err {
+        Some(e) => {
+            // failed dispatch: abort the tasks that DID start (parked
+            // admissions error out) and drain their done-markers, so the
+            // caller's recovery never races a live loader
+            gate.shutdown();
+            let mut done = 0usize;
+            while done < active_agents {
+                match rx_load.recv() {
+                    Ok(LoadMsg::AgentDone { .. }) => done += 1,
+                    Ok(_) => {}
+                    Err(_) => break,
+                }
+            }
+            Err(e)
+        }
+        None => inference_loop(
+            ctx,
+            profile,
+            input,
+            rx_load,
+            &tx_dest,
+            gate,
+            mode,
+            env.device,
+            active_agents,
+        ),
+    };
+    drop(tx_dest); // closes this pass's daemon stream
+    // the daemon ack guarantees every pin/destroy decision landed before
+    // the caller inspects caches or starts the next pass
+    let _ = ack_rx.recv();
+    let (out, mut stats) = run?;
+    stats.peak_bytes = accountant.peak();
+    if let (Some(c), Some(s0)) = (env.cache, stats0) {
+        let s1 = c.stats();
+        stats.cache_hits = s1.hits - s0.hits;
+        stats.cache_misses = s1.misses - s0.misses;
+    }
+    Ok((out, stats))
 }
 
 /// The Inference Agent: strict stage-order compute with a pending queue.
@@ -465,24 +485,96 @@ pub fn run_pass_mode(
 /// full-sequence entries but each body stage also executes its `*_kv`
 /// prime entry to seed the cache with the whole prefix.  Weight loading,
 /// admission, and destruction are identical in every mode.
+///
+/// A stage held by the [`DeviceCache`] executes straight from its retained
+/// weight `PjRtBuffer`s — no host→device upload, and no transient
+/// device-copy accounting (the resident copy's bytes are already
+/// accounted).  Freshly uploaded stages may be *retained* into the cache
+/// after compute, in which case their device-copy bytes stay accounted
+/// instead of being freed.
+///
+/// Before returning — success or failure — the loop drains its loaders'
+/// [`LoadMsg::AgentDone`] markers (shutting the gate down first on
+/// failure), so the caller never races still-running pass tasks; the
+/// markers carry each agent's locally-accumulated stall/load totals.
 #[allow(clippy::too_many_arguments)]
 fn inference_loop(
     ctx: &ExecCtx,
     profile: &Profile,
     input: &ModelInput,
-    rx_load: mpsc::Receiver<Result<StageMsg>>,
+    rx_load: mpsc::Receiver<LoadMsg>,
     tx_dest: &mpsc::Sender<StageMsg>,
     gate: &OrderedGate,
     mode: &PassMode,
+    device: Option<&DeviceCache>,
+    expected_agents: usize,
 ) -> Result<(xla::PjRtBuffer, PassStats)> {
-    let accountant = gate.accountant();
     let mut stats = PassStats::default();
+    let mut agents_done = 0usize;
+    let mut run = inference_core(
+        ctx,
+        profile,
+        input,
+        &rx_load,
+        tx_dest,
+        gate,
+        mode,
+        device,
+        &mut stats,
+        &mut agents_done,
+    );
+    if run.is_err() {
+        gate.shutdown(); // unblock loaders still parked on admission
+    }
+    // Quiesce this pass's loader tasks: every task ends with an AgentDone
+    // marker carrying its local stall/load sums — one message per agent
+    // per pass instead of two lock round-trips per stage.
+    while agents_done < expected_agents {
+        match rx_load.recv() {
+            Ok(LoadMsg::AgentDone { mem_stall_ms, load_ms }) => {
+                agents_done += 1;
+                stats.mem_stall_ms += mem_stall_ms;
+                stats.load_ms_total += load_ms;
+            }
+            Ok(LoadMsg::Failed(e)) => {
+                if run.is_ok() {
+                    run = Err(e.context("loading agent failed"));
+                    gate.shutdown();
+                }
+            }
+            Ok(LoadMsg::Stage(_)) => {} // surplus stage from an aborted pass
+            Err(_) => break,            // all senders gone: tasks finished
+        }
+    }
+    let (out, _) = run?;
+    Ok((out, stats))
+}
+
+/// The per-stage compute body of [`inference_loop`] (split out so the
+/// wrapper can always drain loader done-markers, on every exit path).
+#[allow(clippy::too_many_arguments)]
+fn inference_core(
+    ctx: &ExecCtx,
+    profile: &Profile,
+    input: &ModelInput,
+    rx_load: &mpsc::Receiver<LoadMsg>,
+    tx_dest: &mpsc::Sender<StageMsg>,
+    gate: &OrderedGate,
+    mode: &PassMode,
+    device: Option<&DeviceCache>,
+    stats: &mut PassStats,
+    agents_done: &mut usize,
+) -> Result<(xla::PjRtBuffer, ())> {
+    let accountant = gate.accountant();
     let mut pending: HashMap<usize, StageMsg> = HashMap::new();
     let n_stages = profile.stages.len();
     let incremental = matches!(mode, PassMode::Incremental { .. });
     let body_kind = profile.body_kind();
     // ordinal of the current body stage among the KV sequence's layers
     let mut kv_layer = 0usize;
+    if let Some(d) = device {
+        d.sweep(); // drop buffers the eviction chain reclaimed since
+    }
 
     // current activation buffer(s); starts as the model input
     let mut act: Option<xla::PjRtBuffer> = None; // built at stage 0
@@ -495,7 +587,7 @@ fn inference_loop(
         while !pending.contains_key(&k) {
             let t0 = ctx.tracer.now_ms();
             match rx_load.recv() {
-                Ok(Ok(msg)) => {
+                Ok(LoadMsg::Stage(msg)) => {
                     let t1 = ctx.tracer.now_ms();
                     // Only a recv that actually blocked is a pipeline stall
                     // (Fig 1b); a message that was already waiting returns
@@ -506,7 +598,12 @@ fn inference_loop(
                     }
                     pending.insert(msg.stage, msg);
                 }
-                Ok(Err(e)) => {
+                Ok(LoadMsg::AgentDone { mem_stall_ms, load_ms }) => {
+                    *agents_done += 1;
+                    stats.mem_stall_ms += mem_stall_ms;
+                    stats.load_ms_total += load_ms;
+                }
+                Ok(LoadMsg::Failed(e)) => {
                     gate.shutdown();
                     return Err(e.context("loading agent failed"));
                 }
@@ -591,6 +688,27 @@ fn inference_loop(
             vec![x_ref]
         };
 
+        // Weight buffers for this stage: device-resident (upload skipped,
+        // bytes already accounted with the cache entry) or a fresh upload
+        // (the transient device copy, accounted until freed or retained).
+        // One upload serves every entry this stage executes (prime + main).
+        let device_ref = device.and_then(|d| d.begin_use(k));
+        let fresh_bufs: Option<Vec<xla::PjRtBuffer>> = if device_ref.is_some() {
+            stats.device_cache_hits += 1;
+            None
+        } else {
+            accountant.force_add(msg.bytes);
+            Some(
+                ctx.runtime
+                    .upload_shard(&msg.shard)
+                    .with_context(|| format!("uploading weights for stage {k}"))?,
+            )
+        };
+        let weights: &[xla::PjRtBuffer] = match &device_ref {
+            Some(r) => r.as_slice(),
+            None => fresh_bufs.as_ref().unwrap().as_slice(),
+        };
+
         // full-prefix K/V prime: seed the cache from this stage's input
         // activation before the main entry consumes it
         if let PassMode::PrimeKv { kv, prefix_len } = mode {
@@ -600,7 +718,7 @@ fn inference_loop(
                 accountant.force_add(kv_out_bytes);
                 let kv_out = ctx
                     .runtime
-                    .execute_entry(profile, kv_entry, &act_refs, &msg.shard)
+                    .execute_entry_with(profile, kv_entry, &act_refs, weights)
                     .with_context(|| format!("priming kv at stage {k}"))?;
                 let host = ctx.runtime.buffer_to_f32(&kv_out)?;
                 drop(kv_out);
@@ -622,17 +740,27 @@ fn inference_loop(
             }
         }
 
-        // transient copy of weights inside execute (device upload)
-        accountant.force_add(msg.bytes);
         let t0 = ctx.tracer.now_ms();
         let out = ctx
             .runtime
-            .execute_entry(profile, entry, &act_refs, &msg.shard)
+            .execute_entry_with(profile, entry, &act_refs, weights)
             .with_context(|| format!("executing stage {k} ({})", entry.kind))?;
         let t1 = ctx.tracer.now_ms();
         ctx.tracer.record(Lane::Inference, Kind::Compute, Some(k), t0, t1);
         stats.compute_ms_total += t1 - t0;
-        gate.free(msg.bytes);
+        // Device-copy disposal: a cache hit just releases its in-use flag;
+        // a fresh upload is either retained (bytes stay accounted with the
+        // device cache, next pass skips the upload) or dropped + freed.
+        if device_ref.is_some() {
+            drop(device_ref);
+            device.unwrap().end_use(k);
+        } else {
+            let bufs = fresh_bufs.unwrap();
+            let retained = device.map(|d| d.retain(k, bufs, msg.bytes)).unwrap_or(false);
+            if !retained {
+                gate.free(msg.bytes);
+            }
+        }
         drop(act_refs);
         if kv_in_bytes > 0 {
             drop(kv_bufs.take()); // dense K/V uploads die with the stage
@@ -687,5 +815,5 @@ fn inference_loop(
     }
     gate.free(act_bytes);
     ctx.signals.emit(Signal::Done);
-    Ok((act.unwrap(), stats))
+    Ok((act.unwrap(), ()))
 }

@@ -1,0 +1,532 @@
+//! Persistent worker pool: long-lived Loading Agent + Daemon threads.
+//!
+//! The original per-pass machinery spawned `m` loader threads plus one
+//! daemon thread inside a `std::thread::scope` for *every* pass — a
+//! multi-token decode or a `serve()` batch stream paid N×(m+1) thread
+//! spawn/joins of pure overhead on its hot path.  The pool inverts that:
+//! threads are spawned once (when a `Session` opens, or lazily as an
+//! elastic re-plan raises the agent count) and fed per-pass **work
+//! descriptors** over channels.
+//!
+//! Three task kinds flow through the pool:
+//!
+//! * [`PassTask`] — one Loading Agent's stage list for one pass (epoch).
+//!   The loader tags every gate operation with the epoch, so a task from a
+//!   failed, superseded pass errors out instead of corrupting the next
+//!   pass's admission order.  Stall and load time accumulate in **local**
+//!   variables and are reported once, in the task's final
+//!   [`LoadMsg::AgentDone`] marker — the old per-stage
+//!   `Arc<Mutex<f64>>` round-trips were pure hot-path contention.
+//! * [`PrefetchTask`] — speculative loads of the NEXT pass's head stages,
+//!   queued behind the agent's current-pass work so it runs exactly when
+//!   the loader would otherwise idle (the tail of the pass, when the
+//!   Inference Agent is still computing).  Admission is non-blocking and
+//!   headroom-preserving ([`OrderedGate::try_admit_prefetch`]); loaded
+//!   shards park in the [`PrefetchBuffer`].
+//! * [`DaemonTask`] — one pass's destruction stream.  The daemon acks when
+//!   the stream closes, so the pass boundary still guarantees every
+//!   pin/destroy decision landed before the next pass looks.
+//!
+//! [`OrderedGate::try_admit_prefetch`]:
+//!     crate::pipeload::gate::OrderedGate::try_admit_prefetch
+//! [`PrefetchBuffer`]: crate::pipeload::prefetch::PrefetchBuffer
+
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::cache::LayerCache;
+use super::gate::OrderedGate;
+use super::prefetch::PrefetchBuffer;
+use super::{StageMsg, STALL_EPS_MS};
+use crate::diskio::Disk;
+use crate::model::TensorSpec;
+use crate::signals::{Signal, SignalLog};
+use crate::trace::{Kind, Lane, Tracer};
+use crate::weights::{read_shard_from, validate_against, Shard};
+
+/// One stage's loading work, made `'static` for the persistent threads
+/// (the per-pass descriptor owns everything; no borrows of the profile).
+pub(crate) struct StageJob {
+    pub stage: usize,
+    pub shard_file: String,
+    pub bytes: u64,
+    /// manifest specs to validate against (None = validation off)
+    pub params: Option<Vec<TensorSpec>>,
+}
+
+/// Everything a pass's worker tasks share (cloned Arcs, no borrows).
+pub(crate) struct PassShared {
+    pub gate: OrderedGate,
+    pub cache: Option<LayerCache>,
+    pub buffer: Option<PrefetchBuffer>,
+    pub disk: Disk,
+    pub tracer: Tracer,
+    pub signals: SignalLog,
+    pub shard_dir: PathBuf,
+}
+
+/// Loader → Inference channel messages.
+pub(crate) enum LoadMsg {
+    Stage(StageMsg),
+    Failed(anyhow::Error),
+    /// task finished: the agent's pass-local stall/load totals, summed
+    /// once here instead of locked per stage
+    AgentDone { mem_stall_ms: f64, load_ms: f64 },
+}
+
+/// One Loading Agent's work for one pass.
+pub(crate) struct PassTask {
+    pub epoch: u64,
+    pub agent: usize,
+    pub jobs: Vec<StageJob>,
+    pub tx: mpsc::Sender<LoadMsg>,
+    pub shared: Arc<PassShared>,
+}
+
+/// Speculative head-stage loads for the pass after the current one.
+pub(crate) struct PrefetchTask {
+    pub agent: usize,
+    pub jobs: Vec<StageJob>,
+    pub shared: Arc<PassShared>,
+    /// headroom the running pass keeps (`max_stage`)
+    pub reserve: u64,
+    pub group: TaskGroup,
+}
+
+/// One pass's destruction stream for the Daemon.
+pub(crate) struct DaemonTask {
+    pub rx: mpsc::Receiver<StageMsg>,
+    pub shared: Arc<PassShared>,
+    pub destroy: bool,
+    pub ack: mpsc::Sender<()>,
+}
+
+enum LoaderWork {
+    Pass(PassTask),
+    Prefetch(PrefetchTask),
+}
+
+/// Counts in-flight prefetch tasks so error recovery (and tests) can wait
+/// for speculative work to quiesce before reasoning about accounting.
+#[derive(Debug, Clone, Default)]
+pub struct TaskGroup {
+    inner: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl TaskGroup {
+    pub fn new() -> TaskGroup {
+        TaskGroup::default()
+    }
+
+    fn enter(&self) {
+        *self.inner.0.lock().unwrap() += 1;
+    }
+
+    fn exit(&self) {
+        let mut n = self.inner.0.lock().unwrap();
+        *n -= 1;
+        self.inner.1.notify_all();
+    }
+
+    /// Block until every entered task has exited.
+    pub fn wait_idle(&self) {
+        let mut n = self.inner.0.lock().unwrap();
+        while *n > 0 {
+            n = self.inner.1.wait(n).unwrap();
+        }
+    }
+}
+
+/// Thread-spawn accounting for the `spawns_avoided` counter.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// threads this pool actually spawned (loaders + daemon)
+    pub threads_spawned: u64,
+    /// threads the old per-pass scope would have spawned for the same work
+    pub legacy_spawns: u64,
+    /// passes dispatched through the pool
+    pub passes: u64,
+}
+
+impl PoolStats {
+    /// Spawn/joins the persistent pool saved vs the per-pass design.
+    pub fn spawns_avoided(&self) -> u64 {
+        self.legacy_spawns.saturating_sub(self.threads_spawned)
+    }
+}
+
+struct Worker<T> {
+    tx: Option<mpsc::Sender<T>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl<T> Worker<T> {
+    fn shutdown(&mut self) {
+        self.tx.take(); // closing the channel ends the thread's loop
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Long-lived Loading Agent + Daemon threads, owned by a `Session` (or
+/// built throwaway by `run_pipeline` for one-shot paper-semantics runs).
+pub struct WorkerPool {
+    loaders: Mutex<Vec<Worker<LoaderWork>>>,
+    daemon: Mutex<Worker<DaemonTask>>,
+    stats: Mutex<PoolStats>,
+}
+
+impl WorkerPool {
+    /// Spawn the daemon and `agents` loader threads.  More loaders are
+    /// spawned on demand if an elastic re-plan raises the agent count.
+    pub fn new(agents: usize) -> WorkerPool {
+        let pool = WorkerPool {
+            loaders: Mutex::new(Vec::new()),
+            daemon: Mutex::new(Self::spawn_daemon()),
+            stats: Mutex::new(PoolStats { threads_spawned: 1, ..PoolStats::default() }),
+        };
+        pool.ensure_loaders(agents);
+        pool
+    }
+
+    fn spawn_daemon() -> Worker<DaemonTask> {
+        let (tx, rx) = mpsc::channel::<DaemonTask>();
+        let handle = std::thread::spawn(move || {
+            for task in rx {
+                run_daemon_task(task);
+            }
+        });
+        Worker { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Make sure at least `agents` loader threads exist.
+    pub fn ensure_loaders(&self, agents: usize) {
+        let mut loaders = self.loaders.lock().unwrap();
+        while loaders.len() < agents {
+            let (tx, rx) = mpsc::channel::<LoaderWork>();
+            let handle = std::thread::spawn(move || {
+                for work in rx {
+                    match work {
+                        LoaderWork::Pass(t) => run_pass_task(t),
+                        LoaderWork::Prefetch(t) => run_prefetch_task(t),
+                    }
+                }
+            });
+            loaders.push(Worker { tx: Some(tx), handle: Some(handle) });
+            self.stats.lock().unwrap().threads_spawned += 1;
+        }
+    }
+
+    pub(crate) fn submit_pass(&self, agent: usize, task: PassTask) -> Result<()> {
+        self.ensure_loaders(agent + 1);
+        let loaders = self.loaders.lock().unwrap();
+        loaders[agent]
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("loader {agent} shut down"))?
+            .send(LoaderWork::Pass(task))
+            .map_err(|_| anyhow!("loader {agent} exited"))
+    }
+
+    pub(crate) fn submit_prefetch(&self, agent: usize, task: PrefetchTask) -> Result<()> {
+        self.ensure_loaders(agent + 1);
+        task.group.enter();
+        let loaders = self.loaders.lock().unwrap();
+        let tx = match loaders[agent].tx.as_ref() {
+            Some(tx) => tx,
+            None => {
+                task.group.exit();
+                return Err(anyhow!("loader {agent} shut down"));
+            }
+        };
+        if let Err(mpsc::SendError(LoaderWork::Prefetch(t))) =
+            tx.send(LoaderWork::Prefetch(task))
+        {
+            t.group.exit();
+            return Err(anyhow!("loader {agent} exited"));
+        }
+        Ok(())
+    }
+
+    pub(crate) fn submit_daemon(&self, task: DaemonTask) -> Result<()> {
+        let daemon = self.daemon.lock().unwrap();
+        daemon
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("daemon shut down"))?
+            .send(task)
+            .map_err(|_| anyhow!("daemon exited"))
+    }
+
+    /// Record one pass dispatched with `agents_used` active loaders — the
+    /// per-pass design would have spawned `agents_used + 1` threads here.
+    pub fn note_pass(&self, agents_used: u64) {
+        let mut s = self.stats.lock().unwrap();
+        s.passes += 1;
+        s.legacy_spawns += agents_used + 1;
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for w in self.loaders.lock().unwrap().iter_mut() {
+            w.shutdown();
+        }
+        self.daemon.lock().unwrap().shutdown();
+    }
+}
+
+/// Read one shard through the throttled edge-storage stream.
+fn load_shard(shared: &PassShared, job: &StageJob) -> Result<Shard> {
+    let reader = shared.disk.open(&shared.shard_dir.join(&job.shard_file))?;
+    let shard =
+        read_shard_from(reader).with_context(|| format!("shard {}", job.shard_file))?;
+    if let Some(params) = &job.params {
+        validate_against(&shard, params)?;
+    }
+    Ok(shard)
+}
+
+/// The Loading Agent body for one pass (the old per-pass closure, minus
+/// the spawn, plus epoch tags, prefetch-buffer hits, and local stat
+/// accumulation).
+fn run_pass_task(t: PassTask) {
+    let sh = &*t.shared;
+    let mut stall_ms = 0.0f64;
+    let mut load_ms = 0.0f64;
+    'jobs: for job in &t.jobs {
+        let stage_idx = job.stage;
+        // Cross-pass prefetch / hot-layer cache: either way the stage's
+        // bytes are already resident and accounted, so it skips disk AND
+        // admission, but still takes its slot in the admission order —
+        // and its ordering wait is recorded exactly like a miss's.
+        let mut resident = sh.cache.as_ref().and_then(|c| c.take(stage_idx));
+        if resident.is_some() {
+            // A pin won the race against a speculative load of the same
+            // stage (the daemon pinned it after the prefetcher's
+            // is_pinned check).  Release the redundant duplicate now, or
+            // its bytes would stay parked for the session's lifetime.
+            if let Some(dup_bytes) = sh.buffer.as_ref().and_then(|b| b.discard(stage_idx)) {
+                sh.gate.free(dup_bytes);
+            }
+        } else {
+            resident = sh.buffer.as_ref().and_then(|b| b.take(stage_idx));
+        }
+        if let Some((shard, bytes)) = resident {
+            let t_gate0 = sh.tracer.now_ms();
+            let waited = match sh.gate.skip_at(t.epoch, stage_idx) {
+                Ok(w) => w,
+                Err(e) => {
+                    let _ = t.tx.send(LoadMsg::Failed(e));
+                    break 'jobs;
+                }
+            };
+            let waited_ms = waited.as_secs_f64() * 1000.0;
+            if waited_ms > STALL_EPS_MS {
+                sh.tracer.record(
+                    Lane::Loader(t.agent),
+                    Kind::StallMem,
+                    Some(stage_idx),
+                    t_gate0,
+                    sh.tracer.now_ms(),
+                );
+                sh.signals.emit(Signal::Stop { agent: t.agent, ms: waited_ms });
+                stall_ms += waited_ms;
+            }
+            sh.signals.emit(Signal::Comp { stage: stage_idx, agent: t.agent });
+            let _ = t.tx.send(LoadMsg::Stage(StageMsg {
+                stage: stage_idx,
+                agent: t.agent,
+                shard,
+                bytes,
+            }));
+            continue;
+        }
+        if let Some(cache) = &sh.cache {
+            cache.record_miss();
+        }
+        // S^stop: wait for the Daemon's memory admission (epoch-ordered).
+        let t_gate0 = sh.tracer.now_ms();
+        let waited = match sh.gate.admit_at(t.epoch, stage_idx, job.bytes) {
+            Ok(w) => w,
+            Err(e) => {
+                let _ = t
+                    .tx
+                    .send(LoadMsg::Failed(e.context(format!("admitting stage {stage_idx}"))));
+                break 'jobs;
+            }
+        };
+        let waited_ms = waited.as_secs_f64() * 1000.0;
+        if waited_ms > STALL_EPS_MS {
+            sh.tracer.record(
+                Lane::Loader(t.agent),
+                Kind::StallMem,
+                Some(stage_idx),
+                t_gate0,
+                sh.tracer.now_ms(),
+            );
+            sh.signals.emit(Signal::Stop { agent: t.agent, ms: waited_ms });
+            stall_ms += waited_ms;
+        }
+        // Load disk -> memory through the throttled stream.
+        let t0 = sh.tracer.now_ms();
+        match load_shard(sh, job) {
+            Ok(shard) => {
+                let t1 = sh.tracer.now_ms();
+                sh.tracer.record(Lane::Loader(t.agent), Kind::Load, Some(stage_idx), t0, t1);
+                load_ms += t1 - t0;
+                // S_comp: layer ready for computation.
+                sh.signals.emit(Signal::Comp { stage: stage_idx, agent: t.agent });
+                let _ = t.tx.send(LoadMsg::Stage(StageMsg {
+                    stage: stage_idx,
+                    agent: t.agent,
+                    shard: Arc::new(shard),
+                    bytes: job.bytes,
+                }));
+            }
+            Err(e) => {
+                sh.gate.free(job.bytes);
+                let _ = t.tx.send(LoadMsg::Failed(e));
+                break 'jobs;
+            }
+        }
+    }
+    let _ = t.tx.send(LoadMsg::AgentDone { mem_stall_ms: stall_ms, load_ms });
+}
+
+/// Speculatively load next-pass head stages into the prefetch buffer.
+/// Purely opportunistic: a stage already resident is skipped, and the
+/// first budget refusal abandons the rest (the running pass owns the
+/// memory; speculation only ever takes free slack).
+fn run_prefetch_task(t: PrefetchTask) {
+    let sh = &*t.shared;
+    let Some(buffer) = sh.buffer.as_ref() else {
+        t.group.exit();
+        return;
+    };
+    for job in &t.jobs {
+        if buffer.contains(job.stage)
+            || sh.cache.as_ref().map(|c| c.is_pinned(job.stage)).unwrap_or(false)
+        {
+            continue;
+        }
+        if !sh.gate.try_admit_prefetch(job.bytes, t.reserve) {
+            break;
+        }
+        let t0 = sh.tracer.now_ms();
+        match load_shard(sh, job) {
+            Ok(shard) => {
+                sh.tracer.record(
+                    Lane::Loader(t.agent),
+                    Kind::Prefetch,
+                    Some(job.stage),
+                    t0,
+                    sh.tracer.now_ms(),
+                );
+                if !buffer.put(job.stage, Arc::new(shard), job.bytes) {
+                    sh.gate.free(job.bytes); // raced: someone parked it first
+                }
+            }
+            Err(_) => {
+                sh.gate.free(job.bytes);
+                break; // speculation never fails a pass; just stop
+            }
+        }
+    }
+    t.group.exit();
+}
+
+/// The Daemon Agent body for one pass: pin-or-destroy each computed
+/// stage, then ack so the pass boundary knows every decision landed.
+fn run_daemon_task(t: DaemonTask) {
+    let sh = &*t.shared;
+    let mut kept: Vec<StageMsg> = Vec::new();
+    for msg in t.rx {
+        if t.destroy {
+            let t0 = sh.tracer.now_ms();
+            // Pin instead of destroy when the pin budget has room; the
+            // layer's bytes stay accounted for the next pass.  The score
+            // (predicted reload cost per byte) only matters under the
+            // cost policy, where an expensive layer may displace cheaper
+            // pins; displaced bytes go back to the budget through the gate.
+            if let Some(cache) = &sh.cache {
+                let score = sh.disk.est_load_ms(msg.bytes) / msg.bytes.max(1) as f64;
+                let (pinned, displaced) =
+                    cache.pin_scored(msg.stage, msg.shard.clone(), msg.bytes, score);
+                if displaced > 0 {
+                    sh.gate.free(displaced);
+                }
+                if pinned {
+                    sh.tracer.record(
+                        Lane::Daemon,
+                        Kind::Pin,
+                        Some(msg.stage),
+                        t0,
+                        sh.tracer.now_ms(),
+                    );
+                    continue;
+                }
+            }
+            drop(msg.shard); // the destruction
+            sh.gate.free(msg.bytes);
+            sh.tracer.record(Lane::Daemon, Kind::Destroy, Some(msg.stage), t0, sh.tracer.now_ms());
+        } else {
+            kept.push(msg); // standard pipeline: stays resident
+        }
+    }
+    for msg in kept {
+        sh.gate.free(msg.bytes);
+    }
+    let _ = t.ack.send(());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawns_avoided_accumulates_per_pass() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.stats().threads_spawned, 3, "2 loaders + daemon");
+        assert_eq!(pool.stats().spawns_avoided(), 0);
+        for _ in 0..5 {
+            pool.note_pass(2);
+        }
+        let s = pool.stats();
+        assert_eq!(s.passes, 5);
+        assert_eq!(s.legacy_spawns, 15, "old design: 3 spawns per pass");
+        assert_eq!(s.spawns_avoided(), 12);
+    }
+
+    #[test]
+    fn ensure_loaders_grows_on_demand() {
+        let pool = WorkerPool::new(1);
+        pool.ensure_loaders(4);
+        assert_eq!(pool.stats().threads_spawned, 5);
+        pool.ensure_loaders(2); // never shrinks, never respawns
+        assert_eq!(pool.stats().threads_spawned, 5);
+    }
+
+    #[test]
+    fn task_group_waits_for_exits() {
+        let g = TaskGroup::new();
+        g.enter();
+        let g2 = g.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            g2.exit();
+        });
+        let t0 = std::time::Instant::now();
+        g.wait_idle();
+        assert!(t0.elapsed().as_millis() >= 20);
+        h.join().unwrap();
+    }
+}

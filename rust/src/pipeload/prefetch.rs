@@ -1,0 +1,254 @@
+//! Cross-pass prefetch buffer: speculative weight residency.
+//!
+//! During pass k's tail compute, idle Loading Agents may read pass k+1's
+//! head stages from disk ahead of time (bounded by `--prefetch-depth`).
+//! Loaded shards park here; the next pass's Loading Agents take them like
+//! hot-layer cache hits (skip disk AND admission — the bytes were acquired
+//! when the prefetcher loaded them, via
+//! [`OrderedGate::try_admit_prefetch`], which only ever takes budget slack
+//! and always leaves `max_stage` headroom for the running pass).
+//!
+//! Prefetched bytes are the *cheapest* sacrifice in the eviction chain —
+//! they are pure speculation — so the [`OrderedGate`] reclaims them before
+//! pinned layers, device-resident weights, or KV sequences.  An evicted
+//! entry is not an error: the pass that wanted it falls back to a normal
+//! disk load through the ordinary admission path.
+//!
+//! [`OrderedGate`]: crate::pipeload::gate::OrderedGate
+//! [`OrderedGate::try_admit_prefetch`]:
+//!     crate::pipeload::gate::OrderedGate::try_admit_prefetch
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::memory::MemoryAccountant;
+use crate::weights::Shard;
+
+/// Counters for the `prefetched_stages` / `prefetch_wasted` metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefetchStats {
+    /// stages loaded ahead of their pass
+    pub prefetched: u64,
+    /// prefetched stages consumed by a later pass (skipped disk)
+    pub used: u64,
+    /// prefetched stages reclaimed (evicted or drained) before any pass
+    /// could use them — pure wasted I/O
+    pub wasted: u64,
+    /// bytes currently parked in the buffer
+    pub buffered_bytes: u64,
+}
+
+#[derive(Debug)]
+struct BufState {
+    entries: HashMap<usize, (Arc<Shard>, u64)>,
+    bytes: u64,
+    prefetched: u64,
+    used: u64,
+    wasted: u64,
+}
+
+/// Shared speculative-stage store; clone freely (Arc inside).
+#[derive(Debug, Clone)]
+pub struct PrefetchBuffer {
+    inner: Arc<Mutex<BufState>>,
+}
+
+impl Default for PrefetchBuffer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PrefetchBuffer {
+    pub fn new() -> PrefetchBuffer {
+        PrefetchBuffer {
+            inner: Arc::new(Mutex::new(BufState {
+                entries: HashMap::new(),
+                bytes: 0,
+                prefetched: 0,
+                used: 0,
+                wasted: 0,
+            })),
+        }
+    }
+
+    /// Park a prefetched shard.  The caller must already hold `bytes` in
+    /// the pass accountant (acquired via `try_admit_prefetch`).  Returns
+    /// false — and leaves the entry out — if the stage is already parked
+    /// (the caller then frees its duplicate bytes).
+    pub fn put(&self, stage: usize, shard: Arc<Shard>, bytes: u64) -> bool {
+        let mut s = self.inner.lock().unwrap();
+        if s.entries.contains_key(&stage) {
+            return false;
+        }
+        s.entries.insert(stage, (shard, bytes));
+        s.bytes += bytes;
+        s.prefetched += 1;
+        true
+    }
+
+    /// Is this stage already parked?  (Prefetch tasks skip work the buffer
+    /// already holds.)
+    pub fn contains(&self, stage: usize) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(&stage)
+    }
+
+    /// Take a prefetched stage (hit).  Its bytes stay accounted with the
+    /// caller, exactly like a hot-layer cache take.
+    pub fn take(&self, stage: usize) -> Option<(Arc<Shard>, u64)> {
+        let mut s = self.inner.lock().unwrap();
+        match s.entries.remove(&stage) {
+            Some((shard, bytes)) => {
+                s.bytes -= bytes;
+                s.used += 1;
+                Some((shard, bytes))
+            }
+            None => None,
+        }
+    }
+
+    /// Drop a parked entry that became redundant (its stage was served
+    /// from the pin cache instead).  Returns the entry's bytes — the
+    /// CALLER must free them through the gate; counts as `wasted`.
+    /// Without this, a prefetch that loses the race to a daemon pin would
+    /// stay parked (and accounted) for the session's lifetime.
+    pub fn discard(&self, stage: usize) -> Option<u64> {
+        let mut s = self.inner.lock().unwrap();
+        match s.entries.remove(&stage) {
+            Some((shard, bytes)) => {
+                s.bytes -= bytes;
+                s.wasted += 1;
+                drop(shard);
+                Some(bytes)
+            }
+            None => None,
+        }
+    }
+
+    /// Eviction valve: drop parked entries until `bytes` fit the
+    /// accountant's budget or the buffer is empty.  Returns bytes freed;
+    /// every reclaimed entry counts as `wasted` (loaded, never used).
+    pub fn evict_for(&self, bytes: u64, accountant: &MemoryAccountant) -> u64 {
+        let mut s = self.inner.lock().unwrap();
+        let mut freed = 0u64;
+        while accountant.would_block(bytes) {
+            let victim = match s.entries.keys().next().copied() {
+                Some(stage) => stage,
+                None => break,
+            };
+            let (shard, b) = s.entries.remove(&victim).unwrap();
+            s.bytes -= b;
+            s.wasted += 1;
+            freed += b;
+            drop(shard);
+            accountant.free(b);
+        }
+        freed
+    }
+
+    /// Drop every parked entry AND return its bytes to `accountant`
+    /// (failed-pass recovery under a shared accountant; counts as wasted).
+    pub fn drain(&self, accountant: &MemoryAccountant) -> u64 {
+        let mut s = self.inner.lock().unwrap();
+        let mut freed = 0u64;
+        for (_, (shard, b)) in s.entries.drain() {
+            freed += b;
+            s.wasted += 1;
+            drop(shard);
+            accountant.free(b);
+        }
+        s.bytes = 0;
+        freed
+    }
+
+    /// Drop every parked entry without touching the accountant (used when a
+    /// failed pass resets an owned accountant wholesale).
+    pub fn clear(&self) {
+        let mut s = self.inner.lock().unwrap();
+        let n = s.entries.len() as u64;
+        s.entries.clear();
+        s.wasted += n;
+        s.bytes = 0;
+    }
+
+    pub fn stats(&self) -> PrefetchStats {
+        let s = self.inner.lock().unwrap();
+        PrefetchStats {
+            prefetched: s.prefetched,
+            used: s.used,
+            wasted: s.wasted,
+            buffered_bytes: s.bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(stage: u32) -> Arc<Shard> {
+        Arc::new(Shard { kind: "decoder_layer".into(), stage, tensors: vec![] })
+    }
+
+    #[test]
+    fn put_take_roundtrip_counts_use() {
+        let b = PrefetchBuffer::new();
+        assert!(b.put(3, shard(3), 100));
+        assert!(b.contains(3));
+        assert!(!b.put(3, shard(3), 100), "duplicate put rejected");
+        let (s, bytes) = b.take(3).unwrap();
+        assert_eq!(s.stage, 3);
+        assert_eq!(bytes, 100);
+        assert!(b.take(3).is_none());
+        let st = b.stats();
+        assert_eq!(st.prefetched, 1);
+        assert_eq!(st.used, 1);
+        assert_eq!(st.wasted, 0);
+        assert_eq!(st.buffered_bytes, 0);
+    }
+
+    #[test]
+    fn evict_for_counts_wasted_and_frees_accounting() {
+        let accountant = MemoryAccountant::new(Some(300));
+        assert!(accountant.try_acquire(200));
+        let b = PrefetchBuffer::new();
+        assert!(b.put(0, shard(0), 100));
+        assert!(b.put(1, shard(1), 100));
+        // wanting 300 more forces both speculative entries out
+        let freed = b.evict_for(300, &accountant);
+        assert_eq!(freed, 200);
+        assert_eq!(accountant.used(), 0);
+        let st = b.stats();
+        assert_eq!(st.wasted, 2);
+        assert_eq!(st.used, 0);
+    }
+
+    #[test]
+    fn discard_counts_wasted_and_returns_bytes_to_caller() {
+        let b = PrefetchBuffer::new();
+        assert!(b.put(2, shard(2), 150));
+        assert_eq!(b.discard(2), Some(150), "caller frees these through the gate");
+        assert_eq!(b.discard(2), None);
+        let st = b.stats();
+        assert_eq!(st.wasted, 1);
+        assert_eq!(st.used, 0);
+        assert_eq!(st.buffered_bytes, 0);
+    }
+
+    #[test]
+    fn drain_and_clear_both_count_wasted() {
+        let accountant = MemoryAccountant::new(Some(300));
+        assert!(accountant.try_acquire(100));
+        let b = PrefetchBuffer::new();
+        assert!(b.put(0, shard(0), 100));
+        assert_eq!(b.drain(&accountant), 100);
+        assert_eq!(accountant.used(), 0);
+        assert_eq!(b.stats().wasted, 1);
+
+        let b2 = PrefetchBuffer::new();
+        assert!(b2.put(1, shard(1), 50));
+        b2.clear();
+        assert_eq!(b2.stats().wasted, 1);
+        assert_eq!(b2.stats().buffered_bytes, 0);
+    }
+}

@@ -241,6 +241,29 @@ fn parse_reports(v: &Value) -> Result<Vec<RunReport>> {
                     .and_then(|v| v.as_f64().ok())
                     .unwrap_or(0.0) as u64,
                 replans: r.get("replans").and_then(|v| v.as_f64().ok()).unwrap_or(0.0) as u64,
+                // absent in caches written before the overlapped-decode PR
+                prefetched_stages: r
+                    .get("prefetched_stages")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0) as u64,
+                prefetch_wasted: r
+                    .get("prefetch_wasted")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0) as u64,
+                device_cache_hits: r
+                    .get("device_cache_hits")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0) as u64,
+                spawns_avoided: r
+                    .get("spawns_avoided")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0) as u64,
+                decode_p50_ms: r.get("decode_p50_ms").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+                decode_p95_ms: r.get("decode_p95_ms").and_then(|v| v.as_f64().ok()).unwrap_or(0.0),
+                tokens_per_sec: r
+                    .get("tokens_per_sec")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0),
             })
         })
         .collect()
@@ -412,6 +435,13 @@ mod tests {
             budget_steps: 0,
             elastic_evictions: 0,
             replans: 0,
+            prefetched_stages: 0,
+            prefetch_wasted: 0,
+            device_cache_hits: 0,
+            spawns_avoided: 0,
+            decode_p50_ms: 0.0,
+            decode_p95_ms: 0.0,
+            tokens_per_sec: 0.0,
         }
     }
 

@@ -105,6 +105,29 @@ impl Runtime {
         activations: &[&xla::PjRtBuffer],
         shard: &Shard,
     ) -> Result<xla::PjRtBuffer> {
+        let weight_bufs = self.upload_shard(shard)?;
+        self.execute_entry_with(profile, entry, activations, &weight_bufs)
+    }
+
+    /// Upload every tensor of a stage shard to device buffers, in manifest
+    /// order.  Callers that keep the returned buffers alive (the
+    /// device-resident layer cache) can re-execute the stage on later
+    /// passes without paying this upload again.
+    pub fn upload_shard(&self, shard: &Shard) -> Result<Vec<xla::PjRtBuffer>> {
+        shard.tensors.iter().map(|t| self.buffer_from_tensor(t)).collect()
+    }
+
+    /// [`Runtime::execute_entry`] with the stage's weights already on the
+    /// device — the hot path for device-cache hits, and the shared tail of
+    /// every execute (one upload can serve several entries of one stage,
+    /// e.g. a KV prime entry plus the main entry).
+    pub fn execute_entry_with(
+        &self,
+        profile: &Profile,
+        entry: &EntrySpec,
+        activations: &[&xla::PjRtBuffer],
+        weights: &[xla::PjRtBuffer],
+    ) -> Result<xla::PjRtBuffer> {
         let exe = self.executable(profile, entry)?;
         if activations.len() != entry.activations.len() {
             bail!(
@@ -114,15 +137,10 @@ impl Runtime {
                 activations.len()
             );
         }
-        let weight_bufs: Vec<xla::PjRtBuffer> = shard
-            .tensors
-            .iter()
-            .map(|t| self.buffer_from_tensor(t))
-            .collect::<Result<_>>()?;
         let mut inputs: Vec<&xla::PjRtBuffer> =
-            Vec::with_capacity(activations.len() + weight_bufs.len());
+            Vec::with_capacity(activations.len() + weights.len());
         inputs.extend_from_slice(activations);
-        inputs.extend(weight_bufs.iter());
+        inputs.extend(weights.iter());
         let mut out = exe.execute_b::<&xla::PjRtBuffer>(&inputs)?;
         // return_tuple=False in aot.py: exactly one output array buffer.
         if out.is_empty() || out[0].is_empty() {

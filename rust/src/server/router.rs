@@ -322,6 +322,13 @@ pub struct ModelStats {
     pub elastic_evictions: u64,
     /// elastic epoch re-plans that changed this lane's agent count
     pub replans: u64,
+    /// stages this lane prefetched ahead of their pass / lost unused
+    pub prefetched_stages: u64,
+    pub prefetch_wasted: u64,
+    /// stages this lane executed from device-resident weights
+    pub device_cache_hits: u64,
+    /// thread spawn/joins this lane's worker pool avoided
+    pub spawns_avoided: u64,
 }
 
 /// Summary of one router run (all models, shared budget).
@@ -348,6 +355,13 @@ pub struct RouterSummary {
     pub elastic_evictions: u64,
     /// elastic re-plans that changed some lane's agent count
     pub replans: u64,
+    /// cross-pass prefetch totals across lanes
+    pub prefetched_stages: u64,
+    pub prefetch_wasted: u64,
+    /// device-resident cache hits across lanes
+    pub device_cache_hits: u64,
+    /// worker-pool spawn/joins avoided across lanes
+    pub spawns_avoided: u64,
     pub per_model: Vec<ModelStats>,
     /// first engine-pass failure, if any batch failed (full error chain —
     /// individual responses carry their own copies, but callers that drop
@@ -375,6 +389,10 @@ impl RouterSummary {
                     .set("kv_evicted_blocks", m.kv_evicted_blocks)
                     .set("elastic_evictions", m.elastic_evictions)
                     .set("replans", m.replans)
+                    .set("prefetched_stages", m.prefetched_stages)
+                    .set("prefetch_wasted", m.prefetch_wasted)
+                    .set("device_cache_hits", m.device_cache_hits)
+                    .set("spawns_avoided", m.spawns_avoided)
             })
             .collect();
         let mut v = Value::obj()
@@ -393,6 +411,10 @@ impl RouterSummary {
             .set("budget_steps", self.budget_steps)
             .set("elastic_evictions", self.elastic_evictions)
             .set("replans", self.replans)
+            .set("prefetched_stages", self.prefetched_stages)
+            .set("prefetch_wasted", self.prefetch_wasted)
+            .set("device_cache_hits", self.device_cache_hits)
+            .set("spawns_avoided", self.spawns_avoided)
             .set("models", models);
         if let Some(b) = self.budget_bytes {
             v = v.set("budget_bytes", b);
@@ -532,6 +554,11 @@ impl<'e> Router<'e> {
             .enumerate()
             .filter_map(|(i, l)| l.session.kv_pool().map(|p| (i, p.clone())))
             .collect();
+        let ledgers: Vec<(usize, crate::pipeload::device::DeviceLedger)> = lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| l.session.device_ledger().map(|d| (i, d)))
+            .collect();
         for (i, lane) in lanes.iter_mut().enumerate() {
             for (j, cache) in &caches {
                 if *j != i {
@@ -541,6 +568,13 @@ impl<'e> Router<'e> {
             for (j, pool) in &kv_pools {
                 if *j != i {
                     lane.session.add_kv_eviction_victim(pool.clone());
+                }
+            }
+            // one lane's S^stop pressure may also reclaim another lane's
+            // device-resident weight copies (it re-uploads on its next pass)
+            for (j, ledger) in &ledgers {
+                if *j != i {
+                    lane.session.add_device_eviction_victim(ledger.clone());
                 }
             }
         }
@@ -911,6 +945,8 @@ impl<'e> Router<'e> {
         let (mut hits, mut misses) = (0u64, 0u64);
         let (mut kv_inc, mut kv_rec, mut kv_evicted) = (0u64, 0u64, 0u64);
         let (mut elastic_ev, mut replans) = (0u64, 0u64);
+        let (mut prefetched, mut pf_wasted) = (0u64, 0u64);
+        let (mut dev_hits, mut spawns_avoided) = (0u64, 0u64);
         let per_model: Vec<ModelStats> = self
             .lanes
             .iter()
@@ -931,6 +967,13 @@ impl<'e> Router<'e> {
                 kv_evicted += kvp.evicted_blocks;
                 elastic_ev += es.elastic_evictions;
                 replans += es.replans;
+                let pf = l.session.prefetch_stats();
+                let dev = l.session.device_stats();
+                let pool_stats = l.session.pool_stats();
+                prefetched += pf.prefetched;
+                pf_wasted += pf.wasted;
+                dev_hits += dev.hits;
+                spawns_avoided += pool_stats.spawns_avoided();
                 ModelStats {
                     profile: l.profile.clone(),
                     served: l.served,
@@ -944,6 +987,10 @@ impl<'e> Router<'e> {
                     kv_evicted_blocks: kvp.evicted_blocks,
                     elastic_evictions: es.elastic_evictions,
                     replans: es.replans,
+                    prefetched_stages: pf.prefetched,
+                    prefetch_wasted: pf.wasted,
+                    device_cache_hits: dev.hits,
+                    spawns_avoided: pool_stats.spawns_avoided(),
                 }
             })
             .collect();
@@ -964,6 +1011,10 @@ impl<'e> Router<'e> {
             budget_steps: self.budget_steps,
             elastic_evictions: elastic_ev,
             replans,
+            prefetched_stages: prefetched,
+            prefetch_wasted: pf_wasted,
+            device_cache_hits: dev_hits,
+            spawns_avoided,
             per_model,
             first_error,
         })

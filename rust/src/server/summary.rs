@@ -89,6 +89,14 @@ pub struct ServeSummary {
     pub budget_steps: u64,
     pub elastic_evictions: u64,
     pub replans: u64,
+    /// cross-pass prefetch: stages loaded ahead of their pass / reclaimed
+    /// before use (both 0 = prefetch off)
+    pub prefetched_stages: u64,
+    pub prefetch_wasted: u64,
+    /// device-resident cache: stages that skipped host->device upload
+    pub device_cache_hits: u64,
+    /// worker pool: thread spawn/joins avoided vs the per-pass design
+    pub spawns_avoided: u64,
 }
 
 impl ServeSummary {
@@ -111,6 +119,10 @@ impl ServeSummary {
             budget_steps: s.budget_steps,
             elastic_evictions: s.elastic_evictions,
             replans: s.replans,
+            prefetched_stages: s.prefetched_stages,
+            prefetch_wasted: s.prefetch_wasted,
+            device_cache_hits: s.device_cache_hits,
+            spawns_avoided: s.spawns_avoided,
         }
     }
 
@@ -133,6 +145,10 @@ impl ServeSummary {
             .set("budget_steps", self.budget_steps)
             .set("elastic_evictions", self.elastic_evictions)
             .set("replans", self.replans)
+            .set("prefetched_stages", self.prefetched_stages)
+            .set("prefetch_wasted", self.prefetch_wasted)
+            .set("device_cache_hits", self.device_cache_hits)
+            .set("spawns_avoided", self.spawns_avoided)
     }
 }
 
@@ -237,6 +253,10 @@ mod tests {
             budget_steps: 1,
             elastic_evictions: 4,
             replans: 1,
+            prefetched_stages: 6,
+            prefetch_wasted: 1,
+            device_cache_hits: 8,
+            spawns_avoided: 12,
         };
         let v = s.to_json();
         for key in

@@ -42,6 +42,8 @@ pub enum Kind {
     StallWait,
     /// daemon pinned a layer into the hot-layer cache instead of destroying
     Pin,
+    /// speculative next-pass load (cross-pass prefetch overlap)
+    Prefetch,
 }
 
 impl Kind {
@@ -53,6 +55,7 @@ impl Kind {
             Kind::StallMem => 's',
             Kind::StallWait => '.',
             Kind::Pin => 'P',
+            Kind::Prefetch => 'p',
         }
     }
 
@@ -64,6 +67,7 @@ impl Kind {
             Kind::StallMem => "stall_mem",
             Kind::StallWait => "stall_wait",
             Kind::Pin => "pin",
+            Kind::Prefetch => "prefetch",
         }
     }
 }

@@ -1,0 +1,227 @@
+//! Overlapped-decode integration tests: the persistent worker pool,
+//! cross-pass prefetch, and the device-resident layer cache are pure
+//! optimizations — tokens must stay bit-identical to the non-overlapped
+//! path on the golden GPT profiles (kv-cache on and off, pressure on and
+//! off), accounting must stay inside the budget, and the new counters
+//! must prove the machinery actually engaged.  Needs `make artifacts`.
+
+use hermes::config::{Mode, Paths, RunConfig};
+use hermes::engine::Engine;
+
+fn engine() -> Engine {
+    Engine::new(Paths::detect()).unwrap()
+}
+
+fn cfg(model: &str) -> RunConfig {
+    RunConfig {
+        profile: model.into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        gen_tokens: Some(6),
+        // the non-overlapped reference: no speculation, re-upload per pass
+        prefetch_depth: 0,
+        device_cache: false,
+        ..RunConfig::default()
+    }
+}
+
+/// The acceptance contract: decode with prefetch + device cache on yields
+/// exactly the tokens the plain path yields, for every golden generative
+/// profile, batch size, and kv-cache setting — and peak accounted bytes
+/// stay inside the budget.
+#[test]
+fn overlapped_decode_is_bit_identical_across_golden_profiles() {
+    let e = engine();
+    for model in ["tiny-gpt", "tiny-gptj"] {
+        let total = e.runtime.profile(model).unwrap().total_weight_bytes;
+        for kv in [false, true] {
+            for batch in [1usize, 2] {
+                let mut plain = cfg(model);
+                plain.kv_cache = kv;
+                let mut s = e.open_session(&plain).unwrap();
+                let (_, plain_out) = s.run_batch(batch, 1234).unwrap();
+                drop(s);
+
+                let mut overlapped = cfg(model);
+                overlapped.kv_cache = kv;
+                overlapped.budget = Some(3 * total);
+                overlapped.pin_budget = Some(total);
+                overlapped.prefetch_depth = 8;
+                overlapped.device_cache = true;
+                let mut s = e.open_session(&overlapped).unwrap();
+                let (rep, out) = s.run_batch(batch, 1234).unwrap();
+
+                assert_eq!(
+                    plain_out.generated_rows, out.generated_rows,
+                    "{model} kv={kv} batch={batch}: overlap must be bit-identical ({rep:?})"
+                );
+                assert_eq!(plain_out.generated, out.generated);
+                assert!(
+                    rep.peak_bytes <= 3 * total,
+                    "{model} kv={kv} batch={batch}: peak {} above budget {}",
+                    rep.peak_bytes,
+                    3 * total
+                );
+                assert!(
+                    rep.device_cache_hits > 0,
+                    "{model} kv={kv} batch={batch}: device cache never engaged ({rep:?})"
+                );
+            }
+        }
+    }
+}
+
+/// Prefetch without a hot-layer cache: every next pass re-loads, so the
+/// speculative loads are guaranteed useful — the counters must show stages
+/// loaded ahead and consumed, and tokens must not change.
+#[test]
+fn prefetch_engages_and_preserves_tokens_without_pins() {
+    let e = engine();
+    let total = e.runtime.profile("tiny-gpt").unwrap().total_weight_bytes;
+    let mut plain = cfg("tiny-gpt");
+    plain.budget = Some(2 * total);
+    let mut s = e.open_session(&plain).unwrap();
+    let (_, plain_out) = s.run_batch(1, 77).unwrap();
+    drop(s);
+
+    let mut pf = plain.clone();
+    pf.prefetch_depth = 8; // covers every stage of the tiny profiles
+    let mut s = e.open_session(&pf).unwrap();
+    let (rep, out) = s.run_batch(1, 77).unwrap();
+    assert_eq!(plain_out.generated_rows, out.generated_rows, "{rep:?}");
+    assert!(
+        rep.prefetched_stages > 0,
+        "6-token decode with budget slack must prefetch something: {rep:?}"
+    );
+    let pf_stats = s.prefetch_stats();
+    assert!(pf_stats.used > 0, "prefetched stages must be consumed: {pf_stats:?}");
+    // admissions and speculation respect the budget; only transient
+    // activation force_adds may ride above it (the established semantic)
+    let max_stage = e.runtime.profile("tiny-gpt").unwrap().max_stage_bytes();
+    assert!(
+        rep.peak_bytes <= 2 * total + max_stage,
+        "peak {} above budget {}",
+        rep.peak_bytes,
+        2 * total
+    );
+    // speculation never outlives its usefulness bound: nothing may still
+    // be parked once the request is over and no next pass was announced
+    assert_eq!(pf_stats.buffered_bytes, 0, "{pf_stats:?}");
+}
+
+/// Device-resident weights: with budget slack and a full-model pin budget,
+/// every post-first-token stage must execute from retained `PjRtBuffer`s —
+/// exactly as many device hits as host-cache hits — without changing
+/// tokens or head outputs.
+#[test]
+fn device_cache_serves_every_hot_stage_and_matches_uncached_output() {
+    let e = engine();
+    let profile = e.runtime.profile("tiny-gpt").unwrap();
+    let total = profile.total_weight_bytes;
+    let n_stages = profile.stages.len();
+
+    let mut without = cfg("tiny-gpt");
+    without.pin_budget = Some(total); // host pins on, device cache off
+    let mut s = e.open_session(&without).unwrap();
+    let (rep_off, out_off) = s.run_batch(1, 42).unwrap();
+    drop(s);
+    assert_eq!(rep_off.device_cache_hits, 0);
+
+    let mut with = without.clone();
+    with.device_cache = true;
+    let mut s = e.open_session(&with).unwrap();
+    let (rep_on, out_on) = s.run_batch(1, 42).unwrap();
+
+    assert_eq!(out_off.generated, out_on.generated, "device cache changed decode output");
+    assert_eq!(out_off.head_sample, out_on.head_sample, "device cache changed head output");
+    // tokens 2..6 hit both the host pin cache AND the device cache
+    assert_eq!(rep_on.device_cache_hits as usize, 5 * n_stages, "{rep_on:?}");
+    assert_eq!(rep_on.device_cache_hits, rep_on.cache_hits, "{rep_on:?}");
+    assert_eq!(s.device_stats().hits, rep_on.device_cache_hits);
+}
+
+/// A memory budget too tight to keep speculation AND weights in flight:
+/// the eviction chain may reclaim prefetched stages (and KV blocks)
+/// mid-decode, and the loaders must fall back to normal disk loads —
+/// tokens stay identical, the run completes, accounting settles.
+#[test]
+fn tight_budget_overlap_decode_survives_eviction_with_identical_tokens() {
+    let e = engine();
+    let profile = e.runtime.profile("tiny-gpt").unwrap();
+    let max_stage = profile.stages.iter().map(|s| profile.stage_bytes(s)).max().unwrap();
+    let budget = max_stage + max_stage / 2;
+
+    let mut plain = cfg("tiny-gpt");
+    plain.budget = Some(budget);
+    plain.kv_cache = true;
+    let mut s = e.open_session(&plain).unwrap();
+    let (_, plain_out) = s.run_batch(1, 55).unwrap();
+    drop(s);
+
+    let mut overlapped = plain.clone();
+    overlapped.prefetch_depth = 8;
+    overlapped.device_cache = true; // pin budget 0 => device cap stays 0
+    let mut s = e.open_session(&overlapped).unwrap();
+    let (rep, out) = s.run_batch(1, 55).unwrap();
+    assert_eq!(
+        plain_out.generated_rows, out.generated_rows,
+        "tokens must survive tight-budget overlap: {rep:?}"
+    );
+    // every speculative byte was either consumed or reclaimed; nothing
+    // may stay parked against a budget this tight
+    assert_eq!(s.prefetch_stats().buffered_bytes, 0, "{:?}", s.prefetch_stats());
+    assert!(
+        rep.peak_bytes <= budget + 2 * max_stage,
+        "peak {} far above tight budget {}",
+        rep.peak_bytes,
+        budget
+    );
+}
+
+/// The persistent pool amortizes thread creation: a 4-token decode used to
+/// spawn 4 x (agents + daemon) threads; the pool spawns each exactly once.
+#[test]
+fn worker_pool_avoids_per_pass_thread_spawns() {
+    let e = engine();
+    let mut c = cfg("tiny-gpt");
+    c.gen_tokens = Some(4);
+    let mut s = e.open_session(&c).unwrap();
+    let (rep, _) = s.run_batch(1, 7).unwrap();
+    assert_eq!(rep.tokens, 4);
+    // 4 passes x (2 agents + 1 daemon) = 12 legacy spawns, 3 real threads
+    assert_eq!(rep.spawns_avoided, 9, "{rep:?}");
+    let stats = s.pool_stats();
+    assert_eq!(stats.threads_spawned, 3);
+    assert_eq!(stats.passes, 4);
+    // a second request on the same session spawns nothing new
+    let (rep2, _) = s.run_batch(1, 8).unwrap();
+    assert_eq!(rep2.spawns_avoided, 12, "all 4 passes avoided all 3 spawns: {rep2:?}");
+    assert_eq!(s.pool_stats().threads_spawned, 3);
+}
+
+/// Per-token decode percentiles and throughput surface in the report
+/// (the bench trajectory records them).
+#[test]
+fn decode_latency_percentiles_reported() {
+    let e = engine();
+    let mut s = e.open_session(&cfg("tiny-gpt")).unwrap();
+    let (rep, _) = s.run_batch(1, 3).unwrap();
+    assert_eq!(rep.tokens, 6);
+    assert!(rep.decode_p50_ms > 0.0, "{rep:?}");
+    assert!(rep.decode_p95_ms >= rep.decode_p50_ms, "{rep:?}");
+    assert!(rep.tokens_per_sec > 0.0, "{rep:?}");
+    let v = rep.to_json();
+    for key in ["decode_p50_ms", "decode_p95_ms", "tokens_per_sec", "prefetched_stages",
+        "prefetch_wasted", "device_cache_hits", "spawns_avoided"]
+    {
+        assert!(v.get(key).is_some(), "missing RunReport json key {key}");
+    }
+    // non-generative runs report zeros, not garbage
+    let mut bert = cfg("tiny-bert");
+    bert.gen_tokens = None;
+    let mut s = e.open_session(&bert).unwrap();
+    let (rep, _) = s.run_batch(1, 3).unwrap();
+    assert_eq!(rep.tokens_per_sec, 0.0);
+    assert_eq!(rep.decode_p50_ms, 0.0);
+}
