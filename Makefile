@@ -6,7 +6,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts golden build test examples bench bench-diff fmt clippy clean
+.PHONY: artifacts golden build test examples bench bench-diff tsan fmt clippy clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../rust/artifacts
@@ -23,22 +23,35 @@ test:
 examples:
 	cargo build --release --examples
 
-# Record perf trajectories (one-model kv off/on, a two-lane router run,
-# an elastic shrink-grow run, and a pinned gpt2-base-sim decode measured
-# with PR 4 semantics AND with the overlapped decode path) into
-# BENCH_pr4.json + BENCH_pr5.json; CI uploads both.
+# Record perf trajectories (one-model kv off/on, the two-lane router run
+# measured serialized AND concurrent, an elastic shrink-grow run, and a
+# pinned gpt2-base-sim overlapped decode) into BENCH_pr5.json +
+# BENCH_pr6.json; CI uploads both.
 bench:
 	cargo run --release --example bench_trajectory
 
-# Fail-soft per-metric deltas between the PR 4 and PR 5 trajectories
+# Fail-soft per-metric deltas between the PR 5 and PR 6 trajectories
 # (advisory: a missing file prints a note instead of failing the build).
 # NOTE: one `make bench` run writes both files from the same summaries, so
-# the serve sections diff to zero by construction — the signal is the
-# `decode_gpt2_pinned` section (non-overlapped vs overlapped decode) plus
-# whatever a previous CI run's BENCH_pr4 artifact contributes when dropped
+# most sections diff to zero by construction — the signal is the
+# `router_two_kv_lanes` section (serialized vs concurrent lanes) plus
+# whatever a previous CI run's BENCH_pr5 artifact contributes when dropped
 # in place.
 bench-diff:
-	$(PY) scripts/bench_diff.py BENCH_pr4.json BENCH_pr5.json
+	$(PY) scripts/bench_diff.py BENCH_pr5.json BENCH_pr6.json
+
+# ThreadSanitizer over the concurrency-heavy test binaries (nightly-only:
+# -Zsanitizer needs -Zbuild-std so std is instrumented too).  PJRT-backed
+# integration tests are excluded — the C runtime is not TSan-clean — so
+# this sweeps the pure-Rust ledgers, gates, governor, and property tests.
+TSAN_TARGET ?= $(shell rustc -vV | sed -n 's/^host: //p')
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+	cargo +nightly test -Zbuild-std --target $(TSAN_TARGET) -q \
+		--lib -p hermes -- memory:: pipeload::gate server::lanes
+	RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+	cargo +nightly test -Zbuild-std --target $(TSAN_TARGET) -q \
+		--test prop_invariants -- concurrent
 
 fmt:
 	cargo fmt --check

@@ -1,20 +1,23 @@
 //! `make bench` driver: record a machine-readable perf trajectory so
 //! future PRs can diff serving behavior (`make bench-diff`).
 //!
-//! Five runs, all with unthrottled storage (fast + free of disk variance):
+//! Five sections, all with unthrottled storage (fast + free of disk
+//! variance):
 //!
 //! * `one_model`         — generative serve, KV cache OFF (paper decode)
 //! * `one_model_kv`      — same workload with `--kv-cache`
 //! * `router_two_kv_lanes` — tiny-gpt + tiny-gptj lanes under one shared
-//!   budget, each with a KV allocation
+//!   budget, each with a KV allocation, recorded TWICE under the same
+//!   key: the serialized router (PR 5 semantics, one pass in flight at a
+//!   time) into `BENCH_pr5.json` and the concurrent router (per-lane
+//!   executors overlapping passes against the same shared budget) into
+//!   `BENCH_pr6.json`, so `make bench-diff` reports the aggregate
+//!   throughput improvement of lane concurrency directly.
 //! * `elastic_shrink_grow` — the KV serve again, with a shrink-grow
 //!   memory-pressure trace resizing the budget mid-run
 //! * `decode_gpt2_pinned` — a pinned (`--pin-budget-mb`) gpt2-base-sim
-//!   decode, recorded TWICE under the same key: overlap off (PR 4's
-//!   feature semantics; the worker-pool refactor is common to both) into
-//!   `BENCH_pr4.json` and overlapped (`--prefetch-depth` +
-//!   device-resident cache) into `BENCH_pr5.json`, so `make bench-diff`
-//!   reports the per-token speedup of the overlap features directly.
+//!   overlapped decode (prefetch + device-resident weights); identical
+//!   in both files — the decode path is unchanged this PR.
 //!
 //! The JSON keys are the stable `serve --json` / summary keys (the decode
 //! run uses the `RunReport` keys, incl. `decode_p50_ms` / `decode_p95_ms`
@@ -26,8 +29,28 @@ use anyhow::Result;
 use hermes::config::{Mode, RunConfig};
 use hermes::elastic::{PressureStep, PressureTrace};
 use hermes::engine::Engine;
-use hermes::server::{serve, InferRequest, Router, RouterConfig, ServeConfig};
+use hermes::server::{
+    serve, ConcurrentRouter, InferRequest, Router, RouterConfig, RouterHandle, ServeConfig,
+};
 use hermes::util::json::Value;
+
+/// Submit `n` requests alternating between the two lanes, wait for every
+/// reply, then shut the router down.  Both router runs get this exact
+/// traffic so the pr5/pr6 delta isolates lane concurrency.
+fn drive_lanes(handle: RouterHandle, n: usize) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let tickets: Vec<_> = (0..n)
+            .map(|i| {
+                let profile = if i % 2 == 0 { "tiny-gpt" } else { "tiny-gptj" };
+                handle.submit(InferRequest::new(profile)).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            let _ = t.wait();
+        }
+        handle.shutdown();
+    })
+}
 
 fn main() -> Result<()> {
     let engine = Engine::with_default_paths()?;
@@ -59,34 +82,30 @@ fn main() -> Result<()> {
     };
     let on = serve(&engine, &on_cfg)?;
 
-    // two generative KV lanes under one shared budget
+    // two generative KV lanes under one shared budget: serialized first
+    // (PR 5 semantics), then the concurrent router with identical traffic.
+    // The budget leaves headroom for both lanes to hold passes at once so
+    // the concurrent run measures overlap, not reclaim churn.
     let mut lane_b = kv_run.clone();
     lane_b.profile = "tiny-gptj".into();
-    let router = Router::new(
-        &engine,
-        RouterConfig {
-            models: vec![kv_run.clone(), lane_b],
-            budget: Some(gpt + gptj),
-            kv_budget: Some(1 << 20),
-            max_batch: 2,
-            batch_window: Duration::from_millis(5),
-            ..RouterConfig::default()
-        },
-    )?;
-    let handle = router.handle();
-    let producer = std::thread::spawn(move || {
-        let tickets: Vec<_> = (0..8)
-            .map(|i| {
-                let profile = if i % 2 == 0 { "tiny-gpt" } else { "tiny-gptj" };
-                handle.submit(InferRequest::new(profile)).unwrap()
-            })
-            .collect();
-        for t in tickets {
-            let _ = t.wait();
-        }
-        handle.shutdown();
-    });
-    let router_summary = router.run()?;
+    let lanes_cfg = RouterConfig {
+        models: vec![kv_run.clone(), lane_b],
+        budget: Some(2 * (gpt + gptj)),
+        kv_budget: Some(1 << 20),
+        max_batch: 2,
+        batch_window: Duration::from_millis(5),
+        ..RouterConfig::default()
+    };
+    let router = Router::new(&engine, lanes_cfg.clone())?;
+    let producer = drive_lanes(router.handle(), 8);
+    let router_pr5 = router.run()?;
+    producer.join().expect("producer panicked");
+
+    let mut conc_cfg = lanes_cfg;
+    conc_cfg.concurrent = true;
+    let conc = ConcurrentRouter::new(engine.paths.clone(), conc_cfg)?;
+    let producer = drive_lanes(conc.handle(), 8);
+    let router_pr6 = conc.run()?;
     producer.join().expect("producer panicked");
 
     // elastic: the same KV workload while a shrink-grow trace resizes the
@@ -113,75 +132,73 @@ fn main() -> Result<()> {
     };
     let elastic = serve(&engine, &elastic_cfg)?;
 
-    // gpt2-base-sim pinned decode, measured both ways: overlap OFF
-    // (`--prefetch-depth 0` + device cache disabled — PR 4's FEATURE
-    // semantics; note both runs ride the persistent worker pool, so the
-    // thread-spawn savings are shared, not part of this delta) and
-    // overlap ON.  Same profile, seed, and token count — the per-token
-    // delta isolates prefetch + device-resident weights.
+    // gpt2-base-sim pinned overlapped decode (prefetch + device-resident
+    // weights); the single-session decode path is unchanged this PR, so
+    // the same run lands in both files and diffs flat.
     let gpt2_total = engine.runtime.profile("gpt2-base-sim")?.total_weight_bytes;
-    let decode_base = RunConfig {
+    let decode_cfg = RunConfig {
         profile: "gpt2-base-sim".into(),
         mode: Mode::PipeLoad,
         agents: 2,
         disk: "unthrottled".into(),
         gen_tokens: Some(4),
         pin_budget: Some(gpt2_total),
-        prefetch_depth: 0,
-        device_cache: false,
+        prefetch_depth: 4,
+        device_cache: true,
         ..RunConfig::default()
     };
-    let mut session = engine.open_session(&decode_base)?;
-    let (decode_pr4, _) = session.run_batch(1, 42)?;
-    drop(session);
-    let mut decode_overlap_cfg = decode_base.clone();
-    decode_overlap_cfg.prefetch_depth = 4;
-    decode_overlap_cfg.device_cache = true;
-    let mut session = engine.open_session(&decode_overlap_cfg)?;
-    let (decode_pr5, _) = session.run_batch(1, 42)?;
+    let mut session = engine.open_session(&decode_cfg)?;
+    let (decode, _) = session.run_batch(1, 42)?;
     drop(session);
 
-    let pr4 = Value::obj()
-        .set("bench", "pr4-elastic")
-        .set("one_model", off.to_json())
-        .set("one_model_kv", on.to_json())
-        .set("router_two_kv_lanes", router_summary.to_json())
-        .set("elastic_shrink_grow", elastic.to_json())
-        .set("decode_gpt2_pinned", decode_pr4.to_json());
-    pr4.to_file(&std::path::PathBuf::from("BENCH_pr4.json"))?;
     let pr5 = Value::obj()
         .set("bench", "pr5-overlapped-decode")
         .set("one_model", off.to_json())
         .set("one_model_kv", on.to_json())
-        .set("router_two_kv_lanes", router_summary.to_json())
+        .set("router_two_kv_lanes", router_pr5.to_json())
         .set("elastic_shrink_grow", elastic.to_json())
-        .set("decode_gpt2_pinned", decode_pr5.to_json());
+        .set("decode_gpt2_pinned", decode.to_json());
     pr5.to_file(&std::path::PathBuf::from("BENCH_pr5.json"))?;
-    println!("wrote BENCH_pr4.json + BENCH_pr5.json");
+    let pr6 = Value::obj()
+        .set("bench", "pr6-concurrent-lanes")
+        .set("one_model", off.to_json())
+        .set("one_model_kv", on.to_json())
+        .set("router_two_kv_lanes", router_pr6.to_json())
+        .set("elastic_shrink_grow", elastic.to_json())
+        .set("decode_gpt2_pinned", decode.to_json());
+    pr6.to_file(&std::path::PathBuf::from("BENCH_pr6.json"))?;
+    println!("wrote BENCH_pr5.json + BENCH_pr6.json");
     println!(
         "one-model p50 {:.1} ms (kv off) vs {:.1} ms (kv on, {} incremental passes); \
-         router: {} served, {} kv incremental passes, peak {} B; \
          elastic: {} budget steps, {} evictions, p50 {:.1} ms",
         off.latency.p50(),
         on.latency.p50(),
         on.kv_inc_passes,
-        router_summary.served,
-        router_summary.kv_inc_passes,
-        router_summary.peak_bytes,
         elastic.budget_steps,
         elastic.elastic_evictions,
         elastic.latency.p50(),
     );
     println!(
-        "gpt2 pinned decode: token p50 {:.1} ms -> {:.1} ms, {:.2} -> {:.2} tokens/s \
+        "two-lane router: {:.2} -> {:.2} req/s serialized -> concurrent \
+         ({} served each, peak {} -> {} B, {} pass(es) in flight at peak, \
+         queue wait p50 {:.1} -> {:.1} ms)",
+        router_pr5.throughput_rps,
+        router_pr6.throughput_rps,
+        router_pr6.served,
+        router_pr5.peak_bytes,
+        router_pr6.peak_bytes,
+        router_pr6.concurrent_passes_peak,
+        router_pr5.queue_wait_p50_ms,
+        router_pr6.queue_wait_p50_ms,
+    );
+    println!(
+        "gpt2 pinned overlapped decode: token p50 {:.1} ms, {:.2} tokens/s \
          ({} device hits, {} prefetched, {} spawns avoided)",
-        decode_pr4.decode_p50_ms,
-        decode_pr5.decode_p50_ms,
-        decode_pr4.tokens_per_sec,
-        decode_pr5.tokens_per_sec,
-        decode_pr5.device_cache_hits,
-        decode_pr5.prefetched_stages,
-        decode_pr5.spawns_avoided,
+        decode.decode_p50_ms,
+        decode.tokens_per_sec,
+        decode.device_cache_hits,
+        decode.prefetched_stages,
+        decode.spawns_avoided,
     );
     Ok(())
 }

@@ -83,7 +83,7 @@ use crate::model::Profile;
 use crate::pipeload::assignment::assignment;
 use crate::pipeload::cache::{CacheStats, LayerCache};
 use crate::pipeload::device::{DeviceCache, DeviceLedger, DeviceStats};
-use crate::pipeload::gate::OrderedGate;
+use crate::pipeload::gate::{OrderedGate, ReclaimToken};
 use crate::pipeload::pool::{PoolStats, TaskGroup, WorkerPool};
 use crate::pipeload::prefetch::{PrefetchBuffer, PrefetchStats};
 use crate::pipeload::{
@@ -123,12 +123,13 @@ pub struct Session<'e> {
     device: Option<DeviceCache>,
     /// monotonic admission epoch; one per attempted pass
     pass_epoch: u64,
+    /// true when the caller knows more requests follow this one (a serving
+    /// queue with depth): the LAST pass of a request then still prefetches
+    /// the next request's head stages across the `run_batch` boundary
+    expect_more: bool,
     /// Paged KV pool (Some when `kv_cache` is on and the profile ships the
     /// incremental decode entries); blocks charge the session accountant.
     kv_pool: Option<KvPool>,
-    /// Other lanes' KV pools registered as eviction victims (snapshots for
-    /// shared-accountant error recovery).
-    kv_victims: Vec<KvPool>,
     /// Baseline mode: the whole model, loaded on first use
     resident: Option<ResidentModel>,
     prepared_entries: usize,
@@ -322,8 +323,8 @@ impl<'e> Session<'e> {
             prefetch_group: TaskGroup::new(),
             device,
             pass_epoch: 0,
+            expect_more: false,
             kv_pool,
-            kv_victims: Vec::new(),
             resident: None,
             prepared_entries,
             passes_run: 0,
@@ -491,14 +492,43 @@ impl<'e> Session<'e> {
     /// recompute — degraded, never wrong.
     ///
     /// NOTE: under today's per-request KV lifecycle (blocks freed when
-    /// `run_batch` returns) a victim pool is empty whenever this lane
-    /// runs a pass, so cross-lane KV eviction cannot fire yet.  It is
-    /// wired — and the failed-pass recovery snapshots victim-KV bytes —
-    /// so the accounting stays exact the day sequences outlive requests
-    /// (the ROADMAP's prefix-sharing follow-up).
+    /// `run_batch` returns) a victim pool is only non-empty while that
+    /// lane's request is in flight — which concurrent lanes make an
+    /// everyday occurrence, so the chain is reclaim-token-guarded (see
+    /// `pipeload::gate`).
     pub fn add_kv_eviction_victim(&mut self, pool: KvPool) {
-        self.kv_victims.push(pool.clone());
         self.gate.add_kv_pool(pool);
+    }
+
+    /// A cloned handle of this session's admission gate, for cross-lane
+    /// wiring (peer wakeups, the shared reclaim token).  All gate clones
+    /// share state; the handle is Send.
+    pub fn pipeline_gate(&self) -> OrderedGate {
+        self.gate.clone()
+    }
+
+    /// Share a fleet-wide reclaim token (see
+    /// [`crate::pipeload::gate::ReclaimToken`]): every lane of a
+    /// concurrent Router must hold the SAME token so cross-lane eviction
+    /// chains serialize instead of interleaving.
+    pub fn set_reclaim_token(&mut self, token: ReclaimToken) {
+        self.gate.set_reclaim_token(token);
+    }
+
+    /// Register another lane's gate for cross-lane waiter wakeups: a free
+    /// on that lane may be the headroom an admission parked HERE needs.
+    /// Required (both directions) between lanes serving concurrently on a
+    /// shared accountant.
+    pub fn add_gate_peer(&mut self, other: &OrderedGate) {
+        self.gate.add_peer(other);
+    }
+
+    /// Tell the session whether more requests are queued behind the
+    /// current one.  When true, the LAST pass of a `run_batch` keeps
+    /// `expect_next` on, so idle loaders prefetch the NEXT request's head
+    /// stages across the request boundary (serve-queue depth permitting).
+    pub fn set_expect_more(&mut self, more: bool) {
+        self.expect_more = more;
     }
 
     /// Attach a planner schedule after opening (see
@@ -675,6 +705,30 @@ impl<'e> Session<'e> {
         self.epochs.last().unwrap()
     }
 
+    /// Set the Loading Agent count directly — the Router's rebalanced
+    /// worker-pool slice for this lane after a fleet elastic step.  The
+    /// persistent pool only ever grows (threads are cheap to keep, costly
+    /// to respawn); the assignment shrinks/widens immediately, taking
+    /// effect at the next pass boundary.  Returns true when the count
+    /// actually changed (counted as a re-plan).
+    pub fn set_agents(&mut self, agents: usize) -> bool {
+        if self.cfg.mode != Mode::PipeLoad {
+            return false;
+        }
+        let agents = agents.max(1);
+        let Some(opts) = self.opts.as_mut() else { return false };
+        if opts.agents == agents {
+            return false;
+        }
+        opts.agents = agents;
+        self.plan = assignment(self.ctx.profile.stages.len(), agents);
+        if let Some(pool) = &self.pool {
+            pool.ensure_loaders(agents);
+        }
+        self.elastic_totals.replans += 1;
+        true
+    }
+
     /// Pass-boundary hook: apply every trace step due at the current pass
     /// count.  Decode loops call this before each token's pass, so a
     /// budget step lands between passes — never mid-admission.
@@ -731,7 +785,9 @@ impl<'e> Session<'e> {
             let (out, stats) = if self.opts.is_none() {
                 self.baseline_forward(&input)?
             } else {
-                self.pass(&input, false)?
+                // a serving queue with more requests pending keeps prefetch
+                // alive across the request boundary
+                self.pass(&input, self.expect_more)?
             };
             head = self.engine.runtime.buffer_to_f32(&out)?;
             passes.push(stats);
@@ -751,8 +807,10 @@ impl<'e> Session<'e> {
             for step in 0..gen_tokens {
                 let t_tok = Instant::now();
                 // idle loaders may prefetch the next token's head stages
-                // while this token's tail still computes
-                let expect_next = step + 1 < gen_tokens;
+                // while this token's tail still computes; with more
+                // requests queued, even the last token's pass prefetches
+                // (the next request re-enters at stage 0 regardless)
+                let expect_next = step + 1 < gen_tokens || self.expect_more;
                 // elastic budget steps land here, between token passes
                 self.poll_elastic();
                 // Incremental when the cached prefix lines up exactly with
@@ -923,10 +981,10 @@ impl<'e> Session<'e> {
         mode: &PassMode,
         expect_next: bool,
     ) -> Result<(xla::PjRtBuffer, PassStats)> {
-        // Quiesce leftover speculative loads from the previous pass before
-        // snapshotting: a prefetch task mutating the accountant between the
-        // snapshots below would skew failed-pass recovery.  Costs ~nothing:
-        // each agent's regular work queues behind its prefetch task anyway.
+        // Quiesce leftover speculative loads from the previous pass: each
+        // agent's regular work queues behind its prefetch task anyway, so
+        // this costs ~nothing, and it keeps the pass ledger's balance
+        // meaningful (in-flight prefetches charge it).
         self.prefetch_group.wait_idle();
         // every attempted pass is a fresh admission epoch: stragglers from
         // a failed pass error out as stale instead of corrupting the order
@@ -934,15 +992,6 @@ impl<'e> Session<'e> {
         self.gate.begin_pass(self.pass_epoch);
         let opts = self.opts.as_ref().expect("pass() requires a pipelined mode");
         let pool = self.pool.as_ref().expect("pipelined sessions own a worker pool");
-        // Snapshots for shared-accountant error recovery (see below).
-        let used0 = self.accountant.used();
-        let own_pins0 = self.cache.as_ref().map(|c| c.stats().pinned_bytes).unwrap_or(0);
-        let own_kv0 = self.kv_pool.as_ref().map(|p| p.used_bytes()).unwrap_or(0);
-        let own_prefetch0 = self.prefetch.as_ref().map(|b| b.stats().buffered_bytes).unwrap_or(0);
-        let own_device0 = self.device.as_ref().map(|d| d.stats().resident_bytes).unwrap_or(0);
-        let victim_pins0 = self.gate.victim_pinned_bytes();
-        let victim_kv0: u64 = self.kv_victims.iter().map(|p| p.used_bytes()).sum();
-        let victim_dev0 = self.gate.victim_device_bytes();
         self.accountant.reset_peak_to_used();
         let env = PassEnv {
             gate: &self.gate,
@@ -959,15 +1008,14 @@ impl<'e> Session<'e> {
         let r = run_pass_mode(&self.ctx, opts, &env, input, mode);
         if r.is_err() {
             // speculative loads may still be mutating the accountant and
-            // the prefetch buffer; wait them out before reasoning about
-            // what the failed pass left behind
+            // the pass ledger; wait them out before draining either
             self.prefetch_group.wait_idle();
             if self.owns_accountant {
                 // A failed pass can leave in-flight bytes accounted; drop
                 // any pins, speculative loads, device copies, and cached
-                // KV, then restart the accounting wholesale (the pool
-                // frees BEFORE the reset so its own byte tracking stays
-                // consistent with the accountant's).
+                // KV, drain the pass ledger (so its balance stays in sync
+                // with the accountant), then restart the accounting
+                // wholesale.
                 if let Some(c) = &self.cache {
                     c.clear();
                 }
@@ -981,48 +1029,27 @@ impl<'e> Session<'e> {
                 if let Some(p) = &self.kv_pool {
                     p.invalidate_all();
                 }
+                self.gate.ledger().drain();
                 self.accountant.reset();
             } else {
-                // Shared accountant: other sessions' pins and residents are
-                // still accounted in it, so release exactly what this pass
-                // left behind — our pins, prefetches, device copies, KV
-                // blocks, and any in-flight bytes — and clear the shutdown
-                // the failed pass raised.  Other sessions' bytes after the
-                // pass = what they held before, minus any of their
-                // pins/KV/device state we evicted while running; the
-                // router runs one pass at a time, so the snapshots are
-                // exact.
-                if let Some(c) = &self.cache {
-                    c.drain(&self.accountant);
-                }
-                if let Some(b) = &self.prefetch {
-                    b.drain(&self.accountant);
-                }
-                if let Some(d) = &self.device {
-                    d.ledger().drain(&self.accountant);
-                    d.sweep();
-                }
+                // Shared accountant: other lanes' charges are live in it —
+                // possibly CHANGING right now (concurrent lanes), so no
+                // snapshot arithmetic can be exact.  The pass ledger makes
+                // recovery local instead: drain() frees exactly the bytes
+                // THIS pass still holds (admitted-but-unfreed loads,
+                // activation transients, adopted takes).  Durable stores —
+                // pins, prefetched shards, device copies, ours and other
+                // lanes' alike — were never the pass's charge and stay
+                // resident.  Own KV sequences are invalidated: a failed
+                // pass may leave one half-written, and its blocks are
+                // pool-accounted (store-owned), not ledger-charged.
                 if let Some(p) = &self.kv_pool {
                     p.invalidate_all();
                 }
-                let victims_evicted =
-                    victim_pins0.saturating_sub(self.gate.victim_pinned_bytes());
-                let victim_kv_now: u64 = self.kv_victims.iter().map(|p| p.used_bytes()).sum();
-                let victim_kv_evicted = victim_kv0.saturating_sub(victim_kv_now);
-                let victim_dev_evicted =
-                    victim_dev0.saturating_sub(self.gate.victim_device_bytes());
-                let others_now = used0
-                    .saturating_sub(own_pins0)
-                    .saturating_sub(own_kv0)
-                    .saturating_sub(own_prefetch0)
-                    .saturating_sub(own_device0)
-                    .saturating_sub(victims_evicted)
-                    .saturating_sub(victim_kv_evicted)
-                    .saturating_sub(victim_dev_evicted);
-                let leaked = self.accountant.used().saturating_sub(others_now);
-                if leaked > 0 {
-                    self.accountant.free(leaked);
+                if let Some(d) = &self.device {
+                    d.sweep(); // drop buffers the chain evicted meanwhile
                 }
+                self.gate.ledger().drain();
                 self.accountant.revive();
             }
         } else {

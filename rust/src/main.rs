@@ -355,6 +355,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "max-batch", takes_value: true, default: Some("4"), help: "max requests per batch" });
     opts.push(Opt { name: "slo-ms", takes_value: true, default: Some("5000"), help: "p95 latency SLO" });
     opts.push(Opt { name: "listen", takes_value: true, default: None, help: "serve a TCP front-end on this address (e.g. 127.0.0.1:7070; one JSON object per line; {\"op\":\"shutdown\"} stops it); --model may list several profiles, comma-separated" });
+    opts.push(Opt { name: "concurrent", takes_value: false, default: None, help: "run lanes concurrently (one executor thread + engine per model, shared budget); --listen only" });
+    opts.push(Opt { name: "lane-weights", takes_value: true, default: None, help: "comma-separated admission weights, one per model (with --concurrent; default all-equal)" });
+    opts.push(Opt { name: "workers", takes_value: true, default: None, help: "total Loading-Agent threads split across pipeload lanes by weight (with --concurrent; overrides --agents)" });
     opts.push(Opt { name: "json", takes_value: false, default: None, help: "print the machine-readable summary instead of the human one" });
     let a = Args::parse(rest, &opts)?;
     if a.flag("help") {
@@ -403,12 +406,31 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         if non_default("requests") || non_default("rps") || non_default("slo-ms") {
             eprintln!("hermes serve: --requests/--rps/--slo-ms drive the synthetic workload and are ignored with --listen");
         }
+        let lane_weights = a
+            .get("lane-weights")
+            .map(|s| -> Result<Vec<f64>> {
+                s.split(',')
+                    .map(|w| {
+                        w.trim()
+                            .parse::<f64>()
+                            .map_err(|_| anyhow::anyhow!("bad lane weight '{w}'"))
+                    })
+                    .collect()
+            })
+            .transpose()?;
+        let worker_allotment = a.get("workers").map(|s| s.parse()).transpose()?;
+        if (lane_weights.is_some() || worker_allotment.is_some()) && !a.flag("concurrent") {
+            bail!("--lane-weights/--workers only make sense with --concurrent");
+        }
         let router_cfg = RouterConfig {
             models: runs,
             budget,
             kv_budget,
             max_batch: a.usize("max-batch")?,
             memory_trace,
+            concurrent: a.flag("concurrent"),
+            lane_weights,
+            worker_allotment,
             ..RouterConfig::default()
         };
         let frontend = TcpFrontend::bind(addr)?;
@@ -420,6 +442,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             println!("served {} requests ({} rejected) in {} batches (mean batch {:.2})", s.served, s.rejected, s.batches, s.mean_batch_size);
             println!("  throughput: {:.2} req/s", s.throughput_rps);
             println!("  latency p50 {}  p95 {}  p99 {}", human_ms(s.latency.p50()), human_ms(s.latency.p95()), human_ms(s.latency.p99()));
+            println!("  queue wait p50 {}  p95 {}  ({} pass(es) in flight at peak)", human_ms(s.queue_wait_p50_ms), human_ms(s.queue_wait_p95_ms), s.concurrent_passes_peak);
             println!("  peak mem: {}{}", human_bytes(s.peak_bytes), s.budget_bytes.map(|b| format!("  (budget {})", human_bytes(b))).unwrap_or_default());
             if s.budget_steps > 0 {
                 println!("  elastic:  {} budget steps, {} evictions, {} re-plans", s.budget_steps, s.elastic_evictions, s.replans);
@@ -431,6 +454,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         return Ok(());
     }
 
+    if a.flag("concurrent") {
+        bail!("--concurrent needs --listen (the synthetic workload drives one serialized lane)");
+    }
     if runs.len() != 1 {
         bail!("the synthetic workload serves one model; pass --listen for multi-model serving");
     }
@@ -453,6 +479,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     println!("served {} requests in {} batches (mean batch {:.2})", s.served, s.batches, s.mean_batch_size);
     println!("  throughput: {:.2} req/s", s.throughput_rps);
     println!("  latency p50 {}  p95 {}  p99 {}", human_ms(s.latency.p50()), human_ms(s.latency.p95()), human_ms(s.latency.p99()));
+    println!("  queue wait p50 {}  p95 {}  ({} pass(es) in flight at peak)", human_ms(s.queue_wait_p50_ms), human_ms(s.queue_wait_p95_ms), s.concurrent_passes_peak);
     println!("  peak mem: {}", human_bytes(s.peak_bytes));
     if s.cache_hits + s.cache_misses > 0 {
         println!(

@@ -7,6 +7,23 @@
 //! (the loading agent is "stopped"), `free()` (the daemon's destruction)
 //! wakes the waiters.  Peak usage is the paper's "memory footprint" metric
 //! (max occupancy over the execution lifecycle).
+//!
+//! # Per-pass ledgers (concurrent lanes)
+//!
+//! One accountant may be shared by several sessions whose passes run
+//! **concurrently** (the Router's lane executors).  Each in-flight pass
+//! owns a [`PassLedger`]: every transient byte the pass holds is charged
+//! against the shared budget *and* recorded in the ledger, and bytes that
+//! move into a durable store (pin cache, prefetch buffer, device cache)
+//! are [`PassLedger::release`]d to it.  A failed pass recovers by
+//! [`PassLedger::drain`]ing exactly its own outstanding bytes — no
+//! snapshot arithmetic over `used`, which is only exact when passes are
+//! serialized.
+//!
+//! Waiter wakeup is notification-driven: every mutation that can unblock
+//! an `acquire` (`free`, `resize`, `reset`, `shutdown`, `revive`)
+//! notifies the condvar, so blocked chargers need no poll timeout even
+//! with many lanes charging concurrently.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -65,9 +82,13 @@ impl MemoryAccountant {
         }
         let t0 = Instant::now();
         let mut stalled = false;
+        // Pure notification wait: every used-decreasing or budget-changing
+        // mutation notifies, so no poll timeout is needed even with many
+        // concurrent chargers (a timeout here would just hide a lost-wakeup
+        // bug instead of surfacing it).
         while !s.shutdown && s.budget.map(|b| s.used + bytes > b).unwrap_or(false) {
             stalled = true;
-            s = cv.wait_timeout(s, Duration::from_millis(100)).unwrap().0;
+            s = cv.wait(s).unwrap();
         }
         if s.shutdown {
             bail!("accountant shut down");
@@ -205,6 +226,113 @@ impl MemoryAccountant {
         s.stall_events = 0;
         s.shutdown = false;
         cv.notify_all();
+    }
+
+    /// A fresh per-pass ledger charged against this accountant.
+    pub fn pass_ledger(&self) -> PassLedger {
+        PassLedger { accountant: self.clone(), held: Arc::new(Mutex::new(0)) }
+    }
+}
+
+/// Per-pass byte ledger over a (possibly shared) [`MemoryAccountant`].
+///
+/// Every transient byte an in-flight pass holds — admitted weights riding
+/// loader channels, device-copy uploads, activations — is charged through
+/// the ledger, so the pass always knows exactly how many accounted bytes
+/// are *its own*.  Bytes whose ownership moves between the pass and a
+/// durable store (pin cache, prefetch buffer, device cache) transfer with
+/// [`PassLedger::adopt`] / [`PassLedger::release`] without touching
+/// accountant usage.  Failed-pass recovery calls [`PassLedger::drain`]:
+/// it returns the pass's outstanding bytes to the budget and nothing
+/// else, which stays exact while other lanes' passes charge the same
+/// accountant concurrently (the snapshot arithmetic this replaces was
+/// only correct with one pass in flight).
+///
+/// A byte's lifecycle through the ledger is sequential (charged before it
+/// can be freed), so the two-lock update (accountant, then ledger) never
+/// underflows even though it is not atomic; `drain` runs only after the
+/// pass's workers have quiesced.
+#[derive(Debug, Clone)]
+pub struct PassLedger {
+    accountant: MemoryAccountant,
+    held: Arc<Mutex<u64>>,
+}
+
+impl PassLedger {
+    /// Blocking charge: accountant admission + ledger record.
+    pub fn acquire(&self, bytes: u64) -> Result<Duration> {
+        let waited = self.accountant.acquire(bytes)?;
+        *self.held.lock().unwrap() += bytes;
+        Ok(waited)
+    }
+
+    /// Non-blocking charge; false if it would exceed the budget.
+    pub fn try_acquire(&self, bytes: u64) -> bool {
+        self.try_acquire_reserving(bytes, 0)
+    }
+
+    /// Non-blocking charge preserving `reserve` bytes of headroom.
+    pub fn try_acquire_reserving(&self, bytes: u64, reserve: u64) -> bool {
+        if !self.accountant.try_acquire_reserving(bytes, reserve) {
+            return false;
+        }
+        *self.held.lock().unwrap() += bytes;
+        true
+    }
+
+    /// Charge bytes that must not block (compute-path transients); may
+    /// push the accountant above budget, exactly like
+    /// [`MemoryAccountant::force_add`].
+    pub fn force_add(&self, bytes: u64) {
+        self.accountant.force_add(bytes);
+        *self.held.lock().unwrap() += bytes;
+    }
+
+    /// Return pass-owned bytes to the budget (discharge + accountant free).
+    pub fn free(&self, bytes: u64) {
+        self.discharge(bytes);
+        self.accountant.free(bytes);
+    }
+
+    /// Take ownership of bytes a store already accounts (a pinned layer or
+    /// prefetched shard handed to this pass): ledger only, usage unchanged.
+    pub fn adopt(&self, bytes: u64) {
+        *self.held.lock().unwrap() += bytes;
+    }
+
+    /// Hand pass-owned bytes to a durable store (pin / device-retain /
+    /// prefetch-park): they stay accounted but are no longer this pass's
+    /// to drain.
+    pub fn release(&self, bytes: u64) {
+        self.discharge(bytes);
+    }
+
+    fn discharge(&self, bytes: u64) {
+        let mut held = self.held.lock().unwrap();
+        assert!(*held >= bytes, "ledger discharge({bytes}) underflows held={held}");
+        *held -= bytes;
+    }
+
+    /// Bytes the pass currently holds.
+    pub fn balance(&self) -> u64 {
+        *self.held.lock().unwrap()
+    }
+
+    /// Free every byte the pass still holds (failed-pass recovery);
+    /// returns how many were drained.
+    pub fn drain(&self) -> u64 {
+        let leaked = {
+            let mut held = self.held.lock().unwrap();
+            std::mem::take(&mut *held)
+        };
+        if leaked > 0 {
+            self.accountant.free(leaked);
+        }
+        leaked
+    }
+
+    pub fn accountant(&self) -> &MemoryAccountant {
+        &self.accountant
     }
 }
 
@@ -367,6 +495,92 @@ mod tests {
         assert!(m.would_block(0));
         m.resize(None);
         assert_eq!(m.over_budget_bytes(), 0);
+    }
+
+    #[test]
+    fn pass_ledger_tracks_and_drains_own_bytes_only() {
+        let m = MemoryAccountant::new(Some(100));
+        let a = m.pass_ledger();
+        let b = m.pass_ledger();
+        a.acquire(30).unwrap();
+        b.acquire(40).unwrap();
+        a.force_add(10);
+        assert_eq!(a.balance(), 40);
+        assert_eq!(b.balance(), 40);
+        assert_eq!(m.used(), 80);
+        // a's recovery drains a's bytes alone; b's stay accounted
+        assert_eq!(a.drain(), 40);
+        assert_eq!(a.balance(), 0);
+        assert_eq!(m.used(), 40);
+        b.free(40);
+        assert_eq!(m.used(), 0);
+        assert_eq!(b.balance(), 0);
+    }
+
+    #[test]
+    fn pass_ledger_ownership_transfers_keep_usage() {
+        let m = MemoryAccountant::new(Some(100));
+        let l = m.pass_ledger();
+        l.acquire(50).unwrap();
+        // pin: bytes leave the pass but stay accounted
+        l.release(20);
+        assert_eq!(l.balance(), 30);
+        assert_eq!(m.used(), 50);
+        // next pass takes the pinned layer back
+        l.adopt(20);
+        assert_eq!(l.balance(), 50);
+        assert_eq!(m.used(), 50);
+        l.free(50);
+        assert_eq!(m.used(), 0);
+        // drain with nothing held is a no-op
+        assert_eq!(l.drain(), 0);
+    }
+
+    #[test]
+    fn pass_ledger_try_acquire_respects_budget_and_reserve() {
+        let m = MemoryAccountant::new(Some(100));
+        let l = m.pass_ledger();
+        assert!(!l.try_acquire_reserving(80, 30));
+        assert!(l.try_acquire_reserving(60, 30));
+        assert!(!l.try_acquire(50));
+        assert!(l.try_acquire(40));
+        assert_eq!(l.balance(), 100);
+        assert_eq!(l.drain(), 100);
+        assert_eq!(m.used(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflows")]
+    fn pass_ledger_release_underflow_panics() {
+        let m = MemoryAccountant::unlimited();
+        let l = m.pass_ledger();
+        l.force_add(5);
+        l.release(6);
+    }
+
+    #[test]
+    fn concurrent_ledgers_drain_exactly_under_contention() {
+        let m = MemoryAccountant::new(Some(1000));
+        let mut handles = Vec::new();
+        for i in 0..6 {
+            let l = m.pass_ledger();
+            handles.push(std::thread::spawn(move || {
+                for k in 0..100 {
+                    l.acquire(10).unwrap();
+                    if (i + k) % 3 == 0 {
+                        l.drain(); // simulated failed-pass recovery
+                    } else {
+                        l.free(10);
+                    }
+                }
+                assert_eq!(l.balance(), 0);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.used(), 0, "every lane returned exactly its own bytes");
+        assert!(m.peak() <= 1000);
     }
 
     #[test]

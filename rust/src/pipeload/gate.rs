@@ -45,6 +45,29 @@
 //! max_stage` liveness invariant holds across the pass boundary.
 //! Prefetched bytes are first in the eviction chain.
 //!
+//! # Concurrent lanes
+//!
+//! When several sessions' passes run **concurrently** against one shared
+//! accountant (the Router's lane executors), two disciplines keep the
+//! victim chains safe:
+//!
+//! * every byte a pass holds transiently is charged through the gate's
+//!   [`PassLedger`], so a failed pass drains exactly its own bytes while
+//!   other lanes keep charging (see [`crate::memory`]).  Frees therefore
+//!   split into [`OrderedGate::free`] (pass-owned bytes) and
+//!   [`OrderedGate::free_store`] (bytes a durable store owned — displaced
+//!   pins, discarded prefetch duplicates);
+//! * full eviction-chain walks take a fleet-wide [`ReclaimToken`] — a
+//!   reentrant lock shared by every lane's gate — so two lanes reclaiming
+//!   each other's victims cannot interleave half-finished chains, and the
+//!   gate-state mutex is NEVER held while the chain runs (lock order:
+//!   token → store mutexes / gate state → accountant, each released
+//!   before the next tier is taken from a different path);
+//! * lanes are **peered** ([`OrderedGate::add_peer`]): every free or
+//!   reclaim on one lane notifies all peer gates' condvars too, because
+//!   the headroom it opens may be exactly what another lane's parked
+//!   admission is waiting for.
+//!
 //! [`MemoryAccountant::acquire`]: crate::memory::MemoryAccountant::acquire
 //! [`Session`]: crate::engine::session::Session
 
@@ -57,7 +80,77 @@ use super::cache::LayerCache;
 use super::device::DeviceLedger;
 use super::prefetch::PrefetchBuffer;
 use crate::kvcache::KvPool;
-use crate::memory::MemoryAccountant;
+use crate::memory::{MemoryAccountant, PassLedger};
+
+/// Fleet-wide reclaim token: serializes full eviction-chain walks across
+/// concurrently-running lanes.  Two lanes evicting each other's victims
+/// under one shared budget must not interleave half-finished chains (each
+/// would see the other's partial progress and over-evict), and an elastic
+/// budget step must not race a stalled admission's inline reclaim.  The
+/// token is **reentrant** — a thread already holding it may re-enter
+/// (`reclaim_to_budget` from a path that already took the token) — and is
+/// shared by every gate of a Router via
+/// [`OrderedGate::set_reclaim_token`]; a standalone gate gets its own.
+#[derive(Debug, Clone, Default)]
+pub struct ReclaimToken {
+    inner: Arc<TokenInner>,
+}
+
+#[derive(Debug, Default)]
+struct TokenInner {
+    state: Mutex<TokenState>,
+    cv: Condvar,
+}
+
+#[derive(Debug, Default)]
+struct TokenState {
+    owner: Option<std::thread::ThreadId>,
+    depth: usize,
+}
+
+impl ReclaimToken {
+    pub fn new() -> ReclaimToken {
+        ReclaimToken::default()
+    }
+
+    /// Take the token, waiting for another lane's chain walk to finish;
+    /// reentrant for the holding thread.
+    pub fn acquire(&self) -> ReclaimGuard<'_> {
+        let me = std::thread::current().id();
+        let mut s = self.inner.state.lock().unwrap();
+        loop {
+            match s.owner {
+                None => {
+                    s.owner = Some(me);
+                    s.depth = 1;
+                    break;
+                }
+                Some(o) if o == me => {
+                    s.depth += 1;
+                    break;
+                }
+                Some(_) => s = self.inner.cv.wait(s).unwrap(),
+            }
+        }
+        ReclaimGuard { token: self }
+    }
+}
+
+/// RAII guard for a held [`ReclaimToken`].
+pub struct ReclaimGuard<'a> {
+    token: &'a ReclaimToken,
+}
+
+impl Drop for ReclaimGuard<'_> {
+    fn drop(&mut self) {
+        let mut s = self.token.inner.state.lock().unwrap();
+        s.depth -= 1;
+        if s.depth == 0 {
+            s.owner = None;
+            self.token.inner.cv.notify_one();
+        }
+    }
+}
 
 #[derive(Debug)]
 struct GateState {
@@ -89,11 +182,23 @@ pub struct OrderedGate {
     /// costlier sacrifice (that sequence recomputes its full prefix for
     /// every remaining token, while an unpinned layer is one disk read).
     kv_pools: Vec<KvPool>,
+    /// Per-pass byte ledger: every transient the running pass charges goes
+    /// through here, so failed-pass recovery can drain exactly this pass's
+    /// outstanding bytes without touching other lanes' charges.
+    ledger: PassLedger,
+    /// Fleet-wide eviction-chain lock (shared across a Router's lanes).
+    reclaim: ReclaimToken,
+    /// Other lanes' gate states on the same shared accountant.  A free on
+    /// THIS lane may be exactly what a peer lane's stalled admission is
+    /// waiting for, so every waiter-waking event notifies peers too —
+    /// without this, concurrent lanes deadlock parked on their own gates.
+    peers: Vec<Arc<(Mutex<GateState>, Condvar)>>,
     state: Arc<(Mutex<GateState>, Condvar)>,
 }
 
 impl OrderedGate {
     pub fn new(accountant: MemoryAccountant) -> OrderedGate {
+        let ledger = accountant.pass_ledger();
         OrderedGate {
             accountant,
             cache: None,
@@ -102,6 +207,9 @@ impl OrderedGate {
             victims: Vec::new(),
             victim_devices: Vec::new(),
             kv_pools: Vec::new(),
+            ledger,
+            reclaim: ReclaimToken::new(),
+            peers: Vec::new(),
             state: Arc::new((
                 Mutex::new(GateState { epoch: 0, next_admit: 0, shutdown: false }),
                 Condvar::new(),
@@ -161,6 +269,68 @@ impl OrderedGate {
 
     pub fn accountant(&self) -> &MemoryAccountant {
         &self.accountant
+    }
+
+    /// The gate's per-pass ledger.  Recovery drains it; stats read it.
+    pub fn ledger(&self) -> &PassLedger {
+        &self.ledger
+    }
+
+    /// Share one fleet-wide [`ReclaimToken`] across every lane's gate.
+    /// Must be called before concurrent serving starts (while the session
+    /// is still being wired, same as `add_victim`).
+    pub fn set_reclaim_token(&mut self, token: ReclaimToken) {
+        self.reclaim = token;
+    }
+
+    /// The token guarding this gate's eviction chain (for sharing).
+    pub fn reclaim_token(&self) -> ReclaimToken {
+        self.reclaim.clone()
+    }
+
+    /// Register another lane's gate for cross-lane wakeups.  Lanes sharing
+    /// an accountant MUST be peered both ways: a free here can be the
+    /// budget headroom a peer's parked admission needs, and its own gate
+    /// condvar would otherwise never be notified.
+    pub fn add_peer(&mut self, other: &OrderedGate) {
+        self.peers.push(other.state.clone());
+    }
+
+    /// Wake admission waiters on this gate and every peered lane's gate.
+    /// Each notify holds that gate's mutex (see [`OrderedGate::free`] for
+    /// the lost-wakeup argument); the locks are taken strictly one at a
+    /// time, never nested, so peering cannot introduce a lock cycle.
+    fn notify_waiters(&self) {
+        {
+            let _guard = self.state.0.lock().unwrap();
+            self.state.1.notify_all();
+        }
+        for peer in &self.peers {
+            let _guard = peer.0.lock().unwrap();
+            peer.1.notify_all();
+        }
+    }
+
+    /// Charge bytes the pass computes into existence (activations, device
+    /// upload copies, unpacked KV) — they may transiently exceed the
+    /// budget, exactly like [`MemoryAccountant::force_add`], but are
+    /// ledger-tracked so a failed pass drains them.
+    pub fn force_add(&self, bytes: u64) {
+        self.ledger.force_add(bytes);
+    }
+
+    /// Record bytes moving from a durable store INTO the pass (a cache or
+    /// prefetch-buffer `take`): no accountant traffic — the bytes stay
+    /// accounted — only ledger ownership changes.
+    pub fn adopt(&self, bytes: u64) {
+        self.ledger.adopt(bytes);
+    }
+
+    /// Record bytes moving from the pass INTO a durable store (a pin that
+    /// stuck, a device copy retained across passes): the store now owns
+    /// them, so a failed-pass drain must not free them.
+    pub fn transfer_to_store(&self, bytes: u64) {
+        self.ledger.release(bytes);
     }
 
     /// One rung at a time through the eviction chain, cheapest sacrifice
@@ -224,6 +394,7 @@ impl OrderedGate {
             let turn = epoch.map(|e| s.epoch == e).unwrap_or(true) && s.next_admit == stage;
             if turn {
                 if self.accountant.try_acquire(bytes) {
+                    self.ledger.adopt(bytes);
                     s.next_admit += 1;
                     cv.notify_all();
                     return Ok(t0.elapsed());
@@ -231,10 +402,29 @@ impl OrderedGate {
                 // S^stop pressure: reclaim resident-but-rebuildable state
                 // before parking — speculation, device copies, pins (own
                 // then victims'), and as a last resort cached KV sequences,
-                // whose owners fall back to full-prefix recompute.
-                if self.evict_chain_for(bytes) {
-                    continue; // retry with the reclaimed headroom
+                // whose owners fall back to full-prefix recompute.  The
+                // gate mutex is dropped while the chain runs: the fleet
+                // token serializes chains across lanes, and a lane holding
+                // its gate mutex through a chain would deadlock against
+                // another lane's reclaim notifying this gate.
+                drop(s);
+                let reclaimed = {
+                    let _chain = self.reclaim.acquire();
+                    self.evict_chain_for(bytes)
+                };
+                if reclaimed {
+                    // the freed headroom may also admit a peer lane's
+                    // parked stage — this lane only retries itself below
+                    self.notify_waiters();
                 }
+                s = lock.lock().unwrap();
+                if reclaimed || !self.accountant.would_block(bytes) {
+                    continue; // retry with the reclaimed (or freed) headroom
+                }
+                // Nothing reclaimable and still no room.  Any free that
+                // landed during the unlocked window is visible to the
+                // would_block check above; later frees notify under this
+                // mutex, so the wait below cannot miss them.
             }
             s = cv.wait(s).unwrap();
         }
@@ -279,27 +469,40 @@ impl OrderedGate {
     /// Non-blocking speculative admission for cross-pass prefetch: acquire
     /// `bytes` only if the budget can hold them AND still leave `reserve`
     /// (the profile's `max_stage`) of headroom for the running pass.  Never
-    /// parks, never evicts — prefetch only ever takes free slack.
+    /// parks, never evicts — prefetch only ever takes free slack.  The
+    /// bytes are ledger-charged until the prefetched shard lands in the
+    /// buffer (a store hand-off via [`OrderedGate::transfer_to_store`]) or
+    /// is freed.
     pub fn try_admit_prefetch(&self, bytes: u64, reserve: u64) -> bool {
-        self.accountant.try_acquire_reserving(bytes, reserve)
+        self.ledger.try_acquire_reserving(bytes, reserve)
     }
 
-    /// Free bytes (daemon destruction, transient uploads, activations) and
-    /// wake admission waiters.  All budget-relevant releases inside a
-    /// pipeline pass MUST route through here, not the raw accountant —
-    /// admit() parks on this gate's condvar.
+    /// Free pass-owned bytes (daemon destruction, transient uploads,
+    /// activations) and wake admission waiters.  All budget-relevant
+    /// releases inside a pipeline pass MUST route through here (or
+    /// [`OrderedGate::free_store`] for store-owned bytes), not the raw
+    /// accountant — admit() parks on this gate's condvar.
     ///
     /// The notify happens while holding the gate mutex: admit() checks the
     /// budget under that mutex before parking, so an unlocked notify could
     /// land in the window between a failed `try_acquire` and `cv.wait` and
     /// be lost forever (the classic lost-wakeup).  Taking the mutex
     /// serializes this free against that window.  No lock-order inversion:
-    /// the accountant lock inside `free` is released before the gate mutex
-    /// is taken.
+    /// the ledger and accountant locks inside are each released before the
+    /// gate mutex is taken.
     pub fn free(&self, bytes: u64) {
+        self.ledger.free(bytes);
+        self.notify_waiters();
+    }
+
+    /// Free bytes a durable store owned (a displaced pin the daemon hands
+    /// back, a prefetched duplicate the pass discards): same accountant
+    /// release and waiter wakeup as [`OrderedGate::free`], but NOT drawn
+    /// from the pass ledger — the pass never owned these bytes, so a
+    /// ledger discharge would corrupt failed-pass recovery.
+    pub fn free_store(&self, bytes: u64) {
         self.accountant.free(bytes);
-        let _guard = self.state.0.lock().unwrap();
-        self.state.1.notify_all();
+        self.notify_waiters();
     }
 
     /// Drive the full eviction chain — own pinned layers, then victim
@@ -311,7 +514,12 @@ impl OrderedGate {
     /// and in the same order.  Returns `(bytes_freed, evictions)` where
     /// `evictions` counts reclaimed pins + KV blocks.  Waiters parked on
     /// the gate are woken — freed bytes (or a grown budget) may admit them.
+    ///
+    /// Holds the fleet [`ReclaimToken`] for the whole walk (reentrantly, so
+    /// a caller already holding it nests), serializing it against other
+    /// lanes' inline admission reclaims under a shared budget.
     pub fn reclaim_to_budget(&self) -> (u64, u64) {
+        let _chain = self.reclaim.acquire();
         let ev0 = self.chain_eviction_count();
         let mut freed = 0u64;
         if self.accountant.would_block(0) {
@@ -343,8 +551,7 @@ impl OrderedGate {
             freed += p.evict_for(0);
         }
         let ev1 = self.chain_eviction_count();
-        let _guard = self.state.0.lock().unwrap();
-        self.state.1.notify_all();
+        self.notify_waiters();
         (freed, ev1 - ev0)
     }
 
@@ -733,5 +940,108 @@ mod tests {
         assert!(waited.as_millis() < 1000);
         assert_eq!(accountant.used(), 60);
         assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn reclaim_token_reentrant_and_mutually_exclusive() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let token = ReclaimToken::new();
+        let g1 = token.acquire();
+        let g2 = token.acquire(); // same thread nests freely
+        let t = token.clone();
+        let entered = Arc::new(AtomicBool::new(false));
+        let flag = entered.clone();
+        let h = std::thread::spawn(move || {
+            let _g = t.acquire();
+            flag.store(true, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!entered.load(Ordering::SeqCst), "other thread must wait");
+        drop(g2);
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!entered.load(Ordering::SeqCst), "outer guard still holds");
+        drop(g1);
+        h.join().unwrap();
+        assert!(entered.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn ledger_charges_admissions_and_store_frees_bypass_it() {
+        let gate = OrderedGate::new(MemoryAccountant::new(Some(100)));
+        gate.admit(0, 30).unwrap();
+        assert_eq!(gate.ledger().balance(), 30);
+        gate.force_add(20); // activation transient
+        assert_eq!(gate.ledger().balance(), 50);
+        // a pin sticks: 30 of the pass's bytes become store-owned
+        gate.transfer_to_store(30);
+        assert_eq!(gate.ledger().balance(), 20);
+        // the store's eventual release must not touch the ledger
+        gate.free_store(30);
+        assert_eq!(gate.ledger().balance(), 20);
+        assert_eq!(gate.accountant().used(), 20);
+        // a cache take moves store-owned bytes back into the pass
+        gate.accountant().force_add(10);
+        gate.adopt(10);
+        assert_eq!(gate.ledger().balance(), 30);
+        gate.free(30);
+        assert_eq!(gate.ledger().balance(), 0);
+        assert_eq!(gate.accountant().used(), 0);
+        assert_eq!(gate.ledger().drain(), 0, "nothing outstanding to recover");
+    }
+
+    #[test]
+    fn failed_pass_drain_frees_only_pass_bytes() {
+        use crate::weights::Shard;
+        let accountant = MemoryAccountant::new(Some(100));
+        let cache = LayerCache::new(100);
+        let gate = OrderedGate::with_cache(accountant.clone(), cache.clone());
+        // durable pin from an earlier pass: 40 B store-owned
+        assert!(accountant.try_acquire(40));
+        assert!(cache.pin(1, Arc::new(Shard { kind: "k".into(), stage: 1, tensors: vec![] }), 40));
+        // the pass charges 50 B of transients, then dies mid-flight
+        gate.admit(0, 20).unwrap();
+        gate.force_add(30);
+        assert_eq!(gate.ledger().drain(), 50, "recovery frees the pass's bytes");
+        assert_eq!(accountant.used(), 40, "the pin survives recovery untouched");
+    }
+
+    #[test]
+    fn concurrent_cross_lane_reclaim_shares_token_without_deadlock() {
+        use crate::weights::Shard;
+        // Two lanes under one 100 B budget, each carrying the other's cache
+        // as a victim and sharing one reclaim token.  Both hammer stalled
+        // admissions that must evict across lanes — no deadlock, no
+        // double-free (the accountant's underflow assert would fire), and
+        // the shared peak never exceeds the budget.
+        let accountant = MemoryAccountant::new(Some(100));
+        let cache_a = LayerCache::new(100);
+        let cache_b = LayerCache::new(100);
+        let mut gate_a = OrderedGate::with_cache(accountant.clone(), cache_a.clone());
+        let mut gate_b = OrderedGate::with_cache(accountant.clone(), cache_b.clone());
+        gate_a.add_victim(cache_b.clone());
+        gate_b.add_victim(cache_a.clone());
+        let token = ReclaimToken::new();
+        gate_a.set_reclaim_token(token.clone());
+        gate_b.set_reclaim_token(token);
+        gate_a.add_peer(&gate_b);
+        gate_b.add_peer(&gate_a);
+        assert!(accountant.try_acquire(40));
+        assert!(cache_a.pin(1, Arc::new(Shard { kind: "k".into(), stage: 1, tensors: vec![] }), 40));
+        assert!(accountant.try_acquire(40));
+        assert!(cache_b.pin(1, Arc::new(Shard { kind: "k".into(), stage: 1, tensors: vec![] }), 40));
+        std::thread::scope(|scope| {
+            for gate in [&gate_a, &gate_b] {
+                scope.spawn(move || {
+                    for _ in 0..20 {
+                        gate.admit(0, 60).unwrap();
+                        gate.free(60);
+                        gate.reset();
+                    }
+                });
+            }
+        });
+        assert_eq!(accountant.used(), 0);
+        assert!(accountant.peak() <= 100, "peak {} over budget", accountant.peak());
+        assert_eq!(gate_a.ledger().balance() + gate_b.ledger().balance(), 0);
     }
 }

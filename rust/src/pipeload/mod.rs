@@ -565,7 +565,6 @@ fn inference_core(
     stats: &mut PassStats,
     agents_done: &mut usize,
 ) -> Result<(xla::PjRtBuffer, ())> {
-    let accountant = gate.accountant();
     let mut pending: HashMap<usize, StageMsg> = HashMap::new();
     let n_stages = profile.stages.len();
     let incremental = matches!(mode, PassMode::Incremental { .. });
@@ -629,13 +628,13 @@ fn inference_core(
         if k == 0 {
             let b = input.to_buffer(ctx.runtime, &entry.activations[0])?;
             act_bytes = entry.activations[0].num_bytes() as u64;
-            accountant.force_add(act_bytes);
+            gate.force_add(act_bytes);
             act = Some(b);
         } else if stage.kind == "cross_decoder_layer" && enc_out.is_none() {
             // first decoder layer: the encoder output doubles as the
             // decoder seed (simplified seq2seq trace, DESIGN.md §2)
             enc_out_bytes = act_bytes;
-            accountant.force_add(enc_out_bytes);
+            gate.force_add(enc_out_bytes);
             enc_out = act.take();
             act = None;
         }
@@ -657,7 +656,7 @@ fn inference_core(
                     .ok_or_else(|| anyhow!("{KV_EVICTED_MIDPASS} at stage {k}"))?;
                 kv_in_bytes = entry.activations[1].num_bytes() as u64
                     + entry.activations[2].num_bytes() as u64;
-                accountant.force_add(kv_in_bytes);
+                gate.force_add(kv_in_bytes);
                 let shape = [ctx.batch, profile.max_seq, profile.hidden];
                 kv_bufs = Some((
                     ctx.runtime.buffer_f32(&dk, &shape)?,
@@ -697,7 +696,7 @@ fn inference_core(
             stats.device_cache_hits += 1;
             None
         } else {
-            accountant.force_add(msg.bytes);
+            gate.force_add(msg.bytes);
             Some(
                 ctx.runtime
                     .upload_shard(&msg.shard)
@@ -715,7 +714,7 @@ fn inference_core(
             if is_body {
                 let kv_entry = profile.entry(&format!("{}_kv", stage.kind), ctx.batch)?;
                 let kv_out_bytes = kv_entry.output.num_bytes() as u64;
-                accountant.force_add(kv_out_bytes);
+                gate.force_add(kv_out_bytes);
                 let kv_out = ctx
                     .runtime
                     .execute_entry_with(profile, kv_entry, &act_refs, weights)
@@ -757,7 +756,11 @@ fn inference_core(
         } else {
             let bufs = fresh_bufs.unwrap();
             let retained = device.map(|d| d.retain(k, bufs, msg.bytes)).unwrap_or(false);
-            if !retained {
+            if retained {
+                // the device copy outlives this pass: its bytes become
+                // device-cache-owned, off this pass's ledger
+                gate.transfer_to_store(msg.bytes);
+            } else {
                 gate.free(msg.bytes);
             }
         }
@@ -771,7 +774,7 @@ fn inference_core(
             // unpack [B,3,H]: row 0 continues the pass, rows 1–2 are the
             // token's K/V, appended to the cached sequence
             let out_bytes = entry.output.num_bytes() as u64;
-            accountant.force_add(out_bytes);
+            gate.force_add(out_bytes);
             let host = ctx.runtime.buffer_to_f32(&out)?;
             drop(out);
             let (h, b_sz) = (profile.hidden, ctx.batch);
@@ -789,7 +792,7 @@ fn inference_core(
             }
             let new_act = ctx.runtime.buffer_f32(&xr, &[b_sz, 1, h])?;
             let new_bytes = (b_sz * h * 4) as u64;
-            accountant.force_add(new_bytes);
+            gate.force_add(new_bytes);
             gate.free(out_bytes);
             gate.free(act_bytes);
             act_bytes = new_bytes;
@@ -797,7 +800,7 @@ fn inference_core(
         } else {
             // swap activation accounting: new out replaces old act
             let out_bytes = entry.output.num_bytes() as u64;
-            accountant.force_add(out_bytes);
+            gate.force_add(out_bytes);
             gate.free(act_bytes);
             act_bytes = out_bytes;
             act = Some(out);

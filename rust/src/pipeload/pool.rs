@@ -314,13 +314,17 @@ fn run_pass_task(t: PassTask) {
             // stage (the daemon pinned it after the prefetcher's
             // is_pinned check).  Release the redundant duplicate now, or
             // its bytes would stay parked for the session's lifetime.
+            // The duplicate was buffer-owned, not this pass's charge.
             if let Some(dup_bytes) = sh.buffer.as_ref().and_then(|b| b.discard(stage_idx)) {
-                sh.gate.free(dup_bytes);
+                sh.gate.free_store(dup_bytes);
             }
         } else {
             resident = sh.buffer.as_ref().and_then(|b| b.take(stage_idx));
         }
         if let Some((shard, bytes)) = resident {
+            // the take moved store-owned bytes into this pass: the daemon
+            // will free them through the pass ledger when the stage dies
+            sh.gate.adopt(bytes);
             let t_gate0 = sh.tracer.now_ms();
             let waited = match sh.gate.skip_at(t.epoch, stage_idx) {
                 Ok(w) => w,
@@ -431,7 +435,11 @@ fn run_prefetch_task(t: PrefetchTask) {
                     t0,
                     sh.tracer.now_ms(),
                 );
-                if !buffer.put(job.stage, Arc::new(shard), job.bytes) {
+                if buffer.put(job.stage, Arc::new(shard), job.bytes) {
+                    // parked in the buffer: now store-owned, not a charge
+                    // failed-pass recovery may drain
+                    sh.gate.transfer_to_store(job.bytes);
+                } else {
                     sh.gate.free(job.bytes); // raced: someone parked it first
                 }
             }
@@ -462,9 +470,13 @@ fn run_daemon_task(t: DaemonTask) {
                 let (pinned, displaced) =
                     cache.pin_scored(msg.stage, msg.shard.clone(), msg.bytes, score);
                 if displaced > 0 {
-                    sh.gate.free(displaced);
+                    // displaced pins were cache-owned, not this pass's
+                    sh.gate.free_store(displaced);
                 }
                 if pinned {
+                    // the pin keeps the stage's bytes across passes: they
+                    // leave the pass ledger and become cache-owned
+                    sh.gate.transfer_to_store(msg.bytes);
                     sh.tracer.record(
                         Lane::Daemon,
                         Kind::Pin,

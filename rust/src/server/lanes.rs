@@ -1,0 +1,1119 @@
+//! Concurrent multi-lane serving: per-lane executor threads over ONE
+//! shared memory budget.
+//!
+//! The serialized [`Router`](super::Router) runs every lane's passes on a
+//! single thread — under multi-tenant traffic, each model's latency is
+//! every other model's queue.  [`ConcurrentRouter`] splits that dispatch
+//! thread into **one executor per model lane**: the PJRT runtime is not
+//! `Send`, so each lane builds its own [`Engine`] and opens its session
+//! against the one shared [`MemoryAccountant`] on its own thread, and
+//! passes from different lanes overlap.
+//!
+//! What keeps the overlap sound (the PR 6 refactor spine):
+//!
+//! * every in-flight pass charges a per-pass [`PassLedger`] on its lane's
+//!   [`OrderedGate`], so a failed pass drains exactly its own bytes while
+//!   peers keep flying (`crate::memory`);
+//! * cross-lane eviction chains (pins / KV blocks / device copies)
+//!   serialize on one fleet-wide [`ReclaimToken`], and every gate is
+//!   peered with every other so a free on lane A wakes an admission
+//!   parked on lane B (`crate::pipeload::gate`);
+//! * a [`LaneGovernor`] applies weighted fair admission across backlogged
+//!   lanes (start-time virtual clocks) and records
+//!   `concurrent_passes_peak`;
+//! * elastic budget steps are fleet-wide: whichever lane's pass crosses
+//!   the trace boundary resizes the shared accountant once and
+//!   broadcasts per-lane KV caps + worker-pool slices, which each lane
+//!   applies at its own next pass boundary — no lane ever stops.
+//!
+//! Tokens stay bit-identical per lane versus the serialized router: the
+//! batch-folding rules, seeds (`cfg.seed + lane_batches`), and the argmax
+//! funnel are unchanged — concurrency only moves *when* a lane's batch
+//! runs, never what it computes.
+//!
+//! [`PassLedger`]: crate::memory::PassLedger
+
+use std::collections::VecDeque;
+use std::sync::atomic::AtomicU64;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::router::{
+    kv_shares, pick_batch, scaled_share, Envelope, InferResponse, ModelStats, PendingReq,
+    RouterConfig, RouterHandle, RouterSummary,
+};
+use crate::config::{Mode, Paths, RunConfig};
+use crate::elastic::BudgetController;
+use crate::engine::{Engine, Session};
+use crate::kvcache::KvPool;
+use crate::memory::MemoryAccountant;
+use crate::metrics::LatencyRecorder;
+use crate::pipeload::cache::LayerCache;
+use crate::pipeload::device::DeviceLedger;
+use crate::pipeload::gate::{OrderedGate, ReclaimToken};
+
+/// Virtual-time slack for the weighted admission check: a lane may start
+/// while it is at most this many weighted batches ahead of the most
+/// behind *backlogged* peer.  1.0 keeps equal-weight lanes fully
+/// concurrent (neither ever waits a whole batch on the other) while still
+/// throttling a lane that races ahead of a backlogged peer.
+const FAIR_SLACK: f64 = 1.0;
+
+/// Weighted fair admission across concurrently serving lanes.
+///
+/// Each lane keeps a start-time virtual clock advanced by `1/weight` per
+/// batch it starts.  [`LaneGovernor::admit`] blocks while this lane's
+/// clock is more than [`FAIR_SLACK`] ahead of the slowest *waiting* peer
+/// — the peer with the smallest clock among waiters is always admissible,
+/// so the scheme cannot deadlock (a timeout backstops stale flags
+/// anyway).  Idle lanes never throttle busy ones: only lanes currently
+/// blocked in `admit` count as backlogged.
+pub(crate) struct LaneGovernor {
+    weights: Vec<f64>,
+    state: Mutex<GovState>,
+    cv: Condvar,
+}
+
+struct GovState {
+    /// weighted batches started per lane (the virtual clock)
+    vtime: Vec<f64>,
+    /// lane is currently blocked in `admit` (backlogged)
+    waiting: Vec<bool>,
+    in_flight: usize,
+    peak: usize,
+    total_batches: u64,
+}
+
+/// May a lane with clock `me` start ahead of the most behind waiting
+/// peer at clock `min_waiting_other` (infinity when no peer waits)?
+fn may_start(me: f64, min_waiting_other: f64) -> bool {
+    me <= min_waiting_other + FAIR_SLACK
+}
+
+impl LaneGovernor {
+    fn new(weights: Vec<f64>) -> LaneGovernor {
+        let n = weights.len();
+        LaneGovernor {
+            weights,
+            state: Mutex::new(GovState {
+                vtime: vec![0.0; n],
+                waiting: vec![false; n],
+                in_flight: 0,
+                peak: 0,
+                total_batches: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until this lane may start a batch, then charge its clock.
+    fn admit(&self, lane: usize) {
+        let mut s = self.state.lock().unwrap();
+        s.waiting[lane] = true;
+        loop {
+            let mut min_other = f64::INFINITY;
+            for j in 0..s.vtime.len() {
+                if j != lane && s.waiting[j] {
+                    min_other = min_other.min(s.vtime[j]);
+                }
+            }
+            if may_start(s.vtime[lane], min_other) {
+                break;
+            }
+            // timeout backstop: a peer that left `admit` without a
+            // wakeup (shutdown) must not park this lane forever
+            let (guard, _) = self.cv.wait_timeout(s, Duration::from_millis(2)).unwrap();
+            s = guard;
+        }
+        s.waiting[lane] = false;
+        s.vtime[lane] += 1.0 / self.weights[lane];
+        s.in_flight += 1;
+        if s.in_flight > s.peak {
+            s.peak = s.in_flight;
+        }
+        s.total_batches += 1;
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// The lane's batch finished (success or failure).
+    fn done(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.in_flight -= 1;
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Most batches in flight at once over the run.
+    fn peak(&self) -> usize {
+        self.state.lock().unwrap().peak
+    }
+
+    #[cfg(test)]
+    fn snapshot(&self) -> (usize, usize, u64) {
+        let s = self.state.lock().unwrap();
+        (s.in_flight, s.peak, s.total_batches)
+    }
+}
+
+/// Split a worker-pool allotment across lanes proportionally to their
+/// weights, at least 1 each; any floor-division remainder goes to the
+/// heaviest lanes first so granted threads sum to (at least) the target.
+fn split_allotment(total: usize, weights: &[f64]) -> Vec<usize> {
+    let n = weights.len();
+    let sum: f64 = weights.iter().sum();
+    let mut slices: Vec<usize> = weights
+        .iter()
+        .map(|w| ((total as f64 * w / sum.max(f64::MIN_POSITIVE)).floor() as usize).max(1))
+        .collect();
+    let used: usize = slices.iter().sum();
+    if used < total {
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| {
+            weights[b].partial_cmp(&weights[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut left = total - used;
+        let mut k = 0usize;
+        while left > 0 {
+            slices[order[k % n]] += 1;
+            left -= 1;
+            k += 1;
+        }
+    }
+    slices
+}
+
+/// Control/request messages feeding one lane's executor.  Requests and
+/// the final `Quit` come from the dispatcher; `Budget` broadcasts come
+/// from whichever lane detected a due elastic step.
+enum LaneMsg {
+    Req(PendingReq),
+    /// fleet budget step: the shared accountant is already resized; this
+    /// lane re-derives its caps (and agent slice) at its pass boundary
+    Budget { budget: u64, kv_cap: Option<u64>, agents: Option<usize> },
+    Quit,
+}
+
+/// The `Send` handles one lane publishes so every other lane can wire it
+/// as an eviction victim and a gate peer.
+#[derive(Clone)]
+struct LaneWiring {
+    gate: OrderedGate,
+    cache: Option<LayerCache>,
+    kv: Option<KvPool>,
+    device: Option<DeviceLedger>,
+    floor: u64,
+}
+
+/// Peer handles delivered to a lane once every session has opened.
+struct WirePack {
+    peers: Vec<LaneWiring>,
+}
+
+/// Everything one lane's executor thread needs at spawn.
+struct LaneSeed {
+    idx: usize,
+    run: RunConfig,
+    rx: mpsc::Receiver<LaneMsg>,
+    up_tx: mpsc::Sender<Result<LaneWiring>>,
+    down_rx: mpsc::Receiver<WirePack>,
+    ready_tx: mpsc::Sender<()>,
+}
+
+/// Fleet-wide elastic control shared by every lane executor.  The lane
+/// whose pass crosses a trace boundary applies the step: one accountant
+/// resize (clamped to the fleet feasibility floor), then a per-lane
+/// broadcast of rebalanced KV caps and worker slices.
+struct FleetElastic {
+    accountant: MemoryAccountant,
+    orig_budget: Option<u64>,
+    kv_shares: Vec<Option<u64>>,
+    weights: Vec<f64>,
+    worker_allotment: Option<usize>,
+    txs: Vec<mpsc::Sender<LaneMsg>>,
+    state: Mutex<FleetState>,
+}
+
+struct FleetState {
+    ctrl: Option<BudgetController>,
+    /// engine passes summed across all lanes (the trace's `at_pass` unit,
+    /// same meaning as the serialized router's)
+    passes: usize,
+    steps: u64,
+    /// max per-lane budget floor — set once every session has opened
+    floor: u64,
+}
+
+impl FleetElastic {
+    fn set_floor(&self, floor: u64) {
+        self.state.lock().unwrap().floor = floor;
+    }
+
+    fn steps(&self) -> u64 {
+        self.state.lock().unwrap().steps
+    }
+
+    /// Count a lane's finished batch (`pass_delta` engine passes) and
+    /// apply any due trace step fleet-wide.
+    fn after_batch(&self, pass_delta: usize) {
+        let mut s = self.state.lock().unwrap();
+        if s.ctrl.is_none() {
+            return;
+        }
+        s.passes += pass_delta;
+        let passes = s.passes;
+        let Some(step) = s.ctrl.as_mut().unwrap().poll(passes) else { return };
+        let new_budget = step.budget_bytes.max(s.floor);
+        // one resize for the whole fleet; every lane's next admission
+        // sees the new headroom immediately, caps re-derive per lane at
+        // its own pass boundary (the Budget broadcast below)
+        self.accountant.resize(Some(new_budget));
+        s.steps += 1;
+        for (i, tx) in self.txs.iter().enumerate() {
+            let kv_cap = match (self.kv_shares[i], self.orig_budget) {
+                // proportional on shrink; a grow past the original budget
+                // never raises a lane above its configured share (same
+                // rule as the serialized router)
+                (Some(share), Some(orig)) => {
+                    Some(scaled_share(share, orig, new_budget).min(share))
+                }
+                (Some(share), None) => Some(share),
+                (None, _) => None,
+            };
+            let agents = self.agent_slices(new_budget).map(|sl| sl[i]);
+            // a lane that already exited just drops the message
+            let _ = tx.send(LaneMsg::Budget { budget: new_budget, kv_cap, agents });
+        }
+    }
+
+    /// Worker-pool slices under the new budget: the allotment scales with
+    /// the budget move (never below one thread per lane), split by weight.
+    fn agent_slices(&self, new_budget: u64) -> Option<Vec<usize>> {
+        let total = self.worker_allotment?;
+        let scaled = match self.orig_budget {
+            Some(orig) if orig > 0 => {
+                (((total as u128 * new_budget as u128) / orig as u128) as usize)
+                    .max(self.weights.len())
+            }
+            _ => total,
+        };
+        Some(split_allotment(scaled, &self.weights))
+    }
+}
+
+/// What one lane's executor hands back when it exits.
+struct LaneOutcome {
+    profile: String,
+    /// construction aborted before serving (session open failed here or
+    /// in a peer lane)
+    aborted: bool,
+    served: usize,
+    rejected: usize,
+    batches: usize,
+    batch_sizes: usize,
+    peak: u64,
+    latency: LatencyRecorder,
+    queue_wait: LatencyRecorder,
+    first_error: Option<String>,
+    stats: Option<ModelStats>,
+}
+
+impl LaneOutcome {
+    fn new(profile: String) -> LaneOutcome {
+        LaneOutcome {
+            profile,
+            aborted: false,
+            served: 0,
+            rejected: 0,
+            batches: 0,
+            batch_sizes: 0,
+            peak: 0,
+            latency: LatencyRecorder::new(),
+            queue_wait: LatencyRecorder::new(),
+            first_error: None,
+            stats: None,
+        }
+    }
+
+    fn aborted(mut self) -> LaneOutcome {
+        self.aborted = true;
+        self
+    }
+}
+
+/// The concurrent multi-model router: one executor thread + [`Engine`]
+/// per lane, one shared budget, overlapping passes.  Submission-side API
+/// matches the serialized [`Router`](super::Router): build, take
+/// [`ConcurrentRouter::handle`]s, then [`ConcurrentRouter::run`].
+///
+/// Unlike the serialized router, sessions open inside [`ConcurrentRouter::run`]
+/// (on their executor threads — the PJRT runtime cannot migrate), so
+/// per-model config errors surface from `run()`, not `new()`.
+pub struct ConcurrentRouter {
+    cfg: RouterConfig,
+    paths: Paths,
+    runs: Vec<RunConfig>,
+    kv_lane_shares: Vec<Option<u64>>,
+    weights: Vec<f64>,
+    accountant: MemoryAccountant,
+    tx: Option<mpsc::Sender<Envelope>>,
+    rx: mpsc::Receiver<Envelope>,
+    ids: Arc<AtomicU64>,
+}
+
+impl ConcurrentRouter {
+    /// Validate the fleet config and resolve per-lane run configs (shared
+    /// budget override, KV shares, initial worker-pool slices).  `paths`
+    /// locates the artifacts each lane's own engine loads.
+    pub fn new(paths: Paths, cfg: RouterConfig) -> Result<ConcurrentRouter> {
+        if cfg.models.is_empty() {
+            bail!("router needs at least one model entry");
+        }
+        if cfg.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        let n = cfg.models.len();
+        for (i, m) in cfg.models.iter().enumerate() {
+            if cfg.models[..i].iter().any(|o| o.profile == m.profile) {
+                bail!("duplicate model entry '{}'", m.profile);
+            }
+        }
+        let weights = match &cfg.lane_weights {
+            Some(w) => {
+                if w.len() != n {
+                    bail!("lane_weights has {} entries for {} models", w.len(), n);
+                }
+                if w.iter().any(|x| !x.is_finite() || *x <= 0.0) {
+                    bail!("lane weights must be positive and finite");
+                }
+                w.clone()
+            }
+            None => vec![1.0; n],
+        };
+        if cfg.worker_allotment == Some(0) {
+            bail!("worker_allotment must be >= 1");
+        }
+        let accountant = MemoryAccountant::new(cfg.budget);
+        // per-lane KV grants: identical split rule to the serialized router
+        let share_takers =
+            cfg.models.iter().filter(|m| m.kv_cache && m.kv_budget.is_none()).count();
+        let mut shares = kv_shares(cfg.kv_budget, share_takers).into_iter();
+        let slices = cfg.worker_allotment.map(|w| split_allotment(w, &weights));
+        let mut kv_lane_shares: Vec<Option<u64>> = Vec::with_capacity(n);
+        let mut runs: Vec<RunConfig> = Vec::with_capacity(n);
+        for (i, model) in cfg.models.iter().enumerate() {
+            let mut run = model.clone();
+            run.budget = cfg.budget;
+            if run.kv_cache && run.kv_budget.is_none() {
+                let share = shares.next().flatten();
+                run.kv_budget = share;
+                kv_lane_shares.push(share);
+            } else {
+                kv_lane_shares.push(None);
+            }
+            if let Some(s) = &slices {
+                if run.mode == Mode::PipeLoad {
+                    run.agents = s[i];
+                }
+            }
+            runs.push(run);
+        }
+        let (tx, rx) = mpsc::channel();
+        Ok(ConcurrentRouter {
+            cfg,
+            paths,
+            runs,
+            kv_lane_shares,
+            weights,
+            accountant,
+            tx: Some(tx),
+            rx,
+            ids: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    /// A cloneable submission handle (same type the serialized router
+    /// hands out).  Call before [`ConcurrentRouter::run`].
+    pub fn handle(&self) -> RouterHandle {
+        let tx = self.tx.as_ref().expect("handle() after run()").clone();
+        RouterHandle { tx, ids: self.ids.clone() }
+    }
+
+    /// The shared accountant every lane admits memory through.
+    pub fn accountant(&self) -> &MemoryAccountant {
+        &self.accountant
+    }
+
+    /// Spawn the lane executors, wire the fleet (victim chains, gate
+    /// peers, the shared reclaim token), route requests until every
+    /// handle is dropped or a shutdown arrives, then summarize.
+    pub fn run(mut self) -> Result<RouterSummary> {
+        self.tx.take(); // only external handles keep the queue open now
+        let t_start = Instant::now();
+        let n = self.runs.len();
+        let token = ReclaimToken::new();
+        let governor = Arc::new(LaneGovernor::new(self.weights.clone()));
+
+        let mut lane_txs: Vec<mpsc::Sender<LaneMsg>> = Vec::with_capacity(n);
+        let mut seeds: Vec<LaneSeed> = Vec::with_capacity(n);
+        let mut up_rxs = Vec::with_capacity(n);
+        let mut down_txs = Vec::with_capacity(n);
+        let (ready_tx, ready_rx) = mpsc::channel::<()>();
+        for (idx, run) in self.runs.iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<LaneMsg>();
+            let (up_tx, up_rx) = mpsc::channel::<Result<LaneWiring>>();
+            let (down_tx, down_rx) = mpsc::channel::<WirePack>();
+            lane_txs.push(tx);
+            up_rxs.push(up_rx);
+            down_txs.push(down_tx);
+            seeds.push(LaneSeed {
+                idx,
+                run: run.clone(),
+                rx,
+                up_tx,
+                down_rx,
+                ready_tx: ready_tx.clone(),
+            });
+        }
+        drop(ready_tx);
+        let fleet = Arc::new(FleetElastic {
+            accountant: self.accountant.clone(),
+            orig_budget: self.cfg.budget,
+            kv_shares: self.kv_lane_shares.clone(),
+            weights: self.weights.clone(),
+            worker_allotment: self.cfg.worker_allotment,
+            txs: lane_txs.clone(),
+            state: Mutex::new(FleetState {
+                ctrl: self.cfg.memory_trace.clone().map(BudgetController::new),
+                passes: 0,
+                steps: 0,
+                floor: 0,
+            }),
+        });
+
+        let max_batch = self.cfg.max_batch;
+        let batch_window = self.cfg.batch_window;
+        let rx = &self.rx;
+        let profiles: Vec<String> = self.runs.iter().map(|r| r.profile.clone()).collect();
+        let paths = self.paths.clone();
+        let accountant = self.accountant.clone();
+
+        let (outcomes, unroutable) = std::thread::scope(
+            |scope| -> Result<(Vec<LaneOutcome>, usize)> {
+                let mut joins = Vec::with_capacity(n);
+                for seed in seeds {
+                    let paths = paths.clone();
+                    let accountant = accountant.clone();
+                    let token = token.clone();
+                    let governor = governor.clone();
+                    let fleet = fleet.clone();
+                    joins.push(scope.spawn(move || {
+                        lane_main(
+                            seed, paths, accountant, token, governor, fleet, max_batch,
+                            batch_window,
+                        )
+                    }));
+                }
+
+                // phase 1: every lane opens its session and publishes its
+                // Send handles; one failure aborts the whole fleet
+                let mut wirings: Vec<LaneWiring> = Vec::with_capacity(n);
+                let mut failure: Option<anyhow::Error> = None;
+                for up_rx in &up_rxs {
+                    match up_rx.recv() {
+                        Ok(Ok(w)) => wirings.push(w),
+                        Ok(Err(e)) => {
+                            failure = Some(e);
+                            break;
+                        }
+                        Err(_) => {
+                            failure =
+                                Some(anyhow!("lane exited before publishing its session"));
+                            break;
+                        }
+                    }
+                }
+                if let Some(e) = failure {
+                    drop(down_txs); // unblocks lanes parked on their wire pack
+                    for j in joins {
+                        let _ = j.join();
+                    }
+                    return Err(e);
+                }
+
+                // the fleet feasibility floor for elastic clamps
+                fleet.set_floor(wirings.iter().map(|w| w.floor).max().unwrap_or(0));
+
+                // phase 2: hand every lane its peers' handles
+                for (i, down_tx) in down_txs.iter().enumerate() {
+                    let peers: Vec<LaneWiring> = wirings
+                        .iter()
+                        .enumerate()
+                        .filter(|(j, _)| *j != i)
+                        .map(|(_, w)| w.clone())
+                        .collect();
+                    let _ = down_tx.send(WirePack { peers });
+                }
+                drop(down_txs);
+
+                // phase 3: no request may race its lane's victim/peer
+                // wiring — wait until every lane reports ready
+                for _ in 0..n {
+                    if ready_rx.recv().is_err() {
+                        break; // a lane died; its join below reports it
+                    }
+                }
+
+                // phase 4: route envelopes to lane executors
+                let mut unroutable = 0usize;
+                loop {
+                    match rx.recv() {
+                        Ok(Envelope::Shutdown) => break,
+                        Ok(Envelope::Infer(p)) => {
+                            match profiles.iter().position(|m| *m == p.req.profile) {
+                                Some(i) => {
+                                    if let Err(mpsc::SendError(LaneMsg::Req(p))) =
+                                        lane_txs[i].send(LaneMsg::Req(p))
+                                    {
+                                        unroutable += 1;
+                                        let _ = p.reply.send(InferResponse::rejected(
+                                            p.id,
+                                            &p.req.profile,
+                                            p.enqueued,
+                                            "lane exited before serving this request",
+                                        ));
+                                    }
+                                }
+                                None => {
+                                    unroutable += 1;
+                                    let _ = p.reply.send(InferResponse::rejected(
+                                        p.id,
+                                        &p.req.profile,
+                                        p.enqueued,
+                                        format!("unknown profile '{}'", p.req.profile),
+                                    ));
+                                }
+                            }
+                        }
+                        Err(_) => break, // every handle dropped
+                    }
+                }
+                // lanes finish their queues, then exit (channel order
+                // guarantees Quit lands after every routed request)
+                for tx in &lane_txs {
+                    let _ = tx.send(LaneMsg::Quit);
+                }
+                drop(lane_txs);
+                // reject anything still sitting in the inbox
+                while let Ok(env) = rx.try_recv() {
+                    if let Envelope::Infer(p) = env {
+                        unroutable += 1;
+                        let _ = p.reply.send(InferResponse::rejected(
+                            p.id,
+                            &p.req.profile,
+                            p.enqueued,
+                            "router shut down",
+                        ));
+                    }
+                }
+
+                let mut outcomes = Vec::with_capacity(n);
+                for j in joins {
+                    outcomes.push(j.join().map_err(|_| anyhow!("lane thread panicked"))?);
+                }
+                Ok((outcomes, unroutable))
+            },
+        )?;
+
+        if let Some(o) = outcomes.iter().find(|o| o.aborted) {
+            bail!("lane '{}' aborted before serving", o.profile);
+        }
+
+        // aggregate — field-for-field the serialized router's summary
+        let wall = t_start.elapsed().as_secs_f64();
+        let mut latency = LatencyRecorder::new();
+        let mut queue_wait = LatencyRecorder::new();
+        let (mut served, mut rejected) = (0usize, unroutable);
+        let (mut total_batches, mut batch_sizes) = (0usize, 0usize);
+        let mut peak = 0u64;
+        let (mut hits, mut misses) = (0u64, 0u64);
+        let (mut kv_inc, mut kv_rec, mut kv_evicted) = (0u64, 0u64, 0u64);
+        let (mut elastic_ev, mut replans) = (0u64, 0u64);
+        let (mut prefetched, mut pf_wasted) = (0u64, 0u64);
+        let (mut dev_hits, mut spawns_avoided) = (0u64, 0u64);
+        let mut first_error: Option<String> = None;
+        let mut per_model: Vec<ModelStats> = Vec::with_capacity(n);
+        for o in outcomes {
+            served += o.served;
+            rejected += o.rejected;
+            total_batches += o.batches;
+            batch_sizes += o.batch_sizes;
+            peak = peak.max(o.peak);
+            for &ms in o.latency.samples_ms() {
+                latency.record_ms(ms);
+            }
+            for &ms in o.queue_wait.samples_ms() {
+                queue_wait.record_ms(ms);
+            }
+            if first_error.is_none() {
+                first_error = o.first_error.clone();
+            }
+            if let Some(m) = o.stats {
+                hits += m.cache_hits;
+                misses += m.cache_misses;
+                kv_inc += m.kv_inc_passes;
+                kv_rec += m.kv_recomputes;
+                kv_evicted += m.kv_evicted_blocks;
+                elastic_ev += m.elastic_evictions;
+                replans += m.replans;
+                prefetched += m.prefetched_stages;
+                pf_wasted += m.prefetch_wasted;
+                dev_hits += m.device_cache_hits;
+                spawns_avoided += m.spawns_avoided;
+                per_model.push(m);
+            }
+        }
+        Ok(RouterSummary {
+            served,
+            rejected,
+            batches: total_batches,
+            latency,
+            throughput_rps: served as f64 / wall.max(1e-9),
+            peak_bytes: peak,
+            budget_bytes: self.cfg.budget,
+            mean_batch_size: batch_sizes as f64 / total_batches.max(1) as f64,
+            cache_hits: hits,
+            cache_misses: misses,
+            kv_inc_passes: kv_inc,
+            kv_recomputes: kv_rec,
+            kv_evicted_blocks: kv_evicted,
+            budget_steps: fleet.steps(),
+            elastic_evictions: elastic_ev,
+            replans,
+            prefetched_stages: prefetched,
+            prefetch_wasted: pf_wasted,
+            device_cache_hits: dev_hits,
+            spawns_avoided,
+            queue_wait_p50_ms: queue_wait.p50(),
+            queue_wait_p95_ms: queue_wait.p95(),
+            concurrent_passes_peak: governor.peak() as u64,
+            per_model,
+            first_error,
+        })
+    }
+}
+
+/// One lane's executor: build an engine, open the session against the
+/// shared accountant, exchange wiring with the fleet, then serve.
+#[allow(clippy::too_many_arguments)]
+fn lane_main(
+    seed: LaneSeed,
+    paths: Paths,
+    accountant: MemoryAccountant,
+    token: ReclaimToken,
+    governor: Arc<LaneGovernor>,
+    fleet: Arc<FleetElastic>,
+    max_batch: usize,
+    batch_window: Duration,
+) -> LaneOutcome {
+    let LaneSeed { idx, run, rx, up_tx, down_rx, ready_tx } = seed;
+    let profile = run.profile.clone();
+    let out = LaneOutcome::new(profile.clone());
+    let engine = match Engine::new(paths) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = up_tx.send(Err(e));
+            return out.aborted();
+        }
+    };
+    let mut session = match engine.open_session_shared(&run, &accountant) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = up_tx.send(Err(e));
+            return out.aborted();
+        }
+    };
+    let wiring = LaneWiring {
+        gate: session.pipeline_gate(),
+        cache: session.layer_cache().cloned(),
+        kv: session.kv_pool().cloned(),
+        device: session.device_ledger(),
+        floor: session.budget_floor(),
+    };
+    if up_tx.send(Ok(wiring)).is_err() {
+        return out.aborted();
+    }
+    let pack = match down_rx.recv() {
+        Ok(p) => p,
+        Err(_) => return out.aborted(), // a peer lane failed to open
+    };
+    // cross-lane wiring: every peer's pins/KV/device copies are reclaim
+    // victims of this lane's pressure, and this lane's frees wake
+    // admissions parked on any peer (peer condvars)
+    for peer in pack.peers {
+        if let Some(c) = peer.cache {
+            session.add_eviction_victim(c);
+        }
+        if let Some(p) = peer.kv {
+            session.add_kv_eviction_victim(p);
+        }
+        if let Some(d) = peer.device {
+            session.add_device_eviction_victim(d);
+        }
+        session.add_gate_peer(&peer.gate);
+    }
+    session.set_reclaim_token(token);
+    // signal ready, then drop the sender: the coordinator's ready-barrier
+    // recv() must be able to error out (not hang) if any lane dies
+    let _ = ready_tx.send(());
+    drop(ready_tx);
+
+    let mut out = out;
+    lane_serve(
+        &mut session,
+        idx,
+        &profile,
+        &rx,
+        &governor,
+        &fleet,
+        max_batch,
+        batch_window,
+        &mut out,
+    );
+
+    // per-lane counters, harvested on the thread that owns the session
+    let cs = session.cache_stats();
+    let (inc, rec) = session.kv_counters();
+    let kvp = session.kv_pool_stats();
+    let es = session.elastic_stats();
+    let pf = session.prefetch_stats();
+    let dev = session.device_stats();
+    let pool_stats = session.pool_stats();
+    out.stats = Some(ModelStats {
+        profile,
+        served: out.served,
+        rejected: out.rejected,
+        batches: out.batches,
+        latency: out.latency.clone(),
+        queue_wait: out.queue_wait.clone(),
+        cache_hits: cs.hits,
+        cache_misses: cs.misses,
+        kv_inc_passes: inc,
+        kv_recomputes: rec,
+        kv_evicted_blocks: kvp.evicted_blocks,
+        elastic_evictions: es.elastic_evictions,
+        replans: es.replans,
+        prefetched_stages: pf.prefetched,
+        prefetch_wasted: pf.wasted,
+        device_cache_hits: dev.hits,
+        spawns_avoided: pool_stats.spawns_avoided(),
+    });
+    out
+}
+
+/// Handle a control message between passes; false = Quit (drain and exit).
+fn handle_ctl(
+    session: &mut Session<'_>,
+    msg: LaneMsg,
+    queue: &mut VecDeque<PendingReq>,
+) -> bool {
+    match msg {
+        LaneMsg::Req(p) => {
+            queue.push_back(p);
+            true
+        }
+        LaneMsg::Budget { budget, kv_cap, agents } => {
+            // the shared accountant was already resized by the detecting
+            // lane; this lane re-derives pin/KV/device caps, settles its
+            // reclaim chain, and resizes its worker slice — mid-traffic,
+            // at its own pass boundary
+            match kv_cap {
+                Some(_) => {
+                    session.apply_budget_with_kv(budget, kv_cap);
+                }
+                None => {
+                    session.apply_budget(budget);
+                }
+            }
+            if let Some(a) = agents {
+                session.set_agents(a);
+            }
+            true
+        }
+        LaneMsg::Quit => false,
+    }
+}
+
+/// The per-lane serving loop: batch folding, deadline admission, and
+/// response fan-out are rule-for-rule the serialized router's — only the
+/// governor admission (and the fleet elastic hook) are new, so per-lane
+/// tokens stay bit-identical to a serialized run of the same traffic.
+#[allow(clippy::too_many_arguments)]
+fn lane_serve(
+    session: &mut Session<'_>,
+    lane_idx: usize,
+    profile: &str,
+    rx: &mpsc::Receiver<LaneMsg>,
+    governor: &LaneGovernor,
+    fleet: &FleetElastic,
+    max_batch: usize,
+    batch_window: Duration,
+    out: &mut LaneOutcome,
+) {
+    let avail = session.profile().batches.clone();
+    let largest_avail = avail.iter().copied().max().unwrap_or(1);
+    let cap = max_batch.min(largest_avail).max(1);
+    let mut queue: VecDeque<PendingReq> = VecDeque::new();
+    let mut open = true;
+
+    loop {
+        if queue.is_empty() {
+            if !open {
+                break;
+            }
+            match rx.recv() {
+                Ok(msg) => {
+                    if !handle_ctl(session, msg, &mut queue) {
+                        open = false;
+                    }
+                    continue;
+                }
+                Err(_) => break,
+            }
+        }
+
+        // admit everything already queued (free), then wait out the batch
+        // window only while the batch is unfilled
+        if open {
+            loop {
+                match rx.try_recv() {
+                    Ok(msg) => {
+                        if !handle_ctl(session, msg, &mut queue) {
+                            open = false;
+                            break;
+                        }
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        }
+        if open && queue.len() < cap {
+            // never wait past a queued request's deadline
+            let mut fill_deadline = Instant::now() + batch_window;
+            if let Some(d) = queue.iter().filter_map(|p| p.deadline).min() {
+                fill_deadline = fill_deadline.min(d);
+            }
+            loop {
+                let now = Instant::now();
+                if now >= fill_deadline {
+                    break;
+                }
+                match rx.recv_timeout(fill_deadline - now) {
+                    Ok(msg) => {
+                        if !handle_ctl(session, msg, &mut queue) {
+                            open = false;
+                            break;
+                        }
+                        if queue.len() >= cap {
+                            break;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // EDF within the lane: rotate the earliest-deadline request to
+        // the head (no deadlines -> index 0 -> plain FIFO, preserving the
+        // serialized router's fold order bit for bit)
+        if let Some(best) = queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, p)| (p.deadline.is_none(), p.deadline, p.enqueued))
+            .map(|(i, _)| i)
+        {
+            queue.rotate_left(best);
+        }
+
+        let mut batch: Vec<PendingReq> = Vec::new();
+        let mut hint_rows = 0usize;
+        let now = Instant::now();
+        while batch.len() < cap {
+            let Some(p) = queue.pop_front() else { break };
+            if p.deadline.map(|d| d <= now).unwrap_or(false) {
+                out.rejected += 1;
+                let _ = p.reply.send(InferResponse::rejected(
+                    p.id,
+                    profile,
+                    p.enqueued,
+                    "deadline exceeded before admission",
+                ));
+                continue;
+            }
+            let rows = p.req.batch_hint.max(1);
+            if rows > largest_avail {
+                out.rejected += 1;
+                let _ = p.reply.send(InferResponse::rejected(
+                    p.id,
+                    profile,
+                    p.enqueued,
+                    format!("batch_hint {rows} exceeds largest AOT batch {largest_avail}"),
+                ));
+                continue;
+            }
+            if let Some(first) = batch.first() {
+                if first.req.seed != p.req.seed || hint_rows + rows > largest_avail {
+                    queue.push_front(p);
+                    break;
+                }
+            }
+            hint_rows += rows;
+            batch.push(p);
+        }
+        if batch.is_empty() {
+            continue;
+        }
+        for p in &batch {
+            out.queue_wait.record(now.saturating_duration_since(p.enqueued));
+        }
+
+        let b = pick_batch(&avail, hint_rows);
+        let seed = batch[0]
+            .req
+            .seed
+            .unwrap_or_else(|| session.run_config().seed.wrapping_add(out.batches as u64));
+        // cross-batch prefetch across the request boundary
+        session.set_expect_more(!queue.is_empty());
+
+        let passes_before = session.passes_run();
+        governor.admit(lane_idx);
+        let r = session.run_batch(b, seed);
+        governor.done();
+        match r {
+            Ok((report, outp)) => {
+                out.peak = out.peak.max(report.peak_bytes);
+                out.batches += 1;
+                out.batch_sizes += batch.len();
+                debug_assert_eq!(
+                    session.kv_pool().map(|p| p.used_bytes()).unwrap_or(0),
+                    0,
+                    "KV blocks must be freed when the ticket resolves"
+                );
+                let mut row_off = 0usize;
+                for p in &batch {
+                    let rows = p.req.batch_hint.max(1);
+                    let generated_rows: Vec<Vec<i32>> = outp
+                        .generated_rows
+                        .iter()
+                        .skip(row_off)
+                        .take(rows)
+                        .cloned()
+                        .collect();
+                    row_off += rows;
+                    let latency = p.enqueued.elapsed();
+                    out.latency.record(latency);
+                    out.served += 1;
+                    let _ = p.reply.send(InferResponse {
+                        id: p.id,
+                        profile: profile.to_string(),
+                        ok: true,
+                        error: None,
+                        latency_ms: latency.as_secs_f64() * 1000.0,
+                        batch: b,
+                        tokens: report.tokens,
+                        generated_rows,
+                        peak_bytes: report.peak_bytes,
+                    });
+                }
+            }
+            Err(e) => {
+                // the pass drained its own ledger; peers keep flying
+                if out.first_error.is_none() {
+                    out.first_error = Some(format!("{e:#}"));
+                }
+                for p in &batch {
+                    out.rejected += 1;
+                    let _ = p.reply.send(InferResponse::rejected(
+                        p.id,
+                        profile,
+                        p.enqueued,
+                        format!("pass failed: {e:#}"),
+                    ));
+                }
+            }
+        }
+        fleet.after_batch(session.passes_run().saturating_sub(passes_before));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_allotment_is_weighted_min_one() {
+        assert_eq!(split_allotment(4, &[1.0, 1.0]), vec![2, 2]);
+        assert_eq!(split_allotment(6, &[2.0, 1.0]), vec![4, 2]);
+        // min 1 even when the weight share rounds to zero
+        assert_eq!(split_allotment(2, &[100.0, 1.0]), vec![1, 1]);
+        // remainder lands on the heaviest lane
+        assert_eq!(split_allotment(5, &[1.0, 1.0, 2.0]), vec![1, 1, 3]);
+        // every slice is at least 1 even when total < lanes
+        let s = split_allotment(1, &[1.0, 1.0, 1.0]);
+        assert!(s.iter().all(|&x| x >= 1), "{s:?}");
+    }
+
+    #[test]
+    fn may_start_gate_bounds_the_lead() {
+        assert!(may_start(0.0, f64::INFINITY), "no waiting peer -> always start");
+        assert!(may_start(1.0, 0.5), "within slack");
+        assert!(!may_start(2.5, 1.0), "too far ahead of a backlogged peer");
+        // the most behind waiter is always admissible (deadlock freedom)
+        assert!(may_start(1.0, 1.0));
+    }
+
+    #[test]
+    fn governor_tracks_in_flight_peak_and_batches() {
+        let g = LaneGovernor::new(vec![1.0, 2.0]);
+        g.admit(0);
+        g.admit(1); // lane 0 is not waiting anymore, lane 1 never blocks
+        let (in_flight, peak, total) = g.snapshot();
+        assert_eq!((in_flight, peak, total), (2, 2, 2));
+        g.done();
+        g.done();
+        let (in_flight, peak, total) = g.snapshot();
+        assert_eq!((in_flight, peak, total), (0, 2, 2));
+    }
+
+    #[test]
+    fn governor_two_racing_lanes_never_deadlock() {
+        let g = Arc::new(LaneGovernor::new(vec![1.0, 1.0]));
+        let mut joins = Vec::new();
+        for lane in 0..2usize {
+            let g = g.clone();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    g.admit(lane);
+                    g.done();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let (in_flight, peak, total) = g.snapshot();
+        assert_eq!(in_flight, 0);
+        assert!(peak >= 1);
+        assert_eq!(total, 100);
+    }
+}

@@ -16,6 +16,13 @@
 //!   that rejects expired requests instead of spending passes on them.
 //!   The router loop runs on the caller's thread — the session (and its
 //!   non-Send PJRT runtime) never migrates.
+//! * [`lanes`] — the concurrent router ([`ConcurrentRouter`],
+//!   `RouterConfig { concurrent: true, .. }`): one executor thread +
+//!   engine per model lane, passes overlapping against the same shared
+//!   budget.  Per-pass ledgers keep failure recovery exact, a fleet-wide
+//!   reclaim token keeps cross-lane eviction chains safe, and a weighted
+//!   governor splits admissions (and the Loading-Agent allotment) across
+//!   lanes.  Per-lane tokens stay bit-identical to the serialized router.
 //! * [`tcp`] — a minimal line-delimited-JSON TCP front-end
 //!   (`hermes serve --listen <addr>`): external clients drive the same
 //!   queue through per-connection reader threads.
@@ -27,10 +34,12 @@
 //! [`MemoryAccountant`]: crate::memory::MemoryAccountant
 //! [`Engine::open_session_shared`]: crate::engine::Engine::open_session_shared
 
+pub mod lanes;
 pub mod router;
 pub mod summary;
 pub mod tcp;
 
+pub use lanes::ConcurrentRouter;
 pub use router::{
     kv_shares, pick_batch, InferRequest, InferResponse, ModelStats, Router, RouterConfig,
     RouterHandle, RouterSummary, Ticket,

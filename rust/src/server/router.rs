@@ -62,6 +62,21 @@ pub struct RouterConfig {
     /// [`Router::set_lane_schedule`] — so the EDF scheduler's next
     /// admission sees the new headroom.
     pub memory_trace: Option<PressureTrace>,
+    /// Run lanes concurrently: one executor thread + engine per model,
+    /// passes overlapping against the one shared budget (see
+    /// [`super::lanes::ConcurrentRouter`]).  The serialized [`Router`]
+    /// ignores this flag — front-ends branch on it when choosing which
+    /// router to build.
+    pub concurrent: bool,
+    /// Per-lane admission weights for the concurrent governor (one entry
+    /// per model; default all-equal).  A lane twice another's weight may
+    /// start twice the batches while both are backlogged.
+    pub lane_weights: Option<Vec<f64>>,
+    /// Total Loading-Agent threads split across PIPELOAD lanes
+    /// (weight-proportional, min 1 each) by the concurrent router; elastic
+    /// budget steps rebalance the split in proportion to the budget move.
+    /// None = every lane keeps its own configured `RunConfig::agents`.
+    pub worker_allotment: Option<usize>,
 }
 
 impl Default for RouterConfig {
@@ -73,6 +88,9 @@ impl Default for RouterConfig {
             max_batch: 4,
             batch_window: Duration::from_millis(20),
             memory_trace: None,
+            concurrent: false,
+            lane_weights: None,
+            worker_allotment: None,
         }
     }
 }
@@ -154,7 +172,12 @@ pub struct InferResponse {
 }
 
 impl InferResponse {
-    fn rejected(id: u64, profile: &str, enqueued: Instant, err: impl Into<String>) -> Self {
+    pub(crate) fn rejected(
+        id: u64,
+        profile: &str,
+        enqueued: Instant,
+        err: impl Into<String>,
+    ) -> Self {
         InferResponse {
             id,
             profile: profile.to_string(),
@@ -226,25 +249,25 @@ impl InferResponse {
     }
 }
 
-enum Envelope {
+pub(crate) enum Envelope {
     Infer(PendingReq),
     Shutdown,
 }
 
-struct PendingReq {
-    id: u64,
-    req: InferRequest,
-    enqueued: Instant,
-    deadline: Option<Instant>,
-    reply: mpsc::Sender<InferResponse>,
+pub(crate) struct PendingReq {
+    pub(crate) id: u64,
+    pub(crate) req: InferRequest,
+    pub(crate) enqueued: Instant,
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) reply: mpsc::Sender<InferResponse>,
 }
 
 /// Cloneable, `Send` submission handle to a [`Router`]'s queue.  All clones
 /// feed the same router; dropping every handle ends the router loop.
 #[derive(Clone)]
 pub struct RouterHandle {
-    tx: mpsc::Sender<Envelope>,
-    ids: Arc<AtomicU64>,
+    pub(crate) tx: mpsc::Sender<Envelope>,
+    pub(crate) ids: Arc<AtomicU64>,
 }
 
 /// Receiver for one request's [`InferResponse`].
@@ -310,6 +333,10 @@ pub struct ModelStats {
     pub rejected: usize,
     pub batches: usize,
     pub latency: LatencyRecorder,
+    /// submission-to-admission wait per request (the time a request sat in
+    /// this lane's queue before its batch started; rejected requests are
+    /// not recorded)
+    pub queue_wait: LatencyRecorder,
     pub cache_hits: u64,
     pub cache_misses: u64,
     /// decode tokens served by incremental KV passes
@@ -362,6 +389,12 @@ pub struct RouterSummary {
     pub device_cache_hits: u64,
     /// worker-pool spawn/joins avoided across lanes
     pub spawns_avoided: u64,
+    /// queue-wait percentiles across every served request (all lanes)
+    pub queue_wait_p50_ms: f64,
+    pub queue_wait_p95_ms: f64,
+    /// most engine batches in flight at once (1 for the serialized
+    /// [`Router`]; >= 2 proves lanes overlapped under the concurrent one)
+    pub concurrent_passes_peak: u64,
     pub per_model: Vec<ModelStats>,
     /// first engine-pass failure, if any batch failed (full error chain —
     /// individual responses carry their own copies, but callers that drop
@@ -382,6 +415,8 @@ impl RouterSummary {
                     .set("rejected", m.rejected)
                     .set("batches", m.batches)
                     .set("latency", m.latency.to_json())
+                    .set("queue_wait_p50_ms", m.queue_wait.p50())
+                    .set("queue_wait_p95_ms", m.queue_wait.p95())
                     .set("cache_hits", m.cache_hits)
                     .set("cache_misses", m.cache_misses)
                     .set("kv_inc_passes", m.kv_inc_passes)
@@ -415,6 +450,9 @@ impl RouterSummary {
             .set("prefetch_wasted", self.prefetch_wasted)
             .set("device_cache_hits", self.device_cache_hits)
             .set("spawns_avoided", self.spawns_avoided)
+            .set("queue_wait_p50_ms", self.queue_wait_p50_ms)
+            .set("queue_wait_p95_ms", self.queue_wait_p95_ms)
+            .set("concurrent_passes_peak", self.concurrent_passes_peak)
             .set("models", models);
         if let Some(b) = self.budget_bytes {
             v = v.set("budget_bytes", b);
@@ -443,7 +481,7 @@ pub fn kv_shares(total: Option<u64>, lanes: usize) -> Vec<Option<u64>> {
 /// Proportional rebalance of one lane's KV share when the shared budget
 /// moves from `orig_budget` to `new_budget` (u128 intermediate: byte
 /// products overflow u64 for GB-scale budgets).
-fn scaled_share(orig_share: u64, orig_budget: u64, new_budget: u64) -> u64 {
+pub(crate) fn scaled_share(orig_share: u64, orig_budget: u64, new_budget: u64) -> u64 {
     ((orig_share as u128 * new_budget as u128) / (orig_budget.max(1) as u128)) as u64
 }
 
@@ -468,6 +506,7 @@ struct ModelLane<'e> {
     rejected: usize,
     batches: usize,
     latency: LatencyRecorder,
+    queue_wait: LatencyRecorder,
 }
 
 /// The multi-model serving loop.  Owns one session per model; runs on the
@@ -540,6 +579,7 @@ impl<'e> Router<'e> {
                 rejected: 0,
                 batches: 0,
                 latency: LatencyRecorder::new(),
+                queue_wait: LatencyRecorder::new(),
             });
         }
         // cross-model eviction: each session may reclaim the others' pins
@@ -859,6 +899,9 @@ impl<'e> Router<'e> {
             if batch.is_empty() {
                 continue;
             }
+            for p in &batch {
+                lane.queue_wait.record(now.saturating_duration_since(p.enqueued));
+            }
 
             let b = pick_batch(&avail, hint_rows);
             let seed = batch[0]
@@ -866,6 +909,10 @@ impl<'e> Router<'e> {
                 .seed
                 .unwrap_or_else(|| lane.session.run_config().seed.wrapping_add(lane.batches as u64));
 
+            // cross-batch prefetch: with more requests queued behind this
+            // batch, the final decode pass keeps its loaders prefetching
+            // into the NEXT request instead of going idle
+            lane.session.set_expect_more(!lane.queue.is_empty());
             match lane.session.run_batch(b, seed) {
                 Ok((report, out)) => {
                     peak = peak.max(report.peak_bytes);
@@ -941,6 +988,7 @@ impl<'e> Router<'e> {
 
         let wall = t_start.elapsed().as_secs_f64();
         let mut latency = LatencyRecorder::new();
+        let mut queue_wait = LatencyRecorder::new();
         let (mut served, mut rejected) = (0usize, self.unroutable);
         let (mut hits, mut misses) = (0u64, 0u64);
         let (mut kv_inc, mut kv_rec, mut kv_evicted) = (0u64, 0u64, 0u64);
@@ -955,6 +1003,9 @@ impl<'e> Router<'e> {
                 rejected += l.rejected;
                 for &ms in l.latency.samples_ms() {
                     latency.record_ms(ms);
+                }
+                for &ms in l.queue_wait.samples_ms() {
+                    queue_wait.record_ms(ms);
                 }
                 let cs = l.session.cache_stats();
                 hits += cs.hits;
@@ -980,6 +1031,7 @@ impl<'e> Router<'e> {
                     rejected: l.rejected,
                     batches: l.batches,
                     latency: l.latency.clone(),
+                    queue_wait: l.queue_wait.clone(),
                     cache_hits: cs.hits,
                     cache_misses: cs.misses,
                     kv_inc_passes: inc,
@@ -1015,6 +1067,10 @@ impl<'e> Router<'e> {
             prefetch_wasted: pf_wasted,
             device_cache_hits: dev_hits,
             spawns_avoided,
+            queue_wait_p50_ms: queue_wait.p50(),
+            queue_wait_p95_ms: queue_wait.p95(),
+            // one dispatch thread = at most one pass in flight, ever
+            concurrent_passes_peak: if total_batches > 0 { 1 } else { 0 },
             per_model,
             first_error,
         })

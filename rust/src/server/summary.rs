@@ -62,6 +62,7 @@ impl ServeConfig {
             max_batch: self.max_batch,
             batch_window: self.batch_window,
             memory_trace: self.memory_trace.clone(),
+            ..RouterConfig::default()
         }
     }
 }
@@ -97,6 +98,11 @@ pub struct ServeSummary {
     pub device_cache_hits: u64,
     /// worker pool: thread spawn/joins avoided vs the per-pass design
     pub spawns_avoided: u64,
+    /// admission: time requests spent queued before their pass started
+    pub queue_wait_p50_ms: f64,
+    pub queue_wait_p95_ms: f64,
+    /// most engine passes in flight at once (1 = serialized router)
+    pub concurrent_passes_peak: u64,
 }
 
 impl ServeSummary {
@@ -123,6 +129,9 @@ impl ServeSummary {
             prefetch_wasted: s.prefetch_wasted,
             device_cache_hits: s.device_cache_hits,
             spawns_avoided: s.spawns_avoided,
+            queue_wait_p50_ms: s.queue_wait_p50_ms,
+            queue_wait_p95_ms: s.queue_wait_p95_ms,
+            concurrent_passes_peak: s.concurrent_passes_peak,
         }
     }
 
@@ -149,6 +158,9 @@ impl ServeSummary {
             .set("prefetch_wasted", self.prefetch_wasted)
             .set("device_cache_hits", self.device_cache_hits)
             .set("spawns_avoided", self.spawns_avoided)
+            .set("queue_wait_p50_ms", self.queue_wait_p50_ms)
+            .set("queue_wait_p95_ms", self.queue_wait_p95_ms)
+            .set("concurrent_passes_peak", self.concurrent_passes_peak)
     }
 }
 
@@ -257,6 +269,9 @@ mod tests {
             prefetch_wasted: 1,
             device_cache_hits: 8,
             spawns_avoided: 12,
+            queue_wait_p50_ms: 0.5,
+            queue_wait_p95_ms: 1.5,
+            concurrent_passes_peak: 1,
         };
         let v = s.to_json();
         for key in

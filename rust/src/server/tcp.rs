@@ -35,6 +35,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use super::lanes::ConcurrentRouter;
 use super::router::{InferRequest, Router, RouterConfig, RouterHandle, RouterSummary};
 use crate::engine::Engine;
 use crate::util::json::Value;
@@ -62,10 +63,37 @@ impl TcpFrontend {
     /// Serve until a client sends `{"op":"shutdown"}`.  The router loop
     /// (and every engine pass) runs on this thread; the accept loop and
     /// the per-connection readers run on background threads feeding the
-    /// router's queue.
+    /// router's queue.  With `cfg.concurrent` the serialized router is
+    /// swapped for a [`ConcurrentRouter`] (per-lane executor threads, the
+    /// caller's engine unused — each lane builds its own); the wire
+    /// protocol and summary are identical.
     pub fn run(self, engine: &Engine, cfg: RouterConfig) -> Result<RouterSummary> {
+        if cfg.concurrent {
+            let router = ConcurrentRouter::new(engine.paths.clone(), cfg)?;
+            let handle = router.handle();
+            let (stop, accept) = self.spawn_accept_loop(handle)?;
+            let summary = router.run();
+            stop.store(true, Ordering::Relaxed);
+            let _ = accept.join();
+            return summary;
+        }
         let router = Router::new(engine, cfg)?;
         let handle = router.handle();
+        let (stop, accept) = self.spawn_accept_loop(handle)?;
+        let summary = router.run();
+        stop.store(true, Ordering::Relaxed);
+        let _ = accept.join();
+        summary
+    }
+
+    /// Background accept loop feeding `handle`'s queue; returns the stop
+    /// flag and the join handle.  The accept thread owns the listener and
+    /// the last `RouterHandle` clone, so flipping the flag lets the
+    /// router drain and exit.
+    fn spawn_accept_loop(
+        self,
+        handle: RouterHandle,
+    ) -> Result<(Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
         let stop = Arc::new(AtomicBool::new(false));
 
         // Non-blocking accept + stop flag: once the router exits, the
@@ -119,10 +147,7 @@ impl TcpFrontend {
             // dropping `handle`'s last clone here lets the router drain
         });
 
-        let summary = router.run();
-        stop.store(true, Ordering::Relaxed);
-        let _ = accept.join();
-        summary
+        Ok((stop, accept))
     }
 }
 

@@ -137,6 +137,93 @@ fn prop_accountant_never_exceeds_budget_under_try_acquire() {
 }
 
 #[test]
+fn prop_shared_budget_holds_under_concurrent_ledgers_and_resizes() {
+    // PR 6 invariant: with per-pass ledgers, durable-store transfers (pins /
+    // KV / device / prefetch all account this way), and elastic resizes all
+    // interleaving across lanes, admitted usage never exceeds the largest
+    // budget ever granted, and draining every holder returns usage to
+    // exactly zero — no leak, no double-free, under any schedule.
+    check("concurrent ledger budget", cfg(16), |g| {
+        let base = g.u64(200, 2000);
+        let max_budget = 2 * base; // resize never grants more than this
+        let m = MemoryAccountant::new(Some(base));
+        let lanes = g.usize(2, 5);
+        let steps = g.usize(20, 80);
+        let seed0 = g.u64(0, u64::MAX - 1);
+        std::thread::scope(|scope| {
+            // elastic controller: random shrink/grow while lanes charge
+            let ctl = m.clone();
+            scope.spawn(move || {
+                let mut rng = Rng::new(seed0);
+                for _ in 0..steps {
+                    ctl.resize(Some(rng.range(base / 4 + 1, max_budget)));
+                    std::thread::yield_now();
+                }
+                ctl.resize(Some(base));
+            });
+            for lane in 0..lanes {
+                let ledger = m.pass_ledger();
+                let store = m.clone(); // the durable-store side of transfers
+                scope.spawn(move || {
+                    let mut rng = Rng::new(
+                        seed0 ^ (lane as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    let mut stored = 0u64; // bytes parked in the durable store
+                    for _ in 0..steps {
+                        match rng.usize(0, 5) {
+                            0 => {
+                                let _ = ledger.try_acquire(rng.range(1, base / 2));
+                            }
+                            1 => {
+                                let b = ledger.balance();
+                                if b > 0 {
+                                    ledger.free(rng.range(1, b + 1));
+                                }
+                            }
+                            2 => {
+                                // pin/prefetch park: still accounted, no
+                                // longer this pass's bytes to drain
+                                let b = ledger.balance();
+                                if b > 0 {
+                                    let take = rng.range(1, b + 1);
+                                    ledger.release(take);
+                                    stored += take;
+                                }
+                            }
+                            3 => {
+                                // cache-hit adoption: store hands bytes back
+                                if stored > 0 {
+                                    let take = rng.range(1, stored + 1);
+                                    ledger.adopt(take);
+                                    stored -= take;
+                                }
+                            }
+                            _ => {
+                                let _ = ledger.drain(); // failed-pass recovery
+                            }
+                        }
+                        std::thread::yield_now();
+                    }
+                    // teardown: the store evicts, then the pass drains
+                    if stored > 0 {
+                        store.free(stored);
+                    }
+                    ledger.drain();
+                });
+            }
+        });
+        prop_assert!(m.used() == 0, "leak after full drain: {} bytes", m.used());
+        prop_assert!(
+            m.peak() <= max_budget,
+            "peak {} above the largest budget ever granted {max_budget}",
+            m.peak()
+        );
+        prop_assert!(m.over_budget_bytes() == 0, "settled run still over budget");
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_shard_roundtrip_random_tensors() {
     check("shard roundtrip", cfg(64), |g| {
         let mut rng = Rng::new(g.u64(0, u64::MAX - 1));

@@ -7,10 +7,13 @@ use std::net::TcpStream;
 use std::time::Duration;
 
 use hermes::config::{Mode, Paths, RunConfig};
+use hermes::elastic::{PressureStep, PressureTrace};
 use hermes::engine::Engine;
 use hermes::memory::MemoryAccountant;
 use hermes::server::tcp::roundtrip;
-use hermes::server::{InferRequest, Router, RouterConfig, TcpFrontend};
+use hermes::server::{
+    ConcurrentRouter, InferRequest, Router, RouterConfig, RouterHandle, TcpFrontend,
+};
 use hermes::util::json::Value;
 
 fn engine() -> Engine {
@@ -320,6 +323,185 @@ fn config_validation_rejects_bad_entries_at_open() {
     };
     let err = Router::new(&e, cfg).unwrap_err().to_string();
     assert!(err.contains("duplicate"), "{err}");
+}
+
+/// Submit 12 alternating requests from a producer thread; returns the
+/// responses in submission order after asking the router to shut down.
+fn drive_two_lanes(
+    handle: RouterHandle,
+    lane_a: &'static str,
+    lane_b: &'static str,
+) -> std::thread::JoinHandle<Vec<hermes::server::InferResponse>> {
+    std::thread::spawn(move || {
+        let tickets: Vec<_> = (0..12)
+            .map(|i| {
+                let profile = if i % 2 == 0 { lane_a } else { lane_b };
+                handle.submit(InferRequest::new(profile)).unwrap()
+            })
+            .collect();
+        let responses: Vec<_> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+        handle.shutdown();
+        responses
+    })
+}
+
+#[test]
+fn concurrent_router_overlaps_lanes_with_serialized_identical_tokens() {
+    // PR 6 acceptance: two KV-decode lanes served by the concurrent router
+    // must (a) overlap passes (concurrent_passes_peak >= 2), (b) stay under
+    // the ONE shared budget, and (c) emit per-lane token streams
+    // bit-identical to the serialized router's for the same traffic.
+    let e = engine();
+    let total_a = e.runtime.profile("tiny-gpt").unwrap().total_weight_bytes;
+    let total_b = e.runtime.profile("tiny-gptj").unwrap().total_weight_bytes;
+    // headroom for both lanes' weights in flight at once, plus KV
+    let budget = 2 * (total_a + total_b);
+    let mk_cfg = || {
+        let mut ga = run_cfg("tiny-gpt", 2);
+        ga.kv_cache = true;
+        ga.gen_tokens = Some(4);
+        let mut gb = run_cfg("tiny-gptj", 2);
+        gb.kv_cache = true;
+        gb.gen_tokens = Some(4);
+        RouterConfig {
+            models: vec![ga, gb],
+            budget: Some(budget),
+            kv_budget: Some(1 << 20),
+            max_batch: 1,
+            batch_window: Duration::from_millis(1),
+            ..RouterConfig::default()
+        }
+    };
+
+    // serialized reference run
+    let router = Router::new(&e, mk_cfg()).unwrap();
+    let producer = drive_two_lanes(router.handle(), "tiny-gpt", "tiny-gptj");
+    let serial = router.run().unwrap();
+    let serial_rows: Vec<_> = producer
+        .join()
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.profile, r.generated_rows))
+        .collect();
+    assert_eq!(serial.served, 12, "{:?}", serial.first_error);
+    assert_eq!(
+        serial.concurrent_passes_peak, 1,
+        "one dispatch thread can never overlap passes"
+    );
+
+    // concurrent run, same traffic
+    let router = ConcurrentRouter::new(Paths::detect(), mk_cfg()).unwrap();
+    assert_eq!(router.accountant().budget(), Some(budget));
+    let producer = drive_two_lanes(router.handle(), "tiny-gpt", "tiny-gptj");
+    let summary = router.run().unwrap();
+    let conc_rows: Vec<_> = producer
+        .join()
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.profile, r.generated_rows))
+        .collect();
+
+    assert_eq!(summary.served, 12, "{:?}", summary.first_error);
+    assert_eq!(summary.rejected, 0);
+    assert!(
+        summary.concurrent_passes_peak >= 2,
+        "lanes never overlapped a pass: {summary:?}"
+    );
+    assert!(
+        summary.peak_bytes <= budget,
+        "shared peak {} above global budget {}",
+        summary.peak_bytes,
+        budget
+    );
+    assert_eq!(summary.per_model.len(), 2);
+    for m in &summary.per_model {
+        assert_eq!(m.served, 6, "lane {} served {}", m.profile, m.served);
+        assert!(m.kv_inc_passes > 0, "decode must stay incremental: {m:?}");
+    }
+    assert_eq!(
+        conc_rows, serial_rows,
+        "per-lane tokens must be bit-identical to the serialized router"
+    );
+    // per-lane queue-wait percentiles are live on both paths
+    assert!(summary.queue_wait_p95_ms >= summary.queue_wait_p50_ms);
+}
+
+#[test]
+fn concurrent_router_elastic_shrink_rebalances_mid_flight() {
+    // An elastic shrink landing while both lanes are serving must settle
+    // under the new budget without stopping either lane, and rebalance the
+    // worker allotment (replans) across the running lanes.
+    let e = engine();
+    let total_a = e.runtime.profile("tiny-bert").unwrap().total_weight_bytes;
+    let total_b = e.runtime.profile("tiny-gpt").unwrap().total_weight_bytes;
+    let budget = 2 * (total_a + total_b);
+    let trace = PressureTrace::new(vec![PressureStep {
+        at_pass: 4,
+        budget_bytes: budget / 2,
+    }])
+    .unwrap();
+
+    let mut gpt = run_cfg("tiny-gpt", 2);
+    gpt.gen_tokens = Some(2);
+    let cfg = RouterConfig {
+        models: vec![run_cfg("tiny-bert", 2), gpt],
+        budget: Some(budget),
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        memory_trace: Some(trace),
+        concurrent: true,
+        worker_allotment: Some(4),
+        ..RouterConfig::default()
+    };
+    let router = ConcurrentRouter::new(Paths::detect(), cfg).unwrap();
+    let accountant = router.accountant().clone();
+    let producer = drive_two_lanes(router.handle(), "tiny-bert", "tiny-gpt");
+    let summary = router.run().unwrap();
+    let responses = producer.join().unwrap();
+
+    assert_eq!(summary.served, 12, "{:?}", summary.first_error);
+    assert_eq!(summary.rejected, 0);
+    assert!(responses.iter().all(|r| r.ok), "{responses:?}");
+    assert!(summary.budget_steps >= 1, "the trace step must apply: {summary:?}");
+    assert!(
+        summary.replans >= 1,
+        "the shrink must rebalance worker slices across running lanes: {summary:?}"
+    );
+    // the fleet settled under the shrunk budget without deadlocking
+    assert_eq!(accountant.budget(), Some(budget / 2));
+    assert!(
+        accountant.used() <= budget / 2,
+        "steady-state bytes {} above the shrunk budget {}",
+        accountant.used(),
+        budget / 2
+    );
+}
+
+#[test]
+fn tcp_front_end_serves_the_concurrent_router() {
+    // --concurrent swaps the router behind the same wire protocol.
+    let e = engine();
+    let cfg = RouterConfig {
+        models: vec![run_cfg("tiny-bert", 2)],
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        concurrent: true,
+        ..RouterConfig::default()
+    };
+    let frontend = TcpFrontend::bind("127.0.0.1:0").unwrap();
+    let addr = frontend.local_addr().unwrap();
+    let client = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let reply =
+            roundtrip(&mut stream, &InferRequest::new("tiny-bert").to_json()).unwrap();
+        assert!(reply.get("ok").unwrap().as_bool().unwrap(), "{reply}");
+        let reply =
+            roundtrip(&mut stream, &Value::parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+        assert_eq!(reply.get("op").unwrap().as_str().unwrap(), "shutdown");
+    });
+    let summary = frontend.run(&e, cfg).unwrap();
+    client.join().unwrap();
+    assert_eq!(summary.served, 1, "{:?}", summary.first_error);
 }
 
 #[test]
