@@ -23,22 +23,22 @@ test:
 examples:
 	cargo build --release --examples
 
-# Record perf trajectories (one-model kv off/on, the two-lane router run
-# measured serialized AND concurrent, an elastic shrink-grow run, and a
-# pinned gpt2-base-sim overlapped decode) into BENCH_pr5.json +
-# BENCH_pr6.json; CI uploads both.
+# Record perf trajectories (one-model kv off/on, the concurrent two-lane
+# router run, the bursty shared-prompt workload measured fixed-batch AND
+# continuous, an elastic shrink-grow run, and a pinned gpt2-base-sim
+# overlapped decode) into BENCH_pr6.json + BENCH_pr7.json; CI uploads both.
 bench:
 	cargo run --release --example bench_trajectory
 
-# Fail-soft per-metric deltas between the PR 5 and PR 6 trajectories
+# Fail-soft per-metric deltas between the PR 6 and PR 7 trajectories
 # (advisory: a missing file prints a note instead of failing the build).
 # NOTE: one `make bench` run writes both files from the same summaries, so
 # most sections diff to zero by construction — the signal is the
-# `router_two_kv_lanes` section (serialized vs concurrent lanes) plus
-# whatever a previous CI run's BENCH_pr5 artifact contributes when dropped
-# in place.
+# `continuous_burst` section (fixed-batch vs continuous scheduling, incl.
+# `tokens_per_sec` / `slo_attained_pct` / `kv_dedup_bytes`) plus whatever
+# a previous CI run's BENCH_pr6 artifact contributes when dropped in place.
 bench-diff:
-	$(PY) scripts/bench_diff.py BENCH_pr5.json BENCH_pr6.json
+	$(PY) scripts/bench_diff.py BENCH_pr6.json BENCH_pr7.json
 
 # ThreadSanitizer over the concurrency-heavy test binaries (nightly-only:
 # -Zsanitizer needs -Zbuild-std so std is instrumented too).  PJRT-backed

@@ -1,18 +1,22 @@
 //! `make bench` driver: record a machine-readable perf trajectory so
 //! future PRs can diff serving behavior (`make bench-diff`).
 //!
-//! Five sections, all with unthrottled storage (fast + free of disk
+//! Six sections, all with unthrottled storage (fast + free of disk
 //! variance):
 //!
 //! * `one_model`         — generative serve, KV cache OFF (paper decode)
 //! * `one_model_kv`      — same workload with `--kv-cache`
-//! * `router_two_kv_lanes` — tiny-gpt + tiny-gptj lanes under one shared
-//!   budget, each with a KV allocation, recorded TWICE under the same
-//!   key: the serialized router (PR 5 semantics, one pass in flight at a
-//!   time) into `BENCH_pr5.json` and the concurrent router (per-lane
-//!   executors overlapping passes against the same shared budget) into
-//!   `BENCH_pr6.json`, so `make bench-diff` reports the aggregate
-//!   throughput improvement of lane concurrency directly.
+//! * `router_two_kv_lanes` — tiny-gpt + tiny-gptj lanes on the concurrent
+//!   router under one shared budget (PR 6 semantics; unchanged this PR,
+//!   so it lands identically in both files and diffs flat)
+//! * `continuous_burst`  — bursty multi-client traffic on the same two
+//!   lanes, each burst sharing one system prompt (one seed), recorded
+//!   TWICE under the same key: fixed-batch scheduling into
+//!   `BENCH_pr6.json` and iteration-level continuous batching
+//!   (`--continuous`, cross-request KV prefix sharing) into
+//!   `BENCH_pr7.json`, so `make bench-diff` reports the scheduler's
+//!   throughput delta directly — alongside the new `slo_attained_pct` /
+//!   `kv_dedup_bytes` counters.
 //! * `elastic_shrink_grow` — the KV serve again, with a shrink-grow
 //!   memory-pressure trace resizing the budget mid-run
 //! * `decode_gpt2_pinned` — a pinned (`--pin-budget-mb`) gpt2-base-sim
@@ -30,13 +34,12 @@ use hermes::config::{Mode, RunConfig};
 use hermes::elastic::{PressureStep, PressureTrace};
 use hermes::engine::Engine;
 use hermes::server::{
-    serve, ConcurrentRouter, InferRequest, Router, RouterConfig, RouterHandle, ServeConfig,
+    serve, ConcurrentRouter, InferRequest, RouterConfig, RouterHandle, ServeConfig,
 };
 use hermes::util::json::Value;
 
 /// Submit `n` requests alternating between the two lanes, wait for every
-/// reply, then shut the router down.  Both router runs get this exact
-/// traffic so the pr5/pr6 delta isolates lane concurrency.
+/// reply, then shut the router down.
 fn drive_lanes(handle: RouterHandle, n: usize) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
         let tickets: Vec<_> = (0..n)
@@ -45,6 +48,37 @@ fn drive_lanes(handle: RouterHandle, n: usize) -> std::thread::JoinHandle<()> {
                 handle.submit(InferRequest::new(profile)).unwrap()
             })
             .collect();
+        for t in tickets {
+            let _ = t.wait();
+        }
+        handle.shutdown();
+    })
+}
+
+/// Bursty multi-client traffic: three client bursts of four requests,
+/// profiles mixed within each burst, every request in a burst priming the
+/// SAME system prompt (one shared seed) — the cross-request KV
+/// prefix-sharing case.  Each request carries a lax SLO target so
+/// `slo_attained_pct` is live (and expected at 100 on an idle machine).
+fn drive_bursts(handle: RouterHandle) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut tickets = Vec::new();
+        for burst in 0..3u64 {
+            for i in 0..4u64 {
+                let profile = if i % 2 == 0 { "tiny-gpt" } else { "tiny-gptj" };
+                tickets.push(
+                    handle
+                        .submit(InferRequest {
+                            profile: profile.into(),
+                            seed: Some(4200 + burst), // the burst's shared system prompt
+                            slo_ms: Some(10_000.0),
+                            ..InferRequest::default()
+                        })
+                        .unwrap(),
+                );
+            }
+            std::thread::sleep(Duration::from_millis(3));
+        }
         for t in tickets {
             let _ = t.wait();
         }
@@ -82,10 +116,9 @@ fn main() -> Result<()> {
     };
     let on = serve(&engine, &on_cfg)?;
 
-    // two generative KV lanes under one shared budget: serialized first
-    // (PR 5 semantics), then the concurrent router with identical traffic.
-    // The budget leaves headroom for both lanes to hold passes at once so
-    // the concurrent run measures overlap, not reclaim churn.
+    // two generative KV lanes overlapping passes under one shared budget
+    // (PR 6 semantics; the fixed-batch concurrent path is unchanged this
+    // PR, so the same run lands in both files)
     let mut lane_b = kv_run.clone();
     lane_b.profile = "tiny-gptj".into();
     let lanes_cfg = RouterConfig {
@@ -94,18 +127,44 @@ fn main() -> Result<()> {
         kv_budget: Some(1 << 20),
         max_batch: 2,
         batch_window: Duration::from_millis(5),
+        concurrent: true,
         ..RouterConfig::default()
     };
-    let router = Router::new(&engine, lanes_cfg.clone())?;
-    let producer = drive_lanes(router.handle(), 8);
-    let router_pr5 = router.run()?;
+    let conc = ConcurrentRouter::new(engine.paths.clone(), lanes_cfg.clone())?;
+    let producer = drive_lanes(conc.handle(), 8);
+    let router_two = conc.run()?;
     producer.join().expect("producer panicked");
 
-    let mut conc_cfg = lanes_cfg;
-    conc_cfg.concurrent = true;
-    let conc = ConcurrentRouter::new(engine.paths.clone(), conc_cfg)?;
-    let producer = drive_lanes(conc.handle(), 8);
-    let router_pr6 = conc.run()?;
+    // PR 7 signal: the same two lanes under bursty shared-prompt traffic,
+    // fixed-batch scheduling vs iteration-level continuous batching.
+    // Small KV blocks so the tiny profiles' prompts seal (and dedup)
+    // whole blocks; identical traffic both runs.
+    let burst_cfg = |continuous: bool| {
+        let mk = |profile: &str| RunConfig {
+            profile: profile.into(),
+            kv_block_tokens: Some(2),
+            continuous,
+            slo_ms: if continuous { Some(10_000.0) } else { None },
+            max_active: if continuous { Some(2) } else { None },
+            ..kv_run.clone()
+        };
+        RouterConfig {
+            models: vec![mk("tiny-gpt"), mk("tiny-gptj")],
+            budget: Some(2 * (gpt + gptj)),
+            kv_budget: Some(1 << 20),
+            max_batch: 2,
+            batch_window: Duration::from_millis(5),
+            concurrent: true,
+            ..RouterConfig::default()
+        }
+    };
+    let conc = ConcurrentRouter::new(engine.paths.clone(), burst_cfg(false))?;
+    let producer = drive_bursts(conc.handle());
+    let burst_fixed = conc.run()?;
+    producer.join().expect("producer panicked");
+    let conc = ConcurrentRouter::new(engine.paths.clone(), burst_cfg(true))?;
+    let producer = drive_bursts(conc.handle());
+    let burst_cont = conc.run()?;
     producer.join().expect("producer panicked");
 
     // elastic: the same KV workload while a shrink-grow trace resizes the
@@ -151,23 +210,25 @@ fn main() -> Result<()> {
     let (decode, _) = session.run_batch(1, 42)?;
     drop(session);
 
-    let pr5 = Value::obj()
-        .set("bench", "pr5-overlapped-decode")
-        .set("one_model", off.to_json())
-        .set("one_model_kv", on.to_json())
-        .set("router_two_kv_lanes", router_pr5.to_json())
-        .set("elastic_shrink_grow", elastic.to_json())
-        .set("decode_gpt2_pinned", decode.to_json());
-    pr5.to_file(&std::path::PathBuf::from("BENCH_pr5.json"))?;
     let pr6 = Value::obj()
         .set("bench", "pr6-concurrent-lanes")
         .set("one_model", off.to_json())
         .set("one_model_kv", on.to_json())
-        .set("router_two_kv_lanes", router_pr6.to_json())
+        .set("router_two_kv_lanes", router_two.to_json())
+        .set("continuous_burst", burst_fixed.to_json())
         .set("elastic_shrink_grow", elastic.to_json())
         .set("decode_gpt2_pinned", decode.to_json());
     pr6.to_file(&std::path::PathBuf::from("BENCH_pr6.json"))?;
-    println!("wrote BENCH_pr5.json + BENCH_pr6.json");
+    let pr7 = Value::obj()
+        .set("bench", "pr7-continuous-batching")
+        .set("one_model", off.to_json())
+        .set("one_model_kv", on.to_json())
+        .set("router_two_kv_lanes", router_two.to_json())
+        .set("continuous_burst", burst_cont.to_json())
+        .set("elastic_shrink_grow", elastic.to_json())
+        .set("decode_gpt2_pinned", decode.to_json());
+    pr7.to_file(&std::path::PathBuf::from("BENCH_pr7.json"))?;
+    println!("wrote BENCH_pr6.json + BENCH_pr7.json");
     println!(
         "one-model p50 {:.1} ms (kv off) vs {:.1} ms (kv on, {} incremental passes); \
          elastic: {} budget steps, {} evictions, p50 {:.1} ms",
@@ -179,17 +240,27 @@ fn main() -> Result<()> {
         elastic.latency.p50(),
     );
     println!(
-        "two-lane router: {:.2} -> {:.2} req/s serialized -> concurrent \
-         ({} served each, peak {} -> {} B, {} pass(es) in flight at peak, \
-         queue wait p50 {:.1} -> {:.1} ms)",
-        router_pr5.throughput_rps,
-        router_pr6.throughput_rps,
-        router_pr6.served,
-        router_pr5.peak_bytes,
-        router_pr6.peak_bytes,
-        router_pr6.concurrent_passes_peak,
-        router_pr5.queue_wait_p50_ms,
-        router_pr6.queue_wait_p50_ms,
+        "two-lane router (fixed batch): {:.2} req/s, {} served, peak {} B, \
+         {} pass(es) in flight at peak",
+        router_two.throughput_rps,
+        router_two.served,
+        router_two.peak_bytes,
+        router_two.concurrent_passes_peak,
+    );
+    println!(
+        "bursty shared-prompt: {:.2} -> {:.2} tok/s fixed -> continuous \
+         ({} joins / {} leaves / {} shed, SLO attained {:.1}%, \
+         {} shared blocks, {} B deduplicated, queue wait p50 {:.1} -> {:.1} ms)",
+        burst_fixed.tokens_per_sec,
+        burst_cont.tokens_per_sec,
+        burst_cont.joins,
+        burst_cont.leaves,
+        burst_cont.shed_overload,
+        burst_cont.slo_attained_pct,
+        burst_cont.shared_kv_blocks,
+        burst_cont.kv_dedup_bytes,
+        burst_fixed.queue_wait_p50_ms,
+        burst_cont.queue_wait_p50_ms,
     );
     println!(
         "gpt2 pinned overlapped decode: token p50 {:.1} ms, {:.2} tokens/s \

@@ -134,6 +134,21 @@ pub struct RunConfig {
     /// alive across passes so pinned stages skip the host→device re-upload
     /// (on by default; only active when `pin_budget` > 0 leaves cap room).
     pub device_cache: bool,
+    /// Continuous batching (`--continuous`): serving lanes re-form the
+    /// active set at every token boundary — requests join a running
+    /// decode with one prime pass and leave on completion, instead of
+    /// the fixed-batch path's admit-then-drain.  Serving only.
+    pub continuous: bool,
+    /// Per-lane SLO target in milliseconds (`--slo-ms`): end-to-end
+    /// latency goal used by the continuous scheduler for overload
+    /// shedding and the `slo_attained_pct` counter.  Requires
+    /// `continuous`.  Individual requests may override it on the wire.
+    pub slo_ms: Option<f64>,
+    /// Active-set cap per lane in continuous mode (`--max-active`):
+    /// how many requests may decode concurrently before admission
+    /// queues (elastic budget steps shrink this cap first, before any
+    /// shared-block eviction).  Requires `continuous`; >= 1.
+    pub max_active: Option<usize>,
 }
 
 impl RunConfig {
@@ -172,6 +187,31 @@ impl RunConfig {
         }
         if self.agents == 0 {
             anyhow::bail!("agents must be >= 1 (got 0)");
+        }
+        if self.continuous && self.mode == Mode::Baseline {
+            anyhow::bail!(
+                "--continuous needs a pipelined mode (the baseline has no \
+                 token-boundary iterations for requests to join or leave)"
+            );
+        }
+        match self.max_active {
+            Some(0) => anyhow::bail!("--max-active must be >= 1 (got 0)"),
+            Some(_) if !self.continuous => anyhow::bail!(
+                "--max-active only makes sense with --continuous (the fixed-batch \
+                 path sizes batches from the profile's AOT batch list)"
+            ),
+            _ => {}
+        }
+        if let Some(slo) = self.slo_ms {
+            if !self.continuous {
+                anyhow::bail!(
+                    "--slo-ms requires --continuous serving mode (the fixed-batch \
+                     path has no iteration-level scheduler to enforce a target)"
+                );
+            }
+            if !slo.is_finite() || slo <= 0.0 {
+                anyhow::bail!("--slo-ms must be a positive number of milliseconds (got {slo})");
+            }
         }
         if self.prefetch_depth > 0 && self.mode != Mode::PipeLoad {
             anyhow::bail!(
@@ -222,6 +262,9 @@ impl Default for RunConfig {
             kv_block_tokens: None,
             prefetch_depth: 0,
             device_cache: true,
+            continuous: false,
+            slo_ms: None,
+            max_active: None,
         }
     }
 }
@@ -315,6 +358,33 @@ mod tests {
             RunConfig { prefetch_depth: 4, mode: Mode::Baseline, ..ok.clone() };
         let e = prefetch_baseline.validate(&p).unwrap_err().to_string();
         assert!(e.contains("--prefetch-depth"), "{e}");
+
+        // continuous batching: pipelined modes only, knobs require it
+        let cont_ok = RunConfig { continuous: true, ..ok.clone() };
+        assert!(cont_ok.validate(&p).is_ok());
+        let cont_baseline = RunConfig { continuous: true, mode: Mode::Baseline, ..ok.clone() };
+        let e = cont_baseline.validate(&p).unwrap_err().to_string();
+        assert!(e.contains("--continuous"), "{e}");
+        let zero_active =
+            RunConfig { continuous: true, max_active: Some(0), ..ok.clone() };
+        let e = zero_active.validate(&p).unwrap_err().to_string();
+        assert!(e.contains("--max-active") && e.contains(">= 1"), "{e}");
+        let active_alone = RunConfig { max_active: Some(4), ..ok.clone() };
+        let e = active_alone.validate(&p).unwrap_err().to_string();
+        assert!(e.contains("--continuous"), "{e}");
+        let slo_alone = RunConfig { slo_ms: Some(50.0), ..ok.clone() };
+        let e = slo_alone.validate(&p).unwrap_err().to_string();
+        assert!(e.contains("--slo-ms") && e.contains("--continuous"), "{e}");
+        let slo_bad = RunConfig { continuous: true, slo_ms: Some(-1.0), ..ok.clone() };
+        let e = slo_bad.validate(&p).unwrap_err().to_string();
+        assert!(e.contains("positive"), "{e}");
+        let cont_full = RunConfig {
+            continuous: true,
+            slo_ms: Some(250.0),
+            max_active: Some(4),
+            ..ok.clone()
+        };
+        assert!(cont_full.validate(&p).is_ok());
 
         let bad_batch = RunConfig { batch: 3, ..ok.clone() };
         let e = bad_batch.validate(&p).unwrap_err().to_string();

@@ -210,6 +210,72 @@ impl<'e> SessionBuilder<'e> {
     }
 }
 
+/// One request's in-flight decode: everything [`Session::run_batch`] used
+/// to keep in locals, reified so serving loops can hold MANY of these open
+/// against one session and interleave their token steps (continuous
+/// batching).  Dropping a state releases its KV blocks.
+///
+/// Obtained from [`Session::begin_decode`]; advanced one iteration at a
+/// time by [`Session::decode_step`]; closed by [`Session::finish_decode`].
+pub struct DecodeState {
+    batch: usize,
+    input: ModelInput,
+    ids: Vec<i32>,
+    cur_len: usize,
+    step: usize,
+    /// generative: tokens to produce; non-generative: the single pass
+    total_steps: usize,
+    generative: bool,
+    kv_enabled: bool,
+    n_body: usize,
+    kv_seq: Option<KvSeq>,
+    last_next: Vec<i32>,
+    generated: Vec<i32>,
+    generated_rows: Vec<Vec<i32>>,
+    head: Vec<f32>,
+    passes: Vec<PassStats>,
+    kv_inc: u64,
+    kv_rec: u64,
+    /// per-token decode latency distribution (generative runs)
+    token_lat: LatencyRecorder,
+    t0: Instant,
+    // counter baselines, so the per-request report stays delta-based even
+    // when other requests advance the session's totals between our steps
+    kv_evicted0: u64,
+    kv_shared0: u64,
+    kv_dedup0: u64,
+    elastic0: ElasticStats,
+    prefetch0: PrefetchStats,
+    spawns_avoided0: u64,
+}
+
+impl DecodeState {
+    /// All iterations run — harvest with [`Session::finish_decode`].
+    pub fn done(&self) -> bool {
+        self.step >= self.total_steps
+    }
+
+    /// The next [`Session::decode_step`] is this request's last.
+    pub fn last_step(&self) -> bool {
+        self.step + 1 >= self.total_steps
+    }
+
+    /// Iterations completed so far.
+    pub fn steps_done(&self) -> usize {
+        self.step
+    }
+
+    /// Tokens produced so far (0 for non-generative forwards).
+    pub fn tokens_generated(&self) -> usize {
+        self.generated.len()
+    }
+
+    /// The batch size this request decodes at.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+}
+
 impl Engine {
     /// Start building a session; finish with [`SessionBuilder::open`].
     pub fn session(&self, cfg: &RunConfig) -> SessionBuilder<'_> {
@@ -755,175 +821,239 @@ impl<'e> Session<'e> {
     /// recompute for that token and re-primes, so generated tokens are
     /// identical to the cache-off path regardless of cache residency.
     /// The sequence's blocks are freed when this call returns (per-request
-    /// lifecycle; the Router relies on it).
+    /// lifecycle; the fixed-batch Router relies on it).
+    ///
+    /// This is a thin driver over the iteration-level API
+    /// ([`Session::begin_decode`] / [`Session::decode_step`] /
+    /// [`Session::finish_decode`]) that continuous-batching serving loops
+    /// use directly to interleave many requests' steps — a request stepped
+    /// there runs the exact same per-token code at the same batch and
+    /// seed, so its tokens are bit-identical to a `run_batch` call.
     pub fn run_batch(&mut self, batch: usize, seed: u64) -> Result<(RunReport, RunOutput)> {
+        let mut st = self.begin_decode(batch, seed);
+        while !st.done() {
+            let expect_next = !st.last_step() || self.expect_more;
+            self.decode_step(&mut st, expect_next)?;
+        }
+        Ok(self.finish_decode(st))
+    }
+
+    /// Open a per-request decode state: input made from `(batch, seed)`,
+    /// counters baselined, nothing run yet.  Step it with
+    /// [`Session::decode_step`] until [`DecodeState::done`], then harvest
+    /// with [`Session::finish_decode`].  Many states may be open at once —
+    /// the continuous scheduler interleaves their steps at token
+    /// granularity; each holds its own [`KvSeq`], so KV blocks live for
+    /// the request's whole residence in the batch.
+    pub fn begin_decode(&mut self, batch: usize, seed: u64) -> DecodeState {
         let profile = self.ctx.profile;
-        self.ctx.batch = batch;
-        let (input, mut ids, prompt_len) = make_input(profile, batch, seed);
-        let gen_tokens = if profile.is_generative() {
+        let (input, ids, prompt_len) = make_input(profile, batch, seed);
+        let generative = profile.is_generative();
+        let gen_tokens = if generative {
             self.cfg.gen_tokens.unwrap_or(profile.gen_tokens.max(1))
         } else {
             0
         };
+        let kv_enabled = generative
+            && self.kv_pool.is_some()
+            && self.opts.is_some()
+            && profile.entry("embedding_inc", batch).is_ok()
+            && profile.entry(&format!("{}_inc", profile.body_kind()), batch).is_ok()
+            && profile.entry(&format!("{}_kv", profile.body_kind()), batch).is_ok()
+            && profile.entry("lm_head_inc", batch).is_ok();
+        let n_body = profile.stages.iter().filter(|s| s.kind == profile.body_kind()).count();
+        let kv_stats0 = self.kv_pool_stats();
+        DecodeState {
+            batch,
+            input,
+            ids,
+            cur_len: prompt_len,
+            step: 0,
+            total_steps: if generative { gen_tokens } else { 1 },
+            generative,
+            kv_enabled,
+            n_body,
+            kv_seq: None,
+            last_next: Vec::new(),
+            generated: Vec::new(),
+            generated_rows: if generative { vec![Vec::new(); batch] } else { Vec::new() },
+            head: Vec::new(),
+            passes: Vec::new(),
+            kv_inc: 0,
+            kv_rec: 0,
+            token_lat: LatencyRecorder::new(),
+            t0: Instant::now(),
+            kv_evicted0: kv_stats0.evicted_blocks,
+            kv_shared0: kv_stats0.shared_total,
+            kv_dedup0: kv_stats0.dedup_bytes,
+            elastic0: self.elastic_totals,
+            prefetch0: self.prefetch_stats(),
+            spawns_avoided0: self.pool_stats().spawns_avoided(),
+        }
+    }
 
-        let t0 = Instant::now();
-        let mut passes: Vec<PassStats> = Vec::new();
-        let mut generated = Vec::new();
-        let mut generated_rows: Vec<Vec<i32>> = Vec::new();
-        let mut head: Vec<f32> = Vec::new();
-        let mut kv_inc = 0u64;
-        let mut kv_rec = 0u64;
-        let kv_evicted0 = self.kv_pool_stats().evicted_blocks;
-        let elastic0 = self.elastic_totals;
-        let prefetch0 = self.prefetch_stats();
-        let spawns_avoided0 = self.pool_stats().spawns_avoided();
-        // per-token decode latency distribution (generative runs)
-        let mut token_lat = LatencyRecorder::new();
+    /// Advance one request by one iteration: its single forward pass
+    /// (non-generative), or one token of its decode loop — the prime pass
+    /// on the first step, incremental after, with the same
+    /// eviction-recovery fallback as [`Session::run_batch`].  `expect_next`
+    /// keeps cross-pass prefetch alive when any pass follows this one
+    /// (continuous loops pass true whenever other requests remain active).
+    pub fn decode_step(&mut self, st: &mut DecodeState, expect_next: bool) -> Result<()> {
+        debug_assert!(!st.done(), "decode_step on a finished state");
+        let profile = self.ctx.profile;
+        // interleaved states may differ in batch; the pass reads ctx.batch
+        self.ctx.batch = st.batch;
 
-        if !profile.is_generative() {
+        if !st.generative {
             self.poll_elastic();
             let (out, stats) = if self.opts.is_none() {
-                self.baseline_forward(&input)?
+                self.baseline_forward(&st.input)?
             } else {
                 // a serving queue with more requests pending keeps prefetch
                 // alive across the request boundary
-                self.pass(&input, self.expect_more)?
+                self.pass(&st.input, expect_next)?
             };
-            head = self.engine.runtime.buffer_to_f32(&out)?;
-            passes.push(stats);
-        } else {
-            generated_rows = vec![Vec::new(); batch];
-            let kv_enabled = self.kv_pool.is_some()
-                && self.opts.is_some()
-                && profile.entry("embedding_inc", batch).is_ok()
-                && profile.entry(&format!("{}_inc", profile.body_kind()), batch).is_ok()
-                && profile.entry(&format!("{}_kv", profile.body_kind()), batch).is_ok()
-                && profile.entry("lm_head_inc", batch).is_ok();
-            let n_body = profile.stages.iter().filter(|s| s.kind == profile.body_kind()).count();
-            let mut kv_seq: Option<KvSeq> = None;
-            let mut last_next: Vec<i32> = Vec::new();
-            let mut cur_len = prompt_len;
-
-            for step in 0..gen_tokens {
-                let t_tok = Instant::now();
-                // idle loaders may prefetch the next token's head stages
-                // while this token's tail still computes; with more
-                // requests queued, even the last token's pass prefetches
-                // (the next request re-enters at stage 0 regardless)
-                let expect_next = step + 1 < gen_tokens || self.expect_more;
-                // elastic budget steps land here, between token passes
-                self.poll_elastic();
-                // Incremental when the cached prefix lines up exactly with
-                // the ids (tokens == cur_len - 1: everything but the token
-                // appended after the previous pass) and one more block row
-                // can be reserved.  Anything else recomputes full-prefix.
-                let can_inc = kv_enabled
-                    && step > 0
-                    && last_next.len() == batch
-                    && cur_len <= profile.max_seq
-                    && kv_seq
-                        .as_ref()
-                        .map(|s| s.valid() && s.tokens() + 1 == cur_len && s.reserve(cur_len))
-                        .unwrap_or(false);
-
-                let mut step_out: Option<(Vec<f32>, bool, PassStats)> = None;
-                if can_inc {
-                    let seq = kv_seq.as_ref().unwrap();
-                    let inp = ModelInput::Ids(last_next.clone());
-                    let pos = cur_len - 1;
-                    match self.pass_mode(
-                        &inp,
-                        &PassMode::Incremental { kv: seq, pos },
-                        expect_next,
-                    ) {
-                        Ok((out, stats)) => {
-                            seq.set_tokens(cur_len);
-                            kv_inc += 1;
-                            let logits = self.engine.runtime.buffer_to_f32(&out)?;
-                            step_out = Some((logits, true, stats));
-                        }
-                        Err(e) => {
-                            // Mid-pass eviction is the ONLY recoverable
-                            // failure: the token was not produced, so fall
-                            // through to a full-prefix recompute.  Matched
-                            // by marker, not by `seq.valid()` — the error
-                            // recovery in `pass_mode` invalidates every
-                            // sequence on ANY failure, so validity cannot
-                            // distinguish eviction from a real error.
-                            let evicted = e
-                                .chain()
-                                .any(|c| c.to_string().contains(KV_EVICTED_MIDPASS));
-                            if !evicted {
-                                return Err(e);
-                            }
-                        }
-                    }
-                }
-                let (logits, incremental, stats) = match step_out {
-                    Some(x) => x,
-                    None => {
-                        // Count a recompute only where a cache COULD have
-                        // served (within max_seq); overrun steps are plain
-                        // full passes on either path, not cache misses.
-                        if kv_enabled && step > 0 && cur_len <= profile.max_seq {
-                            kv_rec += 1; // primed cache could not serve this token
-                        }
-                        // (re)prime: a fresh sequence, if blocks are grantable
-                        let mut primed = false;
-                        if kv_enabled && cur_len <= profile.max_seq {
-                            kv_seq = None; // free any stale sequence first
-                            let pool = self.kv_pool.as_ref().unwrap();
-                            let seq = pool.open_seq(n_body, batch, profile.hidden);
-                            if seq.reserve(cur_len) {
-                                kv_seq = Some(seq);
-                                primed = true;
-                            }
-                        }
-                        let inp = ModelInput::Ids(ids.clone());
-                        let (out, stats) = if self.opts.is_none() {
-                            self.baseline_forward(&inp)?
-                        } else if primed {
-                            let mode = PassMode::PrimeKv {
-                                kv: kv_seq.as_ref().unwrap(),
-                                prefix_len: cur_len,
-                            };
-                            let r = self.pass_mode(&inp, &mode, expect_next)?;
-                            kv_seq.as_ref().unwrap().set_tokens(cur_len);
-                            r
-                        } else {
-                            self.pass(&inp, expect_next)?
-                        };
-                        (self.engine.runtime.buffer_to_f32(&out)?, false, stats)
-                    }
-                };
-
-                let next = if incremental {
-                    argmax_rows_flat(&logits, profile.vocab, batch)
-                } else {
-                    argmax_rows(&logits, profile, batch, cur_len)
-                };
-                push_tokens(&mut ids, profile, cur_len, &next);
-                generated.push(next[0]);
-                for (row, t) in next.iter().enumerate() {
-                    generated_rows[row].push(*t);
-                }
-                cur_len += 1;
-                head = if incremental {
-                    logits[..profile.vocab].to_vec()
-                } else {
-                    last_logits(&logits, profile, cur_len - 1)
-                };
-                last_next = next;
-                passes.push(stats);
-                token_lat.record(t_tok.elapsed());
-            }
-            // request over: blocks go back to the budget here
-            drop(kv_seq);
+            st.head = self.engine.runtime.buffer_to_f32(&out)?;
+            st.passes.push(stats);
+            st.step += 1;
+            return Ok(());
         }
+
+        let t_tok = Instant::now();
+        // elastic budget steps land here, between token passes
+        self.poll_elastic();
+        // Incremental when the cached prefix lines up exactly with the ids
+        // (tokens == cur_len - 1: everything but the token appended after
+        // the previous pass) and one more block row can be reserved.
+        // Anything else recomputes full-prefix.
+        let can_inc = st.kv_enabled
+            && st.step > 0
+            && st.last_next.len() == st.batch
+            && st.cur_len <= profile.max_seq
+            && st
+                .kv_seq
+                .as_ref()
+                .map(|s| s.valid() && s.tokens() + 1 == st.cur_len && s.reserve(st.cur_len))
+                .unwrap_or(false);
+
+        let mut step_out: Option<(Vec<f32>, bool, PassStats)> = None;
+        if can_inc {
+            let seq = st.kv_seq.as_ref().unwrap();
+            let inp = ModelInput::Ids(st.last_next.clone());
+            let pos = st.cur_len - 1;
+            match self.pass_mode(&inp, &PassMode::Incremental { kv: seq, pos }, expect_next) {
+                Ok((out, stats)) => {
+                    seq.set_tokens(st.cur_len);
+                    st.kv_inc += 1;
+                    let logits = self.engine.runtime.buffer_to_f32(&out)?;
+                    step_out = Some((logits, true, stats));
+                }
+                Err(e) => {
+                    // Mid-pass eviction is the ONLY recoverable failure:
+                    // the token was not produced, so fall through to a
+                    // full-prefix recompute.  Matched by marker, not by
+                    // `seq.valid()` — the error recovery in `pass_mode`
+                    // invalidates every sequence on ANY failure, so
+                    // validity cannot distinguish eviction from a real
+                    // error.
+                    let evicted =
+                        e.chain().any(|c| c.to_string().contains(KV_EVICTED_MIDPASS));
+                    if !evicted {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+        let (logits, incremental, stats) = match step_out {
+            Some(x) => x,
+            None => {
+                // Count a recompute only where a cache COULD have served
+                // (within max_seq); overrun steps are plain full passes on
+                // either path, not cache misses.
+                if st.kv_enabled && st.step > 0 && st.cur_len <= profile.max_seq {
+                    st.kv_rec += 1; // primed cache could not serve this token
+                }
+                // (re)prime: a fresh sequence, if blocks are grantable
+                let mut primed = false;
+                if st.kv_enabled && st.cur_len <= profile.max_seq {
+                    st.kv_seq = None; // free any stale sequence first
+                    let pool = self.kv_pool.as_ref().unwrap();
+                    let seq = pool.open_seq(st.n_body, st.batch, profile.hidden);
+                    if seq.reserve(st.cur_len) {
+                        st.kv_seq = Some(seq);
+                        primed = true;
+                    }
+                }
+                let inp = ModelInput::Ids(st.ids.clone());
+                let (out, stats) = if self.opts.is_none() {
+                    self.baseline_forward(&inp)?
+                } else if primed {
+                    let mode = PassMode::PrimeKv {
+                        kv: st.kv_seq.as_ref().unwrap(),
+                        prefix_len: st.cur_len,
+                    };
+                    let r = self.pass_mode(&inp, &mode, expect_next)?;
+                    st.kv_seq.as_ref().unwrap().set_tokens(st.cur_len);
+                    r
+                } else {
+                    self.pass(&inp, expect_next)?
+                };
+                (self.engine.runtime.buffer_to_f32(&out)?, false, stats)
+            }
+        };
+
+        let next = if incremental {
+            argmax_rows_flat(&logits, profile.vocab, st.batch)
+        } else {
+            argmax_rows(&logits, profile, st.batch, st.cur_len)
+        };
+        push_tokens(&mut st.ids, profile, st.cur_len, &next);
+        st.generated.push(next[0]);
+        for (row, t) in next.iter().enumerate() {
+            st.generated_rows[row].push(*t);
+        }
+        st.cur_len += 1;
+        st.head = if incremental {
+            logits[..profile.vocab].to_vec()
+        } else {
+            last_logits(&logits, profile, st.cur_len - 1)
+        };
+        st.last_next = next;
+        st.passes.push(stats);
+        st.token_lat.record(t_tok.elapsed());
+        st.step += 1;
+        Ok(())
+    }
+
+    /// Close a finished (or abandoned) decode state: the request's KV
+    /// blocks go back to the budget here, and the per-request report is
+    /// assembled from the state's own counters against its baselines.
+    pub fn finish_decode(&mut self, st: DecodeState) -> (RunReport, RunOutput) {
+        let DecodeState {
+            kv_seq,
+            generated,
+            generated_rows,
+            mut head,
+            passes,
+            kv_inc,
+            kv_rec,
+            token_lat,
+            t0,
+            kv_evicted0,
+            kv_shared0,
+            kv_dedup0,
+            elastic0,
+            prefetch0,
+            spawns_avoided0,
+            ..
+        } = st;
+        // request over: blocks go back to the budget here
+        drop(kv_seq);
         let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
         self.kv_inc_total += kv_inc;
         self.kv_recompute_total += kv_rec;
         let prefetch1 = self.prefetch_stats();
+        let kv_stats1 = self.kv_pool_stats();
         let tokens_per_sec = if token_lat.is_empty() {
             0.0
         } else {
@@ -946,7 +1076,9 @@ impl<'e> Session<'e> {
             cache_misses: passes.iter().map(|p| p.cache_misses).sum(),
             kv_inc_passes: kv_inc,
             kv_recomputes: kv_rec,
-            kv_evicted_blocks: self.kv_pool_stats().evicted_blocks - kv_evicted0,
+            kv_evicted_blocks: kv_stats1.evicted_blocks - kv_evicted0,
+            shared_kv_blocks: kv_stats1.shared_total - kv_shared0,
+            kv_dedup_bytes: kv_stats1.dedup_bytes - kv_dedup0,
             budget_steps: self.elastic_totals.budget_steps - elastic0.budget_steps,
             elastic_evictions: self.elastic_totals.elastic_evictions
                 - elastic0.elastic_evictions,
@@ -960,7 +1092,7 @@ impl<'e> Session<'e> {
             tokens_per_sec,
         };
         head.truncate(16);
-        Ok((report, RunOutput { generated, generated_rows, head_sample: head }))
+        (report, RunOutput { generated, generated_rows, head_sample: head })
     }
 
     /// One pipelined pass over persistent session state.  `expect_next`

@@ -1,5 +1,5 @@
 //! Paged KV-cache pool: memory-accounted attention state for incremental
-//! decode.
+//! decode, with cross-request prefix sharing.
 //!
 //! The paper's decode loop re-runs the full growing prefix for every
 //! generated token; TPI-LLM (arXiv:2410.00531) and EdgeInfinite
@@ -17,26 +17,41 @@
 //!   [`crate::server::Router`] grants so one model's long generations
 //!   cannot starve another model's weights or KV;
 //! * a [`KvSeq`] is one sequence's RAII handle: dropping it (request
-//!   completion or rejection) returns every block to the budget;
+//!   completion or rejection) releases its references; a block's bytes
+//!   return to the budget when its **last** holder lets go;
+//! * blocks are **content-hashed and refcounted**: when a committed,
+//!   fully-covered block's K/V content matches an already-sealed block
+//!   (vLLM-style prefix caching, keyed by content rather than token ids
+//!   so sharing can never change what `dense_kv` returns), the private
+//!   copy is freed back to the accountant and the sequence references the
+//!   shared block instead — N requests decoding the same system prompt
+//!   charge the accountant once.  Writes into a shared (or sealed) block
+//!   **copy-on-write** so divergence never corrupts a neighbour;
 //! * under `S^stop` pressure the pool is an eviction target of the
 //!   [`crate::pipeload::gate::OrderedGate`], alongside pinned hot
-//!   layers: [`KvPool::evict_for`] reclaims whole sequences LRU-first.
-//!   An evicted sequence is marked invalid, **not** an error — the decode
-//!   loop falls back to a full-prefix recompute for that sequence, so
-//!   correctness never depends on cache residency.
+//!   layers: [`KvPool::evict_for`] reclaims whole sequences with
+//!   **refcount-aware victim selection** — LRU among sequences whose
+//!   eviction actually frees bytes first (a sequence holding only shared
+//!   blocks frees nothing until its peers go), so reclaim makes progress
+//!   instead of shredding shared prefixes for zero gain.  An evicted
+//!   sequence is marked invalid, **not** an error — the decode loop falls
+//!   back to a full-prefix recompute, so tokens stay bit-identical to
+//!   sharing-off.
 //!
 //! Allocation never blocks: block grants use
 //! [`MemoryAccountant::try_acquire`] (after trying to evict *other*
 //! sequences), because the grab happens on the inference thread in the
 //! middle of a pass — parking there would deadlock the pipeline that is
 //! supposed to free the memory.  A failed grant degrades to uncached
-//! decode, it never stalls.
+//! decode, it never stalls.  A failed copy-on-write grant likewise
+//! degrades: the writing sequence is invalidated and recomputes.
 //!
-//! K/V data is stored token-major (`[token][batch][hidden]` per layer) so
-//! appending one decoded token is a plain extend;
-//! [`KvPool::dense_kv`] re-packs a layer into the `[batch, seq, hidden]`
-//! buffers the `*_inc` HLO entries take, zero-filling past the cached
-//! prefix (the entries mask attention at `pos`, so the padding is inert).
+//! K/V data is stored block-major (`[block_tokens][batch][hidden]` per
+//! layer-block) so appending one decoded token is a row write into the
+//! tail block; [`KvPool::dense_kv`] re-packs a layer into the
+//! `[batch, seq, hidden]` buffers the `*_inc` HLO entries take,
+//! zero-filling past the cached prefix (the entries mask attention at
+//! `pos`, so the padding is inert).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -51,33 +66,48 @@ pub const DEFAULT_BLOCK_TOKENS: usize = 8;
 /// `serve --json`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct KvPoolStats {
-    /// blocks ever granted
+    /// blocks ever granted (fresh allocations, including COW copies)
     pub allocated_blocks: u64,
-    /// blocks reclaimed under `S^stop` pressure (gate eviction)
+    /// block references reclaimed under `S^stop` pressure (gate eviction)
     pub evicted_blocks: u64,
-    /// bytes currently accounted by the pool
+    /// unique bytes currently accounted by the pool (shared blocks once)
     pub pool_bytes: u64,
-    /// blocks currently held
+    /// unique blocks currently held
     pub pool_blocks: u64,
     /// sequences currently registered (valid or evicted-but-open)
     pub sequences: usize,
+    /// blocks currently referenced by more than one sequence
+    pub shared_blocks: u64,
+    /// cumulative sharing events (a block gaining an extra holder)
+    pub shared_total: u64,
+    /// cumulative bytes returned to the budget by content dedup
+    pub dedup_bytes: u64,
+}
+
+/// One layer-block: `block_tokens` positions of K and V for one layer.
+#[derive(Debug)]
+struct Block {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// sequences referencing this block
+    refs: u32,
+    bytes: u64,
+    /// content hash once sealed (immutable + dedup-eligible); `None`
+    /// while the block is still private and writable in place
+    hash: Option<u64>,
 }
 
 #[derive(Debug)]
 struct SeqState {
-    /// per-layer K (and V) data, token-major [token][batch][hidden]
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    /// per-layer block-id lists; slot `i` covers tokens
+    /// `[i*block_tokens, (i+1)*block_tokens)`
+    blocks: Vec<Vec<u64>>,
     batch: usize,
     hidden: usize,
     /// cached prefix length in tokens (positions `0..tokens` are valid)
     tokens: usize,
     /// reserved capacity in tokens (grows in whole blocks)
     capacity: usize,
-    /// bytes currently accounted for this sequence
-    bytes: u64,
-    /// blocks currently held by this sequence
-    blocks: u64,
     /// LRU clock of the last reserve/advance (eviction victim = smallest)
     last_use: u64,
     /// cleared by eviction: data is gone, owner must recompute
@@ -86,19 +116,28 @@ struct SeqState {
 
 impl SeqState {
     fn layers(&self) -> usize {
-        self.k.len()
+        self.blocks.len()
     }
 }
 
 #[derive(Debug, Default)]
 struct PoolState {
     seqs: HashMap<u64, SeqState>,
-    next_id: u64,
+    blocks: HashMap<u64, Block>,
+    /// content hash -> sealed block id (dedup registry; stale entries are
+    /// removed when their block dies)
+    by_hash: HashMap<u64, u64>,
+    next_seq: u64,
+    next_block: u64,
     clock: u64,
+    /// unique bytes accounted (shared blocks counted once)
     used: u64,
-    blocks: u64,
+    /// unique blocks held
+    held_blocks: u64,
     allocated_blocks: u64,
     evicted_blocks: u64,
+    shared_total: u64,
+    dedup_bytes: u64,
     /// pool-level byte cap (the lane's KV allocation); `None` = only the
     /// accountant's budget constrains the pool.  Mutable at run time —
     /// elastic budget steps rebalance it via [`KvPool::set_kv_budget`].
@@ -106,20 +145,81 @@ struct PoolState {
 }
 
 impl PoolState {
-    /// Drop one sequence's storage and return its (bytes, blocks), without
-    /// removing the entry (eviction keeps the tombstone so the owner can
-    /// observe the invalidation; release removes it entirely).
-    fn strip(seq: &mut SeqState) -> (u64, u64) {
-        let freed = (seq.bytes, seq.blocks);
-        seq.k = Vec::new();
-        seq.v = Vec::new();
+    /// Drop one reference to `bid`; frees the block (returning its bytes)
+    /// when this was the last holder.
+    fn decref(&mut self, bid: u64) -> u64 {
+        let Some(b) = self.blocks.get_mut(&bid) else { return 0 };
+        b.refs -= 1;
+        if b.refs > 0 {
+            return 0;
+        }
+        let block = self.blocks.remove(&bid).unwrap();
+        if let Some(h) = block.hash {
+            if self.by_hash.get(&h) == Some(&bid) {
+                self.by_hash.remove(&h);
+            }
+        }
+        self.used -= block.bytes;
+        self.held_blocks -= 1;
+        block.bytes
+    }
+
+    /// Drop one sequence's storage and return `(freed_bytes,
+    /// released_block_refs)`, without removing the entry (eviction keeps
+    /// the tombstone so the owner can observe the invalidation; release
+    /// removes it entirely).  `freed_bytes` counts only blocks whose last
+    /// reference this was — shared blocks survive with their peers.
+    fn strip(&mut self, id: u64) -> (u64, u64) {
+        let Some(seq) = self.seqs.get_mut(&id) else { return (0, 0) };
+        let lists = std::mem::take(&mut seq.blocks);
+        let layers = lists.len();
+        seq.blocks = vec![Vec::new(); layers];
         seq.tokens = 0;
         seq.capacity = 0;
-        seq.bytes = 0;
-        seq.blocks = 0;
         seq.valid = false;
-        freed
+        let mut freed = 0u64;
+        let mut released = 0u64;
+        for list in lists {
+            for bid in list {
+                released += 1;
+                freed += self.decref(bid);
+            }
+        }
+        (freed, released)
     }
+
+    /// Bytes a sequence's eviction would actually free right now (its
+    /// privately-held blocks; shared blocks free nothing until the last
+    /// holder goes).
+    fn freeable(&self, seq: &SeqState) -> u64 {
+        seq.blocks
+            .iter()
+            .flatten()
+            .filter_map(|bid| self.blocks.get(bid))
+            .filter(|b| b.refs == 1)
+            .map(|b| b.bytes)
+            .sum()
+    }
+}
+
+/// FNV-1a over the K/V content plus the row geometry, so blocks only ever
+/// dedup against blocks whose `dense_kv` reads would be bit-identical.
+fn content_hash(k: &[f32], v: &[f32], batch: usize, hidden: usize) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut eat = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    eat(batch as u64);
+    eat(hidden as u64);
+    eat(k.len() as u64);
+    for &f in k {
+        eat(f.to_bits() as u64);
+    }
+    for &f in v {
+        eat(f.to_bits() as u64);
+    }
+    h
 }
 
 /// Shared paged KV pool; clone freely (Arc inside).  One per session.
@@ -156,32 +256,28 @@ impl KvPool {
     }
 
     /// Retarget the pool cap (elastic budget step).  Shrinking below the
-    /// currently held bytes evicts whole sequences LRU-first until the pool
-    /// fits the new cap (their owners fall back to full-prefix recompute —
-    /// degraded, never wrong); growing widens future reserve headroom.
-    /// Returns bytes freed.
+    /// currently held bytes evicts whole sequences until the pool fits the
+    /// new cap — refcount-aware LRU: sequences whose eviction actually
+    /// frees bytes go first (their owners fall back to full-prefix
+    /// recompute — degraded, never wrong); growing widens future reserve
+    /// headroom.  Returns bytes freed.
     pub fn set_kv_budget(&self, new_budget: Option<u64>) -> u64 {
         let mut freed = 0u64;
         loop {
-            let victim = {
-                let mut s = self.inner.lock().unwrap();
-                s.kv_budget = new_budget;
-                let Some(cap) = new_budget else { return freed };
-                if s.used <= cap {
-                    return freed;
-                }
-                s.seqs
-                    .iter()
-                    .filter(|(_, q)| q.valid && q.bytes > 0)
-                    .min_by_key(|(_, q)| q.last_use)
-                    .map(|(id, _)| *id)
-            };
-            let Some(vid) = victim else { return freed };
             let mut s = self.inner.lock().unwrap();
-            let Some(seq) = s.seqs.get_mut(&vid) else { continue };
-            let (b, blocks) = PoolState::strip(seq);
-            s.used -= b;
-            s.blocks -= blocks;
+            s.kv_budget = new_budget;
+            let Some(cap) = new_budget else { return freed };
+            if s.used <= cap {
+                return freed;
+            }
+            let victim = s
+                .seqs
+                .iter()
+                .filter(|(_, q)| q.valid && q.blocks.iter().any(|l| !l.is_empty()))
+                .min_by_key(|(_, q)| (s.freeable(q) == 0, q.last_use))
+                .map(|(id, _)| *id);
+            let Some(vid) = victim else { return freed };
+            let (b, blocks) = s.strip(vid);
             s.evicted_blocks += blocks;
             drop(s);
             if b > 0 {
@@ -201,21 +297,18 @@ impl KvPool {
     /// RAII handle.  `layers` is the number of body layers caching K/V.
     pub fn open_seq(&self, layers: usize, batch: usize, hidden: usize) -> KvSeq {
         let mut s = self.inner.lock().unwrap();
-        let id = s.next_id;
-        s.next_id += 1;
+        let id = s.next_seq;
+        s.next_seq += 1;
         s.clock += 1;
         let clock = s.clock;
         s.seqs.insert(
             id,
             SeqState {
-                k: vec![Vec::new(); layers],
-                v: vec![Vec::new(); layers],
+                blocks: vec![Vec::new(); layers],
                 batch,
                 hidden,
                 tokens: 0,
                 capacity: 0,
-                bytes: 0,
-                blocks: 0,
                 last_use: clock,
                 valid: true,
             },
@@ -223,13 +316,68 @@ impl KvPool {
         KvSeq { pool: self.clone(), id }
     }
 
+    /// Open a new sequence sharing `parent`'s committed, sealed prefix
+    /// blocks (each gains a reference; no bytes are charged).  The child
+    /// starts with `tokens` = the shared whole-block prefix and diverges
+    /// via copy-on-write the moment it writes into the shared region.
+    /// `None` if the parent is gone, evicted, or has no sealed prefix yet.
+    fn fork_from(&self, parent: u64) -> Option<KvSeq> {
+        let mut s = self.inner.lock().unwrap();
+        s.clock += 1;
+        let clock = s.clock;
+        let p = s.seqs.get(&parent)?;
+        if !p.valid || p.layers() == 0 {
+            return None;
+        }
+        let (batch, hidden, layers) = (p.batch, p.hidden, p.layers());
+        // sharable prefix: whole blocks inside the committed prefix that
+        // every layer has sealed (a COW may have unsealed one layer's copy)
+        let full = p.tokens / self.block_tokens;
+        let mut share = full;
+        for l in 0..layers {
+            let sealed = p.blocks[l]
+                .iter()
+                .take(full)
+                .take_while(|bid| s.blocks.get(bid).map(|b| b.hash.is_some()).unwrap_or(false))
+                .count();
+            share = share.min(sealed);
+        }
+        if share == 0 {
+            return None;
+        }
+        let lists: Vec<Vec<u64>> =
+            (0..layers).map(|l| p.blocks[l][..share].to_vec()).collect();
+        for bid in lists.iter().flatten() {
+            let b = s.blocks.get_mut(bid).unwrap();
+            b.refs += 1;
+            if b.refs == 2 {
+                s.shared_total += 1;
+            }
+        }
+        let id = s.next_seq;
+        s.next_seq += 1;
+        s.seqs.insert(
+            id,
+            SeqState {
+                blocks: lists,
+                batch,
+                hidden,
+                tokens: share * self.block_tokens,
+                capacity: share * self.block_tokens,
+                last_use: clock,
+                valid: true,
+            },
+        );
+        Some(KvSeq { pool: self.clone(), id })
+    }
+
     /// Grow a sequence's reserved capacity to at least `tokens` positions.
     /// Grants whole blocks across every layer, charged to the accountant
     /// (non-blocking) and the pool budget.  On budget pressure it first
-    /// evicts *other* sequences LRU-first.  `false` = could not reserve;
-    /// the sequence stays as it was (caller decodes uncached).
+    /// evicts *other* sequences (refcount-aware LRU).  `false` = could not
+    /// reserve; the sequence stays as it was (caller decodes uncached).
     fn reserve(&self, id: u64, tokens: usize) -> bool {
-        let (want, granted_blocks, new_capacity) = {
+        let (want, need_blocks, new_capacity, per_block, row) = {
             let mut s = self.inner.lock().unwrap();
             s.clock += 1;
             let clock = s.clock;
@@ -250,7 +398,7 @@ impl KvPool {
                     return false;
                 }
             }
-            (want, need_blocks as u64, new_capacity)
+            (want, need_blocks, new_capacity, per_block, seq.batch * seq.hidden)
         };
         // Take the grant outside the pool lock; under pressure, evict other
         // sequences first (never this one), then retry once.  Never block:
@@ -269,64 +417,217 @@ impl KvPool {
             self.accountant.free(want);
             return false;
         }
+        let elems = self.block_tokens * row;
+        let mut fresh: Vec<u64> = Vec::with_capacity(need_blocks);
+        for _ in 0..need_blocks {
+            let bid = s.next_block;
+            s.next_block += 1;
+            s.blocks.insert(
+                bid,
+                Block {
+                    k: vec![0.0; elems],
+                    v: vec![0.0; elems],
+                    refs: 1,
+                    bytes: per_block,
+                    hash: None,
+                },
+            );
+            fresh.push(bid);
+        }
+        let layers = s.seqs.get(&id).unwrap().layers();
+        let per_layer = if layers == 0 { 0 } else { need_blocks / layers };
         let seq = s.seqs.get_mut(&id).unwrap();
         seq.capacity = new_capacity;
-        seq.bytes += want;
-        seq.blocks += granted_blocks;
-        let cap_elems = new_capacity * seq.batch * seq.hidden;
-        for l in 0..seq.layers() {
-            seq.k[l].resize(cap_elems, 0.0);
-            seq.v[l].resize(cap_elems, 0.0);
+        let mut it = fresh.into_iter();
+        for l in 0..layers {
+            for _ in 0..per_layer {
+                seq.blocks[l].push(it.next().unwrap());
+            }
         }
         s.used += want;
-        s.blocks += granted_blocks;
-        s.allocated_blocks += granted_blocks;
+        s.held_blocks += need_blocks as u64;
+        s.allocated_blocks += need_blocks as u64;
         true
     }
 
+    /// Make `seq.blocks[layer][idx]` privately writable, copy-on-write if
+    /// it is currently shared.  A sealed private block is unsealed (its
+    /// dedup registration dropped) instead of copied.  Returns the block
+    /// id, or `None` when the COW grant failed — the caller strips the
+    /// sequence (degrade to recompute; never corrupt a peer).
+    fn writable_block(&self, s: &mut PoolState, id: u64, layer: usize, idx: usize) -> Option<u64> {
+        let seq = s.seqs.get(&id)?;
+        let bid = *seq.blocks.get(layer)?.get(idx)?;
+        let (refs, bytes, sealed) = {
+            let b = s.blocks.get(&bid)?;
+            (b.refs, b.bytes, b.hash.is_some())
+        };
+        if refs == 1 {
+            if sealed {
+                let b = s.blocks.get_mut(&bid).unwrap();
+                let h = b.hash.take().unwrap();
+                if s.by_hash.get(&h) == Some(&bid) {
+                    s.by_hash.remove(&h);
+                }
+            }
+            return Some(bid);
+        }
+        // shared: divergence needs a private copy, charged like any grant
+        if let Some(cap) = s.kv_budget {
+            if s.used + bytes > cap {
+                return None;
+            }
+        }
+        if !self.accountant.try_acquire(bytes) {
+            return None;
+        }
+        let (k, v) = {
+            let b = s.blocks.get(&bid).unwrap();
+            (b.k.clone(), b.v.clone())
+        };
+        let nid = s.next_block;
+        s.next_block += 1;
+        s.blocks.insert(nid, Block { k, v, refs: 1, bytes, hash: None });
+        s.used += bytes;
+        s.held_blocks += 1;
+        s.allocated_blocks += 1;
+        s.decref(bid); // refs >= 2, so this never frees
+        s.seqs.get_mut(&id).unwrap().blocks[layer][idx] = nid;
+        Some(nid)
+    }
+
     /// Write one token's K/V rows for one layer at position `pos`
-    /// (token-major rows: `batch * hidden` values each).  Silently ignored
+    /// (row-major rows: `batch * hidden` values each).  Silently ignored
     /// if the sequence was evicted mid-pass — the pass still completes,
-    /// only the cache write is lost.
+    /// only the cache write is lost.  A failed copy-on-write invalidates
+    /// the sequence (recompute fallback), never a peer.
     fn write_token(&self, id: u64, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
         let mut s = self.inner.lock().unwrap();
-        let Some(seq) = s.seqs.get_mut(&id) else { return };
+        let Some(seq) = s.seqs.get(&id) else { return };
         if !seq.valid || pos >= seq.capacity || layer >= seq.layers() {
             return;
         }
         let row = seq.batch * seq.hidden;
         debug_assert_eq!(k.len(), row);
         debug_assert_eq!(v.len(), row);
-        seq.k[layer][pos * row..(pos + 1) * row].copy_from_slice(k);
-        seq.v[layer][pos * row..(pos + 1) * row].copy_from_slice(v);
+        let idx = pos / self.block_tokens;
+        let off = pos % self.block_tokens;
+        match self.writable_block(&mut s, id, layer, idx) {
+            Some(bid) => {
+                let b = s.blocks.get_mut(&bid).unwrap();
+                b.k[off * row..(off + 1) * row].copy_from_slice(k);
+                b.v[off * row..(off + 1) * row].copy_from_slice(v);
+            }
+            None => {
+                let (freed, _) = s.strip(id);
+                drop(s);
+                if freed > 0 {
+                    self.accountant.free(freed);
+                }
+            }
+        }
     }
 
     /// Bulk-write positions `0..tokens` of one layer (the full-prefix
     /// prime).  `k`/`v` are token-major `[tokens][batch][hidden]`.
     fn write_prefix(&self, id: u64, layer: usize, tokens: usize, k: &[f32], v: &[f32]) {
         let mut s = self.inner.lock().unwrap();
-        let Some(seq) = s.seqs.get_mut(&id) else { return };
+        let Some(seq) = s.seqs.get(&id) else { return };
         if !seq.valid || tokens > seq.capacity || layer >= seq.layers() {
             return;
         }
-        let n = tokens * seq.batch * seq.hidden;
-        debug_assert_eq!(k.len(), n);
-        debug_assert_eq!(v.len(), n);
-        seq.k[layer][..n].copy_from_slice(k);
-        seq.v[layer][..n].copy_from_slice(v);
+        let row = seq.batch * seq.hidden;
+        debug_assert_eq!(k.len(), tokens * row);
+        debug_assert_eq!(v.len(), tokens * row);
+        let mut pos = 0usize;
+        while pos < tokens {
+            let idx = pos / self.block_tokens;
+            let take = (self.block_tokens - pos % self.block_tokens).min(tokens - pos);
+            match self.writable_block(&mut s, id, layer, idx) {
+                Some(bid) => {
+                    let off = pos % self.block_tokens;
+                    let b = s.blocks.get_mut(&bid).unwrap();
+                    b.k[off * row..(off + take) * row]
+                        .copy_from_slice(&k[pos * row..(pos + take) * row]);
+                    b.v[off * row..(off + take) * row]
+                        .copy_from_slice(&v[pos * row..(pos + take) * row]);
+                }
+                None => {
+                    let (freed, _) = s.strip(id);
+                    drop(s);
+                    if freed > 0 {
+                        self.accountant.free(freed);
+                    }
+                    return;
+                }
+            }
+            pos += take;
+        }
     }
 
     /// Commit the cached prefix length (only after a pass fully succeeds,
-    /// so a failed pass can never leave a half-written prefix readable).
+    /// so a failed pass can never leave a half-written prefix readable),
+    /// then seal + dedup every block the committed prefix fully covers:
+    /// an identical already-sealed block absorbs this sequence's reference
+    /// and the private copy's bytes go back to the budget.
     fn set_tokens(&self, id: u64, tokens: usize) {
         let mut s = self.inner.lock().unwrap();
         s.clock += 1;
         let clock = s.clock;
-        if let Some(seq) = s.seqs.get_mut(&id) {
-            if seq.valid && tokens <= seq.capacity {
-                seq.tokens = tokens;
-                seq.last_use = clock;
+        let Some(seq) = s.seqs.get_mut(&id) else { return };
+        if !seq.valid || tokens > seq.capacity {
+            return;
+        }
+        seq.tokens = tokens;
+        seq.last_use = clock;
+        let (batch, hidden, layers) = (seq.batch, seq.hidden, seq.layers());
+        let full = tokens / self.block_tokens;
+        let mut refund = 0u64;
+        for l in 0..layers {
+            for idx in 0..full.min(s.seqs.get(&id).unwrap().blocks[l].len()) {
+                let bid = s.seqs.get(&id).unwrap().blocks[l][idx];
+                let (sealed, refs) = {
+                    let b = s.blocks.get(&bid).unwrap();
+                    (b.hash.is_some(), b.refs)
+                };
+                if sealed {
+                    continue; // already sealed (shared or previously committed)
+                }
+                debug_assert_eq!(refs, 1, "unsealed blocks are private");
+                let h = {
+                    let b = s.blocks.get(&bid).unwrap();
+                    content_hash(&b.k, &b.v, batch, hidden)
+                };
+                let existing = s.by_hash.get(&h).copied().filter(|eid| {
+                    *eid != bid
+                        && s.blocks.get(eid).map(|e| {
+                            let mine = s.blocks.get(&bid).unwrap();
+                            e.hash == Some(h) && e.k == mine.k && e.v == mine.v
+                        }) == Some(true)
+                });
+                match existing {
+                    Some(eid) => {
+                        // content dedup: drop the private copy, ref the twin
+                        let b = s.decref(bid);
+                        refund += b;
+                        s.dedup_bytes += b;
+                        let e = s.blocks.get_mut(&eid).unwrap();
+                        e.refs += 1;
+                        if e.refs == 2 {
+                            s.shared_total += 1;
+                        }
+                        s.seqs.get_mut(&id).unwrap().blocks[l][idx] = eid;
+                    }
+                    None => {
+                        s.blocks.get_mut(&bid).unwrap().hash = Some(h);
+                        s.by_hash.insert(h, bid);
+                    }
+                }
             }
+        }
+        drop(s);
+        if refund > 0 {
+            self.accountant.free(refund);
         }
     }
 
@@ -344,11 +645,13 @@ impl KvPool {
         let mut dk = vec![0.0f32; b * seq_len * h];
         let mut dv = vec![0.0f32; b * seq_len * h];
         for tok in 0..t {
+            let block = s.blocks.get(&seq.blocks[layer][tok / self.block_tokens])?;
+            let off = tok % self.block_tokens;
             for row in 0..b {
-                let src = tok * b * h + row * h;
+                let src = off * b * h + row * h;
                 let dst = row * seq_len * h + tok * h;
-                dk[dst..dst + h].copy_from_slice(&seq.k[layer][src..src + h]);
-                dv[dst..dst + h].copy_from_slice(&seq.v[layer][src..src + h]);
+                dk[dst..dst + h].copy_from_slice(&block.k[src..src + h]);
+                dv[dst..dst + h].copy_from_slice(&block.v[src..src + h]);
             }
         }
         Some((dk, dv))
@@ -368,34 +671,34 @@ impl KvPool {
     /// `valid() == false` and recomputes).  Used on pass failure.
     fn invalidate(&self, id: u64) {
         let mut s = self.inner.lock().unwrap();
-        let Some(seq) = s.seqs.get_mut(&id) else { return };
-        let (bytes, blocks) = PoolState::strip(seq);
-        s.used -= bytes;
-        s.blocks -= blocks;
+        let (bytes, _) = s.strip(id);
         drop(s);
         if bytes > 0 {
             self.accountant.free(bytes);
         }
     }
 
-    /// Remove a sequence entirely, returning its blocks to the budget
-    /// (request completion/rejection; `KvSeq::drop` calls this).
+    /// Remove a sequence entirely, returning its block references
+    /// (request completion/rejection; `KvSeq::drop` calls this).  Bytes go
+    /// back to the budget when the last holder of each block lets go.
     fn release(&self, id: u64) {
         let mut s = self.inner.lock().unwrap();
-        let Some(mut seq) = s.seqs.remove(&id) else { return };
-        let (bytes, blocks) = PoolState::strip(&mut seq);
-        s.used -= bytes;
-        s.blocks -= blocks;
+        let (bytes, _) = s.strip(id);
+        s.seqs.remove(&id);
         drop(s);
         if bytes > 0 {
             self.accountant.free(bytes);
         }
     }
 
-    /// Evict LRU sequences (optionally sparing one) until either `bytes`
-    /// fit the accountant's budget or nothing is left.  Returns bytes
-    /// freed.  Evicted sequences keep a tombstone entry so their owners
-    /// observe the invalidation and fall back to full-prefix recompute.
+    /// Evict sequences (optionally sparing one) until either `bytes` fit
+    /// the accountant's budget or nothing is left.  Victim order is
+    /// refcount-aware LRU: sequences whose eviction actually frees bytes
+    /// first, least-recently-used within; all-shared sequences go last
+    /// (stripping them is what makes their peers' blocks freeable next
+    /// round, so the loop still terminates).  Returns bytes freed.
+    /// Evicted sequences keep a tombstone entry so their owners observe
+    /// the invalidation and fall back to full-prefix recompute.
     fn evict_lru_except(&self, spare: Option<u64>, bytes: u64) -> u64 {
         let mut freed = 0u64;
         loop {
@@ -406,14 +709,15 @@ impl KvPool {
             let victim = s
                 .seqs
                 .iter()
-                .filter(|(id, q)| q.valid && q.bytes > 0 && Some(**id) != spare)
-                .min_by_key(|(_, q)| q.last_use)
+                .filter(|(id, q)| {
+                    q.valid
+                        && q.blocks.iter().any(|l| !l.is_empty())
+                        && Some(**id) != spare
+                })
+                .min_by_key(|(_, q)| (s.freeable(q) == 0, q.last_use))
                 .map(|(id, _)| *id);
             let Some(vid) = victim else { break };
-            let seq = s.seqs.get_mut(&vid).unwrap();
-            let (b, blocks) = PoolState::strip(seq);
-            s.used -= b;
-            s.blocks -= blocks;
+            let (b, blocks) = s.strip(vid);
             s.evicted_blocks += blocks;
             drop(s);
             self.accountant.free(b);
@@ -422,7 +726,7 @@ impl KvPool {
         freed
     }
 
-    /// Strip every sequence's storage and return all blocks to the
+    /// Strip every sequence's storage and return all unique bytes to the
     /// accountant, keeping tombstones so owners observe the invalidation
     /// (failed-pass recovery: the session must release exactly its own
     /// bytes without guessing which sequences were mid-flight).  Returns
@@ -432,10 +736,7 @@ impl KvPool {
         let mut freed = 0u64;
         let ids: Vec<u64> = s.seqs.keys().copied().collect();
         for id in ids {
-            let seq = s.seqs.get_mut(&id).unwrap();
-            let (bytes, blocks) = PoolState::strip(seq);
-            s.used -= bytes;
-            s.blocks -= blocks;
+            let (bytes, _) = s.strip(id);
             freed += bytes;
         }
         drop(s);
@@ -447,14 +748,14 @@ impl KvPool {
 
     /// `S^stop` pressure valve (gate eviction target, like
     /// [`crate::pipeload::cache::LayerCache::evict_for`]): evict whole
-    /// sequences LRU-first until `bytes` fit this pool's accountant —
-    /// which is the same shared accountant the gate admits against, by
-    /// construction.  Returns bytes freed.
+    /// sequences refcount-aware-LRU-first until `bytes` fit this pool's
+    /// accountant — which is the same shared accountant the gate admits
+    /// against, by construction.  Returns bytes freed.
     pub fn evict_for(&self, bytes: u64) -> u64 {
         self.evict_lru_except(None, bytes)
     }
 
-    /// Bytes currently accounted by the pool.
+    /// Unique bytes currently accounted by the pool.
     pub fn used_bytes(&self) -> u64 {
         self.inner.lock().unwrap().used
     }
@@ -465,15 +766,19 @@ impl KvPool {
             allocated_blocks: s.allocated_blocks,
             evicted_blocks: s.evicted_blocks,
             pool_bytes: s.used,
-            pool_blocks: s.blocks,
+            pool_blocks: s.held_blocks,
             sequences: s.seqs.len(),
+            shared_blocks: s.blocks.values().filter(|b| b.refs > 1).count() as u64,
+            shared_total: s.shared_total,
+            dedup_bytes: s.dedup_bytes,
         }
     }
 }
 
-/// RAII handle to one sequence's cached K/V.  Dropping it frees every
-/// block back to the budget — the per-request lifecycle the Router relies
-/// on (blocks are gone when the ticket resolves, served or rejected).
+/// RAII handle to one sequence's cached K/V.  Dropping it releases every
+/// block reference — the per-request lifecycle the Router relies on
+/// (blocks are gone when the ticket resolves, served or rejected; a block
+/// shared with a live peer survives until its last holder drops).
 #[derive(Debug)]
 pub struct KvSeq {
     pool: KvPool,
@@ -511,6 +816,14 @@ impl KvSeq {
 
     pub fn dense_kv(&self, layer: usize, seq_len: usize) -> Option<(Vec<f32>, Vec<f32>)> {
         self.pool.dense_kv(self.id, layer, seq_len)
+    }
+
+    /// Open a sibling sequence sharing this one's committed, sealed
+    /// whole-block prefix (refcounted, zero extra bytes).  The sibling
+    /// copy-on-writes the moment it diverges.  `None` when there is no
+    /// sealed prefix to share.
+    pub fn fork(&self) -> Option<KvSeq> {
+        self.pool.fork_from(self.id)
     }
 
     /// Drop the cached data (kept registered, marked invalid).
@@ -678,5 +991,112 @@ mod tests {
         assert_eq!(seq.tokens(), 0);
         let (dk, _dv) = seq.dense_kv(0, 2).unwrap();
         assert_eq!(dk, vec![0.0; 8]);
+    }
+
+    // ---- prefix sharing -------------------------------------------------
+
+    /// Prime a 1-layer sequence with a deterministic 4-token prefix and
+    /// commit it (seals the block).
+    fn primed(p: &KvPool, tag: f32) -> KvSeq {
+        let seq = p.open_seq(1, 1, 8);
+        assert!(seq.reserve(4));
+        let k: Vec<f32> = (0..32).map(|i| tag + i as f32).collect();
+        let v: Vec<f32> = (0..32).map(|i| tag + 100.0 + i as f32).collect();
+        seq.write_prefix(0, 4, &k, &v);
+        seq.set_tokens(4);
+        seq
+    }
+
+    #[test]
+    fn identical_prefixes_dedup_to_one_charge() {
+        let (p, a) = pool(Some(100_000), None);
+        let s1 = primed(&p, 1.0);
+        assert_eq!(a.used(), 256);
+        let s2 = primed(&p, 1.0); // same content -> dedup at commit
+        assert_eq!(a.used(), 256, "shared block charged once");
+        assert_eq!(p.stats().shared_blocks, 1);
+        assert_eq!(p.stats().shared_total, 1);
+        assert_eq!(p.stats().dedup_bytes, 256);
+        assert_eq!(p.stats().pool_blocks, 1);
+        // both read the same content
+        assert_eq!(s1.dense_kv(0, 4).unwrap(), s2.dense_kv(0, 4).unwrap());
+        // different content never merges
+        let s3 = primed(&p, 9.0);
+        assert_eq!(a.used(), 512);
+        drop(s3);
+        // refcounts: first drop keeps the block, last drop frees it
+        drop(s1);
+        assert_eq!(a.used(), 256);
+        assert!(s2.valid());
+        assert_eq!(s2.dense_kv(0, 4).unwrap().0[0], 1.0);
+        drop(s2);
+        assert_eq!(a.used(), 0);
+        assert_eq!(p.stats().pool_blocks, 0);
+    }
+
+    #[test]
+    fn fork_shares_sealed_prefix_and_cow_diverges() {
+        let (p, a) = pool(Some(100_000), None);
+        let parent = primed(&p, 2.0);
+        assert_eq!(a.used(), 256);
+        let child = parent.fork().expect("sealed prefix forks");
+        assert_eq!(child.tokens(), 4);
+        assert_eq!(a.used(), 256, "fork charges nothing");
+        assert_eq!(p.stats().shared_blocks, 1);
+        assert_eq!(child.dense_kv(0, 4).unwrap(), parent.dense_kv(0, 4).unwrap());
+        // child writes into the shared region -> COW, one extra block
+        child.write_token(0, 0, &[77.0; 8], &[78.0; 8]);
+        child.set_tokens(4);
+        assert_eq!(a.used(), 512, "divergence pays for its own copy");
+        assert_eq!(child.dense_kv(0, 4).unwrap().0[0], 77.0);
+        assert_eq!(parent.dense_kv(0, 4).unwrap().0[0], 2.0, "parent untouched");
+        drop(child);
+        assert_eq!(a.used(), 256);
+        drop(parent);
+        assert_eq!(a.used(), 0);
+    }
+
+    #[test]
+    fn refcount_aware_eviction_prefers_freeing_victims() {
+        let (p, a) = pool(Some(100_000), None);
+        // oldest: shares its only block with `peer` (evicting it frees 0)
+        let oldest = primed(&p, 3.0);
+        let peer = primed(&p, 3.0);
+        // newest: private block (evicting it frees 256)
+        let newest = primed(&p, 4.0);
+        assert_eq!(a.used(), 512);
+        // force the accountant full so evict_for must reclaim 256
+        assert!(a.try_acquire(100_000 - 512));
+        let freed = p.evict_for(256);
+        assert_eq!(freed, 256, "the freeing victim was chosen");
+        assert!(!newest.valid(), "private-block holder evicted despite being newest");
+        assert!(oldest.valid() && peer.valid(), "all-shared sequences spared");
+        a.free(100_000 - 512);
+        drop(oldest);
+        drop(peer);
+        drop(newest);
+        assert_eq!(a.used(), 0);
+    }
+
+    #[test]
+    fn shared_block_survives_peer_eviction_and_recompute_rejoins() {
+        let (p, a) = pool(Some(100_000), None);
+        let s1 = primed(&p, 5.0);
+        let s2 = primed(&p, 5.0);
+        assert_eq!(p.stats().shared_blocks, 1);
+        // evict s1 wholesale (elastic shrink to 0 headroom)
+        s1.invalidate();
+        assert!(!s1.valid());
+        assert!(s2.valid(), "peer keeps the shared block");
+        assert_eq!(a.used(), 256);
+        assert_eq!(s2.dense_kv(0, 4).unwrap().0[0], 5.0);
+        // s1 recomputes its prefix and dedups right back onto the block
+        drop(s1);
+        let s3 = primed(&p, 5.0);
+        assert_eq!(a.used(), 256);
+        assert_eq!(p.stats().shared_blocks, 1);
+        drop(s2);
+        drop(s3);
+        assert_eq!(a.used(), 0);
     }
 }

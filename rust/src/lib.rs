@@ -31,6 +31,7 @@ pub mod planner;
 pub mod profiler;
 pub mod report;
 pub mod runtime;
+pub mod sched;
 pub mod server;
 pub mod signals;
 pub mod trace;

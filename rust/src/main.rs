@@ -352,8 +352,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "memory-trace", takes_value: true, default: None, help: "elastic budget for the SHARED accountant: JSON steps file, or 'shrink-grow' from --budget-mb (at_pass counts passes across all lanes)" });
     opts.push(Opt { name: "requests", takes_value: true, default: Some("16"), help: "requests to serve (synthetic workload mode)" });
     opts.push(Opt { name: "rps", takes_value: true, default: Some("0"), help: "mean arrival rate (0 = closed loop)" });
-    opts.push(Opt { name: "max-batch", takes_value: true, default: Some("4"), help: "max requests per batch" });
-    opts.push(Opt { name: "slo-ms", takes_value: true, default: Some("5000"), help: "p95 latency SLO" });
+    opts.push(Opt { name: "max-batch", takes_value: true, default: Some("4"), help: "max requests per batch (fixed-batch lanes)" });
+    opts.push(Opt { name: "slo-ms", takes_value: true, default: Some("5000"), help: "p95 latency SLO; with --continuous, also the per-lane SLO target driving overload shedding and slo_attained_pct (requests may override it over TCP)" });
+    opts.push(Opt { name: "continuous", takes_value: false, default: None, help: "continuous batching: requests join/leave the running decode at token boundaries instead of waiting out fixed batches (pipelined modes)" });
+    opts.push(Opt { name: "max-active", takes_value: true, default: None, help: "max requests decoding concurrently per lane (with --continuous; default 4; elastic budget shrinks scale it down)" });
     opts.push(Opt { name: "listen", takes_value: true, default: None, help: "serve a TCP front-end on this address (e.g. 127.0.0.1:7070; one JSON object per line; {\"op\":\"shutdown\"} stops it); --model may list several profiles, comma-separated" });
     opts.push(Opt { name: "concurrent", takes_value: false, default: None, help: "run lanes concurrently (one executor thread + engine per model, shared budget); --listen only" });
     opts.push(Opt { name: "lane-weights", takes_value: true, default: None, help: "comma-separated admission weights, one per model (with --concurrent; default all-equal)" });
@@ -390,6 +392,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                 kv_block_tokens: a.get("kv-block-tokens").map(|s| s.parse()).transpose()?,
                 prefetch_depth: a.usize("prefetch-depth")?,
                 device_cache: !a.flag("no-device-cache"),
+                continuous: a.flag("continuous"),
+                slo_ms: if a.flag("continuous") { Some(a.f64("slo-ms")?) } else { None },
+                max_active: a.get("max-active").map(|s| s.parse()).transpose()?,
                 disk: a.req("disk")?.to_string(),
                 seed: a.u64("seed")?,
                 ..RunConfig::default()
@@ -403,8 +408,11 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             let declared = opts.iter().find(|o| o.name == name).and_then(|o| o.default);
             a.get(name) != declared
         };
-        if non_default("requests") || non_default("rps") || non_default("slo-ms") {
-            eprintln!("hermes serve: --requests/--rps/--slo-ms drive the synthetic workload and are ignored with --listen");
+        if non_default("requests")
+            || non_default("rps")
+            || (non_default("slo-ms") && !a.flag("continuous"))
+        {
+            eprintln!("hermes serve: --requests/--rps drive the synthetic workload and are ignored with --listen (--slo-ms is honored with --continuous)");
         }
         let lane_weights = a
             .get("lane-weights")
@@ -446,6 +454,19 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             println!("  peak mem: {}{}", human_bytes(s.peak_bytes), s.budget_bytes.map(|b| format!("  (budget {})", human_bytes(b))).unwrap_or_default());
             if s.budget_steps > 0 {
                 println!("  elastic:  {} budget steps, {} evictions, {} re-plans", s.budget_steps, s.elastic_evictions, s.replans);
+            }
+            if s.joins + s.leaves + s.shed_overload > 0 {
+                println!(
+                    "  continuous: {} joins / {} leaves / {} shed  (SLO attained {:.1}%, {:.2} tok/s)",
+                    s.joins, s.leaves, s.shed_overload, s.slo_attained_pct, s.tokens_per_sec
+                );
+            }
+            if s.shared_kv_blocks + s.kv_dedup_bytes > 0 {
+                println!(
+                    "  kv sharing: {} shared blocks, {} deduplicated",
+                    s.shared_kv_blocks,
+                    human_bytes(s.kv_dedup_bytes)
+                );
             }
             for m in &s.per_model {
                 println!("  [{}] served {} / rejected {} in {} batches, p95 {}", m.profile, m.served, m.rejected, m.batches, human_ms(m.latency.p95()));
@@ -503,6 +524,19 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         println!(
             "  elastic:   {} budget steps, {} evictions, {} re-plans",
             s.budget_steps, s.elastic_evictions, s.replans
+        );
+    }
+    if s.joins + s.leaves + s.shed_overload > 0 {
+        println!(
+            "  continuous: {} joins / {} leaves / {} shed  (SLO attained {:.1}%, {:.2} tok/s)",
+            s.joins, s.leaves, s.shed_overload, s.slo_attained_pct, s.tokens_per_sec
+        );
+    }
+    if s.shared_kv_blocks + s.kv_dedup_bytes > 0 {
+        println!(
+            "  kv sharing: {} shared blocks, {} deduplicated",
+            s.shared_kv_blocks,
+            human_bytes(s.kv_dedup_bytes)
         );
     }
     println!("  SLO p95 <= {}: {}", human_ms(s.slo.target_ms), if s.slo.met { "MET" } else { "MISSED" });

@@ -107,6 +107,12 @@ pub struct RunReport {
     pub kv_recomputes: u64,
     /// KV cache: blocks reclaimed under `S^stop` pressure during this run
     pub kv_evicted_blocks: u64,
+    /// KV prefix sharing: cross-request share events during this run
+    /// (a block's refcount climbing past 1 via dedup or fork)
+    pub shared_kv_blocks: u64,
+    /// KV prefix sharing: bytes the accountant did NOT charge because an
+    /// identical prefix block already existed (cumulative over the run)
+    pub kv_dedup_bytes: u64,
     /// elastic controller: budget steps applied during this run
     pub budget_steps: u64,
     /// elastic controller: pins + KV blocks evicted by budget shrinks
@@ -157,6 +163,8 @@ impl RunReport {
             .set("kv_inc_passes", self.kv_inc_passes)
             .set("kv_recomputes", self.kv_recomputes)
             .set("kv_evicted_blocks", self.kv_evicted_blocks)
+            .set("shared_kv_blocks", self.shared_kv_blocks)
+            .set("kv_dedup_bytes", self.kv_dedup_bytes)
             .set("budget_steps", self.budget_steps)
             .set("elastic_evictions", self.elastic_evictions)
             .set("replans", self.replans)
@@ -307,6 +315,8 @@ mod tests {
             kv_inc_passes: 0,
             kv_recomputes: 0,
             kv_evicted_blocks: 0,
+            shared_kv_blocks: 0,
+            kv_dedup_bytes: 0,
             budget_steps: 0,
             elastic_evictions: 0,
             replans: 0,

@@ -233,6 +233,15 @@ fn parse_reports(v: &Value) -> Result<Vec<RunReport>> {
                     .get("kv_evicted_blocks")
                     .and_then(|v| v.as_f64().ok())
                     .unwrap_or(0.0) as u64,
+                // absent in caches written before KV prefix sharing
+                shared_kv_blocks: r
+                    .get("shared_kv_blocks")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0) as u64,
+                kv_dedup_bytes: r
+                    .get("kv_dedup_bytes")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0) as u64,
                 // absent in caches written before the elastic controller
                 budget_steps: r.get("budget_steps").and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
                     as u64,
@@ -432,6 +441,8 @@ mod tests {
             kv_inc_passes: 0,
             kv_recomputes: 0,
             kv_evicted_blocks: 0,
+            shared_kv_blocks: 0,
+            kv_dedup_bytes: 0,
             budget_steps: 0,
             elastic_evictions: 0,
             replans: 0,

@@ -1,0 +1,450 @@
+//! Iteration-level scheduling: continuous batching for serving lanes.
+//!
+//! The fixed-batch serving path (PR 2) freezes a batch at admission and
+//! holds every slot until the whole batch drains — a finished row idles
+//! its slot, and a request arriving one token after a batch started waits
+//! a full decode.  This module is the vLLM-style alternative
+//! (Orca's iteration-level scheduling): the lane re-forms its active set
+//! at **every token boundary**, so requests join a running decode with
+//! one prefix (prime) pass and leave the moment their last token lands.
+//!
+//! * a [`BatchComposer`] owns a lane's pending queue and admission
+//!   policy.  Admission upgrades from pure EDF to **deadline-aware
+//!   weighted-fair**: within a lane candidates are still picked
+//!   earliest-deadline-first, across lanes a [`FairClock`] serves the
+//!   smallest weighted virtual time (`vtime += 1/weight` per served
+//!   iteration), so a heavy lane cannot starve a light one no matter how
+//!   deep its backlog;
+//! * per-lane **SLO targets** (`--slo-ms`, overridable per request over
+//!   the TCP protocol) drive **explicit overload shedding**: a request
+//!   whose queue wait alone already exceeds its target is rejected at its
+//!   admission attempt (`shed_overload`) instead of wasting a slot it is
+//!   guaranteed to miss with; expired deadlines are swept from the whole
+//!   queue at every wake-up, not just the head;
+//! * the composer never touches the engine: the serving loop owns the
+//!   per-request decode states ([`crate::engine::DecodeState`]) and the
+//!   KV blocks; the composer decides *who* runs this iteration and keeps
+//!   the `joins` / `leaves` / `shed_overload` / `slo_attained_pct`
+//!   ledger that flows into `RouterSummary` / `ServeSummary` /
+//!   `serve --json`.
+//!
+//! Elastic coupling: budget shrinks call
+//! [`BatchComposer::set_max_active`] with [`scaled_active_cap`] **before**
+//! the eviction chain runs — fewer future joiners is the cheap lever, so
+//! shared KV blocks are only evicted for pressure the smaller active set
+//! still generates.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Active-set cap when `--max-active` is not given.
+pub const DEFAULT_MAX_ACTIVE: usize = 4;
+
+/// Admission policy knobs for one lane.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// hard cap on requests decoding concurrently in this lane
+    pub max_active: usize,
+    /// per-lane SLO target (ms, end-to-end); a request may override it.
+    /// `None` = no target: nothing is shed, `slo_attained_pct` is vacuous.
+    pub slo_ms: Option<f64>,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig { max_active: DEFAULT_MAX_ACTIVE, slo_ms: None }
+    }
+}
+
+/// Why the composer dropped a pending request instead of admitting it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropReason {
+    /// the request's hard deadline passed while it was queued
+    Expired,
+    /// queue wait alone already exceeds the request's SLO target —
+    /// serving it would burn a slot on a guaranteed miss (overload)
+    Overload,
+}
+
+/// One queued request: admission metadata plus the caller's payload
+/// (the serving loops carry their `PendingReq` here).
+#[derive(Debug)]
+pub struct Entry<T> {
+    pub enqueued: Instant,
+    pub deadline: Option<Instant>,
+    /// per-request SLO override (TCP `slo_ms` field); `None` = lane target
+    pub slo_ms: Option<f64>,
+    pub payload: T,
+}
+
+impl<T> Entry<T> {
+    fn effective_slo(&self, lane: Option<f64>) -> Option<f64> {
+        self.slo_ms.or(lane)
+    }
+}
+
+/// Composer counters (per lane; summed into the router summary).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SchedStats {
+    /// requests admitted into a running decode
+    pub joins: u64,
+    /// requests retired from the active set (served or failed)
+    pub leaves: u64,
+    /// requests shed at admission because their SLO was already blown
+    pub shed_overload: u64,
+    /// token-boundary iterations the lane ran
+    pub iterations: u64,
+    /// served requests that finished within their effective SLO target
+    pub slo_met: u64,
+    /// served requests that had an effective SLO target at all
+    pub slo_counted: u64,
+}
+
+impl SchedStats {
+    /// Percentage of SLO-targeted requests that met their target
+    /// (100.0 when nothing carried a target — vacuously attained).
+    pub fn slo_attained_pct(&self) -> f64 {
+        if self.slo_counted == 0 {
+            100.0
+        } else {
+            self.slo_met as f64 / self.slo_counted as f64 * 100.0
+        }
+    }
+
+    pub fn merge(&mut self, other: &SchedStats) {
+        self.joins += other.joins;
+        self.leaves += other.leaves;
+        self.shed_overload += other.shed_overload;
+        self.iterations += other.iterations;
+        self.slo_met += other.slo_met;
+        self.slo_counted += other.slo_counted;
+    }
+}
+
+/// Iteration-level admission for one lane: a pending queue with EDF pick
+/// order, whole-queue deadline sweeps, SLO-blown shedding, and a runtime
+/// active-set cap the elastic controller can shrink mid-flight.
+#[derive(Debug)]
+pub struct BatchComposer<T> {
+    cfg: SchedConfig,
+    /// runtime cap; starts at `cfg.max_active`, elastic steps move it
+    max_active: usize,
+    pending: VecDeque<Entry<T>>,
+    stats: SchedStats,
+}
+
+impl<T> BatchComposer<T> {
+    pub fn new(cfg: SchedConfig) -> BatchComposer<T> {
+        let max_active = cfg.max_active.max(1);
+        BatchComposer { cfg, max_active, pending: VecDeque::new(), stats: SchedStats::default() }
+    }
+
+    pub fn push(&mut self, entry: Entry<T>) {
+        self.pending.push_back(entry);
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Earliest hard deadline among pending requests (fill-window bound).
+    pub fn earliest_deadline(&self) -> Option<Instant> {
+        self.pending.iter().filter_map(|e| e.deadline).min()
+    }
+
+    /// Remove every pending request whose deadline has passed — the whole
+    /// queue, not just the head, so an expired request parked behind a
+    /// live head stops distorting fill windows and queue-wait stats.
+    pub fn sweep_expired(&mut self, now: Instant) -> Vec<Entry<T>> {
+        let mut expired = Vec::new();
+        let mut keep = VecDeque::with_capacity(self.pending.len());
+        for e in self.pending.drain(..) {
+            if e.deadline.map(|d| d <= now).unwrap_or(false) {
+                expired.push(e);
+            } else {
+                keep.push_back(e);
+            }
+        }
+        self.pending = keep;
+        expired
+    }
+
+    /// EDF index into `pending`: earliest deadline first, deadline-less
+    /// requests after all deadlined ones, FIFO within a class.
+    fn edf_best(&self) -> Option<usize> {
+        self.pending
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| (e.deadline.is_none(), e.deadline, e.enqueued))
+            .map(|(i, _)| i)
+    }
+
+    /// Fill free active slots at a token boundary.  Returns
+    /// `(joins, drops)`: joiners to prime into the running batch, and
+    /// requests dropped with the reason (expired deadline, or SLO already
+    /// blown while queued — explicit overload shedding).
+    pub fn admit(
+        &mut self,
+        now: Instant,
+        active: usize,
+    ) -> (Vec<Entry<T>>, Vec<(Entry<T>, DropReason)>) {
+        let mut joins = Vec::new();
+        let mut drops = Vec::new();
+        while active + joins.len() < self.max_active {
+            let Some(i) = self.edf_best() else { break };
+            let e = self.pending.remove(i).unwrap();
+            if e.deadline.map(|d| d <= now).unwrap_or(false) {
+                drops.push((e, DropReason::Expired));
+                continue;
+            }
+            if let Some(target) = e.effective_slo(self.cfg.slo_ms) {
+                let waited_ms = now.duration_since(e.enqueued).as_secs_f64() * 1000.0;
+                if waited_ms > target {
+                    self.stats.shed_overload += 1;
+                    drops.push((e, DropReason::Overload));
+                    continue;
+                }
+            }
+            self.stats.joins += 1;
+            joins.push(e);
+        }
+        (joins, drops)
+    }
+
+    /// A joiner failed to start (prime pass error): take its join back so
+    /// the ledger only counts requests that actually entered the batch.
+    pub fn unjoin(&mut self) {
+        self.stats.joins = self.stats.joins.saturating_sub(1);
+    }
+
+    /// Record one token-boundary iteration served.
+    pub fn note_iteration(&mut self) {
+        self.stats.iterations += 1;
+    }
+
+    /// Retire an active request.  `ok` = it completed (SLO attainment is
+    /// only scored for served requests; failures just leave).
+    pub fn retire(&mut self, enqueued: Instant, slo_ms: Option<f64>, now: Instant, ok: bool) {
+        self.stats.leaves += 1;
+        if !ok {
+            return;
+        }
+        if let Some(target) = slo_ms.or(self.cfg.slo_ms) {
+            self.stats.slo_counted += 1;
+            let total_ms = now.duration_since(enqueued).as_secs_f64() * 1000.0;
+            if total_ms <= target {
+                self.stats.slo_met += 1;
+            }
+        }
+    }
+
+    /// The elastic lever: shrink (or restore) the active-set cap.  Takes
+    /// effect at the next admission — running requests finish.
+    pub fn set_max_active(&mut self, cap: usize) {
+        self.max_active = cap.max(1);
+    }
+
+    pub fn max_active(&self) -> usize {
+        self.max_active
+    }
+
+    pub fn lane_slo_ms(&self) -> Option<f64> {
+        self.cfg.slo_ms
+    }
+
+    pub fn stats(&self) -> SchedStats {
+        self.stats
+    }
+}
+
+/// Budget-proportional active-cap scaling (floor 1): the elastic shrink
+/// lever applied BEFORE the KV eviction chain, so admission pressure
+/// drops first and shared blocks are only reclaimed for pressure the
+/// smaller active set still generates.  A grow restores the original cap.
+pub fn scaled_active_cap(orig_cap: usize, orig_budget: u64, new_budget: u64) -> usize {
+    if orig_budget == 0 || new_budget >= orig_budget {
+        return orig_cap.max(1);
+    }
+    ((orig_cap as u128 * new_budget as u128 / orig_budget as u128) as usize).max(1)
+}
+
+/// Start-time weighted fair queuing over lanes: each served iteration
+/// charges `1/weight`, [`FairClock::pick`] serves the smallest virtual
+/// time among runnable lanes.  An idle lane's clock is lifted to the
+/// system's virtual time when it is next served, so sleeping never banks
+/// an unbounded burst.
+#[derive(Debug)]
+pub struct FairClock {
+    weights: Vec<f64>,
+    vtime: Vec<f64>,
+    /// system virtual time: the start tag of the last service
+    base: f64,
+}
+
+impl FairClock {
+    pub fn new(weights: &[f64]) -> FairClock {
+        let weights: Vec<f64> =
+            weights.iter().map(|w| if w.is_finite() && *w > 0.0 { *w } else { 1.0 }).collect();
+        let n = weights.len();
+        FairClock { weights, vtime: vec![0.0; n], base: 0.0 }
+    }
+
+    /// The runnable lane with the smallest virtual time (ties: lowest
+    /// index).  `None` when nothing is runnable.
+    pub fn pick(&self, runnable: &[bool]) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for i in 0..self.vtime.len().min(runnable.len()) {
+            if !runnable[i] {
+                continue;
+            }
+            if best.map(|b| self.vtime[i] < self.vtime[b]).unwrap_or(true) {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Charge one served iteration to `lane`.
+    pub fn charge(&mut self, lane: usize) {
+        if lane >= self.vtime.len() {
+            return;
+        }
+        let start = self.vtime[lane].max(self.base);
+        self.base = start;
+        self.vtime[lane] = start + 1.0 / self.weights[lane];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn entry(age_ms: u64, deadline_in_ms: Option<i64>, slo: Option<f64>) -> Entry<u32> {
+        let now = Instant::now();
+        Entry {
+            enqueued: now - Duration::from_millis(age_ms),
+            deadline: deadline_in_ms.map(|d| {
+                if d >= 0 {
+                    now + Duration::from_millis(d as u64)
+                } else {
+                    now - Duration::from_millis((-d) as u64)
+                }
+            }),
+            slo_ms: slo,
+            payload: 0,
+        }
+    }
+
+    #[test]
+    fn admit_fills_slots_edf_first() {
+        let mut c: BatchComposer<u32> =
+            BatchComposer::new(SchedConfig { max_active: 2, slo_ms: None });
+        c.push(entry(0, None, None));
+        c.push(entry(0, Some(50), None));
+        c.push(entry(0, Some(10), None));
+        let (joins, drops) = c.admit(Instant::now(), 0);
+        assert_eq!(joins.len(), 2);
+        assert!(drops.is_empty());
+        // tightest deadline admitted first, deadline-less request left queued
+        assert!(joins[0].deadline < joins[1].deadline);
+        assert_eq!(c.pending_len(), 1);
+        assert_eq!(c.stats().joins, 2);
+        // no free slot: nothing admitted
+        let (joins, _) = c.admit(Instant::now(), 2);
+        assert!(joins.is_empty());
+    }
+
+    #[test]
+    fn whole_queue_deadline_sweep() {
+        let mut c: BatchComposer<u32> = BatchComposer::new(SchedConfig::default());
+        c.push(entry(0, Some(100), None)); // live head
+        c.push(entry(5, Some(-1), None)); // expired BEHIND the head
+        c.push(entry(0, None, None));
+        let swept = c.sweep_expired(Instant::now());
+        assert_eq!(swept.len(), 1, "expired entry behind a live head is swept");
+        assert_eq!(c.pending_len(), 2);
+    }
+
+    #[test]
+    fn slo_blown_requests_are_shed_at_admission() {
+        let mut c: BatchComposer<u32> =
+            BatchComposer::new(SchedConfig { max_active: 4, slo_ms: Some(20.0) });
+        c.push(entry(50, None, None)); // waited 50 ms > 20 ms lane SLO
+        c.push(entry(0, None, None)); // fresh
+        c.push(entry(50, None, Some(500.0))); // per-request override is lax
+        let (joins, drops) = c.admit(Instant::now(), 0);
+        assert_eq!(joins.len(), 2);
+        assert_eq!(drops.len(), 1);
+        assert_eq!(drops[0].1, DropReason::Overload);
+        assert_eq!(c.stats().shed_overload, 1);
+    }
+
+    #[test]
+    fn retire_scores_slo_attainment() {
+        let mut c: BatchComposer<u32> =
+            BatchComposer::new(SchedConfig { max_active: 4, slo_ms: Some(100.0) });
+        let now = Instant::now();
+        c.retire(now - Duration::from_millis(10), None, now, true); // met
+        c.retire(now - Duration::from_millis(500), None, now, true); // missed
+        c.retire(now - Duration::from_millis(1), None, now, false); // failed: not scored
+        c.retire(now - Duration::from_millis(1), Some(0.001), now, true); // override missed
+        let s = c.stats();
+        assert_eq!(s.leaves, 4);
+        assert_eq!(s.slo_counted, 3);
+        assert_eq!(s.slo_met, 1);
+        assert!((s.slo_attained_pct() - 100.0 / 3.0).abs() < 1e-9);
+        // no targets anywhere -> vacuous 100%
+        assert_eq!(SchedStats::default().slo_attained_pct(), 100.0);
+    }
+
+    #[test]
+    fn elastic_cap_scaling() {
+        assert_eq!(scaled_active_cap(8, 1000, 500), 4);
+        assert_eq!(scaled_active_cap(8, 1000, 1), 1, "floor is 1, never 0");
+        assert_eq!(scaled_active_cap(8, 1000, 2000), 8, "grow restores, never exceeds");
+        assert_eq!(scaled_active_cap(8, 0, 0), 8, "degenerate budgets change nothing");
+        let mut c: BatchComposer<u32> =
+            BatchComposer::new(SchedConfig { max_active: 8, slo_ms: None });
+        c.set_max_active(scaled_active_cap(8, 1000, 250));
+        assert_eq!(c.max_active(), 2);
+        for _ in 0..8 {
+            c.push(entry(0, None, None));
+        }
+        let (joins, _) = c.admit(Instant::now(), 0);
+        assert_eq!(joins.len(), 2, "shrunk cap admits fewer joiners");
+    }
+
+    #[test]
+    fn fair_clock_weighted_shares() {
+        let mut f = FairClock::new(&[2.0, 1.0]);
+        let mut served = [0usize; 2];
+        for _ in 0..30 {
+            let lane = f.pick(&[true, true]).unwrap();
+            served[lane] += 1;
+            f.charge(lane);
+        }
+        assert_eq!(served[0], 20, "2:1 weights serve 2:1");
+        assert_eq!(served[1], 10);
+        // an idle lane must not bank service while asleep
+        let mut f = FairClock::new(&[1.0, 1.0]);
+        for _ in 0..100 {
+            let lane = f.pick(&[true, false]).unwrap();
+            assert_eq!(lane, 0);
+            f.charge(lane);
+        }
+        let mut burst = 0;
+        for _ in 0..10 {
+            let lane = f.pick(&[true, true]).unwrap();
+            f.charge(lane);
+            if lane == 1 {
+                burst += 1;
+            }
+        }
+        assert!(burst <= 6, "woken lane catches up, it does not monopolize: {burst}");
+    }
+}

@@ -46,10 +46,14 @@ use super::router::{
 };
 use crate::config::{Mode, Paths, RunConfig};
 use crate::elastic::BudgetController;
-use crate::engine::{Engine, Session};
+use crate::engine::{DecodeState, Engine, Session};
 use crate::kvcache::KvPool;
 use crate::memory::MemoryAccountant;
 use crate::metrics::LatencyRecorder;
+use crate::sched::{
+    scaled_active_cap, BatchComposer, DropReason, Entry, SchedConfig, SchedStats,
+    DEFAULT_MAX_ACTIVE,
+};
 use crate::pipeload::cache::LayerCache;
 use crate::pipeload::device::DeviceLedger;
 use crate::pipeload::gate::{OrderedGate, ReclaimToken};
@@ -314,6 +318,10 @@ struct LaneOutcome {
     batches: usize,
     batch_sizes: usize,
     peak: u64,
+    /// generated tokens across everything this lane served
+    tokens: u64,
+    /// continuous-batching ledger (zero for fixed-batch lanes)
+    sched: SchedStats,
     latency: LatencyRecorder,
     queue_wait: LatencyRecorder,
     first_error: Option<String>,
@@ -330,6 +338,8 @@ impl LaneOutcome {
             batches: 0,
             batch_sizes: 0,
             peak: 0,
+            tokens: 0,
+            sched: SchedStats::default(),
             latency: LatencyRecorder::new(),
             queue_wait: LatencyRecorder::new(),
             first_error: None,
@@ -643,6 +653,8 @@ impl ConcurrentRouter {
         let (mut elastic_ev, mut replans) = (0u64, 0u64);
         let (mut prefetched, mut pf_wasted) = (0u64, 0u64);
         let (mut dev_hits, mut spawns_avoided) = (0u64, 0u64);
+        let (mut shared_blocks, mut dedup_bytes, mut total_tokens) = (0u64, 0u64, 0u64);
+        let mut sched_total = SchedStats::default();
         let mut first_error: Option<String> = None;
         let mut per_model: Vec<ModelStats> = Vec::with_capacity(n);
         for o in outcomes {
@@ -651,6 +663,8 @@ impl ConcurrentRouter {
             total_batches += o.batches;
             batch_sizes += o.batch_sizes;
             peak = peak.max(o.peak);
+            total_tokens += o.tokens;
+            sched_total.merge(&o.sched);
             for &ms in o.latency.samples_ms() {
                 latency.record_ms(ms);
             }
@@ -672,6 +686,8 @@ impl ConcurrentRouter {
                 pf_wasted += m.prefetch_wasted;
                 dev_hits += m.device_cache_hits;
                 spawns_avoided += m.spawns_avoided;
+                shared_blocks += m.shared_kv_blocks;
+                dedup_bytes += m.kv_dedup_bytes;
                 per_model.push(m);
             }
         }
@@ -696,6 +712,13 @@ impl ConcurrentRouter {
             prefetch_wasted: pf_wasted,
             device_cache_hits: dev_hits,
             spawns_avoided,
+            joins: sched_total.joins,
+            leaves: sched_total.leaves,
+            shed_overload: sched_total.shed_overload,
+            slo_attained_pct: sched_total.slo_attained_pct(),
+            shared_kv_blocks: shared_blocks,
+            kv_dedup_bytes: dedup_bytes,
+            tokens_per_sec: total_tokens as f64 / wall.max(1e-9),
             queue_wait_p50_ms: queue_wait.p50(),
             queue_wait_p95_ms: queue_wait.p95(),
             concurrent_passes_peak: governor.peak() as u64,
@@ -771,17 +794,21 @@ fn lane_main(
     drop(ready_tx);
 
     let mut out = out;
-    lane_serve(
-        &mut session,
-        idx,
-        &profile,
-        &rx,
-        &governor,
-        &fleet,
-        max_batch,
-        batch_window,
-        &mut out,
-    );
+    if run.continuous {
+        lane_serve_continuous(&mut session, idx, &profile, &run, &rx, &governor, &fleet, &mut out);
+    } else {
+        lane_serve(
+            &mut session,
+            idx,
+            &profile,
+            &rx,
+            &governor,
+            &fleet,
+            max_batch,
+            batch_window,
+            &mut out,
+        );
+    }
 
     // per-lane counters, harvested on the thread that owns the session
     let cs = session.cache_stats();
@@ -809,6 +836,12 @@ fn lane_main(
         prefetch_wasted: pf.wasted,
         device_cache_hits: dev.hits,
         spawns_avoided: pool_stats.spawns_avoided(),
+        joins: out.sched.joins,
+        leaves: out.sched.leaves,
+        shed_overload: out.sched.shed_overload,
+        slo_attained_pct: out.sched.slo_attained_pct(),
+        shared_kv_blocks: kvp.shared_total,
+        kv_dedup_bytes: kvp.dedup_bytes,
     });
     out
 }
@@ -902,6 +935,13 @@ fn lane_serve(
                     }
                 }
             }
+        }
+        // wake-up sweep (whole queue, not just the admission pops below):
+        // an expired request parked behind a live head is rejected promptly
+        // instead of distorting fill windows and queue-wait percentiles
+        sweep_expired_queue(&mut queue, profile, out);
+        if queue.is_empty() {
+            continue;
         }
         if open && queue.len() < cap {
             // never wait past a queued request's deadline
@@ -1023,6 +1063,7 @@ fn lane_serve(
                     let latency = p.enqueued.elapsed();
                     out.latency.record(latency);
                     out.served += 1;
+                    out.tokens += report.tokens as u64;
                     let _ = p.reply.send(InferResponse {
                         id: p.id,
                         profile: profile.to_string(),
@@ -1054,6 +1095,292 @@ fn lane_serve(
         }
         fleet.after_batch(session.passes_run().saturating_sub(passes_before));
     }
+}
+
+/// Reject every queued request whose deadline has already passed — the
+/// WHOLE queue, not just the head (same sweep the serialized router and
+/// the composer run at their wake-ups).
+fn sweep_expired_queue(queue: &mut VecDeque<PendingReq>, profile: &str, out: &mut LaneOutcome) {
+    let now = Instant::now();
+    let mut kept: VecDeque<PendingReq> = VecDeque::with_capacity(queue.len());
+    for p in queue.drain(..) {
+        if p.deadline.map(|d| d <= now).unwrap_or(false) {
+            out.rejected += 1;
+            let _ = p.reply.send(InferResponse::rejected(
+                p.id,
+                profile,
+                p.enqueued,
+                "deadline exceeded before admission",
+            ));
+        } else {
+            kept.push_back(p);
+        }
+    }
+    *queue = kept;
+}
+
+/// One request resident in a continuous lane's active set.
+struct LaneActive {
+    id: u64,
+    enqueued: Instant,
+    slo_ms: Option<f64>,
+    batch_hint: usize,
+    batch: usize,
+    reply: mpsc::Sender<InferResponse>,
+    st: DecodeState,
+}
+
+/// Handle a control message at a token boundary of a continuous lane;
+/// false = Quit (drain and exit).  Mirrors [`handle_ctl`] except requests
+/// land in the composer's pending queue and a budget step shrinks the
+/// active-set cap FIRST — fewer future joiners is the cheap lever, so the
+/// eviction chain only reclaims shared KV blocks for pressure the smaller
+/// active set still generates (the serialized router orders it the same).
+fn handle_ctl_continuous(
+    session: &mut Session<'_>,
+    msg: LaneMsg,
+    composer: &mut BatchComposer<PendingReq>,
+    orig_max_active: usize,
+    orig_budget: Option<u64>,
+) -> bool {
+    match msg {
+        LaneMsg::Req(p) => {
+            composer.push(Entry {
+                enqueued: p.enqueued,
+                deadline: p.deadline,
+                slo_ms: p.req.slo_ms,
+                payload: p,
+            });
+            true
+        }
+        LaneMsg::Budget { budget, kv_cap, agents } => {
+            if let Some(orig) = orig_budget {
+                composer.set_max_active(scaled_active_cap(orig_max_active, orig, budget));
+            }
+            match kv_cap {
+                Some(_) => {
+                    session.apply_budget_with_kv(budget, kv_cap);
+                }
+                None => {
+                    session.apply_budget(budget);
+                }
+            }
+            if let Some(a) = agents {
+                session.set_agents(a);
+            }
+            true
+        }
+        LaneMsg::Quit => false,
+    }
+}
+
+/// The continuous-batching per-lane serving loop: the lane re-forms its
+/// active set at every token boundary through a [`BatchComposer`] —
+/// joiners prime with one prefix pass ([`Session::begin_decode`] + first
+/// [`Session::decode_step`]), every active request advances one token per
+/// iteration, finished rows retire immediately and free their KV blocks.
+/// Each iteration is governor-gated, so concurrent lanes share the device
+/// under the same weighted-fair clock as fixed-batch lanes, and the fleet
+/// elastic hook still counts engine passes across lanes.
+///
+/// Tokens stay bit-identical to the fixed path by construction: each
+/// request decodes at its own fixed-path batch size and seed
+/// (`cfg.seed + lane_batches` — the composer admits in EDF order, and the
+/// lane counts a batch per admission), so interleaving only moves *when*
+/// a request's passes run, never what they compute.
+#[allow(clippy::too_many_arguments)]
+fn lane_serve_continuous(
+    session: &mut Session<'_>,
+    lane_idx: usize,
+    profile: &str,
+    run: &RunConfig,
+    rx: &mpsc::Receiver<LaneMsg>,
+    governor: &LaneGovernor,
+    fleet: &FleetElastic,
+    out: &mut LaneOutcome,
+) {
+    let avail = session.profile().batches.clone();
+    let largest_avail = avail.iter().copied().max().unwrap_or(1);
+    let orig_max_active = run.max_active.unwrap_or(DEFAULT_MAX_ACTIVE).max(1);
+    let mut composer: BatchComposer<PendingReq> =
+        BatchComposer::new(SchedConfig { max_active: orig_max_active, slo_ms: run.slo_ms });
+    let mut active: Vec<LaneActive> = Vec::new();
+    let mut open = true;
+
+    loop {
+        if active.is_empty() && composer.is_idle() {
+            if !open {
+                break;
+            }
+            match rx.recv() {
+                Ok(msg) => {
+                    if !handle_ctl_continuous(
+                        session,
+                        msg,
+                        &mut composer,
+                        orig_max_active,
+                        fleet.orig_budget,
+                    ) {
+                        open = false;
+                    }
+                    continue;
+                }
+                Err(_) => break,
+            }
+        }
+
+        // drain control messages without stalling a token boundary
+        if open {
+            loop {
+                match rx.try_recv() {
+                    Ok(msg) => {
+                        if !handle_ctl_continuous(
+                            session,
+                            msg,
+                            &mut composer,
+                            orig_max_active,
+                            fleet.orig_budget,
+                        ) {
+                            open = false;
+                            break;
+                        }
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        }
+
+        // wake-up sweep: the WHOLE pending queue, not just the head
+        let now = Instant::now();
+        for e in composer.sweep_expired(now) {
+            out.rejected += 1;
+            let _ = e.payload.reply.send(InferResponse::rejected(
+                e.payload.id,
+                profile,
+                e.payload.enqueued,
+                "deadline exceeded before admission",
+            ));
+        }
+
+        // fill free slots at this token boundary (EDF order, SLO shedding)
+        let (joins, drops) = composer.admit(now, active.len());
+        for (e, why) in drops {
+            out.rejected += 1;
+            let msg = match why {
+                DropReason::Expired => "deadline exceeded before admission".to_string(),
+                DropReason::Overload => format!(
+                    "shed: overload (queued {:.1} ms, past the SLO target)",
+                    now.duration_since(e.enqueued).as_secs_f64() * 1000.0
+                ),
+            };
+            let _ = e.payload.reply.send(InferResponse::rejected(
+                e.payload.id,
+                profile,
+                e.payload.enqueued,
+                msg,
+            ));
+        }
+        for e in joins {
+            let p = e.payload;
+            let rows = p.req.batch_hint.max(1);
+            if rows > largest_avail {
+                composer.unjoin();
+                out.rejected += 1;
+                let _ = p.reply.send(InferResponse::rejected(
+                    p.id,
+                    profile,
+                    p.enqueued,
+                    format!("batch_hint {rows} exceeds largest AOT batch {largest_avail}"),
+                ));
+                continue;
+            }
+            out.queue_wait.record(now.saturating_duration_since(p.enqueued));
+            // same batch/seed derivation as the fixed path, so a request's
+            // tokens are bit-identical between the two schedulers
+            let b = pick_batch(&avail, rows);
+            let seed = p
+                .req
+                .seed
+                .unwrap_or_else(|| session.run_config().seed.wrapping_add(out.batches as u64));
+            out.batches += 1;
+            out.batch_sizes += 1;
+            let st = session.begin_decode(b, seed);
+            active.push(LaneActive {
+                id: p.id,
+                enqueued: p.enqueued,
+                slo_ms: e.slo_ms,
+                batch_hint: rows,
+                batch: b,
+                reply: p.reply,
+                st,
+            });
+        }
+        if active.is_empty() {
+            continue;
+        }
+
+        // one token boundary: every active request advances one step.
+        // Governor-gated like a fixed batch, so concurrent lanes still
+        // share the device weighted-fair.
+        let passes_before = session.passes_run();
+        governor.admit(lane_idx);
+        let mut i = 0;
+        while i < active.len() {
+            // keep cross-pass prefetch alive while ANY work will follow
+            let expect_next = active.len() > 1
+                || composer.pending_len() > 0
+                || !active[i].st.last_step();
+            match session.decode_step(&mut active[i].st, expect_next) {
+                Err(e) => {
+                    if out.first_error.is_none() {
+                        out.first_error = Some(format!("{e:#}"));
+                    }
+                    let a = active.swap_remove(i);
+                    composer.retire(a.enqueued, a.slo_ms, Instant::now(), false);
+                    out.rejected += 1;
+                    let _ = a.reply.send(InferResponse::rejected(
+                        a.id,
+                        profile,
+                        a.enqueued,
+                        format!("pass failed: {e:#}"),
+                    ));
+                }
+                Ok(()) if active[i].st.done() => {
+                    let a = active.swap_remove(i);
+                    let (report, outp) = session.finish_decode(a.st);
+                    out.peak = out.peak.max(report.peak_bytes);
+                    let done = Instant::now();
+                    composer.retire(a.enqueued, a.slo_ms, done, true);
+                    let latency = done.duration_since(a.enqueued);
+                    out.latency.record(latency);
+                    out.served += 1;
+                    out.tokens += report.tokens as u64;
+                    let generated_rows: Vec<Vec<i32>> =
+                        outp.generated_rows.iter().take(a.batch_hint).cloned().collect();
+                    let _ = a.reply.send(InferResponse {
+                        id: a.id,
+                        profile: profile.to_string(),
+                        ok: true,
+                        error: None,
+                        latency_ms: latency.as_secs_f64() * 1000.0,
+                        batch: a.batch,
+                        tokens: report.tokens,
+                        generated_rows,
+                        peak_bytes: report.peak_bytes,
+                    });
+                }
+                Ok(()) => i += 1,
+            }
+        }
+        governor.done();
+        composer.note_iteration();
+        fleet.after_batch(session.passes_run().saturating_sub(passes_before));
+    }
+    out.sched = composer.stats();
 }
 
 #[cfg(test)]

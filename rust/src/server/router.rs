@@ -31,10 +31,14 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::RunConfig;
 use crate::elastic::{BudgetController, PressureTrace};
-use crate::engine::{Engine, Session};
+use crate::engine::{DecodeState, Engine, Session};
 use crate::memory::MemoryAccountant;
 use crate::metrics::LatencyRecorder;
 use crate::planner::Schedule;
+use crate::sched::{
+    scaled_active_cap, BatchComposer, DropReason, Entry, FairClock, SchedConfig, SchedStats,
+    DEFAULT_MAX_ACTIVE,
+};
 use crate::util::json::Value;
 
 /// Router policy + the model fleet.
@@ -109,11 +113,20 @@ pub struct InferRequest {
     pub deadline: Option<Duration>,
     /// Input seed (None = the session's configured seed stream).
     pub seed: Option<u64>,
+    /// Per-request SLO target in ms (continuous lanes): overrides the
+    /// lane's `--slo-ms` for overload shedding and attainment scoring.
+    pub slo_ms: Option<f64>,
 }
 
 impl Default for InferRequest {
     fn default() -> Self {
-        InferRequest { profile: String::new(), batch_hint: 1, deadline: None, seed: None }
+        InferRequest {
+            profile: String::new(),
+            batch_hint: 1,
+            deadline: None,
+            seed: None,
+            slo_ms: None,
+        }
     }
 }
 
@@ -132,6 +145,9 @@ impl InferRequest {
         if let Some(s) = self.seed {
             v = v.set("seed", s);
         }
+        if let Some(slo) = self.slo_ms {
+            v = v.set("slo_ms", slo);
+        }
         v
     }
 
@@ -147,6 +163,13 @@ impl InferRequest {
                 .filter(|ms| ms.is_finite())
                 .map(|ms| Duration::from_secs_f64(ms.clamp(0.0, 1e12) / 1000.0)),
             seed: v.get("seed").map(|s| s.as_f64()).transpose()?.map(|s| s as u64),
+            // same hostile-value discipline as deadline_ms: non-finite or
+            // non-positive targets are dropped, not panicked on
+            slo_ms: v
+                .get("slo_ms")
+                .map(|s| s.as_f64())
+                .transpose()?
+                .filter(|ms| ms.is_finite() && *ms > 0.0),
         })
     }
 }
@@ -356,6 +379,19 @@ pub struct ModelStats {
     pub device_cache_hits: u64,
     /// thread spawn/joins this lane's worker pool avoided
     pub spawns_avoided: u64,
+    /// continuous batching: requests that joined a running decode
+    pub joins: u64,
+    /// continuous batching: requests retired from the active set
+    pub leaves: u64,
+    /// continuous batching: requests shed at admission (SLO already blown)
+    pub shed_overload: u64,
+    /// % of SLO-targeted served requests that met their target (100 when
+    /// nothing carried a target)
+    pub slo_attained_pct: f64,
+    /// KV prefix sharing: cross-request block share events in this lane
+    pub shared_kv_blocks: u64,
+    /// KV prefix sharing: bytes deduplicated away in this lane's pool
+    pub kv_dedup_bytes: u64,
 }
 
 /// Summary of one router run (all models, shared budget).
@@ -389,6 +425,20 @@ pub struct RouterSummary {
     pub device_cache_hits: u64,
     /// worker-pool spawn/joins avoided across lanes
     pub spawns_avoided: u64,
+    /// continuous batching: joins/leaves/sheds summed across lanes
+    pub joins: u64,
+    pub leaves: u64,
+    pub shed_overload: u64,
+    /// % of SLO-targeted served requests that met their target, across all
+    /// continuous lanes (100 when nothing carried a target)
+    pub slo_attained_pct: f64,
+    /// KV prefix sharing: cross-request block share events across lanes
+    pub shared_kv_blocks: u64,
+    /// KV prefix sharing: bytes deduplicated away across lanes
+    pub kv_dedup_bytes: u64,
+    /// generated tokens per wall-clock second across the whole run — the
+    /// number continuous batching moves vs the fixed-batch baseline
+    pub tokens_per_sec: f64,
     /// queue-wait percentiles across every served request (all lanes)
     pub queue_wait_p50_ms: f64,
     pub queue_wait_p95_ms: f64,
@@ -428,6 +478,12 @@ impl RouterSummary {
                     .set("prefetch_wasted", m.prefetch_wasted)
                     .set("device_cache_hits", m.device_cache_hits)
                     .set("spawns_avoided", m.spawns_avoided)
+                    .set("joins", m.joins)
+                    .set("leaves", m.leaves)
+                    .set("shed_overload", m.shed_overload)
+                    .set("slo_attained_pct", m.slo_attained_pct)
+                    .set("shared_kv_blocks", m.shared_kv_blocks)
+                    .set("kv_dedup_bytes", m.kv_dedup_bytes)
             })
             .collect();
         let mut v = Value::obj()
@@ -450,6 +506,13 @@ impl RouterSummary {
             .set("prefetch_wasted", self.prefetch_wasted)
             .set("device_cache_hits", self.device_cache_hits)
             .set("spawns_avoided", self.spawns_avoided)
+            .set("joins", self.joins)
+            .set("leaves", self.leaves)
+            .set("shed_overload", self.shed_overload)
+            .set("slo_attained_pct", self.slo_attained_pct)
+            .set("shared_kv_blocks", self.shared_kv_blocks)
+            .set("kv_dedup_bytes", self.kv_dedup_bytes)
+            .set("tokens_per_sec", self.tokens_per_sec)
             .set("queue_wait_p50_ms", self.queue_wait_p50_ms)
             .set("queue_wait_p95_ms", self.queue_wait_p95_ms)
             .set("concurrent_passes_peak", self.concurrent_passes_peak)
@@ -502,11 +565,31 @@ struct ModelLane<'e> {
     profile: String,
     session: Session<'e>,
     queue: VecDeque<PendingReq>,
+    /// continuous lanes: iteration-level admission + its pending queue
+    /// (fixed lanes queue in `queue` instead)
+    composer: Option<BatchComposer<PendingReq>>,
+    /// continuous lanes: requests currently decoding, one state each
+    active: Vec<ActiveReq>,
+    /// configured active cap — the base elastic budget steps scale from
+    orig_max_active: usize,
     served: usize,
     rejected: usize,
     batches: usize,
+    /// generated tokens across everything this lane served
+    tokens: u64,
     latency: LatencyRecorder,
     queue_wait: LatencyRecorder,
+}
+
+/// One request resident in a continuous lane's active set.
+struct ActiveReq {
+    id: u64,
+    enqueued: Instant,
+    slo_ms: Option<f64>,
+    batch_hint: usize,
+    batch: usize,
+    reply: mpsc::Sender<InferResponse>,
+    st: DecodeState,
 }
 
 /// The multi-model serving loop.  Owns one session per model; runs on the
@@ -531,6 +614,9 @@ pub struct Router<'e> {
     elastic: Option<BudgetController>,
     /// budget steps applied to the shared accountant
     budget_steps: u64,
+    /// weighted-fair iteration clock across continuous lanes (one entry
+    /// per lane, weights from [`RouterConfig::lane_weights`])
+    fair: FairClock,
 }
 
 impl<'e> Router<'e> {
@@ -571,13 +657,22 @@ impl<'e> Router<'e> {
                 kv_lane_shares.push(None);
             }
             let session = engine.open_session_shared(&run, &accountant)?;
+            // continuous lanes admit through an iteration-level composer
+            let max_active = model.max_active.unwrap_or(DEFAULT_MAX_ACTIVE).max(1);
+            let composer = model.continuous.then(|| {
+                BatchComposer::new(SchedConfig { max_active, slo_ms: model.slo_ms })
+            });
             lanes.push(ModelLane {
                 profile: model.profile.clone(),
                 session,
                 queue: VecDeque::new(),
+                composer,
+                active: Vec::new(),
+                orig_max_active: max_active,
                 served: 0,
                 rejected: 0,
                 batches: 0,
+                tokens: 0,
                 latency: LatencyRecorder::new(),
                 queue_wait: LatencyRecorder::new(),
             });
@@ -620,6 +715,9 @@ impl<'e> Router<'e> {
         }
         let (tx, rx) = mpsc::channel();
         let elastic = cfg.memory_trace.clone().map(BudgetController::new);
+        let mut weights = cfg.lane_weights.clone().unwrap_or_default();
+        weights.resize(lanes.len(), 1.0);
+        let fair = FairClock::new(&weights);
         Ok(Router {
             lanes,
             accountant,
@@ -631,6 +729,7 @@ impl<'e> Router<'e> {
             kv_lane_shares,
             elastic,
             budget_steps: 0,
+            fair,
         })
     }
 
@@ -699,6 +798,17 @@ impl<'e> Router<'e> {
         self.accountant.resize(Some(new_budget));
         self.budget_steps += 1;
         let orig_budget = self.cfg.budget;
+        // continuous lanes shrink their active-set cap FIRST: fewer future
+        // joiners is the cheap lever, so the eviction chains below only
+        // reclaim shared KV blocks for pressure the smaller active set
+        // still generates (a grow restores the configured cap)
+        if let Some(orig) = orig_budget {
+            for lane in &mut self.lanes {
+                if let Some(c) = lane.composer.as_mut() {
+                    c.set_max_active(scaled_active_cap(lane.orig_max_active, orig, new_budget));
+                }
+            }
+        }
         // per-lane own-eviction baselines: lane A's reclaim chain may take
         // lane B's pins/KV through the victim wiring, and B's own apply
         // window cannot see that
@@ -768,7 +878,11 @@ impl<'e> Router<'e> {
         let mut first_error: Option<String> = None;
 
         loop {
-            let backlog = self.lanes.iter().any(|l| !l.queue.is_empty());
+            let backlog = self.lanes.iter().any(|l| {
+                !l.queue.is_empty()
+                    || !l.active.is_empty()
+                    || l.composer.as_ref().map(|c| !c.is_idle()).unwrap_or(false)
+            });
             if !backlog {
                 if !open {
                     break;
@@ -804,7 +918,13 @@ impl<'e> Router<'e> {
                     }
                 }
             }
-            if open && !self.any_lane_full() {
+            // wake-up sweep (whole queue, not just heads): expired requests
+            // parked behind a live head are rejected promptly instead of
+            // distorting `earliest_deadline()` windows and wait percentiles
+            self.sweep_expired(Instant::now());
+            // continuous work never waits out a fill window — joins happen
+            // at the next token boundary, and active decodes must not stall
+            if open && !self.any_lane_full() && !self.continuous_work() {
                 // the window never waits past a queued request's deadline —
                 // otherwise any deadline shorter than the window could never
                 // be served, even on an idle server
@@ -839,8 +959,18 @@ impl<'e> Router<'e> {
                 }
             }
 
-            // memory-pressure steps land here, between batches
+            // memory-pressure steps land here, between batches (and between
+            // token boundaries of the continuous lanes)
             self.poll_elastic();
+
+            // continuous lanes run one token-boundary iteration per loop
+            // turn, weighted-fair across lanes; fixed lanes only proceed
+            // when no continuous lane is runnable this turn
+            if let Some(li) = self.pick_continuous_lane() {
+                self.continuous_iteration(li, &mut peak, &mut first_error);
+                self.fair.charge(li);
+                continue;
+            }
 
             // earliest-deadline-first across lane heads (FIFO tie-break)
             let Some(li) = self.pick_lane() else { continue };
@@ -941,6 +1071,7 @@ impl<'e> Router<'e> {
                         let latency = p.enqueued.elapsed();
                         lane.latency.record(latency);
                         lane.served += 1;
+                        lane.tokens += report.tokens as u64;
                         let _ = p.reply.send(InferResponse {
                             id: p.id,
                             profile: lane.profile.clone(),
@@ -995,6 +1126,8 @@ impl<'e> Router<'e> {
         let (mut elastic_ev, mut replans) = (0u64, 0u64);
         let (mut prefetched, mut pf_wasted) = (0u64, 0u64);
         let (mut dev_hits, mut spawns_avoided) = (0u64, 0u64);
+        let (mut shared_blocks, mut dedup_bytes, mut total_tokens) = (0u64, 0u64, 0u64);
+        let mut sched_total = SchedStats::default();
         let per_model: Vec<ModelStats> = self
             .lanes
             .iter()
@@ -1025,6 +1158,11 @@ impl<'e> Router<'e> {
                 pf_wasted += pf.wasted;
                 dev_hits += dev.hits;
                 spawns_avoided += pool_stats.spawns_avoided();
+                let sc = l.composer.as_ref().map(|c| c.stats()).unwrap_or_default();
+                sched_total.merge(&sc);
+                shared_blocks += kvp.shared_total;
+                dedup_bytes += kvp.dedup_bytes;
+                total_tokens += l.tokens;
                 ModelStats {
                     profile: l.profile.clone(),
                     served: l.served,
@@ -1043,6 +1181,12 @@ impl<'e> Router<'e> {
                     prefetch_wasted: pf.wasted,
                     device_cache_hits: dev.hits,
                     spawns_avoided: pool_stats.spawns_avoided(),
+                    joins: sc.joins,
+                    leaves: sc.leaves,
+                    shed_overload: sc.shed_overload,
+                    slo_attained_pct: sc.slo_attained_pct(),
+                    shared_kv_blocks: kvp.shared_total,
+                    kv_dedup_bytes: kvp.dedup_bytes,
                 }
             })
             .collect();
@@ -1067,6 +1211,13 @@ impl<'e> Router<'e> {
             prefetch_wasted: pf_wasted,
             device_cache_hits: dev_hits,
             spawns_avoided,
+            joins: sched_total.joins,
+            leaves: sched_total.leaves,
+            shed_overload: sched_total.shed_overload,
+            slo_attained_pct: sched_total.slo_attained_pct(),
+            shared_kv_blocks: shared_blocks,
+            kv_dedup_bytes: dedup_bytes,
+            tokens_per_sec: total_tokens as f64 / wall.max(1e-9),
             queue_wait_p50_ms: queue_wait.p50(),
             queue_wait_p95_ms: queue_wait.p95(),
             // one dispatch thread = at most one pass in flight, ever
@@ -1083,7 +1234,19 @@ impl<'e> Router<'e> {
             Envelope::Shutdown => false,
             Envelope::Infer(p) => {
                 match self.lane_index(&p.req.profile) {
-                    Some(li) => self.lanes[li].queue.push_back(p),
+                    Some(li) => {
+                        let lane = &mut self.lanes[li];
+                        match lane.composer.as_mut() {
+                            // continuous lanes queue in their composer
+                            Some(c) => c.push(Entry {
+                                enqueued: p.enqueued,
+                                deadline: p.deadline,
+                                slo_ms: p.req.slo_ms,
+                                payload: p,
+                            }),
+                            None => lane.queue.push_back(p),
+                        }
+                    }
                     None => {
                         self.unroutable += 1;
                         let resp = InferResponse::rejected(
@@ -1109,6 +1272,180 @@ impl<'e> Router<'e> {
             .filter_map(|(i, l)| l.queue.front().map(|p| (i, p)))
             .min_by_key(|(_, p)| (p.deadline.is_none(), p.deadline, p.enqueued))
             .map(|(i, _)| i)
+    }
+
+    /// Any continuous lane with requests decoding or queued?  (If so the
+    /// batch-fill window is skipped — token boundaries must not stall.)
+    fn continuous_work(&self) -> bool {
+        self.lanes.iter().any(|l| {
+            !l.active.is_empty() || l.composer.as_ref().map(|c| !c.is_idle()).unwrap_or(false)
+        })
+    }
+
+    /// The runnable continuous lane with the smallest weighted virtual
+    /// time (see [`FairClock`]); `None` when no continuous lane has work.
+    fn pick_continuous_lane(&self) -> Option<usize> {
+        let runnable: Vec<bool> = self
+            .lanes
+            .iter()
+            .map(|l| {
+                l.composer.is_some()
+                    && (!l.active.is_empty()
+                        || l.composer.as_ref().map(|c| !c.is_idle()).unwrap_or(false))
+            })
+            .collect();
+        self.fair.pick(&runnable)
+    }
+
+    /// Reject every queued request whose deadline has already passed — the
+    /// WHOLE queue, not just the head, matching the composer's sweep.
+    fn sweep_expired(&mut self, now: Instant) {
+        for lane in &mut self.lanes {
+            let mut kept = VecDeque::with_capacity(lane.queue.len());
+            for p in lane.queue.drain(..) {
+                if p.deadline.map(|d| d <= now).unwrap_or(false) {
+                    lane.rejected += 1;
+                    let _ = p.reply.send(InferResponse::rejected(
+                        p.id,
+                        &lane.profile,
+                        p.enqueued,
+                        "deadline exceeded before admission",
+                    ));
+                } else {
+                    kept.push_back(p);
+                }
+            }
+            lane.queue = kept;
+            if let Some(c) = lane.composer.as_mut() {
+                for e in c.sweep_expired(now) {
+                    lane.rejected += 1;
+                    let _ = e.payload.reply.send(InferResponse::rejected(
+                        e.payload.id,
+                        &lane.profile,
+                        e.payload.enqueued,
+                        "deadline exceeded before admission",
+                    ));
+                }
+            }
+        }
+    }
+
+    /// One continuous-batching iteration for lane `li`: admit joiners at
+    /// the token boundary (each primed by its first [`Session::decode_step`]
+    /// prefix pass), advance every active request one token, and retire
+    /// finished rows immediately — their slot is free at the very next
+    /// boundary, and their KV blocks go back to the budget.
+    fn continuous_iteration(
+        &mut self,
+        li: usize,
+        peak: &mut u64,
+        first_error: &mut Option<String>,
+    ) {
+        let now = Instant::now();
+        let lane = &mut self.lanes[li];
+        let composer = lane.composer.as_mut().expect("continuous lane has a composer");
+        let (joins, drops) = composer.admit(now, lane.active.len());
+        for (e, why) in drops {
+            lane.rejected += 1;
+            let msg = match why {
+                DropReason::Expired => "deadline exceeded before admission".to_string(),
+                DropReason::Overload => format!(
+                    "shed: overload (queued {:.1} ms, past the SLO target)",
+                    now.duration_since(e.enqueued).as_secs_f64() * 1000.0
+                ),
+            };
+            let _ = e.payload.reply.send(InferResponse::rejected(
+                e.payload.id,
+                &lane.profile,
+                e.payload.enqueued,
+                msg,
+            ));
+        }
+        let avail = lane.session.profile().batches.clone();
+        let largest_avail = avail.iter().copied().max().unwrap_or(1);
+        for e in joins {
+            let p = e.payload;
+            let rows = p.req.batch_hint.max(1);
+            if rows > largest_avail {
+                composer.unjoin();
+                lane.rejected += 1;
+                let _ = p.reply.send(InferResponse::rejected(
+                    p.id,
+                    &lane.profile,
+                    p.enqueued,
+                    format!("batch_hint {rows} exceeds largest AOT batch {largest_avail}"),
+                ));
+                continue;
+            }
+            lane.queue_wait.record(now.saturating_duration_since(p.enqueued));
+            // same batch/seed derivation as the fixed path, so a request's
+            // tokens are bit-identical between the two schedulers
+            let b = pick_batch(&avail, rows);
+            let seed = p.req.seed.unwrap_or_else(|| {
+                lane.session.run_config().seed.wrapping_add(lane.batches as u64)
+            });
+            lane.batches += 1;
+            let st = lane.session.begin_decode(b, seed);
+            lane.active.push(ActiveReq {
+                id: p.id,
+                enqueued: p.enqueued,
+                slo_ms: e.slo_ms,
+                batch_hint: rows,
+                batch: b,
+                reply: p.reply,
+                st,
+            });
+        }
+        // one token boundary: every active request advances one iteration
+        let mut i = 0;
+        while i < lane.active.len() {
+            // keep cross-pass prefetch alive while ANY work will follow
+            let expect_next = lane.active.len() > 1
+                || composer.pending_len() > 0
+                || !lane.active[i].st.last_step();
+            match lane.session.decode_step(&mut lane.active[i].st, expect_next) {
+                Err(e) => {
+                    if first_error.is_none() {
+                        *first_error = Some(format!("{e:#}"));
+                    }
+                    let a = lane.active.swap_remove(i);
+                    composer.retire(a.enqueued, a.slo_ms, Instant::now(), false);
+                    lane.rejected += 1;
+                    let _ = a.reply.send(InferResponse::rejected(
+                        a.id,
+                        &lane.profile,
+                        a.enqueued,
+                        format!("pass failed: {e:#}"),
+                    ));
+                }
+                Ok(()) if lane.active[i].st.done() => {
+                    let a = lane.active.swap_remove(i);
+                    let (report, out) = lane.session.finish_decode(a.st);
+                    *peak = (*peak).max(report.peak_bytes);
+                    let done = Instant::now();
+                    composer.retire(a.enqueued, a.slo_ms, done, true);
+                    let latency = done.duration_since(a.enqueued);
+                    lane.latency.record(latency);
+                    lane.served += 1;
+                    lane.tokens += report.tokens as u64;
+                    let generated_rows: Vec<Vec<i32>> =
+                        out.generated_rows.iter().take(a.batch_hint).cloned().collect();
+                    let _ = a.reply.send(InferResponse {
+                        id: a.id,
+                        profile: lane.profile.clone(),
+                        ok: true,
+                        error: None,
+                        latency_ms: latency.as_secs_f64() * 1000.0,
+                        batch: a.batch,
+                        tokens: report.tokens,
+                        generated_rows,
+                        peak_bytes: report.peak_bytes,
+                    });
+                }
+                Ok(()) => i += 1,
+            }
+        }
+        composer.note_iteration();
     }
 }
 
@@ -1161,6 +1498,7 @@ mod tests {
             batch_hint: 2,
             deadline: Some(Duration::from_millis(1500)),
             seed: Some(7),
+            slo_ms: Some(250.0),
         };
         let v = req.to_json();
         assert_eq!(v.get("op").unwrap().as_str().unwrap(), "infer");
@@ -1168,7 +1506,14 @@ mod tests {
         assert_eq!(back.profile, "tiny-bert");
         assert_eq!(back.batch_hint, 2);
         assert_eq!(back.seed, Some(7));
+        assert_eq!(back.slo_ms, Some(250.0));
         assert!((back.deadline.unwrap().as_secs_f64() - 1.5).abs() < 1e-9);
+        // hostile SLO targets are dropped, not panicked on
+        let hostile = Value::obj()
+            .set("op", "infer")
+            .set("profile", "m")
+            .set("slo_ms", f64::NAN);
+        assert_eq!(InferRequest::from_json(&hostile).unwrap().slo_ms, None);
     }
 
     #[test]

@@ -98,6 +98,20 @@ pub struct ServeSummary {
     pub device_cache_hits: u64,
     /// worker pool: thread spawn/joins avoided vs the per-pass design
     pub spawns_avoided: u64,
+    /// continuous batching: requests that joined / left a running decode
+    /// and requests shed at admission (all 0 = fixed-batch serving)
+    pub joins: u64,
+    pub leaves: u64,
+    pub shed_overload: u64,
+    /// % of SLO-targeted served requests that met their target (100 when
+    /// nothing carried a target)
+    pub slo_attained_pct: f64,
+    /// KV prefix sharing: cross-request block share events / bytes the
+    /// accountant never charged thanks to dedup (both 0 = sharing idle)
+    pub shared_kv_blocks: u64,
+    pub kv_dedup_bytes: u64,
+    /// generated tokens per wall-clock second across the run
+    pub tokens_per_sec: f64,
     /// admission: time requests spent queued before their pass started
     pub queue_wait_p50_ms: f64,
     pub queue_wait_p95_ms: f64,
@@ -129,6 +143,13 @@ impl ServeSummary {
             prefetch_wasted: s.prefetch_wasted,
             device_cache_hits: s.device_cache_hits,
             spawns_avoided: s.spawns_avoided,
+            joins: s.joins,
+            leaves: s.leaves,
+            shed_overload: s.shed_overload,
+            slo_attained_pct: s.slo_attained_pct,
+            shared_kv_blocks: s.shared_kv_blocks,
+            kv_dedup_bytes: s.kv_dedup_bytes,
+            tokens_per_sec: s.tokens_per_sec,
             queue_wait_p50_ms: s.queue_wait_p50_ms,
             queue_wait_p95_ms: s.queue_wait_p95_ms,
             concurrent_passes_peak: s.concurrent_passes_peak,
@@ -158,6 +179,13 @@ impl ServeSummary {
             .set("prefetch_wasted", self.prefetch_wasted)
             .set("device_cache_hits", self.device_cache_hits)
             .set("spawns_avoided", self.spawns_avoided)
+            .set("joins", self.joins)
+            .set("leaves", self.leaves)
+            .set("shed_overload", self.shed_overload)
+            .set("slo_attained_pct", self.slo_attained_pct)
+            .set("shared_kv_blocks", self.shared_kv_blocks)
+            .set("kv_dedup_bytes", self.kv_dedup_bytes)
+            .set("tokens_per_sec", self.tokens_per_sec)
             .set("queue_wait_p50_ms", self.queue_wait_p50_ms)
             .set("queue_wait_p95_ms", self.queue_wait_p95_ms)
             .set("concurrent_passes_peak", self.concurrent_passes_peak)
@@ -269,14 +297,34 @@ mod tests {
             prefetch_wasted: 1,
             device_cache_hits: 8,
             spawns_avoided: 12,
+            joins: 3,
+            leaves: 3,
+            shed_overload: 1,
+            slo_attained_pct: 100.0,
+            shared_kv_blocks: 2,
+            kv_dedup_bytes: 4096,
+            tokens_per_sec: 9.5,
             queue_wait_p50_ms: 0.5,
             queue_wait_p95_ms: 1.5,
             concurrent_passes_peak: 1,
         };
         let v = s.to_json();
-        for key in
-            ["served", "batches", "throughput_rps", "latency", "peak_bytes", "slo", "cache_hits"]
-        {
+        for key in [
+            "served",
+            "batches",
+            "throughput_rps",
+            "latency",
+            "peak_bytes",
+            "slo",
+            "cache_hits",
+            "joins",
+            "leaves",
+            "shed_overload",
+            "slo_attained_pct",
+            "shared_kv_blocks",
+            "kv_dedup_bytes",
+            "tokens_per_sec",
+        ] {
             assert!(v.get(key).is_some(), "missing key {key}");
         }
         assert_eq!(v.get("slo").unwrap().get("target_ms").unwrap().as_f64().unwrap(), 100.0);

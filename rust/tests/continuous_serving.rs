@@ -1,0 +1,262 @@
+//! Continuous-batching serving integration tests (PR 7): iteration-level
+//! scheduling through the `BatchComposer` on both routers, cross-request
+//! KV prefix sharing, SLO-driven overload shedding, and the whole-queue
+//! deadline sweep.  The acceptance bar: under join/leave churn the tokens
+//! are bit-identical to the fixed-batch path, the shared budget holds
+//! with shared blocks charged once, and dedup is observable in the
+//! summary counters.  Needs `make artifacts`.
+
+use std::time::Duration;
+
+use hermes::config::{Mode, Paths, RunConfig};
+use hermes::engine::Engine;
+use hermes::server::{
+    ConcurrentRouter, InferRequest, InferResponse, Router, RouterConfig, RouterHandle,
+};
+
+fn engine() -> Engine {
+    Engine::new(Paths::detect()).unwrap()
+}
+
+/// A generative KV lane: small blocks so the prompt seals (and dedups)
+/// whole blocks even on the tiny test profiles.
+fn kv_lane(model: &str, continuous: bool) -> RunConfig {
+    RunConfig {
+        profile: model.into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        kv_cache: true,
+        kv_block_tokens: Some(2),
+        gen_tokens: Some(4),
+        continuous,
+        max_active: if continuous { Some(2) } else { None },
+        ..RunConfig::default()
+    }
+}
+
+/// Submit 12 alternating requests with explicit seeds; pairs of requests
+/// landing in the SAME lane share a seed (i and i+2 -> `9000 + i/4`), so
+/// the continuous scheduler has two identical prompts resident at once —
+/// the cross-request prefix-sharing case.  Returns responses in
+/// submission order.
+fn drive_churn(
+    handle: RouterHandle,
+    lane_a: &'static str,
+    lane_b: &'static str,
+) -> std::thread::JoinHandle<Vec<InferResponse>> {
+    std::thread::spawn(move || {
+        let tickets: Vec<_> = (0..12u64)
+            .map(|i| {
+                let profile = if i % 2 == 0 { lane_a } else { lane_b };
+                handle
+                    .submit(InferRequest {
+                        profile: profile.into(),
+                        seed: Some(9000 + i / 4),
+                        ..InferRequest::default()
+                    })
+                    .unwrap()
+            })
+            .collect();
+        let responses: Vec<_> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+        handle.shutdown();
+        responses
+    })
+}
+
+fn rows_of(responses: Vec<InferResponse>) -> Vec<(String, Vec<Vec<i32>>)> {
+    responses
+        .into_iter()
+        .map(|r| {
+            assert!(r.ok, "{r:?}");
+            (r.profile, r.generated_rows)
+        })
+        .collect()
+}
+
+#[test]
+fn continuous_two_lanes_bit_identical_with_kv_prefix_sharing() {
+    // PR 7 acceptance: two continuous KV lanes on the concurrent router
+    // under join/leave churn (max_active 2, 6 requests per lane) must
+    // (a) emit tokens bit-identical to the fixed-batch path for the same
+    // traffic, (b) stay under the ONE shared budget with shared blocks
+    // charged once, and (c) show cross-request dedup in the counters.
+    let e = engine();
+    let total_a = e.runtime.profile("tiny-gpt").unwrap().total_weight_bytes;
+    let total_b = e.runtime.profile("tiny-gptj").unwrap().total_weight_bytes;
+    let budget = 2 * (total_a + total_b);
+    let mk_cfg = |continuous: bool| RouterConfig {
+        models: vec![kv_lane("tiny-gpt", continuous), kv_lane("tiny-gptj", continuous)],
+        budget: Some(budget),
+        kv_budget: Some(1 << 20),
+        // max_batch 1 keeps the fixed reference from folding the
+        // same-seed pairs, so both schedulers decode every request at
+        // batch 1 with its own seed — the bit-identity contract
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        ..RouterConfig::default()
+    };
+
+    // fixed-batch reference, same traffic
+    let router = ConcurrentRouter::new(Paths::detect(), mk_cfg(false)).unwrap();
+    let producer = drive_churn(router.handle(), "tiny-gpt", "tiny-gptj");
+    let fixed = router.run().unwrap();
+    let fixed_rows = rows_of(producer.join().unwrap());
+    assert_eq!(fixed.served, 12, "{:?}", fixed.first_error);
+    assert_eq!(fixed.joins, 0, "fixed lanes never touch the composer");
+
+    // continuous run
+    let router = ConcurrentRouter::new(Paths::detect(), mk_cfg(true)).unwrap();
+    let producer = drive_churn(router.handle(), "tiny-gpt", "tiny-gptj");
+    let summary = router.run().unwrap();
+    let cont_rows = rows_of(producer.join().unwrap());
+
+    assert_eq!(summary.served, 12, "{:?}", summary.first_error);
+    assert_eq!(summary.rejected, 0);
+    assert_eq!(cont_rows, fixed_rows, "continuous tokens must match the fixed path bit for bit");
+
+    // (c) scheduler ledger: every request joined and left; nothing shed
+    assert_eq!(summary.joins, 12, "{summary:?}");
+    assert_eq!(summary.leaves, 12, "{summary:?}");
+    assert_eq!(summary.shed_overload, 0);
+    assert_eq!(summary.slo_attained_pct, 100.0, "no SLO targets -> vacuously attained");
+    assert!(summary.tokens_per_sec > 0.0, "{summary:?}");
+
+    // cross-request prefix sharing: the same-seed pairs resident together
+    // must dedup their sealed prompt blocks (charged once)
+    assert!(summary.shared_kv_blocks > 0, "no block was ever shared: {summary:?}");
+    assert!(summary.kv_dedup_bytes > 0, "dedup freed no bytes: {summary:?}");
+
+    // (b) shared blocks counted once keeps the fleet under the budget
+    assert!(
+        summary.peak_bytes <= budget,
+        "peak {} above shared budget {budget}",
+        summary.peak_bytes
+    );
+    for m in &summary.per_model {
+        assert_eq!(m.served, 6, "lane {} served {}", m.profile, m.served);
+        assert!(m.kv_inc_passes > 0, "decode must stay incremental: {m:?}");
+        assert_eq!(m.joins, 6, "{m:?}");
+        assert_eq!(m.leaves, 6, "{m:?}");
+    }
+}
+
+#[test]
+fn serialized_router_continuous_matches_fixed() {
+    // Both routers route through the composer: the single-threaded Router
+    // interleaves its continuous lanes under a weighted-fair clock and
+    // must keep the same bit-identity contract.
+    let e = engine();
+    let total_a = e.runtime.profile("tiny-gpt").unwrap().total_weight_bytes;
+    let total_b = e.runtime.profile("tiny-gptj").unwrap().total_weight_bytes;
+    let mk_cfg = |continuous: bool| RouterConfig {
+        models: vec![kv_lane("tiny-gpt", continuous), kv_lane("tiny-gptj", continuous)],
+        budget: Some(2 * (total_a + total_b)),
+        kv_budget: Some(1 << 20),
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        ..RouterConfig::default()
+    };
+
+    let router = Router::new(&e, mk_cfg(false)).unwrap();
+    let producer = drive_churn(router.handle(), "tiny-gpt", "tiny-gptj");
+    let fixed = router.run().unwrap();
+    let fixed_rows = rows_of(producer.join().unwrap());
+    assert_eq!(fixed.served, 12, "{:?}", fixed.first_error);
+
+    let router = Router::new(&e, mk_cfg(true)).unwrap();
+    let producer = drive_churn(router.handle(), "tiny-gpt", "tiny-gptj");
+    let summary = router.run().unwrap();
+    let cont_rows = rows_of(producer.join().unwrap());
+
+    assert_eq!(summary.served, 12, "{:?}", summary.first_error);
+    assert_eq!(summary.rejected, 0);
+    assert_eq!(cont_rows, fixed_rows, "serialized continuous tokens must match fixed");
+    assert_eq!(summary.joins, 12);
+    assert_eq!(summary.leaves, 12);
+    assert!(summary.kv_dedup_bytes > 0, "same-seed pairs must share prefixes: {summary:?}");
+}
+
+#[test]
+fn continuous_lane_sheds_slo_blown_requests() {
+    // Explicit overload shedding: with max_active 1, a request whose
+    // per-request SLO is microscopic is guaranteed to have blown it by
+    // the time the running request frees the slot — the composer sheds it
+    // at admission instead of burning a decode it cannot win.
+    let cfg = RouterConfig {
+        models: vec![RunConfig {
+            gen_tokens: Some(6),
+            max_active: Some(1),
+            ..kv_lane("tiny-gpt", true)
+        }],
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        ..RouterConfig::default()
+    };
+    let router = ConcurrentRouter::new(Paths::detect(), cfg).unwrap();
+    let handle = router.handle();
+    let t_head = handle
+        .submit(InferRequest { profile: "tiny-gpt".into(), seed: Some(1), ..InferRequest::default() })
+        .unwrap();
+    let t_shed = handle
+        .submit(InferRequest {
+            profile: "tiny-gpt".into(),
+            seed: Some(2),
+            slo_ms: Some(0.001),
+            ..InferRequest::default()
+        })
+        .unwrap();
+    handle.shutdown();
+    drop(handle);
+    let summary = router.run().unwrap();
+
+    assert!(t_head.wait().unwrap().ok);
+    let shed = t_shed.wait().unwrap();
+    assert!(!shed.ok, "{shed:?}");
+    assert!(shed.error.as_deref().unwrap().contains("shed"), "{shed:?}");
+    assert_eq!(summary.served, 1);
+    assert_eq!(summary.rejected, 1);
+    assert_eq!(summary.shed_overload, 1, "{summary:?}");
+    assert_eq!(summary.joins, 1, "the shed request never joined");
+    assert_eq!(summary.slo_attained_pct, 100.0, "the served request carried no target");
+}
+
+#[test]
+fn fixed_lane_sweeps_expired_request_behind_live_head() {
+    // Satellite regression: the fixed-batch lane used to check only the
+    // queue head at dequeue, so an expired request parked BEHIND a live
+    // head waited out the whole head decode before its rejection.  The
+    // wake-up sweep now rejects it from anywhere in the queue.
+    let cfg = RouterConfig {
+        models: vec![kv_lane("tiny-gpt", false)],
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        concurrent: true,
+        ..RouterConfig::default()
+    };
+    let router = ConcurrentRouter::new(Paths::detect(), cfg).unwrap();
+    let handle = router.handle();
+    let t_head = handle
+        .submit(InferRequest { profile: "tiny-gpt".into(), seed: Some(3), ..InferRequest::default() })
+        .unwrap();
+    let t_expired = handle
+        .submit(InferRequest {
+            profile: "tiny-gpt".into(),
+            deadline: Some(Duration::ZERO),
+            ..InferRequest::default()
+        })
+        .unwrap();
+    handle.shutdown();
+    drop(handle);
+    let summary = router.run().unwrap();
+
+    assert!(t_head.wait().unwrap().ok, "the live head is served");
+    let exp = t_expired.wait().unwrap();
+    assert!(!exp.ok);
+    assert!(
+        exp.error.as_deref().unwrap().contains("deadline exceeded before admission"),
+        "{exp:?}"
+    );
+    assert_eq!(summary.served, 1);
+    assert_eq!(summary.rejected, 1);
+}

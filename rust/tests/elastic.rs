@@ -219,6 +219,7 @@ fn router_two_lanes_adapt_under_shared_resizing_accountant() {
                         batch_hint: 1,
                         deadline: None,
                         seed: Some(9000 + i),
+                        slo_ms: None,
                     })
                     .unwrap()
                     .wait()

@@ -4,6 +4,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use hermes::kvcache::{KvPool, KvSeq};
 use hermes::memory::MemoryAccountant;
 use hermes::model::DType;
 use hermes::pipeload::assignment::{assignment, owner};
@@ -219,6 +220,110 @@ fn prop_shared_budget_holds_under_concurrent_ledgers_and_resizes() {
             m.peak()
         );
         prop_assert!(m.over_budget_bytes() == 0, "settled run still over budget");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shared_kv_blocks_never_double_free_and_drain_to_zero() {
+    // PR 7 invariant: content-hashed, refcounted KV blocks under concurrent
+    // open / extend / fork / close interleaved with elastic budget resizes
+    // must (a) never double-free — the pool's internal `used` counter would
+    // underflow-panic if any byte were returned twice, (b) release every
+    // block reference exactly once as handles drop, and (c) drain both the
+    // pool and the shared accountant to exactly zero bytes.
+    check("shared kv blocks drain", cfg(12), |g| {
+        let layers = g.usize(1, 3);
+        let hidden = g.usize(2, 6);
+        let block_tokens = g.usize(2, 5);
+        let block_bytes = (block_tokens * hidden * 4 * 2) as u64;
+        let budget = block_bytes * layers as u64 * g.u64(6, 25);
+        let m = MemoryAccountant::new(None);
+        let pool = KvPool::with_block_tokens(m.clone(), Some(budget), block_tokens);
+        let lanes = g.usize(2, 4);
+        let steps = g.usize(12, 48);
+        let seed0 = g.u64(0, u64::MAX - 1);
+        std::thread::scope(|scope| {
+            // elastic controller: shrink/grow the pool cap while lanes run;
+            // a shrink evicts whole sequences (their owners degrade to
+            // recompute and must still release cleanly)
+            let rp = pool.clone();
+            scope.spawn(move || {
+                let mut rng = Rng::new(seed0);
+                for _ in 0..steps {
+                    rp.set_kv_budget(Some(rng.range(block_bytes, budget + 1)));
+                    std::thread::yield_now();
+                }
+                rp.set_kv_budget(Some(budget));
+            });
+            for lane in 0..lanes {
+                let pool = pool.clone();
+                scope.spawn(move || {
+                    let mut rng = Rng::new(
+                        seed0 ^ (lane as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    let mut seqs: Vec<KvSeq> = Vec::new();
+                    for _ in 0..steps {
+                        match rng.usize(0, 5) {
+                            0 => seqs.push(pool.open_seq(layers, 1, hidden)),
+                            1 => {
+                                // extend + prime with content derived only
+                                // from (layer, position): identical across
+                                // lanes, so sealing triggers cross-lane dedup
+                                if let Some(q) = seqs.last() {
+                                    let want =
+                                        q.tokens() + rng.usize(1, 2 * block_tokens + 1);
+                                    if q.reserve(want) {
+                                        for l in 0..layers {
+                                            let buf: Vec<f32> = (0..want * hidden)
+                                                .map(|i| (l * 10_000 + i) as f32)
+                                                .collect();
+                                            q.write_prefix(l, want, &buf, &buf);
+                                        }
+                                        q.set_tokens(want);
+                                    }
+                                }
+                            }
+                            2 => {
+                                // share: a child adopts the sealed prefix
+                                if let Some(child) = seqs.last().and_then(|q| q.fork()) {
+                                    seqs.push(child);
+                                }
+                            }
+                            3 => {
+                                // diverge: write into the shared region (COW)
+                                if let Some(q) = seqs.last() {
+                                    if q.valid() && q.tokens() > 0 {
+                                        let pos = rng.usize(0, q.tokens());
+                                        let row = vec![(lane + 1) as f32; hidden];
+                                        q.write_token(0, pos, &row, &row);
+                                    }
+                                }
+                            }
+                            _ => {
+                                // close: sometimes invalidate first (early
+                                // strip), then drop the handle either way
+                                if !seqs.is_empty() {
+                                    let i = rng.usize(0, seqs.len());
+                                    let q = seqs.swap_remove(i);
+                                    if rng.bool() {
+                                        q.invalidate();
+                                    }
+                                }
+                            }
+                        }
+                        std::thread::yield_now();
+                    }
+                    // remaining handles drop here: every ref must release
+                });
+            }
+        });
+        let st = pool.stats();
+        prop_assert!(pool.used_bytes() == 0, "pool leak: {} bytes", pool.used_bytes());
+        prop_assert!(m.used() == 0, "accountant leak: {} bytes", m.used());
+        prop_assert!(st.sequences == 0, "sequences still registered: {}", st.sequences);
+        prop_assert!(st.pool_blocks == 0, "blocks still held: {}", st.pool_blocks);
+        prop_assert!(st.shared_blocks == 0, "shared refs not drained: {}", st.shared_blocks);
         Ok(())
     });
 }
