@@ -6,7 +6,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts golden build test examples bench bench-diff tsan fmt clippy clean
+.PHONY: artifacts golden build test examples bench bench-diff trace-smoke tsan fmt clippy clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../rust/artifacts
@@ -24,21 +24,32 @@ examples:
 	cargo build --release --examples
 
 # Record perf trajectories (one-model kv off/on, the concurrent two-lane
-# router run, the bursty shared-prompt workload measured fixed-batch AND
-# continuous, an elastic shrink-grow run, and a pinned gpt2-base-sim
-# overlapped decode) into BENCH_pr6.json + BENCH_pr7.json; CI uploads both.
+# router run, the bursty shared-prompt continuous workload, an elastic
+# shrink-grow run with its telemetry-derived accountant high-water
+# timeline, and a pinned gpt2-base-sim overlapped decode) into
+# BENCH_pr7.json + BENCH_pr8.json; CI uploads both.
 bench:
 	cargo run --release --example bench_trajectory
 
-# Fail-soft per-metric deltas between the PR 6 and PR 7 trajectories
+# Fail-soft per-metric deltas between the PR 7 and PR 8 trajectories
 # (advisory: a missing file prints a note instead of failing the build).
 # NOTE: one `make bench` run writes both files from the same summaries, so
-# most sections diff to zero by construction — the signal is the
-# `continuous_burst` section (fixed-batch vs continuous scheduling, incl.
-# `tokens_per_sec` / `slo_attained_pct` / `kv_dedup_bytes`) plus whatever
-# a previous CI run's BENCH_pr6 artifact contributes when dropped in place.
+# the sections diff to zero by construction — the signal is the PR 8-only
+# `mem_high_water` section (per-pass accountant high-water timeline) plus
+# whatever a previous CI run's BENCH_pr7 artifact contributes when dropped
+# in place.
 bench-diff:
-	$(PY) scripts/bench_diff.py BENCH_pr6.json BENCH_pr7.json
+	$(PY) scripts/bench_diff.py BENCH_pr7.json BENCH_pr8.json
+
+# Short continuous serve with the event bus enabled: exports a Chrome
+# trace and validates it (well-formed JSON, non-empty, balanced B/E pairs
+# per (pid,tid) row).  CI uploads trace_smoke.json next to the bench
+# artifacts; load it into https://ui.perfetto.dev to browse.
+trace-smoke: build
+	./target/release/hermes serve --model tiny-gpt --mode pipeload \
+		--disk unthrottled --kv-cache --kv-block-tokens 2 --continuous \
+		--requests 4 --max-batch 1 --trace-out trace_smoke.json
+	$(PY) scripts/validate_trace.py trace_smoke.json
 
 # ThreadSanitizer over the concurrency-heavy test binaries (nightly-only:
 # -Zsanitizer needs -Zbuild-std so std is instrumented too).  PJRT-backed

@@ -1,27 +1,29 @@
 //! `make bench` driver: record a machine-readable perf trajectory so
 //! future PRs can diff serving behavior (`make bench-diff`).
 //!
-//! Six sections, all with unthrottled storage (fast + free of disk
+//! Sections, all with unthrottled storage (fast + free of disk
 //! variance):
 //!
 //! * `one_model`         — generative serve, KV cache OFF (paper decode)
 //! * `one_model_kv`      — same workload with `--kv-cache`
 //! * `router_two_kv_lanes` — tiny-gpt + tiny-gptj lanes on the concurrent
-//!   router under one shared budget (PR 6 semantics; unchanged this PR,
-//!   so it lands identically in both files and diffs flat)
+//!   router under one shared budget
 //! * `continuous_burst`  — bursty multi-client traffic on the same two
-//!   lanes, each burst sharing one system prompt (one seed), recorded
-//!   TWICE under the same key: fixed-batch scheduling into
-//!   `BENCH_pr6.json` and iteration-level continuous batching
-//!   (`--continuous`, cross-request KV prefix sharing) into
-//!   `BENCH_pr7.json`, so `make bench-diff` reports the scheduler's
-//!   throughput delta directly — alongside the new `slo_attained_pct` /
-//!   `kv_dedup_bytes` counters.
+//!   lanes under iteration-level continuous batching (`--continuous`,
+//!   cross-request KV prefix sharing), each burst sharing one system
+//!   prompt (one seed)
 //! * `elastic_shrink_grow` — the KV serve again, with a shrink-grow
-//!   memory-pressure trace resizing the budget mid-run
+//!   memory-pressure trace resizing the budget mid-run; this run carries
+//!   an enabled telemetry bus, and its per-pass accountant high-water
+//!   samples land in the PR 8 file as `mem_high_water` (the serving path
+//!   itself is identical with the bus on — tokens don't change)
 //! * `decode_gpt2_pinned` — a pinned (`--pin-budget-mb`) gpt2-base-sim
-//!   overlapped decode (prefetch + device-resident weights); identical
-//!   in both files — the decode path is unchanged this PR.
+//!   overlapped decode (prefetch + device-resident weights)
+//!
+//! `BENCH_pr7.json` keeps the previous PR's layout; `BENCH_pr8.json` is
+//! the same summaries plus the telemetry-derived `mem_high_water`
+//! timeline, so `make bench-diff` shows the new observability section
+//! (and any perturbation telemetry were to introduce) at a glance.
 //!
 //! The JSON keys are the stable `serve --json` / summary keys (the decode
 //! run uses the `RunReport` keys, incl. `decode_p50_ms` / `decode_p95_ms`
@@ -36,6 +38,7 @@ use hermes::engine::Engine;
 use hermes::server::{
     serve, ConcurrentRouter, InferRequest, RouterConfig, RouterHandle, ServeConfig,
 };
+use hermes::telemetry::Telemetry;
 use hermes::util::json::Value;
 
 /// Submit `n` requests alternating between the two lanes, wait for every
@@ -117,8 +120,6 @@ fn main() -> Result<()> {
     let on = serve(&engine, &on_cfg)?;
 
     // two generative KV lanes overlapping passes under one shared budget
-    // (PR 6 semantics; the fixed-batch concurrent path is unchanged this
-    // PR, so the same run lands in both files)
     let mut lane_b = kv_run.clone();
     lane_b.profile = "tiny-gptj".into();
     let lanes_cfg = RouterConfig {
@@ -135,34 +136,27 @@ fn main() -> Result<()> {
     let router_two = conc.run()?;
     producer.join().expect("producer panicked");
 
-    // PR 7 signal: the same two lanes under bursty shared-prompt traffic,
-    // fixed-batch scheduling vs iteration-level continuous batching.
-    // Small KV blocks so the tiny profiles' prompts seal (and dedup)
-    // whole blocks; identical traffic both runs.
-    let burst_cfg = |continuous: bool| {
-        let mk = |profile: &str| RunConfig {
-            profile: profile.into(),
-            kv_block_tokens: Some(2),
-            continuous,
-            slo_ms: if continuous { Some(10_000.0) } else { None },
-            max_active: if continuous { Some(2) } else { None },
-            ..kv_run.clone()
-        };
-        RouterConfig {
-            models: vec![mk("tiny-gpt"), mk("tiny-gptj")],
-            budget: Some(2 * (gpt + gptj)),
-            kv_budget: Some(1 << 20),
-            max_batch: 2,
-            batch_window: Duration::from_millis(5),
-            concurrent: true,
-            ..RouterConfig::default()
-        }
+    // the same two lanes under bursty shared-prompt traffic with
+    // iteration-level continuous batching.  Small KV blocks so the tiny
+    // profiles' prompts seal (and dedup) whole blocks.
+    let mk_burst = |profile: &str| RunConfig {
+        profile: profile.into(),
+        kv_block_tokens: Some(2),
+        continuous: true,
+        slo_ms: Some(10_000.0),
+        max_active: Some(2),
+        ..kv_run.clone()
     };
-    let conc = ConcurrentRouter::new(engine.paths.clone(), burst_cfg(false))?;
-    let producer = drive_bursts(conc.handle());
-    let burst_fixed = conc.run()?;
-    producer.join().expect("producer panicked");
-    let conc = ConcurrentRouter::new(engine.paths.clone(), burst_cfg(true))?;
+    let burst_cfg = RouterConfig {
+        models: vec![mk_burst("tiny-gpt"), mk_burst("tiny-gptj")],
+        budget: Some(2 * (gpt + gptj)),
+        kv_budget: Some(1 << 20),
+        max_batch: 2,
+        batch_window: Duration::from_millis(5),
+        concurrent: true,
+        ..RouterConfig::default()
+    };
+    let conc = ConcurrentRouter::new(engine.paths.clone(), burst_cfg)?;
     let producer = drive_bursts(conc.handle());
     let burst_cont = conc.run()?;
     producer.join().expect("producer panicked");
@@ -182,14 +176,32 @@ fn main() -> Result<()> {
         PressureStep { at_pass: 4, budget_bytes: elastic_budget * 60 / 100 },
         PressureStep { at_pass: 12, budget_bytes: elastic_budget },
     ])?;
+    // the elastic run carries an enabled event bus: its per-pass
+    // accountant high-water samples become the PR 8 `mem_high_water`
+    // timeline (the bus observes only — the summary is unchanged by it)
+    let telemetry = Telemetry::on();
     let elastic_cfg = ServeConfig {
         run: elastic_run,
         num_requests: 6,
         max_batch: 1, // one request per batch: more pass boundaries for steps
         memory_trace: Some(trace),
+        telemetry: telemetry.clone(),
         ..ServeConfig::default()
     };
     let elastic = serve(&engine, &elastic_cfg)?;
+    let events = telemetry.drain();
+    let high_water: Vec<Value> = events
+        .iter()
+        .filter(|e| e.name == "mem_high_water")
+        .map(|e| e.args.value.unwrap_or(0.0).into())
+        .collect();
+    let budget_epoch_events = events.iter().filter(|e| e.name == "budget_epoch").count();
+    let high_water_len = high_water.len();
+    let mem_high_water = Value::obj()
+        .set("samples", high_water_len)
+        .set("budget_epoch_events", budget_epoch_events)
+        .set("dropped_events", telemetry.dropped())
+        .set("peak_bytes_per_pass", high_water);
 
     // gpt2-base-sim pinned overlapped decode (prefetch + device-resident
     // weights); the single-session decode path is unchanged this PR, so
@@ -210,15 +222,6 @@ fn main() -> Result<()> {
     let (decode, _) = session.run_batch(1, 42)?;
     drop(session);
 
-    let pr6 = Value::obj()
-        .set("bench", "pr6-concurrent-lanes")
-        .set("one_model", off.to_json())
-        .set("one_model_kv", on.to_json())
-        .set("router_two_kv_lanes", router_two.to_json())
-        .set("continuous_burst", burst_fixed.to_json())
-        .set("elastic_shrink_grow", elastic.to_json())
-        .set("decode_gpt2_pinned", decode.to_json());
-    pr6.to_file(&std::path::PathBuf::from("BENCH_pr6.json"))?;
     let pr7 = Value::obj()
         .set("bench", "pr7-continuous-batching")
         .set("one_model", off.to_json())
@@ -228,7 +231,17 @@ fn main() -> Result<()> {
         .set("elastic_shrink_grow", elastic.to_json())
         .set("decode_gpt2_pinned", decode.to_json());
     pr7.to_file(&std::path::PathBuf::from("BENCH_pr7.json"))?;
-    println!("wrote BENCH_pr6.json + BENCH_pr7.json");
+    let pr8 = Value::obj()
+        .set("bench", "pr8-telemetry")
+        .set("one_model", off.to_json())
+        .set("one_model_kv", on.to_json())
+        .set("router_two_kv_lanes", router_two.to_json())
+        .set("continuous_burst", burst_cont.to_json())
+        .set("elastic_shrink_grow", elastic.to_json())
+        .set("mem_high_water", mem_high_water)
+        .set("decode_gpt2_pinned", decode.to_json());
+    pr8.to_file(&std::path::PathBuf::from("BENCH_pr8.json"))?;
+    println!("wrote BENCH_pr7.json + BENCH_pr8.json");
     println!(
         "one-model p50 {:.1} ms (kv off) vs {:.1} ms (kv on, {} incremental passes); \
          elastic: {} budget steps, {} evictions, p50 {:.1} ms",
@@ -248,10 +261,9 @@ fn main() -> Result<()> {
         router_two.concurrent_passes_peak,
     );
     println!(
-        "bursty shared-prompt: {:.2} -> {:.2} tok/s fixed -> continuous \
+        "bursty shared-prompt (continuous): {:.2} tok/s \
          ({} joins / {} leaves / {} shed, SLO attained {:.1}%, \
-         {} shared blocks, {} B deduplicated, queue wait p50 {:.1} -> {:.1} ms)",
-        burst_fixed.tokens_per_sec,
+         {} shared blocks, {} B deduplicated, queue wait p50 {:.1} ms)",
         burst_cont.tokens_per_sec,
         burst_cont.joins,
         burst_cont.leaves,
@@ -259,8 +271,14 @@ fn main() -> Result<()> {
         burst_cont.slo_attained_pct,
         burst_cont.shared_kv_blocks,
         burst_cont.kv_dedup_bytes,
-        burst_fixed.queue_wait_p50_ms,
         burst_cont.queue_wait_p50_ms,
+    );
+    println!(
+        "elastic high-water timeline: {} pass sample(s), {} budget-epoch event(s), \
+         {} telemetry event(s) dropped",
+        high_water_len,
+        budget_epoch_events,
+        telemetry.dropped(),
     );
     println!(
         "gpt2 pinned overlapped decode: token p50 {:.1} ms, {:.2} tokens/s \

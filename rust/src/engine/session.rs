@@ -91,6 +91,7 @@ use crate::pipeload::{
     KV_EVICTED_MIDPASS,
 };
 use crate::planner::Schedule;
+use crate::telemetry::{worker, EvArgs, Telemetry};
 use crate::trace::Tracer;
 
 /// Long-lived pipeline state for one (profile, mode, budget) configuration.
@@ -147,6 +148,9 @@ pub struct Session<'e> {
     /// one record per applied budget step
     epochs: Vec<BudgetEpoch>,
     elastic_totals: ElasticStats,
+    /// structured event bus (off by default: every emit site is behind one
+    /// relaxed atomic load, so an untraced run pays ~nothing)
+    telemetry: Telemetry,
 }
 
 /// Options for opening a [`Session`] — sugar methods on [`Engine`] cover
@@ -400,7 +404,23 @@ impl<'e> Session<'e> {
             elastic: None,
             epochs: Vec::new(),
             elastic_totals: ElasticStats::default(),
+            telemetry: Telemetry::off(),
         })
+    }
+
+    /// Attach a telemetry bus (lane-tagged by the serving layer): the
+    /// session emits `pass` spans, per-pass memory high-water counters,
+    /// and `budget_epoch` instants, and threads the bus into the pass
+    /// machinery (stage load/compute/stall/prefetch/evict spans) and the
+    /// KV pool (dedup/COW instants).  Call before cloning gate/pool
+    /// handles for cross-lane wiring so every consumer sees the bus.
+    pub fn set_telemetry(&mut self, t: Telemetry) {
+        self.ctx.telemetry = t.clone();
+        self.gate.set_telemetry(t.clone());
+        if let Some(p) = &self.kv_pool {
+            p.set_telemetry(t.clone());
+        }
+        self.telemetry = t;
     }
 
     /// Paged KV pool construction: only when the extension is on, the mode
@@ -768,6 +788,15 @@ impl<'e> Session<'e> {
             kv_cap_bytes: self.kv_pool.as_ref().and_then(|p| p.kv_budget()),
             replanned,
         });
+        if self.telemetry.is_on() {
+            self.telemetry.instant(
+                "budget_epoch",
+                worker::DRIVER,
+                EvArgs::pass(self.passes_run as u64)
+                    .with_epoch(self.epochs.len() as u64)
+                    .with_bytes(new_budget),
+            );
+        }
         self.epochs.last().unwrap()
     }
 
@@ -1137,7 +1166,22 @@ impl<'e> Session<'e> {
             prefetch_group: Some(&self.prefetch_group),
             device: self.device.as_ref(),
         };
+        let tel_on = self.telemetry.is_on();
+        if tel_on {
+            self.telemetry.begin("pass", worker::DRIVER, EvArgs::pass(self.pass_epoch));
+        }
         let r = run_pass_mode(&self.ctx, opts, &env, input, mode);
+        if tel_on {
+            self.telemetry.end("pass", worker::DRIVER);
+            // per-pass accountant high-water sample (counter track in the
+            // Chrome trace; the bench trajectory records the same series)
+            self.telemetry.counter(
+                "mem_high_water",
+                worker::DRIVER,
+                self.accountant.peak() as f64,
+                EvArgs::pass(self.pass_epoch),
+            );
+        }
         if r.is_err() {
             // speculative loads may still be mutating the accountant and
             // the pass ledger; wait them out before draining either

@@ -54,9 +54,10 @@
 //! `pos`, so the padding is inert).
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::memory::MemoryAccountant;
+use crate::telemetry::{worker, EvArgs, Telemetry};
 
 /// Default tokens per block (allocation granularity).  Small enough that
 /// tiny test profiles (`max_seq` 16) exercise multi-block sequences.
@@ -228,6 +229,10 @@ pub struct KvPool {
     accountant: MemoryAccountant,
     block_tokens: usize,
     inner: Arc<Mutex<PoolState>>,
+    /// Write-once event bus slot shared by every clone: the pool is cloned
+    /// into gates and victim chains before serving starts, so a plain
+    /// per-clone field could never reach them all after the fact.
+    telemetry: Arc<OnceLock<Telemetry>>,
 }
 
 impl KvPool {
@@ -244,7 +249,19 @@ impl KvPool {
             accountant,
             block_tokens: block_tokens.max(1),
             inner: Arc::new(Mutex::new(PoolState { kv_budget, ..PoolState::default() })),
+            telemetry: Arc::new(OnceLock::new()),
         }
+    }
+
+    /// Attach the structured event bus.  Write-once across all clones
+    /// (later calls are ignored); reading the slot is a cheap atomic, so
+    /// the disabled path stays near-free.
+    pub fn set_telemetry(&self, t: Telemetry) {
+        let _ = self.telemetry.set(t);
+    }
+
+    fn tel(&self) -> Option<&Telemetry> {
+        self.telemetry.get().filter(|t| t.is_on())
     }
 
     pub fn block_tokens(&self) -> usize {
@@ -493,6 +510,9 @@ impl KvPool {
         s.allocated_blocks += 1;
         s.decref(bid); // refs >= 2, so this never frees
         s.seqs.get_mut(&id).unwrap().blocks[layer][idx] = nid;
+        if let Some(t) = self.tel() {
+            t.instant("kv_cow", worker::INFER, EvArgs::default().with_bytes(bytes));
+        }
         Some(nid)
     }
 
@@ -628,6 +648,9 @@ impl KvPool {
         drop(s);
         if refund > 0 {
             self.accountant.free(refund);
+            if let Some(t) = self.tel() {
+                t.instant("kv_dedup", worker::INFER, EvArgs::default().with_bytes(refund));
+            }
         }
     }
 

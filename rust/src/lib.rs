@@ -34,6 +34,7 @@ pub mod runtime;
 pub mod sched;
 pub mod server;
 pub mod signals;
+pub mod telemetry;
 pub mod trace;
 pub mod util;
 pub mod weights;

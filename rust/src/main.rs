@@ -18,9 +18,47 @@ use hermes::engine::Engine;
 use hermes::planner;
 use hermes::report;
 use hermes::server::{serve, RouterConfig, ServeConfig, TcpFrontend};
+use hermes::telemetry::{chrome, Telemetry};
 use hermes::trace::Tracer;
 use hermes::util::cli::{render_help, Args, Opt};
 use hermes::util::{human_bytes, human_ms};
+
+/// The shared `--trace-out` option (run / serve / report --figure 1b).
+fn trace_out_opt() -> Opt {
+    Opt {
+        name: "trace-out",
+        takes_value: true,
+        default: None,
+        help: "write a Chrome trace-event JSON of the run here (load into Perfetto or chrome://tracing)",
+    }
+}
+
+/// An enabled bus when `--trace-out` was passed, the near-free disabled
+/// bus otherwise.
+fn telemetry_for(a: &Args) -> Telemetry {
+    if a.get("trace-out").is_some() {
+        Telemetry::on()
+    } else {
+        Telemetry::off()
+    }
+}
+
+/// Drain the event bus into the `--trace-out` file.  No-op without the
+/// flag.
+fn write_trace_out(a: &Args, telemetry: &Telemetry) -> Result<()> {
+    let Some(path) = a.get("trace-out") else {
+        return Ok(());
+    };
+    let events = telemetry.drain();
+    let dropped = telemetry.dropped();
+    chrome::write_chrome_trace(std::path::Path::new(path), &events, dropped)?;
+    eprintln!(
+        "hermes: wrote {} trace event(s) -> {path}{}",
+        events.len(),
+        if dropped > 0 { format!(" ({dropped} dropped: ring full)") } else { String::new() }
+    );
+    Ok(())
+}
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -217,6 +255,7 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "batch", takes_value: true, default: Some("1"), help: "batch size (must be AOT-compiled)" });
     opts.push(Opt { name: "tokens", takes_value: true, default: None, help: "generated tokens (generative models)" });
     opts.push(Opt { name: "trace", takes_value: false, default: None, help: "print the execution Gantt chart" });
+    opts.push(trace_out_opt());
     opts.push(Opt { name: "schedule", takes_value: true, default: None, help: "pick #LAs from a planner schedule JSON given --budget-mb (with --memory-trace, re-consulted on every budget step)" });
     opts.push(Opt { name: "memory-trace", takes_value: true, default: None, help: "elastic budget: JSON steps file {\"steps\":[{\"at_pass\":N,\"budget_mb\":X},...]}, or 'shrink-grow' to synthesize one from --budget-mb" });
     let a = Args::parse(rest, &opts)?;
@@ -268,6 +307,8 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         builder = builder.schedule(s);
     }
     let mut session = builder.open()?;
+    let telemetry = telemetry_for(&a);
+    session.set_telemetry(telemetry.clone());
     let (rep, out) = session.run()?;
     println!("model={} mode={} agents={}", rep.model, rep.mode, rep.agents);
     println!("  latency:    {}", human_ms(rep.latency_ms));
@@ -334,6 +375,7 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         println!("\n{}", tracer.ascii_gantt(100));
         println!("inference idle fraction: {:.0}%", tracer.inference_idle_fraction().unwrap_or(0.0) * 100.0);
     }
+    write_trace_out(&a, &telemetry)?;
     Ok(())
 }
 
@@ -360,6 +402,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "concurrent", takes_value: false, default: None, help: "run lanes concurrently (one executor thread + engine per model, shared budget); --listen only" });
     opts.push(Opt { name: "lane-weights", takes_value: true, default: None, help: "comma-separated admission weights, one per model (with --concurrent; default all-equal)" });
     opts.push(Opt { name: "workers", takes_value: true, default: None, help: "total Loading-Agent threads split across pipeload lanes by weight (with --concurrent; overrides --agents)" });
+    opts.push(trace_out_opt());
     opts.push(Opt { name: "json", takes_value: false, default: None, help: "print the machine-readable summary instead of the human one" });
     let a = Args::parse(rest, &opts)?;
     if a.flag("help") {
@@ -441,9 +484,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             worker_allotment,
             ..RouterConfig::default()
         };
-        let frontend = TcpFrontend::bind(addr)?;
+        let telemetry = telemetry_for(&a);
+        let mut frontend = TcpFrontend::bind(addr)?;
+        frontend.set_telemetry(telemetry.clone());
         eprintln!("hermes serve: listening on {} ({} model(s): {})", frontend.local_addr()?, models.len(), models.join(", "));
         let s = frontend.run(&engine, router_cfg)?;
+        write_trace_out(&a, &telemetry)?;
         if a.flag("json") {
             println!("{}", s.to_json().pretty());
         } else {
@@ -483,6 +529,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     }
     let mut run = runs.into_iter().next().unwrap();
     run.kv_budget = kv_budget;
+    let telemetry = telemetry_for(&a);
     let cfg = ServeConfig {
         run,
         num_requests: a.usize("requests")?,
@@ -490,9 +537,11 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         max_batch: a.usize("max-batch")?,
         slo_ms: a.f64("slo-ms")?,
         memory_trace,
+        telemetry: telemetry.clone(),
         ..ServeConfig::default()
     };
     let s = serve(&engine, &cfg)?;
+    write_trace_out(&a, &telemetry)?;
     if a.flag("json") {
         println!("{}", s.to_json().pretty());
         return Ok(());
@@ -551,6 +600,7 @@ fn cmd_report(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "tokens", takes_value: true, default: None, help: "generated tokens override (speeds up sweeps)" });
     opts.push(Opt { name: "fresh", takes_value: false, default: None, help: "ignore cached sweep results" });
     opts.push(Opt { name: "all", takes_value: false, default: None, help: "print every table and figure" });
+    opts.push(trace_out_opt());
     let a = Args::parse(rest, &opts)?;
     if a.flag("help") {
         println!("{}", render_help("report", "regenerate paper tables/figures", &opts));
@@ -588,7 +638,10 @@ fn cmd_report(rest: &[String]) -> Result<()> {
             "2" => println!("{}", report::fig2(&engine)?),
             "3" => println!("{}", report::fig3(&engine, disk)?),
             "7" => println!("{}", report::fig7(&engine, disk, &[0.15, 0.25, 0.4, 0.6, 0.8], 8)?),
-            "1b" => println!("{}", report::fig1b(&engine, disk, a.req("model")?)?),
+            "1b" => {
+                let trace_out = a.get("trace-out").map(std::path::Path::new);
+                println!("{}", report::fig1b(&engine, disk, a.req("model")?, trace_out)?);
+            }
             _ => bail!("unknown figure '{f}'"),
         }
     }

@@ -5,10 +5,20 @@ use std::time::Duration;
 
 use crate::util::json::Value;
 
+/// Default `le` bucket bounds (ms) for the Prometheus latency histogram.
+pub const DEFAULT_BUCKETS_MS: [f64; 12] =
+    [1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1000.0, 2000.0, 5000.0];
+
 /// Latency sample recorder with percentile queries.
+///
+/// Samples are mirrored into a sorted vector at record time
+/// (binary-search insert), so every percentile query is an index — the
+/// old implementation cloned and re-sorted ALL samples on each of the
+/// p50/p95/p99 calls a single summary makes.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyRecorder {
     samples_ms: Vec<f64>,
+    sorted_ms: Vec<f64>,
 }
 
 impl LatencyRecorder {
@@ -17,11 +27,13 @@ impl LatencyRecorder {
     }
 
     pub fn record(&mut self, d: Duration) {
-        self.samples_ms.push(d.as_secs_f64() * 1000.0);
+        self.record_ms(d.as_secs_f64() * 1000.0);
     }
 
     pub fn record_ms(&mut self, ms: f64) {
         self.samples_ms.push(ms);
+        let i = self.sorted_ms.partition_point(|&x| x <= ms);
+        self.sorted_ms.insert(i, ms);
     }
 
     pub fn len(&self) -> usize {
@@ -39,14 +51,12 @@ impl LatencyRecorder {
         self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
     }
 
-    /// Percentile via nearest-rank on a sorted copy (p in [0,1]).
+    /// Percentile via nearest-rank on the sorted mirror (p in [0,1]).
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples_ms.is_empty() {
+        if self.sorted_ms.is_empty() {
             return 0.0;
         }
-        let mut v = self.samples_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        v[(((v.len() - 1) as f64) * p) as usize]
+        self.sorted_ms[(((self.sorted_ms.len() - 1) as f64) * p) as usize]
     }
 
     pub fn p50(&self) -> f64 {
@@ -62,12 +72,23 @@ impl LatencyRecorder {
     }
 
     pub fn max(&self) -> f64 {
-        self.samples_ms.iter().copied().fold(0.0, f64::max)
+        self.sorted_ms.last().copied().unwrap_or(0.0).max(0.0)
     }
 
     /// Raw samples in milliseconds, in record order (summary merging).
     pub fn samples_ms(&self) -> &[f64] {
         &self.samples_ms
+    }
+
+    /// Sum of all samples (the Prometheus `_sum` series).
+    pub fn sum_ms(&self) -> f64 {
+        self.samples_ms.iter().sum()
+    }
+
+    /// Cumulative bucket counts — samples `<=` each bound, in bound
+    /// order (the Prometheus `le` histogram semantics).
+    pub fn cumulative_buckets(&self, bounds_ms: &[f64]) -> Vec<u64> {
+        bounds_ms.iter().map(|&b| self.sorted_ms.partition_point(|&x| x <= b) as u64).collect()
     }
 
     pub fn to_json(&self) -> Value {
@@ -201,6 +222,41 @@ pub fn check_slo(lat: &LatencyRecorder, target_ms: f64) -> SloReport {
 }
 
 // ---------------------------------------------------------------------------
+// Prometheus text exposition (the `{"op":"metrics"}` TCP surface)
+// ---------------------------------------------------------------------------
+
+/// Append one `counter`-typed metric in Prometheus text format.
+pub fn prometheus_counter(out: &mut String, name: &str, help: &str, v: u64) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// Append one `gauge`-typed metric in Prometheus text format.
+pub fn prometheus_gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// Append one latency histogram (cumulative `le` buckets over
+/// [`DEFAULT_BUCKETS_MS`] plus `+Inf`, `_sum`, `_count`).
+pub fn prometheus_histogram(out: &mut String, name: &str, help: &str, lat: &LatencyRecorder) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let counts = lat.cumulative_buckets(&DEFAULT_BUCKETS_MS);
+    for (bound, count) in DEFAULT_BUCKETS_MS.iter().zip(counts) {
+        let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {count}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", lat.len());
+    let _ = writeln!(out, "{name}_sum {}", lat.sum_ms());
+    let _ = writeln!(out, "{name}_count {}", lat.len());
+}
+
+// ---------------------------------------------------------------------------
 // fixed-width table rendering (the report harness prints paper-style rows)
 // ---------------------------------------------------------------------------
 
@@ -284,7 +340,53 @@ mod tests {
         let l = LatencyRecorder::new();
         assert_eq!(l.p95(), 0.0);
         assert_eq!(l.mean(), 0.0);
+        assert_eq!(l.max(), 0.0);
         assert!(l.is_empty());
+        assert!(l.cumulative_buckets(&DEFAULT_BUCKETS_MS).iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn unsorted_records_query_correctly() {
+        // the sorted mirror must hold regardless of arrival order
+        let mut l = LatencyRecorder::new();
+        for v in [50.0, 3.0, 99.0, 1.0, 75.0, 2.0, 60.0] {
+            l.record_ms(v);
+        }
+        assert_eq!(l.max(), 99.0);
+        assert_eq!(l.percentile(0.0), 1.0);
+        assert_eq!(l.percentile(1.0), 99.0);
+        assert_eq!(l.p50(), 50.0);
+        // record order is preserved for merging
+        assert_eq!(l.samples_ms()[0], 50.0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let mut l = LatencyRecorder::new();
+        for v in [0.5, 1.5, 4.0, 9.0, 150.0] {
+            l.record_ms(v);
+        }
+        let c = l.cumulative_buckets(&[1.0, 5.0, 100.0]);
+        assert_eq!(c, vec![1, 3, 4]);
+        assert!((l.sum_ms() - 165.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prometheus_text_shapes() {
+        let mut l = LatencyRecorder::new();
+        l.record_ms(3.0);
+        l.record_ms(7000.0); // beyond the largest bound: only +Inf holds it
+        let mut out = String::new();
+        prometheus_counter(&mut out, "hermes_served_total", "requests served", 4);
+        prometheus_gauge(&mut out, "hermes_peak_bytes", "peak accountant bytes", 123.0);
+        prometheus_histogram(&mut out, "hermes_latency_ms", "end-to-end latency", &l);
+        assert!(out.contains("# TYPE hermes_served_total counter"));
+        assert!(out.contains("hermes_served_total 4"));
+        assert!(out.contains("hermes_peak_bytes 123"));
+        assert!(out.contains("hermes_latency_ms_bucket{le=\"5\"} 1"));
+        assert!(out.contains("hermes_latency_ms_bucket{le=\"5000\"} 1"));
+        assert!(out.contains("hermes_latency_ms_bucket{le=\"+Inf\"} 2"));
+        assert!(out.contains("hermes_latency_ms_count 2"));
     }
 
     #[test]

@@ -81,6 +81,7 @@ use super::device::DeviceLedger;
 use super::prefetch::PrefetchBuffer;
 use crate::kvcache::KvPool;
 use crate::memory::{MemoryAccountant, PassLedger};
+use crate::telemetry::{worker, EvArgs, Telemetry};
 
 /// Fleet-wide reclaim token: serializes full eviction-chain walks across
 /// concurrently-running lanes.  Two lanes evicting each other's victims
@@ -186,6 +187,10 @@ pub struct OrderedGate {
     /// through here, so failed-pass recovery can drain exactly this pass's
     /// outstanding bytes without touching other lanes' charges.
     ledger: PassLedger,
+    /// Event bus for evict-with-cause instants.  Per-clone: set before the
+    /// gate's clones escape into worker tasks, so cross-lane evictions are
+    /// attributed to the lane whose admission applied the pressure.
+    telemetry: Telemetry,
     /// Fleet-wide eviction-chain lock (shared across a Router's lanes).
     reclaim: ReclaimToken,
     /// Other lanes' gate states on the same shared accountant.  A free on
@@ -208,6 +213,7 @@ impl OrderedGate {
             victim_devices: Vec::new(),
             kv_pools: Vec::new(),
             ledger,
+            telemetry: Telemetry::off(),
             reclaim: ReclaimToken::new(),
             peers: Vec::new(),
             state: Arc::new((
@@ -276,6 +282,13 @@ impl OrderedGate {
         &self.ledger
     }
 
+    /// Attach the structured event bus (lane-tagged).  Like `add_victim`,
+    /// this must happen while the session is being wired — before the
+    /// gate's clones escape into the worker pool.
+    pub fn set_telemetry(&mut self, t: Telemetry) {
+        self.telemetry = t;
+    }
+
     /// Share one fleet-wide [`ReclaimToken`] across every lane's gate.
     /// Must be called before concurrent serving starts (while the session
     /// is still being wired, same as `add_victim`).
@@ -338,6 +351,20 @@ impl OrderedGate {
     /// pins, victim device copies, then cached KV sequences.  Returns true
     /// if anything was reclaimed (the stalled admitter retries).
     fn evict_chain_for(&self, bytes: u64) -> bool {
+        let reclaimed = self.evict_chain_step(bytes);
+        if reclaimed && self.telemetry.is_on() {
+            self.telemetry.instant(
+                "evict",
+                worker::DAEMON,
+                EvArgs::default().with_reason("pressure"),
+            );
+        }
+        reclaimed
+    }
+
+    /// The chain body of [`OrderedGate::evict_chain_for`], one rung per
+    /// call (split so the wrapper can tag the reclaim's cause).
+    fn evict_chain_step(&self, bytes: u64) -> bool {
         if let Some(p) = &self.prefetch {
             if p.evict_for(bytes, &self.accountant) > 0 {
                 return true;
@@ -552,6 +579,13 @@ impl OrderedGate {
         }
         let ev1 = self.chain_eviction_count();
         self.notify_waiters();
+        if freed > 0 && self.telemetry.is_on() {
+            self.telemetry.instant(
+                "evict",
+                worker::DAEMON,
+                EvArgs::default().with_bytes(freed).with_reason("elastic"),
+            );
+        }
         (freed, ev1 - ev0)
     }
 

@@ -71,6 +71,7 @@ use crate::memory::MemoryAccountant;
 use crate::model::{Profile, StageSpec, TensorSpec};
 use crate::runtime::{literal_for_spec, Runtime};
 use crate::signals::{Signal, SignalLog};
+use crate::telemetry::{worker, EvArgs, Telemetry};
 use crate::trace::{Kind, Lane, Tracer};
 use crate::weights::Shard;
 use cache::LayerCache;
@@ -153,6 +154,9 @@ pub struct ExecCtx<'rt> {
     pub shard_dir: PathBuf,
     pub disk: Disk,
     pub tracer: Tracer,
+    /// structured event bus (off by default; attach via
+    /// `Session::set_telemetry` or directly for one-shot passes)
+    pub telemetry: Telemetry,
     pub signals: SignalLog,
     pub batch: usize,
 }
@@ -166,6 +170,7 @@ impl<'rt> ExecCtx<'rt> {
             shard_dir: weights_dir.join(&profile.name),
             disk,
             tracer: Tracer::disabled(),
+            telemetry: Telemetry::off(),
             signals: SignalLog::new(),
             batch: 1,
         })
@@ -353,6 +358,8 @@ pub fn run_pass_mode(
         buffer: env.prefetch.cloned(),
         disk: ctx.disk.clone(),
         tracer: ctx.tracer.clone(),
+        telemetry: ctx.telemetry.clone(),
+        epoch: env.epoch,
         signals: ctx.signals.clone(),
         shard_dir: ctx.shard_dir.clone(),
     });
@@ -567,6 +574,7 @@ fn inference_core(
 ) -> Result<(xla::PjRtBuffer, ())> {
     let mut pending: HashMap<usize, StageMsg> = HashMap::new();
     let n_stages = profile.stages.len();
+    let tel_on = ctx.telemetry.is_on();
     let incremental = matches!(mode, PassMode::Incremental { .. });
     let body_kind = profile.body_kind();
     // ordinal of the current body stage among the KV sequence's layers
@@ -585,6 +593,7 @@ fn inference_core(
         // wait for S_comp(k) — the inference queue guarantees order
         while !pending.contains_key(&k) {
             let t0 = ctx.tracer.now_ms();
+            let t0_us = if tel_on { ctx.telemetry.now_us() } else { 0 };
             match rx_load.recv() {
                 Ok(LoadMsg::Stage(msg)) => {
                     let t1 = ctx.tracer.now_ms();
@@ -594,6 +603,14 @@ fn inference_core(
                     if t1 - t0 > STALL_EPS_MS {
                         ctx.tracer.record(Lane::Inference, Kind::StallWait, Some(k), t0, t1);
                         stats.wait_stall_ms += t1 - t0;
+                        if tel_on {
+                            ctx.telemetry.span(
+                                "stall_wait",
+                                worker::INFER,
+                                t0_us,
+                                EvArgs::stage(k),
+                            );
+                        }
                     }
                     pending.insert(msg.stage, msg);
                 }
@@ -694,6 +711,9 @@ fn inference_core(
         let device_ref = device.and_then(|d| d.begin_use(k));
         let fresh_bufs: Option<Vec<xla::PjRtBuffer>> = if device_ref.is_some() {
             stats.device_cache_hits += 1;
+            if tel_on {
+                ctx.telemetry.instant("device_hit", worker::INFER, EvArgs::stage(k));
+            }
             None
         } else {
             gate.force_add(msg.bytes);
@@ -740,6 +760,7 @@ fn inference_core(
         }
 
         let t0 = ctx.tracer.now_ms();
+        let t0_us = if tel_on { ctx.telemetry.now_us() } else { 0 };
         let out = ctx
             .runtime
             .execute_entry_with(profile, entry, &act_refs, weights)
@@ -747,6 +768,9 @@ fn inference_core(
         let t1 = ctx.tracer.now_ms();
         ctx.tracer.record(Lane::Inference, Kind::Compute, Some(k), t0, t1);
         stats.compute_ms_total += t1 - t0;
+        if tel_on {
+            ctx.telemetry.span("compute", worker::INFER, t0_us, EvArgs::stage(k));
+        }
         // Device-copy disposal: a cache hit just releases its in-use flag;
         // a fresh upload is either retained (bytes stay accounted with the
         // device cache, next pass skips the upload) or dropped + freed.

@@ -44,6 +44,7 @@ use super::{StageMsg, STALL_EPS_MS};
 use crate::diskio::Disk;
 use crate::model::TensorSpec;
 use crate::signals::{Signal, SignalLog};
+use crate::telemetry::{worker, EvArgs, Telemetry};
 use crate::trace::{Kind, Lane, Tracer};
 use crate::weights::{read_shard_from, validate_against, Shard};
 
@@ -64,6 +65,9 @@ pub(crate) struct PassShared {
     pub buffer: Option<PrefetchBuffer>,
     pub disk: Disk,
     pub tracer: Tracer,
+    pub telemetry: Telemetry,
+    /// this pass's admission epoch — tags every worker-side event
+    pub epoch: u64,
     pub signals: SignalLog,
     pub shard_dir: PathBuf,
 }
@@ -300,6 +304,7 @@ fn load_shard(shared: &PassShared, job: &StageJob) -> Result<Shard> {
 /// accumulation).
 fn run_pass_task(t: PassTask) {
     let sh = &*t.shared;
+    let tel_on = sh.telemetry.is_on();
     let mut stall_ms = 0.0f64;
     let mut load_ms = 0.0f64;
     'jobs: for job in &t.jobs {
@@ -326,6 +331,7 @@ fn run_pass_task(t: PassTask) {
             // will free them through the pass ledger when the stage dies
             sh.gate.adopt(bytes);
             let t_gate0 = sh.tracer.now_ms();
+            let t_gate0_us = if tel_on { sh.telemetry.now_us() } else { 0 };
             let waited = match sh.gate.skip_at(t.epoch, stage_idx) {
                 Ok(w) => w,
                 Err(e) => {
@@ -344,6 +350,14 @@ fn run_pass_task(t: PassTask) {
                 );
                 sh.signals.emit(Signal::Stop { agent: t.agent, ms: waited_ms });
                 stall_ms += waited_ms;
+                if tel_on {
+                    sh.telemetry.span(
+                        "stall_mem",
+                        worker::loader(t.agent),
+                        t_gate0_us,
+                        EvArgs::stage(stage_idx).with_epoch(t.epoch),
+                    );
+                }
             }
             sh.signals.emit(Signal::Comp { stage: stage_idx, agent: t.agent });
             let _ = t.tx.send(LoadMsg::Stage(StageMsg {
@@ -359,6 +373,7 @@ fn run_pass_task(t: PassTask) {
         }
         // S^stop: wait for the Daemon's memory admission (epoch-ordered).
         let t_gate0 = sh.tracer.now_ms();
+        let t_gate0_us = if tel_on { sh.telemetry.now_us() } else { 0 };
         let waited = match sh.gate.admit_at(t.epoch, stage_idx, job.bytes) {
             Ok(w) => w,
             Err(e) => {
@@ -379,14 +394,31 @@ fn run_pass_task(t: PassTask) {
             );
             sh.signals.emit(Signal::Stop { agent: t.agent, ms: waited_ms });
             stall_ms += waited_ms;
+            if tel_on {
+                sh.telemetry.span(
+                    "stall_mem",
+                    worker::loader(t.agent),
+                    t_gate0_us,
+                    EvArgs::stage(stage_idx).with_epoch(t.epoch),
+                );
+            }
         }
         // Load disk -> memory through the throttled stream.
         let t0 = sh.tracer.now_ms();
+        let t0_us = if tel_on { sh.telemetry.now_us() } else { 0 };
         match load_shard(sh, job) {
             Ok(shard) => {
                 let t1 = sh.tracer.now_ms();
                 sh.tracer.record(Lane::Loader(t.agent), Kind::Load, Some(stage_idx), t0, t1);
                 load_ms += t1 - t0;
+                if tel_on {
+                    sh.telemetry.span(
+                        "load",
+                        worker::loader(t.agent),
+                        t0_us,
+                        EvArgs::stage(stage_idx).with_epoch(t.epoch).with_bytes(job.bytes),
+                    );
+                }
                 // S_comp: layer ready for computation.
                 sh.signals.emit(Signal::Comp { stage: stage_idx, agent: t.agent });
                 let _ = t.tx.send(LoadMsg::Stage(StageMsg {
@@ -412,6 +444,7 @@ fn run_pass_task(t: PassTask) {
 /// memory; speculation only ever takes free slack).
 fn run_prefetch_task(t: PrefetchTask) {
     let sh = &*t.shared;
+    let tel_on = sh.telemetry.is_on();
     let Some(buffer) = sh.buffer.as_ref() else {
         t.group.exit();
         return;
@@ -426,6 +459,7 @@ fn run_prefetch_task(t: PrefetchTask) {
             break;
         }
         let t0 = sh.tracer.now_ms();
+        let t0_us = if tel_on { sh.telemetry.now_us() } else { 0 };
         match load_shard(sh, job) {
             Ok(shard) => {
                 sh.tracer.record(
@@ -435,6 +469,14 @@ fn run_prefetch_task(t: PrefetchTask) {
                     t0,
                     sh.tracer.now_ms(),
                 );
+                if tel_on {
+                    sh.telemetry.span(
+                        "prefetch",
+                        worker::loader(t.agent),
+                        t0_us,
+                        EvArgs::stage(job.stage).with_epoch(sh.epoch).with_bytes(job.bytes),
+                    );
+                }
                 if buffer.put(job.stage, Arc::new(shard), job.bytes) {
                     // parked in the buffer: now store-owned, not a charge
                     // failed-pass recovery may drain
@@ -456,6 +498,7 @@ fn run_prefetch_task(t: PrefetchTask) {
 /// stage, then ack so the pass boundary knows every decision landed.
 fn run_daemon_task(t: DaemonTask) {
     let sh = &*t.shared;
+    let tel_on = sh.telemetry.is_on();
     let mut kept: Vec<StageMsg> = Vec::new();
     for msg in t.rx {
         if t.destroy {
@@ -484,12 +527,26 @@ fn run_daemon_task(t: DaemonTask) {
                         t0,
                         sh.tracer.now_ms(),
                     );
+                    if tel_on {
+                        sh.telemetry.instant(
+                            "pin",
+                            worker::DAEMON,
+                            EvArgs::stage(msg.stage).with_epoch(sh.epoch).with_bytes(msg.bytes),
+                        );
+                    }
                     continue;
                 }
             }
             drop(msg.shard); // the destruction
             sh.gate.free(msg.bytes);
             sh.tracer.record(Lane::Daemon, Kind::Destroy, Some(msg.stage), t0, sh.tracer.now_ms());
+            if tel_on {
+                sh.telemetry.instant(
+                    "destroy",
+                    worker::DAEMON,
+                    EvArgs::stage(msg.stage).with_epoch(sh.epoch).with_bytes(msg.bytes),
+                );
+            }
         } else {
             kept.push(msg); // standard pipeline: stays resident
         }

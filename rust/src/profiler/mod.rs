@@ -147,6 +147,7 @@ pub fn profile_model(
         shard_dir: weights_dir.join(&profile.name),
         disk: disk.clone(),
         tracer: crate::trace::Tracer::disabled(),
+        telemetry: crate::telemetry::Telemetry::off(),
         signals: crate::signals::SignalLog::new(),
         batch,
     };

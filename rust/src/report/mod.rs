@@ -25,6 +25,7 @@ use crate::engine::{make_input, Engine};
 use crate::metrics::{fmt_mb, fmt_ms, fmt_ratio, RunReport, Table};
 use crate::planner;
 use crate::profiler::{profile_model, ModelProfile};
+use crate::telemetry::Telemetry;
 use crate::trace::Tracer;
 use crate::util::json::Value;
 
@@ -399,8 +400,23 @@ pub fn fig7(engine: &Engine, disk_name: &str, fractions: &[f64], max_agents: usi
 }
 
 /// Fig 1b / Obs II: pipeline-stall illustration on the standard pipeline.
-pub fn fig1b(engine: &Engine, disk_name: &str, model: &str) -> Result<String> {
+///
+/// The ASCII Gantt is the fixed single-session rendering; pass a
+/// `trace_out` path to also export the same run as Chrome trace-event
+/// JSON (load it into Perfetto / `chrome://tracing` for the zoomable
+/// version — that backend scales to multi-lane serving traces where the
+/// ASCII chart cannot).
+pub fn fig1b(
+    engine: &Engine,
+    disk_name: &str,
+    model: &str,
+    trace_out: Option<&std::path::Path>,
+) -> Result<String> {
     let tracer = Tracer::new(true);
+    let telemetry = match trace_out {
+        Some(_) => Telemetry::on(),
+        None => Telemetry::off(),
+    };
     let cfg = RunConfig {
         profile: model.into(),
         mode: Mode::PipeSwitch,
@@ -408,7 +424,9 @@ pub fn fig1b(engine: &Engine, disk_name: &str, model: &str) -> Result<String> {
         trace: true,
         ..RunConfig::default()
     };
-    let (report, _) = engine.run_with(&cfg, &tracer)?;
+    let mut session = engine.session(&cfg).tracer(&tracer).open()?;
+    session.set_telemetry(telemetry.clone());
+    let (report, _) = session.run()?;
     let idle = tracer.inference_idle_fraction().unwrap_or(0.0);
     let mut out = format!(
         "Fig 1b: pipeline stall under the standard pipeline ({model}, disk={disk_name})\n\
@@ -418,6 +436,15 @@ pub fn fig1b(engine: &Engine, disk_name: &str, model: &str) -> Result<String> {
         report.latency_ms
     );
     out.push_str(&tracer.ascii_gantt(100));
+    if let Some(path) = trace_out {
+        let events = telemetry.drain();
+        crate::telemetry::chrome::write_chrome_trace(path, &events, telemetry.dropped())?;
+        out.push_str(&format!(
+            "\nchrome trace: {} event(s) -> {}\n",
+            events.len(),
+            path.display()
+        ));
+    }
     Ok(out)
 }
 

@@ -66,6 +66,17 @@ pub enum DropReason {
     Overload,
 }
 
+impl DropReason {
+    /// Wire slug for the structured `reason` field on rejected responses
+    /// (the serving layer's reject taxonomy counts these per reason).
+    pub fn slug(&self) -> &'static str {
+        match self {
+            DropReason::Expired => "deadline_expired",
+            DropReason::Overload => "shed_overload",
+        }
+    }
+}
+
 /// One queued request: admission metadata plus the caller's payload
 /// (the serving loops carry their `PendingReq` here).
 #[derive(Debug)]

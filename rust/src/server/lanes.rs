@@ -41,8 +41,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use super::router::{
-    kv_shares, pick_batch, scaled_share, Envelope, InferResponse, ModelStats, PendingReq,
-    RouterConfig, RouterHandle, RouterSummary,
+    kv_shares, pick_batch, reject_reason, scaled_share, Envelope, InferResponse, ModelStats,
+    PendingReq, RejectReasons, RouterConfig, RouterHandle, RouterSummary,
 };
 use crate::config::{Mode, Paths, RunConfig};
 use crate::elastic::BudgetController;
@@ -57,6 +57,7 @@ use crate::sched::{
 use crate::pipeload::cache::LayerCache;
 use crate::pipeload::device::DeviceLedger;
 use crate::pipeload::gate::{OrderedGate, ReclaimToken};
+use crate::telemetry::{worker, EvArgs, Telemetry};
 
 /// Virtual-time slack for the weighted admission check: a lane may start
 /// while it is at most this many weighted batches ahead of the most
@@ -197,7 +198,21 @@ enum LaneMsg {
     /// fleet budget step: the shared accountant is already resized; this
     /// lane re-derives its caps (and agent slice) at its pass boundary
     Budget { budget: u64, kv_cap: Option<u64>, agents: Option<usize> },
+    /// live stats probe: the lane answers with a mid-flight snapshot at
+    /// its next pass / token boundary
+    Stats(mpsc::Sender<LaneSnapshot>),
     Quit,
+}
+
+/// Mid-flight (or exit-time) per-lane serving snapshot — everything the
+/// fleet aggregation needs beyond the per-model counters themselves.
+struct LaneSnapshot {
+    batch_sizes: usize,
+    peak: u64,
+    tokens: u64,
+    sched: SchedStats,
+    first_error: Option<String>,
+    stats: ModelStats,
 }
 
 /// The `Send` handles one lane publishes so every other lane can wire it
@@ -224,6 +239,7 @@ struct LaneSeed {
     up_tx: mpsc::Sender<Result<LaneWiring>>,
     down_rx: mpsc::Receiver<WirePack>,
     ready_tx: mpsc::Sender<()>,
+    telemetry: Telemetry,
 }
 
 /// Fleet-wide elastic control shared by every lane executor.  The lane
@@ -315,6 +331,7 @@ struct LaneOutcome {
     aborted: bool,
     served: usize,
     rejected: usize,
+    reject_reasons: RejectReasons,
     batches: usize,
     batch_sizes: usize,
     peak: u64,
@@ -335,6 +352,7 @@ impl LaneOutcome {
             aborted: false,
             served: 0,
             rejected: 0,
+            reject_reasons: RejectReasons::default(),
             batches: 0,
             batch_sizes: 0,
             peak: 0,
@@ -371,6 +389,7 @@ pub struct ConcurrentRouter {
     tx: Option<mpsc::Sender<Envelope>>,
     rx: mpsc::Receiver<Envelope>,
     ids: Arc<AtomicU64>,
+    telemetry: Telemetry,
 }
 
 impl ConcurrentRouter {
@@ -441,7 +460,15 @@ impl ConcurrentRouter {
             tx: Some(tx),
             rx,
             ids: Arc::new(AtomicU64::new(0)),
+            telemetry: Telemetry::off(),
         })
+    }
+
+    /// Attach a telemetry bus.  Each lane executor gets a lane-tagged
+    /// clone at spawn and threads it into its session, so trace rows are
+    /// `pid = lane`, `tid = worker` fleet-wide.
+    pub fn set_telemetry(&mut self, t: Telemetry) {
+        self.telemetry = t;
     }
 
     /// A cloneable submission handle (same type the serialized router
@@ -485,6 +512,7 @@ impl ConcurrentRouter {
                 up_tx,
                 down_rx,
                 ready_tx: ready_tx.clone(),
+                telemetry: self.telemetry.with_lane(idx as u32),
             });
         }
         drop(ready_tx);
@@ -505,13 +533,15 @@ impl ConcurrentRouter {
 
         let max_batch = self.cfg.max_batch;
         let batch_window = self.cfg.batch_window;
+        let budget = self.cfg.budget;
         let rx = &self.rx;
+        let telemetry = self.telemetry.clone();
         let profiles: Vec<String> = self.runs.iter().map(|r| r.profile.clone()).collect();
         let paths = self.paths.clone();
         let accountant = self.accountant.clone();
 
-        let (outcomes, unroutable) = std::thread::scope(
-            |scope| -> Result<(Vec<LaneOutcome>, usize)> {
+        let (outcomes, unroutable, unroutable_reasons) = std::thread::scope(
+            |scope| -> Result<(Vec<LaneOutcome>, usize, RejectReasons)> {
                 let mut joins = Vec::with_capacity(n);
                 for seed in seeds {
                     let paths = paths.clone();
@@ -578,30 +608,76 @@ impl ConcurrentRouter {
 
                 // phase 4: route envelopes to lane executors
                 let mut unroutable = 0usize;
+                let mut unroutable_reasons = RejectReasons::default();
                 loop {
                     match rx.recv() {
                         Ok(Envelope::Shutdown) => break,
+                        Ok(Envelope::Stats(reply)) => {
+                            // probe every live lane; each answers with a
+                            // snapshot harvested on its own thread at its
+                            // next pass / token boundary
+                            let mut probes = Vec::with_capacity(lane_txs.len());
+                            for tx in &lane_txs {
+                                let (stx, srx) = mpsc::channel();
+                                if tx.send(LaneMsg::Stats(stx)).is_ok() {
+                                    probes.push(srx);
+                                }
+                            }
+                            let snaps: Vec<LaneSnapshot> =
+                                probes.into_iter().filter_map(|srx| srx.recv().ok()).collect();
+                            let _ = reply.send(summarize_lanes(
+                                snaps,
+                                unroutable,
+                                unroutable_reasons,
+                                t_start.elapsed().as_secs_f64(),
+                                budget,
+                                fleet.steps(),
+                                governor.peak() as u64,
+                            ));
+                        }
                         Ok(Envelope::Infer(p)) => {
                             match profiles.iter().position(|m| *m == p.req.profile) {
                                 Some(i) => {
+                                    if telemetry.is_on() {
+                                        telemetry.with_lane(i as u32).instant(
+                                            "enqueue",
+                                            worker::DRIVER,
+                                            EvArgs::req(p.id),
+                                        );
+                                    }
                                     if let Err(mpsc::SendError(LaneMsg::Req(p))) =
                                         lane_txs[i].send(LaneMsg::Req(p))
                                     {
                                         unroutable += 1;
+                                        unroutable_reasons.note(reject_reason::LANE_DEAD);
+                                        telemetry.with_lane(i as u32).instant(
+                                            "shed",
+                                            worker::DRIVER,
+                                            EvArgs::req(p.id)
+                                                .with_reason(reject_reason::LANE_DEAD),
+                                        );
                                         let _ = p.reply.send(InferResponse::rejected(
                                             p.id,
                                             &p.req.profile,
                                             p.enqueued,
+                                            reject_reason::LANE_DEAD,
                                             "lane exited before serving this request",
                                         ));
                                     }
                                 }
                                 None => {
                                     unroutable += 1;
+                                    unroutable_reasons.note(reject_reason::VALIDATION);
+                                    telemetry.instant(
+                                        "shed",
+                                        worker::DRIVER,
+                                        EvArgs::req(p.id).with_reason(reject_reason::VALIDATION),
+                                    );
                                     let _ = p.reply.send(InferResponse::rejected(
                                         p.id,
                                         &p.req.profile,
                                         p.enqueued,
+                                        reject_reason::VALIDATION,
                                         format!("unknown profile '{}'", p.req.profile),
                                     ));
                                 }
@@ -620,10 +696,12 @@ impl ConcurrentRouter {
                 while let Ok(env) = rx.try_recv() {
                     if let Envelope::Infer(p) = env {
                         unroutable += 1;
+                        unroutable_reasons.note(reject_reason::LANE_DEAD);
                         let _ = p.reply.send(InferResponse::rejected(
                             p.id,
                             &p.req.profile,
                             p.enqueued,
+                            reject_reason::LANE_DEAD,
                             "router shut down",
                         ));
                     }
@@ -633,7 +711,7 @@ impl ConcurrentRouter {
                 for j in joins {
                     outcomes.push(j.join().map_err(|_| anyhow!("lane thread panicked"))?);
                 }
-                Ok((outcomes, unroutable))
+                Ok((outcomes, unroutable, unroutable_reasons))
             },
         )?;
 
@@ -641,90 +719,129 @@ impl ConcurrentRouter {
             bail!("lane '{}' aborted before serving", o.profile);
         }
 
-        // aggregate — field-for-field the serialized router's summary
-        let wall = t_start.elapsed().as_secs_f64();
-        let mut latency = LatencyRecorder::new();
-        let mut queue_wait = LatencyRecorder::new();
-        let (mut served, mut rejected) = (0usize, unroutable);
-        let (mut total_batches, mut batch_sizes) = (0usize, 0usize);
-        let mut peak = 0u64;
-        let (mut hits, mut misses) = (0u64, 0u64);
-        let (mut kv_inc, mut kv_rec, mut kv_evicted) = (0u64, 0u64, 0u64);
-        let (mut elastic_ev, mut replans) = (0u64, 0u64);
-        let (mut prefetched, mut pf_wasted) = (0u64, 0u64);
-        let (mut dev_hits, mut spawns_avoided) = (0u64, 0u64);
-        let (mut shared_blocks, mut dedup_bytes, mut total_tokens) = (0u64, 0u64, 0u64);
-        let mut sched_total = SchedStats::default();
-        let mut first_error: Option<String> = None;
-        let mut per_model: Vec<ModelStats> = Vec::with_capacity(n);
-        for o in outcomes {
-            served += o.served;
-            rejected += o.rejected;
-            total_batches += o.batches;
-            batch_sizes += o.batch_sizes;
-            peak = peak.max(o.peak);
-            total_tokens += o.tokens;
-            sched_total.merge(&o.sched);
-            for &ms in o.latency.samples_ms() {
-                latency.record_ms(ms);
-            }
-            for &ms in o.queue_wait.samples_ms() {
-                queue_wait.record_ms(ms);
-            }
-            if first_error.is_none() {
-                first_error = o.first_error.clone();
-            }
-            if let Some(m) = o.stats {
-                hits += m.cache_hits;
-                misses += m.cache_misses;
-                kv_inc += m.kv_inc_passes;
-                kv_rec += m.kv_recomputes;
-                kv_evicted += m.kv_evicted_blocks;
-                elastic_ev += m.elastic_evictions;
-                replans += m.replans;
-                prefetched += m.prefetched_stages;
-                pf_wasted += m.prefetch_wasted;
-                dev_hits += m.device_cache_hits;
-                spawns_avoided += m.spawns_avoided;
-                shared_blocks += m.shared_kv_blocks;
-                dedup_bytes += m.kv_dedup_bytes;
-                per_model.push(m);
-            }
+        // aggregate — same code path the mid-flight stats probe runs, so
+        // a snapshot taken just before shutdown matches the final summary
+        let snaps: Vec<LaneSnapshot> = outcomes
+            .into_iter()
+            .filter_map(|o| {
+                let stats = o.stats?;
+                Some(LaneSnapshot {
+                    batch_sizes: o.batch_sizes,
+                    peak: o.peak,
+                    tokens: o.tokens,
+                    sched: o.sched,
+                    first_error: o.first_error,
+                    stats,
+                })
+            })
+            .collect();
+        Ok(summarize_lanes(
+            snaps,
+            unroutable,
+            unroutable_reasons,
+            t_start.elapsed().as_secs_f64(),
+            budget,
+            fleet.steps(),
+            governor.peak() as u64,
+        ))
+    }
+}
+
+/// Fold per-lane snapshots into the fleet summary — field-for-field the
+/// serialized router's.  Shared by the final aggregation in
+/// [`ConcurrentRouter::run`] and the mid-flight `{"op":"stats"}` probe.
+fn summarize_lanes(
+    snaps: Vec<LaneSnapshot>,
+    unroutable: usize,
+    unroutable_reasons: RejectReasons,
+    wall: f64,
+    budget: Option<u64>,
+    budget_steps: u64,
+    concurrent_passes_peak: u64,
+) -> RouterSummary {
+    let mut latency = LatencyRecorder::new();
+    let mut queue_wait = LatencyRecorder::new();
+    let (mut served, mut rejected) = (0usize, unroutable);
+    let mut reject_reasons = unroutable_reasons;
+    let (mut total_batches, mut batch_sizes) = (0usize, 0usize);
+    let mut peak = 0u64;
+    let (mut hits, mut misses) = (0u64, 0u64);
+    let (mut kv_inc, mut kv_rec, mut kv_evicted) = (0u64, 0u64, 0u64);
+    let (mut elastic_ev, mut replans) = (0u64, 0u64);
+    let (mut prefetched, mut pf_wasted) = (0u64, 0u64);
+    let (mut dev_hits, mut spawns_avoided) = (0u64, 0u64);
+    let (mut shared_blocks, mut dedup_bytes, mut total_tokens) = (0u64, 0u64, 0u64);
+    let mut sched_total = SchedStats::default();
+    let mut first_error: Option<String> = None;
+    let mut per_model: Vec<ModelStats> = Vec::with_capacity(snaps.len());
+    for s in snaps {
+        let m = s.stats;
+        served += m.served;
+        rejected += m.rejected;
+        reject_reasons.merge(&m.reject_reasons);
+        total_batches += m.batches;
+        batch_sizes += s.batch_sizes;
+        peak = peak.max(s.peak);
+        total_tokens += s.tokens;
+        sched_total.merge(&s.sched);
+        for &ms in m.latency.samples_ms() {
+            latency.record_ms(ms);
         }
-        Ok(RouterSummary {
-            served,
-            rejected,
-            batches: total_batches,
-            latency,
-            throughput_rps: served as f64 / wall.max(1e-9),
-            peak_bytes: peak,
-            budget_bytes: self.cfg.budget,
-            mean_batch_size: batch_sizes as f64 / total_batches.max(1) as f64,
-            cache_hits: hits,
-            cache_misses: misses,
-            kv_inc_passes: kv_inc,
-            kv_recomputes: kv_rec,
-            kv_evicted_blocks: kv_evicted,
-            budget_steps: fleet.steps(),
-            elastic_evictions: elastic_ev,
-            replans,
-            prefetched_stages: prefetched,
-            prefetch_wasted: pf_wasted,
-            device_cache_hits: dev_hits,
-            spawns_avoided,
-            joins: sched_total.joins,
-            leaves: sched_total.leaves,
-            shed_overload: sched_total.shed_overload,
-            slo_attained_pct: sched_total.slo_attained_pct(),
-            shared_kv_blocks: shared_blocks,
-            kv_dedup_bytes: dedup_bytes,
-            tokens_per_sec: total_tokens as f64 / wall.max(1e-9),
-            queue_wait_p50_ms: queue_wait.p50(),
-            queue_wait_p95_ms: queue_wait.p95(),
-            concurrent_passes_peak: governor.peak() as u64,
-            per_model,
-            first_error,
-        })
+        for &ms in m.queue_wait.samples_ms() {
+            queue_wait.record_ms(ms);
+        }
+        if first_error.is_none() {
+            first_error = s.first_error;
+        }
+        hits += m.cache_hits;
+        misses += m.cache_misses;
+        kv_inc += m.kv_inc_passes;
+        kv_rec += m.kv_recomputes;
+        kv_evicted += m.kv_evicted_blocks;
+        elastic_ev += m.elastic_evictions;
+        replans += m.replans;
+        prefetched += m.prefetched_stages;
+        pf_wasted += m.prefetch_wasted;
+        dev_hits += m.device_cache_hits;
+        spawns_avoided += m.spawns_avoided;
+        shared_blocks += m.shared_kv_blocks;
+        dedup_bytes += m.kv_dedup_bytes;
+        per_model.push(m);
+    }
+    RouterSummary {
+        served,
+        rejected,
+        reject_reasons,
+        batches: total_batches,
+        latency,
+        throughput_rps: served as f64 / wall.max(1e-9),
+        peak_bytes: peak,
+        budget_bytes: budget,
+        mean_batch_size: batch_sizes as f64 / total_batches.max(1) as f64,
+        cache_hits: hits,
+        cache_misses: misses,
+        kv_inc_passes: kv_inc,
+        kv_recomputes: kv_rec,
+        kv_evicted_blocks: kv_evicted,
+        budget_steps,
+        elastic_evictions: elastic_ev,
+        replans,
+        prefetched_stages: prefetched,
+        prefetch_wasted: pf_wasted,
+        device_cache_hits: dev_hits,
+        spawns_avoided,
+        joins: sched_total.joins,
+        leaves: sched_total.leaves,
+        shed_overload: sched_total.shed_overload,
+        slo_attained_pct: sched_total.slo_attained_pct(),
+        shared_kv_blocks: shared_blocks,
+        kv_dedup_bytes: dedup_bytes,
+        tokens_per_sec: total_tokens as f64 / wall.max(1e-9),
+        queue_wait_p50_ms: queue_wait.p50(),
+        queue_wait_p95_ms: queue_wait.p95(),
+        concurrent_passes_peak,
+        per_model,
+        first_error,
     }
 }
 
@@ -741,7 +858,7 @@ fn lane_main(
     max_batch: usize,
     batch_window: Duration,
 ) -> LaneOutcome {
-    let LaneSeed { idx, run, rx, up_tx, down_rx, ready_tx } = seed;
+    let LaneSeed { idx, run, rx, up_tx, down_rx, ready_tx, telemetry: tel } = seed;
     let profile = run.profile.clone();
     let out = LaneOutcome::new(profile.clone());
     let engine = match Engine::new(paths) {
@@ -758,6 +875,7 @@ fn lane_main(
             return out.aborted();
         }
     };
+    session.set_telemetry(tel.clone());
     let wiring = LaneWiring {
         gate: session.pipeline_gate(),
         cache: session.layer_cache().cloned(),
@@ -795,7 +913,17 @@ fn lane_main(
 
     let mut out = out;
     if run.continuous {
-        lane_serve_continuous(&mut session, idx, &profile, &run, &rx, &governor, &fleet, &mut out);
+        lane_serve_continuous(
+            &mut session,
+            idx,
+            &profile,
+            &run,
+            &rx,
+            &governor,
+            &fleet,
+            &tel,
+            &mut out,
+        );
     } else {
         lane_serve(
             &mut session,
@@ -806,11 +934,26 @@ fn lane_main(
             &fleet,
             max_batch,
             batch_window,
+            &tel,
             &mut out,
         );
     }
 
     // per-lane counters, harvested on the thread that owns the session
+    let stats = harvest_model_stats(&session, &profile, &out, out.sched);
+    out.stats = Some(stats);
+    out
+}
+
+/// Read the session's counters (on the thread that owns it) into the
+/// per-model stats block — used both at lane exit and for the mid-flight
+/// [`LaneMsg::Stats`] probe.
+fn harvest_model_stats(
+    session: &Session<'_>,
+    profile: &str,
+    out: &LaneOutcome,
+    sched: SchedStats,
+) -> ModelStats {
     let cs = session.cache_stats();
     let (inc, rec) = session.kv_counters();
     let kvp = session.kv_pool_stats();
@@ -818,10 +961,11 @@ fn lane_main(
     let pf = session.prefetch_stats();
     let dev = session.device_stats();
     let pool_stats = session.pool_stats();
-    out.stats = Some(ModelStats {
-        profile,
+    ModelStats {
+        profile: profile.to_string(),
         served: out.served,
         rejected: out.rejected,
+        reject_reasons: out.reject_reasons,
         batches: out.batches,
         latency: out.latency.clone(),
         queue_wait: out.queue_wait.clone(),
@@ -836,14 +980,30 @@ fn lane_main(
         prefetch_wasted: pf.wasted,
         device_cache_hits: dev.hits,
         spawns_avoided: pool_stats.spawns_avoided(),
-        joins: out.sched.joins,
-        leaves: out.sched.leaves,
-        shed_overload: out.sched.shed_overload,
-        slo_attained_pct: out.sched.slo_attained_pct(),
+        joins: sched.joins,
+        leaves: sched.leaves,
+        shed_overload: sched.shed_overload,
+        slo_attained_pct: sched.slo_attained_pct(),
         shared_kv_blocks: kvp.shared_total,
         kv_dedup_bytes: kvp.dedup_bytes,
-    });
-    out
+    }
+}
+
+/// Build the full per-lane snapshot a [`LaneMsg::Stats`] probe returns.
+fn snapshot_lane(
+    session: &Session<'_>,
+    profile: &str,
+    out: &LaneOutcome,
+    sched: SchedStats,
+) -> LaneSnapshot {
+    LaneSnapshot {
+        batch_sizes: out.batch_sizes,
+        peak: out.peak,
+        tokens: out.tokens,
+        sched,
+        first_error: out.first_error.clone(),
+        stats: harvest_model_stats(session, profile, out, sched),
+    }
 }
 
 /// Handle a control message between passes; false = Quit (drain and exit).
@@ -851,10 +1011,18 @@ fn handle_ctl(
     session: &mut Session<'_>,
     msg: LaneMsg,
     queue: &mut VecDeque<PendingReq>,
+    profile: &str,
+    out: &LaneOutcome,
 ) -> bool {
     match msg {
         LaneMsg::Req(p) => {
             queue.push_back(p);
+            true
+        }
+        LaneMsg::Stats(reply) => {
+            // fixed-batch lanes have no composer ledger; sched counters
+            // stay at their defaults (same as the exit-time harvest)
+            let _ = reply.send(snapshot_lane(session, profile, out, out.sched));
             true
         }
         LaneMsg::Budget { budget, kv_cap, agents } => {
@@ -893,6 +1061,7 @@ fn lane_serve(
     fleet: &FleetElastic,
     max_batch: usize,
     batch_window: Duration,
+    tel: &Telemetry,
     out: &mut LaneOutcome,
 ) {
     let avail = session.profile().batches.clone();
@@ -908,7 +1077,7 @@ fn lane_serve(
             }
             match rx.recv() {
                 Ok(msg) => {
-                    if !handle_ctl(session, msg, &mut queue) {
+                    if !handle_ctl(session, msg, &mut queue, profile, out) {
                         open = false;
                     }
                     continue;
@@ -923,7 +1092,7 @@ fn lane_serve(
             loop {
                 match rx.try_recv() {
                     Ok(msg) => {
-                        if !handle_ctl(session, msg, &mut queue) {
+                        if !handle_ctl(session, msg, &mut queue, profile, out) {
                             open = false;
                             break;
                         }
@@ -939,7 +1108,7 @@ fn lane_serve(
         // wake-up sweep (whole queue, not just the admission pops below):
         // an expired request parked behind a live head is rejected promptly
         // instead of distorting fill windows and queue-wait percentiles
-        sweep_expired_queue(&mut queue, profile, out);
+        sweep_expired_queue(&mut queue, profile, tel, out);
         if queue.is_empty() {
             continue;
         }
@@ -956,7 +1125,7 @@ fn lane_serve(
                 }
                 match rx.recv_timeout(fill_deadline - now) {
                     Ok(msg) => {
-                        if !handle_ctl(session, msg, &mut queue) {
+                        if !handle_ctl(session, msg, &mut queue, profile, out) {
                             open = false;
                             break;
                         }
@@ -992,10 +1161,17 @@ fn lane_serve(
             let Some(p) = queue.pop_front() else { break };
             if p.deadline.map(|d| d <= now).unwrap_or(false) {
                 out.rejected += 1;
+                out.reject_reasons.note(reject_reason::DEADLINE_EXPIRED);
+                tel.instant(
+                    "shed",
+                    worker::DRIVER,
+                    EvArgs::req(p.id).with_reason(reject_reason::DEADLINE_EXPIRED),
+                );
                 let _ = p.reply.send(InferResponse::rejected(
                     p.id,
                     profile,
                     p.enqueued,
+                    reject_reason::DEADLINE_EXPIRED,
                     "deadline exceeded before admission",
                 ));
                 continue;
@@ -1003,10 +1179,17 @@ fn lane_serve(
             let rows = p.req.batch_hint.max(1);
             if rows > largest_avail {
                 out.rejected += 1;
+                out.reject_reasons.note(reject_reason::VALIDATION);
+                tel.instant(
+                    "shed",
+                    worker::DRIVER,
+                    EvArgs::req(p.id).with_reason(reject_reason::VALIDATION),
+                );
                 let _ = p.reply.send(InferResponse::rejected(
                     p.id,
                     profile,
                     p.enqueued,
+                    reject_reason::VALIDATION,
                     format!("batch_hint {rows} exceeds largest AOT batch {largest_avail}"),
                 ));
                 continue;
@@ -1018,6 +1201,7 @@ fn lane_serve(
                 }
             }
             hint_rows += rows;
+            tel.instant("admit", worker::DRIVER, EvArgs::req(p.id));
             batch.push(p);
         }
         if batch.is_empty() {
@@ -1037,7 +1221,9 @@ fn lane_serve(
 
         let passes_before = session.passes_run();
         governor.admit(lane_idx);
+        tel.begin("batch", worker::DRIVER, EvArgs::default());
         let r = session.run_batch(b, seed);
+        tel.end("batch", worker::DRIVER);
         governor.done();
         match r {
             Ok((report, outp)) => {
@@ -1064,11 +1250,13 @@ fn lane_serve(
                     out.latency.record(latency);
                     out.served += 1;
                     out.tokens += report.tokens as u64;
+                    tel.instant("retire", worker::DRIVER, EvArgs::req(p.id));
                     let _ = p.reply.send(InferResponse {
                         id: p.id,
                         profile: profile.to_string(),
                         ok: true,
                         error: None,
+                        reason: None,
                         latency_ms: latency.as_secs_f64() * 1000.0,
                         batch: b,
                         tokens: report.tokens,
@@ -1084,10 +1272,17 @@ fn lane_serve(
                 }
                 for p in &batch {
                     out.rejected += 1;
+                    out.reject_reasons.note(reject_reason::INTERNAL);
+                    tel.instant(
+                        "retire",
+                        worker::DRIVER,
+                        EvArgs::req(p.id).with_reason(reject_reason::INTERNAL),
+                    );
                     let _ = p.reply.send(InferResponse::rejected(
                         p.id,
                         profile,
                         p.enqueued,
+                        reject_reason::INTERNAL,
                         format!("pass failed: {e:#}"),
                     ));
                 }
@@ -1100,16 +1295,28 @@ fn lane_serve(
 /// Reject every queued request whose deadline has already passed — the
 /// WHOLE queue, not just the head (same sweep the serialized router and
 /// the composer run at their wake-ups).
-fn sweep_expired_queue(queue: &mut VecDeque<PendingReq>, profile: &str, out: &mut LaneOutcome) {
+fn sweep_expired_queue(
+    queue: &mut VecDeque<PendingReq>,
+    profile: &str,
+    tel: &Telemetry,
+    out: &mut LaneOutcome,
+) {
     let now = Instant::now();
     let mut kept: VecDeque<PendingReq> = VecDeque::with_capacity(queue.len());
     for p in queue.drain(..) {
         if p.deadline.map(|d| d <= now).unwrap_or(false) {
             out.rejected += 1;
+            out.reject_reasons.note(reject_reason::DEADLINE_EXPIRED);
+            tel.instant(
+                "shed",
+                worker::DRIVER,
+                EvArgs::req(p.id).with_reason(reject_reason::DEADLINE_EXPIRED),
+            );
             let _ = p.reply.send(InferResponse::rejected(
                 p.id,
                 profile,
                 p.enqueued,
+                reject_reason::DEADLINE_EXPIRED,
                 "deadline exceeded before admission",
             ));
         } else {
@@ -1142,6 +1349,8 @@ fn handle_ctl_continuous(
     composer: &mut BatchComposer<PendingReq>,
     orig_max_active: usize,
     orig_budget: Option<u64>,
+    profile: &str,
+    out: &LaneOutcome,
 ) -> bool {
     match msg {
         LaneMsg::Req(p) => {
@@ -1151,6 +1360,10 @@ fn handle_ctl_continuous(
                 slo_ms: p.req.slo_ms,
                 payload: p,
             });
+            true
+        }
+        LaneMsg::Stats(reply) => {
+            let _ = reply.send(snapshot_lane(session, profile, out, composer.stats()));
             true
         }
         LaneMsg::Budget { budget, kv_cap, agents } => {
@@ -1197,6 +1410,7 @@ fn lane_serve_continuous(
     rx: &mpsc::Receiver<LaneMsg>,
     governor: &LaneGovernor,
     fleet: &FleetElastic,
+    tel: &Telemetry,
     out: &mut LaneOutcome,
 ) {
     let avail = session.profile().batches.clone();
@@ -1220,6 +1434,8 @@ fn lane_serve_continuous(
                         &mut composer,
                         orig_max_active,
                         fleet.orig_budget,
+                        profile,
+                        out,
                     ) {
                         open = false;
                     }
@@ -1240,6 +1456,8 @@ fn lane_serve_continuous(
                             &mut composer,
                             orig_max_active,
                             fleet.orig_budget,
+                            profile,
+                            out,
                         ) {
                             open = false;
                             break;
@@ -1258,10 +1476,17 @@ fn lane_serve_continuous(
         let now = Instant::now();
         for e in composer.sweep_expired(now) {
             out.rejected += 1;
+            out.reject_reasons.note(reject_reason::DEADLINE_EXPIRED);
+            tel.instant(
+                "shed",
+                worker::DRIVER,
+                EvArgs::req(e.payload.id).with_reason(reject_reason::DEADLINE_EXPIRED),
+            );
             let _ = e.payload.reply.send(InferResponse::rejected(
                 e.payload.id,
                 profile,
                 e.payload.enqueued,
+                reject_reason::DEADLINE_EXPIRED,
                 "deadline exceeded before admission",
             ));
         }
@@ -1270,6 +1495,12 @@ fn lane_serve_continuous(
         let (joins, drops) = composer.admit(now, active.len());
         for (e, why) in drops {
             out.rejected += 1;
+            out.reject_reasons.note(why.slug());
+            tel.instant(
+                "shed",
+                worker::DRIVER,
+                EvArgs::req(e.payload.id).with_reason(why.slug()),
+            );
             let msg = match why {
                 DropReason::Expired => "deadline exceeded before admission".to_string(),
                 DropReason::Overload => format!(
@@ -1281,6 +1512,7 @@ fn lane_serve_continuous(
                 e.payload.id,
                 profile,
                 e.payload.enqueued,
+                why.slug(),
                 msg,
             ));
         }
@@ -1290,10 +1522,17 @@ fn lane_serve_continuous(
             if rows > largest_avail {
                 composer.unjoin();
                 out.rejected += 1;
+                out.reject_reasons.note(reject_reason::VALIDATION);
+                tel.instant(
+                    "shed",
+                    worker::DRIVER,
+                    EvArgs::req(p.id).with_reason(reject_reason::VALIDATION),
+                );
                 let _ = p.reply.send(InferResponse::rejected(
                     p.id,
                     profile,
                     p.enqueued,
+                    reject_reason::VALIDATION,
                     format!("batch_hint {rows} exceeds largest AOT batch {largest_avail}"),
                 ));
                 continue;
@@ -1308,7 +1547,10 @@ fn lane_serve_continuous(
                 .unwrap_or_else(|| session.run_config().seed.wrapping_add(out.batches as u64));
             out.batches += 1;
             out.batch_sizes += 1;
+            tel.instant("admit", worker::DRIVER, EvArgs::req(p.id));
+            tel.instant("prime", worker::DRIVER, EvArgs::req(p.id));
             let st = session.begin_decode(b, seed);
+            tel.instant("join", worker::DRIVER, EvArgs::req(p.id));
             active.push(LaneActive {
                 id: p.id,
                 enqueued: p.enqueued,
@@ -1334,6 +1576,7 @@ fn lane_serve_continuous(
             let expect_next = active.len() > 1
                 || composer.pending_len() > 0
                 || !active[i].st.last_step();
+            tel.instant("decode_step", worker::DRIVER, EvArgs::req(active[i].id));
             match session.decode_step(&mut active[i].st, expect_next) {
                 Err(e) => {
                     if out.first_error.is_none() {
@@ -1342,10 +1585,17 @@ fn lane_serve_continuous(
                     let a = active.swap_remove(i);
                     composer.retire(a.enqueued, a.slo_ms, Instant::now(), false);
                     out.rejected += 1;
+                    out.reject_reasons.note(reject_reason::INTERNAL);
+                    tel.instant(
+                        "retire",
+                        worker::DRIVER,
+                        EvArgs::req(a.id).with_reason(reject_reason::INTERNAL),
+                    );
                     let _ = a.reply.send(InferResponse::rejected(
                         a.id,
                         profile,
                         a.enqueued,
+                        reject_reason::INTERNAL,
                         format!("pass failed: {e:#}"),
                     ));
                 }
@@ -1361,11 +1611,14 @@ fn lane_serve_continuous(
                     out.tokens += report.tokens as u64;
                     let generated_rows: Vec<Vec<i32>> =
                         outp.generated_rows.iter().take(a.batch_hint).cloned().collect();
+                    tel.instant("retire", worker::DRIVER, EvArgs::req(a.id));
+                    tel.instant("leave", worker::DRIVER, EvArgs::req(a.id));
                     let _ = a.reply.send(InferResponse {
                         id: a.id,
                         profile: profile.to_string(),
                         ok: true,
                         error: None,
+                        reason: None,
                         latency_ms: latency.as_secs_f64() * 1000.0,
                         batch: a.batch,
                         tokens: report.tokens,

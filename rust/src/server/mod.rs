@@ -41,8 +41,8 @@ pub mod tcp;
 
 pub use lanes::ConcurrentRouter;
 pub use router::{
-    kv_shares, pick_batch, InferRequest, InferResponse, ModelStats, Router, RouterConfig,
-    RouterHandle, RouterSummary, Ticket,
+    kv_shares, pick_batch, reject_reason, InferRequest, InferResponse, ModelStats, RejectReasons,
+    Router, RouterConfig, RouterHandle, RouterSummary, Ticket,
 };
 pub use summary::{e2e_default, serve, ServeConfig, ServeSummary};
 pub use tcp::TcpFrontend;

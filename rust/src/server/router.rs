@@ -33,13 +33,91 @@ use crate::config::RunConfig;
 use crate::elastic::{BudgetController, PressureTrace};
 use crate::engine::{DecodeState, Engine, Session};
 use crate::memory::MemoryAccountant;
-use crate::metrics::LatencyRecorder;
+use crate::metrics::{
+    prometheus_counter, prometheus_gauge, prometheus_histogram, LatencyRecorder,
+};
 use crate::planner::Schedule;
 use crate::sched::{
     scaled_active_cap, BatchComposer, DropReason, Entry, FairClock, SchedConfig, SchedStats,
     DEFAULT_MAX_ACTIVE,
 };
+use crate::telemetry::{worker, EvArgs, Telemetry};
 use crate::util::json::Value;
+
+/// Wire values of the structured `reason` field carried by rejected
+/// responses (and counted per-reason in the summaries).
+pub mod reject_reason {
+    /// the request's hard deadline passed before admission
+    pub const DEADLINE_EXPIRED: &str = "deadline_expired";
+    /// shed at admission: queue wait alone already blew the SLO target
+    pub const SHED_OVERLOAD: &str = "shed_overload";
+    /// the request itself is unservable (unknown profile, oversized
+    /// `batch_hint`)
+    pub const VALIDATION: &str = "validation";
+    /// the serving lane / router was gone before the request ran
+    pub const LANE_DEAD: &str = "lane_dead";
+    /// an engine pass failed underneath an admitted request
+    pub const INTERNAL: &str = "internal";
+}
+
+/// Per-reason rejection counters (the structured shed/reject taxonomy).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RejectReasons {
+    pub deadline_expired: u64,
+    pub shed_overload: u64,
+    pub validation: u64,
+    pub lane_dead: u64,
+    pub internal: u64,
+}
+
+impl RejectReasons {
+    /// Count one rejection under its wire slug (unknown slugs fold into
+    /// `internal` rather than silently vanishing).
+    pub fn note(&mut self, reason: &str) {
+        match reason {
+            reject_reason::DEADLINE_EXPIRED => self.deadline_expired += 1,
+            reject_reason::SHED_OVERLOAD => self.shed_overload += 1,
+            reject_reason::VALIDATION => self.validation += 1,
+            reject_reason::LANE_DEAD => self.lane_dead += 1,
+            _ => self.internal += 1,
+        }
+    }
+
+    pub fn merge(&mut self, other: &RejectReasons) {
+        self.deadline_expired += other.deadline_expired;
+        self.shed_overload += other.shed_overload;
+        self.validation += other.validation;
+        self.lane_dead += other.lane_dead;
+        self.internal += other.internal;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.deadline_expired
+            + self.shed_overload
+            + self.validation
+            + self.lane_dead
+            + self.internal
+    }
+
+    /// (slug, count) pairs in stable order (JSON + Prometheus rendering).
+    pub fn iter(&self) -> [(&'static str, u64); 5] {
+        [
+            (reject_reason::DEADLINE_EXPIRED, self.deadline_expired),
+            (reject_reason::SHED_OVERLOAD, self.shed_overload),
+            (reject_reason::VALIDATION, self.validation),
+            (reject_reason::LANE_DEAD, self.lane_dead),
+            (reject_reason::INTERNAL, self.internal),
+        ]
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        for (slug, n) in self.iter() {
+            v = v.set(slug, n);
+        }
+        v
+    }
+}
 
 /// Router policy + the model fleet.
 #[derive(Debug, Clone)]
@@ -181,6 +259,9 @@ pub struct InferResponse {
     pub profile: String,
     pub ok: bool,
     pub error: Option<String>,
+    /// structured rejection taxonomy slug (see [`reject_reason`]); None on
+    /// success
+    pub reason: Option<String>,
     /// queue + execution latency, submission to response
     pub latency_ms: f64,
     /// AOT batch size the request was folded into (0 on rejection)
@@ -199,6 +280,7 @@ impl InferResponse {
         id: u64,
         profile: &str,
         enqueued: Instant,
+        reason: &'static str,
         err: impl Into<String>,
     ) -> Self {
         InferResponse {
@@ -206,6 +288,7 @@ impl InferResponse {
             profile: profile.to_string(),
             ok: false,
             error: Some(err.into()),
+            reason: Some(reason.to_string()),
             latency_ms: enqueued.elapsed().as_secs_f64() * 1000.0,
             batch: 0,
             tokens: 0,
@@ -237,6 +320,9 @@ impl InferResponse {
         if let Some(e) = &self.error {
             v = v.set("error", e.clone());
         }
+        if let Some(r) = &self.reason {
+            v = v.set("reason", r.clone());
+        }
         v
     }
 
@@ -250,6 +336,7 @@ impl InferResponse {
                 .unwrap_or_default(),
             ok: v.req("ok")?.as_bool()?,
             error: v.get("error").map(|e| e.as_str().map(str::to_string)).transpose()?,
+            reason: v.get("reason").map(|r| r.as_str().map(str::to_string)).transpose()?,
             latency_ms: v.get("latency_ms").map(|x| x.as_f64()).transpose()?.unwrap_or(0.0),
             batch: v.get("batch").map(|x| x.as_usize()).transpose()?.unwrap_or(0),
             tokens: v.get("tokens").map(|x| x.as_usize()).transpose()?.unwrap_or(0),
@@ -274,6 +361,9 @@ impl InferResponse {
 
 pub(crate) enum Envelope {
     Infer(PendingReq),
+    /// live stats snapshot: the router answers with a mid-flight
+    /// [`RouterSummary`] built by the SAME code path as the final summary
+    Stats(mpsc::Sender<RouterSummary>),
     Shutdown,
 }
 
@@ -341,6 +431,18 @@ impl RouterHandle {
         self.submit(req)?.wait()
     }
 
+    /// Mid-flight counters snapshot.  Blocks until the router's loop next
+    /// drains its queue (between batches / token boundaries); the snapshot
+    /// is produced by the same `summarize()` that builds the final
+    /// summary, so live numbers always reconcile with shutdown numbers.
+    pub fn stats(&self) -> Result<RouterSummary> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Envelope::Stats(tx))
+            .map_err(|_| anyhow!("router is no longer running"))?;
+        rx.recv().map_err(|_| anyhow!("router exited before answering stats"))
+    }
+
     /// Ask the router to finish queued work and exit its loop.  Best-effort:
     /// a router that already exited is not an error.
     pub fn shutdown(&self) {
@@ -354,6 +456,8 @@ pub struct ModelStats {
     pub profile: String,
     pub served: usize,
     pub rejected: usize,
+    /// per-reason breakdown of `rejected` (the shed/reject taxonomy)
+    pub reject_reasons: RejectReasons,
     pub batches: usize,
     pub latency: LatencyRecorder,
     /// submission-to-admission wait per request (the time a request sat in
@@ -400,6 +504,8 @@ pub struct RouterSummary {
     pub served: usize,
     /// deadline-expired, unknown-profile, or failed-pass requests
     pub rejected: usize,
+    /// per-reason breakdown of `rejected` across all lanes + unroutables
+    pub reject_reasons: RejectReasons,
     pub batches: usize,
     pub latency: LatencyRecorder,
     pub throughput_rps: f64,
@@ -463,6 +569,7 @@ impl RouterSummary {
                     .set("profile", m.profile.clone())
                     .set("served", m.served)
                     .set("rejected", m.rejected)
+                    .set("reject_reasons", m.reject_reasons.to_json())
                     .set("batches", m.batches)
                     .set("latency", m.latency.to_json())
                     .set("queue_wait_p50_ms", m.queue_wait.p50())
@@ -489,6 +596,7 @@ impl RouterSummary {
         let mut v = Value::obj()
             .set("served", self.served)
             .set("rejected", self.rejected)
+            .set("reject_reasons", self.reject_reasons.to_json())
             .set("batches", self.batches)
             .set("throughput_rps", self.throughput_rps)
             .set("latency", self.latency.to_json())
@@ -524,6 +632,130 @@ impl RouterSummary {
             v = v.set("first_error", e.clone());
         }
         v
+    }
+
+    /// Prometheus text exposition of the summary counters (the
+    /// `{"op":"metrics"}` TCP surface).  `dropped_events` is the telemetry
+    /// bus's drop counter (0 when tracing is off).
+    pub fn to_prometheus(&self, dropped_events: u64) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        prometheus_counter(
+            &mut out,
+            "hermes_served_total",
+            "requests served successfully",
+            self.served as u64,
+        );
+        let _ = writeln!(out, "# HELP hermes_rejected_total requests rejected, by reason");
+        let _ = writeln!(out, "# TYPE hermes_rejected_total counter");
+        for (slug, n) in self.reject_reasons.iter() {
+            let _ = writeln!(out, "hermes_rejected_total{{reason=\"{slug}\"}} {n}");
+        }
+        prometheus_counter(
+            &mut out,
+            "hermes_batches_total",
+            "engine batches run",
+            self.batches as u64,
+        );
+        prometheus_counter(&mut out, "hermes_joins_total", "continuous joins", self.joins);
+        prometheus_counter(&mut out, "hermes_leaves_total", "continuous retires", self.leaves);
+        prometheus_counter(
+            &mut out,
+            "hermes_cache_hits_total",
+            "hot-layer cache hits",
+            self.cache_hits,
+        );
+        prometheus_counter(
+            &mut out,
+            "hermes_cache_misses_total",
+            "hot-layer cache misses",
+            self.cache_misses,
+        );
+        prometheus_counter(
+            &mut out,
+            "hermes_kv_inc_passes_total",
+            "incremental KV decode passes",
+            self.kv_inc_passes,
+        );
+        prometheus_counter(
+            &mut out,
+            "hermes_kv_evicted_blocks_total",
+            "KV blocks reclaimed under pressure",
+            self.kv_evicted_blocks,
+        );
+        prometheus_counter(
+            &mut out,
+            "hermes_budget_steps_total",
+            "elastic budget steps applied",
+            self.budget_steps,
+        );
+        prometheus_counter(
+            &mut out,
+            "hermes_elastic_evictions_total",
+            "pins + KV blocks evicted by budget steps",
+            self.elastic_evictions,
+        );
+        prometheus_counter(
+            &mut out,
+            "hermes_prefetched_stages_total",
+            "stages prefetched ahead of their pass",
+            self.prefetched_stages,
+        );
+        prometheus_counter(
+            &mut out,
+            "hermes_device_cache_hits_total",
+            "stages served from device-resident weights",
+            self.device_cache_hits,
+        );
+        prometheus_counter(
+            &mut out,
+            "hermes_kv_dedup_bytes_total",
+            "bytes deduplicated by cross-request KV sharing",
+            self.kv_dedup_bytes,
+        );
+        prometheus_counter(
+            &mut out,
+            "hermes_telemetry_dropped_events_total",
+            "telemetry events dropped on full shards",
+            dropped_events,
+        );
+        prometheus_gauge(
+            &mut out,
+            "hermes_throughput_rps",
+            "served requests per second",
+            self.throughput_rps,
+        );
+        prometheus_gauge(
+            &mut out,
+            "hermes_tokens_per_sec",
+            "generated tokens per second",
+            self.tokens_per_sec,
+        );
+        prometheus_gauge(
+            &mut out,
+            "hermes_peak_bytes",
+            "max per-pass peak of the shared accountant",
+            self.peak_bytes as f64,
+        );
+        prometheus_gauge(
+            &mut out,
+            "hermes_slo_attained_pct",
+            "percent of SLO-targeted requests on time",
+            self.slo_attained_pct,
+        );
+        prometheus_gauge(
+            &mut out,
+            "hermes_queue_wait_p95_ms",
+            "p95 submission-to-admission wait",
+            self.queue_wait_p95_ms,
+        );
+        prometheus_histogram(
+            &mut out,
+            "hermes_latency_ms",
+            "end-to-end request latency",
+            &self.latency,
+        );
+        out
     }
 }
 
@@ -574,6 +806,8 @@ struct ModelLane<'e> {
     orig_max_active: usize,
     served: usize,
     rejected: usize,
+    /// per-reason breakdown of `rejected`
+    reject_reasons: RejectReasons,
     batches: usize,
     /// generated tokens across everything this lane served
     tokens: u64,
@@ -606,6 +840,20 @@ pub struct Router<'e> {
     ids: Arc<AtomicU64>,
     /// requests for profiles this router does not serve
     unroutable: usize,
+    /// per-reason breakdown of the unroutable rejections (validation /
+    /// lane-dead) — lanes keep their own breakdowns
+    unroutable_reasons: RejectReasons,
+    /// telemetry bus (default off: one atomic load per emit site)
+    telemetry: Telemetry,
+    /// set when [`Router::run`] starts; `summarize()` measures wall time
+    /// from here for both mid-flight and final summaries
+    run_started: Option<Instant>,
+    /// running aggregates the loop maintains so `summarize()` can be
+    /// called mid-flight with the same numbers the final summary sees
+    peak: u64,
+    total_batches: usize,
+    batch_sizes: usize,
+    first_error: Option<String>,
     /// per-lane KV share granted from [`RouterConfig::kv_budget`] (None
     /// for non-KV lanes and lanes with their own explicit cap) — the base
     /// the elastic rebalance scales from
@@ -671,6 +919,7 @@ impl<'e> Router<'e> {
                 orig_max_active: max_active,
                 served: 0,
                 rejected: 0,
+                reject_reasons: RejectReasons::default(),
                 batches: 0,
                 tokens: 0,
                 latency: LatencyRecorder::new(),
@@ -726,6 +975,13 @@ impl<'e> Router<'e> {
             rx,
             ids: Arc::new(AtomicU64::new(0)),
             unroutable: 0,
+            unroutable_reasons: RejectReasons::default(),
+            telemetry: Telemetry::off(),
+            run_started: None,
+            peak: 0,
+            total_batches: 0,
+            batch_sizes: 0,
+            first_error: None,
             kv_lane_shares,
             elastic,
             budget_steps: 0,
@@ -740,6 +996,16 @@ impl<'e> Router<'e> {
     pub fn handle(&self) -> RouterHandle {
         let tx = self.tx.as_ref().expect("handle() after run()").clone();
         RouterHandle { tx, ids: self.ids.clone() }
+    }
+
+    /// Attach a telemetry bus: the router stamps lifecycle events on it
+    /// and every lane's session gets a lane-tagged clone (so engine spans
+    /// land on the right Chrome `pid`).  Call before [`Router::run`].
+    pub fn set_telemetry(&mut self, t: Telemetry) {
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            lane.session.set_telemetry(t.with_lane(i as u32));
+        }
+        self.telemetry = t;
     }
 
     /// The shared accountant (inspect budget/usage/peak from outside).
@@ -870,12 +1136,8 @@ impl<'e> Router<'e> {
     /// or a shutdown arrives, then summarize.  Engine passes happen here.
     pub fn run(mut self) -> Result<RouterSummary> {
         self.tx.take(); // only external handles keep the queue open now
-        let t_start = Instant::now();
+        self.run_started = Some(Instant::now());
         let mut open = true;
-        let mut batch_sizes = 0usize;
-        let mut total_batches = 0usize;
-        let mut peak = 0u64;
-        let mut first_error: Option<String> = None;
 
         loop {
             let backlog = self.lanes.iter().any(|l| {
@@ -967,7 +1229,7 @@ impl<'e> Router<'e> {
             // turn, weighted-fair across lanes; fixed lanes only proceed
             // when no continuous lane is runnable this turn
             if let Some(li) = self.pick_continuous_lane() {
-                self.continuous_iteration(li, &mut peak, &mut first_error);
+                self.continuous_iteration(li);
                 self.fair.charge(li);
                 continue;
             }
@@ -975,6 +1237,7 @@ impl<'e> Router<'e> {
             // earliest-deadline-first across lane heads (FIFO tie-break)
             let Some(li) = self.pick_lane() else { continue };
             let cap = self.lane_cap(&self.lanes[li]);
+            let tel = self.telemetry.with_lane(li as u32);
             let lane = &mut self.lanes[li];
             let avail = lane.session.profile().batches.clone();
             let largest_avail = avail.iter().copied().max().unwrap_or(1);
@@ -993,10 +1256,17 @@ impl<'e> Router<'e> {
                 let Some(p) = lane.queue.pop_front() else { break };
                 if p.deadline.map(|d| d <= now).unwrap_or(false) {
                     lane.rejected += 1;
+                    lane.reject_reasons.note(reject_reason::DEADLINE_EXPIRED);
+                    tel.instant(
+                        "shed",
+                        worker::DRIVER,
+                        EvArgs::req(p.id).with_reason(reject_reason::DEADLINE_EXPIRED),
+                    );
                     let resp = InferResponse::rejected(
                         p.id,
                         &lane.profile,
                         p.enqueued,
+                        reject_reason::DEADLINE_EXPIRED,
                         "deadline exceeded before admission",
                     );
                     let _ = p.reply.send(resp);
@@ -1008,10 +1278,17 @@ impl<'e> Router<'e> {
                     // fewer silently would be a lie — reject like an
                     // expired deadline, without spending a pass
                     lane.rejected += 1;
+                    lane.reject_reasons.note(reject_reason::VALIDATION);
+                    tel.instant(
+                        "shed",
+                        worker::DRIVER,
+                        EvArgs::req(p.id).with_reason(reject_reason::VALIDATION),
+                    );
                     let resp = InferResponse::rejected(
                         p.id,
                         &lane.profile,
                         p.enqueued,
+                        reject_reason::VALIDATION,
                         format!("batch_hint {rows} exceeds largest AOT batch {largest_avail}"),
                     );
                     let _ = p.reply.send(resp);
@@ -1031,6 +1308,7 @@ impl<'e> Router<'e> {
             }
             for p in &batch {
                 lane.queue_wait.record(now.saturating_duration_since(p.enqueued));
+                tel.instant("admit", worker::DRIVER, EvArgs::req(p.id));
             }
 
             let b = pick_batch(&avail, hint_rows);
@@ -1043,12 +1321,18 @@ impl<'e> Router<'e> {
             // batch, the final decode pass keeps its loaders prefetching
             // into the NEXT request instead of going idle
             lane.session.set_expect_more(!lane.queue.is_empty());
+            // router-level aggregates collect into turn-locals while `lane`
+            // mutably borrows `self.lanes`; folded into the `self` fields
+            // (where `summarize()` reads them) once the borrow ends
+            let mut turn_peak = 0u64;
+            let mut turn_folded = 0usize;
+            let mut turn_err: Option<String> = None;
+            tel.begin("batch", worker::DRIVER, EvArgs::default());
             match lane.session.run_batch(b, seed) {
                 Ok((report, out)) => {
-                    peak = peak.max(report.peak_bytes);
+                    turn_peak = report.peak_bytes;
                     lane.batches += 1;
-                    total_batches += 1;
-                    batch_sizes += batch.len();
+                    turn_folded = batch.len();
                     // KV blocks are per-request state: the sequence died
                     // with the pass, so nothing may stay accounted now
                     debug_assert_eq!(
@@ -1072,11 +1356,13 @@ impl<'e> Router<'e> {
                         lane.latency.record(latency);
                         lane.served += 1;
                         lane.tokens += report.tokens as u64;
+                        tel.instant("retire", worker::DRIVER, EvArgs::req(p.id));
                         let _ = p.reply.send(InferResponse {
                             id: p.id,
                             profile: lane.profile.clone(),
                             ok: true,
                             error: None,
+                            reason: None,
                             latency_ms: latency.as_secs_f64() * 1000.0,
                             batch: b,
                             tokens: report.tokens,
@@ -1088,39 +1374,65 @@ impl<'e> Router<'e> {
                 Err(e) => {
                     // the session recovered its accounting; fail the batch's
                     // requests and keep serving (no panic, no poisoned loop)
-                    if first_error.is_none() {
-                        first_error = Some(format!("{e:#}"));
-                    }
+                    turn_err = Some(format!("{e:#}"));
                     for p in &batch {
                         lane.rejected += 1;
+                        lane.reject_reasons.note(reject_reason::INTERNAL);
+                        tel.instant(
+                            "retire",
+                            worker::DRIVER,
+                            EvArgs::req(p.id).with_reason(reject_reason::INTERNAL),
+                        );
                         let _ = p.reply.send(InferResponse::rejected(
                             p.id,
                             &lane.profile,
                             p.enqueued,
+                            reject_reason::INTERNAL,
                             format!("pass failed: {e:#}"),
                         ));
                     }
                 }
             }
+            tel.end("batch", worker::DRIVER);
+            self.peak = self.peak.max(turn_peak);
+            if turn_folded > 0 {
+                self.total_batches += 1;
+                self.batch_sizes += turn_folded;
+            }
+            if self.first_error.is_none() {
+                self.first_error = turn_err;
+            }
         }
 
         // reject anything still sitting in the channel after shutdown
+        // (pending stats requests just see their sender dropped)
         while let Ok(env) = self.rx.try_recv() {
             if let Envelope::Infer(p) = env {
                 self.unroutable += 1;
+                self.unroutable_reasons.note(reject_reason::LANE_DEAD);
                 let _ = p.reply.send(InferResponse::rejected(
                     p.id,
                     &p.req.profile,
                     p.enqueued,
+                    reject_reason::LANE_DEAD,
                     "router shut down",
                 ));
             }
         }
 
-        let wall = t_start.elapsed().as_secs_f64();
+        Ok(self.summarize())
+    }
+
+    /// Snapshot the run's counters into a [`RouterSummary`].  One code
+    /// path serves both consumers — the final summary when [`Router::run`]
+    /// exits and mid-flight `{"op":"stats"}` snapshots — so live counters
+    /// always reconcile with the shutdown numbers.
+    fn summarize(&self) -> RouterSummary {
+        let wall = self.run_started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
         let mut latency = LatencyRecorder::new();
         let mut queue_wait = LatencyRecorder::new();
         let (mut served, mut rejected) = (0usize, self.unroutable);
+        let mut reject_reasons = self.unroutable_reasons;
         let (mut hits, mut misses) = (0u64, 0u64);
         let (mut kv_inc, mut kv_rec, mut kv_evicted) = (0u64, 0u64, 0u64);
         let (mut elastic_ev, mut replans) = (0u64, 0u64);
@@ -1134,6 +1446,7 @@ impl<'e> Router<'e> {
             .map(|l| {
                 served += l.served;
                 rejected += l.rejected;
+                reject_reasons.merge(&l.reject_reasons);
                 for &ms in l.latency.samples_ms() {
                     latency.record_ms(ms);
                 }
@@ -1167,6 +1480,7 @@ impl<'e> Router<'e> {
                     profile: l.profile.clone(),
                     served: l.served,
                     rejected: l.rejected,
+                    reject_reasons: l.reject_reasons,
                     batches: l.batches,
                     latency: l.latency.clone(),
                     queue_wait: l.queue_wait.clone(),
@@ -1190,15 +1504,16 @@ impl<'e> Router<'e> {
                 }
             })
             .collect();
-        Ok(RouterSummary {
+        RouterSummary {
             served,
             rejected,
-            batches: total_batches,
+            reject_reasons,
+            batches: self.total_batches,
             latency,
             throughput_rps: served as f64 / wall.max(1e-9),
-            peak_bytes: peak,
+            peak_bytes: self.peak,
             budget_bytes: self.cfg.budget,
-            mean_batch_size: batch_sizes as f64 / total_batches.max(1) as f64,
+            mean_batch_size: self.batch_sizes as f64 / self.total_batches.max(1) as f64,
             cache_hits: hits,
             cache_misses: misses,
             kv_inc_passes: kv_inc,
@@ -1221,10 +1536,10 @@ impl<'e> Router<'e> {
             queue_wait_p50_ms: queue_wait.p50(),
             queue_wait_p95_ms: queue_wait.p95(),
             // one dispatch thread = at most one pass in flight, ever
-            concurrent_passes_peak: if total_batches > 0 { 1 } else { 0 },
+            concurrent_passes_peak: if self.total_batches > 0 { 1 } else { 0 },
             per_model,
-            first_error,
-        })
+            first_error: self.first_error.clone(),
+        }
     }
 
     /// Queue an envelope; false = shutdown requested.  Unknown profiles are
@@ -1232,9 +1547,21 @@ impl<'e> Router<'e> {
     fn enqueue(&mut self, env: Envelope) -> bool {
         match env {
             Envelope::Shutdown => false,
+            Envelope::Stats(reply) => {
+                // dropped receivers are fine: the snapshot is best-effort
+                let _ = reply.send(self.summarize());
+                true
+            }
             Envelope::Infer(p) => {
                 match self.lane_index(&p.req.profile) {
                     Some(li) => {
+                        if self.telemetry.is_on() {
+                            self.telemetry.with_lane(li as u32).instant(
+                                "enqueue",
+                                worker::DRIVER,
+                                EvArgs::req(p.id),
+                            );
+                        }
                         let lane = &mut self.lanes[li];
                         match lane.composer.as_mut() {
                             // continuous lanes queue in their composer
@@ -1249,10 +1576,17 @@ impl<'e> Router<'e> {
                     }
                     None => {
                         self.unroutable += 1;
+                        self.unroutable_reasons.note(reject_reason::VALIDATION);
+                        self.telemetry.instant(
+                            "shed",
+                            worker::DRIVER,
+                            EvArgs::req(p.id).with_reason(reject_reason::VALIDATION),
+                        );
                         let resp = InferResponse::rejected(
                             p.id,
                             &p.req.profile,
                             p.enqueued,
+                            reject_reason::VALIDATION,
                             format!("unknown profile '{}'", p.req.profile),
                         );
                         let _ = p.reply.send(resp);
@@ -1300,15 +1634,23 @@ impl<'e> Router<'e> {
     /// Reject every queued request whose deadline has already passed — the
     /// WHOLE queue, not just the head, matching the composer's sweep.
     fn sweep_expired(&mut self, now: Instant) {
-        for lane in &mut self.lanes {
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            let tel = self.telemetry.with_lane(i as u32);
             let mut kept = VecDeque::with_capacity(lane.queue.len());
             for p in lane.queue.drain(..) {
                 if p.deadline.map(|d| d <= now).unwrap_or(false) {
                     lane.rejected += 1;
+                    lane.reject_reasons.note(reject_reason::DEADLINE_EXPIRED);
+                    tel.instant(
+                        "shed",
+                        worker::DRIVER,
+                        EvArgs::req(p.id).with_reason(reject_reason::DEADLINE_EXPIRED),
+                    );
                     let _ = p.reply.send(InferResponse::rejected(
                         p.id,
                         &lane.profile,
                         p.enqueued,
+                        reject_reason::DEADLINE_EXPIRED,
                         "deadline exceeded before admission",
                     ));
                 } else {
@@ -1319,10 +1661,17 @@ impl<'e> Router<'e> {
             if let Some(c) = lane.composer.as_mut() {
                 for e in c.sweep_expired(now) {
                     lane.rejected += 1;
+                    lane.reject_reasons.note(reject_reason::DEADLINE_EXPIRED);
+                    tel.instant(
+                        "shed",
+                        worker::DRIVER,
+                        EvArgs::req(e.payload.id).with_reason(reject_reason::DEADLINE_EXPIRED),
+                    );
                     let _ = e.payload.reply.send(InferResponse::rejected(
                         e.payload.id,
                         &lane.profile,
                         e.payload.enqueued,
+                        reject_reason::DEADLINE_EXPIRED,
                         "deadline exceeded before admission",
                     ));
                 }
@@ -1335,18 +1684,24 @@ impl<'e> Router<'e> {
     /// prefix pass), advance every active request one token, and retire
     /// finished rows immediately — their slot is free at the very next
     /// boundary, and their KV blocks go back to the budget.
-    fn continuous_iteration(
-        &mut self,
-        li: usize,
-        peak: &mut u64,
-        first_error: &mut Option<String>,
-    ) {
+    fn continuous_iteration(&mut self, li: usize) {
+        let tel = self.telemetry.with_lane(li as u32);
+        // router-level aggregates collect into turn-locals while `lane`
+        // mutably borrows `self.lanes`; folded back once the borrow ends
+        let mut turn_peak = 0u64;
+        let mut turn_err: Option<String> = None;
         let now = Instant::now();
         let lane = &mut self.lanes[li];
         let composer = lane.composer.as_mut().expect("continuous lane has a composer");
         let (joins, drops) = composer.admit(now, lane.active.len());
         for (e, why) in drops {
             lane.rejected += 1;
+            lane.reject_reasons.note(why.slug());
+            tel.instant(
+                "shed",
+                worker::DRIVER,
+                EvArgs::req(e.payload.id).with_reason(why.slug()),
+            );
             let msg = match why {
                 DropReason::Expired => "deadline exceeded before admission".to_string(),
                 DropReason::Overload => format!(
@@ -1358,6 +1713,7 @@ impl<'e> Router<'e> {
                 e.payload.id,
                 &lane.profile,
                 e.payload.enqueued,
+                why.slug(),
                 msg,
             ));
         }
@@ -1369,15 +1725,23 @@ impl<'e> Router<'e> {
             if rows > largest_avail {
                 composer.unjoin();
                 lane.rejected += 1;
+                lane.reject_reasons.note(reject_reason::VALIDATION);
+                tel.instant(
+                    "shed",
+                    worker::DRIVER,
+                    EvArgs::req(p.id).with_reason(reject_reason::VALIDATION),
+                );
                 let _ = p.reply.send(InferResponse::rejected(
                     p.id,
                     &lane.profile,
                     p.enqueued,
+                    reject_reason::VALIDATION,
                     format!("batch_hint {rows} exceeds largest AOT batch {largest_avail}"),
                 ));
                 continue;
             }
             lane.queue_wait.record(now.saturating_duration_since(p.enqueued));
+            tel.instant("admit", worker::DRIVER, EvArgs::req(p.id));
             // same batch/seed derivation as the fixed path, so a request's
             // tokens are bit-identical between the two schedulers
             let b = pick_batch(&avail, rows);
@@ -1385,7 +1749,9 @@ impl<'e> Router<'e> {
                 lane.session.run_config().seed.wrapping_add(lane.batches as u64)
             });
             lane.batches += 1;
+            tel.instant("prime", worker::DRIVER, EvArgs::req(p.id));
             let st = lane.session.begin_decode(b, seed);
+            tel.instant("join", worker::DRIVER, EvArgs::req(p.id));
             lane.active.push(ActiveReq {
                 id: p.id,
                 enqueued: p.enqueued,
@@ -1403,31 +1769,41 @@ impl<'e> Router<'e> {
             let expect_next = lane.active.len() > 1
                 || composer.pending_len() > 0
                 || !lane.active[i].st.last_step();
+            tel.instant("decode_step", worker::DRIVER, EvArgs::req(lane.active[i].id));
             match lane.session.decode_step(&mut lane.active[i].st, expect_next) {
                 Err(e) => {
-                    if first_error.is_none() {
-                        *first_error = Some(format!("{e:#}"));
+                    if turn_err.is_none() {
+                        turn_err = Some(format!("{e:#}"));
                     }
                     let a = lane.active.swap_remove(i);
                     composer.retire(a.enqueued, a.slo_ms, Instant::now(), false);
                     lane.rejected += 1;
+                    lane.reject_reasons.note(reject_reason::INTERNAL);
+                    tel.instant(
+                        "retire",
+                        worker::DRIVER,
+                        EvArgs::req(a.id).with_reason(reject_reason::INTERNAL),
+                    );
                     let _ = a.reply.send(InferResponse::rejected(
                         a.id,
                         &lane.profile,
                         a.enqueued,
+                        reject_reason::INTERNAL,
                         format!("pass failed: {e:#}"),
                     ));
                 }
                 Ok(()) if lane.active[i].st.done() => {
                     let a = lane.active.swap_remove(i);
                     let (report, out) = lane.session.finish_decode(a.st);
-                    *peak = (*peak).max(report.peak_bytes);
+                    turn_peak = turn_peak.max(report.peak_bytes);
                     let done = Instant::now();
                     composer.retire(a.enqueued, a.slo_ms, done, true);
                     let latency = done.duration_since(a.enqueued);
                     lane.latency.record(latency);
                     lane.served += 1;
                     lane.tokens += report.tokens as u64;
+                    tel.instant("retire", worker::DRIVER, EvArgs::req(a.id));
+                    tel.instant("leave", worker::DRIVER, EvArgs::req(a.id));
                     let generated_rows: Vec<Vec<i32>> =
                         out.generated_rows.iter().take(a.batch_hint).cloned().collect();
                     let _ = a.reply.send(InferResponse {
@@ -1435,6 +1811,7 @@ impl<'e> Router<'e> {
                         profile: lane.profile.clone(),
                         ok: true,
                         error: None,
+                        reason: None,
                         latency_ms: latency.as_secs_f64() * 1000.0,
                         batch: a.batch,
                         tokens: report.tokens,
@@ -1446,6 +1823,10 @@ impl<'e> Router<'e> {
             }
         }
         composer.note_iteration();
+        self.peak = self.peak.max(turn_peak);
+        if self.first_error.is_none() {
+            self.first_error = turn_err;
+        }
     }
 }
 
@@ -1523,6 +1904,7 @@ mod tests {
             profile: "tiny-gpt".into(),
             ok: true,
             error: None,
+            reason: None,
             latency_ms: 12.5,
             batch: 4,
             tokens: 8,
@@ -1536,11 +1918,35 @@ mod tests {
         assert_eq!(back.tokens, 8);
         assert_eq!(back.peak_bytes, 1024);
         assert_eq!(back.generated_rows, vec![vec![7, 9], vec![3, 5]]);
-        let rej = InferResponse::rejected(9, "m", Instant::now(), "nope");
+        let rej =
+            InferResponse::rejected(9, "m", Instant::now(), reject_reason::VALIDATION, "nope");
         let back = InferResponse::from_json(&rej.to_json()).unwrap();
         assert!(!back.ok);
         assert_eq!(back.error.as_deref(), Some("nope"));
+        assert_eq!(back.reason.as_deref(), Some("validation"));
         assert!(back.generated_rows.is_empty());
+    }
+
+    #[test]
+    fn reject_reasons_note_merge_total() {
+        let mut a = RejectReasons::default();
+        a.note(reject_reason::DEADLINE_EXPIRED);
+        a.note(reject_reason::SHED_OVERLOAD);
+        a.note(reject_reason::SHED_OVERLOAD);
+        a.note("something-unknown"); // folds into internal
+        let mut b = RejectReasons::default();
+        b.note(reject_reason::VALIDATION);
+        b.note(reject_reason::LANE_DEAD);
+        a.merge(&b);
+        assert_eq!(a.deadline_expired, 1);
+        assert_eq!(a.shed_overload, 2);
+        assert_eq!(a.validation, 1);
+        assert_eq!(a.lane_dead, 1);
+        assert_eq!(a.internal, 1);
+        assert_eq!(a.total(), 6);
+        let j = a.to_json();
+        assert_eq!(j.get("shed_overload").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("validation").unwrap().as_usize().unwrap(), 1);
     }
 
     #[test]

@@ -12,11 +12,12 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use super::router::{InferRequest, Router, RouterConfig, RouterSummary};
+use super::router::{InferRequest, RejectReasons, Router, RouterConfig, RouterSummary};
 use crate::config::{Mode, RunConfig};
 use crate::elastic::PressureTrace;
 use crate::engine::Engine;
 use crate::metrics::{check_slo, LatencyRecorder, SloReport};
+use crate::telemetry::Telemetry;
 use crate::util::json::Value;
 use crate::util::rng::Rng;
 
@@ -36,6 +37,9 @@ pub struct ServeConfig {
     pub slo_ms: f64,
     /// memory-pressure trace applied between batches (see [`crate::elastic`])
     pub memory_trace: Option<PressureTrace>,
+    /// structured event bus threaded through the router and its session
+    /// (off by default — the disabled path is a single atomic load)
+    pub telemetry: Telemetry,
 }
 
 impl Default for ServeConfig {
@@ -48,6 +52,7 @@ impl Default for ServeConfig {
             batch_window: Duration::from_millis(20),
             slo_ms: 1000.0,
             memory_trace: None,
+            telemetry: Telemetry::off(),
         }
     }
 }
@@ -71,6 +76,8 @@ impl ServeConfig {
 #[derive(Debug, Clone)]
 pub struct ServeSummary {
     pub served: usize,
+    /// per-reason rejection counters (zero across the board on a clean run)
+    pub reject_reasons: RejectReasons,
     pub batches: usize,
     pub latency: LatencyRecorder,
     pub throughput_rps: f64,
@@ -125,6 +132,7 @@ impl ServeSummary {
         let slo = check_slo(&s.latency, slo_ms);
         ServeSummary {
             served: s.served,
+            reject_reasons: s.reject_reasons,
             batches: s.batches,
             throughput_rps: s.throughput_rps,
             peak_bytes: s.peak_bytes,
@@ -161,6 +169,7 @@ impl ServeSummary {
     pub fn to_json(&self) -> Value {
         Value::obj()
             .set("served", self.served)
+            .set("reject_reasons", self.reject_reasons.to_json())
             .set("batches", self.batches)
             .set("mean_batch_size", self.mean_batch_size)
             .set("throughput_rps", self.throughput_rps)
@@ -198,7 +207,8 @@ impl ServeSummary {
 /// many batches follow.  A dropped producer ends the run gracefully — it
 /// is a short workload, never a panic.
 pub fn serve(engine: &Engine, cfg: &ServeConfig) -> Result<ServeSummary> {
-    let router = Router::new(engine, cfg.router_config())?;
+    let mut router = Router::new(engine, cfg.router_config())?;
+    router.set_telemetry(cfg.telemetry.clone());
     let handle = router.handle();
     let profile = cfg.run.profile.clone();
     let num = cfg.num_requests;
@@ -279,6 +289,7 @@ mod tests {
     fn summary_json_has_stable_keys() {
         let s = ServeSummary {
             served: 4,
+            reject_reasons: RejectReasons::default(),
             batches: 2,
             latency: LatencyRecorder::new(),
             throughput_rps: 1.5,
@@ -311,6 +322,7 @@ mod tests {
         let v = s.to_json();
         for key in [
             "served",
+            "reject_reasons",
             "batches",
             "throughput_rps",
             "latency",

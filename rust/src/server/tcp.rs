@@ -18,9 +18,17 @@
 //! <- {"ok":true,"id":1,...,"tokens":2,"generated_rows":[[17,202],[65,9]]}
 //! -> {"op":"ping"}
 //! <- {"ok":true,"op":"pong"}
+//! -> {"op":"stats"}           # mid-flight RouterSummary snapshot
+//! <- {"ok":true,"op":"stats","served":3,...,"reject_reasons":{...}}
+//! -> {"op":"metrics"}         # Prometheus-style text under "text"
+//! <- {"ok":true,"op":"metrics","text":"# HELP hermes_served_total ..."}
 //! -> {"op":"shutdown"}        # drains queued work, stops the server
 //! <- {"ok":true,"op":"shutdown"}
 //! ```
+//!
+//! Rejections and protocol errors carry a structured `reason` slug
+//! (`deadline_expired`, `shed_overload`, `validation`, `lane_dead`,
+//! `internal`) next to the human-readable `error` text.
 //!
 //! Generative profiles answer with `generated_rows`: one token list per
 //! requested row (`batch_hint` rows, each row's own argmax).
@@ -36,8 +44,11 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use super::lanes::ConcurrentRouter;
-use super::router::{InferRequest, Router, RouterConfig, RouterHandle, RouterSummary};
+use super::router::{
+    reject_reason, InferRequest, Router, RouterConfig, RouterHandle, RouterSummary,
+};
 use crate::engine::Engine;
+use crate::telemetry::Telemetry;
 use crate::util::json::Value;
 
 /// A bound-but-not-yet-serving TCP front-end.  Binding is split from
@@ -45,6 +56,7 @@ use crate::util::json::Value;
 /// blocking serve loop starts.
 pub struct TcpFrontend {
     listener: TcpListener,
+    telemetry: Telemetry,
 }
 
 impl TcpFrontend {
@@ -53,7 +65,14 @@ impl TcpFrontend {
     pub fn bind(addr: &str) -> Result<TcpFrontend> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding TCP listener on {addr}"))?;
-        Ok(TcpFrontend { listener })
+        Ok(TcpFrontend { listener, telemetry: Telemetry::off() })
+    }
+
+    /// Attach a telemetry bus: the router (and every lane/session under
+    /// it) records lifecycle spans on it, and `{"op":"metrics"}` reports
+    /// its dropped-event counter.
+    pub fn set_telemetry(&mut self, t: Telemetry) {
+        self.telemetry = t;
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {
@@ -68,8 +87,10 @@ impl TcpFrontend {
     /// caller's engine unused — each lane builds its own); the wire
     /// protocol and summary are identical.
     pub fn run(self, engine: &Engine, cfg: RouterConfig) -> Result<RouterSummary> {
+        let telemetry = self.telemetry.clone();
         if cfg.concurrent {
-            let router = ConcurrentRouter::new(engine.paths.clone(), cfg)?;
+            let mut router = ConcurrentRouter::new(engine.paths.clone(), cfg)?;
+            router.set_telemetry(telemetry);
             let handle = router.handle();
             let (stop, accept) = self.spawn_accept_loop(handle)?;
             let summary = router.run();
@@ -77,7 +98,8 @@ impl TcpFrontend {
             let _ = accept.join();
             return summary;
         }
-        let router = Router::new(engine, cfg)?;
+        let mut router = Router::new(engine, cfg)?;
+        router.set_telemetry(telemetry);
         let handle = router.handle();
         let (stop, accept) = self.spawn_accept_loop(handle)?;
         let summary = router.run();
@@ -100,6 +122,7 @@ impl TcpFrontend {
         // accept thread notices and unbinds instead of lingering forever.
         self.listener.set_nonblocking(true)?;
         let listener = self.listener;
+        let telemetry = self.telemetry;
         let accept_stop = stop.clone();
         let active = Arc::new(AtomicUsize::new(0));
         let accept = std::thread::spawn(move || {
@@ -116,6 +139,7 @@ impl TcpFrontend {
                         if active.load(Ordering::Relaxed) >= MAX_CONNECTIONS {
                             let reply = Value::obj()
                                 .set("ok", false)
+                                .set("reason", reject_reason::SHED_OVERLOAD)
                                 .set("error", "server busy: too many connections");
                             let _ = stream.write_all(reply.compact().as_bytes());
                             let _ = stream.write_all(b"\n");
@@ -127,9 +151,10 @@ impl TcpFrontend {
                         }
                         active.fetch_add(1, Ordering::Relaxed);
                         let h = handle.clone();
+                        let tel = telemetry.clone();
                         let done = active.clone();
                         std::thread::spawn(move || {
-                            let _ = client_loop(stream, h);
+                            let _ = client_loop(stream, h, tel);
                             done.fetch_sub(1, Ordering::Relaxed);
                         });
                     }
@@ -208,7 +233,7 @@ fn read_bounded_line<R: BufRead>(reader: &mut R) -> std::io::Result<Option<Strin
 /// Any error (bad JSON, oversized line, dead router, closed socket)
 /// answers or ends the connection gracefully — library code must not
 /// panic or balloon on a bad peer.
-fn client_loop(stream: TcpStream, handle: RouterHandle) -> Result<()> {
+fn client_loop(stream: TcpStream, handle: RouterHandle, telemetry: Telemetry) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(CLIENT_IDLE_TIMEOUT)).ok();
     let mut writer = stream.try_clone().context("cloning TCP stream")?;
@@ -230,7 +255,7 @@ fn client_loop(stream: TcpStream, handle: RouterHandle) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let (reply, shutdown) = handle_line(&line, &handle);
+        let (reply, shutdown) = handle_line(&line, &handle, &telemetry);
         writer.write_all(reply.compact().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
@@ -247,8 +272,17 @@ fn client_loop(stream: TcpStream, handle: RouterHandle) -> Result<()> {
 /// Dispatch one request line; returns the reply and whether the peer
 /// asked for a server shutdown (performed by the caller *after* the reply
 /// is flushed).
-fn handle_line(line: &str, handle: &RouterHandle) -> (Value, bool) {
-    let err = |msg: String| (Value::obj().set("ok", false).set("error", msg), false);
+fn handle_line(line: &str, handle: &RouterHandle, telemetry: &Telemetry) -> (Value, bool) {
+    // protocol-level failures are validation errors in the reject taxonomy
+    let err = |msg: String| {
+        (
+            Value::obj()
+                .set("ok", false)
+                .set("reason", reject_reason::VALIDATION)
+                .set("error", msg),
+            false,
+        )
+    };
     let parsed = match Value::parse(line) {
         Ok(v) => v,
         Err(e) => return err(format!("bad json: {e:#}")),
@@ -257,6 +291,24 @@ fn handle_line(line: &str, handle: &RouterHandle) -> (Value, bool) {
     match op {
         "ping" => (Value::obj().set("ok", true).set("op", "pong"), false),
         "shutdown" => (Value::obj().set("ok", true).set("op", "shutdown"), true),
+        // mid-flight counters, same aggregation code path as the final
+        // summary (a snapshot taken at shutdown matches it field for field)
+        "stats" => match handle.stats() {
+            Ok(s) => (s.to_json().set("ok", true).set("op", "stats"), false),
+            Err(e) => err(format!("{e:#}")),
+        },
+        // Prometheus-style text exposition, wrapped in the line protocol's
+        // one-JSON-object-per-line framing under the "text" key
+        "metrics" => match handle.stats() {
+            Ok(s) => (
+                Value::obj()
+                    .set("ok", true)
+                    .set("op", "metrics")
+                    .set("text", s.to_prometheus(telemetry.dropped())),
+                false,
+            ),
+            Err(e) => err(format!("{e:#}")),
+        },
         "infer" => {
             let req = match InferRequest::from_json(&parsed) {
                 Ok(r) => r,
@@ -264,7 +316,13 @@ fn handle_line(line: &str, handle: &RouterHandle) -> (Value, bool) {
             };
             match handle.submit(req).and_then(|t| t.wait()) {
                 Ok(resp) => (resp.to_json(), false),
-                Err(e) => err(format!("{e:#}")),
+                Err(e) => (
+                    Value::obj()
+                        .set("ok", false)
+                        .set("reason", reject_reason::LANE_DEAD)
+                        .set("error", format!("{e:#}")),
+                    false,
+                ),
             }
         }
         other => err(format!("unknown op '{other}'")),

@@ -1,0 +1,259 @@
+//! Chrome trace-event JSON backend for the telemetry bus.
+//!
+//! Serializes drained [`Event`]s into the trace-event format that
+//! Perfetto (<https://ui.perfetto.dev>) and `chrome://tracing` load
+//! directly: `pid` = serving lane, `tid` = worker slot (see
+//! [`super::worker`]), timestamps in microseconds.  Span phases map
+//! 1:1 — [`Phase::Complete`] → `X`, [`Phase::Begin`]/[`Phase::End`] →
+//! `B`/`E`, [`Phase::Instant`] → `i`, [`Phase::Counter`] → `C` — plus
+//! synthesized `M` metadata events naming each lane row and worker row.
+//!
+//! [`validate`] is the schema check the tests (and `make trace-smoke`)
+//! run against an emitted file: balanced `B`/`E` stacks per (pid, tid),
+//! monotonic `B`/`E` timestamps per thread row, and required keys on
+//! every event.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Event, Phase};
+use crate::util::json::Value;
+
+fn worker_name(tid: u32) -> String {
+    match tid {
+        super::worker::DRIVER => "driver".to_string(),
+        super::worker::INFER => "inference".to_string(),
+        super::worker::DAEMON => "daemon".to_string(),
+        t if (10..90).contains(&t) => format!("loader {}", t - 10),
+        t => format!("worker {t}"),
+    }
+}
+
+fn args_json(ev: &Event) -> Value {
+    let mut o = Value::obj();
+    if let Some(p) = ev.args.pass {
+        o = o.set("pass", p);
+    }
+    if let Some(e) = ev.args.epoch {
+        o = o.set("epoch", e);
+    }
+    if let Some(s) = ev.args.stage {
+        o = o.set("stage", s);
+    }
+    if let Some(r) = ev.args.req {
+        o = o.set("req", r);
+    }
+    if let Some(b) = ev.args.bytes {
+        o = o.set("bytes", b);
+    }
+    if let Some(r) = ev.args.reason {
+        o = o.set("reason", r);
+    }
+    if let Some(v) = ev.args.value {
+        o = o.set("value", v);
+    }
+    o
+}
+
+/// Build the full Chrome trace document from drained events.
+pub fn chrome_trace(events: &[Event], dropped: u64) -> Value {
+    let mut out: Vec<Value> = Vec::with_capacity(events.len() + 16);
+
+    // metadata rows first: name every (pid) lane and (pid, tid) worker
+    let pids: BTreeSet<u32> = events.iter().map(|e| e.lane).collect();
+    let rows: BTreeSet<(u32, u32)> = events.iter().map(|e| (e.lane, e.worker)).collect();
+    for pid in &pids {
+        out.push(
+            Value::obj()
+                .set("name", "process_name")
+                .set("ph", "M")
+                .set("pid", *pid as u64)
+                .set("tid", 0u64)
+                .set("args", Value::obj().set("name", format!("lane {pid}"))),
+        );
+    }
+    for (pid, tid) in &rows {
+        out.push(
+            Value::obj()
+                .set("name", "thread_name")
+                .set("ph", "M")
+                .set("pid", *pid as u64)
+                .set("tid", *tid as u64)
+                .set("args", Value::obj().set("name", worker_name(*tid))),
+        );
+    }
+
+    for ev in events {
+        let mut o = Value::obj()
+            .set("name", ev.name)
+            .set("cat", "hermes")
+            .set("ph", match ev.phase {
+                Phase::Begin => "B",
+                Phase::End => "E",
+                Phase::Instant => "i",
+                Phase::Complete => "X",
+                Phase::Counter => "C",
+            })
+            .set("ts", ev.ts_us)
+            .set("pid", ev.lane as u64)
+            .set("tid", ev.worker as u64);
+        if ev.phase == Phase::Complete {
+            o = o.set("dur", ev.dur_us);
+        }
+        if ev.phase == Phase::Instant {
+            o = o.set("s", "t"); // thread-scoped instant
+        }
+        o = o.set("args", args_json(ev));
+        out.push(o);
+    }
+
+    Value::obj()
+        .set("traceEvents", Value::Arr(out))
+        .set("displayTimeUnit", "ms")
+        .set("otherData", Value::obj().set("dropped_events", dropped))
+}
+
+/// Serialize and write the trace document to `path`.
+pub fn write_chrome_trace(path: &Path, events: &[Event], dropped: u64) -> Result<()> {
+    chrome_trace(events, dropped)
+        .to_file(path)
+        .with_context(|| format!("writing Chrome trace to {}", path.display()))
+}
+
+/// Schema validation for an emitted trace document (tests +
+/// `trace-smoke`): required keys, balanced `B`/`E` per (pid, tid), and
+/// monotonic `B`/`E` timestamps within each thread row.
+pub fn validate(doc: &Value) -> Result<()> {
+    let events = doc
+        .get("traceEvents")
+        .context("missing traceEvents")?
+        .as_arr()
+        .context("traceEvents is not an array")?;
+    // (pid, tid) -> open B names; (pid, tid) -> last B/E ts
+    let mut stacks: std::collections::BTreeMap<(u64, u64), Vec<String>> = Default::default();
+    let mut last_ts: std::collections::BTreeMap<(u64, u64), f64> = Default::default();
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev.get("ph").with_context(|| format!("event {i}: missing ph"))?.as_str()?;
+        let pid = ev.get("pid").with_context(|| format!("event {i}: missing pid"))?.as_f64()?
+            as u64;
+        let tid = ev.get("tid").with_context(|| format!("event {i}: missing tid"))?.as_f64()?
+            as u64;
+        if ph == "M" {
+            continue;
+        }
+        let name = ev.get("name").with_context(|| format!("event {i}: missing name"))?.as_str()?;
+        let ts = ev.get("ts").with_context(|| format!("event {i}: missing ts"))?.as_f64()?;
+        if ts < 0.0 {
+            bail!("event {i} ({name}): negative ts");
+        }
+        match ph {
+            "B" | "E" => {
+                let key = (pid, tid);
+                if let Some(prev) = last_ts.get(&key) {
+                    if ts < *prev {
+                        bail!("event {i} ({name}): B/E ts not monotonic on pid {pid} tid {tid}");
+                    }
+                }
+                last_ts.insert(key, ts);
+                let stack = stacks.entry(key).or_default();
+                if ph == "B" {
+                    stack.push(name.to_string());
+                } else {
+                    let open = stack.pop().with_context(|| {
+                        format!("event {i} ({name}): E with no open B on pid {pid} tid {tid}")
+                    })?;
+                    if open != name {
+                        bail!("event {i}: E '{name}' closes B '{open}' on pid {pid} tid {tid}");
+                    }
+                }
+            }
+            "X" => {
+                let dur = ev
+                    .get("dur")
+                    .with_context(|| format!("event {i} ({name}): X without dur"))?
+                    .as_f64()?;
+                if dur < 0.0 {
+                    bail!("event {i} ({name}): negative dur");
+                }
+            }
+            "i" | "C" => {}
+            other => bail!("event {i} ({name}): unknown phase '{other}'"),
+        }
+    }
+    for ((pid, tid), stack) in &stacks {
+        if !stack.is_empty() {
+            bail!("unclosed B span(s) {stack:?} on pid {pid} tid {tid}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{worker, EvArgs, Telemetry};
+    use super::*;
+
+    #[test]
+    fn trace_document_round_trips_and_validates() {
+        let t = Telemetry::on().with_lane(1);
+        t.begin("pass", worker::DRIVER, EvArgs::pass(0));
+        t.instant("enqueue", worker::DRIVER, EvArgs::req(3));
+        let s = t.now_us();
+        t.span("load", worker::loader(0), s, EvArgs::stage(2).with_bytes(4096));
+        t.counter("mem_high_water", worker::DRIVER, 1e6, EvArgs::pass(0));
+        t.end("pass", worker::DRIVER);
+        let doc = chrome_trace(&t.drain(), t.dropped());
+        // survives serialize -> parse
+        let parsed = Value::parse(&doc.compact()).unwrap();
+        validate(&parsed).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata rows for pid + per-(pid,tid) names + 5 events
+        assert!(evs.iter().any(|e| e.get("ph").unwrap().as_str().unwrap() == "M"));
+        let load = evs
+            .iter()
+            .find(|e| e.get("name").map(|n| n.as_str().unwrap()) == Some("load"))
+            .unwrap();
+        assert_eq!(load.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(load.get("args").unwrap().get("bytes").unwrap().as_usize().unwrap(), 4096);
+        assert_eq!(load.get("tid").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(load.get("pid").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn validate_rejects_unbalanced_spans() {
+        let t = Telemetry::on();
+        t.begin("pass", worker::DRIVER, EvArgs::default());
+        let doc = chrome_trace(&t.drain(), 0);
+        assert!(validate(&doc).unwrap_err().to_string().contains("unclosed"));
+
+        let t = Telemetry::on();
+        t.end("pass", worker::DRIVER);
+        let doc = chrome_trace(&t.drain(), 0);
+        assert!(validate(&doc).unwrap_err().to_string().contains("no open B"));
+    }
+
+    #[test]
+    fn validate_rejects_mismatched_nesting() {
+        let t = Telemetry::on();
+        t.begin("outer", worker::DRIVER, EvArgs::default());
+        t.begin("inner", worker::DRIVER, EvArgs::default());
+        t.end("outer", worker::DRIVER); // wrong: closes 'inner'
+        t.end("inner", worker::DRIVER);
+        let doc = chrome_trace(&t.drain(), 0);
+        assert!(validate(&doc).is_err());
+    }
+
+    #[test]
+    fn dropped_count_lands_in_other_data() {
+        let t = Telemetry::with_capacity(1);
+        t.instant("a", 0, EvArgs::default());
+        t.instant("b", 0, EvArgs::default());
+        let doc = chrome_trace(&t.drain(), t.dropped());
+        assert_eq!(
+            doc.get("otherData").unwrap().get("dropped_events").unwrap().as_usize().unwrap(),
+            1
+        );
+    }
+}

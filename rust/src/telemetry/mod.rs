@@ -1,0 +1,482 @@
+//! Unified telemetry: a bounded, lock-cheap structured event bus.
+//!
+//! Every layer of the stack emits [`Event`]s through a cloned
+//! [`Telemetry`] handle — per-request lifecycle instants in the serving
+//! layer (enqueue → admit/shed → prime → decode_step → retire), per-stage
+//! worker spans in `pipeload` (load / compute / stall-mem / stall-wait /
+//! prefetch / device-hit / evict), accountant high-water counters in
+//! `memory`, and elastic `BudgetEpoch` + KV dedup/COW instants.  Two
+//! consumers read the bus: the Chrome trace-event writer
+//! ([`chrome::chrome_trace`], behind `--trace-out`) and the live
+//! `{"op":"stats"}` / `{"op":"metrics"}` TCP surface.
+//!
+//! Design constraints (the whole point of this module):
+//!
+//! * **disabled is near-free** — [`Telemetry::is_on`] is a single
+//!   `Relaxed` atomic load; every emit helper checks it first, and hot
+//!   call sites guard externally so argument structs are never even
+//!   built.  Telemetry must never perturb the tokens it observes: it
+//!   only reads timestamps, it never gates execution.
+//! * **bounded** — each emitting thread appends to its own shard (an
+//!   uncontended mutex in practice; threads never share a shard), capped
+//!   at `cap_per_shard` events.  A full shard drops the event and bumps a
+//!   global counter exposed as [`Telemetry::dropped`] — backpressure
+//!   never reaches the serving path.
+//! * **lane-scoped** — handles are cheap to clone; [`Telemetry::with_lane`]
+//!   rebinds the lane tag (the Chrome `pid`) so per-lane executors stamp
+//!   every event without threading an extra argument around.
+//!
+//! Worker ids (the Chrome `tid`) follow the [`worker`] convention so
+//! traces render with a stable row layout per lane.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+pub mod chrome;
+
+/// Default per-shard event capacity (events, not bytes).  A two-lane
+/// continuous serve with a few hundred tokens emits a few thousand
+/// events; 1<<16 leaves generous headroom before drops start.
+pub const DEFAULT_SHARD_CAP: usize = 1 << 16;
+
+/// Well-known worker slots (Chrome `tid`) inside one lane's process row.
+pub mod worker {
+    /// the serving driver / router loop (lifecycle events)
+    pub const DRIVER: u32 = 0;
+    /// the inference agent — compute runs on the session's calling thread
+    pub const INFER: u32 = 1;
+    /// the memory daemon (pin / destroy decisions)
+    pub const DAEMON: u32 = 90;
+
+    /// loading agent `i` (worker-pool loader threads)
+    pub fn loader(i: usize) -> u32 {
+        10 + i as u32
+    }
+}
+
+/// Event phase, mirroring the Chrome trace-event phases we emit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// `B` — begin a nested span on this (lane, worker) row.  Only used
+    /// for strictly sequential per-thread spans (pass boundaries).
+    Begin,
+    /// `E` — end the innermost open span on this row
+    End,
+    /// `i` — a point-in-time marker (lifecycle edges, evictions, dedup)
+    Instant,
+    /// `X` — a complete span with an explicit duration (load / compute /
+    /// stalls / prefetch), safe under overlap because it carries its own
+    /// extent instead of relying on a per-thread stack
+    Complete,
+    /// `C` — a sampled counter series (accountant high-water bytes)
+    Counter,
+}
+
+/// Optional structured payload; unset fields stay out of the JSON.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvArgs {
+    pub pass: Option<u64>,
+    pub epoch: Option<u64>,
+    pub stage: Option<usize>,
+    /// request id (serving lifecycle events)
+    pub req: Option<u64>,
+    pub bytes: Option<u64>,
+    /// static cause tag (shed reason, eviction cause, …)
+    pub reason: Option<&'static str>,
+    /// counter sample value
+    pub value: Option<f64>,
+}
+
+impl EvArgs {
+    pub fn pass(pass: u64) -> EvArgs {
+        EvArgs { pass: Some(pass), ..EvArgs::default() }
+    }
+
+    pub fn stage(stage: usize) -> EvArgs {
+        EvArgs { stage: Some(stage), ..EvArgs::default() }
+    }
+
+    pub fn req(req: u64) -> EvArgs {
+        EvArgs { req: Some(req), ..EvArgs::default() }
+    }
+
+    pub fn with_pass(mut self, pass: u64) -> EvArgs {
+        self.pass = Some(pass);
+        self
+    }
+
+    pub fn with_epoch(mut self, epoch: u64) -> EvArgs {
+        self.epoch = Some(epoch);
+        self
+    }
+
+    pub fn with_stage(mut self, stage: usize) -> EvArgs {
+        self.stage = Some(stage);
+        self
+    }
+
+    pub fn with_req(mut self, req: u64) -> EvArgs {
+        self.req = Some(req);
+        self
+    }
+
+    pub fn with_bytes(mut self, bytes: u64) -> EvArgs {
+        self.bytes = Some(bytes);
+        self
+    }
+
+    pub fn with_reason(mut self, reason: &'static str) -> EvArgs {
+        self.reason = Some(reason);
+        self
+    }
+}
+
+/// One structured telemetry event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub name: &'static str,
+    pub phase: Phase,
+    /// Chrome `pid`: the serving lane (0 for single-session runs)
+    pub lane: u32,
+    /// Chrome `tid`: see [`worker`]
+    pub worker: u32,
+    /// microseconds since the bus was created
+    pub ts_us: u64,
+    /// span extent for [`Phase::Complete`]; 0 otherwise
+    pub dur_us: u64,
+    pub args: EvArgs,
+}
+
+struct Shard {
+    events: Mutex<Vec<Event>>,
+}
+
+struct Inner {
+    /// unique bus id — the thread-local registry key (pointer identity
+    /// would be unsound across bus drop/realloc)
+    id: u64,
+    enabled: AtomicBool,
+    start: Instant,
+    shards: Mutex<Vec<Arc<Shard>>>,
+    dropped: AtomicU64,
+    cap_per_shard: usize,
+}
+
+static NEXT_BUS_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// per-thread shard cache, keyed by bus id; a thread touches few
+    /// buses, so a linear scan beats a map
+    static LOCAL_SHARDS: RefCell<Vec<(u64, Arc<Shard>)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Cloneable handle on the event bus.  `Clone` is an `Arc` bump; the
+/// `lane` tag rides on the handle so per-lane clones stamp it for free.
+#[derive(Clone)]
+pub struct Telemetry {
+    inner: Arc<Inner>,
+    lane: u32,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry")
+            .field("on", &self.is_on())
+            .field("lane", &self.lane)
+            .finish()
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Telemetry {
+        Telemetry::off()
+    }
+}
+
+impl Telemetry {
+    fn build(enabled: bool, cap_per_shard: usize) -> Telemetry {
+        Telemetry {
+            inner: Arc::new(Inner {
+                id: NEXT_BUS_ID.fetch_add(1, Ordering::Relaxed),
+                enabled: AtomicBool::new(enabled),
+                start: Instant::now(),
+                shards: Mutex::new(Vec::new()),
+                dropped: AtomicU64::new(0),
+                cap_per_shard,
+            }),
+            lane: 0,
+        }
+    }
+
+    /// A disabled bus: every emit is one atomic load and a branch.
+    pub fn off() -> Telemetry {
+        Telemetry::build(false, DEFAULT_SHARD_CAP)
+    }
+
+    /// An enabled bus with the default per-shard capacity.
+    pub fn on() -> Telemetry {
+        Telemetry::build(true, DEFAULT_SHARD_CAP)
+    }
+
+    /// An enabled bus with an explicit per-shard capacity (tests exercise
+    /// the drop path with tiny caps).
+    pub fn with_capacity(cap_per_shard: usize) -> Telemetry {
+        Telemetry::build(true, cap_per_shard.max(1))
+    }
+
+    /// THE disabled-path check: a single `Relaxed` atomic load.
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        self.inner.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Rebind the lane tag (Chrome `pid`) on a cheap clone.
+    pub fn with_lane(&self, lane: u32) -> Telemetry {
+        Telemetry { inner: Arc::clone(&self.inner), lane }
+    }
+
+    pub fn lane(&self) -> u32 {
+        self.lane
+    }
+
+    /// Microseconds since the bus was created (span timing).
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.inner.start.elapsed().as_micros() as u64
+    }
+
+    /// Events dropped because a shard was full.
+    pub fn dropped(&self) -> u64 {
+        self.inner.dropped.load(Ordering::Relaxed)
+    }
+
+    fn push(&self, ev: Event) {
+        let inner = &self.inner;
+        LOCAL_SHARDS.with(|reg| {
+            let mut reg = reg.borrow_mut();
+            let shard = match reg.iter().find(|(id, _)| *id == inner.id) {
+                Some((_, s)) => Arc::clone(s),
+                None => {
+                    let s = Arc::new(Shard { events: Mutex::new(Vec::new()) });
+                    inner.shards.lock().unwrap().push(Arc::clone(&s));
+                    reg.push((inner.id, Arc::clone(&s)));
+                    s
+                }
+            };
+            let mut events = shard.events.lock().unwrap();
+            if events.len() < inner.cap_per_shard {
+                events.push(ev);
+            } else {
+                inner.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+    }
+
+    /// Point event (lifecycle edges, evictions, dedup/COW, shed).
+    #[inline]
+    pub fn instant(&self, name: &'static str, worker: u32, args: EvArgs) {
+        if !self.is_on() {
+            return;
+        }
+        let ts_us = self.now_us();
+        self.push(Event {
+            name,
+            phase: Phase::Instant,
+            lane: self.lane,
+            worker,
+            ts_us,
+            dur_us: 0,
+            args,
+        });
+    }
+
+    /// Complete span from a caller-sampled start (`now_us()` at entry).
+    /// Safe under overlap: the event carries its own extent.
+    #[inline]
+    pub fn span(&self, name: &'static str, worker: u32, start_us: u64, args: EvArgs) {
+        if !self.is_on() {
+            return;
+        }
+        let now = self.now_us();
+        self.push(Event {
+            name,
+            phase: Phase::Complete,
+            lane: self.lane,
+            worker,
+            ts_us: start_us,
+            dur_us: now.saturating_sub(start_us),
+            args,
+        });
+    }
+
+    /// Begin a nested span.  ONLY for strictly sequential spans on one
+    /// (lane, worker) row — Chrome pairs `B`/`E` on a per-thread stack.
+    #[inline]
+    pub fn begin(&self, name: &'static str, worker: u32, args: EvArgs) {
+        if !self.is_on() {
+            return;
+        }
+        let ts_us = self.now_us();
+        self.push(Event {
+            name,
+            phase: Phase::Begin,
+            lane: self.lane,
+            worker,
+            ts_us,
+            dur_us: 0,
+            args,
+        });
+    }
+
+    /// End the innermost open span on this (lane, worker) row.
+    #[inline]
+    pub fn end(&self, name: &'static str, worker: u32) {
+        if !self.is_on() {
+            return;
+        }
+        let ts_us = self.now_us();
+        self.push(Event {
+            name,
+            phase: Phase::End,
+            lane: self.lane,
+            worker,
+            ts_us,
+            dur_us: 0,
+            args: EvArgs::default(),
+        });
+    }
+
+    /// Counter sample (accountant high-water bytes per pass).
+    #[inline]
+    pub fn counter(&self, name: &'static str, worker: u32, value: f64, args: EvArgs) {
+        if !self.is_on() {
+            return;
+        }
+        let ts_us = self.now_us();
+        self.push(Event {
+            name,
+            phase: Phase::Counter,
+            lane: self.lane,
+            worker,
+            ts_us,
+            dur_us: 0,
+            args: EvArgs { value: Some(value), ..args },
+        });
+    }
+
+    /// Snapshot every shard (events stay in place; stable under
+    /// concurrent emitters), sorted by timestamp.
+    pub fn snapshot(&self) -> Vec<Event> {
+        let shards = self.inner.shards.lock().unwrap().clone();
+        let mut all = Vec::new();
+        for s in &shards {
+            all.extend(s.events.lock().unwrap().iter().cloned());
+        }
+        all.sort_by_key(|e| (e.ts_us, e.lane, e.worker));
+        all
+    }
+
+    /// Drain every shard (leaves them empty), sorted by timestamp.
+    pub fn drain(&self) -> Vec<Event> {
+        let shards = self.inner.shards.lock().unwrap().clone();
+        let mut all = Vec::new();
+        for s in &shards {
+            all.append(&mut s.events.lock().unwrap());
+        }
+        all.sort_by_key(|e| (e.ts_us, e.lane, e.worker));
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_bus_records_nothing() {
+        let t = Telemetry::off();
+        assert!(!t.is_on());
+        t.instant("enqueue", worker::DRIVER, EvArgs::req(1));
+        let s = t.now_us();
+        t.span("load", worker::loader(0), s, EvArgs::stage(3));
+        t.counter("mem_high_water", worker::DRIVER, 42.0, EvArgs::default());
+        assert!(t.drain().is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn events_carry_lane_and_args() {
+        let t = Telemetry::on().with_lane(2);
+        t.instant("shed", worker::DRIVER, EvArgs::req(7).with_reason("shed_overload"));
+        let start = t.now_us();
+        t.span("compute", worker::INFER, start, EvArgs::stage(1).with_pass(4).with_epoch(1));
+        let evs = t.drain();
+        assert_eq!(evs.len(), 2);
+        assert!(evs.iter().all(|e| e.lane == 2));
+        let shed = evs.iter().find(|e| e.name == "shed").unwrap();
+        assert_eq!(shed.args.reason, Some("shed_overload"));
+        assert_eq!(shed.args.req, Some(7));
+        let comp = evs.iter().find(|e| e.name == "compute").unwrap();
+        assert_eq!(comp.phase, Phase::Complete);
+        assert_eq!(comp.args.pass, Some(4));
+    }
+
+    #[test]
+    fn full_shard_drops_and_counts() {
+        let t = Telemetry::with_capacity(4);
+        for i in 0..10 {
+            t.instant("e", worker::DRIVER, EvArgs::req(i));
+        }
+        assert_eq!(t.dropped(), 6);
+        assert_eq!(t.drain().len(), 4);
+    }
+
+    #[test]
+    fn shards_merge_across_threads_sorted() {
+        let t = Telemetry::on();
+        let mut handles = Vec::new();
+        for w in 0..4u32 {
+            let tc = t.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    tc.instant("tick", w, EvArgs::req(i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let evs = t.drain();
+        assert_eq!(evs.len(), 200);
+        assert!(evs.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+        // second drain is empty; shards stay registered
+        t.instant("late", worker::DRIVER, EvArgs::default());
+        assert_eq!(t.drain().len(), 1);
+    }
+
+    #[test]
+    fn snapshot_does_not_drain() {
+        let t = Telemetry::on();
+        t.instant("a", 0, EvArgs::default());
+        assert_eq!(t.snapshot().len(), 1);
+        assert_eq!(t.snapshot().len(), 1);
+        assert_eq!(t.drain().len(), 1);
+        assert!(t.snapshot().is_empty());
+    }
+
+    #[test]
+    fn two_buses_do_not_cross_talk() {
+        let a = Telemetry::on();
+        let b = Telemetry::on();
+        a.instant("a", 0, EvArgs::default());
+        b.instant("b", 0, EvArgs::default());
+        let ea = a.drain();
+        let eb = b.drain();
+        assert_eq!(ea.len(), 1);
+        assert_eq!(eb.len(), 1);
+        assert_eq!(ea[0].name, "a");
+        assert_eq!(eb[0].name, "b");
+    }
+}

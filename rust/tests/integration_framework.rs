@@ -172,7 +172,7 @@ fn engine_rejects_bad_configs() {
 #[test]
 fn fig1b_reports_idle_fraction() {
     let e = engine();
-    let s = report::fig1b(&e, "edge-sd", "tiny-bert").unwrap();
+    let s = report::fig1b(&e, "edge-sd", "tiny-bert", None).unwrap();
     assert!(s.contains("idle fraction"), "{s}");
     assert!(s.contains("IA"), "{s}");
 }

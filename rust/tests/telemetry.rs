@@ -1,0 +1,248 @@
+//! Unified-telemetry integration tests (PR 8): the structured event bus
+//! must *reconcile* with the counters the engine already reports (trace
+//! spans are the same stalls, not a second opinion), the Chrome trace it
+//! exports must be schema-valid under two-lane continuous churn, the
+//! mid-flight `stats` snapshot must use the same aggregation as the final
+//! summary, and — the cardinal rule — telemetry must never perturb the
+//! tokens it observes.  Needs `make artifacts`.
+
+use std::time::Duration;
+
+use hermes::config::{Mode, Paths, RunConfig};
+use hermes::engine::Engine;
+use hermes::server::{ConcurrentRouter, InferRequest, Router, RouterConfig};
+use hermes::telemetry::{chrome, worker, Event, Telemetry};
+
+fn engine() -> Engine {
+    Engine::new(Paths::detect()).unwrap()
+}
+
+/// Sum the extents of every `X` span named `name`, in milliseconds.
+fn span_sum_ms(events: &[Event], name: &str) -> f64 {
+    events.iter().filter(|e| e.name == name).map(|e| e.dur_us as f64 / 1000.0).sum()
+}
+
+fn close(trace_ms: f64, report_ms: f64, what: &str) {
+    let tol = 0.15 * trace_ms.max(report_ms) + 10.0;
+    assert!(
+        (trace_ms - report_ms).abs() <= tol,
+        "{what}: trace says {trace_ms:.2} ms, report says {report_ms:.2} ms (tol {tol:.2})"
+    );
+}
+
+/// Trace-derived stall sums must reconcile with the `RunReport` counters:
+/// both sides time the same gate waits / recv waits with their own clock
+/// reads, so they agree within a small tolerance.
+#[test]
+fn trace_stall_sums_reconcile_with_run_report() {
+    let e = engine();
+    let profile = e.runtime.profile("tiny-bert").unwrap();
+    let max_stage = profile.max_stage_bytes();
+    let cfg = RunConfig {
+        profile: "tiny-bert".into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        // two loaders against a two-stage window: the loader ahead blocks
+        // on the gate (mem stalls) while the throttled disk starves the
+        // inference agent (wait stalls)
+        budget: Some(2 * max_stage),
+        disk: "edge-sd".into(),
+        ..RunConfig::default()
+    };
+    let telemetry = Telemetry::on();
+    let mut session = e.open_session(&cfg).unwrap();
+    session.set_telemetry(telemetry.clone());
+    let (rep, _) = session.run().unwrap();
+    drop(session); // joins the worker pool: every span is flushed
+
+    let events = telemetry.drain();
+    assert_eq!(telemetry.dropped(), 0);
+    assert!(rep.wait_stall_ms > 0.0, "throttled disk must starve the inference agent");
+    assert!(rep.mem_stall_ms > 0.0, "tight budget must block the look-ahead loader");
+    close(span_sum_ms(&events, "stall_wait"), rep.wait_stall_ms, "wait stalls");
+    close(span_sum_ms(&events, "stall_mem"), rep.mem_stall_ms, "mem stalls");
+
+    // the load spans cover every stage of the pass, on loader rows
+    let loads: Vec<&Event> = events.iter().filter(|e| e.name == "load").collect();
+    assert_eq!(loads.len(), profile.stages.len(), "one load span per stage");
+    assert!(loads.iter().all(|e| e.worker >= worker::loader(0)));
+    assert!(span_sum_ms(&events, "compute") > 0.0, "compute spans on the inference row");
+}
+
+/// A generative continuous KV lane for the router tests.
+fn kv_lane(model: &str) -> RunConfig {
+    RunConfig {
+        profile: model.into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        kv_cache: true,
+        kv_block_tokens: Some(2),
+        gen_tokens: Some(4),
+        continuous: true,
+        max_active: Some(1),
+        ..RunConfig::default()
+    }
+}
+
+/// Two-lane continuous serve under churn (plus one engineered shed): the
+/// exported Chrome trace must validate — every `B` has a matching `E` on
+/// its row, timestamps are monotonic per row, and the full lifecycle
+/// vocabulary (join / leave / shed included) is present across both lane
+/// pids.
+#[test]
+fn two_lane_continuous_trace_is_schema_valid() {
+    let cfg = RouterConfig {
+        models: vec![kv_lane("tiny-gpt"), kv_lane("tiny-gptj")],
+        kv_budget: Some(1 << 20),
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        concurrent: true,
+        ..RouterConfig::default()
+    };
+    let telemetry = Telemetry::on();
+    let mut router = ConcurrentRouter::new(Paths::detect(), cfg).unwrap();
+    router.set_telemetry(telemetry.clone());
+    let handle = router.handle();
+
+    // lane A: a live head plus a request whose SLO is already blown by
+    // the time the slot frees (max_active 1) -> a guaranteed shed
+    let t_head = handle
+        .submit(InferRequest {
+            profile: "tiny-gpt".into(),
+            seed: Some(1),
+            ..InferRequest::default()
+        })
+        .unwrap();
+    let t_shed = handle
+        .submit(InferRequest {
+            profile: "tiny-gpt".into(),
+            seed: Some(2),
+            slo_ms: Some(0.001),
+            ..InferRequest::default()
+        })
+        .unwrap();
+    // lane B: ordinary churn
+    let t_b: Vec<_> = (0..2u64)
+        .map(|i| {
+            handle
+                .submit(InferRequest {
+                    profile: "tiny-gptj".into(),
+                    seed: Some(10 + i),
+                    ..InferRequest::default()
+                })
+                .unwrap()
+        })
+        .collect();
+    handle.shutdown();
+    drop(handle);
+    let summary = router.run().unwrap();
+
+    assert!(t_head.wait().unwrap().ok);
+    let shed = t_shed.wait().unwrap();
+    assert!(!shed.ok, "{shed:?}");
+    assert_eq!(shed.reason.as_deref(), Some("shed_overload"), "{shed:?}");
+    for t in t_b {
+        assert!(t.wait().unwrap().ok);
+    }
+    assert_eq!(summary.served, 3, "{:?}", summary.first_error);
+    assert_eq!(summary.shed_overload, 1);
+    assert_eq!(summary.reject_reasons.shed_overload, 1, "{:?}", summary.reject_reasons);
+
+    let events = telemetry.drain();
+    assert_eq!(telemetry.dropped(), 0, "the default shard cap must hold a short serve");
+    for name in ["enqueue", "admit", "prime", "join", "decode_step", "retire", "leave", "shed"] {
+        assert!(events.iter().any(|e| e.name == name), "missing '{name}' in the trace");
+    }
+    for lane in [0u32, 1] {
+        assert!(events.iter().any(|e| e.lane == lane), "no events for lane {lane}");
+    }
+    let doc = chrome::chrome_trace(&events, telemetry.dropped());
+    chrome::validate(&doc).expect("exported Chrome trace must be schema-valid");
+}
+
+/// The mid-flight `stats` snapshot goes through the same aggregation as
+/// the final summary, so a snapshot taken after the last reply (but while
+/// the router still runs) matches the shutdown summary counter for
+/// counter.
+#[test]
+fn mid_flight_stats_match_final_summary() {
+    let e = engine();
+    let cfg = RouterConfig {
+        models: vec![RunConfig {
+            profile: "tiny-bert".into(),
+            mode: Mode::PipeLoad,
+            agents: 2,
+            disk: "unthrottled".into(),
+            ..RunConfig::default()
+        }],
+        max_batch: 2,
+        batch_window: Duration::from_millis(1),
+        ..RouterConfig::default()
+    };
+    let router = Router::new(&e, cfg).unwrap();
+    let handle = router.handle();
+    let probe = std::thread::spawn(move || {
+        let tickets: Vec<_> = (0..4u64)
+            .map(|i| {
+                handle
+                    .submit(InferRequest {
+                        profile: "tiny-bert".into(),
+                        seed: Some(100 + i),
+                        ..InferRequest::default()
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for t in tickets {
+            assert!(t.wait().unwrap().ok);
+        }
+        let mid = handle.stats().unwrap();
+        handle.shutdown();
+        mid
+    });
+    let fin = router.run().unwrap();
+    let mid = probe.join().unwrap();
+
+    assert_eq!(mid.served, 4);
+    assert_eq!(mid.served, fin.served);
+    assert_eq!(mid.rejected, fin.rejected);
+    assert_eq!(mid.batches, fin.batches);
+    assert_eq!(mid.peak_bytes, fin.peak_bytes);
+    assert_eq!(mid.reject_reasons.iter(), fin.reject_reasons.iter());
+    assert_eq!(mid.latency.p95(), fin.latency.p95());
+    assert_eq!(mid.cache_hits, fin.cache_hits);
+    assert_eq!(mid.cache_misses, fin.cache_misses);
+}
+
+/// The cardinal rule: telemetry observes, it never gates.  The same
+/// seeded decode generates bit-identical tokens with the bus on and off.
+#[test]
+fn tokens_bit_identical_with_telemetry_on() {
+    let e = engine();
+    let cfg = RunConfig {
+        profile: "tiny-gpt".into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        kv_cache: true,
+        kv_block_tokens: Some(2),
+        gen_tokens: Some(6),
+        ..RunConfig::default()
+    };
+
+    let mut quiet = e.open_session(&cfg).unwrap();
+    let (_, out_off) = quiet.run_batch(1, 4242).unwrap();
+    drop(quiet);
+
+    let telemetry = Telemetry::on();
+    let mut traced = e.open_session(&cfg).unwrap();
+    traced.set_telemetry(telemetry.clone());
+    let (rep, out_on) = traced.run_batch(1, 4242).unwrap();
+    drop(traced);
+
+    assert_eq!(rep.tokens, 6);
+    assert_eq!(out_off.generated, out_on.generated);
+    assert_eq!(out_off.generated_rows, out_on.generated_rows);
+    assert!(!telemetry.drain().is_empty(), "the traced run must have recorded events");
+}

@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file (`make trace-smoke`).
+
+Checks the invariants Perfetto / chrome://tracing rely on:
+
+* the file parses and `traceEvents` is a non-empty list
+* every event carries `name`, `ph`, `pid`, `tid`, `ts`
+* `B`/`E` pairs balance per (pid, tid) row and never go negative
+* timestamps are monotonic non-decreasing per (pid, tid) row
+* `X` events carry a non-negative `dur`
+
+Exits non-zero with a diagnostic on the first violation — unlike the
+bench diff, a malformed trace IS a build failure.
+"""
+
+import json
+import sys
+
+
+def fail(msg):
+    print(f"validate_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main(argv):
+    if len(argv) != 2:
+        fail(f"usage: {argv[0]} TRACE.json")
+    try:
+        with open(argv[1]) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"{argv[1]}: {e}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents missing or empty")
+
+    depth = {}  # (pid, tid) -> open B count
+    last_ts = {}  # (pid, tid) -> last timestamp seen
+    for i, e in enumerate(events):
+        for key in ("name", "ph", "pid", "tid"):
+            if key not in e:
+                fail(f"event {i} missing '{key}': {e}")
+        if e["ph"] == "M":  # metadata rows carry no timestamp
+            continue
+        if "ts" not in e:
+            fail(f"event {i} missing 'ts': {e}")
+        row = (e["pid"], e["tid"])
+        if e["ts"] < last_ts.get(row, 0):
+            fail(f"event {i} ts {e['ts']} goes backwards on row {row}")
+        last_ts[row] = e["ts"]
+        if e["ph"] == "B":
+            depth[row] = depth.get(row, 0) + 1
+        elif e["ph"] == "E":
+            depth[row] = depth.get(row, 0) - 1
+            if depth[row] < 0:
+                fail(f"event {i}: E without open B on row {row}")
+        elif e["ph"] == "X" and e.get("dur", 0) < 0:
+            fail(f"event {i}: negative dur: {e}")
+    open_rows = {row: d for row, d in depth.items() if d != 0}
+    if open_rows:
+        fail(f"unbalanced B/E on rows: {open_rows}")
+    print(
+        f"validate_trace: ok — {len(events)} events, "
+        f"{len(last_ts)} (pid,tid) rows, "
+        f"{doc.get('otherData', {}).get('dropped_events', 0)} dropped"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
