@@ -6,7 +6,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts golden build test examples bench bench-diff trace-smoke tsan fmt clippy clean
+.PHONY: artifacts golden build test examples bench bench-diff trace-smoke analyze-smoke tsan fmt clippy clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../rust/artifacts
@@ -27,19 +27,21 @@ examples:
 # router run, the bursty shared-prompt continuous workload, an elastic
 # shrink-grow run with its telemetry-derived accountant high-water
 # timeline, and a pinned gpt2-base-sim overlapped decode) into
-# BENCH_pr7.json + BENCH_pr8.json; CI uploads both.
+# BENCH_pr7.json + BENCH_pr8.json + BENCH_pr9.json (pr9 adds the offline
+# analyzer's `analyze` section: per-stage bubble attribution, lifecycle
+# percentiles, memory-audit drift); CI uploads all three.
 bench:
 	cargo run --release --example bench_trajectory
 
-# Fail-soft per-metric deltas between the PR 7 and PR 8 trajectories
+# Fail-soft per-metric deltas between the PR 8 and PR 9 trajectories
 # (advisory: a missing file prints a note instead of failing the build).
-# NOTE: one `make bench` run writes both files from the same summaries, so
-# the sections diff to zero by construction — the signal is the PR 8-only
-# `mem_high_water` section (per-pass accountant high-water timeline) plus
-# whatever a previous CI run's BENCH_pr7 artifact contributes when dropped
-# in place.
+# NOTE: one `make bench` run writes all files from the same summaries, so
+# the shared sections diff to zero by construction — the signal is the
+# PR 9-only `analyze` section (bubble_by_stage_ms, breakdown percentiles,
+# audit drift) plus whatever a previous CI run's BENCH_pr8 artifact
+# contributes when dropped in place.
 bench-diff:
-	$(PY) scripts/bench_diff.py BENCH_pr7.json BENCH_pr8.json
+	$(PY) scripts/bench_diff.py BENCH_pr8.json BENCH_pr9.json
 
 # Short continuous serve with the event bus enabled: exports a Chrome
 # trace and validates it (well-formed JSON, non-empty, balanced B/E pairs
@@ -50,6 +52,17 @@ trace-smoke: build
 		--disk unthrottled --kv-cache --kv-block-tokens 2 --continuous \
 		--requests 4 --max-batch 1 --trace-out trace_smoke.json
 	$(PY) scripts/validate_trace.py trace_smoke.json
+
+# Trace -> analyze round trip: the same short continuous serve, then the
+# offline analyzer gates on it — every request lifecycle complete, every
+# pass's critical path attributed, and ZERO memory-audit drift (`hermes
+# analyze` exits nonzero on any analysis error, including dropped events
+# and audit drift).
+analyze-smoke: build
+	./target/release/hermes serve --model tiny-gpt --mode pipeload \
+		--disk unthrottled --kv-cache --kv-block-tokens 2 --continuous \
+		--requests 4 --max-batch 1 --trace-out analyze_smoke.json
+	./target/release/hermes analyze analyze_smoke.json
 
 # ThreadSanitizer over the concurrency-heavy test binaries (nightly-only:
 # -Zsanitizer needs -Zbuild-std so std is instrumented too).  PJRT-backed

@@ -22,8 +22,11 @@
 //!
 //! `BENCH_pr7.json` keeps the previous PR's layout; `BENCH_pr8.json` is
 //! the same summaries plus the telemetry-derived `mem_high_water`
-//! timeline, so `make bench-diff` shows the new observability section
-//! (and any perturbation telemetry were to introduce) at a glance.
+//! timeline; `BENCH_pr9.json` adds the offline analyzer's view of the
+//! elastic run (`analyze`: per-stage bubble attribution, request
+//! breakdown percentiles, memory-audit drift), so `make bench-diff`
+//! shows the new observability sections (and any perturbation they were
+//! to introduce) at a glance.
 //!
 //! The JSON keys are the stable `serve --json` / summary keys (the decode
 //! run uses the `RunReport` keys, incl. `decode_p50_ms` / `decode_p95_ms`
@@ -190,6 +193,9 @@ fn main() -> Result<()> {
     };
     let elastic = serve(&engine, &elastic_cfg)?;
     let events = telemetry.drain();
+    // the analyzer's view of the same events: critical-path attribution,
+    // lifecycle percentiles, and the memory-audit reconciliation
+    let analysis = hermes::analyze::Analysis::from_bus(&events, telemetry.dropped());
     let high_water: Vec<Value> = events
         .iter()
         .filter(|e| e.name == "mem_high_water")
@@ -238,10 +244,21 @@ fn main() -> Result<()> {
         .set("router_two_kv_lanes", router_two.to_json())
         .set("continuous_burst", burst_cont.to_json())
         .set("elastic_shrink_grow", elastic.to_json())
-        .set("mem_high_water", mem_high_water)
+        .set("mem_high_water", mem_high_water.clone())
         .set("decode_gpt2_pinned", decode.to_json());
     pr8.to_file(&std::path::PathBuf::from("BENCH_pr8.json"))?;
-    println!("wrote BENCH_pr7.json + BENCH_pr8.json");
+    let pr9 = Value::obj()
+        .set("bench", "pr9-trace-analytics")
+        .set("one_model", off.to_json())
+        .set("one_model_kv", on.to_json())
+        .set("router_two_kv_lanes", router_two.to_json())
+        .set("continuous_burst", burst_cont.to_json())
+        .set("elastic_shrink_grow", elastic.to_json())
+        .set("mem_high_water", mem_high_water)
+        .set("analyze", analysis.to_json())
+        .set("decode_gpt2_pinned", decode.to_json());
+    pr9.to_file(&std::path::PathBuf::from("BENCH_pr9.json"))?;
+    println!("wrote BENCH_pr7.json + BENCH_pr8.json + BENCH_pr9.json");
     println!(
         "one-model p50 {:.1} ms (kv off) vs {:.1} ms (kv on, {} incremental passes); \
          elastic: {} budget steps, {} evictions, p50 {:.1} ms",
@@ -279,6 +296,16 @@ fn main() -> Result<()> {
         high_water_len,
         budget_epoch_events,
         telemetry.dropped(),
+    );
+    println!(
+        "elastic analyzer view: {} pass(es), bubble {:.1} ms, stall-mem {:.1} ms, \
+         audit {} sample(s) (max drift {} B), {} analysis error(s)",
+        analysis.passes.len(),
+        analysis.bubble_total_ms(),
+        analysis.totals.stall_mem_ms,
+        analysis.audit.samples,
+        analysis.audit.max_drift_bytes,
+        analysis.errors.len(),
     );
     println!(
         "gpt2 pinned overlapped decode: token p50 {:.1} ms, {:.2} tokens/s \

@@ -1,0 +1,1051 @@
+//! Trace analytics: offline lifecycle reconstruction + derived signals.
+//!
+//! Consumes the telemetry bus (PR: unified telemetry) in two forms and
+//! derives what the raw event stream only implies:
+//!
+//! * **Offline** — [`Analysis`] rebuilds every request's lifecycle
+//!   (enqueue → admit/shed → prime → per-token decode → retire), splits
+//!   each pass's wall-clock into compute / pipeline-bubble / residual
+//!   along the inference row (critical-path attribution, per stage), and
+//!   re-checks the memory-attribution audit: every `mem_audit` sample
+//!   carries both the accountant's `used` and the sum of the component
+//!   stores (pins + device + prefetch + KV + pass-live + resident), so
+//!   nonzero drift means a byte the accountant holds that no store owns
+//!   up to — reported as an **error**, never smoothed over.  Feeds
+//!   `hermes analyze` and `hermes report --figure 1b` (one code path).
+//! * **Live** — [`signals::DerivedSignals`] subscribes to the bus
+//!   ([`Telemetry::subscribe`]) and keeps rolling-window rates (stall
+//!   ratios per lane, shed rate by reason, prefetch waste rate,
+//!   accountant high-water slope) behind the `{"op":"health"}` TCP op —
+//!   the in-process hook a closed-loop elastic controller attaches to.
+//!
+//! A trace that cannot be fully reconstructed — dropped events, a
+//! request admitted but never retired, an unclosed pass span — fails
+//! loudly: [`Analysis::errors`] is non-empty and [`Analysis::ok`] is
+//! false.  Partial numbers from a truncated trace are worse than no
+//! numbers.
+//!
+//! [`Telemetry::subscribe`]: crate::telemetry::Telemetry::subscribe
+
+pub mod signals;
+
+pub use signals::{DerivedSignals, LaneSignals, SignalSnapshot, DEFAULT_WINDOW};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::LatencyRecorder;
+use crate::telemetry::{worker, Event, Phase};
+use crate::util::json::Value;
+use crate::util::{human_bytes, human_ms};
+
+/// One telemetry event in owned form: what [`Event`] carries, but with
+/// an owned name/reason so events parsed back out of a Chrome trace
+/// file and events drained straight off the bus analyze identically.
+#[derive(Debug, Clone)]
+pub struct AnEvent {
+    pub name: String,
+    pub phase: Phase,
+    pub lane: u32,
+    pub worker: u32,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub pass: Option<u64>,
+    pub stage: Option<usize>,
+    pub req: Option<u64>,
+    pub bytes: Option<u64>,
+    pub reason: Option<String>,
+    pub value: Option<f64>,
+}
+
+impl AnEvent {
+    fn from_bus(ev: &Event) -> AnEvent {
+        AnEvent {
+            name: ev.name.to_string(),
+            phase: ev.phase,
+            lane: ev.lane,
+            worker: ev.worker,
+            ts_us: ev.ts_us,
+            dur_us: ev.dur_us,
+            pass: ev.args.pass,
+            stage: ev.args.stage,
+            req: ev.args.req,
+            bytes: ev.args.bytes,
+            reason: ev.args.reason.map(str::to_string),
+            value: ev.args.value,
+        }
+    }
+}
+
+/// Parse a Chrome trace document (the exact shape
+/// [`crate::telemetry::chrome::chrome_trace`] writes) back into owned
+/// events + the recorded drop count.  Structural problems — missing
+/// keys, unknown phases — are hard errors: an unreadable trace must not
+/// analyze as an empty (healthy-looking) one.
+pub fn events_from_chrome(doc: &Value) -> Result<(Vec<AnEvent>, u64)> {
+    let raw = doc
+        .get("traceEvents")
+        .context("not a Chrome trace: missing traceEvents")?
+        .as_arr()
+        .context("traceEvents is not an array")?;
+    let dropped = doc
+        .get("otherData")
+        .and_then(|o| o.get("dropped_events"))
+        .and_then(|d| d.as_i64().ok())
+        .unwrap_or(0)
+        .max(0) as u64;
+    let mut out = Vec::with_capacity(raw.len());
+    for (i, ev) in raw.iter().enumerate() {
+        let ph = ev.get("ph").with_context(|| format!("event {i}: missing ph"))?.as_str()?;
+        if ph == "M" {
+            continue; // synthesized metadata rows carry no measurements
+        }
+        let phase = match ph {
+            "B" => Phase::Begin,
+            "E" => Phase::End,
+            "i" => Phase::Instant,
+            "X" => Phase::Complete,
+            "C" => Phase::Counter,
+            other => bail!("event {i}: unknown phase '{other}'"),
+        };
+        let name =
+            ev.get("name").with_context(|| format!("event {i}: missing name"))?.as_str()?;
+        let args = ev.get("args");
+        let get_u64 = |key: &str| -> Option<u64> {
+            args.and_then(|a| a.get(key)).and_then(|v| v.as_i64().ok()).map(|v| v.max(0) as u64)
+        };
+        out.push(AnEvent {
+            name: name.to_string(),
+            phase,
+            lane: ev.get("pid").with_context(|| format!("event {i}: missing pid"))?.as_f64()?
+                as u32,
+            worker: ev.get("tid").with_context(|| format!("event {i}: missing tid"))?.as_f64()?
+                as u32,
+            ts_us: ev.get("ts").with_context(|| format!("event {i}: missing ts"))?.as_f64()?
+                .max(0.0) as u64,
+            dur_us: ev.get("dur").and_then(|d| d.as_f64().ok()).unwrap_or(0.0).max(0.0) as u64,
+            pass: get_u64("pass"),
+            stage: args
+                .and_then(|a| a.get("stage"))
+                .and_then(|v| v.as_usize().ok()),
+            req: get_u64("req"),
+            bytes: get_u64("bytes"),
+            reason: args
+                .and_then(|a| a.get("reason"))
+                .and_then(|v| v.as_str().ok())
+                .map(str::to_string),
+            value: args.and_then(|a| a.get("value")).and_then(|v| v.as_f64().ok()),
+        });
+    }
+    Ok((out, dropped))
+}
+
+/// One reconstructed request lifecycle.
+#[derive(Debug, Clone)]
+pub struct RequestBreakdown {
+    pub id: u64,
+    pub lane: u32,
+    /// `served` | `shed` | `failed`
+    pub outcome: &'static str,
+    /// shed cause or failure cause, when one was recorded
+    pub reason: Option<String>,
+    /// enqueue → admission (or → shed decision)
+    pub queue_ms: f64,
+    /// prime → join (continuous lanes; 0 elsewhere)
+    pub prime_ms: f64,
+    pub decode_steps: u64,
+    /// admission → retire (0 for shed requests)
+    pub service_ms: f64,
+    /// enqueue → final lifecycle edge
+    pub total_ms: f64,
+}
+
+/// One pass window's critical-path split.  By construction
+/// `compute_ms + bubble_ms + residual_ms == dur_ms`: the inference row
+/// inside a pass is strictly sequential, so every microsecond is either
+/// computing, waiting on a loader (`stall_wait` — the pipeline bubble),
+/// or driver-side residue (dispatch, token bookkeeping, admission).
+#[derive(Debug, Clone, Default)]
+pub struct PassBreakdown {
+    pub lane: u32,
+    pub pass: u64,
+    pub start_us: u64,
+    pub dur_ms: f64,
+    pub compute_ms: f64,
+    /// inference-row wait time, the exposed (non-overlapped) load
+    pub bubble_ms: f64,
+    /// loader-row admission stalls (`S^stop` pressure) inside the window
+    pub stall_mem_ms: f64,
+    /// loader-row disk time inside the window (overlapped where the
+    /// pipeline works; exposed as `bubble_ms` where it does not)
+    pub load_ms: f64,
+    pub residual_ms: f64,
+    pub bubble_by_stage: BTreeMap<usize, f64>,
+}
+
+/// Memory-attribution audit over every self-contained `mem_audit`
+/// sample (value = accountant `used`, bytes = sum of component stores).
+#[derive(Debug, Clone, Default)]
+pub struct MemAudit {
+    pub samples: usize,
+    /// largest |used − components| over all samples; nonzero is an error
+    pub max_drift_bytes: i64,
+    /// largest accountant `used` seen at a settled sample point
+    pub settled_used_max: u64,
+    /// largest per-pass peak (`mem_high_water` counter)
+    pub high_water_max: u64,
+}
+
+impl MemAudit {
+    pub fn ok(&self) -> bool {
+        self.max_drift_bytes == 0
+    }
+}
+
+/// Speculation that was paid for and thrown away.
+#[derive(Debug, Clone, Default)]
+pub struct PrefetchWasteSummary {
+    pub events: usize,
+    pub bytes: u64,
+    /// cause → (events, bytes); causes today: `evicted` (reclaimed under
+    /// pressure before use), `stale_duplicate` (the pass loaded it first)
+    pub by_reason: BTreeMap<String, (usize, u64)>,
+}
+
+/// Whole-trace span totals, window-independent — these are what must
+/// reconcile with `RunReport` / `RouterSummary` counters.
+#[derive(Debug, Clone, Default)]
+pub struct Totals {
+    pub compute_ms: f64,
+    pub stall_wait_ms: f64,
+    pub stall_mem_ms: f64,
+    pub load_ms: f64,
+    pub prefetch_ms: f64,
+}
+
+/// The reconstructed trace: requests, passes, audit, totals, and every
+/// reconstruction failure in [`Analysis::errors`].
+pub struct Analysis {
+    pub requests: Vec<RequestBreakdown>,
+    pub passes: Vec<PassBreakdown>,
+    /// stage → inference-row bubble attributed to waiting on that stage
+    pub bubble_by_stage: BTreeMap<usize, f64>,
+    pub totals: Totals,
+    pub audit: MemAudit,
+    pub waste: PrefetchWasteSummary,
+    /// admission wait of every admitted request
+    pub queue_wait: LatencyRecorder,
+    /// enqueue → retire of every served request
+    pub total_latency: LatencyRecorder,
+    pub decode_steps: u64,
+    pub batches: u64,
+    pub dropped_events: u64,
+    pub errors: Vec<String>,
+    pub notes: Vec<String>,
+    events: Vec<AnEvent>,
+}
+
+#[derive(Default)]
+struct ReqState {
+    lane: u32,
+    enqueue: Option<u64>,
+    admit: Option<u64>,
+    shed: Option<(u64, Option<String>)>,
+    prime: Option<u64>,
+    join: Option<u64>,
+    decode_steps: u64,
+    retire: Option<(u64, Option<String>)>,
+    leave: Option<u64>,
+}
+
+fn ms(us: u64) -> f64 {
+    us as f64 / 1000.0
+}
+
+impl Analysis {
+    /// Analyze events drained straight off a live bus.
+    pub fn from_bus(events: &[Event], dropped: u64) -> Analysis {
+        Analysis::from_events(events.iter().map(AnEvent::from_bus).collect(), dropped)
+    }
+
+    /// Analyze a parsed Chrome trace document.
+    pub fn from_chrome(doc: &Value) -> Result<Analysis> {
+        let (events, dropped) = events_from_chrome(doc)?;
+        Ok(Analysis::from_events(events, dropped))
+    }
+
+    /// Analyze a Chrome trace file (`hermes analyze <trace.json>`).
+    pub fn from_file(path: &Path) -> Result<Analysis> {
+        let doc = Value::from_file(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Analysis::from_chrome(&doc)
+    }
+
+    /// The full reconstruction.  Never panics on malformed input — every
+    /// inconsistency lands in `errors` instead, so a truncated trace
+    /// produces a loud report, not a quiet half-answer.
+    pub fn from_events(mut events: Vec<AnEvent>, dropped: u64) -> Analysis {
+        events.sort_by_key(|e| (e.ts_us, e.lane, e.worker));
+        let mut errors = Vec::new();
+        let mut notes = Vec::new();
+        if dropped > 0 {
+            errors.push(format!(
+                "trace is incomplete: {dropped} event(s) dropped at the bus (ring full) — \
+                 lifecycle and attribution cannot be trusted"
+            ));
+        }
+
+        // ---- pass/batch windows via per-(lane, worker) B/E stacks ----
+        struct Window {
+            lane: u32,
+            pass: u64,
+            t0: u64,
+            t1: u64,
+        }
+        let mut stacks: BTreeMap<(u32, u32), Vec<(String, u64, Option<u64>)>> = BTreeMap::new();
+        let mut windows: Vec<Window> = Vec::new();
+        let mut batches = 0u64;
+        let mut reqs: BTreeMap<u64, ReqState> = BTreeMap::new();
+        let mut totals = Totals::default();
+        let mut audit = MemAudit::default();
+        let mut waste = PrefetchWasteSummary::default();
+        let mut decode_steps_total = 0u64;
+        let mut pass_seq = 0u64;
+
+        for ev in &events {
+            match ev.phase {
+                Phase::Begin => {
+                    stacks
+                        .entry((ev.lane, ev.worker))
+                        .or_default()
+                        .push((ev.name.clone(), ev.ts_us, ev.pass));
+                }
+                Phase::End => {
+                    let stack = stacks.entry((ev.lane, ev.worker)).or_default();
+                    match stack.pop() {
+                        None => errors.push(format!(
+                            "lane {} worker {}: '{}' ends a span that never began",
+                            ev.lane, ev.worker, ev.name
+                        )),
+                        Some((open, t0, pass)) => {
+                            if open != ev.name {
+                                errors.push(format!(
+                                    "lane {} worker {}: '{}' closes open span '{open}'",
+                                    ev.lane, ev.worker, ev.name
+                                ));
+                            } else if ev.name == "pass" {
+                                let pass = pass.unwrap_or(pass_seq);
+                                pass_seq = pass + 1;
+                                windows.push(Window { lane: ev.lane, pass, t0, t1: ev.ts_us });
+                            } else if ev.name == "batch" {
+                                batches += 1;
+                            }
+                        }
+                    }
+                }
+                Phase::Complete => match ev.name.as_str() {
+                    "compute" => totals.compute_ms += ms(ev.dur_us),
+                    "stall_wait" => totals.stall_wait_ms += ms(ev.dur_us),
+                    "stall_mem" => totals.stall_mem_ms += ms(ev.dur_us),
+                    "load" => totals.load_ms += ms(ev.dur_us),
+                    "prefetch" => totals.prefetch_ms += ms(ev.dur_us),
+                    _ => {}
+                },
+                Phase::Instant => {
+                    if ev.name == "prefetch_waste" {
+                        let b = ev.bytes.unwrap_or(0);
+                        waste.events += 1;
+                        waste.bytes += b;
+                        let r = waste
+                            .by_reason
+                            .entry(ev.reason.clone().unwrap_or_else(|| "unknown".into()))
+                            .or_default();
+                        r.0 += 1;
+                        r.1 += b;
+                    } else if let Some(id) = ev.req {
+                        let r = reqs.entry(id).or_default();
+                        match ev.name.as_str() {
+                            "enqueue" => {
+                                r.lane = ev.lane;
+                                r.enqueue = Some(ev.ts_us);
+                            }
+                            "admit" => {
+                                r.lane = ev.lane;
+                                r.admit = Some(ev.ts_us);
+                            }
+                            "shed" => r.shed = Some((ev.ts_us, ev.reason.clone())),
+                            "prime" => r.prime = Some(ev.ts_us),
+                            "join" => r.join = Some(ev.ts_us),
+                            "decode_step" => {
+                                r.decode_steps += 1;
+                                decode_steps_total += 1;
+                            }
+                            "retire" => r.retire = Some((ev.ts_us, ev.reason.clone())),
+                            "leave" => r.leave = Some(ev.ts_us),
+                            _ => {}
+                        }
+                    }
+                }
+                Phase::Counter => match ev.name.as_str() {
+                    "mem_audit" => match (ev.value, ev.bytes) {
+                        (Some(used), Some(components)) => {
+                            let used = used.max(0.0) as u64;
+                            let drift = used as i64 - components as i64;
+                            audit.samples += 1;
+                            if drift.abs() > audit.max_drift_bytes.abs() {
+                                audit.max_drift_bytes = drift;
+                            }
+                            audit.settled_used_max = audit.settled_used_max.max(used);
+                        }
+                        _ => errors.push(format!(
+                            "mem_audit sample at {}us is missing value/bytes",
+                            ev.ts_us
+                        )),
+                    },
+                    "mem_high_water" => {
+                        audit.high_water_max = audit
+                            .high_water_max
+                            .max(ev.value.unwrap_or(0.0).max(0.0) as u64);
+                    }
+                    _ => {}
+                },
+            }
+        }
+
+        for ((lane, worker_id), stack) in &stacks {
+            for (name, _, _) in stack {
+                errors.push(format!(
+                    "lane {lane} worker {worker_id}: span '{name}' never closed (truncated trace?)"
+                ));
+            }
+        }
+
+        // ---- memory audit verdicts ----
+        if audit.samples == 0 {
+            notes.push(
+                "no mem_audit samples (concurrent lanes, or telemetry attached mid-run): \
+                 memory attribution not checkable"
+                    .to_string(),
+            );
+        } else if !audit.ok() {
+            errors.push(format!(
+                "memory audit drift: accountant used differs from component sum by up to {} \
+                 bytes across {} sample(s) — some accounted bytes have no owning store",
+                audit.max_drift_bytes, audit.samples
+            ));
+        }
+        if audit.high_water_max > 0 && audit.settled_used_max > audit.high_water_max {
+            errors.push(format!(
+                "settled used {} exceeds the high-water peak {} — counter streams disagree",
+                human_bytes(audit.settled_used_max),
+                human_bytes(audit.high_water_max)
+            ));
+        }
+
+        // ---- per-pass critical-path attribution ----
+        windows.sort_by_key(|w| (w.lane, w.t0));
+        let mut lane_windows: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+        for (i, w) in windows.iter().enumerate() {
+            lane_windows.entry(w.lane).or_default().push(i);
+        }
+        let find_window = |lane: u32, ts: u64| -> Option<usize> {
+            let idxs = lane_windows.get(&lane)?;
+            // last window starting at or before ts (windows on one lane
+            // are disjoint: the driver row emits passes sequentially)
+            let pos = idxs.partition_point(|&i| windows[i].t0 <= ts);
+            if pos == 0 {
+                return None;
+            }
+            let i = idxs[pos - 1];
+            (ts < windows[i].t1).then_some(i)
+        };
+        let mut per_pass: BTreeMap<usize, PassBreakdown> = BTreeMap::new();
+        let mut unattributed = 0usize;
+        for ev in &events {
+            if ev.phase != Phase::Complete {
+                continue;
+            }
+            let Some(wi) = find_window(ev.lane, ev.ts_us) else {
+                if matches!(ev.name.as_str(), "compute" | "stall_wait" | "stall_mem" | "load") {
+                    unattributed += 1;
+                }
+                continue;
+            };
+            let p = per_pass.entry(wi).or_default();
+            match ev.name.as_str() {
+                "compute" => p.compute_ms += ms(ev.dur_us),
+                "stall_wait" => {
+                    p.bubble_ms += ms(ev.dur_us);
+                    if let Some(s) = ev.stage {
+                        *p.bubble_by_stage.entry(s).or_default() += ms(ev.dur_us);
+                    }
+                }
+                "stall_mem" => p.stall_mem_ms += ms(ev.dur_us),
+                "load" => p.load_ms += ms(ev.dur_us),
+                _ => {}
+            }
+        }
+        if unattributed > 0 {
+            notes.push(format!(
+                "{unattributed} worker span(s) fell outside every pass window \
+                 (cross-pass prefetch and boundary jitter land here)"
+            ));
+        }
+        let mut passes: Vec<PassBreakdown> = Vec::with_capacity(windows.len());
+        let mut bubble_by_stage: BTreeMap<usize, f64> = BTreeMap::new();
+        for (i, w) in windows.iter().enumerate() {
+            let mut p = per_pass.remove(&i).unwrap_or_default();
+            p.lane = w.lane;
+            p.pass = w.pass;
+            p.start_us = w.t0;
+            p.dur_ms = ms(w.t1.saturating_sub(w.t0));
+            p.residual_ms = p.dur_ms - p.compute_ms - p.bubble_ms;
+            for (s, b) in &p.bubble_by_stage {
+                *bubble_by_stage.entry(*s).or_default() += *b;
+            }
+            passes.push(p);
+        }
+
+        // ---- request lifecycles ----
+        let mut requests = Vec::with_capacity(reqs.len());
+        let mut queue_wait = LatencyRecorder::new();
+        let mut total_latency = LatencyRecorder::new();
+        for (id, r) in &reqs {
+            let Some(enq) = r.enqueue else {
+                errors.push(format!("req {id}: lifecycle events without an enqueue"));
+                continue;
+            };
+            match (&r.admit, &r.shed) {
+                (Some(_), Some(_)) => {
+                    errors.push(format!("req {id}: both admitted and shed"));
+                    continue;
+                }
+                (None, None) => {
+                    errors.push(format!(
+                        "req {id}: enqueued but neither admitted nor shed (truncated trace?)"
+                    ));
+                    continue;
+                }
+                _ => {}
+            }
+            if r.prime.is_some() && r.join.is_none() {
+                errors.push(format!("req {id}: primed but never joined the decode"));
+            }
+            if r.join.is_some() && r.leave.is_none() {
+                errors.push(format!("req {id}: joined the decode but never left"));
+            }
+            if r.decode_steps > 0 && r.join.is_none() {
+                errors.push(format!("req {id}: decode steps recorded before any join"));
+            }
+            if let Some((shed_ts, reason)) = &r.shed {
+                requests.push(RequestBreakdown {
+                    id: *id,
+                    lane: r.lane,
+                    outcome: "shed",
+                    reason: reason.clone(),
+                    queue_ms: ms(shed_ts.saturating_sub(enq)),
+                    prime_ms: 0.0,
+                    decode_steps: r.decode_steps,
+                    service_ms: 0.0,
+                    total_ms: ms(shed_ts.saturating_sub(enq)),
+                });
+                continue;
+            }
+            let admit = r.admit.unwrap(); // shed xor admit checked above
+            let Some((retire_ts, retire_reason)) = &r.retire else {
+                errors.push(format!("req {id}: admitted but never retired (truncated trace?)"));
+                continue;
+            };
+            let queue_ms = ms(admit.saturating_sub(enq));
+            queue_wait.record_ms(queue_ms);
+            let end = r.leave.unwrap_or(*retire_ts).max(*retire_ts);
+            let served = retire_reason.is_none();
+            if served {
+                total_latency.record_ms(ms(end.saturating_sub(enq)));
+            }
+            requests.push(RequestBreakdown {
+                id: *id,
+                lane: r.lane,
+                outcome: if served { "served" } else { "failed" },
+                reason: retire_reason.clone(),
+                queue_ms,
+                prime_ms: match (r.prime, r.join) {
+                    (Some(p), Some(j)) => ms(j.saturating_sub(p)),
+                    _ => 0.0,
+                },
+                decode_steps: r.decode_steps,
+                service_ms: ms(retire_ts.saturating_sub(admit)),
+                total_ms: ms(end.saturating_sub(enq)),
+            });
+        }
+
+        Analysis {
+            requests,
+            passes,
+            bubble_by_stage,
+            totals,
+            audit,
+            waste,
+            queue_wait,
+            total_latency,
+            decode_steps: decode_steps_total,
+            batches,
+            dropped_events: dropped,
+            errors,
+            notes,
+            events,
+        }
+    }
+
+    /// True when the trace reconstructed cleanly: complete lifecycles,
+    /// balanced spans, zero audit drift, zero dropped events.
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty()
+    }
+
+    pub fn served(&self) -> usize {
+        self.requests.iter().filter(|r| r.outcome == "served").count()
+    }
+
+    pub fn shed(&self) -> usize {
+        self.requests.iter().filter(|r| r.outcome == "shed").count()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.requests.iter().filter(|r| r.outcome == "failed").count()
+    }
+
+    /// Total inference-row bubble across every pass window.
+    pub fn bubble_total_ms(&self) -> f64 {
+        self.passes.iter().map(|p| p.bubble_ms).sum()
+    }
+
+    /// Fraction of the inference rows' active window spent NOT computing
+    /// (the figure-1b headline number), across all lanes.
+    pub fn inference_idle_fraction(&self) -> Option<f64> {
+        let spans: Vec<&AnEvent> = self
+            .events
+            .iter()
+            .filter(|e| e.phase == Phase::Complete && e.worker == worker::INFER)
+            .collect();
+        let first = spans.iter().map(|e| e.ts_us).min()?;
+        let last = spans.iter().map(|e| e.ts_us + e.dur_us).max()?;
+        let window = (last - first) as f64;
+        if window <= 0.0 {
+            return None;
+        }
+        let busy: f64 = spans
+            .iter()
+            .filter(|e| e.name == "compute")
+            .map(|e| e.dur_us as f64)
+            .sum();
+        Some((1.0 - busy / window).clamp(0.0, 1.0))
+    }
+
+    /// Machine-readable summary (the `hermes analyze --json` payload and
+    /// the benchmark's `analyze` section).
+    pub fn to_json(&self) -> Value {
+        let mut stage_obj = Value::obj();
+        for (s, b) in &self.bubble_by_stage {
+            stage_obj = stage_obj.set(&format!("{s}"), *b);
+        }
+        let mut reason_obj = Value::obj();
+        for (r, (n, b)) in &self.waste.by_reason {
+            reason_obj = reason_obj.set(r, Value::obj().set("events", *n).set("bytes", *b));
+        }
+        let pass_wall: f64 = self.passes.iter().map(|p| p.dur_ms).sum();
+        Value::obj()
+            .set("ok", self.ok())
+            .set(
+                "errors",
+                Value::Arr(self.errors.iter().map(|e| Value::from(e.as_str())).collect()),
+            )
+            .set(
+                "notes",
+                Value::Arr(self.notes.iter().map(|n| Value::from(n.as_str())).collect()),
+            )
+            .set("dropped_events", self.dropped_events)
+            .set(
+                "requests",
+                Value::obj()
+                    .set("total", self.requests.len())
+                    .set("served", self.served())
+                    .set("shed", self.shed())
+                    .set("failed", self.failed())
+                    .set("decode_steps", self.decode_steps)
+                    .set(
+                        "queue_wait_ms",
+                        Value::obj()
+                            .set("p50", self.queue_wait.p50())
+                            .set("p95", self.queue_wait.p95())
+                            .set("mean", self.queue_wait.mean()),
+                    )
+                    .set(
+                        "latency_ms",
+                        Value::obj()
+                            .set("p50", self.total_latency.p50())
+                            .set("p95", self.total_latency.p95())
+                            .set("mean", self.total_latency.mean()),
+                    ),
+            )
+            .set(
+                "passes",
+                Value::obj()
+                    .set("count", self.passes.len())
+                    .set("batches", self.batches)
+                    .set("wall_ms", pass_wall)
+                    .set("compute_ms", self.passes.iter().map(|p| p.compute_ms).sum::<f64>())
+                    .set("bubble_ms", self.bubble_total_ms())
+                    .set("stall_mem_ms", self.passes.iter().map(|p| p.stall_mem_ms).sum::<f64>())
+                    .set("load_ms", self.passes.iter().map(|p| p.load_ms).sum::<f64>())
+                    .set("residual_ms", self.passes.iter().map(|p| p.residual_ms).sum::<f64>()),
+            )
+            .set("bubble_by_stage_ms", stage_obj)
+            .set(
+                "totals",
+                Value::obj()
+                    .set("compute_ms", self.totals.compute_ms)
+                    .set("stall_wait_ms", self.totals.stall_wait_ms)
+                    .set("stall_mem_ms", self.totals.stall_mem_ms)
+                    .set("load_ms", self.totals.load_ms)
+                    .set("prefetch_ms", self.totals.prefetch_ms),
+            )
+            .set(
+                "audit",
+                Value::obj()
+                    .set("ok", self.audit.ok())
+                    .set("samples", self.audit.samples)
+                    .set("max_drift_bytes", self.audit.max_drift_bytes)
+                    .set("settled_used_max", self.audit.settled_used_max)
+                    .set("high_water_max", self.audit.high_water_max),
+            )
+            .set(
+                "prefetch_waste",
+                Value::obj()
+                    .set("events", self.waste.events)
+                    .set("bytes", self.waste.bytes)
+                    .set("by_reason", reason_obj),
+            )
+    }
+
+    /// Human-readable report (`hermes analyze` default output).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace analysis: {} event(s), {} request(s) ({} served / {} shed / {} failed), \
+             {} pass(es), {} batch(es)\n",
+            self.events.len(),
+            self.requests.len(),
+            self.served(),
+            self.shed(),
+            self.failed(),
+            self.passes.len(),
+            self.batches,
+        ));
+        if !self.queue_wait.is_empty() {
+            out.push_str(&format!(
+                "  queue wait p50 {}  p95 {}    e2e p50 {}  p95 {}\n",
+                human_ms(self.queue_wait.p50()),
+                human_ms(self.queue_wait.p95()),
+                human_ms(self.total_latency.p50()),
+                human_ms(self.total_latency.p95()),
+            ));
+        }
+        if !self.passes.is_empty() {
+            let compute: f64 = self.passes.iter().map(|p| p.compute_ms).sum();
+            let residual: f64 = self.passes.iter().map(|p| p.residual_ms).sum();
+            let stages: Vec<String> = self
+                .bubble_by_stage
+                .iter()
+                .map(|(s, b)| format!("s{s} {}", human_ms(*b)))
+                .collect();
+            out.push_str(&format!(
+                "  critical path: compute {}  bubble {}  residual {}\n",
+                human_ms(compute),
+                human_ms(self.bubble_total_ms()),
+                human_ms(residual),
+            ));
+            if !stages.is_empty() {
+                out.push_str(&format!("  bubble by stage: {}\n", stages.join(", ")));
+            }
+            if let Some(idle) = self.inference_idle_fraction() {
+                out.push_str(&format!("  inference idle fraction: {:.0}%\n", idle * 100.0));
+            }
+        }
+        out.push_str(&format!(
+            "  stalls: mem {}  wait {}    load {}  prefetch {}\n",
+            human_ms(self.totals.stall_mem_ms),
+            human_ms(self.totals.stall_wait_ms),
+            human_ms(self.totals.load_ms),
+            human_ms(self.totals.prefetch_ms),
+        ));
+        if self.audit.samples > 0 {
+            out.push_str(&format!(
+                "  memory audit: {} sample(s), max drift {} B ({})  settled max {} / high water {}\n",
+                self.audit.samples,
+                self.audit.max_drift_bytes,
+                if self.audit.ok() { "OK" } else { "DRIFT" },
+                human_bytes(self.audit.settled_used_max),
+                human_bytes(self.audit.high_water_max),
+            ));
+        }
+        if self.waste.events > 0 {
+            let reasons: Vec<String> = self
+                .waste
+                .by_reason
+                .iter()
+                .map(|(r, (n, b))| format!("{r}: {n} ({})", human_bytes(*b)))
+                .collect();
+            out.push_str(&format!(
+                "  prefetch waste: {} event(s), {}  [{}]\n",
+                self.waste.events,
+                human_bytes(self.waste.bytes),
+                reasons.join(", "),
+            ));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        if !self.errors.is_empty() {
+            out.push_str("errors:\n");
+            for e in &self.errors {
+                out.push_str(&format!("  - {e}\n"));
+            }
+        }
+        out
+    }
+
+    /// Render the reconstructed worker rows as an ASCII Gantt chart —
+    /// the figure-1b view, rebuilt from the trace instead of the live
+    /// tracer so `hermes analyze` and `hermes report --figure 1b` share
+    /// one code path.
+    pub fn ascii_gantt(&self, width: usize) -> String {
+        let width = width.max(10);
+        let spans: Vec<&AnEvent> =
+            self.events.iter().filter(|e| e.phase == Phase::Complete && e.dur_us > 0).collect();
+        if spans.is_empty() {
+            return "(no spans to draw)\n".to_string();
+        }
+        let t0 = spans.iter().map(|e| e.ts_us).min().unwrap();
+        let t1 = spans.iter().map(|e| e.ts_us + e.dur_us).max().unwrap();
+        let extent = (t1 - t0).max(1) as f64;
+        let mut rows: BTreeMap<(u32, u32), Vec<char>> = BTreeMap::new();
+        for ev in &spans {
+            let glyph = match ev.name.as_str() {
+                "load" => 'L',
+                "compute" => '#',
+                "prefetch" => 'p',
+                "stall_mem" => 's',
+                "stall_wait" => '.',
+                _ => '+',
+            };
+            let row = rows.entry((ev.lane, ev.worker)).or_insert_with(|| vec![' '; width]);
+            let a = ((ev.ts_us - t0) as f64 / extent * width as f64) as usize;
+            let b = (((ev.ts_us + ev.dur_us - t0) as f64 / extent * width as f64).ceil()
+                as usize)
+                .min(width);
+            for cell in row.iter_mut().take(b.max(a + 1).min(width)).skip(a) {
+                if *cell == ' ' {
+                    *cell = glyph;
+                }
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("trace gantt over {}\n", human_ms(extent / 1000.0)));
+        for ((lane, w), row) in &rows {
+            let label = match *w {
+                worker::DRIVER => "driver".to_string(),
+                worker::INFER => "infer".to_string(),
+                worker::DAEMON => "daemon".to_string(),
+                t if (10..90).contains(&t) => format!("loader {}", t - 10),
+                t => format!("worker {t}"),
+            };
+            out.push_str(&format!("L{lane} {label:<9} |{}|\n", row.iter().collect::<String>()));
+        }
+        out.push_str("L=load #=compute p=prefetch s=mem-stall .=wait-stall\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{chrome, EvArgs, Telemetry};
+
+    fn ev(name: &str, phase: Phase, worker: u32, ts: u64, dur: u64) -> AnEvent {
+        AnEvent {
+            name: name.to_string(),
+            phase,
+            lane: 0,
+            worker,
+            ts_us: ts,
+            dur_us: dur,
+            pass: None,
+            stage: None,
+            req: None,
+            bytes: None,
+            reason: None,
+            value: None,
+        }
+    }
+
+    fn req_ev(name: &str, ts: u64, req: u64) -> AnEvent {
+        AnEvent { req: Some(req), ..ev(name, Phase::Instant, worker::DRIVER, ts, 0) }
+    }
+
+    #[test]
+    fn reconstructs_lifecycle_and_critical_path() {
+        let mut evs = vec![
+            req_ev("enqueue", 0, 1),
+            req_ev("admit", 1_000, 1),
+            ev("pass", Phase::Begin, worker::DRIVER, 1_000, 0),
+            AnEvent { stage: Some(0), ..ev("load", Phase::Complete, worker::loader(0), 1_100, 2_000) },
+            AnEvent { stage: Some(0), ..ev("stall_wait", Phase::Complete, worker::INFER, 1_100, 2_000) },
+            AnEvent { stage: Some(0), ..ev("compute", Phase::Complete, worker::INFER, 3_100, 1_000) },
+            AnEvent { stage: Some(1), ..ev("stall_wait", Phase::Complete, worker::INFER, 4_100, 500) },
+            AnEvent { stage: Some(1), ..ev("compute", Phase::Complete, worker::INFER, 4_600, 1_000) },
+            ev("pass", Phase::End, worker::DRIVER, 6_000, 0),
+            req_ev("retire", 6_200, 1),
+        ];
+        evs[2].pass = Some(0);
+        let a = Analysis::from_events(evs, 0);
+        assert!(a.ok(), "errors: {:?}", a.errors);
+        assert_eq!(a.requests.len(), 1);
+        let r = &a.requests[0];
+        assert_eq!(r.outcome, "served");
+        assert!((r.queue_ms - 1.0).abs() < 1e-9);
+        assert!((r.total_ms - 6.2).abs() < 1e-9);
+        assert_eq!(a.passes.len(), 1);
+        let p = &a.passes[0];
+        assert!((p.dur_ms - 5.0).abs() < 1e-9);
+        assert!((p.compute_ms - 2.0).abs() < 1e-9);
+        assert!((p.bubble_ms - 2.5).abs() < 1e-9);
+        // per-stage attribution totals the pass bubble exactly
+        let stage_sum: f64 = p.bubble_by_stage.values().sum();
+        assert!((stage_sum - p.bubble_ms).abs() < 1e-9);
+        // the critical-path identity: compute + bubble + residual == dur
+        assert!((p.compute_ms + p.bubble_ms + p.residual_ms - p.dur_ms).abs() < 1e-9);
+        assert!(p.residual_ms >= 0.0);
+        // idle fraction: infer row active 1100..5600, busy 2000us of 4500
+        let idle = a.inference_idle_fraction().unwrap();
+        assert!((idle - (1.0 - 2000.0 / 4500.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn truncated_lifecycles_fail_loudly() {
+        // admitted but never retired
+        let a = Analysis::from_events(vec![req_ev("enqueue", 0, 1), req_ev("admit", 10, 1)], 0);
+        assert!(!a.ok());
+        assert!(a.errors.iter().any(|e| e.contains("never retired")), "{:?}", a.errors);
+        // enqueued, then nothing
+        let a = Analysis::from_events(vec![req_ev("enqueue", 0, 2)], 0);
+        assert!(a.errors.iter().any(|e| e.contains("neither admitted nor shed")));
+        // dropped events poison the whole reconstruction
+        let a = Analysis::from_events(Vec::new(), 3);
+        assert!(!a.ok());
+        assert!(a.errors[0].contains("incomplete"));
+        // unclosed pass span
+        let a = Analysis::from_events(vec![ev("pass", Phase::Begin, worker::DRIVER, 0, 0)], 0);
+        assert!(a.errors.iter().any(|e| e.contains("never closed")));
+        // end without begin
+        let a = Analysis::from_events(vec![ev("pass", Phase::End, worker::DRIVER, 5, 0)], 0);
+        assert!(a.errors.iter().any(|e| e.contains("never began")));
+    }
+
+    #[test]
+    fn shed_and_failed_outcomes_classified() {
+        let mut shed = req_ev("shed", 500, 7);
+        shed.reason = Some("shed_overload".into());
+        let mut fail_retire = req_ev("retire", 900, 8);
+        fail_retire.reason = Some("internal".into());
+        let a = Analysis::from_events(
+            vec![req_ev("enqueue", 0, 7), shed, req_ev("enqueue", 100, 8), req_ev("admit", 200, 8), fail_retire],
+            0,
+        );
+        assert!(a.ok(), "{:?}", a.errors);
+        assert_eq!(a.shed(), 1);
+        assert_eq!(a.failed(), 1);
+        assert_eq!(a.served(), 0);
+        let s = a.requests.iter().find(|r| r.id == 7).unwrap();
+        assert_eq!(s.reason.as_deref(), Some("shed_overload"));
+        // shed + admit on one id is contradictory
+        let a = Analysis::from_events(
+            vec![req_ev("enqueue", 0, 9), req_ev("admit", 1, 9), req_ev("shed", 2, 9)],
+            0,
+        );
+        assert!(a.errors.iter().any(|e| e.contains("both admitted and shed")));
+    }
+
+    #[test]
+    fn audit_drift_is_an_error_and_zero_drift_is_ok() {
+        let mut good = ev("mem_audit", Phase::Counter, worker::DRIVER, 10, 0);
+        good.value = Some(4096.0);
+        good.bytes = Some(4096);
+        let a = Analysis::from_events(vec![good.clone()], 0);
+        assert!(a.ok(), "{:?}", a.errors);
+        assert_eq!(a.audit.samples, 1);
+        assert_eq!(a.audit.max_drift_bytes, 0);
+
+        let mut bad = good.clone();
+        bad.bytes = Some(4000);
+        let a = Analysis::from_events(vec![good, bad], 0);
+        assert!(!a.ok());
+        assert_eq!(a.audit.max_drift_bytes, 96);
+        assert!(a.errors.iter().any(|e| e.contains("memory audit drift")));
+
+        // settled used above the recorded high-water peak is impossible
+        let mut s = ev("mem_audit", Phase::Counter, worker::DRIVER, 10, 0);
+        s.value = Some(9000.0);
+        s.bytes = Some(9000);
+        let mut hw = ev("mem_high_water", Phase::Counter, worker::DRIVER, 20, 0);
+        hw.value = Some(8000.0);
+        let a = Analysis::from_events(vec![s, hw], 0);
+        assert!(a.errors.iter().any(|e| e.contains("high-water")), "{:?}", a.errors);
+    }
+
+    #[test]
+    fn chrome_round_trip_matches_bus_analysis() {
+        let t = Telemetry::on();
+        t.instant("enqueue", worker::DRIVER, EvArgs::req(1));
+        t.instant("admit", worker::DRIVER, EvArgs::req(1));
+        t.begin("pass", worker::DRIVER, EvArgs::pass(0));
+        let s = t.now_us();
+        t.span("load", worker::loader(0), s, EvArgs::stage(0).with_bytes(4096));
+        t.span("compute", worker::INFER, s, EvArgs::stage(0));
+        t.end("pass", worker::DRIVER);
+        t.counter("mem_audit", worker::DRIVER, 512.0, EvArgs::default().with_bytes(512));
+        t.instant("prefetch_waste", worker::DAEMON, EvArgs::default().with_bytes(100).with_reason("evicted"));
+        t.instant("retire", worker::DRIVER, EvArgs::req(1));
+        let events = t.drain();
+        let direct = Analysis::from_bus(&events, 0);
+        let doc = chrome::chrome_trace(&events, 0);
+        let parsed = Value::parse(&doc.compact()).unwrap();
+        let round = Analysis::from_chrome(&parsed).unwrap();
+        assert!(direct.ok(), "{:?}", direct.errors);
+        assert!(round.ok(), "{:?}", round.errors);
+        assert_eq!(direct.requests.len(), round.requests.len());
+        assert_eq!(direct.passes.len(), round.passes.len());
+        assert_eq!(direct.audit.samples, round.audit.samples);
+        assert_eq!(direct.waste.bytes, round.waste.bytes);
+        assert_eq!(round.waste.by_reason.get("evicted").map(|(n, b)| (*n, *b)), Some((1, 100)));
+        assert!((direct.totals.load_ms - round.totals.load_ms).abs() < 1e-9);
+        // json + text render without panicking and agree on ok
+        assert!(round.to_json().get("ok").unwrap().as_bool().unwrap());
+        assert!(round.render_text().contains("trace analysis"));
+    }
+
+    #[test]
+    fn gantt_renders_worker_rows() {
+        let evs = vec![
+            AnEvent { stage: Some(0), ..ev("load", Phase::Complete, worker::loader(1), 0, 500) },
+            AnEvent { stage: Some(0), ..ev("compute", Phase::Complete, worker::INFER, 500, 500) },
+        ];
+        let a = Analysis::from_events(evs, 0);
+        let g = a.ascii_gantt(40);
+        assert!(g.contains("loader 1"), "{g}");
+        assert!(g.contains("infer"), "{g}");
+        assert!(g.contains('L') && g.contains('#'), "{g}");
+    }
+}

@@ -1,0 +1,489 @@
+//! Rolling-window derived signals over a live telemetry subscription.
+//!
+//! [`DerivedSignals`] attaches to a bus via [`Telemetry::subscribe`] —
+//! a bounded ring the emit path appends to without ever blocking — and
+//! folds the stream into the rates a controller (or an operator hitting
+//! `{"op":"health"}`) actually wants:
+//!
+//! * per-lane **stall ratios** — what share of observed worker time each
+//!   lane spent memory-stalled (`S^stop` pressure) vs pipeline-bubbled
+//!   (waiting on loaders) vs computing,
+//! * **shed rate by reason** — admission-control pressure as it happens,
+//! * **prefetch waste rate** — speculative bytes bought and thrown away,
+//! * **accountant high-water slope** — bytes/s trend of the per-pass
+//!   peak, the early-warning signal an elastic controller reacts to.
+//!
+//! Everything is windowed (default 5 s): `poll()` drains the ring,
+//! appends the new samples, evicts those older than the window, and
+//! aggregates.  Polling is the *consumer's* cost — emitters only ever
+//! pay one ring append.  This is the in-process consumer hook ROADMAP
+//! item 4's closed-loop controller builds on.
+//!
+//! [`Telemetry::subscribe`]: crate::telemetry::Telemetry::subscribe
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::metrics::{prometheus_counter, prometheus_gauge};
+use crate::telemetry::{Event, Phase, Subscription, Telemetry};
+use crate::util::json::Value;
+
+/// Default rolling-window width for the health surface.
+pub const DEFAULT_WINDOW: Duration = Duration::from_secs(5);
+
+/// Subscriber ring capacity: comfortably above the event rate of a busy
+/// two-lane serve for one window, so drops mean a genuinely stuck
+/// consumer rather than normal traffic.
+const SUB_CAP: usize = 1 << 15;
+
+/// One windowed sample, keyed by its end timestamp (µs on the bus clock).
+enum Sample {
+    StallMem { lane: u32, ms: f64 },
+    StallWait { lane: u32, ms: f64 },
+    Compute { lane: u32, ms: f64 },
+    Shed { reason: String },
+    Prefetch { bytes: u64 },
+    Waste { bytes: u64 },
+    HighWater { bytes: f64 },
+    DecodeStep,
+    Retire,
+}
+
+fn classify(ev: &Event) -> Option<Sample> {
+    let ms = ev.dur_us as f64 / 1000.0;
+    match (ev.name, ev.phase) {
+        ("stall_mem", Phase::Complete) => Some(Sample::StallMem { lane: ev.lane, ms }),
+        ("stall_wait", Phase::Complete) => Some(Sample::StallWait { lane: ev.lane, ms }),
+        ("compute", Phase::Complete) => Some(Sample::Compute { lane: ev.lane, ms }),
+        ("shed", Phase::Instant) => Some(Sample::Shed {
+            reason: ev.args.reason.unwrap_or("unknown").to_string(),
+        }),
+        ("prefetch", Phase::Complete) => {
+            Some(Sample::Prefetch { bytes: ev.args.bytes.unwrap_or(0) })
+        }
+        ("prefetch_waste", Phase::Instant) => {
+            Some(Sample::Waste { bytes: ev.args.bytes.unwrap_or(0) })
+        }
+        ("mem_high_water", Phase::Counter) => {
+            Some(Sample::HighWater { bytes: ev.args.value.unwrap_or(0.0).max(0.0) })
+        }
+        ("decode_step", Phase::Instant) => Some(Sample::DecodeStep),
+        ("retire", Phase::Instant) => Some(Sample::Retire),
+        _ => None,
+    }
+}
+
+#[derive(Default)]
+struct State {
+    samples: VecDeque<(u64, Sample)>,
+    events_seen: u64,
+    high_water_last: u64,
+}
+
+/// Per-lane time split over the window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LaneSignals {
+    pub lane: u32,
+    pub stall_mem_ms: f64,
+    pub stall_wait_ms: f64,
+    pub compute_ms: f64,
+}
+
+impl LaneSignals {
+    fn busy_ms(&self) -> f64 {
+        self.stall_mem_ms + self.stall_wait_ms + self.compute_ms
+    }
+
+    /// Share of observed worker time spent memory-stalled.
+    pub fn stall_mem_ratio(&self) -> f64 {
+        if self.busy_ms() <= 0.0 {
+            0.0
+        } else {
+            self.stall_mem_ms / self.busy_ms()
+        }
+    }
+
+    /// Share of observed worker time spent pipeline-bubbled.
+    pub fn stall_wait_ratio(&self) -> f64 {
+        if self.busy_ms() <= 0.0 {
+            0.0
+        } else {
+            self.stall_wait_ms / self.busy_ms()
+        }
+    }
+}
+
+/// One aggregated view of the window — what `{"op":"health"}` returns.
+#[derive(Debug, Clone, Default)]
+pub struct SignalSnapshot {
+    /// effective window width in seconds (shorter right after start-up)
+    pub window_s: f64,
+    /// false when the bus is disabled (no events will ever arrive)
+    pub enabled: bool,
+    pub lanes: Vec<LaneSignals>,
+    pub shed_by_reason: BTreeMap<String, u64>,
+    pub prefetch_bytes_per_s: f64,
+    pub waste_bytes_per_s: f64,
+    /// wasted / prefetched bytes in the window (0 when nothing prefetched)
+    pub waste_ratio: f64,
+    /// least-squares slope of the per-pass high-water samples, bytes/s
+    pub high_water_slope_bps: f64,
+    /// most recent high-water sample, bytes
+    pub high_water_last: u64,
+    pub decode_steps_per_s: f64,
+    pub retires_per_s: f64,
+    pub sheds_per_s: f64,
+    pub events_seen: u64,
+    /// events this aggregator's own ring dropped (consumer too slow)
+    pub subscriber_dropped: u64,
+    /// events the bus shards dropped (ring full at the emitters)
+    pub bus_dropped: u64,
+}
+
+impl SignalSnapshot {
+    pub fn to_json(&self) -> Value {
+        let mut lanes = Vec::with_capacity(self.lanes.len());
+        for l in &self.lanes {
+            lanes.push(
+                Value::obj()
+                    .set("lane", l.lane as u64)
+                    .set("stall_mem_ms", l.stall_mem_ms)
+                    .set("stall_wait_ms", l.stall_wait_ms)
+                    .set("compute_ms", l.compute_ms)
+                    .set("stall_mem_ratio", l.stall_mem_ratio())
+                    .set("stall_wait_ratio", l.stall_wait_ratio()),
+            );
+        }
+        let mut shed = Value::obj();
+        for (r, n) in &self.shed_by_reason {
+            shed = shed.set(r, *n);
+        }
+        Value::obj()
+            .set("enabled", self.enabled)
+            .set("window_s", self.window_s)
+            .set("lanes", Value::Arr(lanes))
+            .set("shed_by_reason", shed)
+            .set("sheds_per_s", self.sheds_per_s)
+            .set("prefetch_bytes_per_s", self.prefetch_bytes_per_s)
+            .set("waste_bytes_per_s", self.waste_bytes_per_s)
+            .set("waste_ratio", self.waste_ratio)
+            .set("high_water_slope_bps", self.high_water_slope_bps)
+            .set("high_water_last", self.high_water_last)
+            .set("decode_steps_per_s", self.decode_steps_per_s)
+            .set("retires_per_s", self.retires_per_s)
+            .set("events_seen", self.events_seen)
+            .set("subscriber_dropped", self.subscriber_dropped)
+            .set("bus_dropped", self.bus_dropped)
+    }
+
+    /// Append the derived gauges to a Prometheus exposition (the
+    /// `{"op":"metrics"}` text already carries the summary counters).
+    pub fn to_prometheus(&self, out: &mut String) {
+        out.push_str(
+            "# HELP hermes_lane_stall_ratio share of a lane's observed worker time in a stall state over the health window\n# TYPE hermes_lane_stall_ratio gauge\n",
+        );
+        for l in &self.lanes {
+            out.push_str(&format!(
+                "hermes_lane_stall_ratio{{lane=\"{}\",kind=\"mem\"}} {:.6}\n",
+                l.lane,
+                l.stall_mem_ratio()
+            ));
+            out.push_str(&format!(
+                "hermes_lane_stall_ratio{{lane=\"{}\",kind=\"wait\"}} {:.6}\n",
+                l.lane,
+                l.stall_wait_ratio()
+            ));
+        }
+        prometheus_gauge(
+            out,
+            "hermes_shed_rate",
+            "requests shed per second over the health window",
+            self.sheds_per_s,
+        );
+        prometheus_gauge(
+            out,
+            "hermes_prefetch_waste_bytes_per_s",
+            "speculative bytes reclaimed or discarded per second",
+            self.waste_bytes_per_s,
+        );
+        prometheus_gauge(
+            out,
+            "hermes_prefetch_waste_ratio",
+            "wasted / prefetched bytes over the health window",
+            self.waste_ratio,
+        );
+        prometheus_gauge(
+            out,
+            "hermes_high_water_slope_bps",
+            "trend of the accountant per-pass peak, bytes per second",
+            self.high_water_slope_bps,
+        );
+        prometheus_gauge(
+            out,
+            "hermes_decode_steps_per_s",
+            "token decode steps per second over the health window",
+            self.decode_steps_per_s,
+        );
+        prometheus_gauge(
+            out,
+            "hermes_retire_rate",
+            "requests retired per second over the health window",
+            self.retires_per_s,
+        );
+        prometheus_counter(
+            out,
+            "hermes_health_subscriber_dropped_total",
+            "events the health aggregator's own ring dropped",
+            self.subscriber_dropped,
+        );
+    }
+}
+
+/// The live aggregator: one bounded subscription + a windowed fold.
+pub struct DerivedSignals {
+    telemetry: Telemetry,
+    sub: Subscription,
+    window_us: u64,
+    state: Mutex<State>,
+}
+
+impl DerivedSignals {
+    /// Subscribe to `telemetry` and aggregate over `window`.  Cheap on a
+    /// disabled bus: nothing is ever emitted, so nothing is ever folded.
+    pub fn attach(telemetry: &Telemetry, window: Duration) -> DerivedSignals {
+        DerivedSignals {
+            sub: telemetry.subscribe("derived-signals", SUB_CAP),
+            telemetry: telemetry.clone(),
+            window_us: (window.as_micros() as u64).max(1),
+            state: Mutex::new(State::default()),
+        }
+    }
+
+    /// Drain the subscription and return the current window's view.
+    pub fn poll(&self) -> SignalSnapshot {
+        let events = self.sub.drain();
+        self.ingest(events, self.telemetry.now_us())
+    }
+
+    fn ingest(&self, events: Vec<Event>, now_us: u64) -> SignalSnapshot {
+        let mut st = self.state.lock().unwrap();
+        for ev in events {
+            st.events_seen += 1;
+            if let Some(s) = classify(&ev) {
+                if let Sample::HighWater { bytes } = s {
+                    st.high_water_last = bytes as u64;
+                }
+                // key by span END so a long stall leaves the window only
+                // after it actually stopped stalling
+                st.samples.push_back((ev.ts_us + ev.dur_us, s));
+            }
+        }
+        let cutoff = now_us.saturating_sub(self.window_us);
+        while st.samples.front().is_some_and(|(t, _)| *t < cutoff) {
+            st.samples.pop_front();
+        }
+        let window_s = (now_us.saturating_sub(cutoff)).max(1) as f64 / 1e6;
+
+        let mut lanes: BTreeMap<u32, LaneSignals> = BTreeMap::new();
+        let mut shed_by_reason: BTreeMap<String, u64> = BTreeMap::new();
+        let mut prefetch_bytes = 0u64;
+        let mut waste_bytes = 0u64;
+        let mut high_water: Vec<(f64, f64)> = Vec::new();
+        let (mut decode_steps, mut retires, mut sheds) = (0u64, 0u64, 0u64);
+        for (ts, s) in &st.samples {
+            match s {
+                Sample::StallMem { lane, ms } => {
+                    let l = lanes.entry(*lane).or_insert(LaneSignals { lane: *lane, ..Default::default() });
+                    l.stall_mem_ms += ms;
+                }
+                Sample::StallWait { lane, ms } => {
+                    let l = lanes.entry(*lane).or_insert(LaneSignals { lane: *lane, ..Default::default() });
+                    l.stall_wait_ms += ms;
+                }
+                Sample::Compute { lane, ms } => {
+                    let l = lanes.entry(*lane).or_insert(LaneSignals { lane: *lane, ..Default::default() });
+                    l.compute_ms += ms;
+                }
+                Sample::Shed { reason } => {
+                    *shed_by_reason.entry(reason.clone()).or_default() += 1;
+                    sheds += 1;
+                }
+                Sample::Prefetch { bytes } => prefetch_bytes += bytes,
+                Sample::Waste { bytes } => waste_bytes += bytes,
+                Sample::HighWater { bytes } => high_water.push((*ts as f64 / 1e6, *bytes)),
+                Sample::DecodeStep => decode_steps += 1,
+                Sample::Retire => retires += 1,
+            }
+        }
+        SignalSnapshot {
+            window_s,
+            enabled: self.telemetry.is_on(),
+            lanes: lanes.into_values().collect(),
+            shed_by_reason,
+            prefetch_bytes_per_s: prefetch_bytes as f64 / window_s,
+            waste_bytes_per_s: waste_bytes as f64 / window_s,
+            waste_ratio: if prefetch_bytes == 0 {
+                0.0
+            } else {
+                waste_bytes as f64 / prefetch_bytes as f64
+            },
+            high_water_slope_bps: least_squares_slope(&high_water),
+            high_water_last: st.high_water_last,
+            decode_steps_per_s: decode_steps as f64 / window_s,
+            retires_per_s: retires as f64 / window_s,
+            sheds_per_s: sheds as f64 / window_s,
+            events_seen: st.events_seen,
+            subscriber_dropped: self.sub.dropped(),
+            bus_dropped: self.telemetry.dropped(),
+        }
+    }
+}
+
+/// Ordinary least-squares slope of (seconds, bytes) points; 0 with
+/// fewer than two distinct sample times.
+fn least_squares_slope(points: &[(f64, f64)]) -> f64 {
+    if points.len() < 2 {
+        return 0.0;
+    }
+    let n = points.len() as f64;
+    let mean_x = points.iter().map(|(x, _)| x).sum::<f64>() / n;
+    let mean_y = points.iter().map(|(_, y)| y).sum::<f64>() / n;
+    let var: f64 = points.iter().map(|(x, _)| (x - mean_x) * (x - mean_x)).sum();
+    if var <= 0.0 {
+        return 0.0;
+    }
+    let cov: f64 = points.iter().map(|(x, y)| (x - mean_x) * (y - mean_y)).sum();
+    cov / var
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{worker, EvArgs};
+
+    fn span(name: &'static str, lane: u32, ts: u64, dur: u64) -> Event {
+        Event {
+            name,
+            phase: Phase::Complete,
+            lane,
+            worker: worker::INFER,
+            ts_us: ts,
+            dur_us: dur,
+            args: EvArgs::default(),
+        }
+    }
+
+    fn instant(name: &'static str, ts: u64, args: EvArgs) -> Event {
+        Event { name, phase: Phase::Instant, lane: 0, worker: worker::DRIVER, ts_us: ts, dur_us: 0, args }
+    }
+
+    fn counter(name: &'static str, ts: u64, value: f64) -> Event {
+        Event {
+            name,
+            phase: Phase::Counter,
+            lane: 0,
+            worker: worker::DRIVER,
+            ts_us: ts,
+            dur_us: 0,
+            args: EvArgs { value: Some(value), ..EvArgs::default() },
+        }
+    }
+
+    #[test]
+    fn lane_ratios_and_rates_from_synthetic_window() {
+        let t = Telemetry::on();
+        let d = DerivedSignals::attach(&t, Duration::from_secs(10));
+        let evs = vec![
+            span("compute", 0, 0, 3_000),
+            span("stall_wait", 0, 3_000, 1_000),
+            span("stall_mem", 1, 0, 2_000),
+            span("compute", 1, 2_000, 2_000),
+            instant("shed", 100, EvArgs::req(9).with_reason("shed_overload")),
+            instant("decode_step", 200, EvArgs::req(1)),
+            instant("decode_step", 300, EvArgs::req(1)),
+            instant("retire", 400, EvArgs::req(1)),
+            instant("prefetch_waste", 500, EvArgs::default().with_bytes(500).with_reason("evicted")),
+            Event { args: EvArgs::default().with_bytes(1000), ..span("prefetch", 0, 0, 100) },
+        ];
+        let s = d.ingest(evs, 1_000_000); // 1s into the bus clock
+        assert!(s.enabled);
+        assert_eq!(s.lanes.len(), 2);
+        let l0 = s.lanes.iter().find(|l| l.lane == 0).unwrap();
+        assert!((l0.stall_wait_ratio() - 0.25).abs() < 1e-9);
+        assert!((l0.stall_mem_ratio() - 0.0).abs() < 1e-9);
+        let l1 = s.lanes.iter().find(|l| l.lane == 1).unwrap();
+        assert!((l1.stall_mem_ratio() - 0.5).abs() < 1e-9);
+        assert_eq!(s.shed_by_reason.get("shed_overload"), Some(&1));
+        // 1s effective window: rates are per-second counts
+        assert!((s.decode_steps_per_s - 2.0).abs() < 1e-6);
+        assert!((s.retires_per_s - 1.0).abs() < 1e-6);
+        assert!((s.sheds_per_s - 1.0).abs() < 1e-6);
+        assert!((s.waste_ratio - 0.5).abs() < 1e-9);
+        assert_eq!(s.events_seen, 10);
+    }
+
+    #[test]
+    fn window_evicts_old_samples() {
+        let t = Telemetry::on();
+        let d = DerivedSignals::attach(&t, Duration::from_secs(1));
+        d.ingest(vec![instant("retire", 0, EvArgs::req(1))], 500_000);
+        // 2s later the retire is outside the 1s window
+        let s = d.ingest(vec![instant("retire", 2_400_000, EvArgs::req(2))], 2_500_000);
+        assert!((s.retires_per_s - 1.0).abs() < 1e-6, "only the recent retire remains");
+        assert_eq!(s.events_seen, 2, "seen-counter is cumulative");
+    }
+
+    #[test]
+    fn high_water_slope_tracks_growth() {
+        let t = Telemetry::on();
+        let d = DerivedSignals::attach(&t, Duration::from_secs(10));
+        let evs = vec![
+            counter("mem_high_water", 0, 1_000.0),
+            counter("mem_high_water", 500_000, 2_000.0),
+            counter("mem_high_water", 1_000_000, 3_000.0),
+        ];
+        let s = d.ingest(evs, 1_000_000);
+        // +1000 bytes every 0.5 s -> 2000 bytes/s
+        assert!((s.high_water_slope_bps - 2000.0).abs() < 1e-6, "{}", s.high_water_slope_bps);
+        assert_eq!(s.high_water_last, 3_000);
+        // flat series -> zero slope
+        let d2 = DerivedSignals::attach(&t, Duration::from_secs(10));
+        let s2 = d2.ingest(
+            vec![counter("mem_high_water", 0, 5.0), counter("mem_high_water", 100, 5.0)],
+            1_000,
+        );
+        assert!((s2.high_water_slope_bps - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn live_subscription_feeds_poll() {
+        let t = Telemetry::on();
+        let d = DerivedSignals::attach(&t, DEFAULT_WINDOW);
+        t.instant("retire", worker::DRIVER, EvArgs::req(1));
+        t.instant("shed", worker::DRIVER, EvArgs::req(2).with_reason("shed_queue_full"));
+        let s = d.poll();
+        assert_eq!(s.events_seen, 2);
+        assert_eq!(s.shed_by_reason.get("shed_queue_full"), Some(&1));
+        assert_eq!(s.subscriber_dropped, 0);
+        assert_eq!(s.bus_dropped, 0);
+        // json + prometheus render
+        let j = s.to_json();
+        assert!(j.get("enabled").unwrap().as_bool().unwrap());
+        let mut text = String::new();
+        s.to_prometheus(&mut text);
+        assert!(text.contains("hermes_shed_rate"));
+        assert!(text.contains("hermes_high_water_slope_bps"));
+    }
+
+    #[test]
+    fn disabled_bus_snapshot_is_inert() {
+        let t = Telemetry::off();
+        let d = DerivedSignals::attach(&t, DEFAULT_WINDOW);
+        t.instant("retire", worker::DRIVER, EvArgs::req(1)); // no-op: bus off
+        let s = d.poll();
+        assert!(!s.enabled);
+        assert_eq!(s.events_seen, 0);
+        assert!(s.lanes.is_empty());
+    }
+}

@@ -26,7 +26,7 @@
 
 pub mod session;
 
-pub use session::{DecodeState, Session, SessionBuilder};
+pub use session::{DecodeState, MemComponents, Session, SessionBuilder};
 
 use anyhow::Result;
 

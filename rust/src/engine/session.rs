@@ -94,6 +94,28 @@ use crate::planner::Schedule;
 use crate::telemetry::{worker, EvArgs, Telemetry};
 use crate::trace::Tracer;
 
+/// One settled sample of where every accounted byte lives: durable
+/// stores (pins, device copies, parked prefetch shards, KV blocks, the
+/// baseline-resident model) plus the pass ledger's live balance.  At a
+/// quiesced point their sum equals [`MemoryAccountant::used`] exactly —
+/// the invariant the `mem_audit` telemetry event records and
+/// `hermes analyze` re-checks offline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemComponents {
+    pub pins: u64,
+    pub device: u64,
+    pub prefetch: u64,
+    pub kv: u64,
+    pub live: u64,
+    pub resident: u64,
+}
+
+impl MemComponents {
+    pub fn total(&self) -> u64 {
+        self.pins + self.device + self.prefetch + self.kv + self.live + self.resident
+    }
+}
+
 /// Long-lived pipeline state for one (profile, mode, budget) configuration.
 /// Obtained from [`Engine::open_session`]; run requests with
 /// [`Session::run`] / [`Session::run_batch`].
@@ -546,6 +568,50 @@ impl<'e> Session<'e> {
     /// Cross-pass prefetch counters (zeros when prefetch is off).
     pub fn prefetch_stats(&self) -> PrefetchStats {
         self.prefetch.as_ref().map(|b| b.stats()).unwrap_or_default()
+    }
+
+    /// Block until this session's speculative loads have settled.  Between
+    /// passes this is ~free; the serving layer calls it before sampling
+    /// memory attribution so no in-flight prefetch straddles the
+    /// buffer/ledger hand-off mid-sample.
+    pub fn quiesce_speculative(&self) {
+        self.prefetch_group.wait_idle();
+    }
+
+    /// One settled sample of where every accounted byte lives.  Only
+    /// meaningful at a quiesced point (pass start, or after
+    /// [`Session::quiesce_speculative`] between passes).
+    pub fn mem_components(&self) -> MemComponents {
+        MemComponents {
+            pins: self.cache.as_ref().map(|c| c.stats().pinned_bytes).unwrap_or(0),
+            device: self.device.as_ref().map(|d| d.stats().resident_bytes).unwrap_or(0),
+            prefetch: self.prefetch.as_ref().map(|b| b.stats().buffered_bytes).unwrap_or(0),
+            kv: self.kv_pool.as_ref().map(|p| p.used_bytes()).unwrap_or(0),
+            live: self.gate.ledger().balance(),
+            resident: self.resident.as_ref().map(|m| m.bytes).unwrap_or(0),
+        }
+    }
+
+    /// Emit this lane's memory-attribution component counters on the bus
+    /// and return the sample (the serving layer sums samples across lanes
+    /// into the global `mem_audit` event; single-session runs emit their
+    /// own in `pass_mode`).  No-op (but still sampled) when the bus is
+    /// off.
+    pub fn emit_mem_components(&self) -> MemComponents {
+        let c = self.mem_components();
+        if self.telemetry.is_on() {
+            for (name, v) in [
+                ("mem_pins", c.pins),
+                ("mem_device", c.device),
+                ("mem_prefetch", c.prefetch),
+                ("mem_kv", c.kv),
+                ("mem_live", c.live),
+                ("mem_resident", c.resident),
+            ] {
+                self.telemetry.counter(name, worker::DRIVER, v as f64, EvArgs::default().with_bytes(v));
+            }
+        }
+        c
     }
 
     /// Device-resident cache counters (zeros when the cache is off).
@@ -1167,6 +1233,22 @@ impl<'e> Session<'e> {
             device: self.device.as_ref(),
         };
         let tel_on = self.telemetry.is_on();
+        if tel_on && self.owns_accountant {
+            // Memory-attribution audit sample at the settled point: the
+            // quiesce above means every accounted byte is parked in a
+            // store (pins / device / prefetch / KV) or the pass ledger,
+            // so the component sum must equal the accountant exactly.
+            // Shared-accountant lanes skip this — the router samples all
+            // lanes at once instead (a one-lane sum can't reconcile a
+            // fleet-wide accountant).
+            let c = self.emit_mem_components();
+            self.telemetry.counter(
+                "mem_audit",
+                worker::DRIVER,
+                self.accountant.used() as f64,
+                EvArgs::pass(self.pass_epoch).with_bytes(c.total()),
+            );
+        }
         if tel_on {
             self.telemetry.begin("pass", worker::DRIVER, EvArgs::pass(self.pass_epoch));
         }

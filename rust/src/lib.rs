@@ -17,6 +17,7 @@
 //! the Daemon's memory accountant ([`memory`]).  See DESIGN.md for the
 //! full inventory and EXPERIMENTS.md for paper-vs-measured results.
 
+pub mod analyze;
 pub mod baseline;
 pub mod config;
 pub mod diskio;

@@ -12,6 +12,7 @@
 
 use anyhow::{bail, Result};
 
+use hermes::analyze::Analysis;
 use hermes::config::{Mode, PinPolicy, RunConfig};
 use hermes::elastic::PressureTrace;
 use hermes::engine::Engine;
@@ -60,6 +61,30 @@ fn write_trace_out(a: &Args, telemetry: &Telemetry) -> Result<()> {
     Ok(())
 }
 
+/// End-of-run telemetry-loss report: bus-ring drops plus per-subscriber
+/// drops (a slow in-process consumer sheds events rather than stalling
+/// the emitters — but shed events must be visible, never silent).
+fn print_telemetry_drops(telemetry: &Telemetry) {
+    let dropped = telemetry.dropped();
+    if dropped > 0 {
+        println!("  telemetry: {dropped} event(s) dropped (ring full)");
+    }
+    for (label, n) in telemetry.subscriber_drops() {
+        if n > 0 {
+            println!("  telemetry: subscriber '{label}' dropped {n} event(s)");
+        }
+    }
+}
+
+/// Attach the same loss counters to a machine-readable summary.
+fn with_telemetry_drops(v: hermes::util::json::Value, telemetry: &Telemetry) -> hermes::util::json::Value {
+    let mut subs = hermes::util::json::Value::obj();
+    for (label, n) in telemetry.subscriber_drops() {
+        subs = subs.set(&label, n);
+    }
+    v.set("telemetry_dropped_events", telemetry.dropped()).set("subscriber_drops", subs)
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
@@ -90,7 +115,10 @@ fn print_usage() {
            run           Execution Engine: one run (baseline|pipeswitch|pipeload)\n\
            serve         serving session: synthetic workload, or a multi-model\n\
                          TCP front-end (--listen) with a shared memory budget\n\
-           report        regenerate paper tables (1,2,3) / figures (1b,2,3,7)\n\n\
+           report        regenerate paper tables (1,2,3) / figures (1b,2,3,7)\n\
+           analyze       trace analytics: request lifecycle breakdown, per-stage\n\
+                         bubble/critical-path attribution, memory-audit check\n\
+                         (reads a --trace-out JSON, or runs + analyzes in one go)\n\n\
          run `hermes <command> --help` for per-command options"
     );
 }
@@ -113,6 +141,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
         "run" => cmd_run(rest),
         "serve" => cmd_serve(rest),
         "report" => cmd_report(rest),
+        "analyze" => cmd_analyze(rest),
         _ => bail!("unknown command '{cmd}' (try --help)"),
     }
 }
@@ -491,7 +520,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         let s = frontend.run(&engine, router_cfg)?;
         write_trace_out(&a, &telemetry)?;
         if a.flag("json") {
-            println!("{}", s.to_json().pretty());
+            println!("{}", with_telemetry_drops(s.to_json(), &telemetry).pretty());
         } else {
             println!("served {} requests ({} rejected) in {} batches (mean batch {:.2})", s.served, s.rejected, s.batches, s.mean_batch_size);
             println!("  throughput: {:.2} req/s", s.throughput_rps);
@@ -517,6 +546,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             for m in &s.per_model {
                 println!("  [{}] served {} / rejected {} in {} batches, p95 {}", m.profile, m.served, m.rejected, m.batches, human_ms(m.latency.p95()));
             }
+            print_telemetry_drops(&telemetry);
         }
         return Ok(());
     }
@@ -543,7 +573,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let s = serve(&engine, &cfg)?;
     write_trace_out(&a, &telemetry)?;
     if a.flag("json") {
-        println!("{}", s.to_json().pretty());
+        println!("{}", with_telemetry_drops(s.to_json(), &telemetry).pretty());
         return Ok(());
     }
     println!("served {} requests in {} batches (mean batch {:.2})", s.served, s.batches, s.mean_batch_size);
@@ -589,6 +619,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         );
     }
     println!("  SLO p95 <= {}: {}", human_ms(s.slo.target_ms), if s.slo.met { "MET" } else { "MISSED" });
+    print_telemetry_drops(&telemetry);
     Ok(())
 }
 
@@ -644,6 +675,69 @@ fn cmd_report(rest: &[String]) -> Result<()> {
             }
             _ => bail!("unknown figure '{f}'"),
         }
+    }
+    Ok(())
+}
+
+fn cmd_analyze(rest: &[String]) -> Result<()> {
+    let mut opts = common_opts();
+    opts.push(Opt { name: "mode", takes_value: true, default: Some("pipeload"), help: "baseline|pipeswitch|pipeload (run-and-analyze mode)" });
+    opts.push(Opt { name: "agents", takes_value: true, default: Some("4"), help: "number of Loading Agents (run-and-analyze mode)" });
+    opts.push(Opt { name: "budget-mb", takes_value: true, default: None, help: "memory budget in MB (run-and-analyze mode)" });
+    opts.push(Opt { name: "pin-budget-mb", takes_value: true, default: None, help: "hot-layer cache pin budget in MB" });
+    opts.push(Opt { name: "kv-cache", takes_value: false, default: None, help: "paged KV cache (generative profiles)" });
+    opts.push(Opt { name: "kv-budget-mb", takes_value: true, default: None, help: "KV pool cap in MB (with --kv-cache)" });
+    opts.push(Opt { name: "prefetch-depth", takes_value: true, default: Some("0"), help: "cross-pass prefetch depth (pipeload)" });
+    opts.push(Opt { name: "batch", takes_value: true, default: Some("1"), help: "batch size (must be AOT-compiled)" });
+    opts.push(Opt { name: "tokens", takes_value: true, default: None, help: "generated tokens (generative models)" });
+    opts.push(Opt { name: "gantt", takes_value: false, default: None, help: "also print the reconstructed per-worker Gantt chart" });
+    opts.push(Opt { name: "json", takes_value: false, default: None, help: "print the machine-readable analysis instead of the human report" });
+    let a = Args::parse(rest, &opts)?;
+    if a.flag("help") {
+        println!(
+            "{}\n\nusage:\n  hermes analyze <trace.json>   analyze an existing --trace-out file\n  hermes analyze [run flags]    run once with telemetry on, then analyze",
+            render_help("analyze", "trace analytics: lifecycle breakdown, critical-path attribution, memory audit", &opts)
+        );
+        return Ok(());
+    }
+    let analysis = if let Some(path) = a.positional.first() {
+        Analysis::from_file(std::path::Path::new(path))?
+    } else {
+        let engine = Engine::with_default_paths()?;
+        let cfg = RunConfig {
+            profile: a.req("model")?.to_string(),
+            mode: Mode::parse(a.req("mode")?)?,
+            agents: a.usize("agents")?,
+            budget: a.mb_bytes("budget-mb")?,
+            pin_budget: a.mb_bytes("pin-budget-mb")?,
+            kv_cache: a.flag("kv-cache"),
+            kv_budget: a.mb_bytes("kv-budget-mb")?,
+            prefetch_depth: a.usize("prefetch-depth")?,
+            batch: a.usize("batch")?,
+            gen_tokens: a.get("tokens").map(|s| s.parse()).transpose()?,
+            disk: a.req("disk")?.to_string(),
+            seed: a.u64("seed")?,
+            ..RunConfig::default()
+        };
+        let telemetry = Telemetry::on();
+        let mut session = engine.open_session(&cfg)?;
+        session.set_telemetry(telemetry.clone());
+        session.run()?;
+        drop(session);
+        Analysis::from_bus(&telemetry.drain(), telemetry.dropped())
+    };
+    if a.flag("json") {
+        println!("{}", analysis.to_json().pretty());
+    } else {
+        println!("{}", analysis.render_text());
+        if a.flag("gantt") {
+            println!("{}", analysis.ascii_gantt(100));
+        }
+    }
+    // a broken trace (truncated lifecycles, audit drift, dropped events)
+    // must fail loudly — scripts gate on the exit code
+    if !analysis.ok() {
+        bail!("trace analysis found {} error(s)", analysis.errors.len());
     }
     Ok(())
 }

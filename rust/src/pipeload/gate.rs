@@ -366,7 +366,16 @@ impl OrderedGate {
     /// call (split so the wrapper can tag the reclaim's cause).
     fn evict_chain_step(&self, bytes: u64) -> bool {
         if let Some(p) = &self.prefetch {
-            if p.evict_for(bytes, &self.accountant) > 0 {
+            let freed = p.evict_for(bytes, &self.accountant);
+            if freed > 0 {
+                // speculative bytes sacrificed before they were used: the
+                // live waste-rate signal (`DerivedSignals`) and the offline
+                // analyzer both count these
+                self.telemetry.instant(
+                    "prefetch_waste",
+                    worker::DAEMON,
+                    EvArgs::default().with_bytes(freed).with_reason("evicted"),
+                );
                 return true;
             }
         }

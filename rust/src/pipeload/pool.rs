@@ -322,6 +322,15 @@ fn run_pass_task(t: PassTask) {
             // The duplicate was buffer-owned, not this pass's charge.
             if let Some(dup_bytes) = sh.buffer.as_ref().and_then(|b| b.discard(stage_idx)) {
                 sh.gate.free_store(dup_bytes);
+                if tel_on {
+                    sh.telemetry.instant(
+                        "prefetch_waste",
+                        worker::loader(t.agent),
+                        EvArgs::stage(stage_idx)
+                            .with_bytes(dup_bytes)
+                            .with_reason("stale_duplicate"),
+                    );
+                }
             }
         } else {
             resident = sh.buffer.as_ref().and_then(|b| b.take(stage_idx));

@@ -26,7 +26,6 @@ use crate::metrics::{fmt_mb, fmt_ms, fmt_ratio, RunReport, Table};
 use crate::planner;
 use crate::profiler::{profile_model, ModelProfile};
 use crate::telemetry::Telemetry;
-use crate::trace::Tracer;
 use crate::util::json::Value;
 
 /// The paper's four evaluated models (Table I order).
@@ -401,43 +400,44 @@ pub fn fig7(engine: &Engine, disk_name: &str, fractions: &[f64], max_agents: usi
 
 /// Fig 1b / Obs II: pipeline-stall illustration on the standard pipeline.
 ///
-/// The ASCII Gantt is the fixed single-session rendering; pass a
-/// `trace_out` path to also export the same run as Chrome trace-event
-/// JSON (load it into Perfetto / `chrome://tracing` for the zoomable
-/// version — that backend scales to multi-lane serving traces where the
-/// ASCII chart cannot).
+/// Rendered from the telemetry bus through the offline analyzer
+/// ([`crate::analyze::Analysis`]) — the SAME reconstruction `hermes
+/// analyze` applies to a `--trace-out` file, so the figure and the
+/// analytics can never drift apart.  Pass a `trace_out` path to also
+/// export the run as Chrome trace-event JSON (load it into Perfetto /
+/// `chrome://tracing` for the zoomable version — that backend scales to
+/// multi-lane serving traces where the ASCII chart cannot).
 pub fn fig1b(
     engine: &Engine,
     disk_name: &str,
     model: &str,
     trace_out: Option<&std::path::Path>,
 ) -> Result<String> {
-    let tracer = Tracer::new(true);
-    let telemetry = match trace_out {
-        Some(_) => Telemetry::on(),
-        None => Telemetry::off(),
-    };
+    let telemetry = Telemetry::on();
     let cfg = RunConfig {
         profile: model.into(),
         mode: Mode::PipeSwitch,
         disk: disk_name.into(),
-        trace: true,
         ..RunConfig::default()
     };
-    let mut session = engine.session(&cfg).tracer(&tracer).open()?;
+    let mut session = engine.session(&cfg).open()?;
     session.set_telemetry(telemetry.clone());
     let (report, _) = session.run()?;
-    let idle = tracer.inference_idle_fraction().unwrap_or(0.0);
+    drop(session);
+    let events = telemetry.drain();
+    let analysis = crate::analyze::Analysis::from_bus(&events, telemetry.dropped());
+    let idle = analysis.inference_idle_fraction().unwrap_or(0.0);
     let mut out = format!(
         "Fig 1b: pipeline stall under the standard pipeline ({model}, disk={disk_name})\n\
          inference-lane idle fraction: {:.0}%  (paper: 60-80%)\n\
-         end-to-end: {:.1} ms\n\n",
+         end-to-end: {:.1} ms  (bubble {:.1} ms across {} pass(es))\n\n",
         idle * 100.0,
-        report.latency_ms
+        report.latency_ms,
+        analysis.bubble_total_ms(),
+        analysis.passes.len()
     );
-    out.push_str(&tracer.ascii_gantt(100));
+    out.push_str(&analysis.ascii_gantt(100));
     if let Some(path) = trace_out {
-        let events = telemetry.drain();
         crate::telemetry::chrome::write_chrome_trace(path, &events, telemetry.dropped())?;
         out.push_str(&format!(
             "\nchrome trace: {} event(s) -> {}\n",

@@ -1231,6 +1231,7 @@ impl<'e> Router<'e> {
             if let Some(li) = self.pick_continuous_lane() {
                 self.continuous_iteration(li);
                 self.fair.charge(li);
+                self.emit_mem_audit();
                 continue;
             }
 
@@ -1402,6 +1403,7 @@ impl<'e> Router<'e> {
             if self.first_error.is_none() {
                 self.first_error = turn_err;
             }
+            self.emit_mem_audit();
         }
 
         // reject anything still sitting in the channel after shutdown
@@ -1421,6 +1423,33 @@ impl<'e> Router<'e> {
         }
 
         Ok(self.summarize())
+    }
+
+    /// Memory-attribution audit sample, emitted between batches and token
+    /// boundaries (the serialized loop's quiesced points).  Every lane's
+    /// speculative loads are settled first — no in-flight prefetch may
+    /// straddle the buffer/ledger hand-off mid-sample — then the lanes'
+    /// component sums (pins / device / prefetch / KV / ledger-live) must
+    /// equal the shared accountant exactly.  One self-contained event:
+    /// `value` = accountant.used(), `bytes` = component sum; the offline
+    /// analyzer reports any difference as drift.  Lane sessions skip their
+    /// own pass-start audit under a shared accountant, so this is the only
+    /// audit source in a serialized multi-lane serve.
+    fn emit_mem_audit(&self) {
+        if !self.telemetry.is_on() {
+            return;
+        }
+        for lane in &self.lanes {
+            lane.session.quiesce_speculative();
+        }
+        let total: u64 =
+            self.lanes.iter().map(|l| l.session.emit_mem_components().total()).sum();
+        self.telemetry.counter(
+            "mem_audit",
+            worker::DRIVER,
+            self.accountant.used() as f64,
+            EvArgs::default().with_bytes(total),
+        );
     }
 
     /// Snapshot the run's counters into a [`RouterSummary`].  One code

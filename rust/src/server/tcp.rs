@@ -19,9 +19,11 @@
 //! -> {"op":"ping"}
 //! <- {"ok":true,"op":"pong"}
 //! -> {"op":"stats"}           # mid-flight RouterSummary snapshot
-//! <- {"ok":true,"op":"stats","served":3,...,"reject_reasons":{...}}
+//! <- {"ok":true,"op":"stats","served":3,...,"telemetry_dropped_events":0,"subscriber_drops":{...}}
 //! -> {"op":"metrics"}         # Prometheus-style text under "text"
 //! <- {"ok":true,"op":"metrics","text":"# HELP hermes_served_total ..."}
+//! -> {"op":"health"}          # rolling-window derived signals (see analyze::signals)
+//! <- {"ok":true,"op":"health","lanes":[{"lane":0,"stall_mem_ratio":0.1,...}],...}
 //! -> {"op":"shutdown"}        # drains queued work, stops the server
 //! <- {"ok":true,"op":"shutdown"}
 //! ```
@@ -47,6 +49,7 @@ use super::lanes::ConcurrentRouter;
 use super::router::{
     reject_reason, InferRequest, Router, RouterConfig, RouterHandle, RouterSummary,
 };
+use crate::analyze::{DerivedSignals, DEFAULT_WINDOW};
 use crate::engine::Engine;
 use crate::telemetry::Telemetry;
 use crate::util::json::Value;
@@ -57,6 +60,7 @@ use crate::util::json::Value;
 pub struct TcpFrontend {
     listener: TcpListener,
     telemetry: Telemetry,
+    signals: Arc<DerivedSignals>,
 }
 
 impl TcpFrontend {
@@ -65,13 +69,19 @@ impl TcpFrontend {
     pub fn bind(addr: &str) -> Result<TcpFrontend> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding TCP listener on {addr}"))?;
-        Ok(TcpFrontend { listener, telemetry: Telemetry::off() })
+        let telemetry = Telemetry::off();
+        let signals = Arc::new(DerivedSignals::attach(&telemetry, DEFAULT_WINDOW));
+        Ok(TcpFrontend { listener, telemetry, signals })
     }
 
     /// Attach a telemetry bus: the router (and every lane/session under
-    /// it) records lifecycle spans on it, and `{"op":"metrics"}` reports
-    /// its dropped-event counter.
+    /// it) records lifecycle spans on it, `{"op":"health"}` aggregates it
+    /// into rolling-window derived signals, and `{"op":"metrics"}` reports
+    /// its dropped-event counters.
     pub fn set_telemetry(&mut self, t: Telemetry) {
+        // re-attach the health aggregator so its subscription rides the
+        // bus that will actually carry the run's events
+        self.signals = Arc::new(DerivedSignals::attach(&t, DEFAULT_WINDOW));
         self.telemetry = t;
     }
 
@@ -123,6 +133,7 @@ impl TcpFrontend {
         self.listener.set_nonblocking(true)?;
         let listener = self.listener;
         let telemetry = self.telemetry;
+        let signals = self.signals;
         let accept_stop = stop.clone();
         let active = Arc::new(AtomicUsize::new(0));
         let accept = std::thread::spawn(move || {
@@ -152,9 +163,10 @@ impl TcpFrontend {
                         active.fetch_add(1, Ordering::Relaxed);
                         let h = handle.clone();
                         let tel = telemetry.clone();
+                        let sig = signals.clone();
                         let done = active.clone();
                         std::thread::spawn(move || {
-                            let _ = client_loop(stream, h, tel);
+                            let _ = client_loop(stream, h, tel, sig);
                             done.fetch_sub(1, Ordering::Relaxed);
                         });
                     }
@@ -233,7 +245,12 @@ fn read_bounded_line<R: BufRead>(reader: &mut R) -> std::io::Result<Option<Strin
 /// Any error (bad JSON, oversized line, dead router, closed socket)
 /// answers or ends the connection gracefully — library code must not
 /// panic or balloon on a bad peer.
-fn client_loop(stream: TcpStream, handle: RouterHandle, telemetry: Telemetry) -> Result<()> {
+fn client_loop(
+    stream: TcpStream,
+    handle: RouterHandle,
+    telemetry: Telemetry,
+    signals: Arc<DerivedSignals>,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(CLIENT_IDLE_TIMEOUT)).ok();
     let mut writer = stream.try_clone().context("cloning TCP stream")?;
@@ -255,7 +272,7 @@ fn client_loop(stream: TcpStream, handle: RouterHandle, telemetry: Telemetry) ->
         if line.trim().is_empty() {
             continue;
         }
-        let (reply, shutdown) = handle_line(&line, &handle, &telemetry);
+        let (reply, shutdown) = handle_line(&line, &handle, &telemetry, &signals);
         writer.write_all(reply.compact().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
@@ -272,7 +289,12 @@ fn client_loop(stream: TcpStream, handle: RouterHandle, telemetry: Telemetry) ->
 /// Dispatch one request line; returns the reply and whether the peer
 /// asked for a server shutdown (performed by the caller *after* the reply
 /// is flushed).
-fn handle_line(line: &str, handle: &RouterHandle, telemetry: &Telemetry) -> (Value, bool) {
+fn handle_line(
+    line: &str,
+    handle: &RouterHandle,
+    telemetry: &Telemetry,
+    signals: &DerivedSignals,
+) -> (Value, bool) {
     // protocol-level failures are validation errors in the reject taxonomy
     let err = |msg: String| {
         (
@@ -294,21 +316,40 @@ fn handle_line(line: &str, handle: &RouterHandle, telemetry: &Telemetry) -> (Val
         // mid-flight counters, same aggregation code path as the final
         // summary (a snapshot taken at shutdown matches it field for field)
         "stats" => match handle.stats() {
-            Ok(s) => (s.to_json().set("ok", true).set("op", "stats"), false),
+            Ok(s) => {
+                let mut subs = Value::obj();
+                for (label, n) in telemetry.subscriber_drops() {
+                    subs = subs.set(&label, n);
+                }
+                (
+                    s.to_json()
+                        .set("ok", true)
+                        .set("op", "stats")
+                        .set("telemetry_dropped_events", telemetry.dropped())
+                        .set("subscriber_drops", subs),
+                    false,
+                )
+            }
             Err(e) => err(format!("{e:#}")),
         },
         // Prometheus-style text exposition, wrapped in the line protocol's
         // one-JSON-object-per-line framing under the "text" key
         "metrics" => match handle.stats() {
-            Ok(s) => (
-                Value::obj()
-                    .set("ok", true)
-                    .set("op", "metrics")
-                    .set("text", s.to_prometheus(telemetry.dropped())),
-                false,
-            ),
+            Ok(s) => {
+                let mut text = s.to_prometheus(telemetry.dropped());
+                signals.poll().to_prometheus(&mut text);
+                for (label, n) in telemetry.subscriber_drops() {
+                    text.push_str(&format!(
+                        "hermes_subscriber_dropped_events_total{{subscriber=\"{label}\"}} {n}\n"
+                    ));
+                }
+                (Value::obj().set("ok", true).set("op", "metrics").set("text", text), false)
+            }
             Err(e) => err(format!("{e:#}")),
         },
+        // live derived signals over the rolling health window — the same
+        // aggregate an in-process controller consumes via DerivedSignals
+        "health" => (signals.poll().to_json().set("ok", true).set("op", "health"), false),
         "infer" => {
             let req = match InferRequest::from_json(&parsed) {
                 Ok(r) => r,

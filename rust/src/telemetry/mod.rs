@@ -8,7 +8,14 @@
 //! `memory`, and elastic `BudgetEpoch` + KV dedup/COW instants.  Two
 //! consumers read the bus: the Chrome trace-event writer
 //! ([`chrome::chrome_trace`], behind `--trace-out`) and the live
-//! `{"op":"stats"}` / `{"op":"metrics"}` TCP surface.
+//! `{"op":"stats"}` / `{"op":"metrics"}` TCP surface.  In-process
+//! consumers attach through [`Telemetry::subscribe`]: each subscriber
+//! owns a bounded ring that the emit path appends to without ever
+//! blocking — a slow subscriber drops *its own* copies (counted per
+//! subscriber), never the shard record and never the emitter.  The
+//! `analyze::DerivedSignals` aggregator (rolling-window health rates
+//! behind `{"op":"health"}`) is the first such consumer, and the hook
+//! a closed-loop elastic controller attaches to.
 //!
 //! Design constraints (the whole point of this module):
 //!
@@ -30,8 +37,9 @@
 //! traces render with a stable row layout per lane.
 
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Weak};
 use std::time::Instant;
 
 pub mod chrome;
@@ -153,6 +161,35 @@ struct Shard {
     events: Mutex<Vec<Event>>,
 }
 
+struct SubInner {
+    label: String,
+    cap: usize,
+    buf: Mutex<VecDeque<Event>>,
+    dropped: AtomicU64,
+}
+
+/// Handle on one bounded subscriber ring (see [`Telemetry::subscribe`]).
+/// Dropping the handle detaches the subscriber from the bus.
+pub struct Subscription {
+    sub: Arc<SubInner>,
+}
+
+impl Subscription {
+    /// Drain every buffered event in emission order.
+    pub fn drain(&self) -> Vec<Event> {
+        self.sub.buf.lock().unwrap().drain(..).collect()
+    }
+
+    /// Events this subscriber missed because its ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.sub.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn label(&self) -> &str {
+        &self.sub.label
+    }
+}
+
 struct Inner {
     /// unique bus id — the thread-local registry key (pointer identity
     /// would be unsound across bus drop/realloc)
@@ -162,6 +199,12 @@ struct Inner {
     shards: Mutex<Vec<Arc<Shard>>>,
     dropped: AtomicU64,
     cap_per_shard: usize,
+    /// weak refs so a dropped [`Subscription`] self-detaches; pruned on
+    /// the next fan-out
+    subs: Mutex<Vec<Weak<SubInner>>>,
+    /// fast-path gate: emitters skip the subscriber lock entirely while
+    /// nothing is attached
+    sub_count: AtomicUsize,
 }
 
 static NEXT_BUS_ID: AtomicU64 = AtomicU64::new(1);
@@ -205,6 +248,8 @@ impl Telemetry {
                 shards: Mutex::new(Vec::new()),
                 dropped: AtomicU64::new(0),
                 cap_per_shard,
+                subs: Mutex::new(Vec::new()),
+                sub_count: AtomicUsize::new(0),
             }),
             lane: 0,
         }
@@ -252,8 +297,61 @@ impl Telemetry {
         self.inner.dropped.load(Ordering::Relaxed)
     }
 
+    /// Attach a bounded, non-blocking subscriber ring.  Every event that
+    /// reaches [`push`](Self::push) is also copied into the ring; when it
+    /// is full the *copy* is dropped and counted on the subscriber — the
+    /// shard record and the emitting thread are never affected.  Dropping
+    /// the returned [`Subscription`] detaches it.
+    pub fn subscribe(&self, label: impl Into<String>, cap: usize) -> Subscription {
+        let sub = Arc::new(SubInner {
+            label: label.into(),
+            cap: cap.max(1),
+            buf: Mutex::new(VecDeque::new()),
+            dropped: AtomicU64::new(0),
+        });
+        let mut subs = self.inner.subs.lock().unwrap();
+        subs.push(Arc::downgrade(&sub));
+        self.inner.sub_count.store(subs.len(), Ordering::Release);
+        Subscription { sub }
+    }
+
+    /// Per-subscriber drop counts for the live stats surfaces.
+    pub fn subscriber_drops(&self) -> Vec<(String, u64)> {
+        self.inner
+            .subs
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|w| w.upgrade())
+            .map(|s| (s.label.clone(), s.dropped.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    fn fan_out(&self, ev: &Event) {
+        let mut subs = self.inner.subs.lock().unwrap();
+        let before = subs.len();
+        subs.retain(|w| match w.upgrade() {
+            Some(s) => {
+                let mut buf = s.buf.lock().unwrap();
+                if buf.len() < s.cap {
+                    buf.push_back(ev.clone());
+                } else {
+                    s.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+                true
+            }
+            None => false,
+        });
+        if subs.len() != before {
+            self.inner.sub_count.store(subs.len(), Ordering::Release);
+        }
+    }
+
     fn push(&self, ev: Event) {
         let inner = &self.inner;
+        if inner.sub_count.load(Ordering::Acquire) > 0 {
+            self.fan_out(&ev);
+        }
         LOCAL_SHARDS.with(|reg| {
             let mut reg = reg.borrow_mut();
             let shard = match reg.iter().find(|(id, _)| *id == inner.id) {
@@ -464,6 +562,48 @@ mod tests {
         assert_eq!(t.snapshot().len(), 1);
         assert_eq!(t.drain().len(), 1);
         assert!(t.snapshot().is_empty());
+    }
+
+    #[test]
+    fn subscriber_sees_events_without_draining_shards() {
+        let t = Telemetry::on();
+        let sub = t.subscribe("test", 64);
+        t.instant("enqueue", worker::DRIVER, EvArgs::req(1));
+        t.instant("retire", worker::DRIVER, EvArgs::req(1));
+        let seen = sub.drain();
+        assert_eq!(seen.len(), 2);
+        assert_eq!(seen[0].name, "enqueue");
+        // the shard copy is untouched by subscriber drains
+        assert_eq!(t.drain().len(), 2);
+        assert_eq!(sub.dropped(), 0);
+    }
+
+    #[test]
+    fn slow_subscriber_drops_and_counts_without_stalling_emitters() {
+        let t = Telemetry::on();
+        let sub = t.subscribe("slow", 3);
+        for i in 0..10 {
+            t.instant("e", worker::DRIVER, EvArgs::req(i));
+        }
+        // the ring kept its cap, counted the misses, and the bus shards
+        // recorded everything — the emitter never noticed
+        assert_eq!(sub.drain().len(), 3);
+        assert_eq!(sub.dropped(), 7);
+        assert_eq!(t.drain().len(), 10);
+        assert_eq!(t.dropped(), 0);
+        assert_eq!(t.subscriber_drops(), vec![("slow".to_string(), 7)]);
+    }
+
+    #[test]
+    fn dropped_subscription_detaches() {
+        let t = Telemetry::on();
+        let sub = t.subscribe("gone", 8);
+        t.instant("a", worker::DRIVER, EvArgs::default());
+        drop(sub);
+        // next fan-out prunes the dead weak ref; no crash, no leak
+        t.instant("b", worker::DRIVER, EvArgs::default());
+        assert!(t.subscriber_drops().is_empty());
+        assert_eq!(t.drain().len(), 2);
     }
 
     #[test]

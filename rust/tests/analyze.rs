@@ -1,0 +1,364 @@
+//! Trace-analytics integration tests (PR 9): the offline analyzer's
+//! numbers must *reconcile* with the counters the engine and router
+//! already report (the breakdown is derived from the same spans, not a
+//! second opinion), the per-pass critical-path attribution must total
+//! exactly, the memory-attribution audit must balance to ZERO drift with
+//! every memory owner active, a truncated trace must fail loudly, and
+//! the live `DerivedSignals` / `{"op":"health"}` surface must work over
+//! a real serve.  Needs `make artifacts`.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use hermes::analyze::{Analysis, DerivedSignals, DEFAULT_WINDOW};
+use hermes::config::{Mode, Paths, RunConfig};
+use hermes::engine::Engine;
+use hermes::server::tcp::roundtrip;
+use hermes::server::{InferRequest, Router, RouterConfig, TcpFrontend};
+use hermes::telemetry::{Phase, Telemetry};
+use hermes::util::json::Value;
+
+fn engine() -> Engine {
+    Engine::new(Paths::detect()).unwrap()
+}
+
+fn close(trace_ms: f64, report_ms: f64, what: &str) {
+    let tol = 0.15 * trace_ms.max(report_ms) + 10.0;
+    assert!(
+        (trace_ms - report_ms).abs() <= tol,
+        "{what}: analyzer says {trace_ms:.2} ms, report says {report_ms:.2} ms (tol {tol:.2})"
+    );
+}
+
+/// A generative continuous KV lane for the router tests.
+fn kv_lane(model: &str) -> RunConfig {
+    RunConfig {
+        profile: model.into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        kv_cache: true,
+        kv_block_tokens: Some(2),
+        gen_tokens: Some(4),
+        continuous: true,
+        max_active: Some(1),
+        ..RunConfig::default()
+    }
+}
+
+/// The analyzer's whole-trace totals must reconcile with the RunReport
+/// stall counters on a run engineered to produce both stall kinds, and
+/// every reconstructed pass must obey the critical-path identity.
+#[test]
+fn analyzer_totals_reconcile_with_run_report() {
+    let e = engine();
+    let profile = e.runtime.profile("tiny-bert").unwrap();
+    let max_stage = profile.max_stage_bytes();
+    let cfg = RunConfig {
+        profile: "tiny-bert".into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        // two loaders against a two-stage window: the loader ahead blocks
+        // on the gate (mem stalls) while the throttled disk starves the
+        // inference agent (wait stalls)
+        budget: Some(2 * max_stage),
+        disk: "edge-sd".into(),
+        ..RunConfig::default()
+    };
+    let telemetry = Telemetry::on();
+    let mut session = e.open_session(&cfg).unwrap();
+    session.set_telemetry(telemetry.clone());
+    let (rep, _) = session.run().unwrap();
+    drop(session);
+
+    let analysis = Analysis::from_bus(&telemetry.drain(), telemetry.dropped());
+    assert!(analysis.ok(), "clean run must analyze clean: {:?}", analysis.errors);
+    assert!(rep.wait_stall_ms > 0.0 && rep.mem_stall_ms > 0.0);
+    close(analysis.totals.stall_wait_ms, rep.wait_stall_ms, "wait stalls");
+    close(analysis.totals.stall_mem_ms, rep.mem_stall_ms, "mem stalls");
+    let pass_wall: f64 = analysis.passes.iter().map(|p| p.dur_ms).sum();
+    close(pass_wall, rep.latency_ms, "pass wall vs end-to-end latency");
+
+    assert!(!analysis.passes.is_empty(), "the run's pass must be reconstructed");
+    for p in &analysis.passes {
+        // the attribution is a partition of the pass window: compute +
+        // bubble + residual == duration, exactly, and the per-stage
+        // bubble split totals the pass bubble
+        assert!(
+            (p.compute_ms + p.bubble_ms + p.residual_ms - p.dur_ms).abs() < 1e-6,
+            "pass {} lane {}: {:.3} + {:.3} + {:.3} != {:.3}",
+            p.pass, p.lane, p.compute_ms, p.bubble_ms, p.residual_ms, p.dur_ms
+        );
+        let stage_sum: f64 = p.bubble_by_stage.values().sum();
+        assert!(
+            (stage_sum - p.bubble_ms).abs() < 1e-6,
+            "pass {}: stage bubbles {:.3} != pass bubble {:.3}",
+            p.pass, stage_sum, p.bubble_ms
+        );
+        assert!(p.residual_ms >= -1e-9, "residual can never be negative");
+    }
+    // whole-trace stage attribution is the sum of the per-pass splits
+    let by_stage: f64 = analysis.bubble_by_stage.values().sum();
+    assert!((by_stage - analysis.bubble_total_ms()).abs() < 1e-6);
+    // pass-mode single session owns its accountant: audits were emitted
+    // at settled pass starts and must balance exactly
+    assert!(analysis.audit.samples > 0, "owned-accountant run must emit audits");
+    assert_eq!(analysis.audit.max_drift_bytes, 0);
+}
+
+/// A real two-lane continuous serve on the serialized router: request
+/// breakdowns must reconcile with the RouterSummary queue-wait
+/// percentiles, lifecycles must be complete (shed included), and the
+/// between-batches global memory audit must balance to zero drift.
+#[test]
+fn two_lane_continuous_router_reconciles_and_audits_clean() {
+    let e = engine();
+    let cfg = RouterConfig {
+        models: vec![kv_lane("tiny-gpt"), kv_lane("tiny-gptj")],
+        kv_budget: Some(1 << 20),
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        ..RouterConfig::default()
+    };
+    let telemetry = Telemetry::on();
+    let mut router = Router::new(&e, cfg).unwrap();
+    router.set_telemetry(telemetry.clone());
+    let handle = router.handle();
+    let producer = std::thread::spawn(move || {
+        let mut tickets = Vec::new();
+        for i in 0..2u64 {
+            for profile in ["tiny-gpt", "tiny-gptj"] {
+                tickets.push(
+                    handle
+                        .submit(InferRequest {
+                            profile: profile.into(),
+                            seed: Some(700 + i),
+                            ..InferRequest::default()
+                        })
+                        .unwrap(),
+                );
+            }
+        }
+        // one engineered shed: the SLO is already blown when the single
+        // active slot frees, so admission control drops it with a reason
+        tickets.push(
+            handle
+                .submit(InferRequest {
+                    profile: "tiny-gpt".into(),
+                    seed: Some(999),
+                    slo_ms: Some(0.001),
+                    ..InferRequest::default()
+                })
+                .unwrap(),
+        );
+        for t in tickets {
+            let _ = t.wait();
+        }
+        handle.shutdown();
+    });
+    let summary = router.run().unwrap();
+    producer.join().unwrap();
+
+    let analysis = Analysis::from_bus(&telemetry.drain(), telemetry.dropped());
+    assert!(analysis.ok(), "clean serve must analyze clean: {:?}", analysis.errors);
+    assert_eq!(analysis.served(), summary.served, "{:?}", summary.first_error);
+    assert_eq!(analysis.shed(), summary.shed_overload as usize);
+    assert!(analysis.decode_steps > 0, "continuous lanes decode token by token");
+
+    // queue-wait percentiles come from the same enqueue->admit intervals
+    // the router times itself
+    close(analysis.queue_wait.p50(), summary.queue_wait_p50_ms, "queue wait p50");
+    close(analysis.queue_wait.p95(), summary.queue_wait_p95_ms, "queue wait p95");
+
+    // per-pass bubble attribution totals the pass critical path across
+    // both lanes
+    assert!(!analysis.passes.is_empty());
+    for p in &analysis.passes {
+        assert!((p.compute_ms + p.bubble_ms + p.residual_ms - p.dur_ms).abs() < 1e-6);
+        let stage_sum: f64 = p.bubble_by_stage.values().sum();
+        assert!((stage_sum - p.bubble_ms).abs() < 1e-6);
+    }
+    assert!(analysis.passes.iter().any(|p| p.lane == 0));
+    assert!(analysis.passes.iter().any(|p| p.lane == 1));
+
+    // the serialized router quiesces BOTH lanes between batches and
+    // samples the shared accountant: every sample must balance exactly
+    assert!(analysis.audit.samples > 0, "router must emit between-batch audits");
+    assert_eq!(analysis.audit.max_drift_bytes, 0, "memory attribution must balance");
+    assert!(analysis.audit.settled_used_max <= analysis.audit.high_water_max);
+}
+
+/// Zero audit drift with every memory owner active at once: hot-layer
+/// pins, the device-resident cache, cross-pass prefetch, and the paged
+/// KV pool all charge the same accountant the components are summed
+/// against.
+#[test]
+fn memory_audit_balances_with_all_owners_active() {
+    let e = engine();
+    let total = e.runtime.profile("tiny-gpt").unwrap().total_weight_bytes;
+    let cfg = RunConfig {
+        profile: "tiny-gpt".into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        budget: Some(4 * total),
+        pin_budget: Some(total),
+        prefetch_depth: 2,
+        device_cache: true,
+        kv_cache: true,
+        kv_block_tokens: Some(2),
+        gen_tokens: Some(4),
+        ..RunConfig::default()
+    };
+    let telemetry = Telemetry::on();
+    let mut session = e.open_session(&cfg).unwrap();
+    session.set_telemetry(telemetry.clone());
+    let (rep, _) = session.run().unwrap();
+    drop(session);
+
+    assert!(rep.tokens > 0);
+    let analysis = Analysis::from_bus(&telemetry.drain(), telemetry.dropped());
+    assert!(analysis.ok(), "{:?}", analysis.errors);
+    assert!(
+        analysis.audit.samples >= 2,
+        "settled audits across the decode passes ({} samples, {} tokens)",
+        analysis.audit.samples,
+        rep.tokens
+    );
+    assert_eq!(
+        analysis.audit.max_drift_bytes, 0,
+        "pins + device + prefetch + KV + live must sum to the accountant"
+    );
+    assert!(analysis.audit.settled_used_max > 0, "the owners were actually charged");
+}
+
+/// A deliberately truncated trace must fail loudly, never silently
+/// produce a plausible-looking breakdown — and dropped events alone
+/// already disqualify a trace.
+#[test]
+fn truncated_trace_fails_loudly() {
+    let e = engine();
+    let cfg = RunConfig {
+        profile: "tiny-gpt".into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        kv_cache: true,
+        kv_block_tokens: Some(2),
+        gen_tokens: Some(4),
+        ..RunConfig::default()
+    };
+    let telemetry = Telemetry::on();
+    let mut session = e.open_session(&cfg).unwrap();
+    session.set_telemetry(telemetry.clone());
+    session.run().unwrap();
+    drop(session);
+    let events = telemetry.drain();
+
+    // the full trace is clean ...
+    assert!(Analysis::from_bus(&events, 0).ok());
+
+    // ... the same trace cut right after a pass opens is not: the open
+    // span is reported as truncation, with the cut visible in errors
+    let cut = events
+        .iter()
+        .position(|ev| ev.name == "pass" && ev.phase == Phase::Begin)
+        .expect("the decode emits pass spans");
+    let truncated = Analysis::from_bus(&events[..=cut], 0);
+    assert!(!truncated.ok());
+    assert!(
+        truncated.errors.iter().any(|e| e.contains("never closed")),
+        "must call out the unclosed span: {:?}",
+        truncated.errors
+    );
+
+    // ... and a trace that admits to dropped events is incomplete by
+    // definition, whatever else it contains
+    let dropped = Analysis::from_bus(&events, 3);
+    assert!(!dropped.ok());
+    assert!(
+        dropped.errors.iter().any(|e| e.contains("incomplete")),
+        "{:?}",
+        dropped.errors
+    );
+}
+
+/// The live surface: `DerivedSignals` fed by an in-process subscription
+/// during a real serve, and the same aggregate over `{"op":"health"}` on
+/// the TCP front-end, with drop counters in `stats` and the derived
+/// gauges in `metrics`.
+#[test]
+fn health_op_reports_live_derived_signals() {
+    let e = engine();
+    let cfg = RouterConfig {
+        models: vec![RunConfig {
+            profile: "tiny-bert".into(),
+            mode: Mode::PipeLoad,
+            agents: 2,
+            disk: "unthrottled".into(),
+            ..RunConfig::default()
+        }],
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        ..RouterConfig::default()
+    };
+    let telemetry = Telemetry::on();
+    // an independent in-process consumer alongside the TCP one: this is
+    // the controller hook — same bus, its own bounded ring
+    let own = DerivedSignals::attach(&telemetry, DEFAULT_WINDOW);
+    let mut frontend = TcpFrontend::bind("127.0.0.1:0").unwrap();
+    frontend.set_telemetry(telemetry.clone());
+    let addr = frontend.local_addr().unwrap();
+
+    let client = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let reply = roundtrip(&mut stream, &InferRequest::new("tiny-bert").to_json()).unwrap();
+        assert!(reply.get("ok").unwrap().as_bool().unwrap(), "{reply}");
+
+        let health =
+            roundtrip(&mut stream, &Value::parse(r#"{"op":"health"}"#).unwrap()).unwrap();
+        assert!(health.get("ok").unwrap().as_bool().unwrap(), "{health}");
+        assert_eq!(health.get("op").unwrap().as_str().unwrap(), "health");
+        assert!(health.get("enabled").unwrap().as_bool().unwrap());
+        let lanes = health.get("lanes").unwrap().as_arr().unwrap();
+        assert!(!lanes.is_empty(), "a served request leaves lane time in the window");
+        let l0 = &lanes[0];
+        assert!(l0.get("compute_ms").unwrap().as_f64().unwrap() > 0.0, "{health}");
+        assert!(l0.get("stall_mem_ratio").is_some() && l0.get("stall_wait_ratio").is_some());
+        assert!(health.get("high_water_slope_bps").is_some());
+        assert!(health.get("events_seen").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(health.get("bus_dropped").unwrap().as_f64().unwrap(), 0.0);
+
+        let stats = roundtrip(&mut stream, &Value::parse(r#"{"op":"stats"}"#).unwrap()).unwrap();
+        assert_eq!(stats.get("telemetry_dropped_events").unwrap().as_f64().unwrap(), 0.0);
+        let subs = stats.get("subscriber_drops").unwrap();
+        assert!(
+            subs.get("derived-signals").is_some(),
+            "the health aggregator's ring must be accounted: {stats}"
+        );
+
+        let metrics =
+            roundtrip(&mut stream, &Value::parse(r#"{"op":"metrics"}"#).unwrap()).unwrap();
+        let text = metrics.get("text").unwrap().as_str().unwrap().to_string();
+        assert!(text.contains("hermes_lane_stall_ratio"), "{text}");
+        assert!(text.contains("hermes_shed_rate"));
+        assert!(text.contains("hermes_high_water_slope_bps"));
+        assert!(text.contains("hermes_health_subscriber_dropped_total"));
+        assert!(text.contains("hermes_subscriber_dropped_events_total"));
+
+        let reply =
+            roundtrip(&mut stream, &Value::parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+        assert_eq!(reply.get("op").unwrap().as_str().unwrap(), "shutdown");
+    });
+
+    let summary = frontend.run(&e, cfg).unwrap();
+    client.join().unwrap();
+    assert_eq!(summary.served, 1, "{:?}", summary.first_error);
+
+    // the independent subscriber saw the same run, without ever stalling it
+    let snap = own.poll();
+    assert!(snap.enabled);
+    assert!(snap.events_seen > 0);
+    assert_eq!(snap.subscriber_dropped, 0);
+    assert!(!snap.lanes.is_empty());
+}

@@ -8,6 +8,10 @@ Checks the invariants Perfetto / chrome://tracing rely on:
 * `B`/`E` pairs balance per (pid, tid) row and never go negative
 * timestamps are monotonic non-decreasing per (pid, tid) row
 * `X` events carry a non-negative `dur`
+* every request id observes the full lifecycle vocabulary: an `enqueue`,
+  then EITHER a `shed` (with a reason) XOR an `admit` followed by a
+  `retire`; `prime` implies a later `join`, `join` implies a `leave`
+  (continuous batching), and `decode_step` never precedes `join`
 
 Exits non-zero with a diagnostic on the first violation — unlike the
 bench diff, a malformed trace IS a build failure.
@@ -34,8 +38,11 @@ def main(argv):
     if not isinstance(events, list) or not events:
         fail("traceEvents missing or empty")
 
+    LIFECYCLE = {"enqueue", "admit", "shed", "prime", "join",
+                 "decode_step", "retire", "leave"}
     depth = {}  # (pid, tid) -> open B count
     last_ts = {}  # (pid, tid) -> last timestamp seen
+    life = {}  # request id -> [(lifecycle name, ts)]
     for i, e in enumerate(events):
         for key in ("name", "ph", "pid", "tid"):
             if key not in e:
@@ -56,12 +63,47 @@ def main(argv):
                 fail(f"event {i}: E without open B on row {row}")
         elif e["ph"] == "X" and e.get("dur", 0) < 0:
             fail(f"event {i}: negative dur: {e}")
+        args = e.get("args") or {}
+        if e["ph"] == "i" and e["name"] in LIFECYCLE and args.get("req") is not None:
+            if e["name"] == "shed" and not args.get("reason"):
+                fail(f"event {i}: shed without a reason: {e}")
+            life.setdefault(args["req"], []).append((e["name"], e["ts"]))
     open_rows = {row: d for row, d in depth.items() if d != 0}
     if open_rows:
         fail(f"unbalanced B/E on rows: {open_rows}")
+
+    # per-request lifecycle vocabulary: a truncated or mis-instrumented
+    # trace must not validate just because its rows happen to balance
+    for req, evs in sorted(life.items()):
+        seen = {n for n, _ in evs}
+        names = [n for n, _ in evs]
+        if "enqueue" not in seen:
+            fail(f"request {req}: no 'enqueue' (saw {names})")
+        if "shed" in seen and "admit" in seen:
+            fail(f"request {req}: both shed and admitted")
+        if "shed" not in seen and "admit" not in seen:
+            fail(f"request {req}: neither shed nor admitted")
+        if "shed" in seen:
+            continue  # shed requests end their lifecycle at the shed
+        if "retire" not in seen:
+            fail(f"request {req}: admitted but never retired (truncated trace?)")
+        if "prime" in seen and "join" not in seen:
+            fail(f"request {req}: primed but never joined the running batch")
+        if "join" in seen and "leave" not in seen:
+            fail(f"request {req}: joined but never left")
+        if "decode_step" in seen:
+            if "join" not in seen:
+                fail(f"request {req}: decode_step without a join")
+            first_step = min(ts for n, ts in evs if n == "decode_step")
+            join_ts = min(ts for n, ts in evs if n == "join")
+            if first_step < join_ts:
+                fail(f"request {req}: decode_step at {first_step} "
+                     f"precedes join at {join_ts}")
+
     print(
         f"validate_trace: ok — {len(events)} events, "
         f"{len(last_ts)} (pid,tid) rows, "
+        f"{len(life)} request lifecycle(s), "
         f"{doc.get('otherData', {}).get('dropped_events', 0)} dropped"
     )
     return 0
