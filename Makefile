@@ -6,7 +6,7 @@
 
 PY ?= python3
 
-.PHONY: artifacts golden build test examples bench bench-diff trace-smoke analyze-smoke tsan fmt clippy clean
+.PHONY: artifacts golden build test examples bench bench-diff trace-smoke analyze-smoke chaos-smoke tsan fmt clippy clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../rust/artifacts
@@ -27,21 +27,23 @@ examples:
 # router run, the bursty shared-prompt continuous workload, an elastic
 # shrink-grow run with its telemetry-derived accountant high-water
 # timeline, and a pinned gpt2-base-sim overlapped decode) into
-# BENCH_pr7.json + BENCH_pr8.json + BENCH_pr9.json (pr9 adds the offline
-# analyzer's `analyze` section: per-stage bubble attribution, lifecycle
-# percentiles, memory-audit drift); CI uploads all three.
+# BENCH_pr7.json + BENCH_pr8.json + BENCH_pr9.json + BENCH_pr10.json
+# (pr9 adds the offline analyzer's `analyze` section; pr10 adds the
+# `recovery` section: the same serve run under a transparent fault plan,
+# so the recovery cost — retries, injected stalls — is a tracked metric);
+# CI uploads all four.
 bench:
 	cargo run --release --example bench_trajectory
 
-# Fail-soft per-metric deltas between the PR 8 and PR 9 trajectories
+# Fail-soft per-metric deltas between the PR 9 and PR 10 trajectories
 # (advisory: a missing file prints a note instead of failing the build).
 # NOTE: one `make bench` run writes all files from the same summaries, so
 # the shared sections diff to zero by construction — the signal is the
-# PR 9-only `analyze` section (bubble_by_stage_ms, breakdown percentiles,
-# audit drift) plus whatever a previous CI run's BENCH_pr8 artifact
+# PR 10-only `recovery` section (faults fired, retries, recovery
+# overhead) plus whatever a previous CI run's BENCH_pr9 artifact
 # contributes when dropped in place.
 bench-diff:
-	$(PY) scripts/bench_diff.py BENCH_pr8.json BENCH_pr9.json
+	$(PY) scripts/bench_diff.py BENCH_pr9.json BENCH_pr10.json
 
 # Short continuous serve with the event bus enabled: exports a Chrome
 # trace and validates it (well-formed JSON, non-empty, balanced B/E pairs
@@ -63,6 +65,22 @@ analyze-smoke: build
 		--disk unthrottled --kv-cache --kv-block-tokens 2 --continuous \
 		--requests 4 --max-batch 1 --trace-out analyze_smoke.json
 	./target/release/hermes analyze analyze_smoke.json
+
+# Chaos smoke: the same short continuous serve under a fixed-seed fault
+# plan of TRANSPARENT faults only — disk errors absorbed by the bounded
+# load retry, an injected stuck medium, transient accountant refusals —
+# so every request still succeeds (`serve` exits nonzero on any
+# rejection), then `hermes analyze` gates the recorded trace: complete
+# lifecycles and zero memory-audit drift even with the fault plane
+# firing.  The destructive faults (agent panics, lane deaths) live in the
+# chaos-soak integration test, where a supervisor absorbs them.
+chaos-smoke: build
+	./target/release/hermes serve --model tiny-gpt --mode pipeload \
+		--disk unthrottled --kv-cache --kv-block-tokens 2 --continuous \
+		--requests 6 --max-batch 1 --no-device-cache \
+		--fault-plan 'seed=42;disk_error@2x2;disk_slow@3+20;acquire_fail@4x2' \
+		--trace-out chaos_smoke.json
+	./target/release/hermes analyze chaos_smoke.json
 
 # ThreadSanitizer over the concurrency-heavy test binaries (nightly-only:
 # -Zsanitizer needs -Zbuild-std so std is instrumented too).  PJRT-backed

@@ -19,18 +19,26 @@
 //!   itself is identical with the bus on — tokens don't change)
 //! * `decode_gpt2_pinned` — a pinned (`--pin-budget-mb`) gpt2-base-sim
 //!   overlapped decode (prefetch + device-resident weights)
+//! * `recovery` — the KV serve twice more with the device cache off (so
+//!   every pass streams from disk): once clean, once under a fixed-seed
+//!   transparent fault plan (disk errors absorbed by the bounded load
+//!   retry, an injected stuck medium, transient accountant refusals).
+//!   The faulted run must still serve every request; the section records
+//!   both summaries plus the fired-fault/retry counters, so the cost of
+//!   recovering is a tracked metric, not an anecdote.
 //!
 //! `BENCH_pr7.json` keeps the previous PR's layout; `BENCH_pr8.json` is
 //! the same summaries plus the telemetry-derived `mem_high_water`
 //! timeline; `BENCH_pr9.json` adds the offline analyzer's view of the
 //! elastic run (`analyze`: per-stage bubble attribution, request
-//! breakdown percentiles, memory-audit drift), so `make bench-diff`
-//! shows the new observability sections (and any perturbation they were
-//! to introduce) at a glance.
+//! breakdown percentiles, memory-audit drift); `BENCH_pr10.json` adds
+//! the `recovery` section, so `make bench-diff` shows the new
+//! fault-tolerance numbers (and any perturbation they were to introduce)
+//! at a glance.
 //!
 //! The JSON keys are the stable `serve --json` / summary keys (the decode
 //! run uses the `RunReport` keys, incl. `decode_p50_ms` / `decode_p95_ms`
-//! / `tokens_per_sec`).  CI uploads both files as build artifacts.
+//! / `tokens_per_sec`).  CI uploads the files as build artifacts.
 
 use std::time::Duration;
 
@@ -228,6 +236,35 @@ fn main() -> Result<()> {
     let (decode, _) = session.run_batch(1, 42)?;
     drop(session);
 
+    // recovery cost: the one-model KV serve with the device cache off
+    // (every pass streams from disk, keeping the disk-fault seams hot),
+    // clean vs under a fixed-seed transparent fault plan.  Every request
+    // still succeeds — `serve` fails on any rejection — so the delta
+    // between the two runs IS the price of riding out the faults.
+    let mut rec_run = kv_run.clone();
+    rec_run.device_cache = false;
+    let rec_ref_cfg = ServeConfig {
+        run: rec_run.clone(),
+        num_requests: 6,
+        max_batch: 2,
+        ..ServeConfig::default()
+    };
+    let rec_ref = serve(&engine, &rec_ref_cfg)?;
+    rec_run.fault_plan = Some("seed=42;disk_error@2x2;disk_slow@3+20;acquire_fail@4x2".into());
+    let rec_fault_cfg = ServeConfig {
+        run: rec_run,
+        num_requests: 6,
+        max_batch: 2,
+        ..ServeConfig::default()
+    };
+    let rec_fault = serve(&engine, &rec_fault_cfg)?;
+    let recovery = Value::obj()
+        .set("fault_plan", "seed=42;disk_error@2x2;disk_slow@3+20;acquire_fail@4x2")
+        .set("reference", rec_ref.to_json())
+        .set("faulted", rec_fault.to_json())
+        .set("recovery_overhead_p50_ms", rec_fault.latency.p50() - rec_ref.latency.p50())
+        .set("recovery_overhead_p95_ms", rec_fault.latency.p95() - rec_ref.latency.p95());
+
     let pr7 = Value::obj()
         .set("bench", "pr7-continuous-batching")
         .set("one_model", off.to_json())
@@ -254,11 +291,31 @@ fn main() -> Result<()> {
         .set("router_two_kv_lanes", router_two.to_json())
         .set("continuous_burst", burst_cont.to_json())
         .set("elastic_shrink_grow", elastic.to_json())
-        .set("mem_high_water", mem_high_water)
+        .set("mem_high_water", mem_high_water.clone())
         .set("analyze", analysis.to_json())
         .set("decode_gpt2_pinned", decode.to_json());
     pr9.to_file(&std::path::PathBuf::from("BENCH_pr9.json"))?;
-    println!("wrote BENCH_pr7.json + BENCH_pr8.json + BENCH_pr9.json");
+    let pr10 = Value::obj()
+        .set("bench", "pr10-fault-tolerance")
+        .set("one_model", off.to_json())
+        .set("one_model_kv", on.to_json())
+        .set("router_two_kv_lanes", router_two.to_json())
+        .set("continuous_burst", burst_cont.to_json())
+        .set("elastic_shrink_grow", elastic.to_json())
+        .set("mem_high_water", mem_high_water)
+        .set("analyze", analysis.to_json())
+        .set("recovery", recovery)
+        .set("decode_gpt2_pinned", decode.to_json());
+    pr10.to_file(&std::path::PathBuf::from("BENCH_pr10.json"))?;
+    println!("wrote BENCH_pr7.json + BENCH_pr8.json + BENCH_pr9.json + BENCH_pr10.json");
+    println!(
+        "recovery: clean p50 {:.1} ms vs faulted p50 {:.1} ms \
+         ({} faults injected, {} load retries)",
+        rec_ref.latency.p50(),
+        rec_fault.latency.p50(),
+        rec_fault.faults_injected,
+        rec_fault.load_retries,
+    );
     println!(
         "one-model p50 {:.1} ms (kv off) vs {:.1} ms (kv on, {} incremental passes); \
          elastic: {} budget steps, {} evictions, p50 {:.1} ms",

@@ -149,6 +149,22 @@ pub struct RunConfig {
     /// queues (elastic budget steps shrink this cap first, before any
     /// shared-block eviction).  Requires `continuous`; >= 1.
     pub max_active: Option<usize>,
+    /// Fault plan (`--fault-plan <file|json|spec>`): a deterministic
+    /// schedule of injected failures; see [`crate::faults::FaultPlan`].
+    pub fault_plan: Option<String>,
+    /// Pass watchdog deadline in milliseconds (`--pass-timeout-ms`): a
+    /// pass running past it is quiesced (gate shutdown) and failed through
+    /// the ordinary error-recovery path.  None = no watchdog.
+    pub pass_timeout_ms: Option<u64>,
+    /// Transient shard-load failures tolerated per stage before the pass
+    /// fails (`--load-retries`; bounded retry with deterministic backoff).
+    pub load_retries: u32,
+    /// Base backoff in milliseconds between load retries
+    /// (`--retry-backoff-ms`; exponential with deterministic jitter).
+    pub retry_backoff_ms: u64,
+    /// Lane supervisor restart cap (`--max-lane-restarts`): contained lane
+    /// deaths beyond this mark the lane dead and shed its requests.
+    pub max_lane_restarts: u32,
 }
 
 impl RunConfig {
@@ -213,6 +229,13 @@ impl RunConfig {
                 anyhow::bail!("--slo-ms must be a positive number of milliseconds (got {slo})");
             }
         }
+        if let Some(0) = self.pass_timeout_ms {
+            anyhow::bail!("--pass-timeout-ms must be >= 1 (got 0)");
+        }
+        if let Some(plan) = &self.fault_plan {
+            // parse errors surface at config time, not mid-serve
+            crate::faults::FaultPlan::from_arg(plan)?;
+        }
         if self.prefetch_depth > 0 && self.mode != Mode::PipeLoad {
             anyhow::bail!(
                 "--prefetch-depth needs pipeload mode (the other modes keep \
@@ -265,6 +288,11 @@ impl Default for RunConfig {
             continuous: false,
             slo_ms: None,
             max_active: None,
+            fault_plan: None,
+            pass_timeout_ms: None,
+            load_retries: 2,
+            retry_backoff_ms: 1,
+            max_lane_restarts: 2,
         }
     }
 }
@@ -385,6 +413,16 @@ mod tests {
             ..ok.clone()
         };
         assert!(cont_full.validate(&p).is_ok());
+
+        // fault plane knobs
+        let wd_zero = RunConfig { pass_timeout_ms: Some(0), ..ok.clone() };
+        let e = wd_zero.validate(&p).unwrap_err().to_string();
+        assert!(e.contains("--pass-timeout-ms"), "{e}");
+        let bad_plan = RunConfig { fault_plan: Some("explode@1".into()), ..ok.clone() };
+        assert!(bad_plan.validate(&p).is_err());
+        let good_plan =
+            RunConfig { fault_plan: Some("disk_error@2x2".into()), ..ok.clone() };
+        assert!(good_plan.validate(&p).is_ok());
 
         let bad_batch = RunConfig { batch: 3, ..ok.clone() };
         let e = bad_batch.validate(&p).unwrap_err().to_string();

@@ -25,6 +25,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::faults::{FaultInjector, FaultKind};
+
 /// Simulated storage medium parameters.
 #[derive(Debug, Clone)]
 pub struct DiskProfile {
@@ -145,6 +147,9 @@ pub struct Disk {
     pub profile: DiskProfile,
     bucket: Option<Arc<TokenBucket>>,
     bytes_read: Arc<Mutex<u64>>,
+    /// fault-injection probe (`--fault-plan`): `disk_error` makes `open`
+    /// fail with a transient error, `disk_slow` stalls it first
+    faults: FaultInjector,
 }
 
 impl Disk {
@@ -154,7 +159,17 @@ impl Disk {
         } else {
             None
         };
-        Disk { profile, bucket, bytes_read: Arc::new(Mutex::new(0)) }
+        Disk {
+            profile,
+            bucket,
+            bytes_read: Arc::new(Mutex::new(0)),
+            faults: FaultInjector::off(),
+        }
+    }
+
+    /// Attach a fault injector; affects this handle and clones made after.
+    pub fn set_faults(&mut self, faults: FaultInjector) {
+        self.faults = faults;
     }
 
     pub fn preset(name: &str) -> Result<Disk> {
@@ -179,6 +194,14 @@ impl Disk {
 
     /// Open a file as one throttled stream.
     pub fn open(&self, path: &Path) -> Result<ThrottledReader> {
+        if let Some(ms) = self.faults.fire_ms(FaultKind::DiskSlow) {
+            // injected stuck medium: the read eventually completes, but a
+            // hung pass should trip the watchdog first
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        if self.faults.fire(FaultKind::DiskError) {
+            bail!("injected transient disk error opening {}", path.display());
+        }
         if !self.profile.open_latency.is_zero() {
             std::thread::sleep(self.profile.open_latency);
         }

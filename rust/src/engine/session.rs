@@ -66,7 +66,7 @@
 //! [`Runtime::prepare`]: crate::runtime::Runtime::prepare
 //! [`assignment`]: crate::pipeload::assignment
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -76,6 +76,7 @@ use crate::baseline::ResidentModel;
 use crate::config::{Mode, RunConfig};
 use crate::diskio::Disk;
 use crate::elastic::{BudgetController, BudgetEpoch, ElasticStats, PressureTrace};
+use crate::faults::{FaultInjector, FaultStatsSnapshot, RetryPolicy, Watchdog};
 use crate::kvcache::{KvPool, KvPoolStats, KvSeq, DEFAULT_BLOCK_TOKENS};
 use crate::memory::MemoryAccountant;
 use crate::metrics::{LatencyRecorder, RunReport};
@@ -173,6 +174,10 @@ pub struct Session<'e> {
     /// structured event bus (off by default: every emit site is behind one
     /// relaxed atomic load, so an untraced run pays ~nothing)
     telemetry: Telemetry,
+    /// fault probes + recovery counters (off by default; [`Session::set_faults`])
+    faults: FaultInjector,
+    /// per-pass hang monitor, present when `cfg.pass_timeout_ms` is set
+    watchdog: Option<Watchdog>,
 }
 
 /// Options for opening a [`Session`] — sugar methods on [`Engine`] cover
@@ -273,6 +278,7 @@ pub struct DecodeState {
     elastic0: ElasticStats,
     prefetch0: PrefetchStats,
     spawns_avoided0: u64,
+    faults0: FaultStatsSnapshot,
 }
 
 impl DecodeState {
@@ -362,6 +368,11 @@ impl<'e> Session<'e> {
         let mut ctx = ExecCtx::new(&engine.runtime, &cfg.profile, &engine.paths.weights, disk)?;
         ctx.tracer = tracer.clone();
         ctx.batch = cfg.batch;
+        ctx.retry = RetryPolicy {
+            max_retries: cfg.load_retries,
+            base_backoff_ms: cfg.retry_backoff_ms.max(1),
+            seed: 0,
+        };
         // compile off the measured path (the paper's pre-run) — once
         let prepared_entries = engine.runtime.prepare(profile)?;
 
@@ -427,6 +438,8 @@ impl<'e> Session<'e> {
             epochs: Vec::new(),
             elastic_totals: ElasticStats::default(),
             telemetry: Telemetry::off(),
+            faults: FaultInjector::off(),
+            watchdog: cfg.pass_timeout_ms.map(|_| Watchdog::new()),
         })
     }
 
@@ -442,7 +455,37 @@ impl<'e> Session<'e> {
         if let Some(p) = &self.kv_pool {
             p.set_telemetry(t.clone());
         }
+        self.faults.set_telemetry(t.clone());
         self.telemetry = t;
+    }
+
+    /// Attach a fault injector: probes thread through the disk stream, the
+    /// loading agents, and (for sessions that own their accountant) the
+    /// memory admissions.  Shared-accountant fleets arm the accountant once
+    /// at the router instead, so lane-scoped probes stay unambiguous.
+    /// Call after [`Session::set_telemetry`] or before — either order wires
+    /// fired faults to the session's bus.
+    pub fn set_faults(&mut self, f: FaultInjector) {
+        f.set_telemetry(self.telemetry.clone());
+        if let Some(seed) = f.plan_seed() {
+            self.ctx.retry.seed = seed;
+        }
+        self.ctx.faults = f.clone();
+        self.ctx.disk.set_faults(f.clone());
+        if self.owns_accountant {
+            self.accountant.set_faults(f.clone());
+        }
+        self.faults = f;
+    }
+
+    /// This session's fault injector (probe/stat handle).
+    pub fn faults(&self) -> &FaultInjector {
+        &self.faults
+    }
+
+    /// One coherent read of the fault/recovery counters.
+    pub fn fault_stats(&self) -> FaultStatsSnapshot {
+        self.faults.snapshot()
     }
 
     /// Paged KV pool construction: only when the extension is on, the mode
@@ -984,6 +1027,7 @@ impl<'e> Session<'e> {
             elastic0: self.elastic_totals,
             prefetch0: self.prefetch_stats(),
             spawns_avoided0: self.pool_stats().spawns_avoided(),
+            faults0: self.faults.snapshot(),
         }
     }
 
@@ -1140,6 +1184,7 @@ impl<'e> Session<'e> {
             elastic0,
             prefetch0,
             spawns_avoided0,
+            faults0,
             ..
         } = st;
         // request over: blocks go back to the budget here
@@ -1149,6 +1194,7 @@ impl<'e> Session<'e> {
         self.kv_recompute_total += kv_rec;
         let prefetch1 = self.prefetch_stats();
         let kv_stats1 = self.kv_pool_stats();
+        let faults1 = self.faults.snapshot();
         let tokens_per_sec = if token_lat.is_empty() {
             0.0
         } else {
@@ -1185,6 +1231,11 @@ impl<'e> Session<'e> {
             decode_p50_ms: token_lat.p50(),
             decode_p95_ms: token_lat.p95(),
             tokens_per_sec,
+            faults_injected: faults1.faults_injected.saturating_sub(faults0.faults_injected),
+            load_retries: faults1.load_retries.saturating_sub(faults0.load_retries),
+            passes_timed_out: faults1
+                .passes_timed_out
+                .saturating_sub(faults0.passes_timed_out),
         };
         head.truncate(16);
         (report, RunOutput { generated, generated_rows, head_sample: head })
@@ -1216,6 +1267,7 @@ impl<'e> Session<'e> {
         // every attempted pass is a fresh admission epoch: stragglers from
         // a failed pass error out as stale instead of corrupting the order
         self.pass_epoch += 1;
+        self.faults.tick_pass();
         self.gate.begin_pass(self.pass_epoch);
         let opts = self.opts.as_ref().expect("pass() requires a pipelined mode");
         let pool = self.pool.as_ref().expect("pipelined sessions own a worker pool");
@@ -1252,7 +1304,46 @@ impl<'e> Session<'e> {
         if tel_on {
             self.telemetry.begin("pass", worker::DRIVER, EvArgs::pass(self.pass_epoch));
         }
-        let r = run_pass_mode(&self.ctx, opts, &env, input, mode);
+        // Pass watchdog: if this pass hangs past its deadline the monitor
+        // shuts the gate down, which errors out every parked admission and
+        // pending load — the pass then fails through the ordinary error
+        // path below and the NEXT pass rearms everything (`begin_pass`
+        // clears the gate, recovery revives the accountant).
+        let wd_guard = match (&self.watchdog, self.cfg.pass_timeout_ms) {
+            (Some(wd), Some(ms)) => {
+                let gate = self.gate.clone();
+                let stats = self.faults.stats().clone();
+                let tel = self.telemetry.clone();
+                let epoch = self.pass_epoch;
+                Some(wd.arm(Duration::from_millis(ms), move || {
+                    stats.note_pass_timeout();
+                    tel.instant(
+                        "pass_timeout",
+                        worker::DRIVER,
+                        EvArgs::pass(epoch).with_reason("watchdog"),
+                    );
+                    gate.shutdown();
+                }))
+            }
+            _ => None,
+        };
+        let mut r = run_pass_mode(&self.ctx, opts, &env, input, mode);
+        let timed_out = wd_guard.as_ref().is_some_and(|g| g.expired());
+        drop(wd_guard); // disarm before recovery work (it has no deadline)
+        if timed_out {
+            let msg = format!(
+                "pass {} exceeded its {} ms watchdog deadline",
+                self.pass_epoch,
+                self.cfg.pass_timeout_ms.unwrap_or(0)
+            );
+            r = match r {
+                // raced to completion: the pass finished as the quiesce
+                // landed, but the gate/accountant are already torn down —
+                // fail it so recovery below leaves clean state
+                Ok(_) => Err(anyhow::anyhow!("{msg} (completed during quiesce)")),
+                Err(e) => Err(e.context(msg)),
+            };
+        }
         if tel_on {
             self.telemetry.end("pass", worker::DRIVER);
             // per-pass accountant high-water sample (counter track in the
@@ -1265,55 +1356,91 @@ impl<'e> Session<'e> {
             );
         }
         if r.is_err() {
-            // speculative loads may still be mutating the accountant and
-            // the pass ledger; wait them out before draining either
-            self.prefetch_group.wait_idle();
-            if self.owns_accountant {
-                // A failed pass can leave in-flight bytes accounted; drop
-                // any pins, speculative loads, device copies, and cached
-                // KV, drain the pass ledger (so its balance stays in sync
-                // with the accountant), then restart the accounting
-                // wholesale.
-                if let Some(c) = &self.cache {
-                    c.clear();
-                }
-                if let Some(b) = &self.prefetch {
-                    b.clear();
-                }
-                if let Some(d) = &self.device {
-                    d.ledger().clear();
-                    d.sweep();
-                }
-                if let Some(p) = &self.kv_pool {
-                    p.invalidate_all();
-                }
-                self.gate.ledger().drain();
-                self.accountant.reset();
-            } else {
-                // Shared accountant: other lanes' charges are live in it —
-                // possibly CHANGING right now (concurrent lanes), so no
-                // snapshot arithmetic can be exact.  The pass ledger makes
-                // recovery local instead: drain() frees exactly the bytes
-                // THIS pass still holds (admitted-but-unfreed loads,
-                // activation transients, adopted takes).  Durable stores —
-                // pins, prefetched shards, device copies, ours and other
-                // lanes' alike — were never the pass's charge and stay
-                // resident.  Own KV sequences are invalidated: a failed
-                // pass may leave one half-written, and its blocks are
-                // pool-accounted (store-owned), not ledger-charged.
-                if let Some(p) = &self.kv_pool {
-                    p.invalidate_all();
-                }
-                if let Some(d) = &self.device {
-                    d.sweep(); // drop buffers the chain evicted meanwhile
-                }
-                self.gate.ledger().drain();
-                self.accountant.revive();
-            }
+            self.recover_after_abort();
         } else {
             self.passes_run += 1;
         }
         r
+    }
+
+    /// Put the session's accounting back into a runnable state after an
+    /// aborted pass — a pass error, a watchdog quiesce, or a contained lane
+    /// panic (the lane supervisor's restart primitive).  Safe to call when
+    /// nothing is wrong; the next pass proceeds normally either way.
+    pub fn recover_after_abort(&mut self) {
+        // speculative loads may still be mutating the accountant and
+        // the pass ledger; wait them out before draining either
+        self.prefetch_group.wait_idle();
+        if self.owns_accountant {
+            // A failed pass can leave in-flight bytes accounted; drop
+            // any pins, speculative loads, device copies, and cached
+            // KV, drain the pass ledger (so its balance stays in sync
+            // with the accountant), then restart the accounting
+            // wholesale.
+            if let Some(c) = &self.cache {
+                c.clear();
+            }
+            if let Some(b) = &self.prefetch {
+                b.clear();
+            }
+            if let Some(d) = &self.device {
+                d.ledger().clear();
+                d.sweep();
+            }
+            if let Some(p) = &self.kv_pool {
+                p.invalidate_all();
+            }
+            self.gate.ledger().drain();
+            self.accountant.reset();
+        } else {
+            // Shared accountant: other lanes' charges are live in it —
+            // possibly CHANGING right now (concurrent lanes), so no
+            // snapshot arithmetic can be exact.  The pass ledger makes
+            // recovery local instead: drain() frees exactly the bytes
+            // THIS pass still holds (admitted-but-unfreed loads,
+            // activation transients, adopted takes).  Durable stores —
+            // pins, prefetched shards, device copies, ours and other
+            // lanes' alike — were never the pass's charge and stay
+            // resident.  Own KV sequences are invalidated: a failed
+            // pass may leave one half-written, and its blocks are
+            // pool-accounted (store-owned), not ledger-charged.
+            if let Some(p) = &self.kv_pool {
+                p.invalidate_all();
+            }
+            if let Some(d) = &self.device {
+                d.sweep(); // drop buffers the chain evicted meanwhile
+            }
+            self.gate.ledger().drain();
+            self.accountant.revive();
+        }
+    }
+
+    /// Return every byte this session still accounts — pins, parked
+    /// prefetch shards, device copies, KV blocks, the baseline-resident
+    /// model, and any residual pass-ledger balance — to the accountant.
+    /// Serving
+    /// loops call this at lane/router shutdown so a shared accountant
+    /// drains to exactly zero once every lane has released (the chaos
+    /// soak's no-leak invariant).
+    pub fn release_all(&mut self) {
+        self.prefetch_group.wait_idle();
+        if let Some(c) = &self.cache {
+            c.drain(&self.accountant);
+        }
+        if let Some(b) = &self.prefetch {
+            b.drain(&self.accountant);
+        }
+        if let Some(d) = &self.device {
+            d.ledger().drain(&self.accountant);
+            d.sweep();
+        }
+        if let Some(p) = &self.kv_pool {
+            p.invalidate_all();
+        }
+        if let Some(m) = self.resident.take() {
+            self.accountant.free(m.bytes);
+        }
+        self.gate.ledger().drain();
     }
 
     /// Baseline mode: load the whole model once per session, then run

@@ -1,0 +1,757 @@
+//! Deterministic fault-injection plane + the recovery primitives it proves.
+//!
+//! Edge deployments fail constantly — slow or flaky storage, memory
+//! pressure spikes, worker churn, clients vanishing mid-request — and every
+//! recovery path that is only exercised by accident is a recovery path that
+//! does not work.  This module makes failure a first-class, *reproducible*
+//! input:
+//!
+//! * [`FaultPlan`] — a seeded, declarative schedule of faults (`--fault-plan
+//!   <file|spec>`): JSON steps like `{"at_pass": 3, "lane": 1, "kind":
+//!   "disk_error", "count": 2}` or the compact inline spec
+//!   `seed=7;disk_error@3x2:1;agent_panic@5`.
+//! * [`FaultInjector`] — the runtime half, threaded through the natural
+//!   seams (disk opens, loader agents, lane executors, accountant
+//!   admissions, TCP connections).  Cloning is cheap; a disabled injector
+//!   costs one branch per probe.  Fired faults emit `fault_injected`
+//!   telemetry instants tagged with the fault kind.
+//! * [`FaultStats`] — shared atomic counters (`faults_injected`,
+//!   `load_retries`, `passes_timed_out`, `lane_restarts`, `requeued`) that
+//!   flow through `RunReport` / `RouterSummary` / `ServeSummary` /
+//!   Prometheus.
+//! * [`RetryPolicy`] — bounded retry with deterministic jittered backoff
+//!   for transient load failures (same seed → same schedule).
+//! * [`Watchdog`] — a per-pass timeout: if a pass hangs past its deadline
+//!   the watchdog runs a caller-supplied quiesce action (in practice
+//!   `OrderedGate::shutdown`, which unblocks every parked admission as an
+//!   error and drives the existing failed-pass drain).
+//!
+//! Determinism contract: fault firing depends only on the plan, the pass
+//! clock, and call order — never on wall time — so a seeded chaos run is
+//! replayable and the chaos soak can assert bit-identical tokens for every
+//! request that survives.
+#![warn(clippy::unwrap_used)]
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::telemetry::{worker, EvArgs, Telemetry};
+use crate::util::json::Value;
+
+/// What to break.  Each kind maps to one injection seam.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `Disk::open` fails with a transient I/O error (retryable).
+    DiskError,
+    /// `Disk::open` sleeps `ms` first (a stuck medium; trips the watchdog).
+    DiskSlow,
+    /// A loading agent panics at task start (contained by `catch_unwind`).
+    AgentPanic,
+    /// A lane executor dies mid-serve (contained by the lane supervisor).
+    LaneDeath,
+    /// A memory-accountant admission is transiently refused once.
+    AcquireFail,
+    /// The TCP front-end drops the client connection.
+    ConnDrop,
+}
+
+impl FaultKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultKind::DiskError => "disk_error",
+            FaultKind::DiskSlow => "disk_slow",
+            FaultKind::AgentPanic => "agent_panic",
+            FaultKind::LaneDeath => "lane_death",
+            FaultKind::AcquireFail => "acquire_fail",
+            FaultKind::ConnDrop => "conn_drop",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FaultKind> {
+        Ok(match s {
+            "disk_error" => FaultKind::DiskError,
+            "disk_slow" => FaultKind::DiskSlow,
+            "agent_panic" => FaultKind::AgentPanic,
+            "lane_death" => FaultKind::LaneDeath,
+            "acquire_fail" => FaultKind::AcquireFail,
+            "conn_drop" => FaultKind::ConnDrop,
+            other => bail!(
+                "unknown fault kind '{other}' (disk_error, disk_slow, agent_panic, \
+                 lane_death, acquire_fail, conn_drop)"
+            ),
+        })
+    }
+}
+
+/// One scheduled fault: fire `kind` up to `count` times once the global
+/// pass clock reaches `at_pass`, optionally restricted to one lane.
+#[derive(Debug, Clone)]
+pub struct FaultStep {
+    pub at_pass: u64,
+    pub lane: Option<u32>,
+    pub kind: FaultKind,
+    pub count: u64,
+    /// extra milliseconds for `disk_slow`
+    pub ms: u64,
+}
+
+/// A declarative fault schedule; see the module docs for both syntaxes.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub steps: Vec<FaultStep>,
+}
+
+impl FaultPlan {
+    /// Parse `--fault-plan`'s argument: a path to a JSON plan file, inline
+    /// JSON (starts with `{`), or the compact spec
+    /// `seed=N;kind@pass[xcount][:lane][+ms];...`.
+    pub fn from_arg(arg: &str) -> Result<FaultPlan> {
+        let arg = arg.trim();
+        if arg.starts_with('{') {
+            return FaultPlan::from_json(&Value::parse(arg).context("inline fault plan")?);
+        }
+        let path = std::path::Path::new(arg);
+        if path.exists() {
+            return FaultPlan::from_json(&Value::from_file(path)?);
+        }
+        FaultPlan::from_spec(arg)
+    }
+
+    /// `{"seed": 7, "steps": [{"at_pass":3,"kind":"disk_error","count":2,
+    /// "lane":1,"ms":0}, ...]}` — `seed`, `count`, `lane`, `ms` optional.
+    pub fn from_json(v: &Value) -> Result<FaultPlan> {
+        let seed = match v.get("seed") {
+            Some(s) => s.as_f64()? as u64,
+            None => 0,
+        };
+        let mut steps = Vec::new();
+        for (i, s) in v.req("steps")?.as_arr()?.iter().enumerate() {
+            let ctx = || format!("fault step {i}");
+            let kind = FaultKind::parse(s.req("kind").with_context(ctx)?.as_str()?)?;
+            let at_pass = match s.get("at_pass") {
+                Some(p) => p.as_f64()? as u64,
+                None => 0,
+            };
+            let count = match s.get("count") {
+                Some(c) => (c.as_f64()? as u64).max(1),
+                None => 1,
+            };
+            let lane = match s.get("lane") {
+                Some(Value::Null) | None => None,
+                Some(l) => Some(l.as_f64()? as u32),
+            };
+            let ms = match s.get("ms") {
+                Some(m) => m.as_f64()? as u64,
+                None => 0,
+            };
+            steps.push(FaultStep { at_pass, lane, kind, count, ms });
+        }
+        Ok(FaultPlan { seed, steps })
+    }
+
+    /// Compact spec: `;`-separated items, each `seed=N` or
+    /// `kind@pass[xcount][:lane][+ms]` — e.g.
+    /// `seed=7;disk_error@3x2;disk_slow@2+50;lane_death@6:1`.
+    pub fn from_spec(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for item in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            if let Some(seed) = item.strip_prefix("seed=") {
+                plan.seed = seed.parse().with_context(|| format!("seed in '{item}'"))?;
+                continue;
+            }
+            let (kind_s, rest) = item
+                .split_once('@')
+                .ok_or_else(|| anyhow!("fault spec item '{item}' needs kind@pass"))?;
+            let kind = FaultKind::parse(kind_s)?;
+            let mut rest = rest.to_string();
+            let mut ms = 0u64;
+            if let Some((head, ms_s)) = rest.split_once('+') {
+                ms = ms_s.parse().with_context(|| format!("+ms in '{item}'"))?;
+                rest = head.to_string();
+            }
+            let mut lane = None;
+            if let Some((head, lane_s)) = rest.split_once(':') {
+                lane = Some(lane_s.parse().with_context(|| format!(":lane in '{item}'"))?);
+                rest = head.to_string();
+            }
+            let mut count = 1u64;
+            if let Some((head, count_s)) = rest.split_once('x') {
+                count = count_s.parse().with_context(|| format!("xcount in '{item}'"))?;
+                rest = head.to_string();
+            }
+            let at_pass: u64 = rest.parse().with_context(|| format!("pass in '{item}'"))?;
+            plan.steps.push(FaultStep { at_pass, lane, kind, count: count.max(1), ms });
+        }
+        if plan.steps.is_empty() {
+            bail!("fault plan '{spec}' schedules no faults");
+        }
+        Ok(plan)
+    }
+}
+
+/// Shared atomic fault/recovery counters; clone freely (Arc inside).
+/// Always live — retries and restarts are counted even when no fault plan
+/// is loaded (real disks fail too).
+#[derive(Debug, Clone, Default)]
+pub struct FaultStats {
+    inner: Arc<StatsInner>,
+}
+
+#[derive(Debug, Default)]
+struct StatsInner {
+    faults_injected: AtomicU64,
+    load_retries: AtomicU64,
+    passes_timed_out: AtomicU64,
+    lane_restarts: AtomicU64,
+    requeued: AtomicU64,
+}
+
+/// One coherent read of [`FaultStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStatsSnapshot {
+    pub faults_injected: u64,
+    pub load_retries: u64,
+    pub passes_timed_out: u64,
+    pub lane_restarts: u64,
+    pub requeued: u64,
+}
+
+impl FaultStats {
+    pub fn note_injected(&self) {
+        self.inner.faults_injected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_load_retry(&self) {
+        self.inner.load_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_pass_timeout(&self) {
+        self.inner.passes_timed_out.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_lane_restart(&self) {
+        self.inner.lane_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_requeued(&self) {
+        self.inner.requeued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> FaultStatsSnapshot {
+        FaultStatsSnapshot {
+            faults_injected: self.inner.faults_injected.load(Ordering::Relaxed),
+            load_retries: self.inner.load_retries.load(Ordering::Relaxed),
+            passes_timed_out: self.inner.passes_timed_out.load(Ordering::Relaxed),
+            lane_restarts: self.inner.lane_restarts.load(Ordering::Relaxed),
+            requeued: self.inner.requeued.load(Ordering::Relaxed),
+        }
+    }
+}
+
+struct StepState {
+    step: FaultStep,
+    remaining: AtomicU64,
+}
+
+struct PlanInner {
+    seed: u64,
+    steps: Vec<StepState>,
+    /// global pass clock; ticked by sessions at pass boundaries
+    pass: AtomicU64,
+    armed: AtomicBool,
+    telemetry: Mutex<Telemetry>,
+}
+
+/// The runtime injector: probe sites call [`FaultInjector::fire`] and get
+/// `true` when the plan says this site, on this lane, breaks *now*.
+///
+/// `off()` (and `Default`) build a disabled injector whose probes are one
+/// `Option` branch — safe to leave on every hot path.  Counters
+/// ([`FaultInjector::stats`]) are live either way.
+#[derive(Clone, Default)]
+pub struct FaultInjector {
+    plan: Option<Arc<PlanInner>>,
+    stats: FaultStats,
+    lane: Option<u32>,
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.plan {
+            None => write!(f, "FaultInjector(off)"),
+            Some(p) => write!(
+                f,
+                "FaultInjector({} steps, pass {}, lane {:?})",
+                p.steps.len(),
+                p.pass.load(Ordering::Relaxed),
+                self.lane
+            ),
+        }
+    }
+}
+
+impl FaultInjector {
+    /// No plan: every probe is false, counters still work.
+    pub fn off() -> FaultInjector {
+        FaultInjector::default()
+    }
+
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let steps = plan
+            .steps
+            .into_iter()
+            .map(|step| StepState { remaining: AtomicU64::new(step.count), step })
+            .collect();
+        FaultInjector {
+            plan: Some(Arc::new(PlanInner {
+                seed: plan.seed,
+                steps,
+                pass: AtomicU64::new(0),
+                armed: AtomicBool::new(true),
+                telemetry: Mutex::new(Telemetry::off()),
+            })),
+            stats: FaultStats::default(),
+            lane: None,
+        }
+    }
+
+    /// The plan's seed (None when no plan is loaded) — consumers derive
+    /// their deterministic jitter from it (e.g. [`RetryPolicy::seed`]).
+    pub fn plan_seed(&self) -> Option<u64> {
+        self.plan.as_ref().map(|p| p.seed)
+    }
+
+    /// Parse-and-build straight from the `--fault-plan` argument.
+    pub fn from_arg(arg: &str) -> Result<FaultInjector> {
+        Ok(FaultInjector::new(FaultPlan::from_arg(arg)?))
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.plan.is_some()
+    }
+
+    /// Tag a clone with the lane it probes for (mirrors
+    /// `Telemetry::with_lane`); lane-scoped plan steps match against it.
+    pub fn with_lane(&self, lane: u32) -> FaultInjector {
+        FaultInjector { plan: self.plan.clone(), stats: self.stats.clone(), lane: Some(lane) }
+    }
+
+    /// Attach the telemetry bus fired faults report to.
+    pub fn set_telemetry(&self, t: Telemetry) {
+        if let Some(p) = &self.plan {
+            *p.telemetry.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = t;
+        }
+    }
+
+    /// Advance the global pass clock (sessions call this per pass).
+    pub fn tick_pass(&self) -> u64 {
+        match &self.plan {
+            Some(p) => p.pass.fetch_add(1, Ordering::Relaxed) + 1,
+            None => 0,
+        }
+    }
+
+    /// Stop all further firing (used by tests and terminal recovery).
+    pub fn disarm(&self) {
+        if let Some(p) = &self.plan {
+            p.armed.store(false, Ordering::Relaxed);
+        }
+    }
+
+    /// Should `kind` break at this probe?  Consumes one count on match.
+    pub fn fire(&self, kind: FaultKind) -> bool {
+        self.fire_ms(kind).is_some()
+    }
+
+    /// Like [`FaultInjector::fire`], returning the step's `ms` payload
+    /// (the injected delay for `disk_slow`).
+    pub fn fire_ms(&self, kind: FaultKind) -> Option<u64> {
+        let p = self.plan.as_ref()?;
+        if !p.armed.load(Ordering::Relaxed) {
+            return None;
+        }
+        let pass = p.pass.load(Ordering::Relaxed);
+        for st in &p.steps {
+            if st.step.kind != kind || pass < st.step.at_pass {
+                continue;
+            }
+            if let (Some(want), Some(have)) = (st.step.lane, self.lane) {
+                if want != have {
+                    continue;
+                }
+            } else if st.step.lane.is_some() && self.lane.is_none() {
+                continue;
+            }
+            // consume one count; CAS loop so concurrent probes never
+            // overfire a step
+            let mut rem = st.remaining.load(Ordering::Relaxed);
+            loop {
+                if rem == 0 {
+                    break;
+                }
+                match st.remaining.compare_exchange(
+                    rem,
+                    rem - 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        self.stats.note_injected();
+                        let tel = p
+                            .telemetry
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner)
+                            .clone();
+                        let tel = match self.lane {
+                            Some(l) => tel.with_lane(l),
+                            None => tel,
+                        };
+                        tel.instant(
+                            "fault_injected",
+                            worker::DRIVER,
+                            EvArgs::pass(pass).with_reason(kind.as_str()),
+                        );
+                        return Some(st.step.ms);
+                    }
+                    Err(now) => rem = now,
+                }
+            }
+        }
+        None
+    }
+
+    pub fn stats(&self) -> &FaultStats {
+        &self.stats
+    }
+
+    pub fn snapshot(&self) -> FaultStatsSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+/// Bounded retry with deterministic jittered backoff.  `attempt` is
+/// 1-based; the jitter is a pure function of `(seed, salt, attempt)` so a
+/// seeded run replays the exact same schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub max_retries: u32,
+    pub base_backoff_ms: u64,
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_retries: 2, base_backoff_ms: 1, seed: 0 }
+    }
+}
+
+/// splitmix64 — tiny, deterministic, good enough for jitter.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+impl RetryPolicy {
+    /// Exponential base with deterministic jitter in `[0, base)`.
+    pub fn backoff_ms(&self, salt: u64, attempt: u32) -> u64 {
+        let base = self.base_backoff_ms.max(1);
+        let exp = base.saturating_mul(1u64 << attempt.min(16));
+        let jitter = splitmix64(self.seed ^ salt.rotate_left(17) ^ u64::from(attempt)) % base;
+        exp + jitter
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass watchdog
+// ---------------------------------------------------------------------------
+
+type WdAction = Box<dyn FnOnce() + Send>;
+
+struct WdState {
+    deadline: Option<Instant>,
+    action: Option<WdAction>,
+    gen: u64,
+    fired: u64,
+    quit: bool,
+}
+
+struct WdShared {
+    state: Mutex<WdState>,
+    cv: Condvar,
+}
+
+/// One persistent monitor thread; [`Watchdog::arm`] returns a guard that
+/// disarms on drop.  If the deadline passes while armed, the action runs
+/// exactly once on the monitor thread.
+pub struct Watchdog {
+    shared: Arc<WdShared>,
+    monitor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Watchdog {
+    pub fn new() -> Watchdog {
+        let shared = Arc::new(WdShared {
+            state: Mutex::new(WdState {
+                deadline: None,
+                action: None,
+                gen: 0,
+                fired: 0,
+                quit: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let s2 = shared.clone();
+        let monitor = std::thread::Builder::new()
+            .name("hermes-watchdog".into())
+            .spawn(move || Watchdog::monitor(&s2))
+            .ok();
+        Watchdog { shared, monitor }
+    }
+
+    fn monitor(sh: &WdShared) {
+        let mut st = sh.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        loop {
+            if st.quit {
+                return;
+            }
+            match st.deadline {
+                None => {
+                    st = sh
+                        .cv
+                        .wait(st)
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                }
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now < dl {
+                        let (ns, _) = sh
+                            .cv
+                            .wait_timeout(st, dl - now)
+                            .unwrap_or_else(std::sync::PoisonError::into_inner);
+                        st = ns;
+                        continue;
+                    }
+                    // expired while still armed: fire
+                    let action = st.action.take();
+                    st.deadline = None;
+                    st.fired += 1;
+                    drop(st);
+                    if let Some(a) = action {
+                        a();
+                    }
+                    st = sh.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                }
+            }
+        }
+    }
+
+    /// Arm for one pass.  Dropping the guard (pass finished) disarms; if
+    /// the timeout elapses first, `action` runs on the monitor thread.
+    pub fn arm(&self, timeout: Duration, action: impl FnOnce() + Send + 'static) -> WatchdogGuard {
+        let mut st = self
+            .shared
+            .state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        st.gen += 1;
+        st.deadline = Some(Instant::now() + timeout);
+        st.action = Some(Box::new(action));
+        let gen = st.gen;
+        drop(st);
+        self.shared.cv.notify_all();
+        WatchdogGuard { shared: self.shared.clone(), gen }
+    }
+
+    /// How many times the watchdog has ever fired.
+    pub fn fired(&self) -> u64 {
+        self.shared
+            .state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .fired
+    }
+}
+
+impl Default for Watchdog {
+    fn default() -> Watchdog {
+        Watchdog::new()
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        {
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            st.quit = true;
+            st.deadline = None;
+            st.action = None;
+        }
+        self.shared.cv.notify_all();
+        if let Some(m) = self.monitor.take() {
+            let _ = m.join();
+        }
+    }
+}
+
+/// Disarms its [`Watchdog`] on drop (if that arm is still the active one).
+pub struct WatchdogGuard {
+    shared: Arc<WdShared>,
+    gen: u64,
+}
+
+impl WatchdogGuard {
+    /// Did this arm's timeout fire before the pass completed?
+    pub fn expired(&self) -> bool {
+        let st = self
+            .shared
+            .state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        st.gen == self.gen && st.deadline.is_none() && st.action.is_none() && st.fired > 0
+    }
+}
+
+impl Drop for WatchdogGuard {
+    fn drop(&mut self) {
+        let mut st = self
+            .shared
+            .state
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        if st.gen == self.gen {
+            st.deadline = None;
+            st.action = None;
+        }
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn plan_from_json_and_spec_agree() {
+        let j = FaultPlan::from_arg(
+            r#"{"seed": 7, "steps": [
+                {"at_pass": 3, "kind": "disk_error", "count": 2, "lane": 1},
+                {"at_pass": 2, "kind": "disk_slow", "ms": 50},
+                {"at_pass": 6, "kind": "lane_death"}
+            ]}"#,
+        )
+        .expect("json plan");
+        let s = FaultPlan::from_arg("seed=7;disk_error@3x2:1;disk_slow@2+50;lane_death@6")
+            .expect("spec plan");
+        assert_eq!(j.seed, s.seed);
+        assert_eq!(j.steps.len(), s.steps.len());
+        for (a, b) in j.steps.iter().zip(&s.steps) {
+            assert_eq!(a.at_pass, b.at_pass);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.count, b.count);
+            assert_eq!(a.lane, b.lane);
+            assert_eq!(a.ms, b.ms);
+        }
+    }
+
+    #[test]
+    fn bad_plans_rejected() {
+        assert!(FaultPlan::from_arg("seed=1").is_err(), "no steps");
+        assert!(FaultPlan::from_arg("explode@1").is_err(), "unknown kind");
+        assert!(FaultPlan::from_arg(r#"{"steps": [{"kind": "nope"}]}"#).is_err());
+        assert!(FaultPlan::from_arg("disk_error").is_err(), "missing @pass");
+    }
+
+    #[test]
+    fn fire_respects_pass_lane_and_count() {
+        let inj = FaultInjector::from_arg("disk_error@2x2;lane_death@1:1").expect("plan");
+        // pass clock at 0: nothing fires
+        assert!(!inj.fire(FaultKind::DiskError));
+        inj.tick_pass();
+        inj.tick_pass();
+        // lane steps need a lane-tagged probe
+        assert!(!inj.fire(FaultKind::LaneDeath), "un-laned probe must not match lane step");
+        assert!(!inj.with_lane(0).fire(FaultKind::LaneDeath), "wrong lane");
+        assert!(inj.with_lane(1).fire(FaultKind::LaneDeath));
+        assert!(!inj.with_lane(1).fire(FaultKind::LaneDeath), "count exhausted");
+        // count=2 consumed across probes (any lane: step has no lane)
+        assert!(inj.fire(FaultKind::DiskError));
+        assert!(inj.with_lane(3).fire(FaultKind::DiskError));
+        assert!(!inj.fire(FaultKind::DiskError));
+        assert_eq!(inj.snapshot().faults_injected, 3);
+        let off = FaultInjector::off();
+        assert!(!off.fire(FaultKind::DiskError));
+        assert!(!off.is_on());
+    }
+
+    #[test]
+    fn disarm_stops_firing() {
+        let inj = FaultInjector::from_arg("disk_error@0x100").expect("plan");
+        assert!(inj.fire(FaultKind::DiskError));
+        inj.disarm();
+        assert!(!inj.fire(FaultKind::DiskError));
+    }
+
+    #[test]
+    fn retry_backoff_is_deterministic_and_bounded() {
+        let p = RetryPolicy { max_retries: 3, base_backoff_ms: 2, seed: 42 };
+        let a: Vec<u64> = (1..=3).map(|i| p.backoff_ms(9, i)).collect();
+        let b: Vec<u64> = (1..=3).map(|i| p.backoff_ms(9, i)).collect();
+        assert_eq!(a, b, "same seed+salt must replay the same schedule");
+        let c: Vec<u64> = (1..=3).map(|i| p.backoff_ms(10, i)).collect();
+        assert_ne!(a, c, "different salt should (almost surely) jitter differently");
+        for (i, ms) in a.iter().enumerate() {
+            let attempt = i as u32 + 1;
+            assert!(*ms >= 2 << attempt.min(16), "below exponential base");
+            assert!(*ms < (2 << attempt.min(16)) + 2, "jitter exceeds base");
+        }
+    }
+
+    #[test]
+    fn watchdog_fires_on_timeout_and_not_on_disarm() {
+        let wd = Watchdog::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+
+        // disarmed in time: no fire
+        let h = hits.clone();
+        {
+            let _g = wd.arm(Duration::from_millis(200), move || {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        std::thread::sleep(Duration::from_millis(250));
+        assert_eq!(hits.load(Ordering::SeqCst), 0, "disarm must cancel the action");
+        assert_eq!(wd.fired(), 0);
+
+        // timed out: fires exactly once
+        let h = hits.clone();
+        let g = wd.arm(Duration::from_millis(20), move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(150));
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        assert!(g.expired());
+        assert_eq!(wd.fired(), 1);
+        drop(g);
+
+        // re-arm still works after a fire
+        let h = hits.clone();
+        let _g = wd.arm(Duration::from_millis(20), move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(150));
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+}

@@ -23,6 +23,7 @@ pub mod config;
 pub mod diskio;
 pub mod elastic;
 pub mod engine;
+pub mod faults;
 pub mod kvcache;
 pub mod memory;
 pub mod metrics;

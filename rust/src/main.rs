@@ -287,6 +287,10 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     opts.push(trace_out_opt());
     opts.push(Opt { name: "schedule", takes_value: true, default: None, help: "pick #LAs from a planner schedule JSON given --budget-mb (with --memory-trace, re-consulted on every budget step)" });
     opts.push(Opt { name: "memory-trace", takes_value: true, default: None, help: "elastic budget: JSON steps file {\"steps\":[{\"at_pass\":N,\"budget_mb\":X},...]}, or 'shrink-grow' to synthesize one from --budget-mb" });
+    opts.push(Opt { name: "fault-plan", takes_value: true, default: None, help: "deterministic fault injection: JSON steps file/inline {\"steps\":[{\"at_pass\":N,\"kind\":\"disk_error\",...}]}, or compact 'kind@pass[xN][:lane][+ms];...' (kinds: disk_error|disk_slow|agent_panic|lane_death|acquire_fail|conn_drop)" });
+    opts.push(Opt { name: "pass-timeout-ms", takes_value: true, default: None, help: "per-pass watchdog: quiesce a pass stuck longer than this (counts passes_timed_out; off by default)" });
+    opts.push(Opt { name: "load-retries", takes_value: true, default: Some("2"), help: "bounded retries for transient shard-load failures (deterministic jittered backoff)" });
+    opts.push(Opt { name: "retry-backoff-ms", takes_value: true, default: Some("1"), help: "base backoff between load retries (doubles per attempt, seeded jitter)" });
     let a = Args::parse(rest, &opts)?;
     if a.flag("help") {
         println!("{}", render_help("run", "Execution Engine", &opts));
@@ -326,6 +330,11 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         kv_block_tokens: a.get("kv-block-tokens").map(|s| s.parse()).transpose()?,
         prefetch_depth: a.usize("prefetch-depth")?,
         device_cache: !a.flag("no-device-cache"),
+        fault_plan: a.get("fault-plan").map(String::from),
+        pass_timeout_ms: a.get("pass-timeout-ms").map(|s| s.parse()).transpose()?,
+        load_retries: a.usize("load-retries")? as u32,
+        retry_backoff_ms: a.u64("retry-backoff-ms")?,
+        ..RunConfig::default()
     };
     let tracer = Tracer::new(cfg.trace);
     let mut builder = engine.session(&cfg).tracer(&tracer);
@@ -338,6 +347,9 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     let mut session = builder.open()?;
     let telemetry = telemetry_for(&a);
     session.set_telemetry(telemetry.clone());
+    if let Some(plan) = &cfg.fault_plan {
+        session.set_faults(hermes::faults::FaultInjector::from_arg(plan)?);
+    }
     let (rep, out) = session.run()?;
     println!("model={} mode={} agents={}", rep.model, rep.mode, rep.agents);
     println!("  latency:    {}", human_ms(rep.latency_ms));
@@ -369,6 +381,12 @@ fn cmd_run(rest: &[String]) -> Result<()> {
             human_ms(rep.decode_p50_ms),
             human_ms(rep.decode_p95_ms),
             rep.tokens_per_sec
+        );
+    }
+    if rep.faults_injected + rep.load_retries + rep.passes_timed_out > 0 {
+        println!(
+            "  faults:     {} injected, {} load retries, {} passes timed out",
+            rep.faults_injected, rep.load_retries, rep.passes_timed_out
         );
     }
     if rep.budget_steps > 0 {
@@ -431,6 +449,11 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     opts.push(Opt { name: "concurrent", takes_value: false, default: None, help: "run lanes concurrently (one executor thread + engine per model, shared budget); --listen only" });
     opts.push(Opt { name: "lane-weights", takes_value: true, default: None, help: "comma-separated admission weights, one per model (with --concurrent; default all-equal)" });
     opts.push(Opt { name: "workers", takes_value: true, default: None, help: "total Loading-Agent threads split across pipeload lanes by weight (with --concurrent; overrides --agents)" });
+    opts.push(Opt { name: "fault-plan", takes_value: true, default: None, help: "deterministic fault plan: JSON file/inline, or compact 'kind@pass[xN][:lane][+ms];...;seed=N' (kinds: disk_error disk_slow agent_panic lane_death acquire_fail conn_drop)" });
+    opts.push(Opt { name: "pass-timeout-ms", takes_value: true, default: None, help: "watchdog: abort+retry any inference pass exceeding this wall-clock bound" });
+    opts.push(Opt { name: "load-retries", takes_value: true, default: Some("2"), help: "bounded retries for transient layer-load failures before a pass aborts" });
+    opts.push(Opt { name: "retry-backoff-ms", takes_value: true, default: Some("1"), help: "base backoff between load retries (deterministic jitter on top)" });
+    opts.push(Opt { name: "max-lane-restarts", takes_value: true, default: Some("2"), help: "crash-restart budget per lane before its requests are shed lane_dead" });
     opts.push(trace_out_opt());
     opts.push(Opt { name: "json", takes_value: false, default: None, help: "print the machine-readable summary instead of the human one" });
     let a = Args::parse(rest, &opts)?;
@@ -469,6 +492,11 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                 max_active: a.get("max-active").map(|s| s.parse()).transpose()?,
                 disk: a.req("disk")?.to_string(),
                 seed: a.u64("seed")?,
+                fault_plan: a.get("fault-plan").map(String::from),
+                pass_timeout_ms: a.get("pass-timeout-ms").map(|s| s.parse()).transpose()?,
+                load_retries: a.usize("load-retries")? as u32,
+                retry_backoff_ms: a.u64("retry-backoff-ms")?,
+                max_lane_restarts: a.usize("max-lane-restarts")? as u32,
                 ..RunConfig::default()
             })
         })
@@ -511,6 +539,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             concurrent: a.flag("concurrent"),
             lane_weights,
             worker_allotment,
+            fault_plan: a.get("fault-plan").map(String::from),
+            max_lane_restarts: a.usize("max-lane-restarts")? as u32,
             ..RouterConfig::default()
         };
         let telemetry = telemetry_for(&a);
@@ -541,6 +571,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
                     "  kv sharing: {} shared blocks, {} deduplicated",
                     s.shared_kv_blocks,
                     human_bytes(s.kv_dedup_bytes)
+                );
+            }
+            if s.faults_injected + s.load_retries + s.passes_timed_out + s.lane_restarts > 0 {
+                println!(
+                    "  faults:   {} injected, {} load retries, {} passes timed out ({} lane restarts, {} requeued)",
+                    s.faults_injected, s.load_retries, s.passes_timed_out, s.lane_restarts, s.requeued
                 );
             }
             for m in &s.per_model {
@@ -616,6 +652,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             "  kv sharing: {} shared blocks, {} deduplicated",
             s.shared_kv_blocks,
             human_bytes(s.kv_dedup_bytes)
+        );
+    }
+    if s.faults_injected + s.load_retries + s.passes_timed_out + s.lane_restarts > 0 {
+        println!(
+            "  faults:    {} injected, {} load retries, {} passes timed out ({} lane restarts, {} requeued)",
+            s.faults_injected, s.load_retries, s.passes_timed_out, s.lane_restarts, s.requeued
         );
     }
     println!("  SLO p95 <= {}: {}", human_ms(s.slo.target_ms), if s.slo.met { "MET" } else { "MISSED" });

@@ -25,10 +25,12 @@
 //! notifies the condvar, so blocked chargers need no poll timeout even
 //! with many lanes charging concurrently.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
+
+use crate::faults::{FaultInjector, FaultKind};
 
 #[derive(Debug)]
 struct State {
@@ -39,6 +41,16 @@ struct State {
     /// cumulative time any acquirer spent blocked (the paper's stall time)
     stalled: Duration,
     stall_events: u64,
+    /// `acquire_fail` probe (`--fault-plan`): admissions transiently refused
+    faults: FaultInjector,
+}
+
+/// Poison-tolerant lock.  Every critical section here leaves `State` (or a
+/// ledger balance) consistent — single-field arithmetic, no multi-step
+/// invariants — so a panicking holder must not wedge every other lane:
+/// recovery keeps accounting instead of propagating the poison.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// Thread-safe budget accountant; clone freely (Arc inside).
@@ -58,6 +70,7 @@ impl MemoryAccountant {
                     shutdown: false,
                     stalled: Duration::ZERO,
                     stall_events: 0,
+                    faults: FaultInjector::off(),
                 }),
                 Condvar::new(),
             )),
@@ -68,13 +81,19 @@ impl MemoryAccountant {
         MemoryAccountant::new(None)
     }
 
+    /// Attach a fault injector (shared through the Arc: every clone sees
+    /// it).  `acquire_fail` steps make admissions transiently refuse.
+    pub fn set_faults(&self, faults: FaultInjector) {
+        relock(&self.inner.0).faults = faults;
+    }
+
     /// Block until `bytes` fit under the budget, then account them.
     /// Returns how long the caller was stalled (S^stop duration).
     /// Errors on shutdown or if `bytes` alone exceeds the budget (a single
     /// layer that can never fit — a planning error, not a transient).
     pub fn acquire(&self, bytes: u64) -> Result<Duration> {
         let (lock, cv) = &*self.inner;
-        let mut s = lock.lock().unwrap();
+        let mut s = relock(lock);
         if let Some(b) = s.budget {
             if bytes > b {
                 bail!("allocation of {bytes} B can never fit budget {b} B");
@@ -86,12 +105,27 @@ impl MemoryAccountant {
         // mutation notifies, so no poll timeout is needed even with many
         // concurrent chargers (a timeout here would just hide a lost-wakeup
         // bug instead of surfacing it).
-        while !s.shutdown && s.budget.map(|b| s.used + bytes > b).unwrap_or(false) {
-            stalled = true;
-            s = cv.wait(s).unwrap();
-        }
-        if s.shutdown {
-            bail!("accountant shut down");
+        loop {
+            if s.shutdown {
+                bail!("accountant shut down");
+            }
+            if s.budget.map(|b| s.used + bytes > b).unwrap_or(false) {
+                stalled = true;
+                s = cv.wait(s).unwrap_or_else(std::sync::PoisonError::into_inner);
+                continue;
+            }
+            // Injected transient refusal (`acquire_fail`): park briefly and
+            // re-check.  The plan's `count` bounds total refusals, so this
+            // self-recovers by bounded retry instead of surfacing an error.
+            if s.faults.fire(FaultKind::AcquireFail) {
+                stalled = true;
+                let (ns, _) = cv
+                    .wait_timeout(s, Duration::from_millis(1))
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                s = ns;
+                continue;
+            }
+            break;
         }
         let waited = t0.elapsed();
         if stalled {
@@ -115,8 +149,13 @@ impl MemoryAccountant {
     /// consume the slack the pass's own next admission needs.
     pub fn try_acquire_reserving(&self, bytes: u64, reserve: u64) -> bool {
         let (lock, _) = &*self.inner;
-        let mut s = lock.lock().unwrap();
+        let mut s = relock(lock);
         if s.shutdown || s.budget.map(|b| s.used + bytes + reserve > b).unwrap_or(false) {
+            return false;
+        }
+        // injected transient refusal: callers already treat `false` as
+        // budget pressure and retry/evict, which IS the recovery path
+        if s.faults.fire(FaultKind::AcquireFail) {
             return false;
         }
         s.used += bytes;
@@ -128,7 +167,7 @@ impl MemoryAccountant {
     /// callers that need atomicity use [`MemoryAccountant::try_acquire`];
     /// the hot-layer cache uses this to decide how far to evict.)
     pub fn would_block(&self, bytes: u64) -> bool {
-        let s = self.inner.0.lock().unwrap();
+        let s = relock(&self.inner.0);
         s.budget.map(|b| s.used + bytes > b).unwrap_or(false)
     }
 
@@ -136,7 +175,7 @@ impl MemoryAccountant {
     /// May push usage above the budget; peak still records it honestly.
     pub fn force_add(&self, bytes: u64) {
         let (lock, _) = &*self.inner;
-        let mut s = lock.lock().unwrap();
+        let mut s = relock(lock);
         s.used += bytes;
         s.peak = s.peak.max(s.used);
     }
@@ -144,7 +183,7 @@ impl MemoryAccountant {
     /// Release bytes (the daemon's memory destruction) and wake waiters.
     pub fn free(&self, bytes: u64) {
         let (lock, cv) = &*self.inner;
-        let mut s = lock.lock().unwrap();
+        let mut s = relock(lock);
         assert!(s.used >= bytes, "free({bytes}) underflows used={}", s.used);
         s.used -= bytes;
         cv.notify_all();
@@ -153,25 +192,25 @@ impl MemoryAccountant {
     /// Abort all waiters (pipeline teardown on error).
     pub fn shutdown(&self) {
         let (lock, cv) = &*self.inner;
-        lock.lock().unwrap().shutdown = true;
+        relock(lock).shutdown = true;
         cv.notify_all();
     }
 
     pub fn used(&self) -> u64 {
-        self.inner.0.lock().unwrap().used
+        relock(&self.inner.0).used
     }
 
     pub fn peak(&self) -> u64 {
-        self.inner.0.lock().unwrap().peak
+        relock(&self.inner.0).peak
     }
 
     pub fn budget(&self) -> Option<u64> {
-        self.inner.0.lock().unwrap().budget
+        relock(&self.inner.0).budget
     }
 
     /// Total time acquirers spent blocked + how many times they blocked.
     pub fn stall_stats(&self) -> (Duration, u64) {
-        let s = self.inner.0.lock().unwrap();
+        let s = relock(&self.inner.0);
         (s.stalled, s.stall_events)
     }
 
@@ -179,7 +218,7 @@ impl MemoryAccountant {
     /// Sessions call this at pass boundaries so each pass reports its own
     /// peak while pinned hot layers stay accounted across passes.
     pub fn reset_peak_to_used(&self) {
-        let mut s = self.inner.0.lock().unwrap();
+        let mut s = relock(&self.inner.0);
         s.peak = s.used;
     }
 
@@ -192,7 +231,7 @@ impl MemoryAccountant {
     /// accountant itself owns no evictable state.
     pub fn resize(&self, new_budget: Option<u64>) {
         let (lock, cv) = &*self.inner;
-        let mut s = lock.lock().unwrap();
+        let mut s = relock(lock);
         s.budget = new_budget;
         cv.notify_all();
     }
@@ -200,7 +239,7 @@ impl MemoryAccountant {
     /// Bytes currently accounted above the budget (0 when unconstrained or
     /// within bounds) — how much an elastic shrink still has to reclaim.
     pub fn over_budget_bytes(&self) -> u64 {
-        let s = self.inner.0.lock().unwrap();
+        let s = relock(&self.inner.0);
         match s.budget {
             Some(b) => s.used.saturating_sub(b),
             None => 0,
@@ -212,14 +251,14 @@ impl MemoryAccountant {
     /// other sessions still account into).
     pub fn revive(&self) {
         let (lock, cv) = &*self.inner;
-        lock.lock().unwrap().shutdown = false;
+        relock(lock).shutdown = false;
         cv.notify_all();
     }
 
     /// Reset usage/peak/stall counters, keeping the budget (profiler reuse).
     pub fn reset(&self) {
         let (lock, cv) = &*self.inner;
-        let mut s = lock.lock().unwrap();
+        let mut s = relock(lock);
         s.used = 0;
         s.peak = 0;
         s.stalled = Duration::ZERO;
@@ -262,7 +301,7 @@ impl PassLedger {
     /// Blocking charge: accountant admission + ledger record.
     pub fn acquire(&self, bytes: u64) -> Result<Duration> {
         let waited = self.accountant.acquire(bytes)?;
-        *self.held.lock().unwrap() += bytes;
+        *relock(&self.held) += bytes;
         Ok(waited)
     }
 
@@ -276,7 +315,7 @@ impl PassLedger {
         if !self.accountant.try_acquire_reserving(bytes, reserve) {
             return false;
         }
-        *self.held.lock().unwrap() += bytes;
+        *relock(&self.held) += bytes;
         true
     }
 
@@ -285,7 +324,7 @@ impl PassLedger {
     /// [`MemoryAccountant::force_add`].
     pub fn force_add(&self, bytes: u64) {
         self.accountant.force_add(bytes);
-        *self.held.lock().unwrap() += bytes;
+        *relock(&self.held) += bytes;
     }
 
     /// Return pass-owned bytes to the budget (discharge + accountant free).
@@ -297,7 +336,7 @@ impl PassLedger {
     /// Take ownership of bytes a store already accounts (a pinned layer or
     /// prefetched shard handed to this pass): ledger only, usage unchanged.
     pub fn adopt(&self, bytes: u64) {
-        *self.held.lock().unwrap() += bytes;
+        *relock(&self.held) += bytes;
     }
 
     /// Hand pass-owned bytes to a durable store (pin / device-retain /
@@ -308,21 +347,21 @@ impl PassLedger {
     }
 
     fn discharge(&self, bytes: u64) {
-        let mut held = self.held.lock().unwrap();
+        let mut held = relock(&self.held);
         assert!(*held >= bytes, "ledger discharge({bytes}) underflows held={held}");
         *held -= bytes;
     }
 
     /// Bytes the pass currently holds.
     pub fn balance(&self) -> u64 {
-        *self.held.lock().unwrap()
+        *relock(&self.held)
     }
 
     /// Free every byte the pass still holds (failed-pass recovery);
     /// returns how many were drained.
     pub fn drain(&self) -> u64 {
         let leaked = {
-            let mut held = self.held.lock().unwrap();
+            let mut held = relock(&self.held);
             std::mem::take(&mut *held)
         };
         if leaked > 0 {

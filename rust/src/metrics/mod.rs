@@ -154,6 +154,12 @@ pub struct RunReport {
     pub decode_p95_ms: f64,
     /// decode throughput over the whole request (generative runs)
     pub tokens_per_sec: f64,
+    /// fault plane: faults the plan fired during this run
+    pub faults_injected: u64,
+    /// recovery: transient shard-load retries that kept the run alive
+    pub load_retries: u64,
+    /// recovery: passes the watchdog timed out and drained
+    pub passes_timed_out: u64,
 }
 
 impl RunReport {
@@ -196,6 +202,9 @@ impl RunReport {
             .set("decode_p50_ms", self.decode_p50_ms)
             .set("decode_p95_ms", self.decode_p95_ms)
             .set("tokens_per_sec", self.tokens_per_sec)
+            .set("faults_injected", self.faults_injected)
+            .set("load_retries", self.load_retries)
+            .set("passes_timed_out", self.passes_timed_out)
     }
 }
 
@@ -429,6 +438,9 @@ mod tests {
             decode_p50_ms: 0.0,
             decode_p95_ms: 0.0,
             tokens_per_sec: 0.0,
+            faults_injected: 0,
+            load_retries: 0,
+            passes_timed_out: 0,
         };
         assert_eq!(r.cache_hit_rate(), 0.0); // no cache attached
         r.cache_hits = 3;

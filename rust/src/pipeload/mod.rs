@@ -66,6 +66,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::diskio::Disk;
+use crate::faults::{FaultInjector, RetryPolicy};
 use crate::kvcache::KvSeq;
 use crate::memory::MemoryAccountant;
 use crate::model::{Profile, StageSpec, TensorSpec};
@@ -159,6 +160,10 @@ pub struct ExecCtx<'rt> {
     pub telemetry: Telemetry,
     pub signals: SignalLog,
     pub batch: usize,
+    /// deterministic fault probes threaded down to loaders and the disk
+    pub faults: FaultInjector,
+    /// transient shard-load retry schedule
+    pub retry: RetryPolicy,
 }
 
 impl<'rt> ExecCtx<'rt> {
@@ -173,6 +178,8 @@ impl<'rt> ExecCtx<'rt> {
             telemetry: Telemetry::off(),
             signals: SignalLog::new(),
             batch: 1,
+            faults: FaultInjector::off(),
+            retry: RetryPolicy::default(),
         })
     }
 }
@@ -362,6 +369,8 @@ pub fn run_pass_mode(
         epoch: env.epoch,
         signals: ctx.signals.clone(),
         shard_dir: ctx.shard_dir.clone(),
+        faults: ctx.faults.clone(),
+        retry: ctx.retry,
     });
 
     // Build EVERY per-agent descriptor before dispatching anything: the

@@ -31,9 +31,11 @@
 //!     crate::pipeload::gate::OrderedGate::try_admit_prefetch
 //! [`PrefetchBuffer`]: crate::pipeload::prefetch::PrefetchBuffer
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -42,6 +44,7 @@ use super::gate::OrderedGate;
 use super::prefetch::PrefetchBuffer;
 use super::{StageMsg, STALL_EPS_MS};
 use crate::diskio::Disk;
+use crate::faults::{FaultInjector, FaultKind, RetryPolicy};
 use crate::model::TensorSpec;
 use crate::signals::{Signal, SignalLog};
 use crate::telemetry::{worker, EvArgs, Telemetry};
@@ -70,6 +73,10 @@ pub(crate) struct PassShared {
     pub epoch: u64,
     pub signals: SignalLog,
     pub shard_dir: PathBuf,
+    /// fault probes for this pass's workers (`agent_panic`, disk faults)
+    pub faults: FaultInjector,
+    /// transient-load retry schedule (deterministic jittered backoff)
+    pub retry: RetryPolicy,
 }
 
 /// Loader → Inference channel messages.
@@ -130,8 +137,10 @@ impl TaskGroup {
     }
 
     fn exit(&self) {
-        let mut n = self.inner.0.lock().unwrap();
-        *n -= 1;
+        let mut n = self.inner.0.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        // saturating: a double-exit on a panic-recovery path must not take
+        // down the monitor with an underflow
+        *n = n.saturating_sub(1);
         self.inner.1.notify_all();
     }
 
@@ -215,8 +224,29 @@ impl WorkerPool {
             let handle = std::thread::spawn(move || {
                 for work in rx {
                     match work {
-                        LoaderWork::Pass(t) => run_pass_task(t),
-                        LoaderWork::Prefetch(t) => run_prefetch_task(t),
+                        // Agent boundary containment: a panicking loader
+                        // (injected or real) fails ITS pass via the normal
+                        // `LoadMsg::Failed` path and the thread survives to
+                        // serve the next one — one panic costs one pass,
+                        // never the process.
+                        LoaderWork::Pass(t) => {
+                            let tx = t.tx.clone();
+                            let agent = t.agent;
+                            if catch_unwind(AssertUnwindSafe(|| run_pass_task(t))).is_err() {
+                                let _ = tx.send(LoadMsg::Failed(anyhow!(
+                                    "loading agent {agent} panicked (contained)"
+                                )));
+                            }
+                        }
+                        LoaderWork::Prefetch(t) => {
+                            let group = t.group.clone();
+                            if catch_unwind(AssertUnwindSafe(|| run_prefetch_task(t))).is_err()
+                            {
+                                // speculation never fails a pass; just make
+                                // sure the quiesce counter can't leak
+                                group.exit();
+                            }
+                        }
                     }
                 }
             });
@@ -288,8 +318,41 @@ impl Drop for WorkerPool {
     }
 }
 
-/// Read one shard through the throttled edge-storage stream.
+/// Read one shard through the throttled edge-storage stream, retrying
+/// transient failures under the pass's [`RetryPolicy`].  Admitted bytes
+/// stay held across retries (no gate re-entry), so the accounting a retry
+/// sees is exactly what the first attempt saw.
 fn load_shard(shared: &PassShared, job: &StageJob) -> Result<Shard> {
+    let mut attempt = 0u32;
+    loop {
+        match load_shard_once(shared, job) {
+            Ok(shard) => return Ok(shard),
+            Err(e) if attempt < shared.retry.max_retries => {
+                attempt += 1;
+                shared.faults.stats().note_load_retry();
+                if shared.telemetry.is_on() {
+                    shared.telemetry.instant(
+                        "retry",
+                        worker::DRIVER,
+                        EvArgs::stage(job.stage).with_epoch(shared.epoch).with_reason("load"),
+                    );
+                }
+                let _ = e; // superseded by the retry
+                std::thread::sleep(Duration::from_millis(
+                    shared.retry.backoff_ms(job.stage as u64, attempt),
+                ));
+            }
+            Err(e) => {
+                return Err(e.context(format!(
+                    "loading {} (gave up after {attempt} retries)",
+                    job.shard_file
+                )))
+            }
+        }
+    }
+}
+
+fn load_shard_once(shared: &PassShared, job: &StageJob) -> Result<Shard> {
     let reader = shared.disk.open(&shared.shard_dir.join(&job.shard_file))?;
     let shard =
         read_shard_from(reader).with_context(|| format!("shard {}", job.shard_file))?;
@@ -304,6 +367,12 @@ fn load_shard(shared: &PassShared, job: &StageJob) -> Result<Shard> {
 /// accumulation).
 fn run_pass_task(t: PassTask) {
     let sh = &*t.shared;
+    // Injected agent death fires BEFORE any admission or load: no bytes
+    // held, no locks poisoned — the cleanest possible worker crash, which
+    // is exactly what the containment boundary above must absorb.
+    if sh.faults.fire(FaultKind::AgentPanic) {
+        panic!("injected loading-agent panic (fault plan)");
+    }
     let tel_on = sh.telemetry.is_on();
     let mut stall_ms = 0.0f64;
     let mut load_ms = 0.0f64;

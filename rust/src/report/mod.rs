@@ -273,6 +273,17 @@ fn parse_reports(v: &Value) -> Result<Vec<RunReport>> {
                     .get("tokens_per_sec")
                     .and_then(|v| v.as_f64().ok())
                     .unwrap_or(0.0),
+                // absent in caches written before the fault plane
+                faults_injected: r
+                    .get("faults_injected")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0) as u64,
+                load_retries: r.get("load_retries").and_then(|v| v.as_f64().ok()).unwrap_or(0.0)
+                    as u64,
+                passes_timed_out: r
+                    .get("passes_timed_out")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(0.0) as u64,
             })
         })
         .collect()
@@ -480,6 +491,9 @@ mod tests {
             decode_p50_ms: 0.0,
             decode_p95_ms: 0.0,
             tokens_per_sec: 0.0,
+            faults_injected: 0,
+            load_retries: 0,
+            passes_timed_out: 0,
         }
     }
 

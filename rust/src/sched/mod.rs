@@ -184,6 +184,12 @@ impl<T> BatchComposer<T> {
         expired
     }
 
+    /// Take every pending request, emptying the queue (a dead lane sheds
+    /// its whole backlog; the supervisor owns the rejection bookkeeping).
+    pub fn drain_pending(&mut self) -> Vec<Entry<T>> {
+        self.pending.drain(..).collect()
+    }
+
     /// EDF index into `pending`: earliest deadline first, deadline-less
     /// requests after all deadlined ones, FIFO within a class.
     fn edf_best(&self) -> Option<usize> {

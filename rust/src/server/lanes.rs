@@ -34,19 +34,21 @@
 //! [`PassLedger`]: crate::memory::PassLedger
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::AtomicU64;
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
 use super::router::{
-    kv_shares, pick_batch, reject_reason, scaled_share, Envelope, InferResponse, ModelStats,
-    PendingReq, RejectReasons, RouterConfig, RouterHandle, RouterSummary,
+    kv_shares, pick_batch, reject_reason, scaled_share, Envelope, InferRequest, InferResponse,
+    ModelStats, PendingReq, RejectReasons, RouterConfig, RouterHandle, RouterSummary,
 };
 use crate::config::{Mode, Paths, RunConfig};
 use crate::elastic::BudgetController;
 use crate::engine::{DecodeState, Engine, Session};
+use crate::faults::{FaultInjector, FaultKind, FaultStatsSnapshot};
 use crate::kvcache::KvPool;
 use crate::memory::MemoryAccountant;
 use crate::metrics::LatencyRecorder;
@@ -114,8 +116,10 @@ impl LaneGovernor {
     }
 
     /// Block until this lane may start a batch, then charge its clock.
+    /// Poison-tolerant: a lane that panicked mid-batch must not wedge its
+    /// siblings' fair-share admission.
     fn admit(&self, lane: usize) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock().unwrap_or_else(PoisonError::into_inner);
         s.waiting[lane] = true;
         loop {
             let mut min_other = f64::INFINITY;
@@ -129,7 +133,10 @@ impl LaneGovernor {
             }
             // timeout backstop: a peer that left `admit` without a
             // wakeup (shutdown) must not park this lane forever
-            let (guard, _) = self.cv.wait_timeout(s, Duration::from_millis(2)).unwrap();
+            let (guard, _) = self
+                .cv
+                .wait_timeout(s, Duration::from_millis(2))
+                .unwrap_or_else(PoisonError::into_inner);
             s = guard;
         }
         s.waiting[lane] = false;
@@ -143,22 +150,24 @@ impl LaneGovernor {
         self.cv.notify_all();
     }
 
-    /// The lane's batch finished (success or failure).
+    /// The lane's batch finished (success or failure).  Saturating: a
+    /// supervisor-restarted lane may settle a batch the crash already
+    /// unwound past.
     fn done(&self) {
-        let mut s = self.state.lock().unwrap();
-        s.in_flight -= 1;
+        let mut s = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        s.in_flight = s.in_flight.saturating_sub(1);
         drop(s);
         self.cv.notify_all();
     }
 
     /// Most batches in flight at once over the run.
     fn peak(&self) -> usize {
-        self.state.lock().unwrap().peak
+        self.state.lock().unwrap_or_else(PoisonError::into_inner).peak
     }
 
     #[cfg(test)]
     fn snapshot(&self) -> (usize, usize, u64) {
-        let s = self.state.lock().unwrap();
+        let s = self.state.lock().unwrap_or_else(PoisonError::into_inner);
         (s.in_flight, s.peak, s.total_batches)
     }
 }
@@ -240,6 +249,12 @@ struct LaneSeed {
     down_rx: mpsc::Receiver<WirePack>,
     ready_tx: mpsc::Sender<()>,
     telemetry: Telemetry,
+    /// lane-tagged probe into the shared fault plan; stats aggregate
+    /// fleet-wide through the shared counters
+    faults: FaultInjector,
+    /// crash-restarts this lane's supervisor may spend before declaring
+    /// the lane dead and shedding its backlog
+    max_restarts: u32,
 }
 
 /// Fleet-wide elastic control shared by every lane executor.  The lane
@@ -268,23 +283,23 @@ struct FleetState {
 
 impl FleetElastic {
     fn set_floor(&self, floor: u64) {
-        self.state.lock().unwrap().floor = floor;
+        self.state.lock().unwrap_or_else(PoisonError::into_inner).floor = floor;
     }
 
     fn steps(&self) -> u64 {
-        self.state.lock().unwrap().steps
+        self.state.lock().unwrap_or_else(PoisonError::into_inner).steps
     }
 
     /// Count a lane's finished batch (`pass_delta` engine passes) and
     /// apply any due trace step fleet-wide.
     fn after_batch(&self, pass_delta: usize) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock().unwrap_or_else(PoisonError::into_inner);
         if s.ctrl.is_none() {
             return;
         }
         s.passes += pass_delta;
         let passes = s.passes;
-        let Some(step) = s.ctrl.as_mut().unwrap().poll(passes) else { return };
+        let Some(step) = s.ctrl.as_mut().and_then(|c| c.poll(passes)) else { return };
         let new_budget = step.budget_bytes.max(s.floor);
         // one resize for the whole fleet; every lane's next admission
         // sees the new headroom immediately, caps re-derive per lane at
@@ -390,6 +405,11 @@ pub struct ConcurrentRouter {
     rx: mpsc::Receiver<Envelope>,
     ids: Arc<AtomicU64>,
     telemetry: Telemetry,
+    /// un-laned base injector for the fleet's fault plan; lane executors
+    /// probe through `with_lane` clones, the shared accountant through
+    /// this base (an `acquire_fail` step trips whichever lane acquires
+    /// next), and the shared counters aggregate fleet-wide
+    faults: FaultInjector,
 }
 
 impl ConcurrentRouter {
@@ -425,6 +445,11 @@ impl ConcurrentRouter {
             bail!("worker_allotment must be >= 1");
         }
         let accountant = MemoryAccountant::new(cfg.budget);
+        let faults = match &cfg.fault_plan {
+            Some(plan) => FaultInjector::from_arg(plan)?,
+            None => FaultInjector::off(),
+        };
+        accountant.set_faults(faults.clone());
         // per-lane KV grants: identical split rule to the serialized router
         let share_takers =
             cfg.models.iter().filter(|m| m.kv_cache && m.kv_budget.is_none()).count();
@@ -461,6 +486,7 @@ impl ConcurrentRouter {
             rx,
             ids: Arc::new(AtomicU64::new(0)),
             telemetry: Telemetry::off(),
+            faults,
         })
     }
 
@@ -483,11 +509,20 @@ impl ConcurrentRouter {
         &self.accountant
     }
 
+    /// A clone of the un-laned base fault injector — the TCP front-end
+    /// probes connection-drop faults through it, sharing the plan's step
+    /// budgets and counters with the lane executors.
+    pub(crate) fn fault_injector(&self) -> FaultInjector {
+        self.faults.clone()
+    }
+
     /// Spawn the lane executors, wire the fleet (victim chains, gate
     /// peers, the shared reclaim token), route requests until every
     /// handle is dropped or a shutdown arrives, then summarize.
     pub fn run(mut self) -> Result<RouterSummary> {
         self.tx.take(); // only external handles keep the queue open now
+        // the un-laned base carries the bus; fires re-tag per-probe lane
+        self.faults.set_telemetry(self.telemetry.clone());
         let t_start = Instant::now();
         let n = self.runs.len();
         let token = ReclaimToken::new();
@@ -513,6 +548,8 @@ impl ConcurrentRouter {
                 down_rx,
                 ready_tx: ready_tx.clone(),
                 telemetry: self.telemetry.with_lane(idx as u32),
+                faults: self.faults.with_lane(idx as u32),
+                max_restarts: self.cfg.max_lane_restarts,
             });
         }
         drop(ready_tx);
@@ -539,6 +576,7 @@ impl ConcurrentRouter {
         let profiles: Vec<String> = self.runs.iter().map(|r| r.profile.clone()).collect();
         let paths = self.paths.clone();
         let accountant = self.accountant.clone();
+        let faults_probe = self.faults.clone();
 
         let (outcomes, unroutable, unroutable_reasons) = std::thread::scope(
             |scope| -> Result<(Vec<LaneOutcome>, usize, RejectReasons)> {
@@ -633,6 +671,7 @@ impl ConcurrentRouter {
                                 budget,
                                 fleet.steps(),
                                 governor.peak() as u64,
+                                faults_probe.snapshot(),
                             ));
                         }
                         Ok(Envelope::Infer(p)) => {
@@ -743,6 +782,7 @@ impl ConcurrentRouter {
             budget,
             fleet.steps(),
             governor.peak() as u64,
+            self.faults.snapshot(),
         ))
     }
 }
@@ -750,6 +790,7 @@ impl ConcurrentRouter {
 /// Fold per-lane snapshots into the fleet summary — field-for-field the
 /// serialized router's.  Shared by the final aggregation in
 /// [`ConcurrentRouter::run`] and the mid-flight `{"op":"stats"}` probe.
+#[allow(clippy::too_many_arguments)]
 fn summarize_lanes(
     snaps: Vec<LaneSnapshot>,
     unroutable: usize,
@@ -758,6 +799,7 @@ fn summarize_lanes(
     budget: Option<u64>,
     budget_steps: u64,
     concurrent_passes_peak: u64,
+    fsnap: FaultStatsSnapshot,
 ) -> RouterSummary {
     let mut latency = LatencyRecorder::new();
     let mut queue_wait = LatencyRecorder::new();
@@ -840,6 +882,11 @@ fn summarize_lanes(
         queue_wait_p50_ms: queue_wait.p50(),
         queue_wait_p95_ms: queue_wait.p95(),
         concurrent_passes_peak,
+        faults_injected: fsnap.faults_injected,
+        load_retries: fsnap.load_retries,
+        passes_timed_out: fsnap.passes_timed_out,
+        lane_restarts: fsnap.lane_restarts,
+        requeued: fsnap.requeued,
         per_model,
         first_error,
     }
@@ -858,7 +905,8 @@ fn lane_main(
     max_batch: usize,
     batch_window: Duration,
 ) -> LaneOutcome {
-    let LaneSeed { idx, run, rx, up_tx, down_rx, ready_tx, telemetry: tel } = seed;
+    let LaneSeed { idx, run, rx, up_tx, down_rx, ready_tx, telemetry: tel, faults, max_restarts } =
+        seed;
     let profile = run.profile.clone();
     let out = LaneOutcome::new(profile.clone());
     let engine = match Engine::new(paths) {
@@ -876,6 +924,9 @@ fn lane_main(
         }
     };
     session.set_telemetry(tel.clone());
+    // arms the disk, the loader pool, and the retry policy with this
+    // lane's probe (the shared accountant is armed once, at the router)
+    session.set_faults(faults.clone());
     let wiring = LaneWiring {
         gate: session.pipeline_gate(),
         cache: session.layer_cache().cloned(),
@@ -911,37 +962,128 @@ fn lane_main(
     let _ = ready_tx.send(());
     drop(ready_tx);
 
+    // the lane supervisor: serve under `catch_unwind`, with the queue /
+    // composer / in-flight set owned OUT HERE so a crash cannot take the
+    // backlog down with the stack.  Each crash settles through a recover
+    // helper (re-queue holders, shed the rest, heal the session) and
+    // restarts the executor until the restart budget runs out.
     let mut out = out;
+    let mut restarts = 0u32;
+    let mut dead = false;
     if run.continuous {
-        lane_serve_continuous(
-            &mut session,
-            idx,
-            &profile,
-            &run,
-            &rx,
-            &governor,
-            &fleet,
-            &tel,
-            &mut out,
-        );
+        let orig_max_active = run.max_active.unwrap_or(DEFAULT_MAX_ACTIVE).max(1);
+        let mut composer: BatchComposer<PendingReq> =
+            BatchComposer::new(SchedConfig { max_active: orig_max_active, slo_ms: run.slo_ms });
+        let mut active: Vec<LaneActive> = Vec::new();
+        loop {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                lane_serve_continuous(
+                    &mut session,
+                    idx,
+                    &profile,
+                    orig_max_active,
+                    &rx,
+                    &governor,
+                    &fleet,
+                    &faults,
+                    &mut composer,
+                    &mut active,
+                    &tel,
+                    &mut out,
+                )
+            }));
+            match r {
+                Ok(()) => break,
+                Err(_) => {
+                    if !lane_recover_continuous(
+                        &mut session,
+                        &mut composer,
+                        &mut active,
+                        &faults,
+                        &mut restarts,
+                        max_restarts,
+                        &profile,
+                        &tel,
+                        &mut out,
+                    ) {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+        out.sched = composer.stats();
     } else {
-        lane_serve(
-            &mut session,
-            idx,
-            &profile,
-            &rx,
-            &governor,
-            &fleet,
-            max_batch,
-            batch_window,
-            &tel,
-            &mut out,
-        );
+        let mut queue: VecDeque<PendingReq> = VecDeque::new();
+        let mut inflight: Vec<PendingReq> = Vec::new();
+        loop {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                lane_serve(
+                    &mut session,
+                    idx,
+                    &profile,
+                    &rx,
+                    &governor,
+                    &fleet,
+                    max_batch,
+                    batch_window,
+                    &faults,
+                    &mut queue,
+                    &mut inflight,
+                    &tel,
+                    &mut out,
+                )
+            }));
+            match r {
+                Ok(()) => break,
+                Err(_) => {
+                    if !lane_recover_fixed(
+                        &mut session,
+                        &mut queue,
+                        &mut inflight,
+                        &faults,
+                        &mut restarts,
+                        max_restarts,
+                        &profile,
+                        &tel,
+                        &mut out,
+                    ) {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    if dead {
+        // restart budget exhausted: stay on the inbox shedding until Quit
+        // (or the dispatcher hangs up) so everything already routed here
+        // still gets a clean `lane_dead` response instead of a dropped
+        // reply channel
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                LaneMsg::Req(p) => shed_lane_dead(
+                    p,
+                    "lane dead: crash-restart budget exhausted",
+                    &profile,
+                    &tel,
+                    &mut out,
+                ),
+                LaneMsg::Stats(reply) => {
+                    let _ = reply.send(snapshot_lane(&session, &profile, &out, out.sched));
+                }
+                LaneMsg::Budget { .. } => {}
+                LaneMsg::Quit => break,
+            }
+        }
     }
 
     // per-lane counters, harvested on the thread that owns the session
     let stats = harvest_model_stats(&session, &profile, &out, out.sched);
     out.stats = Some(stats);
+    // the chaos-soak invariant: a lane exits with the shared accountant
+    // holding none of its bytes
+    session.release_all();
     out
 }
 
@@ -1061,23 +1203,32 @@ fn lane_serve(
     fleet: &FleetElastic,
     max_batch: usize,
     batch_window: Duration,
+    faults: &FaultInjector,
+    queue: &mut VecDeque<PendingReq>,
+    inflight: &mut Vec<PendingReq>,
     tel: &Telemetry,
     out: &mut LaneOutcome,
 ) {
     let avail = session.profile().batches.clone();
     let largest_avail = avail.iter().copied().max().unwrap_or(1);
     let cap = max_batch.min(largest_avail).max(1);
-    let mut queue: VecDeque<PendingReq> = VecDeque::new();
     let mut open = true;
 
     loop {
+        // supervised lane death: the crash surfaces between batches; the
+        // unwind lands in lane_main's catch, which runs the supervisor.
+        // `resume_unwind` skips the panic hook (no stderr spam for an
+        // injected, fully-contained crash).
+        if faults.fire(FaultKind::LaneDeath) {
+            std::panic::resume_unwind(Box::new("injected lane death (fault plan)"));
+        }
         if queue.is_empty() {
             if !open {
                 break;
             }
             match rx.recv() {
                 Ok(msg) => {
-                    if !handle_ctl(session, msg, &mut queue, profile, out) {
+                    if !handle_ctl(session, msg, queue, profile, out) {
                         open = false;
                     }
                     continue;
@@ -1092,7 +1243,7 @@ fn lane_serve(
             loop {
                 match rx.try_recv() {
                     Ok(msg) => {
-                        if !handle_ctl(session, msg, &mut queue, profile, out) {
+                        if !handle_ctl(session, msg, queue, profile, out) {
                             open = false;
                             break;
                         }
@@ -1108,7 +1259,7 @@ fn lane_serve(
         // wake-up sweep (whole queue, not just the admission pops below):
         // an expired request parked behind a live head is rejected promptly
         // instead of distorting fill windows and queue-wait percentiles
-        sweep_expired_queue(&mut queue, profile, tel, out);
+        sweep_expired_queue(queue, profile, tel, out);
         if queue.is_empty() {
             continue;
         }
@@ -1125,7 +1276,7 @@ fn lane_serve(
                 }
                 match rx.recv_timeout(fill_deadline - now) {
                     Ok(msg) => {
-                        if !handle_ctl(session, msg, &mut queue, profile, out) {
+                        if !handle_ctl(session, msg, queue, profile, out) {
                             open = false;
                             break;
                         }
@@ -1154,10 +1305,12 @@ fn lane_serve(
             queue.rotate_left(best);
         }
 
-        let mut batch: Vec<PendingReq> = Vec::new();
+        // admitted requests live in `inflight` (owned by the supervisor in
+        // lane_main) so a crash mid-batch can re-queue them, not drop them
+        inflight.clear();
         let mut hint_rows = 0usize;
         let now = Instant::now();
-        while batch.len() < cap {
+        while inflight.len() < cap {
             let Some(p) = queue.pop_front() else { break };
             if p.deadline.map(|d| d <= now).unwrap_or(false) {
                 out.rejected += 1;
@@ -1194,7 +1347,7 @@ fn lane_serve(
                 ));
                 continue;
             }
-            if let Some(first) = batch.first() {
+            if let Some(first) = inflight.first() {
                 if first.req.seed != p.req.seed || hint_rows + rows > largest_avail {
                     queue.push_front(p);
                     break;
@@ -1202,17 +1355,17 @@ fn lane_serve(
             }
             hint_rows += rows;
             tel.instant("admit", worker::DRIVER, EvArgs::req(p.id));
-            batch.push(p);
+            inflight.push(p);
         }
-        if batch.is_empty() {
+        if inflight.is_empty() {
             continue;
         }
-        for p in &batch {
+        for p in inflight.iter() {
             out.queue_wait.record(now.saturating_duration_since(p.enqueued));
         }
 
         let b = pick_batch(&avail, hint_rows);
-        let seed = batch[0]
+        let seed = inflight[0]
             .req
             .seed
             .unwrap_or_else(|| session.run_config().seed.wrapping_add(out.batches as u64));
@@ -1229,14 +1382,14 @@ fn lane_serve(
             Ok((report, outp)) => {
                 out.peak = out.peak.max(report.peak_bytes);
                 out.batches += 1;
-                out.batch_sizes += batch.len();
+                out.batch_sizes += inflight.len();
                 debug_assert_eq!(
                     session.kv_pool().map(|p| p.used_bytes()).unwrap_or(0),
                     0,
                     "KV blocks must be freed when the ticket resolves"
                 );
                 let mut row_off = 0usize;
-                for p in &batch {
+                for p in inflight.iter() {
                     let rows = p.req.batch_hint.max(1);
                     let generated_rows: Vec<Vec<i32>> = outp
                         .generated_rows
@@ -1270,7 +1423,7 @@ fn lane_serve(
                 if out.first_error.is_none() {
                     out.first_error = Some(format!("{e:#}"));
                 }
-                for p in &batch {
+                for p in inflight.iter() {
                     out.rejected += 1;
                     out.reject_reasons.note(reject_reason::INTERNAL);
                     tel.instant(
@@ -1288,6 +1441,8 @@ fn lane_serve(
                 }
             }
         }
+        // every reply for this batch is out; nothing left to re-queue
+        inflight.clear();
         fleet.after_batch(session.passes_run().saturating_sub(passes_before));
     }
 }
@@ -1330,10 +1485,15 @@ fn sweep_expired_queue(
 struct LaneActive {
     id: u64,
     enqueued: Instant,
+    /// absolute deadline; enforced mid-decode at every token boundary
+    deadline: Option<Instant>,
     slo_ms: Option<f64>,
     batch_hint: usize,
     batch: usize,
     reply: mpsc::Sender<InferResponse>,
+    /// kept so the supervisor can re-queue this request across a lane
+    /// crash-restart with its identity and deadline intact
+    req: InferRequest,
     st: DecodeState,
 }
 
@@ -1406,22 +1566,26 @@ fn lane_serve_continuous(
     session: &mut Session<'_>,
     lane_idx: usize,
     profile: &str,
-    run: &RunConfig,
+    orig_max_active: usize,
     rx: &mpsc::Receiver<LaneMsg>,
     governor: &LaneGovernor,
     fleet: &FleetElastic,
+    faults: &FaultInjector,
+    composer: &mut BatchComposer<PendingReq>,
+    active: &mut Vec<LaneActive>,
     tel: &Telemetry,
     out: &mut LaneOutcome,
 ) {
     let avail = session.profile().batches.clone();
     let largest_avail = avail.iter().copied().max().unwrap_or(1);
-    let orig_max_active = run.max_active.unwrap_or(DEFAULT_MAX_ACTIVE).max(1);
-    let mut composer: BatchComposer<PendingReq> =
-        BatchComposer::new(SchedConfig { max_active: orig_max_active, slo_ms: run.slo_ms });
-    let mut active: Vec<LaneActive> = Vec::new();
     let mut open = true;
 
     loop {
+        // supervised lane death: surfaces at a token boundary, never
+        // inside a pass; the unwind lands in lane_main's catch
+        if faults.fire(FaultKind::LaneDeath) {
+            std::panic::resume_unwind(Box::new("injected lane death (fault plan)"));
+        }
         if active.is_empty() && composer.is_idle() {
             if !open {
                 break;
@@ -1431,7 +1595,7 @@ fn lane_serve_continuous(
                     if !handle_ctl_continuous(
                         session,
                         msg,
-                        &mut composer,
+                        composer,
                         orig_max_active,
                         fleet.orig_budget,
                         profile,
@@ -1453,7 +1617,7 @@ fn lane_serve_continuous(
                         if !handle_ctl_continuous(
                             session,
                             msg,
-                            &mut composer,
+                            composer,
                             orig_max_active,
                             fleet.orig_budget,
                             profile,
@@ -1554,10 +1718,12 @@ fn lane_serve_continuous(
             active.push(LaneActive {
                 id: p.id,
                 enqueued: p.enqueued,
+                deadline: p.deadline,
                 slo_ms: e.slo_ms,
                 batch_hint: rows,
                 batch: b,
                 reply: p.reply,
+                req: p.req,
                 st,
             });
         }
@@ -1570,8 +1736,31 @@ fn lane_serve_continuous(
         // share the device weighted-fair.
         let passes_before = session.passes_run();
         governor.admit(lane_idx);
+        let tok_now = Instant::now();
         let mut i = 0;
         while i < active.len() {
+            // deadline enforcement mid-decode: an expired request retires
+            // at this token boundary instead of burning passes to the end
+            if active[i].deadline.is_some_and(|d| d <= tok_now) {
+                let a = active.swap_remove(i);
+                composer.retire(a.enqueued, a.slo_ms, tok_now, false);
+                out.rejected += 1;
+                out.reject_reasons.note(reject_reason::DEADLINE_EXPIRED);
+                tel.instant(
+                    "retire",
+                    worker::DRIVER,
+                    EvArgs::req(a.id).with_reason(reject_reason::DEADLINE_EXPIRED),
+                );
+                let _ = a.reply.send(InferResponse::rejected(
+                    a.id,
+                    profile,
+                    a.enqueued,
+                    reject_reason::DEADLINE_EXPIRED,
+                    "deadline exceeded mid-decode (retired at token boundary)",
+                ));
+                // `a.st` drops here: the dead decode's KV blocks free
+                continue;
+            }
             // keep cross-pass prefetch alive while ANY work will follow
             let expect_next = active.len() > 1
                 || composer.pending_len() > 0
@@ -1633,7 +1822,132 @@ fn lane_serve_continuous(
         composer.note_iteration();
         fleet.after_batch(session.passes_run().saturating_sub(passes_before));
     }
-    out.sched = composer.stats();
+}
+
+/// Reject one request with `lane_dead` — the supervisor's shed path for
+/// work a crashed lane can no longer honor.
+fn shed_lane_dead(
+    p: PendingReq,
+    why: &str,
+    profile: &str,
+    tel: &Telemetry,
+    out: &mut LaneOutcome,
+) {
+    out.rejected += 1;
+    out.reject_reasons.note(reject_reason::LANE_DEAD);
+    tel.instant("shed", worker::DRIVER, EvArgs::req(p.id).with_reason(reject_reason::LANE_DEAD));
+    let _ = p.reply.send(InferResponse::rejected(
+        p.id,
+        profile,
+        p.enqueued,
+        reject_reason::LANE_DEAD,
+        why,
+    ));
+}
+
+/// Settle a crashed continuous lane and decide restart (true) vs death
+/// (false).  In-flight decodes whose deadlines still hold re-queue with
+/// their identity, enqueue time and deadline intact (EDF order and expiry
+/// stay honest); the rest shed with `lane_dead`.  The session heals via
+/// [`Session::recover_after_abort`] either way — on death the whole
+/// backlog sheds too.
+#[allow(clippy::too_many_arguments)]
+fn lane_recover_continuous(
+    session: &mut Session<'_>,
+    composer: &mut BatchComposer<PendingReq>,
+    active: &mut Vec<LaneActive>,
+    faults: &FaultInjector,
+    restarts: &mut u32,
+    max_restarts: u32,
+    profile: &str,
+    tel: &Telemetry,
+    out: &mut LaneOutcome,
+) -> bool {
+    let now = Instant::now();
+    let restart = *restarts < max_restarts;
+    // each entry's decode state drops as it settles, releasing its KV
+    // sequence while the pool still knows it
+    for a in active.drain(..).collect::<Vec<_>>() {
+        composer.retire(a.enqueued, a.slo_ms, now, false);
+        let holds = a.deadline.map(|d| d > now).unwrap_or(true);
+        let p = PendingReq {
+            id: a.id,
+            req: a.req,
+            enqueued: a.enqueued,
+            deadline: a.deadline,
+            reply: a.reply,
+        };
+        if restart && holds {
+            faults.stats().note_requeued();
+            composer.push(Entry {
+                enqueued: p.enqueued,
+                deadline: p.deadline,
+                slo_ms: a.slo_ms,
+                payload: p,
+            });
+        } else {
+            shed_lane_dead(p, "lane crashed; in-flight decode lost", profile, tel, out);
+        }
+    }
+    session.recover_after_abort();
+    if restart {
+        *restarts += 1;
+        faults.stats().note_lane_restart();
+        tel.instant("lane_restart", worker::DRIVER, EvArgs::default().with_reason("supervisor"));
+        true
+    } else {
+        for e in composer.drain_pending() {
+            shed_lane_dead(
+                e.payload,
+                "lane dead: crash-restart budget exhausted",
+                profile,
+                tel,
+                out,
+            );
+        }
+        false
+    }
+}
+
+/// Fixed-batch twin of [`lane_recover_continuous`]: the crashed batch sits
+/// in `inflight`; holders re-queue at the head of the lane queue in their
+/// original order, the rest shed.
+#[allow(clippy::too_many_arguments)]
+fn lane_recover_fixed(
+    session: &mut Session<'_>,
+    queue: &mut VecDeque<PendingReq>,
+    inflight: &mut Vec<PendingReq>,
+    faults: &FaultInjector,
+    restarts: &mut u32,
+    max_restarts: u32,
+    profile: &str,
+    tel: &Telemetry,
+    out: &mut LaneOutcome,
+) -> bool {
+    let now = Instant::now();
+    let restart = *restarts < max_restarts;
+    // reverse drain + push_front preserves the batch's original order
+    for p in inflight.drain(..).rev() {
+        let holds = p.deadline.map(|d| d > now).unwrap_or(true);
+        if restart && holds {
+            faults.stats().note_requeued();
+            queue.push_front(p);
+        } else {
+            shed_lane_dead(p, "lane crashed; in-flight batch lost", profile, tel, out);
+        }
+    }
+    session.recover_after_abort();
+    if restart {
+        *restarts += 1;
+        faults.stats().note_lane_restart();
+        tel.instant("lane_restart", worker::DRIVER, EvArgs::default().with_reason("supervisor"));
+        true
+    } else {
+        for p in queue.drain(..) {
+            shed_lane_dead(p, "lane dead: crash-restart budget exhausted", profile, tel, out);
+        }
+        false
+    }
 }
 
 #[cfg(test)]

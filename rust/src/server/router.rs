@@ -32,6 +32,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::RunConfig;
 use crate::elastic::{BudgetController, PressureTrace};
 use crate::engine::{DecodeState, Engine, Session};
+use crate::faults::{FaultInjector, FaultKind};
 use crate::memory::MemoryAccountant;
 use crate::metrics::{
     prometheus_counter, prometheus_gauge, prometheus_histogram, LatencyRecorder,
@@ -159,6 +160,18 @@ pub struct RouterConfig {
     /// budget steps rebalance the split in proportion to the budget move.
     /// None = every lane keeps its own configured `RunConfig::agents`.
     pub worker_allotment: Option<usize>,
+    /// Deterministic fault-injection plan (`--fault-plan` syntax: inline
+    /// JSON, a JSON file path, or a compact `kind@pass[xN][:lane][+ms]`
+    /// spec).  One plan is shared by the whole fleet — lane-scoped steps
+    /// match the lane index — and armed on the shared accountant, every
+    /// session's disk, and the loader pools.  None = no injection.
+    pub fault_plan: Option<String>,
+    /// Crash-restart budget per lane: a lane that dies (injected
+    /// `lane_death`, or a supervised worker panic under the concurrent
+    /// router) is restarted — recoverable in-flight requests re-queued —
+    /// at most this many times; after that the lane is dead and sheds
+    /// everything with `lane_dead`.
+    pub max_lane_restarts: u32,
 }
 
 impl Default for RouterConfig {
@@ -173,6 +186,8 @@ impl Default for RouterConfig {
             concurrent: false,
             lane_weights: None,
             worker_allotment: None,
+            fault_plan: None,
+            max_lane_restarts: 2,
         }
     }
 }
@@ -551,6 +566,16 @@ pub struct RouterSummary {
     /// most engine batches in flight at once (1 for the serialized
     /// [`Router`]; >= 2 proves lanes overlapped under the concurrent one)
     pub concurrent_passes_peak: u64,
+    /// faults the injection plan fired, fleet-wide (0 without a plan)
+    pub faults_injected: u64,
+    /// transient load failures absorbed by bounded retry-with-backoff
+    pub load_retries: u64,
+    /// passes the per-pass watchdog timed out and quiesced
+    pub passes_timed_out: u64,
+    /// lane crash-restarts performed by the supervisor
+    pub lane_restarts: u64,
+    /// in-flight requests re-queued across lane restarts (deadlines held)
+    pub requeued: u64,
     pub per_model: Vec<ModelStats>,
     /// first engine-pass failure, if any batch failed (full error chain —
     /// individual responses carry their own copies, but callers that drop
@@ -624,6 +649,11 @@ impl RouterSummary {
             .set("queue_wait_p50_ms", self.queue_wait_p50_ms)
             .set("queue_wait_p95_ms", self.queue_wait_p95_ms)
             .set("concurrent_passes_peak", self.concurrent_passes_peak)
+            .set("faults_injected", self.faults_injected)
+            .set("load_retries", self.load_retries)
+            .set("passes_timed_out", self.passes_timed_out)
+            .set("lane_restarts", self.lane_restarts)
+            .set("requeued", self.requeued)
             .set("models", models);
         if let Some(b) = self.budget_bytes {
             v = v.set("budget_bytes", b);
@@ -719,6 +749,36 @@ impl RouterSummary {
             "telemetry events dropped on full shards",
             dropped_events,
         );
+        prometheus_counter(
+            &mut out,
+            "hermes_faults_injected_total",
+            "faults fired by the injection plan",
+            self.faults_injected,
+        );
+        prometheus_counter(
+            &mut out,
+            "hermes_load_retries_total",
+            "transient load failures retried with backoff",
+            self.load_retries,
+        );
+        prometheus_counter(
+            &mut out,
+            "hermes_passes_timed_out_total",
+            "passes quiesced by the per-pass watchdog",
+            self.passes_timed_out,
+        );
+        prometheus_counter(
+            &mut out,
+            "hermes_lane_restarts_total",
+            "lane crash-restarts by the supervisor",
+            self.lane_restarts,
+        );
+        prometheus_counter(
+            &mut out,
+            "hermes_requeued_total",
+            "in-flight requests re-queued across lane restarts",
+            self.requeued,
+        );
         prometheus_gauge(
             &mut out,
             "hermes_throughput_rps",
@@ -813,16 +873,27 @@ struct ModelLane<'e> {
     tokens: u64,
     latency: LatencyRecorder,
     queue_wait: LatencyRecorder,
+    /// lane-tagged probe into the shared fault plan
+    faults: FaultInjector,
+    /// crash-restarts consumed (capped by [`RouterConfig::max_lane_restarts`])
+    restarts: u32,
+    /// restart budget exhausted: everything sheds, new arrivals rejected
+    dead: bool,
 }
 
 /// One request resident in a continuous lane's active set.
 struct ActiveReq {
     id: u64,
     enqueued: Instant,
+    /// absolute deadline, enforced at every token boundary (not just at
+    /// admission): an expired request retires mid-decode
+    deadline: Option<Instant>,
     slo_ms: Option<f64>,
     batch_hint: usize,
     batch: usize,
     reply: mpsc::Sender<InferResponse>,
+    /// original request, kept so a lane restart can re-queue it verbatim
+    req: InferRequest,
     st: DecodeState,
 }
 
@@ -865,6 +936,9 @@ pub struct Router<'e> {
     /// weighted-fair iteration clock across continuous lanes (one entry
     /// per lane, weights from [`RouterConfig::lane_weights`])
     fair: FairClock,
+    /// un-laned base injector for the shared fault plan; lane probes are
+    /// `with_lane` clones of this, and its stats aggregate the fleet
+    faults: FaultInjector,
 }
 
 impl<'e> Router<'e> {
@@ -879,6 +953,13 @@ impl<'e> Router<'e> {
             bail!("max_batch must be >= 1");
         }
         let accountant = MemoryAccountant::new(cfg.budget);
+        let faults = match &cfg.fault_plan {
+            Some(plan) => FaultInjector::from_arg(plan)?,
+            None => FaultInjector::off(),
+        };
+        // the shared accountant gets the un-laned base injector: an
+        // `acquire_fail` step trips whichever lane acquires next
+        accountant.set_faults(faults.clone());
         // Per-lane KV grants: the router's kv_budget is divided evenly
         // among the lanes that decode with a KV cache and don't carry
         // their own explicit cap; the division remainder goes to the
@@ -904,6 +985,7 @@ impl<'e> Router<'e> {
             } else {
                 kv_lane_shares.push(None);
             }
+            let li = lanes.len() as u32;
             let session = engine.open_session_shared(&run, &accountant)?;
             // continuous lanes admit through an iteration-level composer
             let max_active = model.max_active.unwrap_or(DEFAULT_MAX_ACTIVE).max(1);
@@ -924,6 +1006,9 @@ impl<'e> Router<'e> {
                 tokens: 0,
                 latency: LatencyRecorder::new(),
                 queue_wait: LatencyRecorder::new(),
+                faults: faults.with_lane(li),
+                restarts: 0,
+                dead: false,
             });
         }
         // cross-model eviction: each session may reclaim the others' pins
@@ -961,6 +1046,9 @@ impl<'e> Router<'e> {
                     lane.session.add_device_eviction_victim(ledger.clone());
                 }
             }
+            // arm the session's own fault seams (disk, loader pool, retry
+            // seed) with a lane-tagged probe
+            lane.session.set_faults(lane.faults.clone());
         }
         let (tx, rx) = mpsc::channel();
         let elastic = cfg.memory_trace.clone().map(BudgetController::new);
@@ -986,6 +1074,7 @@ impl<'e> Router<'e> {
             elastic,
             budget_steps: 0,
             fair,
+            faults,
         })
     }
 
@@ -1005,12 +1094,22 @@ impl<'e> Router<'e> {
         for (i, lane) in self.lanes.iter_mut().enumerate() {
             lane.session.set_telemetry(t.with_lane(i as u32));
         }
+        // last writer wins on the shared plan's bus: store the un-laned
+        // base (lane-tagged probes re-tag per fire), not a lane clone
+        self.faults.set_telemetry(t.clone());
         self.telemetry = t;
     }
 
     /// The shared accountant (inspect budget/usage/peak from outside).
     pub fn accountant(&self) -> &MemoryAccountant {
         &self.accountant
+    }
+
+    /// A clone of the un-laned base fault injector — the TCP front-end
+    /// probes connection-drop faults through it, sharing the plan's step
+    /// budgets and counters with the lanes.
+    pub(crate) fn fault_injector(&self) -> FaultInjector {
+        self.faults.clone()
     }
 
     /// Per-lane KV pool caps currently in force (None for lanes without a
@@ -1041,8 +1140,7 @@ impl<'e> Router<'e> {
             return;
         }
         let passes: usize = self.lanes.iter().map(|l| l.session.passes_run()).sum();
-        let step = self.elastic.as_mut().unwrap().poll(passes);
-        if let Some(step) = step {
+        if let Some(step) = self.elastic.as_mut().and_then(|e| e.poll(passes)) {
             self.apply_budget_step(step.budget_bytes);
         }
     }
@@ -1229,6 +1327,13 @@ impl<'e> Router<'e> {
             // turn, weighted-fair across lanes; fixed lanes only proceed
             // when no continuous lane is runnable this turn
             if let Some(li) = self.pick_continuous_lane() {
+                // supervised lane death: the crash surfaces at the token
+                // boundary, never inside a pass
+                if self.lanes[li].faults.fire(FaultKind::LaneDeath) {
+                    self.lane_crash(li, "injected lane death (fault plan)");
+                    self.emit_mem_audit();
+                    continue;
+                }
                 self.continuous_iteration(li);
                 self.fair.charge(li);
                 self.emit_mem_audit();
@@ -1237,6 +1342,10 @@ impl<'e> Router<'e> {
 
             // earliest-deadline-first across lane heads (FIFO tie-break)
             let Some(li) = self.pick_lane() else { continue };
+            if self.lanes[li].faults.fire(FaultKind::LaneDeath) {
+                self.lane_crash(li, "injected lane death (fault plan)");
+                continue;
+            }
             let cap = self.lane_cap(&self.lanes[li]);
             let tel = self.telemetry.with_lane(li as u32);
             let lane = &mut self.lanes[li];
@@ -1422,7 +1531,15 @@ impl<'e> Router<'e> {
             }
         }
 
-        Ok(self.summarize())
+        let summary = self.summarize();
+        // settle every lane before reporting: all held bytes (pins,
+        // prefetched stages, device copies, KV blocks, resident models)
+        // go back to the shared accountant, so `used()` drains to exactly
+        // zero — the invariant the chaos soak asserts after recovery
+        for lane in &mut self.lanes {
+            lane.session.release_all();
+        }
+        Ok(summary)
     }
 
     /// Memory-attribution audit sample, emitted between batches and token
@@ -1458,6 +1575,8 @@ impl<'e> Router<'e> {
     /// always reconcile with the shutdown numbers.
     fn summarize(&self) -> RouterSummary {
         let wall = self.run_started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        // the shared stats aggregate every lane probe and loader pool
+        let fsnap = self.faults.snapshot();
         let mut latency = LatencyRecorder::new();
         let mut queue_wait = LatencyRecorder::new();
         let (mut served, mut rejected) = (0usize, self.unroutable);
@@ -1566,6 +1685,11 @@ impl<'e> Router<'e> {
             queue_wait_p95_ms: queue_wait.p95(),
             // one dispatch thread = at most one pass in flight, ever
             concurrent_passes_peak: if self.total_batches > 0 { 1 } else { 0 },
+            faults_injected: fsnap.faults_injected,
+            load_retries: fsnap.load_retries,
+            passes_timed_out: fsnap.passes_timed_out,
+            lane_restarts: fsnap.lane_restarts,
+            requeued: fsnap.requeued,
             per_model,
             first_error: self.first_error.clone(),
         }
@@ -1584,6 +1708,27 @@ impl<'e> Router<'e> {
             Envelope::Infer(p) => {
                 match self.lane_index(&p.req.profile) {
                     Some(li) => {
+                        if self.lanes[li].dead {
+                            let lane = &mut self.lanes[li];
+                            lane.rejected += 1;
+                            lane.reject_reasons.note(reject_reason::LANE_DEAD);
+                            self.telemetry.with_lane(li as u32).instant(
+                                "shed",
+                                worker::DRIVER,
+                                EvArgs::req(p.id).with_reason(reject_reason::LANE_DEAD),
+                            );
+                            let _ = p.reply.send(InferResponse::rejected(
+                                p.id,
+                                &lane.profile,
+                                p.enqueued,
+                                reject_reason::LANE_DEAD,
+                                format!(
+                                    "lane '{}' is dead (restart budget exhausted)",
+                                    lane.profile
+                                ),
+                            ));
+                            return true;
+                        }
                         if self.telemetry.is_on() {
                             self.telemetry.with_lane(li as u32).instant(
                                 "enqueue",
@@ -1784,16 +1929,42 @@ impl<'e> Router<'e> {
             lane.active.push(ActiveReq {
                 id: p.id,
                 enqueued: p.enqueued,
+                deadline: p.deadline,
                 slo_ms: e.slo_ms,
                 batch_hint: rows,
                 batch: b,
                 reply: p.reply,
+                req: p.req,
                 st,
             });
         }
         // one token boundary: every active request advances one iteration
+        let tok_now = Instant::now();
         let mut i = 0;
         while i < lane.active.len() {
+            // hard deadlines bind mid-decode too: a request that expires
+            // while decoding retires at this token boundary instead of
+            // riding (and charging KV blocks) all the way to done()
+            if lane.active[i].deadline.is_some_and(|d| d <= tok_now) {
+                let a = lane.active.swap_remove(i);
+                composer.retire(a.enqueued, a.slo_ms, tok_now, false);
+                lane.rejected += 1;
+                lane.reject_reasons.note(reject_reason::DEADLINE_EXPIRED);
+                tel.instant(
+                    "retire",
+                    worker::DRIVER,
+                    EvArgs::req(a.id).with_reason(reject_reason::DEADLINE_EXPIRED),
+                );
+                let _ = a.reply.send(InferResponse::rejected(
+                    a.id,
+                    &lane.profile,
+                    a.enqueued,
+                    reject_reason::DEADLINE_EXPIRED,
+                    "deadline exceeded mid-decode (retired at token boundary)",
+                ));
+                // `a.st` drops here: the dead decode's KV blocks free
+                continue;
+            }
             // keep cross-pass prefetch alive while ANY work will follow
             let expect_next = lane.active.len() > 1
                 || composer.pending_len() > 0
@@ -1855,6 +2026,105 @@ impl<'e> Router<'e> {
         self.peak = self.peak.max(turn_peak);
         if self.first_error.is_none() {
             self.first_error = turn_err;
+        }
+    }
+
+    /// Supervise a crashed lane (an injected `lane_death` here; the
+    /// concurrent router routes real worker panics through the same
+    /// policy).  In-flight decode states are dropped first — their KV
+    /// sequences release while the pool still knows them — then the
+    /// session's accounting is settled (`recover_after_abort`).  With
+    /// restart budget left the lane restarts: requests whose deadlines
+    /// still hold are re-queued through normal admission (original
+    /// enqueue time and deadline ride along, keeping EDF order and expiry
+    /// honest), the rest shed `lane_dead`.  Once the budget is exhausted
+    /// the lane is dead: everything in flight and queued sheds, and
+    /// `enqueue` rejects new arrivals for this profile from then on.
+    fn lane_crash(&mut self, li: usize, why: &str) {
+        let tel = self.telemetry.with_lane(li as u32);
+        let max_restarts = self.cfg.max_lane_restarts;
+        let now = Instant::now();
+        let lane = &mut self.lanes[li];
+        let restart = lane.restarts < max_restarts;
+        let actives: Vec<ActiveReq> = lane.active.drain(..).collect();
+        let mut requeue: Vec<PendingReq> = Vec::new();
+        for a in actives {
+            // the decode died with the lane either way
+            if let Some(c) = lane.composer.as_mut() {
+                c.retire(a.enqueued, a.slo_ms, now, false);
+            }
+            let holds = a.deadline.map(|d| d > now).unwrap_or(true);
+            if restart && holds {
+                lane.faults.stats().note_requeued();
+                requeue.push(PendingReq {
+                    id: a.id,
+                    req: a.req,
+                    enqueued: a.enqueued,
+                    deadline: a.deadline,
+                    reply: a.reply,
+                });
+            } else {
+                lane.rejected += 1;
+                lane.reject_reasons.note(reject_reason::LANE_DEAD);
+                tel.instant(
+                    "shed",
+                    worker::DRIVER,
+                    EvArgs::req(a.id).with_reason(reject_reason::LANE_DEAD),
+                );
+                let _ = a.reply.send(InferResponse::rejected(
+                    a.id,
+                    &lane.profile,
+                    a.enqueued,
+                    reject_reason::LANE_DEAD,
+                    format!("{why}; in-flight decode lost"),
+                ));
+            }
+            // `a.st` (the dead decode state) drops here
+        }
+        // the crash aborted whatever the session held mid-flight: reset
+        // its stores and bring the shared accounting back to truth
+        lane.session.recover_after_abort();
+        if restart {
+            lane.restarts += 1;
+            lane.faults.stats().note_lane_restart();
+            tel.instant(
+                "lane_restart",
+                worker::DRIVER,
+                EvArgs::default().with_reason("supervisor"),
+            );
+            for p in requeue {
+                match lane.composer.as_mut() {
+                    Some(c) => c.push(Entry {
+                        enqueued: p.enqueued,
+                        deadline: p.deadline,
+                        slo_ms: p.req.slo_ms,
+                        payload: p,
+                    }),
+                    None => lane.queue.push_back(p),
+                }
+            }
+        } else {
+            lane.dead = true;
+            let mut shed: Vec<PendingReq> = lane.queue.drain(..).collect();
+            if let Some(c) = lane.composer.as_mut() {
+                shed.extend(c.drain_pending().into_iter().map(|e| e.payload));
+            }
+            for p in shed {
+                lane.rejected += 1;
+                lane.reject_reasons.note(reject_reason::LANE_DEAD);
+                tel.instant(
+                    "shed",
+                    worker::DRIVER,
+                    EvArgs::req(p.id).with_reason(reject_reason::LANE_DEAD),
+                );
+                let _ = p.reply.send(InferResponse::rejected(
+                    p.id,
+                    &lane.profile,
+                    p.enqueued,
+                    reject_reason::LANE_DEAD,
+                    format!("{why}; lane restart budget exhausted"),
+                ));
+            }
         }
     }
 }

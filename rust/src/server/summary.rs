@@ -67,6 +67,8 @@ impl ServeConfig {
             max_batch: self.max_batch,
             batch_window: self.batch_window,
             memory_trace: self.memory_trace.clone(),
+            fault_plan: self.run.fault_plan.clone(),
+            max_lane_restarts: self.run.max_lane_restarts,
             ..RouterConfig::default()
         }
     }
@@ -124,6 +126,15 @@ pub struct ServeSummary {
     pub queue_wait_p95_ms: f64,
     /// most engine passes in flight at once (1 = serialized router)
     pub concurrent_passes_peak: u64,
+    /// fault plane: faults fired by the injection plan / transient load
+    /// failures retried / passes quiesced by the watchdog / lane
+    /// crash-restarts / requests re-queued across restarts (all 0 = no
+    /// plan armed and nothing transient happened)
+    pub faults_injected: u64,
+    pub load_retries: u64,
+    pub passes_timed_out: u64,
+    pub lane_restarts: u64,
+    pub requeued: u64,
 }
 
 impl ServeSummary {
@@ -161,6 +172,11 @@ impl ServeSummary {
             queue_wait_p50_ms: s.queue_wait_p50_ms,
             queue_wait_p95_ms: s.queue_wait_p95_ms,
             concurrent_passes_peak: s.concurrent_passes_peak,
+            faults_injected: s.faults_injected,
+            load_retries: s.load_retries,
+            passes_timed_out: s.passes_timed_out,
+            lane_restarts: s.lane_restarts,
+            requeued: s.requeued,
         }
     }
 
@@ -198,6 +214,11 @@ impl ServeSummary {
             .set("queue_wait_p50_ms", self.queue_wait_p50_ms)
             .set("queue_wait_p95_ms", self.queue_wait_p95_ms)
             .set("concurrent_passes_peak", self.concurrent_passes_peak)
+            .set("faults_injected", self.faults_injected)
+            .set("load_retries", self.load_retries)
+            .set("passes_timed_out", self.passes_timed_out)
+            .set("lane_restarts", self.lane_restarts)
+            .set("requeued", self.requeued)
     }
 }
 
@@ -318,6 +339,11 @@ mod tests {
             queue_wait_p50_ms: 0.5,
             queue_wait_p95_ms: 1.5,
             concurrent_passes_peak: 1,
+            faults_injected: 0,
+            load_retries: 0,
+            passes_timed_out: 0,
+            lane_restarts: 0,
+            requeued: 0,
         };
         let v = s.to_json();
         for key in [
@@ -336,6 +362,11 @@ mod tests {
             "shared_kv_blocks",
             "kv_dedup_bytes",
             "tokens_per_sec",
+            "faults_injected",
+            "load_retries",
+            "passes_timed_out",
+            "lane_restarts",
+            "requeued",
         ] {
             assert!(v.get(key).is_some(), "missing key {key}");
         }

@@ -51,6 +51,7 @@ use super::router::{
 };
 use crate::analyze::{DerivedSignals, DEFAULT_WINDOW};
 use crate::engine::Engine;
+use crate::faults::{FaultInjector, FaultKind};
 use crate::telemetry::Telemetry;
 use crate::util::json::Value;
 
@@ -102,7 +103,8 @@ impl TcpFrontend {
             let mut router = ConcurrentRouter::new(engine.paths.clone(), cfg)?;
             router.set_telemetry(telemetry);
             let handle = router.handle();
-            let (stop, accept) = self.spawn_accept_loop(handle)?;
+            let faults = router.fault_injector();
+            let (stop, accept) = self.spawn_accept_loop(handle, faults)?;
             let summary = router.run();
             stop.store(true, Ordering::Relaxed);
             let _ = accept.join();
@@ -111,7 +113,8 @@ impl TcpFrontend {
         let mut router = Router::new(engine, cfg)?;
         router.set_telemetry(telemetry);
         let handle = router.handle();
-        let (stop, accept) = self.spawn_accept_loop(handle)?;
+        let faults = router.fault_injector();
+        let (stop, accept) = self.spawn_accept_loop(handle, faults)?;
         let summary = router.run();
         stop.store(true, Ordering::Relaxed);
         let _ = accept.join();
@@ -125,6 +128,7 @@ impl TcpFrontend {
     fn spawn_accept_loop(
         self,
         handle: RouterHandle,
+        faults: FaultInjector,
     ) -> Result<(Arc<AtomicBool>, std::thread::JoinHandle<()>)> {
         let stop = Arc::new(AtomicBool::new(false));
 
@@ -164,9 +168,10 @@ impl TcpFrontend {
                         let h = handle.clone();
                         let tel = telemetry.clone();
                         let sig = signals.clone();
+                        let fl = faults.clone();
                         let done = active.clone();
                         std::thread::spawn(move || {
-                            let _ = client_loop(stream, h, tel, sig);
+                            let _ = client_loop(stream, h, tel, sig, fl);
                             done.fetch_sub(1, Ordering::Relaxed);
                         });
                     }
@@ -250,6 +255,7 @@ fn client_loop(
     handle: RouterHandle,
     telemetry: Telemetry,
     signals: Arc<DerivedSignals>,
+    faults: FaultInjector,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(CLIENT_IDLE_TIMEOUT)).ok();
@@ -271,6 +277,12 @@ fn client_loop(
         };
         if line.trim().is_empty() {
             continue;
+        }
+        // injected connection drop: vanish without a reply — the client
+        // sees EOF mid-conversation; the server (and every other peer)
+        // keeps serving, which is exactly what the chaos plan asserts
+        if faults.fire(FaultKind::ConnDrop) {
+            break;
         }
         let (reply, shutdown) = handle_line(&line, &handle, &telemetry, &signals);
         writer.write_all(reply.compact().as_bytes())?;

@@ -1,0 +1,440 @@
+//! Chaos soak for the fault-injection plane (PR 10): a deterministic
+//! seeded fault plan drives disk errors, loader-agent panics, transient
+//! accountant refusals, and lane deaths through a two-lane continuous
+//! fleet, and the recovery plane (bounded retry, pass watchdog, lane
+//! supervisor) must absorb all of it: successful requests stay
+//! bit-identical to a fault-free run, the shared accountant drains to
+//! exactly zero, and nothing deadlocks or aborts.  Also covers the
+//! mid-decode deadline retirement and the TCP hardening satellites.
+//! Needs `make artifacts`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use hermes::config::{Mode, Paths, RunConfig};
+use hermes::engine::Engine;
+use hermes::server::tcp::roundtrip;
+use hermes::server::{
+    ConcurrentRouter, InferRequest, InferResponse, Router, RouterConfig, RouterHandle,
+    TcpFrontend,
+};
+use hermes::util::json::Value;
+
+fn engine() -> Engine {
+    Engine::new(Paths::detect()).unwrap()
+}
+
+/// A continuous generative KV lane with the device-resident layer cache
+/// OFF, so every pass streams its layers from disk and the disk-fault
+/// seams (`disk_error`, `disk_slow`) stay hot for the whole run.
+fn chaos_lane(model: &str) -> RunConfig {
+    RunConfig {
+        profile: model.into(),
+        mode: Mode::PipeLoad,
+        agents: 2,
+        disk: "unthrottled".into(),
+        kv_cache: true,
+        kv_block_tokens: Some(2),
+        gen_tokens: Some(4),
+        continuous: true,
+        max_active: Some(2),
+        device_cache: false,
+        ..RunConfig::default()
+    }
+}
+
+/// Submit `reqs` in order, wait out every ticket, then shut the router
+/// down.  Responses come back in submission order.
+fn drive(
+    handle: RouterHandle,
+    reqs: Vec<InferRequest>,
+) -> std::thread::JoinHandle<Vec<InferResponse>> {
+    std::thread::spawn(move || {
+        let tickets: Vec<_> = reqs.into_iter().map(|r| handle.submit(r).unwrap()).collect();
+        let responses: Vec<_> = tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+        handle.shutdown();
+        responses
+    })
+}
+
+/// 12 alternating requests with explicit per-request seeds.  Explicit
+/// seeds are what keeps the bit-identity contract honest under faults: a
+/// crash-restart replays a requeued request from its own seed, not from a
+/// lane-local batch counter that the requeue itself would have shifted.
+fn soak_traffic() -> Vec<InferRequest> {
+    (0..12u64)
+        .map(|i| InferRequest {
+            profile: if i % 2 == 0 { "tiny-gpt".into() } else { "tiny-gptj".into() },
+            seed: Some(9000 + i),
+            ..InferRequest::default()
+        })
+        .collect()
+}
+
+#[test]
+fn chaos_soak_two_lane_continuous_survives_the_fault_plan() {
+    // The PR 10 acceptance soak: one deterministic plan fires at least one
+    // disk error (retried transparently), one loading-agent panic (costs
+    // at most its pass), one transient accountant refusal (bounded retry),
+    // and one lane-1 death (supervisor crash-restart).  The fleet must
+    // finish every request one way or the other, keep every successful
+    // request's tokens bit-identical to the fault-free baseline, and hand
+    // back a shared accountant drained to exactly zero.
+    let e = engine();
+    let total_a = e.runtime.profile("tiny-gpt").unwrap().total_weight_bytes;
+    let total_b = e.runtime.profile("tiny-gptj").unwrap().total_weight_bytes;
+    let budget = 2 * (total_a + total_b);
+    let mk_cfg = |plan: Option<&str>| RouterConfig {
+        models: vec![chaos_lane("tiny-gpt"), chaos_lane("tiny-gptj")],
+        budget: Some(budget),
+        kv_budget: Some(1 << 20),
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        fault_plan: plan.map(String::from),
+        ..RouterConfig::default()
+    };
+
+    // fault-free baseline: the reference tokens
+    let router = ConcurrentRouter::new(Paths::detect(), mk_cfg(None)).unwrap();
+    let producer = drive(router.handle(), soak_traffic());
+    let base = router.run().unwrap();
+    let base_rows: Vec<Vec<Vec<i32>>> = producer
+        .join()
+        .unwrap()
+        .into_iter()
+        .map(|r| {
+            assert!(r.ok, "baseline must be fault-free: {r:?}");
+            r.generated_rows
+        })
+        .collect();
+    assert_eq!(base.served, 12, "{:?}", base.first_error);
+    assert_eq!(base.faults_injected, 0, "no plan, no faults");
+
+    // chaos run: same traffic, same seeds, plus the fault plan
+    let plan = "seed=42;disk_error@3;acquire_fail@4;lane_death@6:1;agent_panic@10";
+    let router = ConcurrentRouter::new(Paths::detect(), mk_cfg(Some(plan))).unwrap();
+    let acct = router.accountant().clone();
+    let producer = drive(router.handle(), soak_traffic());
+    let summary = router.run().unwrap();
+    let responses = producer.join().unwrap();
+
+    // every ticket resolved (no deadlock, no dropped reply channel)
+    assert_eq!(responses.len(), 12);
+    assert_eq!(summary.served + summary.rejected, 12, "{summary:?}");
+    // the only non-transparent fault is the agent panic (one pass, at
+    // most its requests); everything else self-heals
+    assert!(summary.served >= 10, "{summary:?}");
+    for (i, r) in responses.iter().enumerate() {
+        if r.ok {
+            assert_eq!(
+                r.generated_rows, base_rows[i],
+                "request {i} survived the chaos but its tokens drifted"
+            );
+        } else {
+            assert!(r.error.is_some(), "rejection without a cause: {r:?}");
+        }
+    }
+
+    // the plan fired end to end and the recovery counters saw it
+    assert!(summary.faults_injected >= 4, "{summary:?}");
+    assert!(summary.load_retries >= 1, "the disk error must be retried: {summary:?}");
+    assert!(summary.lane_restarts >= 1, "lane 1 died and must restart: {summary:?}");
+    assert_eq!(summary.passes_timed_out, 0, "no watchdog armed: {summary:?}");
+
+    // the chaos-soak invariant: after the fleet exits, the shared
+    // accountant holds NOTHING — crashed lanes included
+    assert_eq!(acct.used(), 0, "accountant must drain to zero after the soak");
+}
+
+#[test]
+fn pass_watchdog_times_out_hung_pass_and_next_requests_recover() {
+    // An injected stuck medium (`disk_slow`) hangs one pass well past the
+    // lane's watchdog deadline: the watchdog quiesces the gate, the pass
+    // fails through the ordinary error path (counted in
+    // `passes_timed_out`), and the NEXT pass re-arms everything and
+    // serves normally.
+    let e = engine();
+    let cfg = RouterConfig {
+        models: vec![RunConfig {
+            profile: "tiny-bert".into(),
+            mode: Mode::PipeLoad,
+            agents: 2,
+            disk: "unthrottled".into(),
+            device_cache: false,
+            pass_timeout_ms: Some(150),
+            ..RunConfig::default()
+        }],
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        fault_plan: Some("seed=5;disk_slow@2+800".into()),
+        ..RouterConfig::default()
+    };
+    let router = Router::new(&e, cfg).unwrap();
+    let reqs = (0..3u64)
+        .map(|i| InferRequest { profile: "tiny-bert".into(), seed: Some(i), ..InferRequest::default() })
+        .collect();
+    let producer = drive(router.handle(), reqs);
+    let summary = router.run().unwrap();
+    let responses = producer.join().unwrap();
+
+    assert!(summary.passes_timed_out >= 1, "{summary:?}");
+    assert_eq!(summary.served + summary.rejected, 3);
+    assert!(summary.rejected >= 1, "the hung pass's request fails: {summary:?}");
+    let hung = responses.iter().find(|r| !r.ok).expect("one request rode the hung pass");
+    assert!(
+        hung.error.as_deref().unwrap().contains("watchdog"),
+        "the failure must name the watchdog: {hung:?}"
+    );
+    // self-healing: the request AFTER the timeout served fine
+    assert!(responses.last().unwrap().ok, "{responses:?}");
+}
+
+#[test]
+fn continuous_request_expiring_mid_decode_retires_at_token_boundary() {
+    // Satellite regression: a continuous-batch request whose deadline
+    // expires AFTER it joined the running decode used to burn passes to
+    // the end; it must retire at the next token boundary with
+    // `deadline_expired`, and its neighbors keep decoding.
+    let cfg = RouterConfig {
+        models: vec![RunConfig { gen_tokens: Some(6), ..chaos_lane("tiny-gpt") }],
+        kv_budget: Some(1 << 20),
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        // one pass sleeps 1.5 s mid-decode, so the 700 ms deadline is
+        // comfortably alive at admission and comfortably dead at the
+        // following token boundary
+        fault_plan: Some("seed=2;disk_slow@4+1500".into()),
+        ..RouterConfig::default()
+    };
+    let router = ConcurrentRouter::new(Paths::detect(), cfg).unwrap();
+    let reqs = vec![
+        InferRequest {
+            profile: "tiny-gpt".into(),
+            seed: Some(1),
+            deadline: Some(Duration::from_millis(700)),
+            ..InferRequest::default()
+        },
+        InferRequest { profile: "tiny-gpt".into(), seed: Some(2), ..InferRequest::default() },
+    ];
+    let producer = drive(router.handle(), reqs);
+    let summary = router.run().unwrap();
+    let responses = producer.join().unwrap();
+
+    let expired = &responses[0];
+    assert!(!expired.ok, "{expired:?}");
+    assert_eq!(expired.reason.as_deref(), Some("deadline_expired"), "{expired:?}");
+    assert!(
+        expired.error.as_deref().unwrap().contains("mid-decode"),
+        "must retire mid-decode, not before admission: {expired:?}"
+    );
+    assert!(responses[1].ok, "the deadline-free neighbor finishes: {:?}", responses[1]);
+    assert_eq!(summary.served, 1, "{summary:?}");
+    assert_eq!(summary.rejected, 1, "{summary:?}");
+}
+
+#[test]
+fn serialized_router_lane_death_requeues_and_replays_bit_identically() {
+    // The single-threaded router's supervisor: an injected lane death at a
+    // token boundary requeues the in-flight decodes (deadlines hold),
+    // restarts the lane, and the replay — driven by the requests' own
+    // seeds — produces exactly the tokens a fault-free run produces.
+    let e = engine();
+    let mk_cfg = |plan: Option<&str>| RouterConfig {
+        models: vec![chaos_lane("tiny-gpt")],
+        kv_budget: Some(1 << 20),
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        fault_plan: plan.map(String::from),
+        ..RouterConfig::default()
+    };
+    let traffic = || -> Vec<InferRequest> {
+        (0..4u64)
+            .map(|i| InferRequest {
+                profile: "tiny-gpt".into(),
+                seed: Some(100 + i),
+                ..InferRequest::default()
+            })
+            .collect()
+    };
+
+    let router = Router::new(&e, mk_cfg(None)).unwrap();
+    let producer = drive(router.handle(), traffic());
+    let base = router.run().unwrap();
+    let base_rows: Vec<_> = producer
+        .join()
+        .unwrap()
+        .into_iter()
+        .map(|r| {
+            assert!(r.ok, "{r:?}");
+            r.generated_rows
+        })
+        .collect();
+    assert_eq!(base.served, 4);
+
+    let router = Router::new(&e, mk_cfg(Some("seed=9;lane_death@2:0"))).unwrap();
+    let acct = router.accountant().clone();
+    let producer = drive(router.handle(), traffic());
+    let summary = router.run().unwrap();
+    let rows: Vec<_> = producer
+        .join()
+        .unwrap()
+        .into_iter()
+        .map(|r| {
+            assert!(r.ok, "a requeued request must still be served: {r:?}");
+            r.generated_rows
+        })
+        .collect();
+
+    assert_eq!(summary.served, 4, "{:?}", summary.first_error);
+    assert_eq!(summary.lane_restarts, 1, "{summary:?}");
+    assert!(summary.requeued >= 1, "the crash caught decodes in flight: {summary:?}");
+    assert_eq!(summary.faults_injected, 1, "{summary:?}");
+    assert_eq!(rows, base_rows, "replayed decodes must match the fault-free run bit for bit");
+    assert_eq!(acct.used(), 0, "accountant must drain after the run");
+}
+
+#[test]
+fn serialized_router_sheds_lane_dead_once_restart_budget_exhausted() {
+    // A lane that keeps dying burns its crash-restart budget and then
+    // stays dead: queued and newly arriving requests are shed with the
+    // `lane_dead` reason instead of hanging, and the router still exits
+    // cleanly.
+    let e = engine();
+    let cfg = RouterConfig {
+        models: vec![RunConfig {
+            profile: "tiny-bert".into(),
+            mode: Mode::PipeLoad,
+            agents: 2,
+            disk: "unthrottled".into(),
+            ..RunConfig::default()
+        }],
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        fault_plan: Some("seed=3;lane_death@1x5:0".into()),
+        max_lane_restarts: 1,
+        ..RouterConfig::default()
+    };
+    let router = Router::new(&e, cfg).unwrap();
+    let reqs = (0..4u64)
+        .map(|i| InferRequest { profile: "tiny-bert".into(), seed: Some(i), ..InferRequest::default() })
+        .collect();
+    let producer = drive(router.handle(), reqs);
+    let summary = router.run().unwrap();
+    let responses = producer.join().unwrap();
+
+    assert_eq!(summary.lane_restarts, 1, "{summary:?}");
+    assert_eq!(summary.served, 1, "only the request before the first death: {summary:?}");
+    assert_eq!(summary.rejected, 3, "{summary:?}");
+    assert!(responses[0].ok, "{responses:?}");
+    for r in &responses[1..] {
+        assert!(!r.ok, "{r:?}");
+        assert_eq!(r.reason.as_deref(), Some("lane_dead"), "{r:?}");
+    }
+}
+
+fn bert_router_cfg(fault_plan: Option<&str>) -> RouterConfig {
+    RouterConfig {
+        models: vec![RunConfig {
+            profile: "tiny-bert".into(),
+            mode: Mode::PipeLoad,
+            agents: 2,
+            disk: "unthrottled".into(),
+            ..RunConfig::default()
+        }],
+        max_batch: 1,
+        batch_window: Duration::from_millis(1),
+        fault_plan: fault_plan.map(String::from),
+        ..RouterConfig::default()
+    }
+}
+
+fn infer_line(profile: &str) -> String {
+    format!("{}\n", InferRequest::new(profile).to_json().compact())
+}
+
+#[test]
+fn tcp_client_dropping_after_submit_leaks_nothing() {
+    // Satellite: a client that submits a request and vanishes before the
+    // reply must not wedge anything — the request is still served (its
+    // ticket resolves; the unwritable reply is discarded with the
+    // connection) and the server keeps serving other clients.
+    let e = engine();
+    let frontend = TcpFrontend::bind("127.0.0.1:0").unwrap();
+    let addr = frontend.local_addr().unwrap();
+    let client = std::thread::spawn(move || {
+        {
+            let mut s1 = TcpStream::connect(addr).unwrap();
+            s1.write_all(infer_line("tiny-bert").as_bytes()).unwrap();
+            s1.flush().unwrap();
+            // dropped here: the reply has nowhere to go
+        }
+        let mut s2 = TcpStream::connect(addr).unwrap();
+        let reply = roundtrip(&mut s2, &InferRequest::new("tiny-bert").to_json()).unwrap();
+        assert!(reply.get("ok").unwrap().as_bool().unwrap(), "{reply}");
+        // give the vanished client's request time to finish serving
+        std::thread::sleep(Duration::from_millis(400));
+        let reply = roundtrip(&mut s2, &Value::parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+        assert_eq!(reply.get("op").unwrap().as_str().unwrap(), "shutdown");
+    });
+    let summary = frontend.run(&e, bert_router_cfg(None)).unwrap();
+    client.join().unwrap();
+    assert_eq!(summary.served, 2, "the dropped client's request still served: {summary:?}");
+    assert_eq!(summary.rejected, 0, "{summary:?}");
+}
+
+#[test]
+fn tcp_malformed_partial_json_rejects_as_validation_and_serving_continues() {
+    // Satellite: a truncated JSON line is a graceful `validation` reject,
+    // not a dead connection — the same socket then serves a well-formed
+    // request.
+    let e = engine();
+    let frontend = TcpFrontend::bind("127.0.0.1:0").unwrap();
+    let addr = frontend.local_addr().unwrap();
+    let client = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"{\"op\":\"infer\",\"profile\":\"tiny-b\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+        let v = Value::parse(line.trim()).unwrap();
+        assert!(!v.get("ok").unwrap().as_bool().unwrap(), "{v}");
+        assert_eq!(v.get("reason").unwrap().as_str().unwrap(), "validation", "{v}");
+
+        let reply = roundtrip(&mut s, &InferRequest::new("tiny-bert").to_json()).unwrap();
+        assert!(reply.get("ok").unwrap().as_bool().unwrap(), "{reply}");
+        let reply = roundtrip(&mut s, &Value::parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+        assert_eq!(reply.get("op").unwrap().as_str().unwrap(), "shutdown");
+    });
+    let summary = frontend.run(&e, bert_router_cfg(None)).unwrap();
+    client.join().unwrap();
+    assert_eq!(summary.served, 1, "{summary:?}");
+}
+
+#[test]
+fn tcp_injected_conn_drop_hits_one_connection_only() {
+    // `conn_drop` probes through the ROUTER's injector (one shared plan,
+    // one set of counters): the victim connection sees a silent EOF, the
+    // reconnect serves normally, and the fired fault shows up in the
+    // summary counters.
+    let e = engine();
+    let frontend = TcpFrontend::bind("127.0.0.1:0").unwrap();
+    let addr = frontend.local_addr().unwrap();
+    let client = std::thread::spawn(move || {
+        let mut s1 = TcpStream::connect(addr).unwrap();
+        s1.write_all(infer_line("tiny-bert").as_bytes()).unwrap();
+        s1.flush().unwrap();
+        let mut line = String::new();
+        let n = BufReader::new(s1.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert_eq!(n, 0, "the dropped connection must see EOF, not a reply: {line:?}");
+
+        let mut s2 = TcpStream::connect(addr).unwrap();
+        let reply = roundtrip(&mut s2, &InferRequest::new("tiny-bert").to_json()).unwrap();
+        assert!(reply.get("ok").unwrap().as_bool().unwrap(), "{reply}");
+        let reply = roundtrip(&mut s2, &Value::parse(r#"{"op":"shutdown"}"#).unwrap()).unwrap();
+        assert_eq!(reply.get("op").unwrap().as_str().unwrap(), "shutdown");
+    });
+    let summary = frontend.run(&e, bert_router_cfg(Some("seed=1;conn_drop@0"))).unwrap();
+    client.join().unwrap();
+    assert_eq!(summary.served, 1, "the dropped line was never submitted: {summary:?}");
+    assert_eq!(summary.faults_injected, 1, "{summary:?}");
+}
